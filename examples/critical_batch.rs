@@ -1,0 +1,63 @@
+//! Example: batch-size scaling (paper §6.3) via gradient accumulation —
+//! how many steps each optimizer needs to hit a fixed loss as the token
+//! batch grows, and how far each tracks ideal linear scaling.
+//!
+//! ```bash
+//! cargo run --release --example critical_batch
+//! ```
+
+use soap_lab::coordinator::{Trainer, TrainerConfig};
+use soap_lab::experiments::batch_scaling_analysis;
+use soap_lab::optim::{Hyper, OptKind, Schedule};
+
+fn run(opt: OptKind, lr: f32, accum: usize, steps: u64, f: u64) -> anyhow::Result<soap_lab::coordinator::TrainLog> {
+    let cfg = TrainerConfig {
+        opt,
+        hyper: Hyper::default().with_freq(f),
+        schedule: Schedule::Constant { lr },
+        steps,
+        grad_accum: accum,
+        log_every: 0,
+        ..TrainerConfig::default()
+    };
+    Ok(Trainer::new_pjrt("nano", cfg, "artifacts")?.run()?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let base_steps = 200u64;
+    let target = {
+        let log = run(OptKind::AdamW, 3.16e-3, 1, base_steps, 10)?;
+        log.tail_loss(15) * 1.002
+    };
+    println!("target loss (AdamW @ 1× batch, {base_steps} steps): {target:.4}\n");
+
+    for (opt, lr) in [(OptKind::AdamW, 3.16e-3f32), (OptKind::Soap, 1e-2)] {
+        let mut pts = Vec::new();
+        for accum in [1usize, 2, 4] {
+            // Keep batch × frequency constant for SOAP (paper §6.3).
+            let f = (32 / accum as u64).max(1);
+            let budget = (base_steps as f64 * 1.5 / accum as f64).ceil() as u64 + 30;
+            let log = run(opt, lr, accum, budget, f)?;
+            match log.steps_to_loss(target, 8) {
+                Some(s) => {
+                    println!("{:<6} batch×{accum}: reached target in {s} steps", opt.name());
+                    pts.push((accum as f64, s as f64));
+                }
+                None => println!(
+                    "{:<6} batch×{accum}: not reached in {budget} steps (tail {:.4})",
+                    opt.name(),
+                    log.tail_loss(8)
+                ),
+            }
+        }
+        for p in batch_scaling_analysis(&pts) {
+            println!(
+                "       batch×{}: {:.2}× the ideal linear-scaling step count",
+                p.batch, p.scaling_inefficiency
+            );
+        }
+        println!();
+    }
+    println!("paper: SOAP stays closer to ideal scaling → larger critical batch size");
+    Ok(())
+}

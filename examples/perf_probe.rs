@@ -1,0 +1,33 @@
+//! §Perf probe: raw substrate timings (gemm, cold/warm eigh, QR) used for
+//! the EXPERIMENTS.md §Perf iteration log.
+fn main() {
+    use soap_lab::linalg::{eigh, eigh_warm, qr_positive, Matrix};
+    use soap_lab::util::rng::Rng;
+    let mut rng = Rng::new(1);
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(&mut rng, n, n, 1.0);
+        let b = Matrix::randn(&mut rng, n, n, 1.0);
+        let t0 = std::time::Instant::now();
+        let iters = (256 * 1024 * 1024) / (n * n * n) + 1;
+        for _ in 0..iters {
+            let _ = a.matmul(&b);
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("gemm n={n}: {:.3} ms, {:.2} GFLOP/s", dt * 1e3, 2.0 * (n * n * n) as f64 / dt / 1e9);
+    }
+    for n in [64usize, 128, 256] {
+        let p = Matrix::rand_psd(&mut rng, n);
+        let t0 = std::time::Instant::now();
+        let (_, v) = eigh(&p);
+        let cold = t0.elapsed().as_secs_f64() * 1e3;
+        // Perturb and warm-start.
+        let p2 = p.add(&Matrix::rand_psd(&mut rng, n).scale(0.02));
+        let t0 = std::time::Instant::now();
+        let _ = eigh_warm(&p2, &v);
+        let warm = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = std::time::Instant::now();
+        let _ = qr_positive(&p2);
+        let qr = t0.elapsed().as_secs_f64() * 1e3;
+        println!("n={n}: eigh cold {cold:.1} ms, warm {warm:.1} ms, qr {qr:.1} ms");
+    }
+}

@@ -1,0 +1,57 @@
+//! Example: the §7 space/time-saving SOAP variants — what you trade when
+//! you drop to one-sided rotation or a factorized second moment, including
+//! the optimizer-state memory each variant actually allocates.
+//!
+//! ```bash
+//! cargo run --release --example soap_variants
+//! ```
+
+use soap_lab::coordinator::{Trainer, TrainerConfig};
+use soap_lab::optim::{Hyper, OptKind, Schedule};
+
+fn main() -> anyhow::Result<()> {
+    let steps = 150u64;
+    let variants: Vec<(&str, Hyper)> = vec![
+        ("soap", Hyper::default()),
+        ("soap one-sided", Hyper::default().one_sided()),
+        ("soap factorized", Hyper::default().factorized()),
+        ("soap both", Hyper::default().one_sided().factorized()),
+    ];
+
+    // AdamW reference for the memory comparison.
+    let adamw_cfg = TrainerConfig {
+        opt: OptKind::AdamW,
+        schedule: Schedule::paper(3.16e-3, steps / 5, steps),
+        steps,
+        log_every: 0,
+        ..TrainerConfig::default()
+    };
+    let mut adamw = Trainer::new_pjrt("nano", adamw_cfg, "artifacts")?;
+    let adamw_log = adamw.run()?;
+    let adamw_bytes = adamw.state_bytes();
+    println!(
+        "{:<18} {:>12} {:>16}\n{:<18} {:>12.4} {:>16}",
+        "variant", "tail loss", "state bytes", "adamw", adamw_log.tail_loss(15), adamw_bytes
+    );
+
+    for (name, hyper) in variants {
+        let cfg = TrainerConfig {
+            opt: OptKind::Soap,
+            hyper,
+            schedule: Schedule::paper(0.01, steps / 5, steps),
+            steps,
+            log_every: 0,
+            ..TrainerConfig::default()
+        };
+        let mut t = Trainer::new_pjrt("nano", cfg, "artifacts")?;
+        let log = t.run()?;
+        let bytes = t.state_bytes();
+        println!(
+            "{name:<18} {:>12.4} {:>16}{}",
+            log.tail_loss(15),
+            bytes,
+            if bytes < adamw_bytes { "  ← smaller than AdamW (§7.2)" } else { "" }
+        );
+    }
+    Ok(())
+}

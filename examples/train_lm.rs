@@ -1,0 +1,94 @@
+//! End-to-end training driver — the EXPERIMENTS.md §E2E workload.
+//!
+//! Trains a transformer LM through the full stack for a few hundred steps
+//! with the paper's schedule, comparing SOAP against AdamW head-to-head,
+//! logging both loss curves, throughput, the step-time breakdown, and
+//! writing results to bench_results/e2e_<model>.csv + a checkpoint.
+//!
+//! ```bash
+//! cargo run --release --example train_lm                        # small model
+//! E2E_MODEL=medium E2E_STEPS=400 cargo run --release --example train_lm
+//! E2E_MODEL=big100m cargo run --release --example train_lm      # ~100M params
+//! #   (big100m needs: cd python && python -m compile.aot --out ../artifacts \
+//! #    --configs nano,small,medium,big100m)
+//! ```
+
+use soap_lab::coordinator::{Checkpoint, Trainer, TrainerConfig};
+use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::util::bench::Report;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model: String = env_or("E2E_MODEL", "small".to_string());
+    let steps: u64 = env_or("E2E_STEPS", 300);
+    let pjrt_opt: bool = env_or("E2E_PJRT_OPTIMIZER", 0u32) != 0;
+
+    let mut report = Report::new(
+        &format!("E2E: SOAP vs AdamW on {model}"),
+        "step",
+        "train loss",
+    );
+    let mut summary = Vec::new();
+
+    for (opt, lr) in [(OptKind::AdamW, 3.16e-3f32), (OptKind::Soap, 1e-2)] {
+        let cfg = TrainerConfig {
+            opt,
+            hyper: Hyper::default(),
+            schedule: Schedule::paper(lr, steps / 5, steps),
+            steps,
+            seed: 0,
+            grad_accum: 1,
+            workers: 4,
+            log_every: 25,
+            ..TrainerConfig::default()
+        };
+        let mut trainer = if pjrt_opt && opt == OptKind::Soap {
+            Trainer::new_pjrt_full(&model, cfg, "artifacts")?
+        } else {
+            Trainer::new_pjrt(&model, cfg, "artifacts")?
+        };
+        println!(
+            "\n=== {} on {model}: {} params, floor {:.3} nats ===",
+            trainer.opt_label(),
+            trainer.params.iter().map(|p| p.numel()).sum::<usize>(),
+            trainer.entropy_floor()
+        );
+        let t0 = std::time::Instant::now();
+        let log = trainer.run()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let eval = trainer.eval_loss(4)?;
+
+        println!(
+            "{}: train tail {:.4} | eval {:.4} | {:.0} tok/s | {:.1}% optimizer overhead | {:.1}s wall",
+            trainer.opt_label(),
+            log.tail_loss(20),
+            eval,
+            log.tokens_per_second(),
+            100.0 * log.optimizer_overhead_frac(),
+            wall
+        );
+        summary.push((trainer.opt_label(), log.tail_loss(20), eval, log.tokens_per_second()));
+        report.add_series(&trainer.opt_label(), log.loss_series());
+
+        // Persist the SOAP run for resumption demos.
+        if opt == OptKind::Soap {
+            let state = trainer.native_optimizer().map(|o| o.export_state()).unwrap_or_default();
+            let path = format!("bench_results/e2e_{model}.ckpt");
+            std::fs::create_dir_all("bench_results").ok();
+            Checkpoint { step: trainer.step, params: trainer.params.clone(), opt_state: state }
+                .save(&path)?;
+            println!("checkpoint → {path}");
+        }
+    }
+
+    let (adamw, soap) = (&summary[0], &summary[1]);
+    report.note(format!(
+        "SOAP vs AdamW at {steps} steps: train {:.4} vs {:.4} (Δ {:+.4}), eval {:.4} vs {:.4}",
+        soap.1, adamw.1, soap.1 - adamw.1, soap.2, adamw.2
+    ));
+    report.render_and_save();
+    Ok(())
+}

@@ -1,0 +1,191 @@
+"""AOT compiler: lower every compute graph to HLO *text* + write the
+artifact manifest.
+
+Run once by `make artifacts`; Python never runs on the training path.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README).
+
+Outputs under --out (default ../artifacts):
+  lm_grads_<cfg>.hlo.txt     (params…, tokens, targets) → (loss, grads…)
+  lm_loss_<cfg>.hlo.txt      (params…, tokens, targets) → (loss,)
+  adamw_update_MxN.hlo.txt   (w,m,v,g,t,lr) → (w',m',v')
+  soap_update_MxN.hlo.txt    (w,m,v,l,r,ql,qr,g,t,lr) → (w',m',v',l',r')
+  soap_left_MxN.hlo.txt      (w,m,v,l,ql,g,t,lr) → (w',m',v',l')
+  soap_right_MxN.hlo.txt     (w,m,v,r,qr,g,t,lr) → (w',m',v',r')
+  shampoo_update_MxN.hlo.txt (w,m,v,linv,rinv,g,t,lr) → (w',m',v')
+  factor_pair_MxN.hlo.txt    (l,r,g) → (l',r')
+  soap_refresh_N.hlo.txt     (p,q) → (q',)
+  manifest.json              configs + artifact registry (ABI for Rust)
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, optim_graphs
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Sides whose dimension exceeds this keep Q = I (paper implementation
+# detail 3). Must match rust Hyper::default().max_precond_dim.
+MAX_PRECOND_DIM = 4096
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text()
+    assert "custom-call" not in text.lower().replace("custom_call", "custom-call"), \
+        "artifact contains a custom call the rust runtime cannot execute"
+    return text
+
+
+def emit(out_dir, name, fn, arg_specs, manifest, meta=None):
+    t0 = time.time()
+    text = to_hlo_text(fn, arg_specs)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "num_inputs": len(arg_specs),
+        **(meta or {}),
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s",
+          flush=True)
+
+
+def tuple_fn(fn):
+    """Wrap so the output is always a tuple (required for return_tuple)."""
+    @functools.wraps(fn)
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+    return wrapped
+
+
+def emit_model_artifacts(out_dir, cfg, manifest):
+    pspecs = [spec((r, c)) for _, r, c in cfg.param_specs()]
+    tok = spec((cfg.batch, cfg.seq), I32)
+
+    def grads_fn(*args):
+        params = list(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        return model.loss_and_grads(cfg, params, tokens, targets)
+
+    def loss_fn(*args):
+        params = list(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        return (model.loss_fn(cfg, params, tokens, targets),)
+
+    emit(out_dir, f"lm_grads_{cfg.name}", tuple_fn(grads_fn),
+         [*pspecs, tok, tok], manifest,
+         meta={"config": cfg.name, "outputs": 1 + len(pspecs)})
+    emit(out_dir, f"lm_loss_{cfg.name}", tuple_fn(loss_fn),
+         [*pspecs, tok, tok], manifest, meta={"config": cfg.name})
+
+    manifest["configs"][cfg.name] = {
+        "vocab": cfg.vocab, "dim": cfg.dim, "depth": cfg.depth,
+        "heads": cfg.heads, "seq": cfg.seq, "batch": cfg.batch,
+        "zloss": cfg.zloss,
+        "params": [[n, r, c] for n, r, c in cfg.param_specs()],
+        "num_params": cfg.num_params(),
+        "non_embedding_params": cfg.non_embedding_params(),
+    }
+
+
+def emit_optimizer_artifacts(out_dir, shapes_2d, refresh_dims, all_shapes,
+                             manifest):
+    sc = spec((), F32)
+    for (m, n) in sorted(all_shapes):
+        s = spec((m, n))
+        emit(out_dir, f"adamw_update_{m}x{n}", tuple_fn(optim_graphs.adamw_update),
+             [s, s, s, s, sc, sc], manifest)
+    for (m, n) in sorted(shapes_2d):
+        s = spec((m, n))
+        sl = spec((m, m))
+        sr = spec((n, n))
+        both = m <= MAX_PRECOND_DIM and n <= MAX_PRECOND_DIM
+        if both:
+            emit(out_dir, f"soap_update_{m}x{n}", tuple_fn(optim_graphs.soap_update),
+                 [s, s, s, sl, sr, sl, sr, s, sc, sc], manifest)
+            emit(out_dir, f"shampoo_update_{m}x{n}",
+                 tuple_fn(optim_graphs.shampoo_update),
+                 [s, s, s, sl, sr, s, sc, sc], manifest)
+            emit(out_dir, f"factor_pair_{m}x{n}",
+                 tuple_fn(optim_graphs.factor_pair_update),
+                 [sl, sr, s], manifest)
+        if m <= MAX_PRECOND_DIM:
+            emit(out_dir, f"soap_left_{m}x{n}",
+                 tuple_fn(optim_graphs.soap_update_onesided_left),
+                 [s, s, s, sl, sl, s, sc, sc], manifest)
+        if n <= MAX_PRECOND_DIM:
+            emit(out_dir, f"soap_right_{m}x{n}",
+                 tuple_fn(optim_graphs.soap_update_onesided_right),
+                 [s, s, s, sr, sr, s, sc, sc], manifest)
+    for d in sorted(refresh_dims):
+        sd = spec((d, d))
+        emit(out_dir, f"soap_refresh_{d}", tuple_fn(optim_graphs.soap_refresh),
+             [sd, sd], manifest)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="nano,small,medium",
+                    help="comma-separated model configs to compile "
+                         "(big100m is opt-in: large HLO, slow lowering)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [c for c in args.configs.split(",") if c]
+    cfgs = [configs.get(n) for n in names]
+
+    manifest = {
+        "hyper": optim_graphs.HYPER,
+        "max_precond_dim": MAX_PRECOND_DIM,
+        "configs": {},
+        "artifacts": {},
+    }
+
+    shapes_2d, refresh_dims, all_shapes = set(), set(), set()
+    for cfg in cfgs:
+        for _, r, c in cfg.param_specs():
+            all_shapes.add((r, c))
+            if r > 1 and c > 1:
+                shapes_2d.add((r, c))
+                if r <= MAX_PRECOND_DIM:
+                    refresh_dims.add(r)
+                if c <= MAX_PRECOND_DIM:
+                    refresh_dims.add(c)
+
+    print(f"compiling {len(cfgs)} model configs, {len(shapes_2d)} 2-D shapes")
+    for cfg in cfgs:
+        emit_model_artifacts(args.out, cfg, manifest)
+    emit_optimizer_artifacts(args.out, shapes_2d, refresh_dims, all_shapes,
+                             manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Model configurations (Appendix A analogues, scaled for CPU PJRT).
+
+The paper trains 210m/360m/660m-non-embedding-param decoder-only
+transformers (widths 1024/1024/1408, depths 12/24/24) on 2m-token batches.
+Scaled to this testbed we keep the *pair structure* (two sizes with the same
+width:depth scaling ratio), the architecture choices (RoPE, QK-norm, GeLU,
+4× MLP, no biases, z-loss 1e-4), and shrink width/depth/batch. The `big100m`
+config is the ~100M-parameter end-to-end driver target.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    depth: int
+    heads: int
+    seq: int
+    batch: int
+    mlp_mult: int = 4
+    zloss: float = 1e-4
+
+    @property
+    def head_dim(self):
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    def param_specs(self):
+        """Ordered (name, rows, cols) — 1-D params are (1, n). This ordering
+        is the ABI between aot.py, manifest.json, and the Rust coordinator.
+        """
+        d, h = self.dim, self.mlp_mult * self.dim
+        specs = [("embed", self.vocab, d)]
+        for i in range(self.depth):
+            specs += [
+                (f"blk{i}.ln1", 1, d),
+                (f"blk{i}.wq", d, d),
+                (f"blk{i}.wk", d, d),
+                (f"blk{i}.wv", d, d),
+                (f"blk{i}.wo", d, d),
+                (f"blk{i}.ln2", 1, d),
+                (f"blk{i}.mlp_in", d, h),
+                (f"blk{i}.mlp_out", h, d),
+            ]
+        specs += [("ln_f", 1, d), ("unembed", d, self.vocab)]
+        return specs
+
+    def num_params(self):
+        return sum(r * c for _, r, c in self.param_specs())
+
+    def non_embedding_params(self):
+        return sum(
+            r * c for n, r, c in self.param_specs()
+            if n not in ("embed", "unembed"))
+
+
+# Registry. `small`/`medium` are the 360m/660m analogues (same width-ratio
+# family); `nano` drives fast tests; `big100m` is the ~100M e2e target.
+CONFIGS = {
+    c.name: c
+    for c in [
+        ModelConfig("nano", vocab=256, dim=64, depth=2, heads=2, seq=64,
+                    batch=8),
+        ModelConfig("small", vocab=512, dim=128, depth=4, heads=4, seq=128,
+                    batch=16),
+        ModelConfig("medium", vocab=512, dim=176, depth=6, heads=4, seq=128,
+                    batch=16),
+        ModelConfig("big100m", vocab=8192, dim=768, depth=12, heads=12,
+                    seq=256, batch=4),
+    ]
+}
+
+
+def get(name: str) -> ModelConfig:
+    return CONFIGS[name]

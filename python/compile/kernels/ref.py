@@ -1,0 +1,129 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has its semantics defined here; pytest
+(`python/tests/test_kernels.py`) asserts allclose between kernel and
+reference over hypothesis-swept shapes, and the Rust native implementations
+mirror the same math (checked end-to-end by the integration tests).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rotate_pair_ref(ql, qr, g, m):
+    """Rotate gradient and momentum into the eigenbasis: X' = QLᵀ X QR.
+
+    Returns (g_rot, m_rot).
+    """
+    g_rot = ql.T @ g @ qr
+    m_rot = ql.T @ m @ qr
+    return g_rot, m_rot
+
+
+def adam_dir_ref(g_rot, m_rot_hat, v, beta2, eps, t):
+    """Adam-in-eigenbasis second-moment update + direction (Alg 3 lines 7-8).
+
+    `m_rot_hat` is the rotated momentum already bias-corrected by 1/(1−β₁ᵗ);
+    the β₂ correction for V is applied here. Returns (v_new, n_rot).
+    """
+    v_new = beta2 * v + (1.0 - beta2) * g_rot * g_rot
+    bc2 = 1.0 - beta2**t
+    n_rot = m_rot_hat / (jnp.sqrt(jnp.maximum(v_new / bc2, 0.0)) + eps)
+    return v_new, n_rot
+
+
+def rotate_back_ref(ql, qr, n_rot):
+    """Rotate the direction back to parameter space: N = QL N' QRᵀ."""
+    return ql @ n_rot @ qr.T
+
+
+def factor_ema_ref(l, r, g, beta):
+    """Kronecker-factor EMAs: L ← βL + (1−β)GGᵀ, R ← βR + (1−β)GᵀG."""
+    l_new = beta * l + (1.0 - beta) * (g @ g.T)
+    r_new = beta * r + (1.0 - beta) * (g.T @ g)
+    return l_new, r_new
+
+
+def soap_step_ref(w, m, v, l, r, ql, qr, g, t, lr, *, beta1, beta2,
+                  shampoo_beta, eps, weight_decay):
+    """One full SOAP update for a 2-D layer (paper Algorithm 3), composed
+    from the reference pieces. Returns (w', m', v', l', r').
+
+    Matches `rust/src/optim/soap.rs::Soap::update` step-for-step (same
+    bias-correction and decoupled weight-decay conventions).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    g_rot, m_rot = rotate_pair_ref(ql, qr, g, m_new)
+    bc1 = 1.0 - beta1**t
+    v_new, n_rot = adam_dir_ref(g_rot, m_rot / bc1, v, beta2, eps, t)
+    n = rotate_back_ref(ql, qr, n_rot)
+    w_new = (w - lr * n) * (1.0 - lr * weight_decay)
+    l_new, r_new = factor_ema_ref(l, r, g, shampoo_beta)
+    return w_new, m_new, v_new, l_new, r_new
+
+
+def adamw_step_ref(w, m, v, g, t, lr, *, beta1, beta2, eps, weight_decay):
+    """One AdamW update (PyTorch semantics; matches rust/src/optim/adamw.rs)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    direction = (m_new / bc1) / (jnp.sqrt(jnp.maximum(v_new / bc2, 0.0)) + eps)
+    w_new = (w - lr * direction) * (1.0 - lr * weight_decay)
+    return w_new, m_new, v_new
+
+
+def shampoo_step_ref(w, m, v, l_inv, r_inv, g, t, lr, *, beta1, beta2, eps,
+                     weight_decay):
+    """One Shampoo step given *cached* inverse roots, with AdamW grafting
+    (matches rust/src/optim/shampoo.rs between refreshes)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    m_hat = m_new / bc1
+    direction = l_inv @ m_hat @ r_inv
+    adam_dir = m_hat / (jnp.sqrt(jnp.maximum(v_new / bc2, 0.0)) + eps)
+    target = jnp.sqrt(jnp.sum(adam_dir * adam_dir))
+    actual = jnp.sqrt(jnp.sum(direction * direction))
+    direction = direction * (target / jnp.maximum(actual, 1e-30))
+    w_new = (w - lr * direction) * (1.0 - lr * weight_decay)
+    return w_new, m_new, v_new
+
+
+def householder_qr_q(a):
+    """Orthonormal Q of the Householder QR of a square matrix, written with
+    pure jnp ops (fori_loop + masking) so the lowered HLO contains **no
+    LAPACK custom-calls** (the image's XLA runtime rejects them; DESIGN.md
+    §2). Sign-fixed so diag(R) ≥ 0, matching `rust/src/linalg/qr.rs`.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+
+    def body(k, carry):
+        r, q = carry
+        idx = jnp.arange(n)
+        col = r[:, k]
+        col = jnp.where(idx >= k, col, 0.0)
+        norm = jnp.sqrt(jnp.sum(col * col))
+        x0 = col[k]
+        alpha = jnp.where(x0 >= 0.0, -norm, norm)
+        e = (idx == k).astype(dtype)
+        v = col - alpha * e
+        vnorm = jnp.sqrt(jnp.sum(v * v))
+        v = jnp.where(vnorm > 1e-30, v / vnorm, e)
+        r = r - 2.0 * jnp.outer(v, v @ r)
+        q = q - 2.0 * jnp.outer(q @ v, v)
+        return r, q
+
+    r, q = jax.lax.fori_loop(0, max(n - 1, 0), body,
+                             (a, jnp.eye(n, dtype=dtype)))
+    # Sign fix: columns with negative R diagonal flip.
+    d = jnp.sign(jnp.diagonal(r))
+    d = jnp.where(d == 0.0, 1.0, d)
+    return q * d[None, :]
+
+
+def power_iter_refresh_ref(p, q_prev):
+    """Paper Algorithm 4: Q ← QR(P·Q).Q, via the custom Householder QR."""
+    return householder_qr_q(p @ q_prev)

@@ -1,0 +1,216 @@
+"""L1 — Pallas kernels for the SOAP per-step hot path.
+
+Hardware adaptation (DESIGN.md §4): the paper's PyTorch/H100 implementation
+issues four separate cuBLAS GEMMs (rotate G, rotate M, rotate back, factor
+update) plus unfused elementwise Adam ops. On a TPU-shaped memory hierarchy
+the wins come from
+
+  * **sharing Q tiles**: G and M are rotated in one batched kernel, so each
+    Q_L/Q_R tile is streamed from HBM once per pair instead of twice;
+  * **fusing the elementwise chain**: V-update + bias correction + normalize
+    happen in a single VMEM-resident pass (no HBM round-trip for G'⊙G');
+  * **fusing the factor EMA** into the GGᵀ matmul epilogue, so L is read
+    once and GGᵀ never hits HBM;
+  * **MXU-shaped tiles**: 128×128 blocks (the MXU systolic array is 128×128)
+    with the K-reduction as the innermost grid dimension.
+
+All kernels run with `interpret=True` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md) — so on this image the
+BlockSpecs document the intended TPU schedule and define the HLO that the
+Rust runtime executes. Correctness is pinned to `ref.py` by pytest
+(`python/tests/test_kernels.py`), including hypothesis sweeps over shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. Dims that the tile does not divide fall back to
+# the largest divisor ≤ 128 (model dims in configs.py are powers of two, so
+# in practice this is 128 or the whole dim).
+TILE = 128
+
+
+def _block(dim, tile=TILE):
+    """Largest divisor of `dim` that is ≤ `tile`."""
+    b = min(dim, tile)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+# --------------------------------------------------------------------------
+# Batched tiled matmul: out[s] = a[s] @ b — the b tile is shared across s.
+# --------------------------------------------------------------------------
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[0], b_ref[...],
+                          preferred_element_type=jnp.float32)[None]
+
+
+def batched_matmul(a, b):
+    """(S, M, K) @ (K, N) -> (S, M, N).
+
+    Grid (S, M/bm, N/bn, K/bk); the `b` BlockSpec ignores the batch index,
+    so each b tile is fetched once and reused for every batch element — the
+    Q-tile-sharing optimization for rotating (G, M) pairs.
+    """
+    s, m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=(s, m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda si, i, j, kk: (si, i, kk)),
+            pl.BlockSpec((bk, bn), lambda si, i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda si, i, j, kk: (si, i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul(a, b):
+    """Plain (M,K)@(K,N) tiled Pallas matmul."""
+    return batched_matmul(a[None], b)[0]
+
+
+def rotate_pair(ql, qr, g, m):
+    """G' = QLᵀ G QR and M' = QLᵀ M QR in one batched pass
+    (ref: `ref.rotate_pair_ref`). `ql`/`qr` may be None (identity side:
+    one-sided SOAP or dims over max_precond_dim)."""
+    x = jnp.stack([g, m])  # (2, M, N)
+    if ql is not None:
+        # QLᵀ X = (Xᵀ QL)ᵀ — lowers to free HLO transposes around the kernel.
+        xt = jnp.swapaxes(x, 1, 2)
+        x = jnp.swapaxes(batched_matmul(xt, ql), 1, 2)
+    if qr is not None:
+        x = batched_matmul(x, qr)
+    return x[0], x[1]
+
+
+def rotate_back(ql, qr, n_rot):
+    """N = QL N' QRᵀ (ref: `ref.rotate_back_ref`)."""
+    x = n_rot
+    if ql is not None:
+        x = matmul(ql, x)
+    if qr is not None:
+        # X QRᵀ = (QR Xᵀ)ᵀ
+        x = matmul(x, qr.T)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Fused elementwise Adam-in-eigenbasis kernel
+# --------------------------------------------------------------------------
+
+def _adam_kernel(beta2, eps, g_ref, m_ref, v_ref, bc2_ref, v_out, n_out):
+    g = g_ref[...]
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    v_out[...] = v_new
+    bc2 = bc2_ref[0, 0]
+    n_out[...] = m_ref[...] / (jnp.sqrt(jnp.maximum(v_new / bc2, 0.0)) + eps)
+
+
+def adam_dir(g_rot, m_rot_hat, v, beta2, eps, t):
+    """Fused V update + normalized direction (ref: `ref.adam_dir_ref`).
+
+    `t` is a traced f32 scalar (global step); β₂/ε are compile-time
+    constants baked into the kernel. The 1−β₂ᵗ correction is computed once
+    outside and broadcast via a (1,1) SMEM-style operand.
+    """
+    m_, n_ = g_rot.shape
+    bm, bn = _block(m_), _block(n_)
+    bc2 = (1.0 - beta2 ** t).reshape(1, 1).astype(jnp.float32)
+    kern = functools.partial(_adam_kernel, beta2, eps)
+    v_new, n_rot = pl.pallas_call(
+        kern,
+        grid=(m_ // bm, n_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_, n_), jnp.float32),
+            jax.ShapeDtypeStruct((m_, n_), jnp.float32),
+        ],
+        interpret=True,
+    )(g_rot, m_rot_hat, v, bc2)
+    return v_new, n_rot
+
+
+# --------------------------------------------------------------------------
+# Kronecker-factor EMA: L' = βL + (1−β)·A Aᵀ fused into the matmul epilogue
+# --------------------------------------------------------------------------
+
+def _factor_kernel(beta, a_ref, at_ref, l_ref, o_ref):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = beta * l_ref[...]
+
+    o_ref[...] += (1.0 - beta) * jnp.dot(
+        a_ref[...], at_ref[...], preferred_element_type=jnp.float32)
+
+
+def factor_ema(l, g, beta, transpose=False):
+    """L' = βL + (1−β)·GGᵀ (or GᵀG when `transpose=True`).
+
+    Ref: `ref.factor_ema_ref`. The EMA blend happens in the matmul prologue/
+    accumulate so L streams through VMEM exactly once.
+    """
+    a = g.T if transpose else g          # (M, K)
+    m_, k_ = a.shape
+    bm, bk = _block(m_), _block(k_)
+    kern = functools.partial(_factor_kernel, beta)
+    return pl.pallas_call(
+        kern,
+        grid=(m_ // bm, m_ // bm, k_ // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A tile
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, j)),   # Aᵀ tile
+            pl.BlockSpec((bm, bm), lambda i, j, kk: (i, j)),    # L tile
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_, m_), jnp.float32),
+        interpret=True,
+    )(a, a.T, l)
+
+
+# --------------------------------------------------------------------------
+# Full fused SOAP step for one layer (compose the kernels; Alg 3 lines 3-14)
+# --------------------------------------------------------------------------
+
+def soap_step(w, m, v, l, r, ql, qr, g, t, lr, *, beta1, beta2, shampoo_beta,
+              eps, weight_decay, sides=(True, True)):
+    """One SOAP update built entirely from the Pallas kernels
+    (ref: `ref.soap_step_ref`). Returns (w', m', v', l', r').
+
+    `sides` = (rotate_left, rotate_right) supports the one-sided variant.
+    """
+    use_l, use_r = sides
+    m_new = beta1 * m + (1.0 - beta1) * g
+    bc1 = 1.0 - beta1 ** t
+    g_rot, m_rot = rotate_pair(ql if use_l else None, qr if use_r else None,
+                               g, m_new)
+    v_new, n_rot = adam_dir(g_rot, m_rot / bc1, v, beta2, eps, t)
+    n = rotate_back(ql if use_l else None, qr if use_r else None, n_rot)
+    w_new = (w - lr * n) * (1.0 - lr * weight_decay)
+    l_new = factor_ema(l, g, shampoo_beta) if use_l else l
+    r_new = factor_ema(r, g, shampoo_beta, transpose=True) if use_r else r
+    return w_new, m_new, v_new, l_new, r_new

@@ -1,0 +1,120 @@
+"""L2 — JAX decoder-only transformer LM (the paper's workload, Appendix A).
+
+Architecture, following the paper's OLMo-derived setup: RMS LayerNorm
+without biases, RoPE positional encoding, QK layer norm (Dehghani et al.),
+GeLU MLP at 4× width, no linear biases, z-loss 1e-4, untied unembedding.
+
+Params travel as a flat ordered list of 2-D arrays (1-D params as (1, n))
+— the ordering is `configs.ModelConfig.param_specs()`, which is the ABI
+shared with the Rust coordinator via manifest.json.
+
+Everything lowers to pure HLO (no LAPACK/FFI custom calls), so the Rust
+PJRT CPU client can execute the artifacts directly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+
+
+def rms_norm(x, scale, eps=1e-5):
+    """RMSNorm with learnable scale, no bias (paper: no biases anywhere)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * scale
+
+
+def qk_norm(x, eps=1e-5):
+    """Per-head RMS normalization of queries/keys (QK layer norm)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps)
+
+
+def rope(x, positions):
+    """Rotary position embedding over the last (head) dimension.
+
+    x: (B, S, H, Dh) with even Dh; positions: (S,).
+    """
+    dh = x.shape[-1]
+    assert dh % 2 == 0
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def gelu(x):
+    """tanh-approximated GeLU (matches rust/src/model/nplm.rs)."""
+    c = 0.7978845608028654
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def attention(x, wq, wk, wv, wo, cfg, positions):
+    b, s, d = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    q = (x @ wq).reshape(b, s, h, dh)
+    k = (x @ wk).reshape(b, s, h, dh)
+    v = (x @ wv).reshape(b, s, h, dh)
+    q, k = qk_norm(q), qk_norm(k)
+    q, k = rope(q, positions), rope(k, positions)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    return out @ wo
+
+
+def forward(cfg: configs.ModelConfig, params, tokens):
+    """Logits for a token batch. `params` is the ordered flat list."""
+    specs = cfg.param_specs()
+    assert len(params) == len(specs), (len(params), len(specs))
+    p = {name: arr for (name, _, _), arr in zip(specs, params)}
+
+    x = p["embed"][tokens]  # (B, S, D)
+    positions = jnp.arange(cfg.seq)
+    for i in range(cfg.depth):
+        pre = rms_norm(x, p[f"blk{i}.ln1"][0])
+        x = x + attention(pre, p[f"blk{i}.wq"], p[f"blk{i}.wk"],
+                          p[f"blk{i}.wv"], p[f"blk{i}.wo"], cfg, positions)
+        pre = rms_norm(x, p[f"blk{i}.ln2"][0])
+        x = x + (gelu(pre @ p[f"blk{i}.mlp_in"]) @ p[f"blk{i}.mlp_out"])
+    x = rms_norm(x, p["ln_f"][0])
+    return x @ p["unembed"]  # (B, S, V)
+
+
+def loss_fn(cfg: configs.ModelConfig, params, tokens, targets):
+    """Mean next-token cross-entropy (nats) + z-loss (coefficient
+    cfg.zloss, as in Appendix A)."""
+    logits = forward(cfg, params, tokens)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (B, S)
+    tgt_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - tgt_logit)
+    z = cfg.zloss * jnp.mean(lse * lse)
+    return ce + z
+
+
+def loss_and_grads(cfg: configs.ModelConfig, params, tokens, targets):
+    """(loss, grads) — the training-step compute graph that aot.py lowers."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens, targets))(list(params))
+    return (loss, *grads)
+
+
+def init_params(cfg: configs.ModelConfig, key):
+    """1/√fan_in normal init; RMSNorm scales start at 1."""
+    params = []
+    for name, r, c in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params.append(jnp.ones((r, c), jnp.float32))
+        else:
+            params.append(
+                jax.random.normal(sub, (r, c), jnp.float32) /
+                jnp.sqrt(float(r)))
+    return params

@@ -1,0 +1,101 @@
+"""L2 — per-layer optimizer update graphs, lowered shape-specialized to HLO.
+
+These are the compute graphs the Rust coordinator executes on its hot path:
+one `*_update` artifact per distinct parameter shape per optimizer, plus the
+`soap_refresh` eigenbasis power-iteration artifact (paper Algorithm 4).
+
+The SOAP update calls the L1 Pallas kernels (`kernels.soap_kernels`), so the
+rotate→Adam→rotate-back hot path lowers into the same HLO module the Rust
+runtime loads. Hyperparameters β₁/β₂/β_shampoo/ε/wd are baked at lowering
+(they are fixed per training run — Appendix A); `t` (global step, for bias
+correction and β-powers) and `lr` (the schedule lives in Rust) are runtime
+scalar inputs.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import soap_kernels as K
+
+# Baked hyperparameters — must match rust/src/optim/hyper.rs::Hyper::default.
+HYPER = dict(beta1=0.95, beta2=0.95, eps=1e-8, weight_decay=1e-4,
+             shampoo_beta=0.95)
+
+
+def adamw_update(w, m, v, g, t, lr):
+    """(w,m,v,g,t,lr) → (w',m',v') — elementwise AdamW."""
+    return ref.adamw_step_ref(
+        w, m, v, g, t, lr, beta1=HYPER["beta1"], beta2=HYPER["beta2"],
+        eps=HYPER["eps"], weight_decay=HYPER["weight_decay"])
+
+
+def soap_update(w, m, v, l, r, ql, qr, g, t, lr):
+    """(w,m,v,l,r,ql,qr,g,t,lr) → (w',m',v',l',r') — full SOAP step built
+    from the Pallas kernels (Algorithm 3 minus the refresh)."""
+    return K.soap_step(
+        w, m, v, l, r, ql, qr, g, t, lr, beta1=HYPER["beta1"],
+        beta2=HYPER["beta2"], shampoo_beta=HYPER["shampoo_beta"],
+        eps=HYPER["eps"], weight_decay=HYPER["weight_decay"],
+        sides=(True, True))
+
+
+def soap_update_onesided_left(w, m, v, l, ql, g, t, lr):
+    """One-sided SOAP (§7.1), rotating the LEFT (row) side only; the R/Q_R
+    state does not exist. Returns (w',m',v',l')."""
+    m_new = HYPER["beta1"] * m + (1.0 - HYPER["beta1"]) * g
+    bc1 = 1.0 - HYPER["beta1"] ** t
+    g_rot, m_rot = K.rotate_pair(ql, None, g, m_new)
+    v_new, n_rot = K.adam_dir(g_rot, m_rot / bc1, v, HYPER["beta2"],
+                              HYPER["eps"], t)
+    n = K.rotate_back(ql, None, n_rot)
+    w_new = (w - lr * n) * (1.0 - lr * HYPER["weight_decay"])
+    l_new = K.factor_ema(l, g, HYPER["shampoo_beta"])
+    return w_new, m_new, v_new, l_new
+
+
+def soap_update_onesided_right(w, m, v, r, qr, g, t, lr):
+    """One-sided SOAP rotating the RIGHT (column) side only — used both for
+    the §7.1 variant on tall layers and for layers whose row dimension
+    exceeds max_precond_dim (embeddings). Returns (w',m',v',r')."""
+    m_new = HYPER["beta1"] * m + (1.0 - HYPER["beta1"]) * g
+    bc1 = 1.0 - HYPER["beta1"] ** t
+    g_rot, m_rot = K.rotate_pair(None, qr, g, m_new)
+    v_new, n_rot = K.adam_dir(g_rot, m_rot / bc1, v, HYPER["beta2"],
+                              HYPER["eps"], t)
+    n = K.rotate_back(None, qr, n_rot)
+    w_new = (w - lr * n) * (1.0 - lr * HYPER["weight_decay"])
+    r_new = K.factor_ema(r, g, HYPER["shampoo_beta"], transpose=True)
+    return w_new, m_new, v_new, r_new
+
+
+def shampoo_update(w, m, v, l_inv, r_inv, g, t, lr):
+    """(w,m,v,l_inv,r_inv,g,t,lr) → (w',m',v') — Shampoo step with *cached*
+    inverse roots and AdamW grafting. Root refreshes run natively in Rust
+    (mirroring DistributedShampoo's CPU-offloaded root computation)."""
+    return ref.shampoo_step_ref(
+        w, m, v, l_inv, r_inv, g, t, lr, beta1=HYPER["beta1"],
+        beta2=HYPER["beta2"], eps=HYPER["eps"],
+        weight_decay=HYPER["weight_decay"])
+
+
+def soap_refresh(p, q_prev):
+    """(P, Q) → Q' — Algorithm 4: one power-iteration step + Householder QR
+    (hand-rolled, LAPACK-free — DESIGN.md §2)."""
+    return ref.power_iter_refresh_ref(p, q_prev)
+
+
+def factor_pair_update(l, r, g):
+    """(L, R, G) → (L', R') — standalone Kronecker-factor EMA artifact, used
+    by the Shampoo PJRT path between refreshes (Pallas fused epilogue)."""
+    l_new = K.factor_ema(l, g, HYPER["shampoo_beta"])
+    r_new = K.factor_ema(r, g, HYPER["shampoo_beta"], transpose=True)
+    return l_new, r_new
+
+
+def soap_update_jnp(w, m, v, l, r, ql, qr, g, t, lr):
+    """Pure-jnp SOAP step (no Pallas) — the L2-only variant kept for the
+    §Perf L1-vs-L2 comparison bench."""
+    return ref.soap_step_ref(
+        w, m, v, l, r, ql, qr, g, t, lr, beta1=HYPER["beta1"],
+        beta2=HYPER["beta2"], shampoo_beta=HYPER["shampoo_beta"],
+        eps=HYPER["eps"], weight_decay=HYPER["weight_decay"])

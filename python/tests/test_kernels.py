@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas kernels vs pure-jnp reference (`ref.py`),
+including hypothesis sweeps over shapes — the core correctness signal for
+the SOAP hot path that the Rust runtime executes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import soap_kernels as K
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 12, 16, 24, 64, 96, 128, 160, 256])
+
+
+def rand_orth(rng, n):
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    return q.astype(np.float32)
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_rotate_pair_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    ql, qr = rand_orth(rng, m), rand_orth(rng, n)
+    g, mm = rand(rng, m, n), rand(rng, m, n)
+    got_g, got_m = K.rotate_pair(ql, qr, g, mm)
+    want_g, want_m = ref.rotate_pair_ref(ql, qr, g, mm)
+    np.testing.assert_allclose(got_g, want_g, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(got_m, want_m, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_rotate_back_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    ql, qr = rand_orth(rng, m), rand_orth(rng, n)
+    x = rand(rng, m, n)
+    np.testing.assert_allclose(
+        K.rotate_back(ql, qr, x), ref.rotate_back_ref(ql, qr, x),
+        atol=1e-4, rtol=1e-4)
+
+
+def test_rotate_roundtrip_identity():
+    rng = np.random.default_rng(0)
+    m, n = 32, 48
+    ql, qr = rand_orth(rng, m), rand_orth(rng, n)
+    g = rand(rng, m, n)
+    g_rot, _ = K.rotate_pair(ql, qr, g, g)
+    back = K.rotate_back(ql, qr, g_rot)
+    np.testing.assert_allclose(back, g, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, t=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1))
+def test_adam_dir_matches_ref(m, n, t, seed):
+    rng = np.random.default_rng(seed)
+    g, mh = rand(rng, m, n), rand(rng, m, n)
+    v = np.abs(rand(rng, m, n))
+    tf = jnp.float32(t)
+    v1, n1 = K.adam_dir(g, mh, v, 0.95, 1e-8, tf)
+    v2, n2 = ref.adam_dir_ref(g, mh, v, 0.95, 1e-8, tf)
+    np.testing.assert_allclose(v1, v2, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(n1, n2, atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1),
+       transpose=st.booleans())
+def test_factor_ema_matches_ref(m, n, seed, transpose):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, m, n)
+    d = n if transpose else m
+    l = rand(rng, d, d)
+    l = (l + l.T) / 2
+    got = K.factor_ema(l, g, 0.95, transpose=transpose)
+    want_l, want_r = ref.factor_ema_ref(
+        l if not transpose else np.zeros((m, m), np.float32),
+        l if transpose else np.zeros((n, n), np.float32), g, 0.95)
+    want = want_r if transpose else want_l
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([2, 3, 8, 24, 64]),
+       n=st.sampled_from([2, 4, 16, 96]),
+       seed=st.integers(0, 2**31 - 1))
+def test_soap_step_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    ql, qr = rand_orth(rng, m), rand_orth(rng, n)
+    w, g, mm = rand(rng, m, n), rand(rng, m, n), rand(rng, m, n)
+    v = np.abs(rand(rng, m, n))
+    l = rand(rng, m, m); l = l @ l.T
+    r = rand(rng, n, n); r = r @ r.T
+    t = jnp.float32(5.0)
+    hp = dict(beta1=0.95, beta2=0.95, shampoo_beta=0.95, eps=1e-8,
+              weight_decay=1e-4)
+    got = K.soap_step(w, mm, v, l, r, ql, qr, g, t, 0.01, **hp)
+    want = ref.soap_step_ref(w, mm, v, l, r, ql, qr, g, t, 0.01, **hp)
+    for a, b, name in zip(got, want, "w m v l r".split()):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-3, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Householder QR (the LAPACK-free refresh path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([1, 2, 3, 5, 8, 16, 33, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_householder_qr_orthogonal(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, n)
+    q = np.asarray(ref.householder_qr_q(jnp.asarray(a)))
+    np.testing.assert_allclose(q @ q.T, np.eye(n), atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 24]), seed=st.integers(0, 2**31 - 1))
+def test_householder_qr_spans_input(n, seed):
+    # Q R = A for some upper-triangular R  ⇔  Qᵀ A is upper triangular.
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, n)
+    q = np.asarray(ref.householder_qr_q(jnp.asarray(a)))
+    r = q.T @ a
+    lower = np.tril(r, -1)
+    assert np.abs(lower).max() < 5e-4, np.abs(lower).max()
+
+
+def test_householder_qr_positive_diag():
+    rng = np.random.default_rng(3)
+    a = rand(rng, 12, 12)
+    q = np.asarray(ref.householder_qr_q(jnp.asarray(a)))
+    r = q.T @ a
+    assert (np.diagonal(r) >= -1e-4).all()
+
+
+def test_power_iter_converges_to_eigenbasis():
+    # Symmetric PSD with distinct eigenvalues: repeated Algorithm 4 steps
+    # must converge to the true eigenvectors (up to sign).
+    rng = np.random.default_rng(7)
+    n = 8
+    q_true = rand_orth(rng, n)
+    lam = np.diag(np.linspace(8.0, 1.0, n).astype(np.float32))
+    p = q_true @ lam @ q_true.T
+    q = rand_orth(rng, n)
+    for _ in range(300):
+        q = np.asarray(ref.power_iter_refresh_ref(jnp.asarray(p), jnp.asarray(q)))
+    # Columns should match ±q_true's columns.
+    overlap = np.abs(q_true.T @ q)
+    np.testing.assert_allclose(np.diagonal(overlap), 1.0, atol=1e-2)
+
+
+def test_power_iter_fixed_point_at_eigenbasis():
+    rng = np.random.default_rng(9)
+    n = 6
+    q_true = rand_orth(rng, n)
+    lam = np.diag(np.linspace(5.0, 0.5, n).astype(np.float32))
+    p = q_true @ lam @ q_true.T
+    # Fix signs the same way the kernel does (diag(R) ≥ 0).
+    q1 = np.asarray(ref.power_iter_refresh_ref(jnp.asarray(p), jnp.asarray(q_true)))
+    q2 = np.asarray(ref.power_iter_refresh_ref(jnp.asarray(p), jnp.asarray(q1)))
+    np.testing.assert_allclose(q1, q2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Block helper
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim,expect", [(128, 128), (256, 128), (64, 64),
+                                        (96, 96), (176, 88), (1, 1), (3, 3)])
+def test_block_divides(dim, expect):
+    b = K._block(dim)
+    assert b == expect
+    assert dim % b == 0

@@ -1,0 +1,127 @@
+"""L2 correctness: transformer LM forward/backward vs finite differences,
+architecture invariants (causality, RoPE shift behaviour), and config ABI."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import configs, model
+
+TINY = configs.ModelConfig("tiny_test", vocab=32, dim=16, depth=2, heads=2,
+                           seq=8, batch=2)
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq),
+                          dtype=np.int32)
+    targets = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq),
+                           dtype=np.int32)
+    return jnp.asarray(tokens), jnp.asarray(targets)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_initial_loss_near_log_vocab(tiny_params):
+    tokens, targets = make_batch(TINY)
+    loss = model.loss_fn(TINY, tiny_params, tokens, targets)
+    assert abs(float(loss) - np.log(TINY.vocab)) < 0.7
+
+
+def test_loss_and_grads_shapes(tiny_params):
+    tokens, targets = make_batch(TINY)
+    out = model.loss_and_grads(TINY, tiny_params, tokens, targets)
+    assert len(out) == 1 + len(tiny_params)
+    for g, p in zip(out[1:], tiny_params):
+        assert g.shape == p.shape
+
+
+def test_grads_match_finite_differences(tiny_params):
+    tokens, targets = make_batch(TINY, seed=1)
+    out = model.loss_and_grads(TINY, tiny_params, tokens, targets)
+    grads = out[1:]
+    loss_of = lambda ps: float(model.loss_fn(TINY, ps, tokens, targets))
+    eps = 1e-2
+    rng = np.random.default_rng(2)
+    for pi in [0, 3, len(tiny_params) - 1]:  # embed, a weight, unembed
+        p = np.asarray(tiny_params[pi])
+        i = rng.integers(0, p.shape[0])
+        j = rng.integers(0, p.shape[1])
+        pp = [jnp.asarray(np.array(x)) for x in tiny_params]
+        base = np.array(pp[pi])
+        base[i, j] += eps
+        pp[pi] = jnp.asarray(base)
+        lp = loss_of(pp)
+        base[i, j] -= 2 * eps
+        pp[pi] = jnp.asarray(base)
+        lm = loss_of(pp)
+        fd = (lp - lm) / (2 * eps)
+        an = float(grads[pi][i, j])
+        assert abs(fd - an) < 3e-2 * (1.0 + abs(fd) + abs(an)), \
+            f"param {pi} ({i},{j}): fd {fd} vs analytic {an}"
+
+
+def test_causality(tiny_params):
+    # Changing a future token must not change logits at earlier positions.
+    tokens, _ = make_batch(TINY, seed=3)
+    logits1 = model.forward(TINY, tiny_params, tokens)
+    toks2 = np.array(tokens)
+    toks2[:, -1] = (toks2[:, -1] + 1) % TINY.vocab
+    logits2 = model.forward(TINY, tiny_params, jnp.asarray(toks2))
+    np.testing.assert_allclose(logits1[:, :-1], logits2[:, :-1], atol=1e-5)
+    assert np.abs(np.asarray(logits1[:, -1] - logits2[:, -1])).max() > 1e-4
+
+
+def test_zloss_contributes():
+    cfg0 = configs.ModelConfig("z0", vocab=32, dim=16, depth=1, heads=2,
+                               seq=8, batch=2, zloss=0.0)
+    cfg1 = configs.ModelConfig("z1", vocab=32, dim=16, depth=1, heads=2,
+                               seq=8, batch=2, zloss=1.0)
+    params = model.init_params(cfg0, jax.random.PRNGKey(1))
+    tokens, targets = make_batch(cfg0, seed=4)
+    l0 = float(model.loss_fn(cfg0, params, tokens, targets))
+    l1 = float(model.loss_fn(cfg1, params, tokens, targets))
+    assert l1 > l0 + 1e-4
+
+
+def test_rope_is_relative():
+    # RoPE: rotating two positions by the same offset preserves dot products
+    # of the rotated vectors (relative-position property).
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 4, 1, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 4, 1, 8)).astype(np.float32))
+    pos_a = jnp.arange(4)
+    pos_b = jnp.arange(4) + 7
+    qa, ka = model.rope(q, pos_a), model.rope(k, pos_a)
+    qb, kb = model.rope(q, pos_b), model.rope(k, pos_b)
+    dots_a = np.einsum("bshd,bthd->st", np.asarray(qa), np.asarray(ka))
+    dots_b = np.einsum("bshd,bthd->st", np.asarray(qb), np.asarray(kb))
+    np.testing.assert_allclose(dots_a, dots_b, atol=1e-4)
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(6).normal(
+        size=(2, 3, 16)).astype(np.float32) * 5.0)
+    y = model.rms_norm(x, jnp.ones(16))
+    ms = np.mean(np.asarray(y) ** 2, axis=-1)
+    np.testing.assert_allclose(ms, 1.0, atol=1e-3)
+
+
+def test_param_specs_abi():
+    cfg = configs.get("nano")
+    specs = cfg.param_specs()
+    assert specs[0] == ("embed", cfg.vocab, cfg.dim)
+    assert specs[-1] == ("unembed", cfg.dim, cfg.vocab)
+    assert len(specs) == 2 + 8 * cfg.depth + 1
+    # 360m:660m analogue pair exists and keeps ordering.
+    assert configs.get("small").num_params() < configs.get("medium").num_params()
+
+
+def test_big100m_is_about_100m():
+    cfg = configs.get("big100m")
+    assert 7e7 < cfg.non_embedding_params() < 1.3e8, cfg.non_embedding_params()

@@ -1,0 +1,147 @@
+"""Optimizer update graphs: the exact computations the Rust runtime executes.
+Checks Pallas-built graphs against pure-jnp refs and basic semantics
+(descent, weight decay, bias correction at t=1)."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import optim_graphs as og
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def rand_orth(rng, n):
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    return q.astype(np.float32)
+
+
+def soap_inputs(rng, m, n):
+    w, g, mm = rand(rng, m, n), rand(rng, m, n), rand(rng, m, n)
+    v = np.abs(rand(rng, m, n))
+    l = rand(rng, m, m); l = l @ l.T
+    r = rand(rng, n, n); r = r @ r.T
+    ql, qr = rand_orth(rng, m), rand_orth(rng, n)
+    return w, mm, v, l, r, ql, qr, g
+
+
+def test_soap_update_pallas_equals_jnp():
+    rng = np.random.default_rng(0)
+    w, m, v, l, r, ql, qr, g = soap_inputs(rng, 24, 16)
+    t, lr = jnp.float32(3.0), jnp.float32(0.01)
+    got = og.soap_update(w, m, v, l, r, ql, qr, g, t, lr)
+    want = og.soap_update_jnp(w, m, v, l, r, ql, qr, g, t, lr)
+    for a, b, name in zip(got, want, "w m v l r".split()):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-3, err_msg=name)
+
+
+def test_adamw_update_matches_numpy():
+    rng = np.random.default_rng(1)
+    w, m, g = rand(rng, 4, 6), rand(rng, 4, 6), rand(rng, 4, 6)
+    v = np.abs(rand(rng, 4, 6))
+    t, lr = jnp.float32(5.0), jnp.float32(0.1)
+    h = og.HYPER
+    w2, m2, v2 = og.adamw_update(w, m, v, g, t, lr)
+    m_np = h["beta1"] * m + (1 - h["beta1"]) * g
+    v_np = h["beta2"] * v + (1 - h["beta2"]) * g * g
+    bc1, bc2 = 1 - h["beta1"] ** 5, 1 - h["beta2"] ** 5
+    d = (m_np / bc1) / (np.sqrt(v_np / bc2) + h["eps"])
+    w_np = (w - 0.1 * d) * (1 - 0.1 * h["weight_decay"])
+    np.testing.assert_allclose(np.asarray(w2), w_np, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2), m_np, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), v_np, atol=1e-6)
+
+
+def test_soap_update_identity_basis_is_adamw():
+    """Paper: SOAP with Q_L = Q_R = I reduces to AdamW exactly."""
+    rng = np.random.default_rng(2)
+    m_, n_ = 8, 12
+    w, g, mm = rand(rng, m_, n_), rand(rng, m_, n_), rand(rng, m_, n_)
+    v = np.abs(rand(rng, m_, n_))
+    l = np.zeros((m_, m_), np.float32)
+    r = np.zeros((n_, n_), np.float32)
+    eye_l, eye_r = np.eye(m_, dtype=np.float32), np.eye(n_, dtype=np.float32)
+    t, lr = jnp.float32(4.0), jnp.float32(0.05)
+    w_s, m_s, v_s, _, _ = og.soap_update(w, mm, v, l, r, eye_l, eye_r, g, t, lr)
+    w_a, m_a, v_a = og.adamw_update(w, mm, v, g, t, lr)
+    np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_a), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_s), np.asarray(m_a), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_s), np.asarray(v_a), atol=1e-6)
+
+
+def test_one_sided_updates_consistent_with_full_when_other_side_identity():
+    rng = np.random.default_rng(3)
+    m_, n_ = 8, 6
+    w, mm, v, l, r, ql, qr, g = soap_inputs(rng, m_, n_)
+    t, lr = jnp.float32(2.0), jnp.float32(0.01)
+    # Left-only artifact vs full artifact with Q_R = I.
+    w1, m1, v1, l1 = og.soap_update_onesided_left(w, mm, v, l, ql, g, t, lr)
+    w2, m2, v2, l2, _ = og.soap_update(
+        w, mm, v, l, r, ql, np.eye(n_, dtype=np.float32), g, t, lr)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+    # Right-only artifact vs full with Q_L = I.
+    w3, m3, v3, r3 = og.soap_update_onesided_right(w, mm, v, r, qr, g, t, lr)
+    w4, _, _, _, r4 = og.soap_update(
+        w, mm, v, l, r, np.eye(m_, dtype=np.float32), qr, g, t, lr)
+    np.testing.assert_allclose(np.asarray(w3), np.asarray(w4), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r3), np.asarray(r4), atol=1e-5)
+
+
+def test_shampoo_update_grafting_norm():
+    rng = np.random.default_rng(4)
+    m_, n_ = 6, 6
+    w, g, mm = rand(rng, m_, n_), rand(rng, m_, n_), rand(rng, m_, n_)
+    v = np.abs(rand(rng, m_, n_))
+    l_inv = np.eye(m_, dtype=np.float32) * 3.0  # arbitrary scaling
+    r_inv = np.eye(n_, dtype=np.float32)
+    t, lr = jnp.float32(1.0), jnp.float32(1.0)
+    w2, m2, v2 = og.shampoo_update(w, mm, v, l_inv, r_inv, g, t, lr)
+    # Grafting: step norm equals the AdamW step norm, independent of the
+    # 3× inflation of l_inv.
+    w_a, _, _ = og.adamw_update(w, mm, v, g, t, lr)
+    h = og.HYPER
+    step_sh = np.asarray(w2) / (1 - 1.0 * h["weight_decay"]) - w
+    step_ad = np.asarray(w_a) / (1 - 1.0 * h["weight_decay"]) - w
+    np.testing.assert_allclose(np.linalg.norm(step_sh),
+                               np.linalg.norm(step_ad), rtol=1e-3)
+
+
+def test_factor_pair_update():
+    rng = np.random.default_rng(5)
+    g = rand(rng, 8, 4)
+    l = rand(rng, 8, 8); l = l @ l.T
+    r = rand(rng, 4, 4); r = r @ r.T
+    l2, r2 = og.factor_pair_update(l, r, g)
+    wl, wr = ref.factor_ema_ref(l, r, g, og.HYPER["shampoo_beta"])
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(wl), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(wr), atol=1e-4)
+
+
+def test_soap_refresh_improves_eigen_alignment():
+    # One power-iteration step from a perturbed basis should reduce the
+    # off-diagonality of QᵀPQ.
+    rng = np.random.default_rng(6)
+    n = 8
+    q_true = rand_orth(rng, n)
+    lam = np.diag(np.linspace(9.0, 1.0, n).astype(np.float32))
+    p = q_true @ lam @ q_true.T
+    q0 = rand_orth(rng, n)
+
+    def offdiag(q):
+        a = q.T @ p @ q
+        return np.abs(a - np.diag(np.diagonal(a))).sum()
+
+    q1 = np.asarray(og.soap_refresh(p, q0)[0]) if isinstance(
+        og.soap_refresh(p, q0), tuple) else np.asarray(og.soap_refresh(p, q0))
+    assert offdiag(q1) < offdiag(q0)
+
+
+def test_hyper_matches_rust_defaults():
+    """The baked hyper block is the cross-language ABI — pin it."""
+    assert og.HYPER == dict(beta1=0.95, beta2=0.95, eps=1e-8,
+                            weight_decay=1e-4, shampoo_beta=0.95)

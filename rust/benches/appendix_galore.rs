@@ -1,0 +1,64 @@
+//! APP-B (paper Appendix B): GaLore (full-rank, α = 1) vs AdamW vs Shampoo
+//! vs SOAP on the smallest model — the paper's negative result motivating
+//! SOAP's design choices (EMA'd factors instead of per-gradient SVD bases,
+//! momentum in the original space).
+//!
+//! Expected shape (paper): AdamW < GaLore < Shampoo ≤ SOAP (in quality;
+//! losses the other way), with GaLore preferring large f (200 in the paper).
+
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
+use soap_lab::optim::OptKind;
+use soap_lab::util::bench::Report;
+
+fn main() {
+    if !artifacts_available() {
+        println!("appendix_galore: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let model = bench_model();
+    let steps = bench_steps(300);
+    println!("appendix B: model={model} steps={steps}");
+
+    let mut report = Report::new(
+        &format!("Appendix B: GaLore vs baselines [{model}]"),
+        "step",
+        "loss",
+    );
+    let mut tails: Vec<(String, f32)> = Vec::new();
+
+    for opt in [OptKind::AdamW, OptKind::Shampoo, OptKind::Soap] {
+        let (log, _) = RunSpec::new(&model, opt, steps).run().expect("run");
+        println!("{:<12} tail loss {:.4}", opt.name(), log.tail_loss(20));
+        tails.push((opt.name().to_string(), log.tail_loss(20)));
+        report.add_series(opt.name(), log.loss_series());
+    }
+    // GaLore frequency sweep (paper: 200 was best; our runs are shorter so
+    // sweep proportionally smaller values too).
+    let mut best: Option<(u64, f32)> = None;
+    for f in [50u64, 100, 200] {
+        let (log, _) = RunSpec::new(&model, OptKind::Galore, steps)
+            .with_freq(f)
+            .run()
+            .expect("galore");
+        let tail = log.tail_loss(20);
+        println!("galore f={f:<4} tail loss {tail:.4}");
+        if best.map(|(_, b)| tail < b).unwrap_or(true) {
+            best = Some((f, tail));
+        }
+        if f == 200 {
+            report.add_series(&format!("galore f={f}"), log.loss_series());
+        }
+    }
+    let (bf, bl) = best.unwrap();
+    tails.push((format!("galore (f={bf})"), bl));
+
+    tails.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\nranking (best→worst):");
+    for (name, loss) in &tails {
+        println!("  {name:<16} {loss:.4}");
+    }
+    report.note(format!(
+        "best GaLore f={bf}: {bl:.4} — paper: GaLore beats AdamW but loses to Shampoo/SOAP"
+    ));
+    report.render_and_save();
+}

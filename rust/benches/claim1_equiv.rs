@@ -1,0 +1,57 @@
+//! CLAIM1 (paper §4.1, Claim 1): idealized Shampoo (power 1/2, dataset
+//! factors, trace correction) is EQUIVALENT to idealized Adafactor run in
+//! Shampoo's eigenbasis. This bench quantifies the numerical residual over
+//! random gradient datasets at increasing sizes (exact up to fp32 rounding
+//! and Jacobi tolerance), and reports the A_i = λ_i identity from the proof.
+
+use soap_lab::linalg::Matrix;
+use soap_lab::optim::idealized::{
+    claim1_row_identity, dataset_factors, idealized_adafactor_dir, idealized_shampoo_dir,
+};
+use soap_lab::util::bench::Report;
+use soap_lab::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xC1A1);
+    let mut report = Report::new(
+        "Claim 1: ||Alg1 − Alg2|| / ||Alg1|| over random gradient datasets",
+        "matrix dim",
+        "relative error",
+    );
+
+    let dims = [2usize, 4, 8, 16, 32, 48];
+    let mut pts = Vec::new();
+    println!("{:>5} {:>14} {:>14}", "dim", "rel err", "A=λ err");
+    for &d in &dims {
+        let grads: Vec<Matrix> = (0..3 * d).map(|_| Matrix::randn(&mut rng, d, d, 1.0)).collect();
+        let g = grads[0].clone();
+        let d1 = idealized_shampoo_dir(&grads, &g);
+        let d2 = idealized_adafactor_dir(&grads, &g, 0.0);
+        let rel = (d1.max_abs_diff(&d2) / d1.max_abs().max(1e-12)) as f64;
+
+        let (a, lambda) = claim1_row_identity(&grads);
+        let id_err: f64 = a
+            .iter()
+            .zip(&lambda)
+            .map(|(x, y)| ((x - y).abs() / (1.0 + y.abs())) as f64)
+            .fold(0.0, f64::max);
+
+        println!("{d:>5} {rel:>14.3e} {id_err:>14.3e}");
+        assert!(rel < 0.05, "Claim 1 violated at dim {d}: rel {rel}");
+        assert!(id_err < 0.05, "A=λ identity violated at dim {d}");
+        pts.push((d as f64, rel));
+    }
+    report.add_series("relative error (fp32 + Jacobi tol)", pts);
+    report.note("Claim 1 equivalence holds to numerical precision ✓".to_string());
+    report.render_and_save();
+
+    // Also verify the trace factor: Tr(L) equals Σλ.
+    let grads: Vec<Matrix> = (0..32).map(|_| Matrix::randn(&mut rng, 12, 12, 1.0)).collect();
+    let (l, _) = dataset_factors(&grads);
+    let (_, lambda) = claim1_row_identity(&grads);
+    let tr = l.trace();
+    let sum_l: f32 = lambda.iter().sum();
+    println!("\nTr(L) = {tr:.4} vs Σλ = {sum_l:.4} (Δ {:.2e})", (tr - sum_l).abs());
+    assert!((tr - sum_l).abs() / tr.abs() < 1e-3);
+    println!("claim1_equiv: all checks passed ✓");
+}

@@ -1,0 +1,37 @@
+//! FIG5 (paper Fig 5 + §6.4): longer-duration training — 5× the
+//! chinchilla-analogue budget (paper: 100× model size instead of 20×) —
+//! checking that SOAP's advantage over AdamW persists beyond the
+//! compute-optimal regime.
+
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
+use soap_lab::optim::OptKind;
+use soap_lab::util::bench::Report;
+
+fn main() {
+    if !artifacts_available() {
+        println!("fig5_long_run: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let model = bench_model();
+    let steps = bench_steps(300) * 5;
+    println!("fig5: model={model} steps={steps} (5× the fig1 budget)");
+
+    let mut report = Report::new(
+        &format!("Fig 5: long-duration loss, SOAP vs AdamW [{model}]"),
+        "step",
+        "loss",
+    );
+    let mut tails = Vec::new();
+    for opt in [OptKind::AdamW, OptKind::Soap] {
+        let (log, _) = RunSpec::new(&model, opt, steps).run().expect("run");
+        let tail = log.tail_loss(30);
+        println!("{:<6} tail loss {:.4}", opt.name(), tail);
+        tails.push((opt, tail));
+        report.add_series(opt.name(), log.loss_series());
+    }
+    let gap = tails[0].1 - tails[1].1;
+    report.note(format!(
+        "SOAP advantage at 5× budget: {gap:+.4} nats (paper: advantage maintained at 100× model size)"
+    ));
+    report.render_and_save();
+}

@@ -1,0 +1,72 @@
+//! FIG6 (paper Fig 6 + §7): space/time-saving SOAP variants —
+//! factorized (Adafactor second moment in the eigenbasis), one-sided
+//! (identity on the large side), and both — against SOAP, Shampoo, AdamW.
+//!
+//! Expected shape (paper): factorized ≈ SOAP (negligible loss increase);
+//! one-sided costs more but still ≥ Shampoo; all variants beat AdamW while
+//! the combined variant uses LESS optimizer memory than AdamW.
+
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
+use soap_lab::optim::{Hyper, OptKind};
+use soap_lab::util::bench::Report;
+
+fn main() {
+    if !artifacts_available() {
+        println!("fig6_variants: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let model = bench_model();
+    let steps = bench_steps(300);
+    println!("fig6: model={model} steps={steps}");
+
+    let h = Hyper::default();
+    let cases: Vec<(&str, OptKind, Hyper)> = vec![
+        ("adamw", OptKind::AdamW, h.clone()),
+        ("shampoo", OptKind::Shampoo, h.clone()),
+        ("soap", OptKind::Soap, h.clone()),
+        ("soap (factorized)", OptKind::Soap, h.clone().factorized()),
+        ("soap (one-sided)", OptKind::Soap, h.clone().one_sided()),
+        ("soap (factorized, one-sided)", OptKind::Soap, h.clone().factorized().one_sided()),
+    ];
+
+    let mut report = Report::new(
+        &format!("Fig 6: SOAP variants, loss curves [{model}]"),
+        "step",
+        "loss",
+    );
+    let mut rows = Vec::new();
+    for (name, opt, hyper) in cases {
+        let spec = RunSpec::new(&model, opt, steps).with_hyper(hyper);
+        let (log, secs) = spec.run().expect("run");
+        // Rebuild a trainer just for the state-bytes accounting.
+        let mut t = soap_lab::coordinator::Trainer::new_pjrt(
+            &model,
+            spec.trainer_config(),
+            "artifacts",
+        )
+        .unwrap();
+        let _ = t.train_step();
+        let state_mb = t.state_bytes() as f64 / 1e6;
+        println!(
+            "{name:<30} tail loss {:.4}  {:.2}s/step  optimizer state {:.2} MB",
+            log.tail_loss(20),
+            secs,
+            state_mb
+        );
+        rows.push((name.to_string(), log.tail_loss(20), state_mb));
+        report.add_series(name, log.loss_series());
+    }
+
+    let soap = rows.iter().find(|r| r.0 == "soap").unwrap().1;
+    let fact = rows.iter().find(|r| r.0 == "soap (factorized)").unwrap().1;
+    let adamw_row = rows.iter().find(|r| r.0 == "adamw").unwrap().clone();
+    let combo = rows.iter().find(|r| r.0.contains("factorized, one-sided")).unwrap().clone();
+    report.note(format!(
+        "factorized vs soap: {:+.4} (paper: negligible); combined vs adamw loss {:+.4} with state {:.2} vs {:.2} MB",
+        fact - soap,
+        combo.1 - adamw_row.1,
+        combo.2,
+        adamw_row.2
+    ));
+    report.render_and_save();
+}

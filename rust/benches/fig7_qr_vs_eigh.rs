@@ -1,0 +1,51 @@
+//! FIG7-R (paper Fig 7 right): eigenbasis refresh method — one
+//! power-iteration step + QR (Algorithm 4, `torch.linalg.qr` analogue)
+//! versus a fresh eigendecomposition every refresh (`torch.linalg.eigh`
+//! analogue, our Jacobi solver).
+//!
+//! Expected shape (paper): the two perform comparably across the frequency
+//! spectrum while QR is computationally cheaper.
+
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
+use soap_lab::optim::{Hyper, OptKind, RefreshMethod};
+use soap_lab::util::bench::Report;
+
+fn main() {
+    if !artifacts_available() {
+        println!("fig7_qr_vs_eigh: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let model = bench_model();
+    let steps = bench_steps(250);
+    let freqs = [10u64, 32, 100];
+    println!("fig7 (right): model={model} steps={steps} freqs={freqs:?}");
+
+    let mut report = Report::new(
+        &format!("Fig 7 (right): QR power iteration vs eigh refresh [{model}]"),
+        "precond frequency",
+        "final loss",
+    );
+    for (label, method) in [
+        ("qr power-iteration (Alg 4)", RefreshMethod::QrPowerIteration),
+        ("eigh (fresh decomposition)", RefreshMethod::Eigh),
+    ] {
+        let mut pts = Vec::new();
+        let mut refresh_total = 0.0;
+        for &f in &freqs {
+            let hyper = Hyper { refresh: method, precond_freq: f, ..Hyper::default() };
+            let (log, _) = RunSpec::new(&model, OptKind::Soap, steps)
+                .with_hyper(hyper)
+                .run()
+                .expect("run");
+            let tail = log.tail_loss(20);
+            let refresh: f64 = log.timings.iter().map(|t| t.refresh_s).sum();
+            refresh_total += refresh;
+            println!("{label:<28} f={f:<4} loss {tail:.4}  refresh {refresh:.2}s total");
+            pts.push((f as f64, tail as f64));
+        }
+        report.add_series(label, pts);
+        report.note(format!("{label}: total refresh seconds {refresh_total:.2}"));
+    }
+    report.note("paper: both comparable across the frequency spectrum; QR cheaper".to_string());
+    report.render_and_save();
+}

@@ -1,0 +1,117 @@
+//! TAB-TIME (paper §7.3): per-step optimizer cost — measured per-layer
+//! update time for SOAP/Shampoo/variants vs the paper's FLOP model
+//! (m³+n³+2m²n+2mn² for SOAP; m³+n³+m²n+mn² for Shampoo), plus the
+//! native-vs-PJRT(Pallas) hot-path comparison for the §Perf log.
+
+use std::time::Instant;
+
+use soap_lab::linalg::Matrix;
+use soap_lab::optim::{Hyper, OptKind};
+use soap_lab::util::bench::{fmt_duration, print_table, Bencher, Measurement};
+use soap_lab::util::rng::Rng;
+
+fn time_updates(kind: OptKind, hyper: &Hyper, m: usize, n: usize, iters: usize) -> f64 {
+    let mut opt = kind.build(m, n, hyper);
+    let mut rng = Rng::new(1);
+    let mut w = Matrix::randn(&mut rng, m, n, 0.1);
+    let g = Matrix::randn(&mut rng, m, n, 0.1);
+    // Warm up (first step pays eigh init for SOAP).
+    opt.update(&mut w, &g, 1, 1e-4);
+    let t0 = Instant::now();
+    for t in 0..iters {
+        opt.update(&mut w, &g, t as u64 + 2, 1e-4);
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let hyper = Hyper { precond_freq: 1_000_000, ..Hyper::default() }; // per-step cost only
+    let shapes = [(64usize, 64usize), (128, 128), (256, 256), (128, 512)];
+    let iters = 30;
+
+    println!("== §7.3 per-step optimizer cost (refresh excluded via huge f) ==");
+    println!(
+        "{:<10} {:>9} {:>12} {:>12} {:>12} {:>16}",
+        "shape", "adamw", "shampoo", "soap", "soap-1sided", "soap/shampoo"
+    );
+    let mut soap_per_flop = Vec::new();
+    for &(m, n) in &shapes {
+        let t_adam = time_updates(OptKind::AdamW, &hyper, m, n, iters);
+        let t_sham = time_updates(OptKind::Shampoo, &hyper, m, n, iters);
+        let t_soap = time_updates(OptKind::Soap, &hyper, m, n, iters);
+        let t_one = time_updates(OptKind::Soap, &Hyper { one_sided: true, ..hyper.clone() }, m, n, iters);
+        println!(
+            "{:<10} {:>9} {:>12} {:>12} {:>12} {:>15.2}x",
+            format!("{m}x{n}"),
+            fmt_duration(t_adam),
+            fmt_duration(t_sham),
+            fmt_duration(t_soap),
+            fmt_duration(t_one),
+            t_soap / t_sham
+        );
+        let flops = (m * m * m + n * n * n + 2 * m * m * n + 2 * m * n * n) as f64;
+        soap_per_flop.push((format!("{m}x{n}"), t_soap / flops));
+    }
+
+    // The paper's claim: SOAP per-step cost exceeds Shampoo's
+    // (2m²n+2mn² vs m²n+mn² projection terms). Check the trend holds.
+    println!("\nSOAP seconds-per-model-FLOP (should be ~constant if the FLOP model fits):");
+    for (shape, spf) in &soap_per_flop {
+        println!("  {shape:<10} {:.3e} s/FLOP", spf);
+    }
+
+    // Native vs PJRT/Pallas hot path for the 64x64 update.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use soap_lab::runtime::{literal_from_matrix, literal_scalar, Engine};
+        let engine = Engine::load("artifacts").unwrap();
+        let mut rng = Rng::new(2);
+        let (m, n) = (64, 64);
+        let w = Matrix::randn(&mut rng, m, n, 0.1);
+        let g = Matrix::randn(&mut rng, m, n, 0.1);
+        let mm = Matrix::zeros(m, n);
+        let v = Matrix::zeros(m, n);
+        let l = Matrix::rand_psd(&mut rng, m);
+        let r = Matrix::rand_psd(&mut rng, n);
+        let (ql, _) = soap_lab::linalg::qr_positive(&Matrix::randn(&mut rng, m, m, 1.0));
+        let (qr, _) = soap_lab::linalg::qr_positive(&Matrix::randn(&mut rng, n, n, 1.0));
+
+        let b = Bencher::new(3, 15);
+        let mut rows: Vec<Measurement> = Vec::new();
+        rows.push(b.measure("native soap update 64x64", || {
+            let hyper = Hyper { precond_freq: 1_000_000, ..Hyper::default() };
+            let mut opt = OptKind::Soap.build(m, n, &hyper);
+            let mut w2 = w.clone();
+            opt.update(&mut w2, &g, 2, 1e-4);
+        }));
+        rows.push(b.measure("pjrt/pallas soap_update_64x64", || {
+            engine
+                .run(
+                    "soap_update_64x64",
+                    &[
+                        literal_from_matrix(&w).unwrap(),
+                        literal_from_matrix(&mm).unwrap(),
+                        literal_from_matrix(&v).unwrap(),
+                        literal_from_matrix(&l).unwrap(),
+                        literal_from_matrix(&r).unwrap(),
+                        literal_from_matrix(&ql).unwrap(),
+                        literal_from_matrix(&qr).unwrap(),
+                        literal_from_matrix(&g).unwrap(),
+                        literal_scalar(2.0),
+                        literal_scalar(1e-4),
+                    ],
+                )
+                .unwrap();
+        }));
+        rows.push(b.measure("pjrt soap_refresh_64 (Alg 4)", || {
+            engine
+                .run(
+                    "soap_refresh_64",
+                    &[literal_from_matrix(&l).unwrap(), literal_from_matrix(&ql).unwrap()],
+                )
+                .unwrap();
+        }));
+        print_table("hot path: native vs PJRT/Pallas artifacts", &rows);
+    } else {
+        println!("\n(artifacts missing — skipping PJRT hot-path comparison)");
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment/run configuration: a typed layer over the CLI (and the INI-ish
+//! config files the launcher accepts), translating user intent into
+//! `TrainerConfig` + model/artifact choices.
+
+pub mod run;
+
+pub use run::{RunConfig, DEFAULT_LRS};

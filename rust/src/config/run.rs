@@ -1,0 +1,201 @@
+//! Run configuration: the launcher surface. Parses CLI options / key=value
+//! config files into a validated run description, and owns the
+//! paper-default hyperparameter policy (Appendix A).
+
+use crate::coordinator::TrainerConfig;
+use crate::optim::{Hyper, OptKind, RefreshMethod, Schedule};
+use crate::util::cli::Args;
+
+/// The learning-rate sweep grid of Appendix A: {.1, .0316, .01, …, 3.16e-4}.
+pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
+
+/// A fully-resolved run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub optimizer: OptKind,
+    pub lr: f32,
+    pub steps: u64,
+    pub warmup: u64,
+    pub seed: u64,
+    pub precond_freq: u64,
+    pub grad_accum: usize,
+    pub workers: usize,
+    pub one_sided: bool,
+    pub factorized: bool,
+    pub refresh_eigh: bool,
+    pub pjrt_optimizer: bool,
+    pub artifacts_dir: String,
+    pub log_every: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "nano".into(),
+            optimizer: OptKind::Soap,
+            lr: 3e-3,
+            steps: 200,
+            warmup: 0,
+            seed: 0,
+            precond_freq: 10,
+            grad_accum: 1,
+            workers: 4,
+            one_sided: false,
+            factorized: false,
+            refresh_eigh: false,
+            pjrt_optimizer: false,
+            artifacts_dir: "artifacts".into(),
+            log_every: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from parsed CLI args (all options optional; see `main.rs` for
+    /// the declared option set).
+    pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        let mut rc = RunConfig::default();
+        if let Some(m) = args.get("model") {
+            rc.model = m.to_string();
+        }
+        if let Some(o) = args.get("optimizer") {
+            rc.optimizer = OptKind::parse(o)?;
+        }
+        if args.get("lr").is_some() {
+            rc.lr = args.parse("lr")?;
+        }
+        if args.get("steps").is_some() {
+            rc.steps = args.parse("steps")?;
+        }
+        if args.get("warmup").is_some() {
+            rc.warmup = args.parse("warmup")?;
+        }
+        if args.get("seed").is_some() {
+            rc.seed = args.parse("seed")?;
+        }
+        if args.get("precond-freq").is_some() {
+            rc.precond_freq = args.parse("precond-freq")?;
+        }
+        if args.get("grad-accum").is_some() {
+            rc.grad_accum = args.parse("grad-accum")?;
+        }
+        if args.get("workers").is_some() {
+            rc.workers = args.parse("workers")?;
+        }
+        if let Some(d) = args.get("artifacts") {
+            rc.artifacts_dir = d.to_string();
+        }
+        if args.get("log-every").is_some() {
+            rc.log_every = args.parse("log-every")?;
+        }
+        rc.one_sided = args.flag("one-sided");
+        rc.factorized = args.flag("factorized");
+        rc.refresh_eigh = args.flag("refresh-eigh");
+        rc.pjrt_optimizer = args.flag("pjrt-optimizer");
+        rc.validate()?;
+        Ok(rc)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.steps > 0, "steps must be > 0");
+        anyhow::ensure!(self.precond_freq > 0, "precond-freq must be > 0");
+        anyhow::ensure!(self.grad_accum >= 1, "grad-accum must be ≥ 1");
+        anyhow::ensure!(self.lr > 0.0 && self.lr < 1.0, "lr out of range (0, 1)");
+        anyhow::ensure!(
+            self.warmup < self.steps || self.warmup == 0,
+            "warmup must be < steps"
+        );
+        if self.pjrt_optimizer {
+            anyhow::ensure!(
+                matches!(self.optimizer, OptKind::Soap | OptKind::AdamW),
+                "--pjrt-optimizer supports soap|adamw"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn hyper(&self) -> Hyper {
+        Hyper {
+            precond_freq: self.precond_freq,
+            one_sided: self.one_sided,
+            factorized: self.factorized,
+            refresh: if self.refresh_eigh { RefreshMethod::Eigh } else { RefreshMethod::QrPowerIteration },
+            ..Hyper::default()
+        }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        if self.warmup > 0 {
+            Schedule::paper(self.lr, self.warmup, self.steps)
+        } else {
+            Schedule::Constant { lr: self.lr }
+        }
+    }
+
+    pub fn trainer_config(&self) -> TrainerConfig {
+        TrainerConfig {
+            opt: self.optimizer,
+            hyper: self.hyper(),
+            schedule: self.schedule(),
+            steps: self.steps,
+            seed: self.seed,
+            grad_accum: self.grad_accum,
+            workers: self.workers,
+            log_every: self.log_every,
+            ..TrainerConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut rc = RunConfig::default();
+        rc.steps = 0;
+        assert!(rc.validate().is_err());
+        let mut rc = RunConfig::default();
+        rc.lr = 2.0;
+        assert!(rc.validate().is_err());
+        let mut rc = RunConfig::default();
+        rc.pjrt_optimizer = true;
+        rc.optimizer = OptKind::Shampoo;
+        assert!(rc.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_selection() {
+        let mut rc = RunConfig::default();
+        rc.warmup = 10;
+        rc.steps = 100;
+        match rc.schedule() {
+            Schedule::WarmupCosine { warmup, total, .. } => {
+                assert_eq!(warmup, 10);
+                assert_eq!(total, 100);
+            }
+            _ => panic!("expected warmup-cosine"),
+        }
+        rc.warmup = 0;
+        assert!(matches!(rc.schedule(), Schedule::Constant { .. }));
+    }
+
+    #[test]
+    fn hyper_reflects_flags() {
+        let mut rc = RunConfig::default();
+        rc.one_sided = true;
+        rc.refresh_eigh = true;
+        rc.precond_freq = 32;
+        let h = rc.hyper();
+        assert!(h.one_sided);
+        assert_eq!(h.refresh, RefreshMethod::Eigh);
+        assert_eq!(h.precond_freq, 32);
+    }
+}

@@ -1,0 +1,158 @@
+//! Checkpointing: binary save/restore of parameters + optimizer state +
+//! step counter, so long runs (Fig 5) survive interruption and runs can be
+//! forked (e.g. the shorter-LR-schedule runs of Fig 2 resume from a common
+//! prefix).
+//!
+//! Format (little-endian):
+//!   magic "SOAPCKPT" | version u32 | step u64
+//!   | n_params u32 | per param: rows u32, cols u32, f32 data
+//!   | n_state u32  | per layer: layer_idx u32, n_tensors u32,
+//!                    per tensor: rows u32, cols u32, f32 data
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Matrix;
+
+const MAGIC: &[u8; 8] = b"SOAPCKPT";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<Matrix>,
+    pub opt_state: Vec<(usize, Vec<Matrix>)>,
+}
+
+fn write_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    out.extend_from_slice(&(m.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u32).to_le_bytes());
+    for &x in &m.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_matrix(r: &mut impl Read) -> Result<Matrix> {
+    let rows = read_u32(r)? as usize;
+    let cols = read_u32(r)? as usize;
+    anyhow::ensure!(rows.saturating_mul(cols) < (1 << 31), "matrix too large");
+    let mut data = vec![0f32; rows * cols];
+    let mut buf = vec![0u8; rows * cols * 4];
+    r.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for p in &self.params {
+            write_matrix(&mut out, p);
+        }
+        out.extend_from_slice(&(self.opt_state.len() as u32).to_le_bytes());
+        for (idx, tensors) in &self.opt_state {
+            out.extend_from_slice(&(*idx as u32).to_le_bytes());
+            out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+            for t in tensors {
+                write_matrix(&mut out, t);
+            }
+        }
+        // Write-then-rename for atomicity.
+        let tmp = path.as_ref().with_extension("tmp");
+        std::fs::write(&tmp, &out)?;
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())
+            .map_err(|e| anyhow!("checkpoint {:?}: {e}", path.as_ref()))?;
+        let mut r = data.as_slice();
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a soap-lab checkpoint");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let step = read_u64(&mut r)?;
+        let n_params = read_u32(&mut r)? as usize;
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(read_matrix(&mut r)?);
+        }
+        let n_state = read_u32(&mut r)? as usize;
+        let mut opt_state = Vec::with_capacity(n_state);
+        for _ in 0..n_state {
+            let idx = read_u32(&mut r)? as usize;
+            let n_tensors = read_u32(&mut r)? as usize;
+            let mut tensors = Vec::with_capacity(n_tensors);
+            for _ in 0..n_tensors {
+                tensors.push(read_matrix(&mut r)?);
+            }
+            opt_state.push((idx, tensors));
+        }
+        Ok(Self { step, params, opt_state })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("soap_ckpt_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let ck = Checkpoint {
+            step: 42,
+            params: vec![Matrix::randn(&mut rng, 3, 4, 1.0), Matrix::randn(&mut rng, 1, 7, 1.0)],
+            opt_state: vec![
+                (0, vec![Matrix::randn(&mut rng, 3, 4, 1.0)]),
+                (1, vec![Matrix::randn(&mut rng, 1, 7, 1.0), Matrix::eye(7)]),
+            ],
+        };
+        let path = tmpfile("roundtrip");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].data, ck.params[0].data);
+        assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(7).data);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Checkpoint::load("/nonexistent/soap.ckpt").is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Training metrics: per-step wall-clock breakdown (the Fig 7 overhead
+//! accounting), loss curve, and throughput.
+
+use crate::util::json::Json;
+
+/// Wall-clock breakdown of one training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    /// Data pipeline (batch generation).
+    pub data_s: f64,
+    /// Forward+backward (grad computation).
+    pub grad_s: f64,
+    /// Optimizer update excluding eigenbasis/inverse-root refreshes.
+    pub update_s: f64,
+    /// Eigenbasis / inverse-root refresh work in this step.
+    pub refresh_s: f64,
+}
+
+impl StepTiming {
+    pub fn total(&self) -> f64 {
+        self.data_s + self.grad_s + self.update_s + self.refresh_s
+    }
+}
+
+/// Full log of a training run — everything the figure benches need.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub optimizer: String,
+    pub model: String,
+    /// (step, train loss) per step.
+    pub losses: Vec<(u64, f32)>,
+    pub timings: Vec<StepTiming>,
+    pub tokens_per_batch: usize,
+}
+
+impl TrainLog {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN)
+    }
+
+    /// Mean of the last `k` losses — the robust "final loss" used when
+    /// comparing optimizers (single-batch noise is large at small scale).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len()).max(1);
+        let s: f32 = self.losses[self.losses.len() - k..].iter().map(|&(_, l)| l).sum();
+        s / k as f32
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.timings.iter().map(|t| t.total()).sum()
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        let total = self.total_seconds();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (self.tokens_per_batch as f64 * self.timings.len() as f64) / total
+    }
+
+    /// Optimizer overhead fraction: (update+refresh) / total — Fig 7 left.
+    pub fn optimizer_overhead_frac(&self) -> f64 {
+        let total = self.total_seconds();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let opt: f64 = self.timings.iter().map(|t| t.update_s + t.refresh_s).sum();
+        opt / total
+    }
+
+    /// First step (1-based) whose loss reaches `target`, if any — the
+    /// steps-to-target metric of Fig 4. Uses a trailing mean of width `k`
+    /// to suppress single-batch noise.
+    pub fn steps_to_loss(&self, target: f32, k: usize) -> Option<u64> {
+        let k = k.max(1);
+        let mut window: Vec<f32> = Vec::new();
+        for &(step, l) in &self.losses {
+            window.push(l);
+            if window.len() > k {
+                window.remove(0);
+            }
+            if window.len() == k {
+                let mean = window.iter().sum::<f32>() / k as f32;
+                if mean <= target {
+                    return Some(step);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn loss_series(&self) -> Vec<(f64, f64)> {
+        self.losses.iter().map(|&(s, l)| (s as f64, l as f64)).collect()
+    }
+
+    /// Loss vs cumulative wall-clock seconds (the paper's right-hand plots).
+    pub fn loss_vs_time(&self) -> Vec<(f64, f64)> {
+        let mut acc = 0.0;
+        self.losses
+            .iter()
+            .zip(&self.timings)
+            .map(|(&(_, l), t)| {
+                acc += t.total();
+                (acc, l as f64)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("optimizer", Json::str(self.optimizer.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("final_loss", Json::num(self.final_loss() as f64)),
+            ("tail_loss", Json::num(self.tail_loss(20) as f64)),
+            ("tokens_per_second", Json::num(self.tokens_per_second())),
+            ("overhead_frac", Json::num(self.optimizer_overhead_frac())),
+            (
+                "losses",
+                Json::arr(
+                    self.losses
+                        .iter()
+                        .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l as f64)])),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(losses: &[f32]) -> TrainLog {
+        TrainLog {
+            optimizer: "x".into(),
+            model: "m".into(),
+            losses: losses.iter().enumerate().map(|(i, &l)| (i as u64 + 1, l)).collect(),
+            timings: losses.iter().map(|_| StepTiming { grad_s: 0.5, update_s: 0.25, refresh_s: 0.25, data_s: 0.0 }).collect(),
+            tokens_per_batch: 100,
+        }
+    }
+
+    #[test]
+    fn steps_to_loss_trailing_mean() {
+        let log = log_with(&[5.0, 4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(log.steps_to_loss(3.0, 1), Some(3));
+        // width-2 mean reaches ≤3.0 at step 4 ((3+2)/2 = 2.5).
+        assert_eq!(log.steps_to_loss(3.0, 2), Some(4));
+        assert_eq!(log.steps_to_loss(0.5, 1), None);
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let log = log_with(&[1.0, 1.0]);
+        assert!((log.optimizer_overhead_frac() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tokens_per_second() {
+        let log = log_with(&[1.0, 1.0]);
+        // 2 steps × 100 tokens / 2.0 s.
+        assert!((log.tokens_per_second() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_loss_averages() {
+        let log = log_with(&[9.0, 2.0, 4.0]);
+        assert!((log.tail_loss(2) - 3.0).abs() < 1e-6);
+        assert_eq!(log_with(&[]).tail_loss(5).is_nan(), true);
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let j = log_with(&[3.0]).to_json().dump();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("optimizer").as_str(), Some("x"));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the training orchestration layer (DESIGN.md §1):
+//! leader loop, microbatch gradient accumulation, layer-sharded optimizer
+//! workers, the PJRT/Pallas optimizer hot path, preconditioning-frequency
+//! scheduling, checkpoints, and per-step wall-clock accounting.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod pjrt_optim;
+pub mod sharded;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::{StepTiming, TrainLog};
+pub use pjrt_optim::PjrtOptimizer;
+pub use sharded::ShardedOptimizer;
+pub use trainer::{init_lm_params, GradBackend, Trainer, TrainerConfig, UpdateBackend};

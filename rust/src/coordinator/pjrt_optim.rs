@@ -1,0 +1,347 @@
+//! PJRT-backed optimizer execution — the paper's hot path through the L1
+//! Pallas kernels: per-layer `soap_update_*` / `adamw_update_*` artifacts for
+//! the step, `soap_refresh_*` for the Algorithm-4 eigenbasis refresh.
+//!
+//! Semantics match `optim::Soap`/`optim::AdamW` exactly (the integration
+//! tests assert trajectory equality), so the coordinator can switch between
+//! native and PJRT update engines per config.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{eigh, Matrix};
+use crate::optim::{Hyper, OptKind};
+use crate::runtime::{literal_from_matrix, literal_scalar, matrix_from_literal, Engine};
+
+enum LayerState {
+    /// Elementwise AdamW artifact (1-D params, or 2-D with both sides
+    /// identity).
+    Adamw { m: Matrix, v: Matrix },
+    /// SOAP artifact; `ql`/`qr` are `None` for identity sides.
+    Soap {
+        m: Matrix,
+        v: Matrix,
+        l: Option<Matrix>,
+        r: Option<Matrix>,
+        ql: Option<Matrix>,
+        qr: Option<Matrix>,
+        initialized: bool,
+    },
+}
+
+pub struct PjrtLayer {
+    rows: usize,
+    cols: usize,
+    state: LayerState,
+}
+
+/// Model-wide PJRT optimizer (SOAP with AdamW on 1-D params, or pure AdamW).
+pub struct PjrtOptimizer {
+    pub kind: OptKind,
+    hyper: Hyper,
+    layers: Vec<PjrtLayer>,
+    pub refresh_secs: f64,
+}
+
+impl PjrtOptimizer {
+    pub fn new(kind: OptKind, hyper: Hyper, shapes: &[(usize, usize)]) -> Result<Self> {
+        anyhow::ensure!(
+            matches!(kind, OptKind::Soap | OptKind::AdamW),
+            "PJRT optimizer path supports soap|adamw (got {})",
+            kind.name()
+        );
+        let layers = shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let is_1d = rows == 1 || cols == 1;
+                let state = if kind == OptKind::AdamW || is_1d {
+                    LayerState::Adamw { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols) }
+                } else {
+                    let mut left = rows <= hyper.max_precond_dim;
+                    let mut right = cols <= hyper.max_precond_dim;
+                    if hyper.one_sided {
+                        if rows <= cols {
+                            right = false;
+                        } else {
+                            left = false;
+                        }
+                    }
+                    if !left && !right {
+                        LayerState::Adamw {
+                            m: Matrix::zeros(rows, cols),
+                            v: Matrix::zeros(rows, cols),
+                        }
+                    } else {
+                        LayerState::Soap {
+                            m: Matrix::zeros(rows, cols),
+                            v: Matrix::zeros(rows, cols),
+                            l: left.then(|| Matrix::zeros(rows, rows)),
+                            r: right.then(|| Matrix::zeros(cols, cols)),
+                            ql: None,
+                            qr: None,
+                            initialized: false,
+                        }
+                    }
+                };
+                PjrtLayer { rows, cols, state }
+            })
+            .collect();
+        Ok(Self { kind, hyper, layers, refresh_secs: 0.0 })
+    }
+
+    /// One optimizer step over all layers through the artifacts.
+    pub fn step(
+        &mut self,
+        engine: &Engine,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(params.len() == self.layers.len());
+        let freq = self.hyper.precond_freq;
+        for ((layer, w), g) in self.layers.iter_mut().zip(params.iter_mut()).zip(grads) {
+            let (rows, cols) = (layer.rows, layer.cols);
+            match &mut layer.state {
+                LayerState::Adamw { m, v } => {
+                    let key = format!("adamw_update_{rows}x{cols}");
+                    let out = engine.run(
+                        &key,
+                        &[
+                            literal_from_matrix(w)?,
+                            literal_from_matrix(m)?,
+                            literal_from_matrix(v)?,
+                            literal_from_matrix(g)?,
+                            literal_scalar(t as f32),
+                            literal_scalar(lr),
+                        ],
+                    )?;
+                    *w = matrix_from_literal(&out[0], rows, cols)?;
+                    *m = matrix_from_literal(&out[1], rows, cols)?;
+                    *v = matrix_from_literal(&out[2], rows, cols)?;
+                }
+                LayerState::Soap { m, v, l, r, ql, qr, initialized } => {
+                    // First step: initialize factors + eigenbasis natively
+                    // (matches optim::Soap::init_basis).
+                    if !*initialized {
+                        let t0 = Instant::now();
+                        if let Some(lm) = l {
+                            *lm = g.matmul_nt(g);
+                            let (_, vecs) = eigh(lm);
+                            *ql = Some(vecs);
+                        }
+                        if let Some(rm) = r {
+                            *rm = g.matmul_tn(g);
+                            let (_, vecs) = eigh(rm);
+                            *qr = Some(vecs);
+                        }
+                        *initialized = true;
+                        self.refresh_secs += t0.elapsed().as_secs_f64();
+                    }
+
+                    match (l.as_mut(), r.as_mut()) {
+                        (Some(lm), Some(rm)) => {
+                            let key = format!("soap_update_{rows}x{cols}");
+                            let out = engine.run(
+                                &key,
+                                &[
+                                    literal_from_matrix(w)?,
+                                    literal_from_matrix(m)?,
+                                    literal_from_matrix(v)?,
+                                    literal_from_matrix(lm)?,
+                                    literal_from_matrix(rm)?,
+                                    literal_from_matrix(ql.as_ref().unwrap())?,
+                                    literal_from_matrix(qr.as_ref().unwrap())?,
+                                    literal_from_matrix(g)?,
+                                    literal_scalar(t as f32),
+                                    literal_scalar(lr),
+                                ],
+                            )?;
+                            *w = matrix_from_literal(&out[0], rows, cols)?;
+                            *m = matrix_from_literal(&out[1], rows, cols)?;
+                            *v = matrix_from_literal(&out[2], rows, cols)?;
+                            *lm = matrix_from_literal(&out[3], rows, rows)?;
+                            *rm = matrix_from_literal(&out[4], cols, cols)?;
+                        }
+                        (Some(lm), None) => {
+                            let key = format!("soap_left_{rows}x{cols}");
+                            let out = engine.run(
+                                &key,
+                                &[
+                                    literal_from_matrix(w)?,
+                                    literal_from_matrix(m)?,
+                                    literal_from_matrix(v)?,
+                                    literal_from_matrix(lm)?,
+                                    literal_from_matrix(ql.as_ref().unwrap())?,
+                                    literal_from_matrix(g)?,
+                                    literal_scalar(t as f32),
+                                    literal_scalar(lr),
+                                ],
+                            )?;
+                            *w = matrix_from_literal(&out[0], rows, cols)?;
+                            *m = matrix_from_literal(&out[1], rows, cols)?;
+                            *v = matrix_from_literal(&out[2], rows, cols)?;
+                            *lm = matrix_from_literal(&out[3], rows, rows)?;
+                        }
+                        (None, Some(rm)) => {
+                            let key = format!("soap_right_{rows}x{cols}");
+                            let out = engine.run(
+                                &key,
+                                &[
+                                    literal_from_matrix(w)?,
+                                    literal_from_matrix(m)?,
+                                    literal_from_matrix(v)?,
+                                    literal_from_matrix(rm)?,
+                                    literal_from_matrix(qr.as_ref().unwrap())?,
+                                    literal_from_matrix(g)?,
+                                    literal_scalar(t as f32),
+                                    literal_scalar(lr),
+                                ],
+                            )?;
+                            *w = matrix_from_literal(&out[0], rows, cols)?;
+                            *m = matrix_from_literal(&out[1], rows, cols)?;
+                            *v = matrix_from_literal(&out[2], rows, cols)?;
+                            *rm = matrix_from_literal(&out[3], cols, cols)?;
+                        }
+                        (None, None) => unreachable!("handled as Adamw"),
+                    }
+
+                    // Eigenbasis refresh (Algorithm 4) at frequency f.
+                    if t % freq == 0 {
+                        let t0 = Instant::now();
+                        if let (Some(lm), Some(q)) = (l.as_ref(), ql.as_mut()) {
+                            let out = engine.run(
+                                &format!("soap_refresh_{rows}"),
+                                &[literal_from_matrix(lm)?, literal_from_matrix(q)?],
+                            )?;
+                            *q = matrix_from_literal(&out[0], rows, rows)?;
+                        }
+                        if let (Some(rm), Some(q)) = (r.as_ref(), qr.as_mut()) {
+                            let out = engine.run(
+                                &format!("soap_refresh_{cols}"),
+                                &[literal_from_matrix(rm)?, literal_from_matrix(q)?],
+                            )?;
+                            *q = matrix_from_literal(&out[0], cols, cols)?;
+                        }
+                        self.refresh_secs += t0.elapsed().as_secs_f64();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Optimizer state bytes (§7.2 accounting — same formula as native).
+    pub fn state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|layer| {
+                match &layer.state {
+                    LayerState::Adamw { m, v } => (m.numel() + v.numel()) * 4,
+                    LayerState::Soap { m, v, l, r, ql, qr, .. } => {
+                        let opt = |x: &Option<Matrix>| x.as_ref().map(|m| m.numel()).unwrap_or(0);
+                        (m.numel() + v.numel() + opt(l) + opt(r) + opt(ql) + opt(qr)) * 4
+                    }
+                }
+            })
+            .sum()
+    }
+}
+
+/// Resolve which artifact a SOAP layer of a given shape needs — used by
+/// preflight checks so a missing artifact fails fast with a clear message.
+pub fn required_artifacts(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)]) -> Vec<String> {
+    let mut keys = Vec::new();
+    for &(rows, cols) in shapes {
+        let is_1d = rows == 1 || cols == 1;
+        if kind == OptKind::AdamW || is_1d {
+            keys.push(format!("adamw_update_{rows}x{cols}"));
+            continue;
+        }
+        let mut left = rows <= hyper.max_precond_dim;
+        let mut right = cols <= hyper.max_precond_dim;
+        if hyper.one_sided {
+            if rows <= cols {
+                right = false;
+            } else {
+                left = false;
+            }
+        }
+        match (left, right) {
+            (true, true) => {
+                keys.push(format!("soap_update_{rows}x{cols}"));
+                keys.push(format!("soap_refresh_{rows}"));
+                keys.push(format!("soap_refresh_{cols}"));
+            }
+            (true, false) => {
+                keys.push(format!("soap_left_{rows}x{cols}"));
+                keys.push(format!("soap_refresh_{rows}"));
+            }
+            (false, true) => {
+                keys.push(format!("soap_right_{rows}x{cols}"));
+                keys.push(format!("soap_refresh_{cols}"));
+            }
+            (false, false) => keys.push(format!("adamw_update_{rows}x{cols}")),
+        }
+    }
+    keys.sort();
+    keys.dedup();
+    keys
+}
+
+/// Preflight: verify the manifest carries everything the run needs.
+pub fn preflight(engine: &Engine, kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)]) -> Result<()> {
+    let missing: Vec<String> = required_artifacts(kind, hyper, shapes)
+        .into_iter()
+        .filter(|k| !engine.manifest.has_artifact(k))
+        .collect();
+    if missing.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "missing artifacts {missing:?} — re-run `make artifacts` with the right --configs"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn required_artifacts_1d_uses_adamw() {
+        let keys = required_artifacts(OptKind::Soap, &Hyper::default(), &[(1, 64)]);
+        assert_eq!(keys, vec!["adamw_update_1x64".to_string()]);
+    }
+
+    #[test]
+    fn required_artifacts_2d_full() {
+        let keys = required_artifacts(OptKind::Soap, &Hyper::default(), &[(64, 256)]);
+        assert!(keys.contains(&"soap_update_64x256".to_string()));
+        assert!(keys.contains(&"soap_refresh_64".to_string()));
+        assert!(keys.contains(&"soap_refresh_256".to_string()));
+    }
+
+    #[test]
+    fn required_artifacts_one_sided() {
+        let h = Hyper::default().one_sided();
+        let keys = required_artifacts(OptKind::Soap, &h, &[(64, 256)]);
+        assert!(keys.contains(&"soap_left_64x256".to_string()));
+        assert!(!keys.iter().any(|k| k.contains("soap_update")));
+    }
+
+    #[test]
+    fn required_artifacts_dim_cap_forces_one_sided() {
+        let h = Hyper { max_precond_dim: 128, ..Hyper::default() };
+        let keys = required_artifacts(OptKind::Soap, &h, &[(8192, 64)]);
+        assert!(keys.contains(&"soap_right_8192x64".to_string()));
+    }
+
+    #[test]
+    fn builds_without_engine() {
+        let o = PjrtOptimizer::new(OptKind::Soap, Hyper::default(), &[(8, 8), (1, 8)]).unwrap();
+        assert_eq!(o.layers.len(), 2);
+        assert!(PjrtOptimizer::new(OptKind::Galore, Hyper::default(), &[(8, 8)]).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Batch pipeline: token stream → fixed `(batch, seq)` training batches with
+//! next-token targets, deterministic sharding, and gradient-accumulation
+//! microbatching (the paper trains 2m-token batches via accumulation on a
+//! single device — §5 Throughput Measurement).
+
+use super::corpus::{CorpusSpec, SyntheticCorpus};
+
+/// One training batch: `tokens[b][s]` inputs with `targets[b][s]` the next
+/// token. Stored flat, row-major `[batch, seq]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<u32>,
+    pub targets: Vec<u32>,
+}
+
+impl Batch {
+    pub fn num_tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// Split into `k` microbatches along the batch dimension for gradient
+    /// accumulation. `batch` must be divisible by `k`.
+    pub fn microbatches(&self, k: usize) -> Vec<Batch> {
+        assert!(k >= 1 && self.batch % k == 0, "batch {} not divisible by {k}", self.batch);
+        let mb = self.batch / k;
+        (0..k)
+            .map(|i| {
+                let lo = i * mb * self.seq;
+                let hi = (i + 1) * mb * self.seq;
+                Batch {
+                    batch: mb,
+                    seq: self.seq,
+                    tokens: self.tokens[lo..hi].to_vec(),
+                    targets: self.targets[lo..hi].to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Deterministic batch stream over the synthetic corpus.
+///
+/// Shard `(shard_id, num_shards)` partitions *sequences*: each shard draws
+/// from an independently seeded corpus stream, so multi-worker data loading
+/// never overlaps (the rebalancing guarantee DistributedShampoo-style data
+/// parallel training needs).
+pub struct BatchStream {
+    corpus: SyntheticCorpus,
+    pub batch: usize,
+    pub seq: usize,
+    produced: u64,
+}
+
+impl BatchStream {
+    pub fn new(spec: CorpusSpec, batch: usize, seq: usize, shard_id: u64, num_shards: u64) -> Self {
+        assert!(shard_id < num_shards);
+        let mut spec = spec;
+        // Shards draw disjoint sample streams from the SAME language (same
+        // spec.seed → same transition table; different stream → fresh text).
+        spec.stream = spec
+            .stream
+            .wrapping_mul(num_shards.max(1))
+            .wrapping_add(shard_id + 1);
+        Self { corpus: SyntheticCorpus::new(spec), batch, seq, produced: 0 }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.corpus.vocab_size()
+    }
+
+    pub fn entropy_floor(&self) -> f64 {
+        self.corpus.entropy_floor()
+    }
+
+    pub fn batches_produced(&self) -> u64 {
+        self.produced
+    }
+
+    /// Produce the next batch: each row is a contiguous (seq+1)-token window
+    /// of the stream, split into inputs (first `seq`) and targets (last `seq`).
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.batch, self.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        let mut window = vec![0u32; s + 1];
+        for _ in 0..b {
+            self.corpus.fill(&mut window);
+            tokens.extend_from_slice(&window[..s]);
+            targets.extend_from_slice(&window[1..]);
+        }
+        self.produced += 1;
+        Batch { batch: b, seq: s, tokens, targets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        CorpusSpec { vocab_size: 64, zipf_alpha: 1.2, seed: 3, stream: 0 }
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut bs = BatchStream::new(spec(), 2, 8, 0, 1);
+        let b = bs.next_batch();
+        for row in 0..2 {
+            for i in 0..7 {
+                assert_eq!(b.tokens[row * 8 + i + 1], b.targets[row * 8 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = BatchStream::new(spec(), 4, 16, 0, 1);
+        let mut b = BatchStream::new(spec(), 4, 16, 0, 1);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn shards_disjoint_streams() {
+        let mut s0 = BatchStream::new(spec(), 2, 16, 0, 2);
+        let mut s1 = BatchStream::new(spec(), 2, 16, 1, 2);
+        assert_ne!(s0.next_batch(), s1.next_batch());
+    }
+
+    #[test]
+    fn microbatches_partition_batch() {
+        let mut bs = BatchStream::new(spec(), 8, 4, 0, 1);
+        let b = bs.next_batch();
+        let mbs = b.microbatches(4);
+        assert_eq!(mbs.len(), 4);
+        let recon: Vec<u32> = mbs.iter().flat_map(|m| m.tokens.clone()).collect();
+        assert_eq!(recon, b.tokens);
+        for m in &mbs {
+            assert_eq!(m.batch, 2);
+            assert_eq!(m.seq, 4);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn microbatch_indivisible_panics() {
+        let mut bs = BatchStream::new(spec(), 6, 4, 0, 1);
+        let b = bs.next_batch();
+        let _ = b.microbatches(4);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut bs = BatchStream::new(spec(), 4, 32, 0, 1);
+        let b = bs.next_batch();
+        assert!(b.tokens.iter().all(|&t| t < 64));
+        assert!(b.targets.iter().all(|&t| t < 64));
+    }
+}

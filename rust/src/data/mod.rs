@@ -1,0 +1,12 @@
+//! Data pipeline — the C4/T5 stand-in (DESIGN.md §2): a synthetic Markov
+//! corpus with a known entropy floor and a deterministic, shardable batch
+//! stream with microbatching for gradient accumulation.
+//!
+//! The corpus emits token ids directly (the T5 tokenizer is bypassed: token
+//! statistics, not byte-pair merges, are what optimizer comparisons see).
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::{Batch, BatchStream};
+pub use corpus::{CorpusSpec, SyntheticCorpus};

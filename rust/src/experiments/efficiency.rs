@@ -1,0 +1,127 @@
+//! Efficiency-benefit computation (paper Fig 2): given a fitted SOAP
+//! scaling law and a baseline's (steps, final loss, seconds/step), report
+//! the % reduction in iterations and in wall-clock time for SOAP to reach
+//! the baseline's loss.
+
+use super::scaling::ScalingLaw;
+
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub name: String,
+    pub steps: f64,
+    pub final_loss: f64,
+    /// Mean seconds per training step (fwd+bwd+optimizer).
+    pub secs_per_step: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EfficiencyBenefit {
+    pub baseline: String,
+    /// Steps SOAP needs to match the baseline loss (from the scaling law).
+    pub soap_steps: f64,
+    /// 1 − soap_steps/baseline_steps (paper's "% reduction in iterations").
+    pub iter_reduction: f64,
+    /// 1 − soap_time/baseline_time.
+    pub wallclock_reduction: f64,
+}
+
+/// Compute the Fig 2 numbers for one baseline.
+pub fn efficiency_benefit(
+    soap_law: &ScalingLaw,
+    soap_secs_per_step: f64,
+    baseline: &Baseline,
+) -> Option<EfficiencyBenefit> {
+    let soap_steps = soap_law.steps_to(baseline.final_loss)?;
+    let iter_reduction = 1.0 - soap_steps / baseline.steps;
+    let soap_time = soap_steps * soap_secs_per_step;
+    let baseline_time = baseline.steps * baseline.secs_per_step;
+    let wallclock_reduction = 1.0 - soap_time / baseline_time;
+    Some(EfficiencyBenefit {
+        baseline: baseline.name.clone(),
+        soap_steps,
+        iter_reduction,
+        wallclock_reduction,
+    })
+}
+
+/// Critical-batch-size analysis (paper Fig 4 left): per batch size, the
+/// measured steps-to-target and the deviation from perfect linear scaling
+/// anchored at the smallest batch.
+#[derive(Clone, Debug)]
+pub struct BatchScalingPoint {
+    pub batch: f64,
+    pub steps_to_target: f64,
+    /// steps-to-target under ideal linear scaling from the smallest batch.
+    pub ideal_steps: f64,
+    /// measured / ideal  (1.0 = perfect scaling; larger = past the critical
+    /// batch size).
+    pub scaling_inefficiency: f64,
+}
+
+pub fn batch_scaling_analysis(points: &[(f64, f64)]) -> Vec<BatchScalingPoint> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    let mut pts = points.to_vec();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (b0, s0) = pts[0];
+    pts.iter()
+        .map(|&(b, s)| {
+            let ideal = s0 * b0 / b;
+            BatchScalingPoint {
+                batch: b,
+                steps_to_target: s,
+                ideal_steps: ideal,
+                scaling_inefficiency: s / ideal,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scaling::fit_scaling_law;
+
+    #[test]
+    fn forty_percent_reduction_example() {
+        // SOAP law reaching the baseline loss at 600 steps vs AdamW's 1000.
+        let pts: Vec<(f64, f64)> = [300.0, 450.0, 600.0, 900.0]
+            .iter()
+            .map(|&n: &f64| (n, 2.0 + 30.0 * n.powf(-0.7)))
+            .collect();
+        let law = fit_scaling_law(&pts).unwrap();
+        let adamw = Baseline {
+            name: "adamw".into(),
+            steps: 1000.0,
+            final_loss: 2.0 + 30.0 * 600f64.powf(-0.7),
+            secs_per_step: 1.0,
+        };
+        let e = efficiency_benefit(&law, 1.1, &adamw).unwrap();
+        assert!((e.soap_steps - 600.0).abs() < 20.0, "{}", e.soap_steps);
+        assert!((e.iter_reduction - 0.4).abs() < 0.03);
+        // With 10% slower steps: time reduction = 1 − 600·1.1/1000 = 0.34.
+        assert!((e.wallclock_reduction - 0.34).abs() < 0.03);
+    }
+
+    #[test]
+    fn unreachable_baseline_none() {
+        let pts: Vec<(f64, f64)> = [300.0, 600.0, 1200.0]
+            .iter()
+            .map(|&n: &f64| (n, 2.0 + 30.0 * n.powf(-0.7)))
+            .collect();
+        let law = fit_scaling_law(&pts).unwrap();
+        let b = Baseline { name: "x".into(), steps: 100.0, final_loss: 1.0, secs_per_step: 1.0 };
+        assert!(efficiency_benefit(&law, 1.0, &b).is_none());
+    }
+
+    #[test]
+    fn batch_scaling_detects_critical_batch() {
+        // Perfect scaling up to batch 4, then saturation.
+        let pts = [(1.0, 1000.0), (2.0, 500.0), (4.0, 250.0), (8.0, 200.0)];
+        let out = batch_scaling_analysis(&pts);
+        assert!((out[0].scaling_inefficiency - 1.0).abs() < 1e-9);
+        assert!((out[2].scaling_inefficiency - 1.0).abs() < 1e-9);
+        assert!(out[3].scaling_inefficiency > 1.5);
+    }
+}

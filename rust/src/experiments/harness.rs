@@ -1,0 +1,145 @@
+//! Shared harness for the figure-regeneration benches: builds trainers with
+//! the paper's per-optimizer tuned defaults, runs them, and returns
+//! [`TrainLog`]s. Keeps each `benches/fig*.rs` thin and consistent.
+
+use crate::coordinator::{Trainer, TrainerConfig, TrainLog};
+use crate::optim::{Hyper, OptKind, Schedule};
+
+/// Tuned peak LRs on the scaled testbed (selected by an Appendix-A-style
+/// sweep over {.1, .0316, …, 3.16e-4} on the nano config; see
+/// EXPERIMENTS.md §Tuning). Second-order methods tolerate ~1 grid step
+/// larger LR than AdamW, matching the paper's observation.
+pub fn tuned_lr(opt: OptKind) -> f32 {
+    match opt {
+        OptKind::AdamW => 3.16e-3,
+        OptKind::Adafactor => 3.16e-3,
+        OptKind::Shampoo => 1e-2,
+        OptKind::Soap => 1e-2,
+        OptKind::Galore => 3.16e-3,
+    }
+}
+
+/// Benchmark scale knobs (env-overridable so CI can shrink them):
+/// `SOAP_BENCH_STEPS`, `SOAP_BENCH_MODEL`.
+pub fn bench_steps(default: u64) -> u64 {
+    std::env::var("SOAP_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn bench_model() -> String {
+    std::env::var("SOAP_BENCH_MODEL").unwrap_or_else(|_| "nano".to_string())
+}
+
+/// Paper-shaped schedule: 20% warmup, cosine to 0.1×.
+pub fn paper_schedule(lr: f32, steps: u64) -> Schedule {
+    Schedule::paper(lr, (steps / 5).max(1), steps)
+}
+
+#[derive(Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub opt: OptKind,
+    pub steps: u64,
+    pub lr: Option<f32>,
+    pub hyper: Hyper,
+    pub seed: u64,
+    pub grad_accum: usize,
+    pub constant_lr: bool,
+}
+
+impl RunSpec {
+    pub fn new(model: &str, opt: OptKind, steps: u64) -> Self {
+        Self {
+            model: model.to_string(),
+            opt,
+            steps,
+            lr: None,
+            hyper: Hyper::default(),
+            seed: 0,
+            grad_accum: 1,
+            constant_lr: false,
+        }
+    }
+
+    pub fn with_freq(mut self, f: u64) -> Self {
+        self.hyper.precond_freq = f;
+        self
+    }
+
+    pub fn with_hyper(mut self, h: Hyper) -> Self {
+        self.hyper = h;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn with_accum(mut self, k: usize) -> Self {
+        self.grad_accum = k;
+        self
+    }
+
+    pub fn trainer_config(&self) -> TrainerConfig {
+        let lr = self.lr.unwrap_or_else(|| tuned_lr(self.opt));
+        TrainerConfig {
+            opt: self.opt,
+            hyper: self.hyper.clone(),
+            schedule: if self.constant_lr {
+                Schedule::Constant { lr }
+            } else {
+                paper_schedule(lr, self.steps)
+            },
+            steps: self.steps,
+            seed: self.seed,
+            grad_accum: self.grad_accum,
+            workers: 4,
+            log_every: 0,
+            ..TrainerConfig::default()
+        }
+    }
+
+    /// Run through the PJRT transformer path. Returns the training log plus
+    /// mean seconds/step.
+    pub fn run(&self) -> anyhow::Result<(TrainLog, f64)> {
+        let mut trainer = Trainer::new_pjrt(&self.model, self.trainer_config(), "artifacts")?;
+        let log = trainer.run()?;
+        let secs = log.total_seconds() / log.timings.len().max(1) as f64;
+        Ok((log, secs))
+    }
+}
+
+/// Skip helper: figure benches need artifacts; print a pointer instead of
+/// failing when they are missing (e.g. fresh checkout).
+pub fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuned_lrs_cover_all_kinds() {
+        for k in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
+            assert!(tuned_lr(k) > 0.0);
+        }
+    }
+
+    #[test]
+    fn spec_builders() {
+        let s = RunSpec::new("nano", OptKind::Soap, 100).with_freq(32).with_lr(0.01);
+        let tc = s.trainer_config();
+        assert_eq!(tc.hyper.precond_freq, 32);
+        assert_eq!(tc.steps, 100);
+    }
+
+    #[test]
+    fn env_step_override() {
+        std::env::remove_var("SOAP_BENCH_STEPS");
+        assert_eq!(bench_steps(123), 123);
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment analysis — the paper's evaluation methodology as code:
+//! scaling-law fits (§5), efficiency benefits (Fig 2), and the
+//! critical-batch-size analysis (Fig 4).
+
+pub mod efficiency;
+pub mod harness;
+pub mod scaling;
+
+pub use efficiency::{
+    batch_scaling_analysis, efficiency_benefit, Baseline, BatchScalingPoint, EfficiencyBenefit,
+};
+pub use scaling::{fit_scaling_law, ScalingLaw};

@@ -1,0 +1,154 @@
+//! Scaling-law fitting — the paper's §5 "Efficiency Benefits" methodology:
+//! run SOAP on {.5, .625, .75, .875, 1.0} fractions of the budget, fit
+//! `loss(N) = a + b·N^(−β)` through the final losses, then read off the
+//! step count at which SOAP matches a baseline's final loss.
+//!
+//! Fit: for fixed β the model is linear in (a, b) — closed-form least
+//! squares; β is found by golden-section search on the SSE profile.
+
+/// Fitted scaling law `a + b·N^(−β)`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalingLaw {
+    pub a: f64,
+    pub b: f64,
+    pub beta: f64,
+    pub sse: f64,
+}
+
+impl ScalingLaw {
+    pub fn predict(&self, n: f64) -> f64 {
+        self.a + self.b * n.powf(-self.beta)
+    }
+
+    /// Steps needed to reach `target` loss (None if unreachable: target ≤ a).
+    pub fn steps_to(&self, target: f64) -> Option<f64> {
+        if target <= self.a || self.b <= 0.0 {
+            return None;
+        }
+        Some(((target - self.a) / self.b).powf(-1.0 / self.beta))
+    }
+}
+
+/// Closed-form (a, b) and SSE for fixed β.
+fn solve_ab(ns: &[f64], ls: &[f64], beta: f64) -> (f64, f64, f64) {
+    let k = ns.len() as f64;
+    let xs: Vec<f64> = ns.iter().map(|&n| n.powf(-beta)).collect();
+    let mx = xs.iter().sum::<f64>() / k;
+    let my = ls.iter().sum::<f64>() / k;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (&x, &y) in xs.iter().zip(ls) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx < 1e-300 {
+        return (my, 0.0, f64::INFINITY);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let sse: f64 = xs
+        .iter()
+        .zip(ls)
+        .map(|(&x, &y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    (a, b, sse)
+}
+
+/// Fit `a + b·N^(−β)` to (steps, final-loss) points.
+///
+/// Requires ≥3 points. β is restricted to (0.01, 3.0) — outside that range
+/// the law degenerates at our scales.
+pub fn fit_scaling_law(points: &[(f64, f64)]) -> anyhow::Result<ScalingLaw> {
+    anyhow::ensure!(points.len() >= 3, "need ≥3 points for a 3-parameter fit");
+    let ns: Vec<f64> = points.iter().map(|&(n, _)| n).collect();
+    let ls: Vec<f64> = points.iter().map(|&(_, l)| l).collect();
+    anyhow::ensure!(ns.iter().all(|&n| n > 0.0), "step counts must be positive");
+
+    // Coarse grid, then golden-section refinement around the best cell.
+    let mut best = (0.5, f64::INFINITY);
+    let grid: Vec<f64> = (1..=300).map(|i| i as f64 * 0.01).collect();
+    for &beta in &grid {
+        let (_, b, sse) = solve_ab(&ns, &ls, beta);
+        // Reject fits with b ≤ 0 (loss increasing with steps — unphysical).
+        if b > 0.0 && sse < best.1 {
+            best = (beta, sse);
+        }
+    }
+    anyhow::ensure!(best.1.is_finite(), "no physical fit found");
+
+    let (mut lo, mut hi) = ((best.0 - 0.02).max(1e-3), best.0 + 0.02);
+    let phi = 0.618_033_988_75;
+    for _ in 0..60 {
+        let m1 = hi - phi * (hi - lo);
+        let m2 = lo + phi * (hi - lo);
+        let s1 = solve_ab(&ns, &ls, m1).2;
+        let s2 = solve_ab(&ns, &ls, m2).2;
+        if s1 < s2 {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+    }
+    let beta = 0.5 * (lo + hi);
+    let (a, b, sse) = solve_ab(&ns, &ls, beta);
+    Ok(ScalingLaw { a, b, beta, sse })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_law() {
+        let truth = ScalingLaw { a: 2.5, b: 30.0, beta: 0.6, sse: 0.0 };
+        let pts: Vec<(f64, f64)> = [200.0, 400.0, 800.0, 1600.0, 3200.0]
+            .iter()
+            .map(|&n| (n, truth.predict(n)))
+            .collect();
+        let fit = fit_scaling_law(&pts).unwrap();
+        assert!((fit.a - 2.5).abs() < 1e-3, "a = {}", fit.a);
+        assert!((fit.beta - 0.6).abs() < 1e-2, "beta = {}", fit.beta);
+        assert!(fit.sse < 1e-6);
+    }
+
+    #[test]
+    fn steps_to_inverts_predict() {
+        let law = ScalingLaw { a: 2.0, b: 20.0, beta: 0.5, sse: 0.0 };
+        let n = 700.0;
+        let target = law.predict(n);
+        let back = law.steps_to(target).unwrap();
+        assert!((back - n).abs() / n < 1e-9);
+    }
+
+    #[test]
+    fn unreachable_target_is_none() {
+        let law = ScalingLaw { a: 2.0, b: 20.0, beta: 0.5, sse: 0.0 };
+        assert!(law.steps_to(1.9).is_none());
+        assert!(law.steps_to(2.0).is_none());
+    }
+
+    #[test]
+    fn tolerates_noise() {
+        let truth = ScalingLaw { a: 3.0, b: 15.0, beta: 0.45, sse: 0.0 };
+        let noise = [0.004, -0.006, 0.002, -0.003, 0.005];
+        let pts: Vec<(f64, f64)> = [500.0, 750.0, 1000.0, 1500.0, 2000.0]
+            .iter()
+            .zip(&noise)
+            .map(|(&n, &e)| (n, truth.predict(n) + e))
+            .collect();
+        let fit = fit_scaling_law(&pts).unwrap();
+        assert!((fit.a - 3.0).abs() < 0.15, "a = {}", fit.a);
+        // Interpolation quality matters more than parameter identity.
+        for &(n, l) in &pts {
+            assert!((fit.predict(n) - l).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn too_few_points_errors() {
+        assert!(fit_scaling_law(&[(1.0, 1.0), (2.0, 0.9)]).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! # soap-lab
+//!
+//! A production-shaped reproduction of **“SOAP: Improving and Stabilizing
+//! Shampoo using Adam”** (Vyas et al., 2024) as a three-layer
+//! Rust + JAX + Pallas training framework:
+//!
+//! - **L3 (this crate)** — training coordinator: data pipeline, microbatch
+//!   gradient accumulation, layer-sharded optimizer workers, preconditioning
+//!   scheduler, checkpoints, metrics, and the benchmark harness that
+//!   regenerates every figure of the paper's evaluation.
+//! - **L2 (`python/compile/model.py`)** — the JAX transformer LM fwd/bwd and
+//!   per-optimizer update graphs, AOT-lowered to HLO text.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the SOAP hot
+//!   path (rotate → Adam → rotate-back), lowered inside the L2 graphs.
+//!
+//! Python never runs on the training path: artifacts are compiled once by
+//! `make artifacts` and executed from Rust via the PJRT CPU client
+//! ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for measured reproductions.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod util;

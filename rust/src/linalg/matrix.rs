@@ -1,0 +1,344 @@
+//! Dense row-major `f32` matrix — the native-Rust numeric substrate.
+//!
+//! Used by the native optimizer implementations (oracle + CPU-offloaded
+//! preconditioner refresh), the experiment fits, and the tests. The PJRT
+//! artifacts carry the training-path compute; this type exists so the
+//! coordinator can be validated and benchmarked without artifacts, mirroring
+//! DistributedShampoo's CPU-side eigendecomposition path.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    // ---- constructors ----------------------------------------------------
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// N(0, std²) entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Random symmetric positive semi-definite matrix AᵀA / n.
+    pub fn rand_psd(rng: &mut Rng, n: usize) -> Self {
+        let a = Self::randn(rng, n, n, 1.0);
+        let mut p = a.matmul_tn(&a);
+        p.scale_inplace(1.0 / n as f32);
+        p
+    }
+
+    // ---- element access ---------------------------------------------------
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    // ---- elementwise ops ---------------------------------------------------
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a + b)
+    }
+    pub fn sub(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a - b)
+    }
+    pub fn hadamard(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a * b)
+    }
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// `self ← β·self + (1−β)·other` — the EMA update used by every optimizer.
+    pub fn ema_inplace(&mut self, other: &Self, beta: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let ob = 1.0 - beta;
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = beta * *a + ob * b;
+        }
+    }
+
+    /// `self ← self + s·other` (axpy).
+    pub fn axpy_inplace(&mut self, s: f32, other: &Self) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    // ---- reductions ---------------------------------------------------------
+    pub fn trace(&self) -> f32 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i)).sum()
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    /// Row sums (length `rows`).
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| x as f64).sum::<f64>() as f32)
+            .collect()
+    }
+
+    /// Column sums (length `cols`).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                out[j] += x as f64;
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    // ---- structural ----------------------------------------------------------
+    pub fn t(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Maximum |aᵢⱼ − bᵢⱼ|.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    // ---- matmul family ---------------------------------------------------------
+    /// C = A·B. Row-major ikj loop with the B row kept hot; adequate for the
+    /// slow path (see `gemm.rs` for the blocked kernel used on hot paths).
+    pub fn matmul(&self, b: &Self) -> Self {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut c = Self::zeros(self.rows, b.cols);
+        super::gemm::gemm(
+            self.rows, self.cols, b.cols, &self.data, &b.data, &mut c.data,
+        );
+        c
+    }
+
+    /// C = Aᵀ·B without materializing the transpose.
+    pub fn matmul_tn(&self, b: &Self) -> Self {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut c = Self::zeros(m, n);
+        for p in 0..k {
+            let arow = self.row(p);
+            let brow = b.row(p);
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A·Bᵀ without materializing the transpose.
+    pub fn matmul_nt(&self, b: &Self) -> Self {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut c = Self::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                c.data[i * n + j] = acc;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (Matrix, Matrix) {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        (a, b)
+    }
+
+    #[test]
+    fn matmul_known() {
+        let (a, b) = small();
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 7, 5, 1.0);
+        let b = Matrix::randn(&mut rng, 7, 4, 1.0);
+        let got = a.matmul_tn(&b);
+        let want = a.t().matmul(&b);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 6, 5, 1.0);
+        let b = Matrix::randn(&mut rng, 3, 5, 1.0);
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.t());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let (a, _) = small();
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn trace_and_eye() {
+        assert_eq!(Matrix::eye(5).trace(), 5.0);
+        assert_eq!(Matrix::eye(3).matmul(&Matrix::eye(3)), Matrix::eye(3));
+    }
+
+    #[test]
+    fn ema_inplace_correct() {
+        let mut a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        a.ema_inplace(&b, 0.9);
+        assert!((a.data[0] - (0.9 + 0.3)).abs() < 1e-6);
+        assert!((a.data[1] - (1.8 + 0.4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn psd_is_symmetric_nonneg_diag() {
+        let mut rng = Rng::new(3);
+        let p = Matrix::rand_psd(&mut rng, 8);
+        assert!(p.max_abs_diff(&p.t()) < 1e-5);
+        for i in 0..8 {
+            assert!(p.at(i, i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let (a, _) = small();
+        assert_eq!(a.row_sums(), vec![6.0, 15.0]);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let (a, _) = small();
+        let _ = a.matmul(&a);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear-algebra substrate (native Rust).
+//!
+//! The paper's implementation leans on `torch.linalg.{eigh,qr}` and cuBLAS;
+//! the image's XLA runtime cannot run jax's LAPACK FFI custom-calls, so this
+//! module provides the native engines: blocked GEMM, Householder QR, cyclic
+//! Jacobi `eigh`, and PSD inverse p-th roots (eigh- and Newton-based). See
+//! DESIGN.md §2/§4.
+
+pub mod eigh;
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod roots;
+
+pub use eigh::{eigh, eigh_warm};
+pub use matrix::Matrix;
+pub use qr::{power_iter_refresh, qr, qr_positive};
+pub use roots::{inv_root_eigh, inv_root_newton, root_eigh};

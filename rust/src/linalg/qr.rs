@@ -1,0 +1,187 @@
+//! Householder QR decomposition.
+//!
+//! The SOAP eigenbasis refresh (paper Algorithm 4) is one power-iteration
+//! step `S = P·Q` followed by `Q ← QR(S).Q`. The HLO artifact path carries
+//! the same algorithm (hand-rolled in jnp, see `python/compile/kernels/`);
+//! this native version is the oracle for it and the engine for the
+//! CPU-offloaded refresh mode.
+
+use super::matrix::Matrix;
+
+/// Full QR via Householder reflections: `a = Q·R`, Q orthogonal (m×m),
+/// R upper-triangular (m×n). For our use m == n always, but the code is
+/// general for m ≥ n.
+pub fn qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr expects m >= n");
+    let mut r = a.clone();
+    let mut q = Matrix::eye(m);
+    let mut v = vec![0.0f32; m];
+
+    for k in 0..n.min(m - 1) {
+        // Build the Householder vector for column k, rows k..m.
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        if norm < 1e-30 {
+            continue; // column already zero below the diagonal
+        }
+        let x0 = r.at(k, k);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0.0f64;
+        for i in k..m {
+            let vi = if i == k { r.at(i, k) - alpha } else { r.at(i, k) };
+            v[i] = vi;
+            vnorm2 += vi as f64 * vi as f64;
+        }
+        if vnorm2 < 1e-60 {
+            continue;
+        }
+        let inv = (1.0 / vnorm2.sqrt()) as f32;
+        for i in k..m {
+            v[i] *= inv;
+        }
+
+        // R ← (I − 2vvᵀ) R, applied to columns k..n
+        for j in k..n {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i] * r.at(i, j);
+            }
+            let two_dot = 2.0 * dot;
+            for i in k..m {
+                let val = r.at(i, j) - two_dot * v[i];
+                r.set(i, j, val);
+            }
+        }
+        // Q ← Q (I − 2vvᵀ)
+        for i in 0..m {
+            let mut dot = 0.0f32;
+            for j in k..m {
+                dot += q.at(i, j) * v[j];
+            }
+            let two_dot = 2.0 * dot;
+            for j in k..m {
+                let val = q.at(i, j) - two_dot * v[j];
+                q.set(i, j, val);
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of R (numerical dust).
+    for i in 1..m {
+        for j in 0..i.min(n) {
+            r.set(i, j, 0.0);
+        }
+    }
+    (q, r)
+}
+
+/// Sign-fix Q (and correspondingly R) so diagonal of R is non-negative —
+/// makes QR unique and keeps the power-iteration eigenbasis stable across
+/// steps (no column sign flips between refreshes).
+pub fn qr_positive(a: &Matrix) -> (Matrix, Matrix) {
+    let (mut q, mut r) = qr(a);
+    let n = r.cols.min(r.rows);
+    for j in 0..n {
+        if r.at(j, j) < 0.0 {
+            for i in 0..r.cols {
+                if i >= j {
+                    let v = -r.at(j, i);
+                    r.set(j, i, v);
+                }
+            }
+            for i in 0..q.rows {
+                let v = -q.at(i, j);
+                q.set(i, j, v);
+            }
+        }
+    }
+    (q, r)
+}
+
+/// One step of orthogonal (power) iteration: `Q ← QR(P·Q).Q` — paper Alg 4.
+pub fn power_iter_refresh(p: &Matrix, q_prev: &Matrix) -> Matrix {
+    let s = p.matmul(q_prev);
+    let (q, _) = qr_positive(&s);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 2, 3, 8, 17] {
+            let a = Matrix::randn(&mut rng, n, n, 1.0);
+            let (q, r) = qr(&a);
+            let qa = q.matmul(&r);
+            assert!(qa.max_abs_diff(&a) < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let mut rng = Rng::new(11);
+        let a = Matrix::randn(&mut rng, 24, 24, 1.0);
+        let (q, _) = qr(&a);
+        let qtq = q.matmul_tn(&q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(24)) < 1e-4);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(&mut rng, 9, 9, 1.0);
+        let (_, r) = qr(&a);
+        for i in 1..9 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn positive_diag_unique() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(&mut rng, 6, 6, 1.0);
+        let (q, r) = qr_positive(&a);
+        for j in 0..6 {
+            assert!(r.at(j, j) >= 0.0);
+        }
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn power_iteration_converges_to_eigenvectors() {
+        // Diagonal P with distinct eigenvalues: iterating from a random
+        // orthogonal start must converge to (signed) identity basis.
+        let n = 6;
+        let p = Matrix::from_fn(n, n, |i, j| if i == j { (n - i) as f32 } else { 0.0 });
+        let mut rng = Rng::new(14);
+        let (mut q, _) = qr_positive(&Matrix::randn(&mut rng, n, n, 1.0));
+        for _ in 0..200 {
+            q = power_iter_refresh(&p, &q);
+        }
+        // Columns of q should be ± canonical basis vectors.
+        for j in 0..n {
+            let col = q.col(j);
+            let max = col.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert!(max > 0.999, "col {j} max {max}");
+        }
+    }
+
+    #[test]
+    fn identity_is_fixed_point() {
+        let p = Matrix::eye(5);
+        let q = Matrix::eye(5);
+        let q2 = power_iter_refresh(&p, &q);
+        assert!(q2.max_abs_diff(&Matrix::eye(5)) < 1e-5);
+    }
+}

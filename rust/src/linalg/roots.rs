@@ -1,0 +1,164 @@
+//! Matrix inverse p-th roots of PSD matrices — the Shampoo preconditioner
+//! transform `L^{-1/(2p)}`.
+//!
+//! Two engines:
+//! - [`inv_root_eigh`]: exact via Jacobi eigendecomposition (the default,
+//!   matching DistributedShampoo's `eigh` root computation);
+//! - [`inv_root_newton`]: coupled Newton iteration (pure matmuls — the form
+//!   that ports to HLO), provided for the ablation benches.
+//!
+//! Both regularize with `ε·I` the way DistributedShampoo does.
+
+use super::eigh::eigh;
+use super::matrix::Matrix;
+
+/// `(a + eps·I)^(-1/p)` via eigendecomposition.
+pub fn inv_root_eigh(a: &Matrix, p: f32, eps: f32) -> Matrix {
+    assert!(p > 0.0);
+    let (w, v) = eigh(a);
+    inv_root_from_eig(&w, &v, p, eps)
+}
+
+/// Build `(a + eps·I)^(-1/p)` from a precomputed eigendecomposition — used
+/// by the warm-started Shampoo refresh (§Perf) which reuses the previous
+/// basis via [`super::eigh::eigh_warm`].
+pub fn inv_root_from_eig(w: &[f32], v: &Matrix, p: f32, eps: f32) -> Matrix {
+    assert!(p > 0.0);
+    let n = v.rows;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        let lam = (w[i].max(0.0) + eps).max(1e-30);
+        d.set(i, i, lam.powf(-1.0 / p));
+    }
+    v.matmul(&d).matmul_nt(v)
+}
+
+/// `(a + eps·I)^(+1/p)` via eigendecomposition (used in tests/oracles).
+pub fn root_eigh(a: &Matrix, p: f32, eps: f32) -> Matrix {
+    assert!(p > 0.0);
+    let n = a.rows;
+    let (w, v) = eigh(a);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        let lam = (w[i].max(0.0) + eps).max(1e-30);
+        d.set(i, i, lam.powf(1.0 / p));
+    }
+    v.matmul(&d).matmul_nt(&v)
+}
+
+/// Coupled Newton iteration for `a^{-1/p}` (integer p ≥ 1), after Guo &
+/// Higham. Pure matmul/elementwise — mirrors what an HLO-side implementation
+/// does. `a` must be PSD; `eps·I` is added first.
+pub fn inv_root_newton(a: &Matrix, p: u32, eps: f32, iters: usize) -> Matrix {
+    assert!(p >= 1);
+    let n = a.rows;
+    let mut a_reg = a.clone();
+    for i in 0..n {
+        let v = a_reg.at(i, i) + eps;
+        a_reg.set(i, i, v);
+    }
+    // Scale so the spectrum is inside the Newton convergence region:
+    // z = 1 / ||A||_F; X0 = I * z^{1/p}? The standard coupled iteration:
+    //   X_{k+1} = X_k ((p+1)I − M_k)/p,  M_{k+1} = ((p+1)I − M_k)^p / p^p · M_k
+    // with X0 = (1/c) I, M0 = A / c^p where c = (||A||_2)^{1/p} estimate.
+    let norm = a_reg.frob_norm().max(1e-30);
+    let c = norm.powf(1.0 / p as f32);
+    let mut x = Matrix::eye(n).scale(1.0 / c);
+    let mut m_k = a_reg.scale(1.0 / norm);
+
+    let pf = p as f32;
+    for _ in 0..iters {
+        // T = ((p+1) I − M_k) / p
+        let mut t = m_k.scale(-1.0 / pf);
+        for i in 0..n {
+            let v = t.at(i, i) + (pf + 1.0) / pf;
+            t.set(i, i, v);
+        }
+        x = x.matmul(&t);
+        // M ← T^p · M
+        let mut tp = Matrix::eye(n);
+        for _ in 0..p {
+            tp = tp.matmul(&t);
+        }
+        m_k = tp.matmul(&m_k);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn well_conditioned_psd(rng: &mut Rng, n: usize) -> Matrix {
+        // PSD with spectrum in roughly [0.5, 2.5] — Newton's comfort zone.
+        let mut a = Matrix::rand_psd(rng, n);
+        let tr = a.trace() / n as f32;
+        a.scale_inplace(1.0 / tr.max(1e-6));
+        for i in 0..n {
+            let v = a.at(i, i) + 0.5;
+            a.set(i, i, v);
+        }
+        a
+    }
+
+    #[test]
+    fn inv_root_eigh_squares_to_inverse() {
+        let mut rng = Rng::new(30);
+        let a = well_conditioned_psd(&mut rng, 8);
+        // (a^(-1/2))² · a ≈ I
+        let r = inv_root_eigh(&a, 2.0, 0.0);
+        let check = r.matmul(&r).matmul(&a);
+        assert!(check.max_abs_diff(&Matrix::eye(8)) < 2e-2, "{}", check.max_abs_diff(&Matrix::eye(8)));
+    }
+
+    #[test]
+    fn inv_root_p4() {
+        let mut rng = Rng::new(31);
+        let a = well_conditioned_psd(&mut rng, 6);
+        let r = inv_root_eigh(&a, 4.0, 0.0);
+        let r4 = r.matmul(&r).matmul(&r).matmul(&r);
+        let check = r4.matmul(&a);
+        assert!(check.max_abs_diff(&Matrix::eye(6)) < 3e-2);
+    }
+
+    #[test]
+    fn root_inverse_consistency() {
+        let mut rng = Rng::new(32);
+        let a = well_conditioned_psd(&mut rng, 7);
+        let up = root_eigh(&a, 2.0, 0.0);
+        let dn = inv_root_eigh(&a, 2.0, 0.0);
+        let check = up.matmul(&dn);
+        assert!(check.max_abs_diff(&Matrix::eye(7)) < 2e-2);
+    }
+
+    #[test]
+    fn newton_matches_eigh_p2() {
+        let mut rng = Rng::new(33);
+        let a = well_conditioned_psd(&mut rng, 8);
+        let want = inv_root_eigh(&a, 2.0, 1e-6);
+        let got = inv_root_newton(&a, 2, 1e-6, 40);
+        assert!(
+            got.max_abs_diff(&want) < 5e-2 * (1.0 + want.max_abs()),
+            "err={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn eps_regularizes_singular() {
+        // Zero matrix: (0 + eps I)^(-1/2) = eps^(-1/2) I — finite.
+        let a = Matrix::zeros(5, 5);
+        let r = inv_root_eigh(&a, 2.0, 1e-4);
+        for i in 0..5 {
+            assert!((r.at(i, i) - 100.0).abs() < 1.0);
+            assert!(r.at(i, i).is_finite());
+        }
+    }
+
+    #[test]
+    fn identity_fixed_point() {
+        let r = inv_root_eigh(&Matrix::eye(4), 2.0, 0.0);
+        assert!(r.max_abs_diff(&Matrix::eye(4)) < 1e-4);
+    }
+}

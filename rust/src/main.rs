@@ -1,0 +1,188 @@
+//! `soap-lab` CLI — the launcher.
+//!
+//! ```text
+//! soap-lab train      --model small --optimizer soap --lr 3.16e-3 …
+//! soap-lab sweep-lr   --model nano  --optimizer soap --steps 150
+//! soap-lab inspect    --artifacts artifacts
+//! soap-lab corpus     --vocab 512
+//! ```
+
+use soap_lab::config::RunConfig;
+use soap_lab::coordinator::{Checkpoint, Trainer};
+use soap_lab::data::{CorpusSpec, SyntheticCorpus};
+use soap_lab::runtime::Engine;
+use soap_lab::util::cli::{App, Command};
+
+fn app() -> App {
+    App::new("soap-lab", "SOAP optimizer reproduction (rust + JAX + Pallas)")
+        .command(
+            Command::new("train", "train a transformer LM via PJRT artifacts")
+                .opt("model", "nano", "model config from the artifact manifest")
+                .opt("optimizer", "soap", "adamw|adafactor|shampoo|soap|galore")
+                .opt("lr", "0.00316", "peak learning rate")
+                .opt("steps", "200", "training steps")
+                .opt("warmup", "0", "warmup steps (0 = constant LR)")
+                .opt("seed", "0", "data/init seed")
+                .opt("precond-freq", "10", "preconditioning frequency f")
+                .opt("grad-accum", "1", "gradient-accumulation microbatches")
+                .opt("workers", "4", "optimizer worker threads")
+                .opt("artifacts", "artifacts", "artifact directory")
+                .opt("log-every", "10", "log every k steps (0 = silent)")
+                .opt("save", "", "write a checkpoint here at the end")
+                .opt("resume", "", "resume from this checkpoint")
+                .flag("one-sided", "SOAP one-sided variant (§7.1)")
+                .flag("factorized", "SOAP factorized variant (§7.2.1)")
+                .flag("refresh-eigh", "use full eigh refresh (Fig 7 right)")
+                .flag("pjrt-optimizer", "run optimizer updates through PJRT/Pallas artifacts"),
+        )
+        .command(
+            Command::new("sweep-lr", "learning-rate sweep (Appendix A grid)")
+                .opt("model", "nano", "model config")
+                .opt("optimizer", "soap", "optimizer")
+                .opt("steps", "150", "steps per point")
+                .opt("seed", "0", "seed")
+                .opt("precond-freq", "10", "preconditioning frequency")
+                .opt("artifacts", "artifacts", "artifact directory"),
+        )
+        .command(
+            Command::new("inspect", "print the artifact manifest summary")
+                .opt("artifacts", "artifacts", "artifact directory"),
+        )
+        .command(
+            Command::new("corpus", "print synthetic-corpus statistics")
+                .opt("vocab", "512", "vocabulary size")
+                .opt("alpha", "1.2", "Zipf exponent")
+                .opt("seed", "0", "seed"),
+        )
+}
+
+fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
+    let rc = RunConfig::from_args(args)?;
+    println!(
+        "train: model={} optimizer={} lr={} steps={} f={} accum={}",
+        rc.model, rc.optimizer.name(), rc.lr, rc.steps, rc.precond_freq, rc.grad_accum
+    );
+    let mut trainer = if rc.pjrt_optimizer {
+        Trainer::new_pjrt_full(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?
+    } else {
+        Trainer::new_pjrt(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?
+    };
+
+    if let Some(path) = args.get("resume").filter(|s| !s.is_empty()) {
+        let ck = Checkpoint::load(path)?;
+        anyhow::ensure!(ck.params.len() == trainer.params.len(), "checkpoint shape mismatch");
+        trainer.params = ck.params;
+        trainer.step = ck.step;
+        if let Some(opt) = trainer.native_optimizer_mut() {
+            opt.import_state(ck.opt_state)?;
+        }
+        println!("resumed from {path} at step {}", ck.step);
+    }
+
+    let log = trainer.run()?;
+    println!(
+        "\nfinal loss {:.4} (tail {:.4})  entropy floor {:.4}",
+        log.final_loss(),
+        log.tail_loss(20),
+        trainer.entropy_floor()
+    );
+    println!(
+        "throughput {:.0} tok/s   optimizer overhead {:.1}%   state {} bytes",
+        log.tokens_per_second(),
+        100.0 * log.optimizer_overhead_frac(),
+        trainer.state_bytes()
+    );
+
+    if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {
+        let opt_state = trainer
+            .native_optimizer()
+            .map(|o| o.export_state())
+            .unwrap_or_default();
+        Checkpoint { step: trainer.step, params: trainer.params.clone(), opt_state }
+            .save(path)?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep_lr(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
+    let mut rc = RunConfig::from_args(args)?;
+    println!("lr sweep for {} on {}", rc.optimizer.name(), rc.model);
+    let mut best: Option<(f32, f32)> = None;
+    for &lr in &soap_lab::config::DEFAULT_LRS {
+        rc.lr = lr;
+        let mut trainer = Trainer::new_pjrt(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?;
+        let log = trainer.run()?;
+        let tail = log.tail_loss(20);
+        println!("  lr {lr:>9.5}  tail loss {tail:.4}");
+        if tail.is_finite() && best.map(|(_, b)| tail < b).unwrap_or(true) {
+            best = Some((lr, tail));
+        }
+    }
+    if let Some((lr, loss)) = best {
+        println!("best: lr {lr} (loss {loss:.4})");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
+    let engine = Engine::load(args.str("artifacts")?)?;
+    println!("platform: {}", engine.platform());
+    println!("baked hyper: {:?}", engine.manifest.hyper);
+    for (name, cfg) in &engine.manifest.configs {
+        println!(
+            "config {name}: vocab={} dim={} depth={} seq={} batch={} params={} ({} non-embedding)",
+            cfg.vocab, cfg.dim, cfg.depth, cfg.seq, cfg.batch, cfg.num_params,
+            cfg.non_embedding_params
+        );
+    }
+    println!("{} artifacts:", engine.manifest.artifacts.len());
+    for key in engine.manifest.artifacts.keys() {
+        println!("  {key}");
+    }
+    Ok(())
+}
+
+fn cmd_corpus(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
+    let spec = CorpusSpec {
+        vocab_size: args.parse("vocab")?,
+        zipf_alpha: args.parse("alpha")?,
+        seed: args.parse("seed")?,
+        stream: 0,
+    };
+    let mut c = SyntheticCorpus::new(spec);
+    println!("entropy floor (H(next|prev)): {:.4} nats", c.entropy_floor());
+    println!("unigram bound (ln V):         {:.4} nats", c.unigram_entropy_bound());
+    let mut sample = vec![0u32; 32];
+    c.fill(&mut sample);
+    println!("sample: {sample:?}");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let args = match app.parse(&argv) {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            let is_help = argv
+                .first()
+                .map(|a| a == "--help" || a == "help" || a == "-h")
+                .unwrap_or(true)
+                || argv.iter().any(|a| a == "--help" || a == "-h");
+            std::process::exit(if is_help { 0 } else { 2 });
+        }
+    };
+    let result = match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "sweep-lr" => cmd_sweep_lr(&args),
+        "inspect" => cmd_inspect(&args),
+        "corpus" => cmd_corpus(&args),
+        other => Err(anyhow::anyhow!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

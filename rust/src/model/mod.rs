@@ -1,0 +1,8 @@
+//! Native model substrate: a hand-backpropped MLP language model used for
+//! artifact-free optimizer testing and fast native benches. The paper-scale
+//! transformer lives in `python/compile/model.py` and reaches Rust as HLO
+//! artifacts (see [`crate::runtime`]).
+
+pub mod nplm;
+
+pub use nplm::{gelu, gelu_grad, init_params, loss_and_grads, NplmConfig};

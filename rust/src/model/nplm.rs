@@ -1,0 +1,241 @@
+//! Native neural probabilistic language model (Bengio et al. 2003 style):
+//! embedding → concat(k context tokens) → GeLU MLP → softmax over vocab,
+//! with hand-written backprop.
+//!
+//! Purpose (DESIGN.md §3.3): an artifact-free language-modeling substrate so
+//! optimizer behaviour (loss curves, frequency ablations, Claim 1 checks)
+//! can be unit/property-tested and benchmarked in pure Rust. The paper-scale
+//! experiments use the JAX transformer artifacts; integration tests tie the
+//! two together.
+
+use crate::data::Batch;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// GeLU (tanh approximation, as in the paper's models).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx GeLU (tanh approximation).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NplmConfig {
+    pub vocab: usize,
+    /// Context length (tokens of history fed to the MLP).
+    pub context: usize,
+    /// Embedding dim.
+    pub dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+}
+
+impl NplmConfig {
+    pub fn tiny() -> Self {
+        Self { vocab: 64, context: 4, dim: 16, hidden: 32 }
+    }
+
+    /// Parameter shapes in canonical order: [E, W1, W2].
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.vocab, self.dim),
+            (self.context * self.dim, self.hidden),
+            (self.hidden, self.vocab),
+        ]
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.shapes().iter().map(|&(m, n)| m * n).sum()
+    }
+}
+
+/// Initialize parameters (truncated-normal-ish: plain normal with the usual
+/// 1/√fan_in scaling).
+pub fn init_params(cfg: &NplmConfig, rng: &mut Rng) -> Vec<Matrix> {
+    cfg.shapes()
+        .iter()
+        .map(|&(m, n)| Matrix::randn(rng, m, n, 1.0 / (m as f32).sqrt()))
+        .collect()
+}
+
+/// Forward + backward over a [`Batch`]: treats every position with at least
+/// `context` predecessors in its row as one example. Returns
+/// `(mean loss in nats, grads aligned with params)`.
+pub fn loss_and_grads(cfg: &NplmConfig, params: &[Matrix], batch: &Batch) -> (f32, Vec<Matrix>) {
+    let [e, w1, w2] = params else { panic!("expected 3 params") };
+    assert_eq!(e.rows, cfg.vocab);
+    let k = cfg.context;
+    let d = cfg.dim;
+
+    // Gather examples: context windows within each row.
+    let mut ctxs: Vec<&[u32]> = Vec::new();
+    let mut tgts: Vec<u32> = Vec::new();
+    for b in 0..batch.batch {
+        let row = &batch.tokens[b * batch.seq..(b + 1) * batch.seq];
+        let trow = &batch.targets[b * batch.seq..(b + 1) * batch.seq];
+        for s in (k - 1)..batch.seq {
+            ctxs.push(&row[s + 1 - k..=s]);
+            tgts.push(trow[s]);
+        }
+    }
+    let n = ctxs.len();
+    assert!(n > 0, "sequence shorter than context");
+
+    // x: n × (k·d) concatenated embeddings.
+    let mut x = Matrix::zeros(n, k * d);
+    for (i, ctx) in ctxs.iter().enumerate() {
+        for (j, &tok) in ctx.iter().enumerate() {
+            let erow = e.row(tok as usize);
+            x.row_mut(i)[j * d..(j + 1) * d].copy_from_slice(erow);
+        }
+    }
+
+    // Hidden pre-activation and activation.
+    let pre = x.matmul(w1); // n × h
+    let h = pre.map(gelu);
+    let logits = h.matmul(w2); // n × vocab
+
+    // Softmax cross-entropy, numerically stable; dlogits = (p − onehot)/n.
+    let mut loss = 0.0f64;
+    let mut dlogits = Matrix::zeros(n, cfg.vocab);
+    for i in 0..n {
+        let row = logits.row(i);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for &v in row {
+            z += ((v - maxv) as f64).exp();
+        }
+        let lse = maxv as f64 + z.ln();
+        let t = tgts[i] as usize;
+        loss += lse - logits.at(i, t) as f64;
+        let drow = dlogits.row_mut(i);
+        for (j, &v) in row.iter().enumerate() {
+            let p = ((v as f64 - lse).exp()) as f32;
+            drow[j] = p / n as f32;
+        }
+        drow[t] -= 1.0 / n as f32;
+    }
+    let loss = (loss / n as f64) as f32;
+
+    // Backprop.
+    let dw2 = h.matmul_tn(&dlogits);
+    let dh = dlogits.matmul_nt(w2);
+    let dpre = dh.zip(&pre, |g, x| g * gelu_grad(x));
+    let dw1 = x.matmul_tn(&dpre);
+    let dx = dpre.matmul_nt(w1);
+
+    // Embedding gradient: scatter-add context slices.
+    let mut de = Matrix::zeros(cfg.vocab, d);
+    for (i, ctx) in ctxs.iter().enumerate() {
+        for (j, &tok) in ctx.iter().enumerate() {
+            let src = &dx.row(i)[j * d..(j + 1) * d];
+            let dst = de.row_mut(tok as usize);
+            for (a, &b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+        }
+    }
+
+    (loss, vec![de, dw1, dw2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{BatchStream, CorpusSpec};
+
+    fn toy_batch(cfg: &NplmConfig, seed: u64) -> Batch {
+        let spec = CorpusSpec { vocab_size: cfg.vocab, zipf_alpha: 1.2, seed, stream: 0 };
+        BatchStream::new(spec, 2, 12, 0, 1).next_batch()
+    }
+
+    #[test]
+    fn initial_loss_near_log_vocab() {
+        let cfg = NplmConfig::tiny();
+        let mut rng = Rng::new(70);
+        let params = init_params(&cfg, &mut rng);
+        let batch = toy_batch(&cfg, 1);
+        let (loss, _) = loss_and_grads(&cfg, &params, &batch);
+        let expect = (cfg.vocab as f32).ln();
+        assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln V {expect}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = NplmConfig { vocab: 12, context: 2, dim: 4, hidden: 6 };
+        let mut rng = Rng::new(71);
+        let mut params = init_params(&cfg, &mut rng);
+        let batch = toy_batch(&cfg, 2);
+        let (_, grads) = loss_and_grads(&cfg, &params, &batch);
+
+        let eps = 1e-2f32;
+        let mut checked = 0;
+        for pi in 0..params.len() {
+            // Probe a few entries per tensor.
+            let probes = [(0usize, 0usize), (params[pi].rows - 1, params[pi].cols - 1)];
+            for &(i, j) in &probes {
+                let orig = params[pi].at(i, j);
+                params[pi].set(i, j, orig + eps);
+                let (lp, _) = loss_and_grads(&cfg, &params, &batch);
+                params[pi].set(i, j, orig - eps);
+                let (lm, _) = loss_and_grads(&cfg, &params, &batch);
+                params[pi].set(i, j, orig);
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[pi].at(i, j);
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "param {pi} ({i},{j}): fd {fd} vs analytic {an}"
+                );
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 6);
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((fd - gelu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sgd_on_grads_reduces_loss() {
+        let cfg = NplmConfig::tiny();
+        let mut rng = Rng::new(72);
+        let mut params = init_params(&cfg, &mut rng);
+        let batch = toy_batch(&cfg, 3);
+        let (l0, _) = loss_and_grads(&cfg, &params, &batch);
+        for _ in 0..60 {
+            let (_, grads) = loss_and_grads(&cfg, &params, &batch);
+            for (p, g) in params.iter_mut().zip(&grads) {
+                p.axpy_inplace(-0.5, g);
+            }
+        }
+        let (l1, _) = loss_and_grads(&cfg, &params, &batch);
+        assert!(l1 < l0 - 0.5, "loss {l0} → {l1}");
+    }
+
+    #[test]
+    fn shapes_roundtrip() {
+        let cfg = NplmConfig::tiny();
+        let mut rng = Rng::new(73);
+        let params = init_params(&cfg, &mut rng);
+        for (p, &(m, n)) in params.iter().zip(&cfg.shapes()) {
+            assert_eq!((p.rows, p.cols), (m, n));
+        }
+        assert_eq!(cfg.num_params(), 64 * 16 + 64 * 32 + 32 * 64);
+    }
+}

@@ -1,0 +1,194 @@
+//! GaLore (Zhao et al. 2024a), full-rank version — the Appendix B baseline.
+//!
+//! Differences from SOAP that the paper calls out (§3) and that Appendix B
+//! shows matter empirically:
+//!  1. the projection basis comes from the SVD of the **current gradient**
+//!     (not an EMA of GGᵀ/GᵀG);
+//!  2. Adam's momentum lives in the **projected space** and is *not*
+//!     re-rotated when the basis changes;
+//!  3. only ONE side is projected (the smaller one), identity on the other.
+//!
+//! For the full-rank square projector the left singular vectors of `G` are
+//! the eigenvectors of `GGᵀ`, so we compute the basis with the Jacobi `eigh`
+//! of the square factor (avoids needing a general SVD).
+
+use super::hyper::Hyper;
+use super::LayerOptimizer;
+use crate::linalg::{eigh, Matrix};
+
+pub struct Galore {
+    h: Hyper,
+    /// Projection matrix P (k×k on the smaller side); identity until the
+    /// first refresh step.
+    p: Option<Matrix>,
+    /// Project the left side (true) or the right side (false).
+    left: bool,
+    /// Adam moments in the PROJECTED space.
+    m: Matrix,
+    v: Matrix,
+    refresh_secs: f64,
+}
+
+impl Galore {
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
+        Self {
+            left: rows <= cols,
+            p: None,
+            m: Matrix::zeros(rows, cols),
+            v: Matrix::zeros(rows, cols),
+            refresh_secs: 0.0,
+            h,
+        }
+    }
+
+    fn project(&self, g: &Matrix) -> Matrix {
+        match (&self.p, self.left) {
+            (Some(p), true) => p.matmul_tn(g),
+            (Some(p), false) => g.matmul(p),
+            (None, _) => g.clone(),
+        }
+    }
+
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        match (&self.p, self.left) {
+            (Some(p), true) => p.matmul(x),
+            (Some(p), false) => x.matmul_nt(p),
+            (None, _) => x.clone(),
+        }
+    }
+}
+
+impl LayerOptimizer for Galore {
+    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+        let h = self.h.clone();
+
+        // Basis refresh from the CURRENT gradient (difference #1).
+        if self.p.is_none() || t % h.precond_freq == 0 {
+            let t0 = std::time::Instant::now();
+            let factor = if self.left { g.matmul_nt(g) } else { g.matmul_tn(g) };
+            let (_, vecs) = eigh(&factor);
+            self.p = Some(vecs);
+            // NOTE: momentum is deliberately NOT re-rotated (difference #2).
+            self.refresh_secs += t0.elapsed().as_secs_f64();
+        }
+
+        let g_proj = self.project(g);
+        self.m.ema_inplace(&g_proj, h.beta1);
+        let g2 = g_proj.hadamard(&g_proj);
+        self.v.ema_inplace(&g2, h.beta2);
+
+        let bc1 = 1.0 - h.beta1.powi(t as i32);
+        let bc2 = 1.0 - h.beta2.powi(t as i32);
+        let dir_proj = self
+            .m
+            .zip(&self.v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps));
+        let dir = self.project_back(&dir_proj).scale(h.galore_scale);
+
+        w.axpy_inplace(-lr, &dir);
+        if h.weight_decay != 0.0 {
+            w.scale_inplace(1.0 - lr * h.weight_decay);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let p = self.p.as_ref().map(|p| p.numel()).unwrap_or(0);
+        (p + self.m.numel() + self.v.numel()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.refresh_secs
+    }
+
+    fn export_state(&self) -> Vec<Matrix> {
+        let has_p = Matrix::from_vec(1, 1, vec![self.p.is_some() as u8 as f32]);
+        let mut out = vec![has_p, self.m.clone(), self.v.clone()];
+        if let Some(p) = &self.p {
+            out.push(p.clone());
+        }
+        out
+    }
+
+    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
+        anyhow::ensure!(state.len() >= 3, "galore expects ≥3 state tensors");
+        let mut it = state.into_iter();
+        let has_p = it.next().unwrap().data[0] != 0.0;
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+        self.p = if has_p {
+            Some(it.next().ok_or_else(|| anyhow::anyhow!("missing p"))?)
+        } else {
+            None
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn h_base() -> Hyper {
+        Hyper { weight_decay: 0.0, precond_freq: 5, ..Hyper::default() }
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut rng = Rng::new(50);
+        let target = Matrix::randn(&mut rng, 4, 6, 1.0);
+        let mut w = Matrix::zeros(4, 6);
+        let mut opt = Galore::new(4, 6, h_base());
+        for t in 1..=2000 {
+            let g = w.sub(&target).scale(2.0);
+            opt.update(&mut w, &g, t, 0.02);
+        }
+        assert!(w.max_abs_diff(&target) < 0.1, "{}", w.max_abs_diff(&target));
+    }
+
+    #[test]
+    fn projects_smaller_side() {
+        assert!(Galore::new(4, 16, h_base()).left);
+        assert!(!Galore::new(16, 4, h_base()).left);
+    }
+
+    #[test]
+    fn projector_is_orthogonal() {
+        let mut rng = Rng::new(51);
+        let mut opt = Galore::new(5, 9, h_base());
+        let mut w = Matrix::zeros(5, 9);
+        let g = Matrix::randn(&mut rng, 5, 9, 1.0);
+        opt.update(&mut w, &g, 1, 0.01);
+        let p = opt.p.as_ref().unwrap();
+        assert_eq!(p.rows, 5);
+        assert!(p.matmul_tn(p).max_abs_diff(&Matrix::eye(5)) < 1e-3);
+    }
+
+    #[test]
+    fn basis_refreshes_at_frequency_only() {
+        let mut rng = Rng::new(52);
+        let mut opt = Galore::new(4, 4, h_base()); // f = 5
+        let mut w = Matrix::zeros(4, 4);
+        opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), 1, 0.01);
+        let p1 = opt.p.clone().unwrap();
+        for t in 2..=4 {
+            opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), t, 0.01);
+        }
+        assert_eq!(opt.p.as_ref().unwrap(), &p1, "P changed off-schedule");
+        opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), 5, 0.01);
+        assert!(opt.p.as_ref().unwrap().max_abs_diff(&p1) > 0.0);
+    }
+
+    #[test]
+    fn state_excludes_large_side_projector() {
+        let mut rng = Rng::new(53);
+        let mut opt = Galore::new(4, 32, h_base());
+        let mut w = Matrix::zeros(4, 32);
+        opt.update(&mut w, &Matrix::randn(&mut rng, 4, 32, 1.0), 1, 0.01);
+        // P is 4×4 (small side), not 32×32.
+        assert_eq!(opt.state_bytes(), (16 + 2 * 4 * 32) * 4);
+    }
+}

@@ -1,0 +1,113 @@
+//! Optimizer hyperparameters — mirrors the paper's Appendix A defaults.
+
+/// How SOAP/Shampoo recompute the preconditioner eigenbasis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshMethod {
+    /// One power-iteration step + QR (paper Algorithm 4; default).
+    QrPowerIteration,
+    /// Fresh eigendecomposition every refresh (`torch.linalg.eigh` analogue;
+    /// the slower arm of Fig 7 right).
+    Eigh,
+}
+
+/// Hyperparameters shared across all optimizers. Per-optimizer fields are
+/// ignored by optimizers that don't use them.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    /// β₁ — first-moment EMA. Paper default 0.95.
+    pub beta1: f32,
+    /// β₂ — second-moment EMA (AdamW / SOAP's V). Paper default 0.95.
+    pub beta2: f32,
+    /// Adam/SOAP ε. Paper default 1e-8.
+    pub eps: f32,
+    /// Decoupled weight decay (Wortsman et al. style). Paper default 1e-4.
+    pub weight_decay: f32,
+    /// Preconditioning frequency f: eigenbasis / inverse-root recompute
+    /// period in steps. Paper default 10.
+    pub precond_freq: u64,
+    /// β for the L/R Kronecker-factor EMAs (β_shampoo). Paper default 0.95.
+    pub shampoo_beta: f32,
+    /// Shampoo ε. Paper default 1e-12.
+    pub shampoo_eps: f32,
+    /// Shampoo inverse-exponent denominator: update uses L^{-1/e}, R^{-1/e}.
+    /// Paper default e = 2.5 (DistributedShampoo's −1/2.5 finding);
+    /// e = 2 is the "power 1/2" theoretical variant, e = 4 the original.
+    pub shampoo_exponent: f32,
+    /// Layerwise AdamW grafting for Shampoo (DistributedShampoo default).
+    pub grafting: bool,
+    /// SOAP: project only the smaller side (Q = I on the larger side) — §7.1.
+    pub one_sided: bool,
+    /// SOAP: Adafactor (rank-1) second moment in the eigenbasis — §7.2.1.
+    pub factorized: bool,
+    /// Dimensions larger than this keep Q = identity (paper implementation
+    /// detail 3: embedding/output layers).
+    pub max_precond_dim: usize,
+    /// Eigenbasis refresh method (Fig 7 right ablation).
+    pub refresh: RefreshMethod,
+    /// GaLore update-scale α (appendix B; 1.0 for the full-rank version).
+    pub galore_scale: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            beta1: 0.95,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 1e-4,
+            precond_freq: 10,
+            shampoo_beta: 0.95,
+            shampoo_eps: 1e-12,
+            shampoo_exponent: 2.5,
+            grafting: true,
+            one_sided: false,
+            factorized: false,
+            max_precond_dim: 4096,
+            refresh: RefreshMethod::QrPowerIteration,
+            galore_scale: 1.0,
+        }
+    }
+}
+
+impl Hyper {
+    pub fn with_freq(mut self, f: u64) -> Self {
+        self.precond_freq = f;
+        self
+    }
+    pub fn one_sided(mut self) -> Self {
+        self.one_sided = true;
+        self
+    }
+    pub fn factorized(mut self) -> Self {
+        self.factorized = true;
+        self
+    }
+    pub fn with_refresh(mut self, r: RefreshMethod) -> Self {
+        self.refresh = r;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix_a() {
+        let h = Hyper::default();
+        assert_eq!(h.beta1, 0.95);
+        assert_eq!(h.beta2, 0.95);
+        assert_eq!(h.eps, 1e-8);
+        assert_eq!(h.weight_decay, 1e-4);
+        assert_eq!(h.precond_freq, 10);
+        assert_eq!(h.shampoo_eps, 1e-12);
+        assert_eq!(h.shampoo_exponent, 2.5);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let h = Hyper::default().with_freq(80).one_sided().factorized();
+        assert_eq!(h.precond_freq, 80);
+        assert!(h.one_sided && h.factorized);
+    }
+}

@@ -1,0 +1,123 @@
+//! The idealized algorithms of the paper's §4.1 (Claim 1):
+//!
+//! - **Algorithm 1** — idealized Shampoo with power 1/2: dataset averages
+//!   `L = E[GGᵀ]`, `R = E[GᵀG]`, update `Tr(L)^{1/2} · L^{-1/2} G R^{-1/2}`.
+//! - **Algorithm 2** — idealized Adafactor run in Shampoo's eigenbasis:
+//!   rotate by the eigenvectors of L and R, apply the factored second-moment
+//!   normalization, rotate back.
+//!
+//! Claim 1 states these are identical; `rust/tests/prop_optim.rs` property-
+//! tests that equivalence and `benches/claim1_equiv.rs` reports the residual
+//! over random gradient datasets (the paper's Table-free theoretical check).
+
+use crate::linalg::{eigh, inv_root_eigh, Matrix};
+
+/// Dataset averages L = E[GGᵀ], R = E[GᵀG].
+pub fn dataset_factors(grads: &[Matrix]) -> (Matrix, Matrix) {
+    assert!(!grads.is_empty());
+    let (m, n) = (grads[0].rows, grads[0].cols);
+    let mut l = Matrix::zeros(m, m);
+    let mut r = Matrix::zeros(n, n);
+    for g in grads {
+        l = l.add(&g.matmul_nt(g));
+        r = r.add(&g.matmul_tn(g));
+    }
+    let k = grads.len() as f32;
+    (l.scale(1.0 / k), r.scale(1.0 / k))
+}
+
+/// Algorithm 1: one idealized-Shampoo step direction for gradient `g`.
+pub fn idealized_shampoo_dir(grads: &[Matrix], g: &Matrix) -> Matrix {
+    let (l, r) = dataset_factors(grads);
+    let tr = l.trace();
+    let l_inv = inv_root_eigh(&l, 2.0, 0.0);
+    let r_inv = inv_root_eigh(&r, 2.0, 0.0);
+    // Ĥ = L⊗R/Tr(L) ⇒ Ĥ^{-1/2} G = Tr(L)^{1/2} L^{-1/2} G R^{-1/2}.
+    l_inv.matmul(g).matmul(&r_inv).scale(tr.sqrt())
+}
+
+/// Algorithm 2: one idealized Adafactor-in-eigenbasis step direction.
+pub fn idealized_adafactor_dir(grads: &[Matrix], g: &Matrix, eps: f32) -> Matrix {
+    let (l, r) = dataset_factors(grads);
+    let (_, ql) = eigh(&l);
+    let (_, qr) = eigh(&r);
+
+    // Rotated dataset second moments.
+    let (m, n) = (g.rows, g.cols);
+    let mut e_g2 = Matrix::zeros(m, n);
+    for gb in grads {
+        let gp = ql.matmul_tn(gb).matmul(&qr);
+        e_g2 = e_g2.add(&gp.hadamard(&gp));
+    }
+    e_g2.scale_inplace(1.0 / grads.len() as f32);
+
+    // A = row sums, C = col sums, V̂ = A·Cᵀ / ΣA.
+    let a = e_g2.row_sums();
+    let c = e_g2.col_sums();
+    let sum_a: f32 = a.iter().sum();
+
+    let g_rot = ql.matmul_tn(g).matmul(&qr);
+    let g_norm = Matrix::from_fn(m, n, |i, j| {
+        let vhat = (a[i] * c[j] / sum_a).max(0.0);
+        g_rot.at(i, j) / (vhat + eps).sqrt()
+    });
+    ql.matmul(&g_norm).matmul_nt(&qr)
+}
+
+/// The A/λ identity proved inside Claim 1: row sums of the rotated dataset
+/// second moment equal the eigenvalues of L. Returns (A, λ) for inspection.
+pub fn claim1_row_identity(grads: &[Matrix]) -> (Vec<f32>, Vec<f32>) {
+    let (l, _) = dataset_factors(grads);
+    let (lambda, ql) = eigh(&l);
+    let (m, n) = (grads[0].rows, grads[0].cols);
+    let mut e_g2 = Matrix::zeros(m, n);
+    for gb in grads {
+        let gp = ql.matmul_tn(gb);
+        e_g2 = e_g2.add(&gp.hadamard(&gp));
+    }
+    e_g2.scale_inplace(1.0 / grads.len() as f32);
+    (e_g2.row_sums(), lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dataset(rng: &mut Rng, k: usize, m: usize, n: usize) -> Vec<Matrix> {
+        (0..k).map(|_| Matrix::randn(rng, m, n, 1.0)).collect()
+    }
+
+    #[test]
+    fn claim1_equivalence_small() {
+        let mut rng = Rng::new(60);
+        let grads = random_dataset(&mut rng, 12, 4, 3);
+        let g = grads[0].clone();
+        let d1 = idealized_shampoo_dir(&grads, &g);
+        let d2 = idealized_adafactor_dir(&grads, &g, 0.0);
+        let rel = d1.max_abs_diff(&d2) / d1.max_abs().max(1e-12);
+        assert!(rel < 5e-2, "claim 1 violated: rel err {rel}");
+    }
+
+    #[test]
+    fn row_identity_a_equals_lambda() {
+        let mut rng = Rng::new(61);
+        let grads = random_dataset(&mut rng, 10, 5, 4);
+        let (a, lambda) = claim1_row_identity(&grads);
+        for (x, y) in a.iter().zip(&lambda) {
+            assert!((x - y).abs() < 2e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn shampoo_dir_whitens_spectrum() {
+        // For G drawn i.i.d., preconditioning with the dataset factors should
+        // roughly normalize the scale of the direction.
+        let mut rng = Rng::new(62);
+        let grads = random_dataset(&mut rng, 32, 6, 6);
+        let g = grads[1].clone();
+        let d = idealized_shampoo_dir(&grads, &g);
+        assert!(d.frob_norm().is_finite());
+        assert!(d.frob_norm() > 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Optimizers — the paper's contribution (SOAP) plus every baseline it
+//! evaluates against: AdamW, Adafactor, Shampoo (DistributedShampoo-style),
+//! GaLore (appendix B), and the idealized algorithms of Claim 1.
+//!
+//! All optimizers implement [`LayerOptimizer`] over a single parameter
+//! matrix (1-D parameters are `1×n`), so the coordinator can shard layers
+//! across workers. [`ModelOptimizer`] groups per-layer states under a shared
+//! schedule, mirroring a framework optimizer object.
+//!
+//! A mirrored implementation lives in the HLO artifacts
+//! (`python/compile/optim_graphs.py`); integration tests assert the two
+//! trajectories agree step-for-step.
+
+pub mod adafactor;
+pub mod adamw;
+pub mod galore;
+pub mod hyper;
+pub mod idealized;
+pub mod schedule;
+pub mod shampoo;
+pub mod soap;
+
+pub use adafactor::Adafactor;
+pub use adamw::AdamW;
+pub use galore::Galore;
+pub use hyper::{Hyper, RefreshMethod};
+pub use schedule::Schedule;
+pub use shampoo::Shampoo;
+pub use soap::Soap;
+
+use crate::linalg::Matrix;
+
+/// Per-layer optimizer state machine.
+///
+/// `t` is the 1-based global step (used for bias correction and the
+/// preconditioning-frequency schedule).
+pub trait LayerOptimizer: Send {
+    /// Apply one update in place: `w ← w − lr·direction − lr·wd·w`.
+    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32);
+
+    /// Bytes of optimizer state held for this layer (paper §7.2 accounting).
+    fn state_bytes(&self) -> usize;
+
+    /// Human name, e.g. `"soap"`.
+    fn name(&self) -> &'static str;
+
+    /// Wall-clock spent in eigenbasis/inverse-root refreshes so far — lets
+    /// the coordinator report the Fig 7 overhead split without timing hooks.
+    fn refresh_seconds(&self) -> f64 {
+        0.0
+    }
+
+    /// Serialize optimizer state (checkpointing). The returned matrices are
+    /// opaque; `import_state` must receive them in the same order.
+    fn export_state(&self) -> Vec<Matrix> {
+        Vec::new()
+    }
+
+    /// Restore state produced by `export_state`.
+    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
+        anyhow::ensure!(state.is_empty(), "optimizer expects no state");
+        Ok(())
+    }
+}
+
+/// Which optimizer to build (CLI/config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    AdamW,
+    Adafactor,
+    Shampoo,
+    Soap,
+    Galore,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "adamw" | "adam" => OptKind::AdamW,
+            "adafactor" => OptKind::Adafactor,
+            "shampoo" => OptKind::Shampoo,
+            "soap" => OptKind::Soap,
+            "galore" => OptKind::Galore,
+            other => anyhow::bail!("unknown optimizer '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::AdamW => "adamw",
+            OptKind::Adafactor => "adafactor",
+            OptKind::Shampoo => "shampoo",
+            OptKind::Soap => "soap",
+            OptKind::Galore => "galore",
+        }
+    }
+
+    /// Build per-layer state for a parameter of shape `rows×cols`.
+    ///
+    /// Paper implementation detail 1: SOAP and GaLore run plain AdamW on 1-D
+    /// parameters (unlike Shampoo, which preconditions them too).
+    pub fn build(&self, rows: usize, cols: usize, h: &Hyper) -> Box<dyn LayerOptimizer> {
+        let is_1d = rows == 1 || cols == 1;
+        match self {
+            OptKind::AdamW => Box::new(AdamW::new(rows, cols, h.clone())),
+            OptKind::Adafactor => Box::new(Adafactor::new(rows, cols, h.clone())),
+            OptKind::Shampoo => Box::new(Shampoo::new(rows, cols, h.clone())),
+            OptKind::Soap if is_1d => Box::new(AdamW::new(rows, cols, h.clone())),
+            OptKind::Soap => Box::new(Soap::new(rows, cols, h.clone())),
+            OptKind::Galore if is_1d => Box::new(AdamW::new(rows, cols, h.clone())),
+            OptKind::Galore => Box::new(Galore::new(rows, cols, h.clone())),
+        }
+    }
+}
+
+/// A full model's optimizer: one [`LayerOptimizer`] per parameter plus a
+/// shared LR schedule and step counter.
+pub struct ModelOptimizer {
+    pub kind: OptKind,
+    pub hyper: Hyper,
+    pub schedule: Schedule,
+    pub layers: Vec<Box<dyn LayerOptimizer>>,
+    pub step: u64,
+}
+
+impl ModelOptimizer {
+    pub fn new(kind: OptKind, hyper: Hyper, schedule: Schedule, shapes: &[(usize, usize)]) -> Self {
+        let layers = shapes
+            .iter()
+            .map(|&(m, n)| kind.build(m, n, &hyper))
+            .collect();
+        Self { kind, hyper, schedule, layers, step: 0 }
+    }
+
+    /// One optimizer step over all layers (serial; the coordinator owns the
+    /// parallel/sharded version).
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.layers.len());
+        self.step += 1;
+        let lr = self.schedule.lr_at(self.step - 1);
+        for ((layer, w), g) in self.layers.iter_mut().zip(params.iter_mut()).zip(grads) {
+            layer.update(w, g, self.step, lr);
+        }
+    }
+
+    /// Total optimizer-state bytes (paper §7.2 space-usage table).
+    pub fn state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.state_bytes()).sum()
+    }
+
+    pub fn refresh_seconds(&self) -> f64 {
+        self.layers.iter().map(|l| l.refresh_seconds()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factory_dispatches_1d_to_adamw_for_soap_galore() {
+        let h = Hyper::default();
+        assert_eq!(OptKind::Soap.build(1, 64, &h).name(), "adamw");
+        assert_eq!(OptKind::Galore.build(1, 64, &h).name(), "adamw");
+        assert_eq!(OptKind::Soap.build(8, 64, &h).name(), "soap");
+        assert_eq!(OptKind::Shampoo.build(1, 64, &h).name(), "shampoo");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(OptKind::parse("SOAP").unwrap(), OptKind::Soap);
+        assert_eq!(OptKind::parse("adam").unwrap(), OptKind::AdamW);
+        assert!(OptKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn model_optimizer_steps_all_layers() {
+        let shapes = [(4, 4), (1, 8)];
+        let mut mo = ModelOptimizer::new(
+            OptKind::AdamW,
+            Hyper::default(),
+            Schedule::Constant { lr: 0.1 },
+            &shapes,
+        );
+        let mut rng = Rng::new(1);
+        let mut params: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0))
+            .collect();
+        let before: Vec<Matrix> = params.clone();
+        let grads: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0))
+            .collect();
+        mo.step(&mut params, &grads);
+        for (b, a) in before.iter().zip(&params) {
+            assert!(b.max_abs_diff(a) > 0.0);
+        }
+        assert_eq!(mo.step, 1);
+    }
+}

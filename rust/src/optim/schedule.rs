@@ -1,0 +1,82 @@
+//! Learning-rate schedules — warmup + cosine decay, matching Appendix A:
+//! warmup starts at 0.1× max LR and the cosine decays back to 0.1× max LR.
+
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// Linear warmup from `floor_frac·lr` over `warmup` steps, then cosine
+    /// decay to `floor_frac·lr` at `total` steps.
+    WarmupCosine { lr: f32, warmup: u64, total: u64, floor_frac: f32 },
+}
+
+impl Schedule {
+    /// Paper-default schedule: floor fraction 0.1.
+    pub fn paper(lr: f32, warmup: u64, total: u64) -> Self {
+        Schedule::WarmupCosine { lr, warmup, total, floor_frac: 0.1 }
+    }
+
+    /// LR at (0-based) step `t`.
+    pub fn lr_at(&self, t: u64) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine { lr, warmup, total, floor_frac } => {
+                let floor = floor_frac * lr;
+                if warmup > 0 && t < warmup {
+                    let p = t as f32 / warmup as f32;
+                    floor + (lr - floor) * p
+                } else if t >= total {
+                    floor
+                } else {
+                    let span = (total - warmup).max(1) as f32;
+                    let p = (t - warmup) as f32 / span;
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * p).cos());
+                    floor + (lr - floor) * cos
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_starts_at_floor_and_peaks() {
+        let s = Schedule::paper(1.0, 100, 1000);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(100) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decays_to_floor() {
+        let s = Schedule::paper(1.0, 100, 1000);
+        assert!((s.lr_at(1000) - 0.1).abs() < 1e-5);
+        assert!((s.lr_at(5000) - 0.1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn monotone_up_then_down() {
+        let s = Schedule::paper(0.01, 50, 500);
+        for t in 0..49 {
+            assert!(s.lr_at(t) <= s.lr_at(t + 1) + 1e-9);
+        }
+        for t in 50..499 {
+            assert!(s.lr_at(t) >= s.lr_at(t + 1) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn midpoint_is_mean_of_peak_and_floor() {
+        let s = Schedule::paper(1.0, 0, 1000);
+        let mid = s.lr_at(500);
+        assert!((mid - 0.55).abs() < 1e-3); // 0.1 + 0.9·0.5
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.3 };
+        assert_eq!(s.lr_at(0), 0.3);
+        assert_eq!(s.lr_at(123456), 0.3);
+    }
+}

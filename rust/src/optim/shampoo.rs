@@ -1,0 +1,260 @@
+//! Shampoo (Gupta et al. 2018), in the DistributedShampoo (Shi et al. 2023)
+//! configuration the paper benchmarks against: EMA Kronecker factors
+//! `L ← β_s L + (1−β_s) GGᵀ`, `R ← β_s R + (1−β_s) GᵀG`, inverse roots
+//! `L^{-1/e}, R^{-1/e}` recomputed every `f` steps (preconditioning
+//! frequency), layerwise AdamW **grafting**, and momentum applied in the
+//! original space.
+//!
+//! The paper's key criticism — that Shampoo's second-moment "adaptivity" is
+//! frozen between refreshes (only the scalar grafting norm adapts per step)
+//! — falls straight out of this structure: the direction uses the stale
+//! `L^{-1/e}` factors, while SOAP (see `soap.rs`) refreshes its diagonal
+//! second moment every step.
+
+use std::time::Instant;
+
+use super::adamw::AdamW;
+use super::hyper::Hyper;
+use super::LayerOptimizer;
+use crate::linalg::{eigh, eigh_warm, roots::inv_root_from_eig, Matrix};
+
+pub struct Shampoo {
+    h: Hyper,
+    /// Momentum (original space).
+    m: Matrix,
+    /// Kronecker factors (EMAs).
+    l: Matrix,
+    r: Matrix,
+    /// Cached inverse roots, recomputed every `f` steps.
+    l_inv: Matrix,
+    r_inv: Matrix,
+    /// AdamW second moment for grafting.
+    v_graft: Matrix,
+    /// Cached eigenbases for warm-started refreshes (§Perf: the periodic
+    /// root recompute reuses the previous basis, dropping cold Jacobi cost
+    /// to a few GEMMs + ~1 sweep — the paper's refreshes change L/R slowly).
+    l_vecs: Option<Matrix>,
+    r_vecs: Option<Matrix>,
+    initialized: bool,
+    refresh_secs: f64,
+}
+
+impl Shampoo {
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
+        Self {
+            h,
+            m: Matrix::zeros(rows, cols),
+            l: Matrix::zeros(rows, rows),
+            r: Matrix::zeros(cols, cols),
+            l_inv: Matrix::eye(rows),
+            r_inv: Matrix::eye(cols),
+            v_graft: Matrix::zeros(rows, cols),
+            l_vecs: None,
+            r_vecs: None,
+            initialized: false,
+            refresh_secs: 0.0,
+        }
+    }
+
+    fn refresh_roots(&mut self, t: u64) {
+        let t0 = Instant::now();
+        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
+        // Per-factor exponent −1/e: the update is L^{-1/e} G R^{-1/e}.
+        // e = 4 is original Shampoo, e = 2 the Anil et al / Morwani et al
+        // power-1/2 variant, e = 2.5 the paper's DistributedShampoo default
+        // (Appendix A: "we set the default values of exponent to be −1/2.5").
+        let e = self.h.shampoo_exponent;
+        let lh = self.l.scale(1.0 / bc);
+        let rh = self.r.scale(1.0 / bc);
+        let (wl, vl) = match &self.l_vecs {
+            Some(prev) => eigh_warm(&lh, prev),
+            None => eigh(&lh),
+        };
+        let (wr, vr) = match &self.r_vecs {
+            Some(prev) => eigh_warm(&rh, prev),
+            None => eigh(&rh),
+        };
+        self.l_inv = inv_root_from_eig(&wl, &vl, e, self.h.shampoo_eps);
+        self.r_inv = inv_root_from_eig(&wr, &vr, e, self.h.shampoo_eps);
+        self.l_vecs = Some(vl);
+        self.r_vecs = Some(vr);
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+impl LayerOptimizer for Shampoo {
+    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+        let h = self.h.clone();
+
+        // --- factor updates --------------------------------------------------
+        let ggt = g.matmul_nt(g);
+        let gtg = g.matmul_tn(g);
+        self.l.ema_inplace(&ggt, h.shampoo_beta);
+        self.r.ema_inplace(&gtg, h.shampoo_beta);
+
+        // --- refresh inverse roots at frequency f (and on first step) -------
+        if !self.initialized || (t % h.precond_freq == 0) {
+            self.refresh_roots(t);
+            self.initialized = true;
+        }
+
+        // --- momentum + preconditioned direction -----------------------------
+        self.m.ema_inplace(g, h.beta1);
+        let bc1 = 1.0 - h.beta1.powi(t as i32);
+        let m_hat = self.m.scale(1.0 / bc1);
+        let mut dir = self.l_inv.matmul(&m_hat).matmul(&self.r_inv);
+
+        // --- layerwise AdamW grafting ----------------------------------------
+        if h.grafting {
+            let g2 = g.hadamard(g);
+            self.v_graft.ema_inplace(&g2, h.beta2);
+            let adam_dir =
+                AdamW::direction(&self.m, &self.v_graft, t, h.beta1, h.beta2, h.eps);
+            let target = adam_dir.frob_norm();
+            let actual = dir.frob_norm();
+            if actual > 1e-30 {
+                dir.scale_inplace(target / actual);
+            }
+        }
+
+        w.axpy_inplace(-lr, &dir);
+        if h.weight_decay != 0.0 {
+            w.scale_inplace(1.0 - lr * h.weight_decay);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        // L, R, L_inv, R_inv (2m²+2n²) + M, V_graft (2mn) — matches the
+        // paper §7.2 DistributedShampoo accounting (their "Q_L,Q_R" slots are
+        // our cached inverse roots).
+        (self.l.numel() + self.r.numel() + self.l_inv.numel() + self.r_inv.numel()
+            + self.m.numel()
+            + self.v_graft.numel())
+            * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "shampoo"
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.refresh_secs
+    }
+
+    fn export_state(&self) -> Vec<Matrix> {
+        let flags = Matrix::from_vec(1, 1, vec![self.initialized as u8 as f32]);
+        vec![
+            flags,
+            self.m.clone(),
+            self.l.clone(),
+            self.r.clone(),
+            self.l_inv.clone(),
+            self.r_inv.clone(),
+            self.v_graft.clone(),
+        ]
+    }
+
+    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
+        anyhow::ensure!(state.len() == 7, "shampoo expects 7 state tensors");
+        let mut it = state.into_iter();
+        self.initialized = it.next().unwrap().data[0] != 0.0;
+        self.m = it.next().unwrap();
+        self.l = it.next().unwrap();
+        self.r = it.next().unwrap();
+        self.l_inv = it.next().unwrap();
+        self.r_inv = it.next().unwrap();
+        self.v_graft = it.next().unwrap();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn h_base() -> Hyper {
+        Hyper { weight_decay: 0.0, precond_freq: 1, ..Hyper::default() }
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        let mut rng = Rng::new(7);
+        let target = Matrix::randn(&mut rng, 6, 4, 1.0);
+        let mut w = Matrix::zeros(6, 4);
+        let mut opt = Shampoo::new(6, 4, h_base());
+        for t in 1..=1500 {
+            let g = w.sub(&target).scale(2.0);
+            opt.update(&mut w, &g, t, 0.02);
+        }
+        assert!(w.max_abs_diff(&target) < 0.1, "{}", w.max_abs_diff(&target));
+    }
+
+    #[test]
+    fn grafting_matches_adam_norm() {
+        // With grafting, the applied direction norm equals AdamW's direction
+        // norm for the same gradient stream.
+        let mut rng = Rng::new(8);
+        let g = Matrix::randn(&mut rng, 5, 5, 1.0);
+        let h = h_base();
+        let mut sh = Shampoo::new(5, 5, h.clone());
+        let mut ad = AdamW::new(5, 5, h.clone());
+        let mut w_s = Matrix::zeros(5, 5);
+        let mut w_a = Matrix::zeros(5, 5);
+        sh.update(&mut w_s, &g, 1, 1.0);
+        ad.update(&mut w_a, &g, 1, 1.0);
+        let ns = w_s.frob_norm();
+        let na = w_a.frob_norm();
+        assert!((ns - na).abs() / na < 0.02, "shampoo {ns} vs adam {na}");
+    }
+
+    #[test]
+    fn stale_roots_between_refreshes() {
+        // With f = 10, the cached inverse roots must not change on
+        // non-refresh steps.
+        let mut rng = Rng::new(9);
+        let h = Hyper { precond_freq: 10, weight_decay: 0.0, ..Hyper::default() };
+        let mut opt = Shampoo::new(4, 4, h);
+        let mut w = Matrix::zeros(4, 4);
+        let g = Matrix::randn(&mut rng, 4, 4, 1.0);
+        opt.update(&mut w, &g, 1, 0.01); // initializes roots
+        let l_after_1 = opt.l_inv.clone();
+        for t in 2..=9 {
+            let g = Matrix::randn(&mut rng, 4, 4, 1.0);
+            opt.update(&mut w, &g, t, 0.01);
+        }
+        assert_eq!(opt.l_inv, l_after_1, "roots changed between refreshes");
+        let g = Matrix::randn(&mut rng, 4, 4, 1.0);
+        opt.update(&mut w, &g, 10, 0.01);
+        assert!(opt.l_inv.max_abs_diff(&l_after_1) > 0.0, "roots must refresh at f");
+    }
+
+    #[test]
+    fn handles_1d_as_1xn() {
+        let mut opt = Shampoo::new(1, 16, h_base());
+        let mut rng = Rng::new(10);
+        let mut w = Matrix::zeros(1, 16);
+        for t in 1..=5 {
+            let g = Matrix::randn(&mut rng, 1, 16, 1.0);
+            opt.update(&mut w, &g, t, 0.01);
+        }
+        assert!(w.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn state_bytes_matches_paper_formula() {
+        let opt = Shampoo::new(8, 4, Hyper::default());
+        // 2m² + 2n² + 2mn floats.
+        assert_eq!(opt.state_bytes(), (2 * 64 + 2 * 16 + 2 * 32) * 4);
+    }
+
+    #[test]
+    fn refresh_seconds_accumulates() {
+        let mut opt = Shampoo::new(16, 16, h_base());
+        let mut rng = Rng::new(11);
+        let mut w = Matrix::zeros(16, 16);
+        let g = Matrix::randn(&mut rng, 16, 16, 1.0);
+        opt.update(&mut w, &g, 1, 0.01);
+        assert!(opt.refresh_seconds() > 0.0);
+    }
+}

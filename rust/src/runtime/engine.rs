@@ -1,0 +1,175 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the CPU
+//! PJRT client (compile-once cache), and executes them from the training hot
+//! path. Adapted from /opt/xla-example/load_hlo.
+//!
+//! Python never runs here — artifacts are produced once by `make artifacts`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use crate::linalg::Matrix;
+
+/// Wraps the PJRT client + compiled-executable cache.
+///
+/// Not `Sync`: the xla crate's wrappers are raw FFI pointers. The coordinator
+/// keeps the engine on the leader thread (gradient + update execution) and
+/// fans CPU-side optimizer work out to workers — the same split
+/// DistributedShampoo uses between device steps and CPU root computations.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// (artifact key → cumulative execute seconds, count) for §Perf.
+    timings: RefCell<HashMap<String, (f64, u64)>>,
+}
+
+impl Engine {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            timings: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest key.
+    pub fn executable(&self, key: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(Rc::clone(e));
+        }
+        let file = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?;
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&exe));
+        // First-compile latency is worth surfacing once per artifact.
+        eprintln!("[engine] compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with Literal inputs; returns the flattened tuple
+    /// of output Literals.
+    pub fn run(&self, key: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(key)?;
+        let t0 = Instant::now();
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {key}: {e}"))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {key}: {e}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {key}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut tm = self.timings.borrow_mut();
+        let e = tm.entry(key.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        Ok(parts)
+    }
+
+    /// Cumulative (seconds, calls) per artifact — the §Perf/Fig 7 breakdown.
+    pub fn timing_report(&self) -> Vec<(String, f64, u64)> {
+        let mut v: Vec<_> = self
+            .timings
+            .borrow()
+            .iter()
+            .map(|(k, &(s, n))| (k.clone(), s, n))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn reset_timings(&self) {
+        self.timings.borrow_mut().clear();
+    }
+}
+
+// ---- Literal ⇄ native conversions ----------------------------------------
+
+/// f32 matrix → 2-D literal.
+pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    xla::Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow!("literal reshape: {e}"))
+}
+
+/// 2-D (or scalar/1-D) literal → f32 matrix with the given shape.
+pub fn matrix_from_literal(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+    anyhow::ensure!(data.len() == rows * cols, "literal size {} ≠ {rows}×{cols}", data.len());
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Token batch (u32 ids) → (batch, seq) i32 literal.
+pub fn literal_from_tokens(tokens: &[u32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() == batch * seq);
+    let as_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    xla::Literal::vec1(&as_i32)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow!("token literal: {e}"))
+}
+
+/// Scalar f32 out of a literal.
+pub fn scalar_from_literal(l: &xla::Literal) -> Result<f32> {
+    let v = l.to_vec::<f32>().map_err(|e| anyhow!("scalar literal: {e}"))?;
+    v.first().copied().context("empty literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let l = literal_from_matrix(&m).unwrap();
+        let back = matrix_from_literal(&l, 2, 3).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn token_literal_shape() {
+        let l = literal_from_tokens(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert!(literal_from_tokens(&[1, 2], 2, 3).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = literal_scalar(3.5);
+        assert_eq!(scalar_from_literal(&l).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest — the cross-language ABI written by
+//! `python/compile/aot.py` and consumed by the Rust runtime/coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One model configuration as compiled into artifacts.
+#[derive(Clone, Debug)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub zloss: f64,
+    /// Ordered (name, rows, cols) — the parameter ABI.
+    pub params: Vec<(String, usize, usize)>,
+    pub num_params: usize,
+    pub non_embedding_params: usize,
+}
+
+impl ConfigInfo {
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.params.iter().map(|&(_, r, c)| (r, c)).collect()
+    }
+}
+
+/// Baked optimizer hyperparameters (must agree with `optim::Hyper`).
+#[derive(Clone, Copy, Debug)]
+pub struct BakedHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub shampoo_beta: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub hyper: BakedHyper,
+    pub max_precond_dim: usize,
+    pub configs: BTreeMap<String, ConfigInfo>,
+    /// artifact key → file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("manifest.json missing in {dir:?} (run `make artifacts`): {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let h = j.get("hyper");
+        let num = |v: &Json, k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing number '{k}'"))
+        };
+        let hyper = BakedHyper {
+            beta1: num(h, "beta1")? as f32,
+            beta2: num(h, "beta2")? as f32,
+            eps: num(h, "eps")? as f32,
+            weight_decay: num(h, "weight_decay")? as f32,
+            shampoo_beta: num(h, "shampoo_beta")? as f32,
+        };
+        let max_precond_dim = j
+            .get("max_precond_dim")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing max_precond_dim"))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j
+            .get("configs")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: configs missing"))?
+        {
+            let params = c
+                .get("params")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("config {name}: params missing"))?
+                .iter()
+                .map(|p| {
+                    let a = p.as_arr().unwrap();
+                    (
+                        a[0].as_str().unwrap().to_string(),
+                        a[1].as_usize().unwrap(),
+                        a[2].as_usize().unwrap(),
+                    )
+                })
+                .collect();
+            configs.insert(
+                name.clone(),
+                ConfigInfo {
+                    name: name.clone(),
+                    vocab: num(c, "vocab")? as usize,
+                    dim: num(c, "dim")? as usize,
+                    depth: num(c, "depth")? as usize,
+                    heads: num(c, "heads")? as usize,
+                    seq: num(c, "seq")? as usize,
+                    batch: num(c, "batch")? as usize,
+                    zloss: num(c, "zloss")?,
+                    params,
+                    num_params: num(c, "num_params")? as usize,
+                    non_embedding_params: num(c, "non_embedding_params")? as usize,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: artifacts missing"))?
+        {
+            let file = v
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact {k}: file missing"))?;
+            artifacts.insert(k.clone(), file.to_string());
+        }
+
+        Ok(Self { hyper, max_precond_dim, configs, artifacts })
+    }
+
+    pub fn config(&self, name: &str) -> anyhow::Result<&ConfigInfo> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!(
+                "config '{name}' not in manifest (have: {:?}); re-run `make artifacts` with --configs",
+                self.configs.keys().collect::<Vec<_>>()
+            ))
+    }
+
+    pub fn has_artifact(&self, key: &str) -> bool {
+        self.artifacts.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hyper": {"beta1": 0.95, "beta2": 0.95, "eps": 1e-8,
+                "weight_decay": 1e-4, "shampoo_beta": 0.95},
+      "max_precond_dim": 4096,
+      "configs": {
+        "nano": {"vocab": 256, "dim": 64, "depth": 2, "heads": 2,
+                  "seq": 64, "batch": 8, "zloss": 1e-4,
+                  "params": [["embed", 256, 64], ["ln_f", 1, 64]],
+                  "num_params": 16448, "non_embedding_params": 64}
+      },
+      "artifacts": {"lm_grads_nano": {"file": "lm_grads_nano.hlo.txt",
+                                       "num_inputs": 4}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hyper.beta1, 0.95);
+        assert_eq!(m.max_precond_dim, 4096);
+        let c = m.config("nano").unwrap();
+        assert_eq!(c.dim, 64);
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.params[0], ("embed".to_string(), 256, 64));
+        assert!(m.has_artifact("lm_grads_nano"));
+        assert!(!m.has_artifact("nope"));
+    }
+
+    #[test]
+    fn missing_config_is_helpful_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.config("big100m").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime — the PJRT bridge (DESIGN.md §1 "Runtime"): HLO-text artifact
+//! loading, compile-once caching, execution, and Literal ⇄ native
+//! conversions. Python is never on this path; artifacts come from
+//! `make artifacts`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{
+    literal_from_matrix, literal_from_tokens, literal_scalar, matrix_from_literal,
+    scalar_from_literal, Engine,
+};
+pub use manifest::{BakedHyper, ConfigInfo, Manifest};

@@ -1,0 +1,195 @@
+//! Benchmark harness (criterion stand-in).
+//!
+//! Each paper figure gets a `[[bench]] harness = false` binary that uses this
+//! module: `Bencher` measures closures with warmup + repeated timed runs and
+//! prints a fixed-width table (median / p10 / p90 / mean); `Report` collects
+//! named series (e.g. loss curves per optimizer) and renders them as aligned
+//! tables and ASCII plots, plus CSV files under `bench_results/`.
+
+use std::time::Instant;
+
+use super::plot;
+use super::stats::Samples;
+
+/// Measure a closure: `warmup` untimed runs then `iters` timed runs.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub mean_s: f64,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    pub fn measure<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Samples::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            median_s: samples.median(),
+            p10_s: samples.quantile(0.10),
+            p90_s: samples.quantile(0.90),
+            mean_s: samples.mean(),
+            iters: self.iters,
+        }
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Print a table of measurements with a relative column vs the first row.
+pub fn print_table(title: &str, rows: &[Measurement]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<40} {:>10} {:>10} {:>10} {:>8}",
+        "case", "median", "p10", "p90", "rel"
+    );
+    let base = rows.first().map(|r| r.median_s).unwrap_or(1.0);
+    for r in rows {
+        println!(
+            "{:<40} {:>10} {:>10} {:>10} {:>7.2}x",
+            r.name,
+            fmt_duration(r.median_s),
+            fmt_duration(r.p10_s),
+            fmt_duration(r.p90_s),
+            r.median_s / base
+        );
+    }
+}
+
+/// Collected results for a figure: named (x, y) series, rendered as an ASCII
+/// plot + aligned table + CSV dump.
+#[derive(Default)]
+pub struct Report {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_series(&mut self, name: &str, points: Vec<(f64, f64)>) {
+        self.series.push((name.to_string(), points));
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render plot + table to stdout and write `bench_results/<slug>.csv`.
+    pub fn render_and_save(&self) {
+        println!("\n==== {} ====", self.title);
+        println!("{}", plot::ascii_plot(&self.series, &self.xlabel, &self.ylabel, 72, 20));
+        // Summary table: final point of every series.
+        println!("{:<34} {:>14} {:>14}", "series", "last x", "last y");
+        for (name, pts) in &self.series {
+            if let Some((x, y)) = pts.last() {
+                println!("{name:<34} {x:>14.4} {y:>14.4}");
+            }
+        }
+        for n in &self.notes {
+            println!("note: {n}");
+        }
+        if let Err(e) = self.save_csv() {
+            println!("warn: csv save failed: {e}");
+        }
+    }
+
+    pub fn slug(&self) -> String {
+        self.title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect()
+    }
+
+    pub fn save_csv(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_results")?;
+        let path = format!("bench_results/{}.csv", self.slug());
+        let mut out = String::from("series,x,y\n");
+        for (name, pts) in &self.series {
+            for (x, y) in pts {
+                out.push_str(&format!("{name},{x},{y}\n"));
+            }
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_times() {
+        let b = Bencher::new(1, 5);
+        let m = b.measure("sleep", || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(m.median_s >= 0.002);
+        assert!(m.median_s < 0.2);
+        assert!(m.p10_s <= m.p90_s);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-5).ends_with("µs"));
+        assert!(fmt_duration(2.5e-2).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn report_slug_and_csv() {
+        let mut r = Report::new("Fig 1: Loss / Curves", "step", "loss");
+        r.add_series("soap", vec![(0.0, 5.0), (1.0, 4.0)]);
+        assert_eq!(r.slug(), "fig_1__loss___curves");
+        // CSV write into a temp cwd-relative dir; just exercise the path.
+        r.save_csv().unwrap();
+        let body = std::fs::read_to_string("bench_results/fig_1__loss___curves.csv").unwrap();
+        assert!(body.contains("soap,0,5"));
+    }
+}

@@ -1,0 +1,270 @@
+//! Declarative command-line parsing (clap stand-in).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options with
+//! defaults, and auto-generated `--help`. Typed accessors parse on demand and
+//! report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> anyhow::Result<String> {
+        self.get(name)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{name}={raw}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of T.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow::anyhow!("--{name} item '{s}': {e}"))
+            })
+            .collect()
+    }
+}
+
+/// Top-level application: a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<22} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<command> --help` for per-command options.\n");
+        s
+    }
+
+    pub fn command_usage(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, c.name, c.about);
+        for o in &c.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = o.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{:<24} {}{}\n", format!("{}{}", o.name, kind), o.help, ""));
+        }
+        s
+    }
+
+    /// Parse `argv[1..]`. Returns `Err(msg)` where `msg` is the full usage
+    /// text for help requests or a diagnostic for bad input.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(self.usage());
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_usage(cmd));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} for '{cmd_name}'\n\n{}", self.command_usage(cmd)))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    flags.insert(key.to_string(), true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                        }
+                    };
+                    values.insert(key.to_string(), v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // Required options present?
+        for o in &cmd.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(format!("missing required option --{}\n\n{}", o.name, self.command_usage(cmd)));
+            }
+        }
+
+        Ok(Args { command: cmd_name.clone(), values, flags, positional })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("soap-lab", "test").command(
+            Command::new("train", "train a model")
+                .opt("steps", "100", "number of steps")
+                .opt("optimizer", "soap", "optimizer name")
+                .req("out", "output path")
+                .flag("verbose", "log more"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let a = app()
+            .parse(&argv(&["train", "--steps", "250", "--out=/tmp/x", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.parse::<u32>("steps").unwrap(), 250);
+        assert_eq!(a.get("optimizer"), Some("soap"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(app().parse(&argv(&["train"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(app().parse(&argv(&["train", "--out", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(app().parse(&argv(&["zzz"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = app()
+            .parse(&argv(&["train", "--out", "x", "--steps", "1,2,4"]))
+            .unwrap();
+        // `steps` reused as a list for this test.
+        assert_eq!(a.list::<u32>("steps").unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = app().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("COMMANDS"));
+        let e = app().parse(&argv(&["train", "--help"])).unwrap_err();
+        assert!(e.contains("OPTIONS"));
+    }
+}

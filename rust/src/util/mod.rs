@@ -1,0 +1,15 @@
+//! Hand-rolled substrate modules (DESIGN.md §2).
+//!
+//! The build environment is offline; its cargo registry cache holds only the
+//! `xla` crate's dependency closure, so the roles normally filled by `rand`,
+//! `serde_json`, `clap`, `tokio`, `criterion`, and `proptest` are covered by
+//! these small, tested modules.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

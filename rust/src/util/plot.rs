@@ -1,0 +1,104 @@
+//! ASCII line plots for bench reports (loss curves, sweeps) so every figure
+//! regenerator prints a visual directly in the terminal, alongside its CSV.
+
+/// Render multiple named series into a `width`×`height` character canvas.
+/// Each series gets its own glyph; a legend and axis ranges are appended.
+pub fn ascii_plot(
+    series: &[(String, Vec<(f64, f64)>)],
+    xlabel: &str,
+    ylabel: &str,
+    width: usize,
+    height: usize,
+) -> String {
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '~', '^'];
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, p)| p.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)".to_string();
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, (_, p)) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in p {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = g;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("  {ylabel}: [{ymin:.4} .. {ymax:.4}]\n"));
+    for row in &canvas {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   {xlabel}: [{xmin:.4} .. {xmax:.4}]\n"));
+    out.push_str("   legend: ");
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", GLYPHS[si % GLYPHS.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_all_series_glyphs() {
+        let s = vec![
+            ("a".to_string(), vec![(0.0, 0.0), (1.0, 1.0)]),
+            ("b".to_string(), vec![(0.0, 1.0), (1.0, 0.0)]),
+        ];
+        let p = ascii_plot(&s, "x", "y", 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("legend"));
+    }
+
+    #[test]
+    fn empty_is_graceful() {
+        assert_eq!(ascii_plot(&[], "x", "y", 10, 5), "(no data)");
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![("c".to_string(), vec![(0.0, 2.0), (1.0, 2.0)])];
+        let p = ascii_plot(&s, "x", "y", 20, 5);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let s = vec![("n".to_string(), vec![(0.0, f64::NAN), (1.0, 1.0)])];
+        let p = ascii_plot(&s, "x", "y", 20, 5);
+        assert!(p.contains('*'));
+    }
+}

@@ -1,0 +1,197 @@
+//! Fixed-size worker thread pool (tokio stand-in for our workloads).
+//!
+//! The coordinator's layer-sharded optimizer updates are CPU-bound, so a
+//! plain scoped thread pool with an mpsc work queue is the right substrate:
+//! `scope_execute` fans a set of closures out to the workers and joins them,
+//! propagating panics. Work items are `FnOnce` boxed closures; results flow
+//! back through a channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming from a shared queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    rx_shared: Arc<Mutex<Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Msg>();
+        let rx_shared = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for id in 0..size {
+            let rx = Arc::clone(&rx_shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("soap-worker-{id}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx, rx_shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a single fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run `jobs` across the pool and collect their results **in input
+    /// order**; blocks until all complete. Panics in jobs are surfaced.
+    pub fn scope_execute<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (rtx, rrx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, res) = rrx.recv().expect("worker result");
+            match res {
+                Ok(v) => slots[i] = Some(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn par_map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(I) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let jobs: Vec<_> = items
+            .into_iter()
+            .map(|it| {
+                let f = Arc::clone(&f);
+                move || f(it)
+            })
+            .collect();
+        self.scope_execute(jobs)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker stuck on a disconnected channel by dropping our
+        // sender reference implicitly at the end of scope.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = &self.rx_shared;
+    }
+}
+
+/// A monotonically increasing counter shared across threads (metrics helper).
+#[derive(Default)]
+pub struct SharedCounter(AtomicUsize);
+
+impl SharedCounter {
+    pub fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+    pub fn add(&self, n: usize) -> usize {
+        self.0.fetch_add(n, Ordering::Relaxed)
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map((0..100).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn scope_execute_runs_all() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(SharedCounter::new());
+        let jobs: Vec<_> = (0..50)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.add(1);
+                    1usize
+                }
+            })
+            .collect();
+        let results = pool.scope_execute(jobs);
+        assert_eq!(results.len(), 50);
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.scope_execute(vec![
+            Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+            Box::new(|| panic!("boom")),
+        ]);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        drop(pool); // must not deadlock
+    }
+
+    #[test]
+    fn work_actually_parallel() {
+        // 4 workers × 50 ms sleep should take well under 4×50 ms total.
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.par_map(vec![(); 4], |_| {
+            std::thread::sleep(std::time::Duration::from_millis(50))
+        });
+        assert!(t0.elapsed() < std::time::Duration::from_millis(190));
+    }
+}

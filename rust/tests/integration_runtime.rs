@@ -1,0 +1,205 @@
+//! Cross-language integration: the HLO artifacts (jax/Pallas-lowered,
+//! PJRT-executed) must agree with the native Rust implementations.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts/ is absent so
+//! `cargo test` works in a fresh checkout).
+
+use soap_lab::linalg::{power_iter_refresh, Matrix};
+use soap_lab::optim::{Hyper, LayerOptimizer};
+use soap_lab::runtime::{
+    literal_from_matrix, literal_from_tokens, literal_scalar, matrix_from_literal,
+    scalar_from_literal, Engine,
+};
+use soap_lab::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime integration tests: run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine"))
+}
+
+fn randm(rng: &mut Rng, m: usize, n: usize) -> Matrix {
+    Matrix::randn(rng, m, n, 1.0)
+}
+
+#[test]
+fn adamw_artifact_matches_native() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(100);
+    let (m, n) = (64, 64);
+    let w0 = randm(&mut rng, m, n);
+    let g = randm(&mut rng, m, n);
+
+    // Native step from zero state at t = 1.
+    let h = Hyper::default();
+    let mut native = soap_lab::optim::AdamW::new(m, n, h);
+    let mut w_native = w0.clone();
+    native.update(&mut w_native, &g, 1, 0.01);
+
+    // Artifact step.
+    let out = eng
+        .run(
+            "adamw_update_64x64",
+            &[
+                literal_from_matrix(&w0).unwrap(),
+                literal_from_matrix(&Matrix::zeros(m, n)).unwrap(),
+                literal_from_matrix(&Matrix::zeros(m, n)).unwrap(),
+                literal_from_matrix(&g).unwrap(),
+                literal_scalar(1.0),
+                literal_scalar(0.01),
+            ],
+        )
+        .unwrap();
+    let w_art = matrix_from_literal(&out[0], m, n).unwrap();
+    let diff = w_art.max_abs_diff(&w_native);
+    assert!(diff < 1e-5, "adamw artifact vs native: {diff}");
+}
+
+#[test]
+fn soap_artifact_matches_native_math() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(101);
+    let (m, n) = (64, 64);
+    let w0 = randm(&mut rng, m, n);
+    let g = randm(&mut rng, m, n);
+    let m0 = randm(&mut rng, m, n).scale(0.1);
+    let v0 = randm(&mut rng, m, n).map(|x| x.abs());
+    let l0 = Matrix::rand_psd(&mut rng, m);
+    let r0 = Matrix::rand_psd(&mut rng, n);
+    let (ql, _) = soap_lab::linalg::qr_positive(&randm(&mut rng, m, m));
+    let (qr, _) = soap_lab::linalg::qr_positive(&randm(&mut rng, n, n));
+    let t = 4.0f32;
+    let lr = 0.02f32;
+    let h = Hyper::default();
+
+    // Native mirror of Algorithm 3 (same math as optim::Soap::update).
+    let m_new = {
+        let mut mm = m0.clone();
+        mm.ema_inplace(&g, h.beta1);
+        mm
+    };
+    let g_rot = ql.matmul_tn(&g).matmul(&qr);
+    let m_rot = ql.matmul_tn(&m_new).matmul(&qr);
+    let bc1 = 1.0 - h.beta1.powi(t as i32);
+    let bc2 = 1.0 - h.beta2.powi(t as i32);
+    let mut v_new = v0.clone();
+    v_new.ema_inplace(&g_rot.hadamard(&g_rot), h.beta2);
+    let n_rot = m_rot
+        .scale(1.0 / bc1)
+        .zip(&v_new, |mi, vi| mi / ((vi / bc2).max(0.0).sqrt() + h.eps));
+    let n_dir = ql.matmul(&n_rot).matmul_nt(&qr);
+    let mut w_native = w0.clone();
+    w_native.axpy_inplace(-lr, &n_dir);
+    w_native.scale_inplace(1.0 - lr * h.weight_decay);
+    let mut l_new = l0.clone();
+    l_new.ema_inplace(&g.matmul_nt(&g), h.shampoo_beta);
+
+    let out = eng
+        .run(
+            "soap_update_64x64",
+            &[
+                literal_from_matrix(&w0).unwrap(),
+                literal_from_matrix(&m0).unwrap(),
+                literal_from_matrix(&v0).unwrap(),
+                literal_from_matrix(&l0).unwrap(),
+                literal_from_matrix(&r0).unwrap(),
+                literal_from_matrix(&ql).unwrap(),
+                literal_from_matrix(&qr).unwrap(),
+                literal_from_matrix(&g).unwrap(),
+                literal_scalar(t),
+                literal_scalar(lr),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 5);
+    let w_art = matrix_from_literal(&out[0], m, n).unwrap();
+    let m_art = matrix_from_literal(&out[1], m, n).unwrap();
+    let v_art = matrix_from_literal(&out[2], m, n).unwrap();
+    let l_art = matrix_from_literal(&out[3], m, m).unwrap();
+    assert!(w_art.max_abs_diff(&w_native) < 1e-4, "w: {}", w_art.max_abs_diff(&w_native));
+    assert!(m_art.max_abs_diff(&m_new) < 1e-5);
+    assert!(v_art.max_abs_diff(&v_new) < 1e-4);
+    assert!(l_art.max_abs_diff(&l_new) < 1e-3);
+}
+
+#[test]
+fn soap_refresh_artifact_matches_native_qr() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(102);
+    let p = Matrix::rand_psd(&mut rng, 64);
+    let (q0, _) = soap_lab::linalg::qr_positive(&randm(&mut rng, 64, 64));
+
+    let native = power_iter_refresh(&p, &q0);
+    let out = eng
+        .run(
+            "soap_refresh_64",
+            &[literal_from_matrix(&p).unwrap(), literal_from_matrix(&q0).unwrap()],
+        )
+        .unwrap();
+    let q_art = matrix_from_literal(&out[0], 64, 64).unwrap();
+
+    // Both must be orthogonal and equal up to fp noise (same sign fix).
+    let qtq = q_art.matmul_tn(&q_art);
+    assert!(qtq.max_abs_diff(&Matrix::eye(64)) < 1e-3);
+    assert!(
+        q_art.max_abs_diff(&native) < 5e-2,
+        "refresh mismatch: {}",
+        q_art.max_abs_diff(&native)
+    );
+}
+
+fn init_inputs(eng: &Engine, cfg_name: &str, seed: u64) -> (Vec<xla::Literal>, usize) {
+    let cfg = eng.manifest.config(cfg_name).expect("config").clone();
+    let mut rng = Rng::new(seed);
+    let mut inputs = Vec::new();
+    for (name, r, c) in &cfg.params {
+        let m = if name.contains("ln") {
+            Matrix::from_fn(*r, *c, |_, _| 1.0)
+        } else {
+            Matrix::randn(&mut rng, *r, *c, 1.0 / (*r as f32).sqrt())
+        };
+        inputs.push(literal_from_matrix(&m).unwrap());
+    }
+    let ntok = cfg.batch * cfg.seq;
+    let tokens: Vec<u32> = (0..ntok).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+    let targets: Vec<u32> = (0..ntok).map(|_| rng.below(cfg.vocab as u64) as u32).collect();
+    inputs.push(literal_from_tokens(&tokens, cfg.batch, cfg.seq).unwrap());
+    inputs.push(literal_from_tokens(&targets, cfg.batch, cfg.seq).unwrap());
+    (inputs, cfg.params.len())
+}
+
+#[test]
+fn lm_grads_artifact_runs_and_losses_sane() {
+    let Some(eng) = engine() else { return };
+    let cfg = eng.manifest.config("nano").expect("nano").clone();
+    let (inputs, nparams) = init_inputs(&eng, "nano", 103);
+
+    let out = eng.run("lm_grads_nano", &inputs).unwrap();
+    assert_eq!(out.len(), 1 + nparams);
+    let loss = scalar_from_literal(&out[0]).unwrap();
+    let expect = (cfg.vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 1.0,
+        "init loss {loss} should be near ln V = {expect}"
+    );
+    // Gradients: finite, right shapes, not all zero.
+    let mut total = 0.0f32;
+    for (i, (_, r, c)) in cfg.params.iter().enumerate() {
+        let gm = matrix_from_literal(&out[1 + i], *r, *c).unwrap();
+        assert!(gm.data.iter().all(|x| x.is_finite()));
+        total += gm.frob_norm();
+    }
+    assert!(total > 0.0);
+}
+
+#[test]
+fn lm_loss_matches_lm_grads_loss() {
+    let Some(eng) = engine() else { return };
+    let (inputs, _) = init_inputs(&eng, "nano", 104);
+    let l1 = scalar_from_literal(&eng.run("lm_loss_nano", &inputs).unwrap()[0]).unwrap();
+    let l2 = scalar_from_literal(&eng.run("lm_grads_nano", &inputs).unwrap()[0]).unwrap();
+    assert!((l1 - l2).abs() < 1e-5, "{l1} vs {l2}");
+}

@@ -1,0 +1,201 @@
+//! Property tests over the linear-algebra substrate (proptest stand-in:
+//! `soap_lab::util::prop`). These are the invariants the optimizer stack
+//! leans on; shapes and contents are randomized per case.
+
+use soap_lab::linalg::{
+    eigh, inv_root_eigh, power_iter_refresh, qr, qr_positive, roots::root_eigh, Matrix,
+};
+use soap_lab::util::prop::{self, ensure};
+
+#[test]
+fn prop_qr_orthogonal_and_reconstructs() {
+    prop::check("qr: QᵀQ=I and QR=A", 40, |rng| {
+        let n = 1 + rng.below(24) as usize;
+        let a = Matrix::randn(rng, n, n, 1.0);
+        let (q, r) = qr(&a);
+        let qtq = q.matmul_tn(&q);
+        ensure(
+            qtq.max_abs_diff(&Matrix::eye(n)) < 2e-3,
+            format!("QᵀQ err {}", qtq.max_abs_diff(&Matrix::eye(n))),
+        )?;
+        let rec = q.matmul(&r);
+        ensure(
+            rec.max_abs_diff(&a) < 2e-3 * (1.0 + a.max_abs()),
+            format!("QR err {}", rec.max_abs_diff(&a)),
+        )
+    });
+}
+
+#[test]
+fn prop_qr_positive_unique_diag() {
+    prop::check("qr_positive: diag(R) ≥ 0", 40, |rng| {
+        let n = 1 + rng.below(16) as usize;
+        let a = Matrix::randn(rng, n, n, 1.0);
+        let (_, r) = qr_positive(&a);
+        for j in 0..n {
+            ensure(r.at(j, j) >= -1e-5, format!("R[{j}][{j}] = {}", r.at(j, j)))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigh_reconstructs_psd() {
+    prop::check("eigh: V diag(w) Vᵀ = A, w sorted desc", 30, |rng| {
+        let n = 2 + rng.below(48) as usize;
+        let a = Matrix::rand_psd(rng, n);
+        let (w, v) = eigh(&a);
+        for k in 1..n {
+            ensure(w[k - 1] >= w[k] - 1e-4, "eigvals not descending")?;
+        }
+        let rec = soap_lab::linalg::eigh::reconstruct(&w, &v);
+        ensure(
+            rec.max_abs_diff(&a) < 5e-3 * (1.0 + a.max_abs()),
+            format!("reconstruction err {}", rec.max_abs_diff(&a)),
+        )?;
+        let vtv = v.matmul_tn(&v);
+        ensure(
+            vtv.max_abs_diff(&Matrix::eye(n)) < 2e-3,
+            format!("VᵀV err {}", vtv.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_inv_root_inverts() {
+    prop::check("inv_root: (A^{-1/p})^p · A ≈ I (well-conditioned)", 25, |rng| {
+        let n = 2 + rng.below(12) as usize;
+        // Well-conditioned PSD: eigenvalues in [0.5, ~2.5].
+        let mut a = Matrix::rand_psd(rng, n);
+        let tr = (a.trace() / n as f32).max(1e-6);
+        a.scale_inplace(1.0 / tr);
+        for i in 0..n {
+            let v = a.at(i, i) + 0.5;
+            a.set(i, i, v);
+        }
+        let p = [2.0f32, 4.0][rng.below(2) as usize];
+        let r = inv_root_eigh(&a, p, 0.0);
+        let mut acc = Matrix::eye(n);
+        for _ in 0..p as usize {
+            acc = acc.matmul(&r);
+        }
+        let check = acc.matmul(&a);
+        ensure(
+            check.max_abs_diff(&Matrix::eye(n)) < 0.05,
+            format!("p={p} err {}", check.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_root_and_inv_root_cancel() {
+    prop::check("A^{1/p} · A^{-1/p} ≈ I", 25, |rng| {
+        let n = 2 + rng.below(10) as usize;
+        let mut a = Matrix::rand_psd(rng, n);
+        for i in 0..n {
+            let v = a.at(i, i) + 0.3;
+            a.set(i, i, v);
+        }
+        let up = root_eigh(&a, 2.0, 0.0);
+        let dn = inv_root_eigh(&a, 2.0, 0.0);
+        let check = up.matmul(&dn);
+        ensure(
+            check.max_abs_diff(&Matrix::eye(n)) < 0.05,
+            format!("err {}", check.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_power_iter_preserves_orthogonality() {
+    prop::check("Alg 4 refresh: Q stays orthogonal under iteration", 25, |rng| {
+        let n = 2 + rng.below(24) as usize;
+        let p = Matrix::rand_psd(rng, n);
+        let (mut q, _) = qr_positive(&Matrix::randn(rng, n, n, 1.0));
+        for _ in 0..5 {
+            q = power_iter_refresh(&p, &q);
+        }
+        let qtq = q.matmul_tn(&q);
+        ensure(
+            qtq.max_abs_diff(&Matrix::eye(n)) < 5e-3,
+            format!("QᵀQ err {}", qtq.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_power_iter_monotone_diagonalization() {
+    prop::check("Alg 4 refresh reduces off-diagonal energy of QᵀPQ", 20, |rng| {
+        let n = 3 + rng.below(12) as usize;
+        // Distinct spectrum so convergence is strict.
+        let (v, _) = qr_positive(&Matrix::randn(rng, n, n, 1.0));
+        let d = Matrix::from_fn(n, n, |i, j| if i == j { (n - i) as f32 + 0.1 } else { 0.0 });
+        let p = v.matmul(&d).matmul_nt(&v);
+        let (q0, _) = qr_positive(&Matrix::randn(rng, n, n, 1.0));
+
+        let off = |q: &Matrix| {
+            let a = q.matmul_tn(&p.matmul(q));
+            let mut s = 0.0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        s += (a.at(i, j) as f64).powi(2);
+                    }
+                }
+            }
+            s
+        };
+        let mut q = q0.clone();
+        for _ in 0..10 {
+            q = power_iter_refresh(&p, &q);
+        }
+        ensure(
+            off(&q) <= off(&q0) + 1e-9,
+            format!("off-diag grew: {} → {}", off(&q0), off(&q)),
+        )
+    });
+}
+
+#[test]
+fn prop_gemm_matches_naive() {
+    prop::check("gemm == naive f64 reference", 30, |rng| {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(40) as usize;
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let c = a.matmul(&b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a.at(i, p) as f64 * b.at(p, j) as f64;
+                }
+                let got = c.at(i, j) as f64;
+                if (got - acc).abs() > 1e-3 * (1.0 + acc.abs()) {
+                    return Err(format!("({i},{j}): {got} vs {acc}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_contractions_consistent() {
+    prop::check("matmul_tn/nt agree with explicit transpose", 30, |rng| {
+        let m = 1 + rng.below(20) as usize;
+        let k = 1 + rng.below(20) as usize;
+        let n = 1 + rng.below(20) as usize;
+        let a = Matrix::randn(rng, k, m, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let tn = a.matmul_tn(&b);
+        let want = a.t().matmul(&b);
+        ensure(tn.max_abs_diff(&want) < 1e-3, "tn mismatch")?;
+        let c = Matrix::randn(rng, m, k, 1.0);
+        let d = Matrix::randn(rng, n, k, 1.0);
+        let nt = c.matmul_nt(&d);
+        let want = c.matmul(&d.t());
+        ensure(nt.max_abs_diff(&want) < 1e-3, "nt mismatch")
+    });
+}

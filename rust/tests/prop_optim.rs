@@ -1,0 +1,192 @@
+//! Property tests over the optimizer family — the paper's structural claims
+//! as invariants: Claim 1 equivalence, SOAP(Q=I) ≡ AdamW, grafting norm
+//! equality, refresh staleness semantics, descent on random quadratics.
+
+use soap_lab::linalg::Matrix;
+use soap_lab::optim::idealized::{claim1_row_identity, idealized_adafactor_dir, idealized_shampoo_dir};
+use soap_lab::optim::{AdamW, Hyper, LayerOptimizer, OptKind, Soap};
+use soap_lab::util::prop::{self, ensure};
+
+#[test]
+fn prop_claim1_equivalence() {
+    prop::check("Claim 1: Alg1 ≡ Alg2 on random datasets", 20, |rng| {
+        let m = 2 + rng.below(8) as usize;
+        let n = 2 + rng.below(8) as usize;
+        let k = (m.max(n)) * 2 + rng.below(8) as usize;
+        let grads: Vec<Matrix> = (0..k).map(|_| Matrix::randn(rng, m, n, 1.0)).collect();
+        let g = grads[rng.below(k as u64) as usize].clone();
+        let d1 = idealized_shampoo_dir(&grads, &g);
+        let d2 = idealized_adafactor_dir(&grads, &g, 0.0);
+        let rel = d1.max_abs_diff(&d2) / d1.max_abs().max(1e-9);
+        ensure(rel < 0.05, format!("{m}x{n} k={k}: rel {rel}"))
+    });
+}
+
+#[test]
+fn prop_claim1_row_identity() {
+    prop::check("Claim 1 proof step: A_i = λ_i", 20, |rng| {
+        let m = 2 + rng.below(8) as usize;
+        let n = 2 + rng.below(8) as usize;
+        let grads: Vec<Matrix> = (0..(2 * m + 4)).map(|_| Matrix::randn(rng, m, n, 1.0)).collect();
+        let (a, lambda) = claim1_row_identity(&grads);
+        for (x, y) in a.iter().zip(&lambda) {
+            ensure(
+                (x - y).abs() < 3e-2 * (1.0 + y.abs()),
+                format!("A {x} vs λ {y}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_soap_identity_basis_is_adamw() {
+    prop::check("SOAP with Q=I ≡ AdamW exactly", 15, |rng| {
+        let m = 2 + rng.below(8) as usize;
+        let n = 2 + rng.below(8) as usize;
+        let h = Hyper { max_precond_dim: 0, weight_decay: 0.0, ..Hyper::default() };
+        let mut soap = Soap::new(m, n, h.clone());
+        let mut adam = AdamW::new(m, n, h);
+        let mut ws = Matrix::randn(rng, m, n, 1.0);
+        let mut wa = ws.clone();
+        for t in 1..=12 {
+            let g = Matrix::randn(rng, m, n, 1.0);
+            soap.update(&mut ws, &g, t, 0.01);
+            adam.update(&mut wa, &g, t, 0.01);
+        }
+        ensure(
+            ws.max_abs_diff(&wa) < 5e-5,
+            format!("diverged by {}", ws.max_abs_diff(&wa)),
+        )
+    });
+}
+
+#[test]
+fn prop_all_optimizers_descend_on_quadratic() {
+    prop::check("every optimizer reduces a random quadratic", 10, |rng| {
+        let m = 2 + rng.below(6) as usize;
+        let n = 2 + rng.below(6) as usize;
+        let target = Matrix::randn(rng, m, n, 1.0);
+        for kind in [
+            OptKind::AdamW,
+            OptKind::Adafactor,
+            OptKind::Shampoo,
+            OptKind::Soap,
+            OptKind::Galore,
+        ] {
+            let h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+            let mut opt = kind.build(m, n, &h);
+            let mut w = Matrix::zeros(m, n);
+            let loss = |w: &Matrix| {
+                let d = w.sub(&target);
+                (d.frob_norm() as f64).powi(2)
+            };
+            let l0 = loss(&w);
+            for t in 1..=300 {
+                let g = w.sub(&target).scale(2.0);
+                opt.update(&mut w, &g, t, 0.02);
+            }
+            let l1 = loss(&w);
+            ensure(
+                l1 < 0.5 * l0,
+                format!("{} failed to descend: {l0} → {l1} on {m}x{n}", kind.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_optimizers_finite_under_extreme_gradients() {
+    prop::check("no NaN/Inf under huge/tiny/zero gradients", 10, |rng| {
+        let m = 2 + rng.below(5) as usize;
+        let n = 2 + rng.below(5) as usize;
+        let scales = [0.0f32, 1e-20, 1e20];
+        for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
+            let h = Hyper { precond_freq: 2, ..Hyper::default() };
+            let mut opt = kind.build(m, n, &h);
+            let mut w = Matrix::randn(rng, m, n, 1.0);
+            for (t, &s) in scales.iter().enumerate() {
+                let g = Matrix::randn(rng, m, n, 1.0).scale(s);
+                opt.update(&mut w, &g, t as u64 + 1, 0.01);
+                ensure(
+                    w.data.iter().all(|x| x.is_finite()),
+                    format!("{} produced non-finite weights at |g|~{s}", kind.name()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_roundtrip_all_optimizers() {
+    prop::check("export/import state preserves the trajectory", 8, |rng| {
+        let m = 2 + rng.below(6) as usize;
+        let n = 2 + rng.below(6) as usize;
+        for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
+            let h = Hyper { precond_freq: 2, ..Hyper::default() };
+            let mut a = kind.build(m, n, &h);
+            let mut wa = Matrix::randn(rng, m, n, 1.0);
+            let pre: Vec<Matrix> = (0..3).map(|_| Matrix::randn(rng, m, n, 1.0)).collect();
+            let post: Vec<Matrix> = (0..3).map(|_| Matrix::randn(rng, m, n, 1.0)).collect();
+            for (t, g) in pre.iter().enumerate() {
+                a.update(&mut wa, g, t as u64 + 1, 0.01);
+            }
+            // Clone through the checkpoint surface.
+            let mut b = kind.build(m, n, &h);
+            b.import_state(a.export_state())
+                .map_err(|e| format!("{}: {e}", kind.name()))?;
+            let mut wb = wa.clone();
+            for (t, g) in post.iter().enumerate() {
+                a.update(&mut wa, g, t as u64 + 4, 0.01);
+                b.update(&mut wb, g, t as u64 + 4, 0.01);
+            }
+            ensure(
+                wa.max_abs_diff(&wb) < 1e-5,
+                format!("{} drifted {}", kind.name(), wa.max_abs_diff(&wb)),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grafting_matches_adamw_norm() {
+    prop::check("Shampoo grafting: step norm equals AdamW's", 15, |rng| {
+        let m = 2 + rng.below(8) as usize;
+        let n = 2 + rng.below(8) as usize;
+        let h = Hyper { weight_decay: 0.0, precond_freq: 1, ..Hyper::default() };
+        let mut sh = OptKind::Shampoo.build(m, n, &h);
+        let mut ad = OptKind::AdamW.build(m, n, &h);
+        let g = Matrix::randn(rng, m, n, 1.0);
+        let mut ws = Matrix::zeros(m, n);
+        let mut wa = Matrix::zeros(m, n);
+        sh.update(&mut ws, &g, 1, 1.0);
+        ad.update(&mut wa, &g, 1, 1.0);
+        let (ns, na) = (ws.frob_norm(), wa.frob_norm());
+        ensure(
+            (ns - na).abs() / na.max(1e-9) < 0.05,
+            format!("norms {ns} vs {na}"),
+        )
+    });
+}
+
+#[test]
+fn prop_schedule_bounded_and_floored() {
+    prop::check("warmup-cosine stays within [floor, peak]", 30, |rng| {
+        let lr = 10f32.powf(-(1.0 + rng.uniform() as f32 * 3.0));
+        let total = 50 + rng.below(5000);
+        let warmup = rng.below(total / 2 + 1);
+        let s = soap_lab::optim::Schedule::paper(lr, warmup, total);
+        for _ in 0..50 {
+            let t = rng.below(total * 2);
+            let v = s.lr_at(t);
+            ensure(
+                v >= 0.1 * lr - 1e-9 && v <= lr + 1e-9,
+                format!("lr_at({t}) = {v} outside [0.1·{lr}, {lr}]"),
+            )?;
+        }
+        Ok(())
+    });
+}
