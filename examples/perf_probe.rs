@@ -1,7 +1,12 @@
 //! §Perf probe: raw substrate timings (gemm, cold/warm eigh, QR) used for
-//! the EXPERIMENTS.md §Perf iteration log.
+//! the EXPERIMENTS.md §Perf iteration log, plus a trainer-level refresh
+//! breakdown (inline vs async) read entirely from `TrainLog` — no reaching
+//! into optimizer internals.
 fn main() {
+    use soap_lab::coordinator::{Trainer, TrainerConfig};
     use soap_lab::linalg::{eigh, eigh_warm, qr_positive, Matrix};
+    use soap_lab::model::NplmConfig;
+    use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
     use soap_lab::util::rng::Rng;
     let mut rng = Rng::new(1);
     for n in [128usize, 256, 512] {
@@ -29,5 +34,42 @@ fn main() {
         let _ = qr_positive(&p2);
         let qr = t0.elapsed().as_secs_f64() * 1e3;
         println!("n={n}: eigh cold {cold:.1} ms, warm {warm:.1} ms, qr {qr:.1} ms");
+    }
+
+    // Trainer-level refresh accounting straight off the TrainLog — the
+    // numbers the Fig 7 benches consume (refresh_seconds_total/refresh_frac)
+    // plus the async-mode split (bg_refresh + staleness).
+    println!("\n== SOAP refresh accounting (native NPLM, f=10, 120 steps) ==");
+    for mode in [RefreshMode::Inline, RefreshMode::Async] {
+        let cfg = TrainerConfig {
+            opt: OptKind::Soap,
+            hyper: Hyper::default().with_refresh_mode(mode),
+            schedule: Schedule::Constant { lr: 0.01 },
+            steps: 120,
+            seed: 3,
+            grad_accum: 1,
+            workers: 4,
+            log_every: 0,
+            vocab: 128,
+            zipf_alpha: 1.2,
+        };
+        let mut t = Trainer::new_native(
+            NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 },
+            cfg,
+            32,
+            16,
+        );
+        let log = t.run().expect("probe run");
+        t.wait_refresh_idle(); // fold in refreshes still in flight at the end
+        println!(
+            "{:<7} hot-path refresh {:>7.1} ms ({:>4.1}% of step)  background {:>7.1} ms  \
+             mean staleness {:>4.1} steps  p99 step {:>6.2} ms",
+            mode.name(),
+            1e3 * log.refresh_seconds_total(),
+            100.0 * log.refresh_frac(),
+            1e3 * t.async_refresh_seconds(),
+            log.mean_staleness(),
+            1e3 * log.step_time_quantile(0.99),
+        );
     }
 }

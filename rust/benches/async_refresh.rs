@@ -1,0 +1,154 @@
+//! ASYNC-REFRESH: inline vs background eigenbasis refresh on the native
+//! NPLM workload (artifact-free, so it runs on any checkout).
+//!
+//! The claim under test (ISSUE 1 acceptance): with `RefreshMode::Async` at
+//! f = 10, the eigenbasis refresh no longer appears in hot-path step timing,
+//! p99 step latency drops vs `Inline` at equal f, and final loss matches
+//! within 1%. Emits the human-readable comparison plus
+//! `bench_results/async_refresh.json` for the record.
+//!
+//! Env knobs: `SOAP_BENCH_STEPS` (default 500), `SOAP_ASYNC_BENCH_F`
+//! (default 10).
+
+use soap_lab::coordinator::{Trainer, TrainerConfig, TrainLog};
+use soap_lab::experiments::harness::bench_steps;
+use soap_lab::model::NplmConfig;
+use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use soap_lab::util::bench::{fmt_duration, Report};
+use soap_lab::util::json::Json;
+
+struct Arm {
+    log: TrainLog,
+    bg_secs: f64,
+    staleness: f64,
+}
+
+fn run(mode: RefreshMode, steps: u64, freq: u64) -> Arm {
+    let hyper = Hyper { precond_freq: freq, ..Hyper::default() }.with_refresh_mode(mode);
+    let cfg = TrainerConfig {
+        opt: OptKind::Soap,
+        hyper,
+        schedule: Schedule::Constant { lr: 0.01 },
+        steps,
+        seed: 7,
+        grad_accum: 1,
+        workers: 4,
+        log_every: 0,
+        vocab: 128,
+        zipf_alpha: 1.2,
+    };
+    // Large-ish NPLM so the refresh actually costs something: layer shapes
+    // (128×48), (192×96), (96×128) ⇒ eigenbases up to 192×192.
+    let nplm = NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 };
+    let mut trainer = Trainer::new_native(nplm, cfg, 32, 16);
+    let log = trainer.run().expect("bench run");
+    if let Some(opt) = trainer.native_optimizer() {
+        opt.wait_refresh_idle();
+    }
+    Arm {
+        bg_secs: trainer.async_refresh_seconds(),
+        staleness: log.mean_staleness(),
+        log,
+    }
+}
+
+fn arm_json(arm: &Arm) -> Json {
+    Json::obj(vec![
+        ("final_loss", Json::num(arm.log.final_loss() as f64)),
+        ("tail_loss", Json::num(arm.log.tail_loss(20) as f64)),
+        ("tokens_per_second", Json::num(arm.log.tokens_per_second())),
+        ("p50_step_s", Json::num(arm.log.step_time_quantile(0.50))),
+        ("p99_step_s", Json::num(arm.log.step_time_quantile(0.99))),
+        ("hot_refresh_s", Json::num(arm.log.refresh_seconds_total())),
+        ("bg_refresh_s", Json::num(arm.bg_secs)),
+        ("refresh_frac", Json::num(arm.log.refresh_frac())),
+        ("mean_staleness_steps", Json::num(arm.staleness)),
+    ])
+}
+
+fn main() {
+    let steps = bench_steps(500);
+    let freq: u64 = std::env::var("SOAP_ASYNC_BENCH_F")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    println!("async_refresh: native NPLM, steps={steps} f={freq}");
+
+    let inline = run(RefreshMode::Inline, steps, freq);
+    let asynced = run(RefreshMode::Async, steps, freq);
+
+    let row = |name: &str, a: &Arm| {
+        println!(
+            "{name:<8} p50 {:>9}  p99 {:>9}  {:>8.0} tok/s  hot-refresh {:>9} ({:>4.1}%)  bg {:>9}  stale {:>4.1}  tail loss {:.4}",
+            fmt_duration(a.log.step_time_quantile(0.50)),
+            fmt_duration(a.log.step_time_quantile(0.99)),
+            a.log.tokens_per_second(),
+            fmt_duration(a.log.refresh_seconds_total()),
+            100.0 * a.log.refresh_frac(),
+            fmt_duration(a.bg_secs),
+            a.staleness,
+            a.log.tail_loss(20),
+        );
+    };
+    row("inline", &inline);
+    row("async", &asynced);
+
+    let p99_inline = inline.log.step_time_quantile(0.99);
+    let p99_async = asynced.log.step_time_quantile(0.99);
+    let loss_gap = (asynced.log.tail_loss(20) - inline.log.tail_loss(20)).abs()
+        / inline.log.tail_loss(20).abs().max(1e-9);
+    let hot_refresh_gone = asynced.log.refresh_frac() < 0.1 * inline.log.refresh_frac().max(1e-12)
+        || asynced.log.refresh_seconds_total() < 0.05 * inline.log.refresh_seconds_total().max(1e-12)
+        || inline.log.refresh_seconds_total() == 0.0;
+
+    println!();
+    println!(
+        "p99 step: inline {} -> async {} ({:+.1}%)",
+        fmt_duration(p99_inline),
+        fmt_duration(p99_async),
+        100.0 * (p99_async / p99_inline.max(1e-12) - 1.0)
+    );
+    println!(
+        "acceptance: refresh off hot path: {}   p99 drop: {}   loss gap {:.2}% (<1%: {})",
+        if hot_refresh_gone { "PASS" } else { "FAIL" },
+        if p99_async < p99_inline { "PASS" } else { "FAIL" },
+        100.0 * loss_gap,
+        if loss_gap < 0.01 { "PASS" } else { "FAIL" },
+    );
+
+    let mut report = Report::new(
+        "ASYNC-REFRESH: inline vs background eigenbasis refresh [nplm]",
+        "step",
+        "step time (s)",
+    );
+    report.add_series(
+        "inline step time",
+        inline.log.timings.iter().enumerate().map(|(i, t)| (i as f64, t.total())).collect(),
+    );
+    report.add_series(
+        "async step time",
+        asynced.log.timings.iter().enumerate().map(|(i, t)| (i as f64, t.total())).collect(),
+    );
+    report.note(format!(
+        "async mean staleness {:.1} steps (inline {:.1}); background refresh {:.3}s overlapped",
+        asynced.staleness, inline.staleness, asynced.bg_secs
+    ));
+    report.render_and_save();
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("async_refresh")),
+        ("model", Json::str(inline.log.model.clone())),
+        ("steps", Json::num(steps as f64)),
+        ("precond_freq", Json::num(freq as f64)),
+        ("inline", arm_json(&inline)),
+        ("async", arm_json(&asynced)),
+        ("p99_speedup", Json::num(p99_inline / p99_async.max(1e-12))),
+        ("tail_loss_gap_frac", Json::num(loss_gap)),
+    ]);
+    std::fs::create_dir_all("bench_results").ok();
+    let path = "bench_results/async_refresh.json";
+    match std::fs::write(path, out.pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("warn: could not write {path}: {e}"),
+    }
+}

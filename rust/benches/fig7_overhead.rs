@@ -34,8 +34,7 @@ fn main() {
     for &f in &freqs {
         let (log, secs) = RunSpec::new(&model, OptKind::Soap, steps).with_freq(f).run().unwrap();
         let mult = secs / adamw_secs;
-        let refresh_frac: f64 = log.timings.iter().map(|t| t.refresh_s).sum::<f64>()
-            / log.total_seconds().max(1e-12);
+        let refresh_frac = log.refresh_frac();
         println!(
             "soap f={f:<5} {secs:.3}s/step = {mult:.2}× adamw   (refresh {:.1}% of step)",
             100.0 * refresh_frac

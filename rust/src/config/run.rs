@@ -3,7 +3,7 @@
 //! paper-default hyperparameter policy (Appendix A).
 
 use crate::coordinator::TrainerConfig;
-use crate::optim::{Hyper, OptKind, RefreshMethod, Schedule};
+use crate::optim::{Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
 use crate::util::cli::Args;
 
 /// The learning-rate sweep grid of Appendix A: {.1, .0316, .01, …, 3.16e-4}.
@@ -24,6 +24,11 @@ pub struct RunConfig {
     pub one_sided: bool,
     pub factorized: bool,
     pub refresh_eigh: bool,
+    /// Run eigenbasis/inverse-root refreshes on the background service
+    /// instead of the optimizer hot path (`precond::RefreshService`).
+    pub async_refresh: bool,
+    /// Worker threads for the async refresh service.
+    pub refresh_workers: usize,
     pub pjrt_optimizer: bool,
     pub artifacts_dir: String,
     pub log_every: u64,
@@ -44,6 +49,8 @@ impl Default for RunConfig {
             one_sided: false,
             factorized: false,
             refresh_eigh: false,
+            async_refresh: false,
+            refresh_workers: 2,
             pjrt_optimizer: false,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
@@ -83,6 +90,9 @@ impl RunConfig {
         if args.get("workers").is_some() {
             rc.workers = args.parse("workers")?;
         }
+        if args.get("refresh-workers").is_some() {
+            rc.refresh_workers = args.parse("refresh-workers")?;
+        }
         if let Some(d) = args.get("artifacts") {
             rc.artifacts_dir = d.to_string();
         }
@@ -92,6 +102,7 @@ impl RunConfig {
         rc.one_sided = args.flag("one-sided");
         rc.factorized = args.flag("factorized");
         rc.refresh_eigh = args.flag("refresh-eigh");
+        rc.async_refresh = args.flag("async-refresh");
         rc.pjrt_optimizer = args.flag("pjrt-optimizer");
         rc.validate()?;
         Ok(rc)
@@ -101,6 +112,11 @@ impl RunConfig {
         anyhow::ensure!(self.steps > 0, "steps must be > 0");
         anyhow::ensure!(self.precond_freq > 0, "precond-freq must be > 0");
         anyhow::ensure!(self.grad_accum >= 1, "grad-accum must be ≥ 1");
+        anyhow::ensure!(self.refresh_workers >= 1, "refresh-workers must be ≥ 1");
+        anyhow::ensure!(
+            !(self.async_refresh && self.pjrt_optimizer),
+            "--async-refresh applies to the native optimizer path (drop --pjrt-optimizer)"
+        );
         anyhow::ensure!(self.lr > 0.0 && self.lr < 1.0, "lr out of range (0, 1)");
         anyhow::ensure!(
             self.warmup < self.steps || self.warmup == 0,
@@ -121,6 +137,8 @@ impl RunConfig {
             one_sided: self.one_sided,
             factorized: self.factorized,
             refresh: if self.refresh_eigh { RefreshMethod::Eigh } else { RefreshMethod::QrPowerIteration },
+            refresh_mode: if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline },
+            refresh_workers: self.refresh_workers,
             ..Hyper::default()
         }
     }
@@ -197,5 +215,25 @@ mod tests {
         assert!(h.one_sided);
         assert_eq!(h.refresh, RefreshMethod::Eigh);
         assert_eq!(h.precond_freq, 32);
+        assert_eq!(h.refresh_mode, RefreshMode::Inline);
+
+        rc.async_refresh = true;
+        rc.refresh_workers = 3;
+        let h = rc.hyper();
+        assert_eq!(h.refresh_mode, RefreshMode::Async);
+        assert_eq!(h.refresh_workers, 3);
+    }
+
+    #[test]
+    fn async_refresh_validation() {
+        let mut rc = RunConfig::default();
+        rc.async_refresh = true;
+        rc.validate().unwrap();
+        rc.refresh_workers = 0;
+        assert!(rc.validate().is_err());
+        let mut rc = RunConfig::default();
+        rc.async_refresh = true;
+        rc.pjrt_optimizer = true;
+        assert!(rc.validate().is_err());
     }
 }

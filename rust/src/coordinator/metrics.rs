@@ -12,11 +12,24 @@ pub struct StepTiming {
     pub grad_s: f64,
     /// Optimizer update excluding eigenbasis/inverse-root refreshes.
     pub update_s: f64,
-    /// Eigenbasis / inverse-root refresh work in this step.
+    /// Eigenbasis / inverse-root refresh work ON THE HOT PATH in this step
+    /// (Inline mode; ~0 in Async mode, where only the first-step init runs
+    /// inline).
     pub refresh_s: f64,
+    /// Background refresh compute attributed to this step (Async mode).
+    /// OVERLAPPED with the step, not part of its critical path — excluded
+    /// from [`Self::total`] by design.
+    pub bg_refresh_s: f64,
+    /// Mean basis staleness after this step: steps since the factors backing
+    /// each layer's active preconditioner were snapshotted, averaged over
+    /// preconditioned layers. Nonzero in Inline mode too (bases age between
+    /// periodic refreshes).
+    pub staleness_steps: f64,
 }
 
 impl StepTiming {
+    /// Critical-path seconds of this step (background refresh excluded —
+    /// it overlaps with the step on the service pool).
     pub fn total(&self) -> f64 {
         self.data_s + self.grad_s + self.update_s + self.refresh_s
     }
@@ -71,6 +84,48 @@ impl TrainLog {
         opt / total
     }
 
+    /// Hot-path refresh seconds across the run — what the Fig 7 benches and
+    /// `perf_probe` report, without reaching into optimizer internals.
+    pub fn refresh_seconds_total(&self) -> f64 {
+        self.timings.iter().map(|t| t.refresh_s).sum()
+    }
+
+    /// Background (overlapped) refresh seconds across the run (Async mode).
+    pub fn bg_refresh_seconds_total(&self) -> f64 {
+        self.timings.iter().map(|t| t.bg_refresh_s).sum()
+    }
+
+    /// Hot-path refresh share of total step time — the Fig 7 companion
+    /// metric.
+    pub fn refresh_frac(&self) -> f64 {
+        let total = self.total_seconds();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.refresh_seconds_total() / total
+    }
+
+    /// Mean basis staleness (steps) across the run.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.timings.is_empty() {
+            return 0.0;
+        }
+        self.timings.iter().map(|t| t.staleness_steps).sum::<f64>() / self.timings.len() as f64
+    }
+
+    /// Quantile of per-step critical-path time, q ∈ [0, 1] (p50/p99 step
+    /// latency for the async-refresh bench).
+    pub fn step_time_quantile(&self, q: f64) -> f64 {
+        let mut samples = crate::util::stats::Samples::new();
+        for t in &self.timings {
+            samples.push(t.total());
+        }
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples.quantile(q)
+    }
+
     /// First step (1-based) whose loss reaches `target`, if any — the
     /// steps-to-target metric of Fig 4. Uses a trailing mean of width `k`
     /// to suppress single-batch noise.
@@ -117,6 +172,12 @@ impl TrainLog {
             ("tail_loss", Json::num(self.tail_loss(20) as f64)),
             ("tokens_per_second", Json::num(self.tokens_per_second())),
             ("overhead_frac", Json::num(self.optimizer_overhead_frac())),
+            ("refresh_seconds", Json::num(self.refresh_seconds_total())),
+            ("bg_refresh_seconds", Json::num(self.bg_refresh_seconds_total())),
+            ("refresh_frac", Json::num(self.refresh_frac())),
+            ("mean_staleness_steps", Json::num(self.mean_staleness())),
+            ("p50_step_s", Json::num(self.step_time_quantile(0.50))),
+            ("p99_step_s", Json::num(self.step_time_quantile(0.99))),
             (
                 "losses",
                 Json::arr(
@@ -138,7 +199,16 @@ mod tests {
             optimizer: "x".into(),
             model: "m".into(),
             losses: losses.iter().enumerate().map(|(i, &l)| (i as u64 + 1, l)).collect(),
-            timings: losses.iter().map(|_| StepTiming { grad_s: 0.5, update_s: 0.25, refresh_s: 0.25, data_s: 0.0 }).collect(),
+            timings: losses
+                .iter()
+                .map(|_| StepTiming {
+                    grad_s: 0.5,
+                    update_s: 0.25,
+                    refresh_s: 0.25,
+                    staleness_steps: 2.0,
+                    ..Default::default()
+                })
+                .collect(),
             tokens_per_batch: 100,
         }
     }
@@ -177,5 +247,20 @@ mod tests {
         let j = log_with(&[3.0]).to_json().dump();
         let v = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(v.get("optimizer").as_str(), Some("x"));
+        assert_eq!(v.get("refresh_seconds").as_f64(), Some(0.25));
+        assert_eq!(v.get("mean_staleness_steps").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn refresh_and_staleness_helpers() {
+        let log = log_with(&[1.0, 1.0, 1.0, 1.0]);
+        assert!((log.refresh_seconds_total() - 1.0).abs() < 1e-9);
+        assert_eq!(log.bg_refresh_seconds_total(), 0.0);
+        assert!((log.refresh_frac() - 0.25).abs() < 1e-9);
+        assert!((log.mean_staleness() - 2.0).abs() < 1e-9);
+        // All steps take 1.0s ⇒ every quantile is 1.0; background time is
+        // excluded from the critical path.
+        assert!((log.step_time_quantile(0.5) - 1.0).abs() < 1e-9);
+        assert!((log.step_time_quantile(0.99) - 1.0).abs() < 1e-9);
     }
 }

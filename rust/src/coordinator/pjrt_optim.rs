@@ -100,8 +100,20 @@ impl PjrtOptimizer {
         lr: f32,
     ) -> Result<()> {
         anyhow::ensure!(params.len() == self.layers.len());
-        let freq = self.hyper.precond_freq;
-        for ((layer, w), g) in self.layers.iter_mut().zip(params.iter_mut()).zip(grads) {
+        let freq = self.hyper.precond_freq.max(1);
+        for (idx, ((layer, w), g)) in
+            self.layers.iter_mut().zip(params.iter_mut()).zip(grads).enumerate()
+        {
+            // Staggered per-layer refresh phase (layer_idx % f) — must match
+            // the native executors' `OptKind::build_staggered` schedule so
+            // the PJRT and native trajectories stay comparable; a pinned
+            // phase (stagger_refresh = false) is honored verbatim, same as
+            // there.
+            let refresh_phase = if self.hyper.stagger_refresh {
+                idx as u64 % freq
+            } else {
+                self.hyper.refresh_phase % freq
+            };
             let (rows, cols) = (layer.rows, layer.cols);
             match &mut layer.state {
                 LayerState::Adamw { m, v } => {
@@ -208,7 +220,7 @@ impl PjrtOptimizer {
                     }
 
                     // Eigenbasis refresh (Algorithm 4) at frequency f.
-                    if t % freq == 0 {
+                    if t % freq == refresh_phase {
                         let t0 = Instant::now();
                         if let (Some(lm), Some(q)) = (l.as_ref(), ql.as_mut()) {
                             let out = engine.run(

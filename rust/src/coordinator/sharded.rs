@@ -9,8 +9,11 @@
 //! optimizers — the paper §7.3 cost model) so no worker becomes the straggler
 //! that serializes the step.
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
-use crate::optim::{Hyper, LayerOptimizer, OptKind};
+use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
+use crate::precond::{RefreshService, RefreshStats};
 
 /// Per-step FLOP estimate of a rotating optimizer on an m×n layer (§7.3).
 pub fn layer_update_flops(m: usize, n: usize) -> f64 {
@@ -54,6 +57,13 @@ pub struct ShardedOptimizer {
     shards: Vec<Vec<ShardSlot>>,
     pub num_workers: usize,
     kind: OptKind,
+    /// Background eigenbasis/inverse-root refresh service — `Some` only in
+    /// `RefreshMode::Async` when at least one layer has work to offload. It
+    /// owns a DEDICATED pool: shard workers block inside `step` joins, so
+    /// sharing their pool with refresh jobs could deadlock (a step waiting
+    /// on a worker that is waiting behind a refresh that needs the step's
+    /// snapshot). Separate pools make the two queues independent.
+    refresh_service: Option<Arc<RefreshService>>,
 }
 
 impl ShardedOptimizer {
@@ -62,13 +72,69 @@ impl ShardedOptimizer {
         let assign = assign_shards(shapes, workers);
         let mut shards: Vec<Vec<ShardSlot>> = (0..workers).map(|_| Vec::new()).collect();
         for (idx, (&(m, n), &s)) in shapes.iter().zip(&assign).enumerate() {
-            shards[s].push(ShardSlot { layer_idx: idx, opt: kind.build(m, n, hyper) });
+            // Staggered refresh phase (layer_idx % f): spreads the periodic
+            // decomposition cost across steps in Inline mode and spreads the
+            // enqueue burst in Async mode. Serial ModelOptimizer staggers
+            // identically, keeping the two executors bitwise equal.
+            shards[s].push(ShardSlot { layer_idx: idx, opt: kind.build_staggered(idx, m, n, hyper) });
         }
-        Self { shards, num_workers: workers, kind }
+        let refresh_service = (hyper.refresh_mode == RefreshMode::Async).then(|| {
+            Arc::new(RefreshService::new(hyper.refresh_workers))
+        });
+        let refresh_service = refresh_service.filter(|svc| {
+            let mut any = false;
+            for slot in shards.iter_mut().flat_map(|s| s.iter_mut()) {
+                any |= slot.opt.attach_async(svc);
+            }
+            any // all-identity / element-wise models stay service-free
+        });
+        Self { shards, num_workers: workers, kind, refresh_service }
     }
 
     pub fn kind(&self) -> OptKind {
         self.kind
+    }
+
+    /// The background refresh service, when running in `Async` mode.
+    pub fn refresh_service(&self) -> Option<&Arc<RefreshService>> {
+        self.refresh_service.as_ref()
+    }
+
+    /// Seconds of background (off-hot-path) refresh compute so far.
+    pub fn async_refresh_seconds(&self) -> f64 {
+        self.refresh_service.as_ref().map(|s| s.refresh_seconds()).unwrap_or(0.0)
+    }
+
+    /// Aggregate background refresh counters (zeroes in Inline mode).
+    pub fn async_refresh_stats(&self) -> RefreshStats {
+        self.refresh_service.as_ref().map(|s| s.stats()).unwrap_or_default()
+    }
+
+    /// Mean basis staleness at step `t` (steps since the factors backing
+    /// each layer's active preconditioner were snapshotted), averaged over
+    /// layers that have one. Meaningful in both modes: Inline bases also age
+    /// between refreshes.
+    pub fn mean_basis_staleness(&self, t: u64) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u32);
+        for slot in self.shards.iter().flat_map(|s| s.iter()) {
+            if let Some(snap) = slot.opt.basis_snapshot_step() {
+                sum += t.saturating_sub(snap) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Barrier: wait for every in-flight background refresh (tests and
+    /// orderly shutdown; a no-op in Inline mode).
+    pub fn wait_refresh_idle(&self) {
+        if let Some(svc) = &self.refresh_service {
+            svc.wait_idle();
+        }
     }
 
     /// One sharded optimizer step: updates `params` in place given `grads`.
@@ -260,5 +326,74 @@ mod tests {
     fn flops_model_symmetric() {
         assert_eq!(layer_update_flops(8, 4), layer_update_flops(4, 8));
         assert!(layer_update_flops(64, 64) > layer_update_flops(8, 8));
+    }
+
+    #[test]
+    fn async_mode_spins_up_service_and_tracks_loss() {
+        let shapes = shapes();
+        let hyper = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+        let mut inline = ShardedOptimizer::new(OptKind::Soap, &hyper, &shapes, 2);
+        assert!(inline.refresh_service().is_none());
+
+        let hyper_async = hyper.clone().async_refresh();
+        let mut asynced = ShardedOptimizer::new(OptKind::Soap, &hyper_async, &shapes, 2);
+        assert!(asynced.refresh_service().is_some(), "SOAP layers must attach");
+
+        let mut rng = Rng::new(202);
+        let init: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        let mut p_inline = init.clone();
+        let mut p_async = init;
+        for t in 1..=30 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            inline.step(&mut p_inline, &grads, t, 0.01);
+            asynced.step(&mut p_async, &grads, t, 0.01);
+        }
+        asynced.wait_refresh_idle();
+        let stats = asynced.async_refresh_stats();
+        assert!(stats.completed > 0, "no background refresh ran");
+        assert_eq!(stats.failed, 0);
+        assert!(asynced.async_refresh_seconds() > 0.0);
+        assert_eq!(inline.async_refresh_seconds(), 0.0);
+        // Same gradients, stale-but-adapting basis: parameters stay close
+        // (not bitwise — async adopts each basis a step or two late).
+        for (a, b) in p_inline.iter().zip(&p_async) {
+            let diff = a.max_abs_diff(b);
+            assert!(diff.is_finite() && diff < 1.0, "async diverged: {diff}");
+        }
+    }
+
+    #[test]
+    fn adamw_async_mode_needs_no_service() {
+        let hyper = Hyper::default().async_refresh();
+        let opt = ShardedOptimizer::new(OptKind::AdamW, &hyper, &shapes(), 2);
+        assert!(opt.refresh_service().is_none(), "nothing to refresh for AdamW");
+        assert_eq!(opt.async_refresh_stats().completed, 0);
+    }
+
+    #[test]
+    fn staleness_reflects_staggered_refreshes() {
+        // f = 4 over 5 layers, phases 0..3: after a few steps every SOAP
+        // layer has refreshed within the last f steps, so mean staleness
+        // must sit in [0, f].
+        let shapes = shapes();
+        let hyper = Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() };
+        let mut opt = ShardedOptimizer::new(OptKind::Soap, &hyper, &shapes, 3);
+        let mut rng = Rng::new(203);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        let mut t = 0;
+        for _ in 0..10 {
+            t += 1;
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            opt.step(&mut params, &grads, t, 0.01);
+        }
+        let stale = opt.mean_basis_staleness(t);
+        assert!(
+            stale >= 0.0 && stale <= hyper.precond_freq as f64,
+            "staggered inline staleness out of range: {stale}"
+        );
     }
 }

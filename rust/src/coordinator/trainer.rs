@@ -234,11 +234,15 @@ impl Trainer {
         let loss = (loss_acc / micro.len() as f64) as f32;
         timing.grad_s = t0.elapsed().as_secs_f64();
 
-        // Optimizer step (+ refresh accounting).
+        // Optimizer step (+ refresh accounting). Hot-path refresh seconds
+        // come from the optimizer's inline account; background (async)
+        // refresh seconds are drawn from the service and reported separately
+        // — they overlap the step instead of extending it.
         self.step += 1;
         let lr = self.cfg.schedule.lr_at(self.step - 1);
         let t0 = Instant::now();
         let refresh_before = self.refresh_seconds();
+        let bg_before = self.async_refresh_seconds();
         match &mut self.update {
             UpdateBackend::Native(sharded) => {
                 sharded.step(&mut self.params, &grads, self.step, lr)
@@ -253,6 +257,8 @@ impl Trainer {
         let update_total = t0.elapsed().as_secs_f64();
         timing.refresh_s = self.refresh_seconds() - refresh_before;
         timing.update_s = (update_total - timing.refresh_s).max(0.0);
+        timing.bg_refresh_s = (self.async_refresh_seconds() - bg_before).max(0.0);
+        timing.staleness_steps = self.mean_basis_staleness();
 
         Ok((loss, timing))
     }
@@ -312,6 +318,33 @@ impl Trainer {
         }
     }
 
+    /// Cumulative background (async-service) refresh seconds — 0 in Inline
+    /// mode and on the PJRT path.
+    pub fn async_refresh_seconds(&self) -> f64 {
+        match &self.update {
+            UpdateBackend::Native(s) => s.async_refresh_seconds(),
+            UpdateBackend::Pjrt(_) => 0.0,
+        }
+    }
+
+    /// Mean basis staleness (steps) across preconditioned layers right now.
+    pub fn mean_basis_staleness(&self) -> f64 {
+        match &self.update {
+            UpdateBackend::Native(s) => s.mean_basis_staleness(self.step),
+            UpdateBackend::Pjrt(_) => 0.0,
+        }
+    }
+
+    /// Drain in-flight background refreshes (no-op in Inline/PJRT modes).
+    /// Call before reading final `async_refresh_seconds` totals, so work
+    /// still in flight at the last step isn't silently dropped from the
+    /// accounting.
+    pub fn wait_refresh_idle(&self) {
+        if let UpdateBackend::Native(s) = &self.update {
+            s.wait_refresh_idle();
+        }
+    }
+
     pub fn state_bytes(&self) -> usize {
         match &self.update {
             UpdateBackend::Native(s) => s.state_bytes(),
@@ -326,6 +359,9 @@ impl Trainer {
         }
         if self.cfg.hyper.factorized {
             s.push_str("-factorized");
+        }
+        if self.cfg.hyper.refresh_mode == crate::optim::RefreshMode::Async {
+            s.push_str("-async");
         }
         if matches!(self.update, UpdateBackend::Pjrt(_)) {
             s.push_str("(pjrt)");
@@ -459,5 +495,33 @@ mod tests {
         let t_soap = native_trainer(OptKind::Soap, 1, 1);
         let t_adam = native_trainer(OptKind::AdamW, 1, 1);
         assert!(t_soap.state_bytes() > t_adam.state_bytes());
+    }
+
+    #[test]
+    fn async_refresh_trains_off_the_hot_path() {
+        let mut t = native_trainer(OptKind::Soap, 60, 2);
+        t.cfg.hyper = Hyper { precond_freq: 4, ..Hyper::default() }.async_refresh();
+        // Rebuild with the async hyper (native_trainer built an inline one).
+        let mut t = Trainer::new_native(
+            NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+            t.cfg.clone(),
+            24,
+            8,
+        );
+        let log = t.run().unwrap();
+        t.native_optimizer().unwrap().wait_refresh_idle();
+        assert!(log.final_loss().is_finite());
+        assert!(log.tail_loss(10) < log.losses[0].1, "async SOAP did not learn");
+        // Background service did the refreshes; the hot path only paid the
+        // one-time first-step eigh init.
+        assert!(t.async_refresh_seconds() > 0.0, "no background refresh ran");
+        let stats = t.native_optimizer().unwrap().async_refresh_stats();
+        assert!(stats.completed > 0);
+        assert_eq!(stats.failed, 0);
+        // Staleness is reported and bounded (≈ f + adoption delay; the wide
+        // margin keeps slow CI machines from flaking).
+        assert!(log.mean_staleness() > 0.0);
+        let last = log.timings.last().unwrap().staleness_steps;
+        assert!(last <= 12.0, "staleness runaway: {last}");
     }
 }

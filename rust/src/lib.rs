@@ -17,6 +17,26 @@
 //! `make artifacts` and executed from Rust via the PJRT CPU client
 //! ([`runtime`]).
 //!
+//! ## Refresh modes
+//!
+//! SOAP/Shampoo periodically recompute their preconditioner decompositions
+//! (frequency `f`, the paper's only overhead over Adam). Two execution modes
+//! are supported, selected by [`optim::Hyper::refresh_mode`]:
+//!
+//! - **Inline** (default): the decomposition runs synchronously inside the
+//!   optimizer step — the paper's Algorithm 3 math, fully deterministic
+//!   (same seed ⇒ bitwise-identical weights at any worker count). Per-layer
+//!   refresh phases are staggered (`layer_idx % f`) so the step-time spike
+//!   is spread across steps rather than landing on every `t ≡ 0 (mod f)`.
+//! - **Async**: the step snapshots the factor EMAs and enqueues the
+//!   decomposition on the background [`precond::RefreshService`]; the new
+//!   basis is adopted atomically at a later step ([`precond::BasisHandle`]).
+//!   The hot path never blocks on linear algebra; the price is bounded
+//!   basis *staleness* (steps between snapshot and adoption), which SOAP
+//!   tolerates by design — its Adam second moment keeps adapting every step.
+//!   Prefer Async when step time matters (throughput/p99); prefer Inline
+//!   for exact reproducibility of the paper's trajectories.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions.
 
@@ -27,5 +47,6 @@ pub mod experiments;
 pub mod linalg;
 pub mod model;
 pub mod optim;
+pub mod precond;
 pub mod runtime;
 pub mod util;

@@ -26,6 +26,7 @@ fn app() -> App {
                 .opt("precond-freq", "10", "preconditioning frequency f")
                 .opt("grad-accum", "1", "gradient-accumulation microbatches")
                 .opt("workers", "4", "optimizer worker threads")
+                .opt("refresh-workers", "2", "async refresh service worker threads")
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
                 .opt("save", "", "write a checkpoint here at the end")
@@ -33,6 +34,7 @@ fn app() -> App {
                 .flag("one-sided", "SOAP one-sided variant (§7.1)")
                 .flag("factorized", "SOAP factorized variant (§7.2.1)")
                 .flag("refresh-eigh", "use full eigh refresh (Fig 7 right)")
+                .flag("async-refresh", "run eigenbasis refreshes on the background service (off the hot path)")
                 .flag("pjrt-optimizer", "run optimizer updates through PJRT/Pallas artifacts"),
         )
         .command(
@@ -59,8 +61,14 @@ fn app() -> App {
 fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     let rc = RunConfig::from_args(args)?;
     println!(
-        "train: model={} optimizer={} lr={} steps={} f={} accum={}",
-        rc.model, rc.optimizer.name(), rc.lr, rc.steps, rc.precond_freq, rc.grad_accum
+        "train: model={} optimizer={} lr={} steps={} f={} accum={} refresh={}",
+        rc.model,
+        rc.optimizer.name(),
+        rc.lr,
+        rc.steps,
+        rc.precond_freq,
+        rc.grad_accum,
+        if rc.async_refresh { "async" } else { "inline" }
     );
     let mut trainer = if rc.pjrt_optimizer {
         Trainer::new_pjrt_full(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?
@@ -91,6 +99,14 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
         log.tokens_per_second(),
         100.0 * log.optimizer_overhead_frac(),
         trainer.state_bytes()
+    );
+    trainer.wait_refresh_idle(); // count refreshes still in flight at the end
+    println!(
+        "refresh: hot-path {:.3}s  background {:.3}s  mean staleness {:.1} steps  p99 step {:.1}ms",
+        log.refresh_seconds_total(),
+        trainer.async_refresh_seconds(),
+        log.mean_staleness(),
+        1e3 * log.step_time_quantile(0.99),
     );
 
     if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {

@@ -62,8 +62,9 @@ impl LayerOptimizer for Galore {
     fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
         let h = self.h.clone();
 
-        // Basis refresh from the CURRENT gradient (difference #1).
-        if self.p.is_none() || t % h.precond_freq == 0 {
+        // Basis refresh from the CURRENT gradient (difference #1), at this
+        // layer's staggered phase (`build_staggered` sets layer_idx % f).
+        if self.p.is_none() || h.is_refresh_step(t) {
             let t0 = std::time::Instant::now();
             let factor = if self.left { g.matmul_nt(g) } else { g.matmul_tn(g) };
             let (_, vecs) = eigh(&factor);

@@ -1,5 +1,7 @@
 //! Optimizer hyperparameters — mirrors the paper's Appendix A defaults.
 
+pub use crate::precond::RefreshMode;
+
 /// How SOAP/Shampoo recompute the preconditioner eigenbasis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RefreshMethod {
@@ -44,6 +46,22 @@ pub struct Hyper {
     pub max_precond_dim: usize,
     /// Eigenbasis refresh method (Fig 7 right ablation).
     pub refresh: RefreshMethod,
+    /// Refresh execution mode: `Inline` (synchronous, deterministic) or
+    /// `Async` (background `precond::RefreshService`).
+    pub refresh_mode: RefreshMode,
+    /// Per-layer refresh phase offset φ ∈ [0, f): the refresh fires when
+    /// `t ≡ φ (mod f)`. While `stagger_refresh` is set (the default) the
+    /// coordinator OVERWRITES this per layer with `layer_idx % f`; clear
+    /// `stagger_refresh` to pin an explicit phase (0 = the all-at-once
+    /// pre-stagger schedule).
+    pub refresh_phase: u64,
+    /// Let the coordinator stagger per-layer refresh phases (`layer_idx %
+    /// f`) so layers don't all refresh (or enqueue) on the same step.
+    /// Default true; disable to honor `refresh_phase` verbatim.
+    pub stagger_refresh: bool,
+    /// Dedicated worker threads for the async refresh service (used only
+    /// when `refresh_mode == Async`).
+    pub refresh_workers: usize,
     /// GaLore update-scale α (appendix B; 1.0 for the full-rank version).
     pub galore_scale: f32,
 }
@@ -64,6 +82,10 @@ impl Default for Hyper {
             factorized: false,
             max_precond_dim: 4096,
             refresh: RefreshMethod::QrPowerIteration,
+            refresh_mode: RefreshMode::Inline,
+            refresh_phase: 0,
+            stagger_refresh: true,
+            refresh_workers: 2,
             galore_scale: 1.0,
         }
     }
@@ -85,6 +107,28 @@ impl Hyper {
     pub fn with_refresh(mut self, r: RefreshMethod) -> Self {
         self.refresh = r;
         self
+    }
+    pub fn async_refresh(mut self) -> Self {
+        self.refresh_mode = RefreshMode::Async;
+        self
+    }
+    pub fn with_refresh_mode(mut self, m: RefreshMode) -> Self {
+        self.refresh_mode = m;
+        self
+    }
+    /// Pin the phase φ at which refreshes fire (`t ≡ φ (mod f)`) — also
+    /// disables the coordinator's per-layer staggering, which would
+    /// otherwise overwrite it. `with_refresh_phase(0)` reproduces the
+    /// pre-stagger all-at-once schedule.
+    pub fn with_refresh_phase(mut self, phase: u64) -> Self {
+        self.refresh_phase = phase;
+        self.stagger_refresh = false;
+        self
+    }
+    /// Does step `t` (1-based) hit this layer's refresh phase?
+    pub fn is_refresh_step(&self, t: u64) -> bool {
+        let f = self.precond_freq.max(1);
+        t % f == self.refresh_phase % f
     }
 }
 
@@ -109,5 +153,21 @@ mod tests {
         let h = Hyper::default().with_freq(80).one_sided().factorized();
         assert_eq!(h.precond_freq, 80);
         assert!(h.one_sided && h.factorized);
+        let h = h.async_refresh().with_refresh_phase(3);
+        assert_eq!(h.refresh_mode, RefreshMode::Async);
+        assert_eq!(h.refresh_phase, 3);
+    }
+
+    #[test]
+    fn refresh_step_respects_phase() {
+        let h = Hyper::default().with_freq(10);
+        assert!(h.is_refresh_step(10) && h.is_refresh_step(20));
+        assert!(!h.is_refresh_step(11));
+        let h = h.with_refresh_phase(3);
+        assert!(h.is_refresh_step(3) && h.is_refresh_step(13));
+        assert!(!h.is_refresh_step(10));
+        // Phase ≥ f wraps.
+        let h = Hyper::default().with_freq(4).with_refresh_phase(6);
+        assert!(h.is_refresh_step(2) && h.is_refresh_step(6));
     }
 }

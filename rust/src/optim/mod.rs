@@ -23,12 +23,15 @@ pub mod soap;
 pub use adafactor::Adafactor;
 pub use adamw::AdamW;
 pub use galore::Galore;
-pub use hyper::{Hyper, RefreshMethod};
+pub use hyper::{Hyper, RefreshMethod, RefreshMode};
 pub use schedule::Schedule;
 pub use shampoo::Shampoo;
 pub use soap::Soap;
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
+use crate::precond::RefreshService;
 
 /// Per-layer optimizer state machine.
 ///
@@ -60,6 +63,23 @@ pub trait LayerOptimizer: Send {
     fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
         anyhow::ensure!(state.is_empty(), "optimizer expects no state");
         Ok(())
+    }
+
+    /// Route this layer's periodic preconditioner recomputes through the
+    /// background refresh service instead of running them inline. Returns
+    /// `false` (the default) for optimizers with nothing to refresh — the
+    /// coordinator uses that to decide whether a service is needed at all.
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        let _ = service;
+        false
+    }
+
+    /// Step at which the factor EMAs backing the *active* preconditioner
+    /// were snapshotted — `t - basis_snapshot_step()` is the staleness the
+    /// coordinator reports. `None` when the layer has no preconditioner
+    /// (AdamW, identity-capped SOAP) or none has been built yet.
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        None
     }
 }
 
@@ -111,6 +131,28 @@ impl OptKind {
             OptKind::Galore => Box::new(Galore::new(rows, cols, h.clone())),
         }
     }
+
+    /// [`Self::build`] with the coordinator's staggered refresh phase
+    /// (`layer_idx % f`) applied, so each layer recomputes its preconditioner
+    /// on a different step and the `t ≡ 0 (mod f)` latency spike is spread
+    /// out. Serial ([`ModelOptimizer`]) and sharded executors both use this,
+    /// keeping their trajectories bitwise identical. An explicitly pinned
+    /// phase (`Hyper::with_refresh_phase`, which clears `stagger_refresh`)
+    /// is honored verbatim for every layer.
+    pub fn build_staggered(
+        &self,
+        layer_idx: usize,
+        rows: usize,
+        cols: usize,
+        h: &Hyper,
+    ) -> Box<dyn LayerOptimizer> {
+        if !h.stagger_refresh {
+            return self.build(rows, cols, h);
+        }
+        let mut hl = h.clone();
+        hl.refresh_phase = layer_idx as u64 % h.precond_freq.max(1);
+        self.build(rows, cols, &hl)
+    }
 }
 
 /// A full model's optimizer: one [`LayerOptimizer`] per parameter plus a
@@ -127,7 +169,8 @@ impl ModelOptimizer {
     pub fn new(kind: OptKind, hyper: Hyper, schedule: Schedule, shapes: &[(usize, usize)]) -> Self {
         let layers = shapes
             .iter()
-            .map(|&(m, n)| kind.build(m, n, &hyper))
+            .enumerate()
+            .map(|(idx, &(m, n))| kind.build_staggered(idx, m, n, &hyper))
             .collect();
         Self { kind, hyper, schedule, layers, step: 0 }
     }

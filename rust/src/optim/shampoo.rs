@@ -11,12 +11,14 @@
 //! `L^{-1/e}` factors, while SOAP (see `soap.rs`) refreshes its diagonal
 //! second moment every step.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::adamw::AdamW;
 use super::hyper::Hyper;
 use super::LayerOptimizer;
 use crate::linalg::{eigh, eigh_warm, roots::inv_root_from_eig, Matrix};
+use crate::precond::{BasisHandle, BasisPayload, RefreshService};
 
 pub struct Shampoo {
     h: Hyper,
@@ -37,6 +39,14 @@ pub struct Shampoo {
     r_vecs: Option<Matrix>,
     initialized: bool,
     refresh_secs: f64,
+    /// Async refresh plumbing (`None` ⇒ inline root recomputes). Grafting
+    /// keeps the scalar step size adapting every step while the roots age —
+    /// the same argument that makes SOAP tolerate a stale basis.
+    service: Option<Arc<RefreshService>>,
+    handle: Option<Arc<BasisHandle>>,
+    adopted_version: u64,
+    /// Step whose factors back the ACTIVE inverse roots.
+    basis_step: u64,
 }
 
 impl Shampoo {
@@ -53,32 +63,112 @@ impl Shampoo {
             r_vecs: None,
             initialized: false,
             refresh_secs: 0.0,
+            service: None,
+            handle: None,
+            adopted_version: 0,
+            basis_step: 0,
         }
+    }
+
+    /// The root-recompute math as a pure function of bias-corrected factor
+    /// snapshots, shared verbatim by the inline and background paths.
+    /// Returns `(l_inv, r_inv, l_vecs, r_vecs)`.
+    fn compute_roots(
+        lh: &Matrix,
+        rh: &Matrix,
+        prev_l: Option<&Matrix>,
+        prev_r: Option<&Matrix>,
+        e: f32,
+        eps: f32,
+    ) -> (Matrix, Matrix, Matrix, Matrix) {
+        let (wl, vl) = match prev_l {
+            Some(prev) => eigh_warm(lh, prev),
+            None => eigh(lh),
+        };
+        let (wr, vr) = match prev_r {
+            Some(prev) => eigh_warm(rh, prev),
+            None => eigh(rh),
+        };
+        let l_inv = inv_root_from_eig(&wl, &vl, e, eps);
+        let r_inv = inv_root_from_eig(&wr, &vr, e, eps);
+        (l_inv, r_inv, vl, vr)
+    }
+
+    /// Bias-corrected factor snapshots at step `t`.
+    fn corrected_factors(&self, t: u64) -> (Matrix, Matrix) {
+        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
+        (self.l.scale(1.0 / bc), self.r.scale(1.0 / bc))
     }
 
     fn refresh_roots(&mut self, t: u64) {
         let t0 = Instant::now();
-        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
         // Per-factor exponent −1/e: the update is L^{-1/e} G R^{-1/e}.
         // e = 4 is original Shampoo, e = 2 the Anil et al / Morwani et al
         // power-1/2 variant, e = 2.5 the paper's DistributedShampoo default
         // (Appendix A: "we set the default values of exponent to be −1/2.5").
-        let e = self.h.shampoo_exponent;
-        let lh = self.l.scale(1.0 / bc);
-        let rh = self.r.scale(1.0 / bc);
-        let (wl, vl) = match &self.l_vecs {
-            Some(prev) => eigh_warm(&lh, prev),
-            None => eigh(&lh),
-        };
-        let (wr, vr) = match &self.r_vecs {
-            Some(prev) => eigh_warm(&rh, prev),
-            None => eigh(&rh),
-        };
-        self.l_inv = inv_root_from_eig(&wl, &vl, e, self.h.shampoo_eps);
-        self.r_inv = inv_root_from_eig(&wr, &vr, e, self.h.shampoo_eps);
+        let (lh, rh) = self.corrected_factors(t);
+        let (l_inv, r_inv, vl, vr) = Self::compute_roots(
+            &lh,
+            &rh,
+            self.l_vecs.as_ref(),
+            self.r_vecs.as_ref(),
+            self.h.shampoo_exponent,
+            self.h.shampoo_eps,
+        );
+        self.l_inv = l_inv;
+        self.r_inv = r_inv;
         self.l_vecs = Some(vl);
         self.r_vecs = Some(vr);
+        self.basis_step = t;
         self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Async mode: adopt the newest published inverse roots, if any.
+    fn adopt_published(&mut self) {
+        let Some(handle) = &self.handle else { return };
+        if handle.version() <= self.adopted_version {
+            return;
+        }
+        if let Some(published) = handle.latest() {
+            if published.version > self.adopted_version {
+                let p = &published.payload;
+                if let (Some(li), Some(ri)) = (&p.left, &p.right) {
+                    self.l_inv = li.clone();
+                    self.r_inv = ri.clone();
+                }
+                self.l_vecs = p.left_aux.clone().or_else(|| self.l_vecs.take());
+                self.r_vecs = p.right_aux.clone().or_else(|| self.r_vecs.take());
+                self.adopted_version = published.version;
+                self.basis_step = published.snapshot_step;
+            }
+        }
+    }
+
+    /// Async mode: snapshot bias-corrected factors + warm-start bases and
+    /// hand the inverse-root recompute to the service.
+    fn enqueue_refresh(&self, service: &Arc<RefreshService>, handle: &Arc<BasisHandle>, t: u64) {
+        if !handle.try_begin_refresh() {
+            return;
+        }
+        let (lh, rh) = self.corrected_factors(t);
+        let prev_l = self.l_vecs.clone();
+        let prev_r = self.r_vecs.clone();
+        let e = self.h.shampoo_exponent;
+        let eps = self.h.shampoo_eps;
+        service.enqueue(
+            Arc::clone(handle),
+            t,
+            Box::new(move || {
+                let (l_inv, r_inv, vl, vr) =
+                    Self::compute_roots(&lh, &rh, prev_l.as_ref(), prev_r.as_ref(), e, eps);
+                BasisPayload {
+                    left: Some(l_inv),
+                    right: Some(r_inv),
+                    left_aux: Some(vl),
+                    right_aux: Some(vr),
+                }
+            }),
+        );
     }
 }
 
@@ -93,9 +183,18 @@ impl LayerOptimizer for Shampoo {
         self.r.ema_inplace(&gtg, h.shampoo_beta);
 
         // --- refresh inverse roots at frequency f (and on first step) -------
-        if !self.initialized || (t % h.precond_freq == 0) {
+        // Async mode: adopt whatever the background service has published,
+        // then (at this layer's phase) snapshot and re-enqueue. The first
+        // recompute always runs inline so the roots are never identity-only.
+        self.adopt_published();
+        if !self.initialized {
             self.refresh_roots(t);
             self.initialized = true;
+        } else if h.is_refresh_step(t) {
+            match (self.service.clone(), self.handle.clone()) {
+                (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
+                _ => self.refresh_roots(t),
+            }
         }
 
         // --- momentum + preconditioned direction -----------------------------
@@ -141,8 +240,24 @@ impl LayerOptimizer for Shampoo {
         self.refresh_secs
     }
 
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        self.service = Some(Arc::clone(service));
+        self.handle = Some(Arc::new(BasisHandle::new()));
+        self.adopted_version = 0;
+        true
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        self.initialized.then_some(self.basis_step)
+    }
+
     fn export_state(&self) -> Vec<Matrix> {
-        let flags = Matrix::from_vec(1, 1, vec![self.initialized as u8 as f32]);
+        // flags[1] = basis_step, so staleness survives a checkpoint resume.
+        let flags = Matrix::from_vec(
+            1,
+            2,
+            vec![self.initialized as u8 as f32, self.basis_step as f32],
+        );
         vec![
             flags,
             self.m.clone(),
@@ -157,7 +272,17 @@ impl LayerOptimizer for Shampoo {
     fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
         anyhow::ensure!(state.len() == 7, "shampoo expects 7 state tensors");
         let mut it = state.into_iter();
-        self.initialized = it.next().unwrap().data[0] != 0.0;
+        let flags = it.next().unwrap();
+        // cols == 1 accepts pre-basis_step checkpoints.
+        anyhow::ensure!(flags.cols == 1 || flags.cols == 2, "shampoo state flags malformed");
+        self.initialized = flags.data[0] != 0.0;
+        self.basis_step = if flags.cols == 2 { flags.data[1] as u64 } else { 0 };
+        // Refreshes enqueued before the restore were computed from discarded
+        // factors; drain them, then skip every pre-restore publication.
+        if let (Some(service), Some(handle)) = (&self.service, &self.handle) {
+            service.wait_idle();
+            self.adopted_version = handle.version();
+        }
         self.m = it.next().unwrap();
         self.l = it.next().unwrap();
         self.r = it.next().unwrap();
@@ -246,6 +371,31 @@ mod tests {
         let opt = Shampoo::new(8, 4, Hyper::default());
         // 2m² + 2n² + 2mn floats.
         assert_eq!(opt.state_bytes(), (2 * 64 + 2 * 16 + 2 * 32) * 4);
+    }
+
+    #[test]
+    fn async_roots_adopt_and_still_minimize() {
+        let svc = Arc::new(RefreshService::new(1));
+        let mut rng = Rng::new(12);
+        let target = Matrix::randn(&mut rng, 6, 4, 1.0);
+        let h = Hyper { weight_decay: 0.0, precond_freq: 5, ..Hyper::default() };
+        let mut opt = Shampoo::new(6, 4, h);
+        assert!(opt.attach_async(&svc));
+        let mut w = Matrix::zeros(6, 4);
+        for t in 1..=1500 {
+            let g = w.sub(&target).scale(2.0);
+            opt.update(&mut w, &g, t, 0.02);
+            svc.wait_idle();
+        }
+        assert!(opt.adopted_version > 0, "no background root recompute adopted");
+        // The t=1500 snapshot published but was never adopted (the run
+        // ended); the active roots are backed by the t=1495 snapshot.
+        assert_eq!(opt.basis_snapshot_step(), Some(1495));
+        assert!(
+            w.max_abs_diff(&target) < 0.12,
+            "async Shampoo failed to converge: {}",
+            w.max_abs_diff(&target)
+        );
     }
 
     #[test]

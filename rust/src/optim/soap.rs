@@ -19,12 +19,14 @@
 //! the Adam second moment `V` keeps adapting every step in the slowly
 //! rotating basis, while Shampoo's preconditioner is simply stale.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::adafactor::factored_normalize;
 use super::hyper::{Hyper, RefreshMethod};
 use super::LayerOptimizer;
 use crate::linalg::{eigh, power_iter_refresh, Matrix};
+use crate::precond::{BasisHandle, BasisPayload, RefreshService};
 
 pub struct Soap {
     h: Hyper,
@@ -43,6 +45,14 @@ pub struct Soap {
     vc: Vec<f32>,
     initialized: bool,
     refresh_secs: f64,
+    /// Async refresh plumbing (`None` ⇒ inline refreshes). The handle is this
+    /// layer's private mailbox; the service is shared across layers.
+    service: Option<Arc<RefreshService>>,
+    handle: Option<Arc<BasisHandle>>,
+    /// Version of the last publication adopted into `ql`/`qr`.
+    adopted_version: u64,
+    /// Step whose factors back the ACTIVE basis (staleness = t − this).
+    basis_step: u64,
 }
 
 impl Soap {
@@ -70,6 +80,10 @@ impl Soap {
             vc: if factorized { vec![0.0; cols] } else { Vec::new() },
             initialized: false,
             refresh_secs: 0.0,
+            service: None,
+            handle: None,
+            adopted_version: 0,
+            basis_step: 0,
             h,
         }
     }
@@ -116,40 +130,100 @@ impl Soap {
         self.refresh_secs += t0.elapsed().as_secs_f64();
     }
 
-    /// Periodic eigenbasis refresh (Algorithm 4, or full eigh for the
-    /// Fig 7-right ablation).
-    fn refresh_basis(&mut self) {
-        let t0 = Instant::now();
-        match self.h.refresh {
-            RefreshMethod::QrPowerIteration => {
-                if let (Some(l), Some(ql)) = (&self.l, &self.ql) {
-                    self.ql = Some(power_iter_refresh(l, ql));
-                }
-                if let (Some(r), Some(qr)) = (&self.r, &self.qr) {
-                    self.qr = Some(power_iter_refresh(r, qr));
-                }
-            }
-            RefreshMethod::Eigh => {
+    /// The refresh math (Algorithm 4 power-iteration + QR, or warm `eigh`
+    /// for the Fig 7-right ablation), as a pure function of factor/basis
+    /// snapshots so the inline and background paths run IDENTICAL code.
+    fn compute_refresh(
+        method: RefreshMethod,
+        l: Option<&Matrix>,
+        r: Option<&Matrix>,
+        ql: Option<&Matrix>,
+        qr: Option<&Matrix>,
+    ) -> (Option<Matrix>, Option<Matrix>) {
+        let one_side = |p: Option<&Matrix>, q: Option<&Matrix>| -> Option<Matrix> {
+            match method {
+                RefreshMethod::QrPowerIteration => match (p, q) {
+                    (Some(p), Some(q)) => Some(power_iter_refresh(p, q)),
+                    _ => None,
+                },
                 // Warm-start from the current basis (§Perf): the EMA'd
                 // factors drift slowly between refreshes, so the previous
                 // eigenvectors are an excellent initial guess.
-                if let Some(l) = &self.l {
-                    let (_, v) = match &self.ql {
-                        Some(prev) => crate::linalg::eigh_warm(l, prev),
-                        None => eigh(l),
-                    };
-                    self.ql = Some(v);
+                RefreshMethod::Eigh => p.map(|p| {
+                    match q {
+                        Some(prev) => crate::linalg::eigh_warm(p, prev).1,
+                        None => eigh(p).1,
+                    }
+                }),
+            }
+        };
+        (one_side(l, ql), one_side(r, qr))
+    }
+
+    /// Periodic eigenbasis refresh, executed inline (synchronously).
+    fn refresh_basis(&mut self, t: u64) {
+        let t0 = Instant::now();
+        let (new_ql, new_qr) = Self::compute_refresh(
+            self.h.refresh,
+            self.l.as_ref(),
+            self.r.as_ref(),
+            self.ql.as_ref(),
+            self.qr.as_ref(),
+        );
+        if let Some(q) = new_ql {
+            self.ql = Some(q);
+        }
+        if let Some(q) = new_qr {
+            self.qr = Some(q);
+        }
+        self.basis_step = t;
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Async mode: swap in the newest published basis, if any. One atomic
+    /// load on the no-news path; the payload pair is adopted wholesale, so a
+    /// torn basis is impossible (see `precond::handle`).
+    fn adopt_published(&mut self) {
+        let Some(handle) = &self.handle else { return };
+        if handle.version() <= self.adopted_version {
+            return;
+        }
+        if let Some(published) = handle.latest() {
+            if published.version > self.adopted_version {
+                if let Some(q) = &published.payload.left {
+                    self.ql = Some(q.clone());
                 }
-                if let Some(r) = &self.r {
-                    let (_, v) = match &self.qr {
-                        Some(prev) => crate::linalg::eigh_warm(r, prev),
-                        None => eigh(r),
-                    };
-                    self.qr = Some(v);
+                if let Some(q) = &published.payload.right {
+                    self.qr = Some(q.clone());
                 }
+                self.adopted_version = published.version;
+                self.basis_step = published.snapshot_step;
             }
         }
-        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Async mode: snapshot the factor EMAs + current basis and hand the
+    /// refresh to the service. Skipped (not queued) while a previous refresh
+    /// is still in flight, so a slow decomposition sheds load instead of
+    /// building a backlog.
+    fn enqueue_refresh(&self, service: &Arc<RefreshService>, handle: &Arc<BasisHandle>, t: u64) {
+        if !handle.try_begin_refresh() {
+            return;
+        }
+        let method = self.h.refresh;
+        let l = self.l.clone();
+        let r = self.r.clone();
+        let ql = self.ql.clone();
+        let qr = self.qr.clone();
+        service.enqueue(
+            Arc::clone(handle),
+            t,
+            Box::new(move || {
+                let (left, right) =
+                    Self::compute_refresh(method, l.as_ref(), r.as_ref(), ql.as_ref(), qr.as_ref());
+                BasisPayload { left, right, left_aux: None, right_aux: None }
+            }),
+        );
     }
 }
 
@@ -158,7 +232,11 @@ impl LayerOptimizer for Soap {
         let h = self.h.clone();
         if !self.initialized {
             self.init_basis(g);
+            self.basis_step = t;
         }
+        // Async mode: pick up any basis the background service published
+        // since the last step — before projecting, so it's used immediately.
+        self.adopt_published();
 
         // Momentum in the original space, then rotate both G and M.
         self.m.ema_inplace(g, h.beta1);
@@ -208,8 +286,11 @@ impl LayerOptimizer for Soap {
             let gtg = g.matmul_tn(g);
             r.ema_inplace(&gtg, h.shampoo_beta);
         }
-        if t % h.precond_freq == 0 {
-            self.refresh_basis();
+        if h.is_refresh_step(t) {
+            match (self.service.clone(), self.handle.clone()) {
+                (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
+                _ => self.refresh_basis(t),
+            }
         }
     }
 
@@ -235,16 +316,34 @@ impl LayerOptimizer for Soap {
         self.refresh_secs
     }
 
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        if self.l.is_none() && self.r.is_none() {
+            return false; // both sides identity ⇒ nothing to refresh
+        }
+        self.service = Some(Arc::clone(service));
+        self.handle = Some(Arc::new(BasisHandle::new()));
+        self.adopted_version = 0;
+        true
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        (self.initialized && (self.ql.is_some() || self.qr.is_some()))
+            .then_some(self.basis_step)
+    }
+
     fn export_state(&self) -> Vec<Matrix> {
-        // Layout: [flags(1×4), M, then present-only: L, R, QL, QR, V, va, vc]
+        // Layout: [flags(1×5), M, then present-only: L, R, QL, QR, V, va, vc]
+        // flags[4] = basis_step, so staleness survives a checkpoint resume
+        // (f32 is exact up to 2^24 steps — far beyond our runs).
         let flags = Matrix::from_vec(
             1,
-            4,
+            5,
             vec![
                 self.initialized as u8 as f32,
                 self.l.is_some() as u8 as f32,
                 self.r.is_some() as u8 as f32,
                 self.v.is_some() as u8 as f32,
+                self.basis_step as f32,
             ],
         );
         let mut out = vec![flags, self.m.clone()];
@@ -263,11 +362,20 @@ impl LayerOptimizer for Soap {
     fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
         let mut it = state.into_iter();
         let flags = it.next().ok_or_else(|| anyhow::anyhow!("soap state empty"))?;
-        anyhow::ensure!(flags.cols == 4, "soap state flags malformed");
+        // cols == 4 accepts pre-basis_step checkpoints (staleness restarts
+        // from 0 after such a restore; the math is unaffected).
+        anyhow::ensure!(flags.cols == 4 || flags.cols == 5, "soap state flags malformed");
         self.initialized = flags.data[0] != 0.0;
         let has_l = flags.data[1] != 0.0;
         let has_r = flags.data[2] != 0.0;
         let has_v = flags.data[3] != 0.0;
+        self.basis_step = if flags.cols == 5 { flags.data[4] as u64 } else { 0 };
+        // Refreshes enqueued before the restore were computed from discarded
+        // factors; drain them, then skip every pre-restore publication.
+        if let (Some(service), Some(handle)) = (&self.service, &self.handle) {
+            service.wait_idle();
+            self.adopted_version = handle.version();
+        }
         self.m = it.next().ok_or_else(|| anyhow::anyhow!("soap state missing m"))?;
         let mut next = |what: &str| {
             it.next().ok_or_else(|| anyhow::anyhow!("soap state missing {what}"))
@@ -412,6 +520,98 @@ mod tests {
         let g = Matrix::randn(&mut rng, m, n, 1.0);
         o.update(&mut w, &g, 1, 0.0);
         assert_eq!(o.state_bytes(), (2 * n * n + m * n + m + n) * 4);
+    }
+
+    #[test]
+    fn async_mode_adopts_published_basis_and_stays_orthonormal() {
+        // Drive the async path deterministically: drain the service after
+        // each step so every refresh publishes before the next step adopts.
+        let svc = Arc::new(RefreshService::new(1));
+        let mut opt = Soap::new(8, 8, h_base()); // f = 5
+        assert!(opt.attach_async(&svc));
+        let mut rng = Rng::new(48);
+        let mut w = Matrix::zeros(8, 8);
+        for t in 1..=23 {
+            let g = Matrix::randn(&mut rng, 8, 8, 1.0);
+            opt.update(&mut w, &g, t, 0.01);
+            svc.wait_idle();
+        }
+        // Refresh steps at t = 5, 10, 15, 20 ⇒ 4 publications, all adopted.
+        assert_eq!(svc.stats().completed, 4);
+        assert_eq!(opt.adopted_version, 4);
+        assert_eq!(opt.basis_snapshot_step(), Some(20));
+        let ql = opt.ql.as_ref().unwrap();
+        let qtq = ql.matmul_tn(ql);
+        assert!(
+            qtq.max_abs_diff(&Matrix::eye(8)) < 1e-3,
+            "async-adopted basis not orthonormal: {}",
+            qtq.max_abs_diff(&Matrix::eye(8))
+        );
+        // Background work must NOT appear in the hot-path refresh account.
+        let inline_share = opt.refresh_seconds();
+        assert!(svc.refresh_seconds() > 0.0);
+        // Only the first-step eigh init runs inline in async mode.
+        assert!(inline_share < svc.refresh_seconds() + 1.0);
+        assert!(w.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn async_mode_minimizes_quadratic_like_inline() {
+        let svc = Arc::new(RefreshService::new(1));
+        let mut rng = Rng::new(49);
+        let target = Matrix::randn(&mut rng, 6, 4, 1.0);
+
+        let run = |mut opt: Soap, drain: Option<&RefreshService>| -> Matrix {
+            let mut w = Matrix::zeros(6, 4);
+            for t in 1..=1500 {
+                let g = w.sub(&target).scale(2.0);
+                opt.update(&mut w, &g, t, 0.02);
+                if let Some(s) = drain {
+                    s.wait_idle();
+                }
+            }
+            w
+        };
+        let w_inline = run(Soap::new(6, 4, h_base()), None);
+        let mut async_opt = Soap::new(6, 4, h_base());
+        assert!(async_opt.attach_async(&svc));
+        let w_async = run(async_opt, Some(&*svc));
+
+        // Both converge; the delayed basis costs at most a whisker.
+        assert!(w_inline.max_abs_diff(&target) < 0.1);
+        assert!(
+            w_async.max_abs_diff(&target) < 0.12,
+            "async SOAP failed to converge: {}",
+            w_async.max_abs_diff(&target)
+        );
+    }
+
+    #[test]
+    fn attach_async_refuses_identity_only_layers() {
+        let svc = Arc::new(RefreshService::new(1));
+        let h = Hyper { max_precond_dim: 0, ..Hyper::default() };
+        let mut opt = Soap::new(5, 7, h);
+        assert!(!opt.attach_async(&svc), "nothing to refresh ⇒ stay inline");
+        assert_eq!(opt.basis_snapshot_step(), None);
+    }
+
+    #[test]
+    fn inline_refresh_phase_staggers_the_schedule() {
+        // φ = 2, f = 5 ⇒ refreshes at t = 2, 7, 12 … Verify via basis_step.
+        let h = Hyper { refresh_phase: 2, ..h_base() };
+        let mut opt = Soap::new(4, 4, h);
+        let mut rng = Rng::new(50);
+        let mut w = Matrix::zeros(4, 4);
+        for t in 1..=8 {
+            let g = Matrix::randn(&mut rng, 4, 4, 1.0);
+            opt.update(&mut w, &g, t, 0.01);
+            let expect = match t {
+                1 => 1, // init
+                2..=6 => 2,
+                _ => 7,
+            };
+            assert_eq!(opt.basis_snapshot_step(), Some(expect), "at t={t}");
+        }
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Versioned, double-buffered publication point for a layer's refreshed
+//! preconditioner artifacts.
+//!
+//! One [`BasisHandle`] pairs one optimizer layer (the consumer, on a shard
+//! worker thread) with the refresh service (the producer, on the background
+//! pool). The producer publishes a complete [`BasisPayload`] behind a single
+//! `Arc` swap, so a consumer can never observe a torn (half-updated) basis:
+//! it either sees the previous complete pair or the new complete pair. A
+//! monotonic version counter lets the consumer's hot path detect "nothing
+//! new" with one atomic load — no lock, no allocation — on the overwhelming
+//! majority of steps.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::Matrix;
+
+/// The product of one background refresh. Field meaning is owner-defined:
+/// SOAP publishes `left`/`right` = `Q_L`/`Q_R`; Shampoo publishes
+/// `left`/`right` = `L^{-1/e}`/`R^{-1/e}` with the warm-start eigenvector
+/// caches in the `*_aux` slots. `None` slots mean "that side is identity /
+/// not preconditioned" and must be left untouched by the consumer.
+#[derive(Clone, Debug, Default)]
+pub struct BasisPayload {
+    pub left: Option<Matrix>,
+    pub right: Option<Matrix>,
+    pub left_aux: Option<Matrix>,
+    pub right_aux: Option<Matrix>,
+}
+
+/// A published payload plus its provenance.
+#[derive(Clone, Debug)]
+pub struct PublishedBasis {
+    pub payload: BasisPayload,
+    /// Step whose factor EMAs were snapshotted to compute this payload — the
+    /// consumer's staleness metric is `current_step - snapshot_step`.
+    pub snapshot_step: u64,
+    /// Monotonic publication counter (first publish = 1).
+    pub version: u64,
+}
+
+/// Producer/consumer mailbox for one layer's refreshed basis.
+#[derive(Debug, Default)]
+pub struct BasisHandle {
+    /// Latest complete publication. The `Arc` is the double buffer: a reader
+    /// that cloned it keeps the old payload alive while the writer installs
+    /// the new one.
+    slot: Mutex<Option<Arc<PublishedBasis>>>,
+    /// Version of the newest publication (0 = none yet). Written with
+    /// `Release` after the slot, read with `Acquire`, so `version() >
+    /// adopted` guarantees `latest()` sees at least that publication.
+    version: AtomicU64,
+    /// Refresh-in-flight gate: the consumer only enqueues a new snapshot once
+    /// the previous one has published (or aborted), bounding the service
+    /// queue at one job per layer.
+    in_flight: AtomicBool,
+}
+
+impl BasisHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Newest published version (0 when nothing has been published).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Latest complete publication, if any.
+    pub fn latest(&self) -> Option<Arc<PublishedBasis>> {
+        self.slot.lock().unwrap().clone()
+    }
+
+    /// Producer side: install a complete payload and bump the version.
+    /// Returns the new version. Also clears the in-flight gate.
+    pub fn publish(&self, payload: BasisPayload, snapshot_step: u64) -> u64 {
+        let mut slot = self.slot.lock().unwrap();
+        let version = self.version.load(Ordering::Relaxed) + 1;
+        *slot = Some(Arc::new(PublishedBasis { payload, snapshot_step, version }));
+        drop(slot);
+        self.version.store(version, Ordering::Release);
+        self.in_flight.store(false, Ordering::Release);
+        version
+    }
+
+    /// Consumer side: claim the right to enqueue a refresh. Returns `false`
+    /// while a previous refresh is still in flight.
+    pub fn try_begin_refresh(&self) -> bool {
+        !self.in_flight.swap(true, Ordering::AcqRel)
+    }
+
+    /// Producer side: release the gate without publishing (compute panicked
+    /// or was skipped), so the consumer can retry at its next refresh step.
+    pub fn abort_refresh(&self) {
+        self.in_flight.store(false, Ordering::Release);
+    }
+
+    pub fn refresh_in_flight(&self) -> bool {
+        self.in_flight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(k: f32, n: usize) -> BasisPayload {
+        BasisPayload {
+            left: Some(Matrix::eye(n).scale(k)),
+            right: Some(Matrix::eye(2 * n).scale(k)),
+            left_aux: None,
+            right_aux: None,
+        }
+    }
+
+    #[test]
+    fn versions_are_monotonic_and_latest_wins() {
+        let h = BasisHandle::new();
+        assert_eq!(h.version(), 0);
+        assert!(h.latest().is_none());
+        assert_eq!(h.publish(payload(1.0, 3), 10), 1);
+        assert_eq!(h.publish(payload(2.0, 3), 20), 2);
+        let latest = h.latest().unwrap();
+        assert_eq!(latest.version, 2);
+        assert_eq!(latest.snapshot_step, 20);
+        assert_eq!(latest.payload.left.as_ref().unwrap().at(0, 0), 2.0);
+    }
+
+    #[test]
+    fn in_flight_gate_is_exclusive_until_publish() {
+        let h = BasisHandle::new();
+        assert!(h.try_begin_refresh());
+        assert!(!h.try_begin_refresh(), "second enqueue while in flight");
+        h.publish(payload(1.0, 2), 1);
+        assert!(h.try_begin_refresh(), "publish must release the gate");
+        h.abort_refresh();
+        assert!(h.try_begin_refresh(), "abort must release the gate");
+    }
+
+    #[test]
+    fn concurrent_publish_never_tears_the_pair() {
+        // Writer publishes matched (left, right) pairs scaled by the same k;
+        // a reader hammering `latest()` must only ever observe matched pairs
+        // — the Arc swap makes a half-updated basis unrepresentable.
+        let h = Arc::new(BasisHandle::new());
+        let writer = {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                for k in 1..=200 {
+                    h.publish(payload(k as f32, 4), k as u64);
+                }
+            })
+        };
+        let reader = {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                let mut seen = 0u64;
+                while seen < 200 {
+                    if let Some(p) = h.latest() {
+                        let l = p.payload.left.as_ref().unwrap().at(0, 0);
+                        let r = p.payload.right.as_ref().unwrap().at(0, 0);
+                        assert_eq!(l, r, "torn basis observed at version {}", p.version);
+                        assert_eq!(l as u64, p.snapshot_step, "payload/step mismatch");
+                        seen = seen.max(p.version);
+                    }
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+    }
+}

@@ -1,0 +1,69 @@
+//! Asynchronous preconditioner refresh — SOAP's periodic eigenbasis updates
+//! (and Shampoo's inverse-root recomputes) taken off the training hot path.
+//!
+//! SOAP's entire wall-clock overhead over Adam is the periodic refresh
+//! (paper §7.3, Fig 7): every step `t ≡ φ (mod f)` the inline implementation
+//! stalls on a power-iteration + QR (or warm `eigh`). But SOAP is *designed*
+//! to tolerate a stale basis — the Adam second moment keeps adapting every
+//! step in the slowly rotating eigenbasis (§1), and "Purifying Shampoo"
+//! (Eschenhagen et al., 2025) shows the basis tolerates substantial delay
+//! when the second moment stays fresh. Distributed Shampoo deployments
+//! (Gupta et al., 2018) exploit exactly this by computing decompositions on
+//! dedicated workers. This module is that architecture for soap-lab:
+//!
+//! - [`BasisHandle`] — a versioned, double-buffered publication slot. The
+//!   producer swaps in a complete [`BasisPayload`] behind one `Arc`; the
+//!   consumer detects news with a single atomic load and can never observe
+//!   a torn (half-updated) basis.
+//! - [`RefreshService`] — a dedicated [`crate::util::pool::ThreadPool`] that
+//!   runs snapshot → decompose → publish, with latency/panic accounting.
+//!
+//! Mode selection lives in [`crate::optim::Hyper::refresh_mode`]
+//! ([`RefreshMode::Inline`] runs the same synchronous math as before and is
+//! fully deterministic — same seed ⇒ same trajectory at any worker count;
+//! [`RefreshMode::Async`] enqueues to the service), and the coordinator
+//! staggers per-layer refresh phases (`layer_idx % f`, both modes) so layers
+//! don't all refresh or enqueue on the same step — note this *does* shift
+//! refresh steps relative to the pre-stagger all-at-once schedule. Staleness
+//! (steps since the active basis' factors were snapshotted) is reported
+//! through `StepTiming::staleness_steps`.
+
+pub mod handle;
+pub mod service;
+
+pub use handle::{BasisHandle, BasisPayload, PublishedBasis};
+pub use service::{RefreshService, RefreshStats};
+
+/// How a layer's periodic preconditioner recompute is executed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RefreshMode {
+    /// Recompute synchronously inside `LayerOptimizer::update` — fully
+    /// deterministic trajectories (same seed ⇒ same weights, bitwise, at any
+    /// worker count), at each layer's staggered refresh phase.
+    #[default]
+    Inline,
+    /// Snapshot the factors and hand the recompute to the background
+    /// [`RefreshService`]; adopt the published result at a later step. The
+    /// hot path never blocks on linear algebra.
+    Async,
+}
+
+impl RefreshMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefreshMode::Inline => "inline",
+            RefreshMode::Async => "async",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_defaults_inline() {
+        assert_eq!(RefreshMode::default(), RefreshMode::Inline);
+        assert_eq!(RefreshMode::Async.name(), "async");
+    }
+}

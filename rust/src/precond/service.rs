@@ -1,0 +1,237 @@
+//! Background eigenbasis refresh service.
+//!
+//! Owns a **dedicated** [`ThreadPool`] (never the shard workers' pool: shard
+//! workers block inside `ShardedOptimizer::step` joins, so sharing one pool
+//! would let a step's layer updates queue behind refresh jobs they are
+//! themselves waiting on — the classic self-deadlock this service exists to
+//! avoid). Consumers snapshot their factor EMAs, enqueue a compute closure,
+//! and keep stepping on the stale basis; the service runs the closure, times
+//! it, and publishes the result through the layer's [`BasisHandle`].
+//!
+//! The per-layer in-flight gate lives on the handle (`try_begin_refresh`), so
+//! a slow refresh sheds subsequent snapshots instead of building a queue.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::handle::{BasisHandle, BasisPayload};
+use crate::util::pool::ThreadPool;
+
+/// Aggregate counters across all completed refreshes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshStats {
+    /// Refreshes that ran to completion and published.
+    pub completed: u64,
+    /// Refresh computations that panicked (payload discarded, gate released).
+    pub failed: u64,
+    /// Total seconds of background linear algebra.
+    pub total_secs: f64,
+    /// Slowest single refresh.
+    pub max_secs: f64,
+}
+
+#[derive(Default)]
+struct Shared {
+    pending: Mutex<usize>,
+    idle: Condvar,
+    stats: Mutex<RefreshStats>,
+}
+
+/// The background refresh executor; cheap to share via `Arc`.
+pub struct RefreshService {
+    pool: ThreadPool,
+    shared: Arc<Shared>,
+}
+
+impl RefreshService {
+    /// Spawn a service with `workers` dedicated threads (≥ 1 enforced).
+    pub fn new(workers: usize) -> Self {
+        Self {
+            pool: ThreadPool::new(workers.max(1)),
+            shared: Arc::new(Shared::default()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Enqueue one refresh: run `compute` on the pool and publish its payload
+    /// to `handle`, stamped with `snapshot_step`. The caller is expected to
+    /// have claimed `handle.try_begin_refresh()` first; on panic inside
+    /// `compute` the gate is released and nothing is published.
+    pub fn enqueue(
+        &self,
+        handle: Arc<BasisHandle>,
+        snapshot_step: u64,
+        compute: Box<dyn FnOnce() -> BasisPayload + Send + 'static>,
+    ) {
+        *self.shared.pending.lock().unwrap() += 1;
+        let shared = Arc::clone(&self.shared);
+        self.pool.submit(move || {
+            let t0 = Instant::now();
+            let result = catch_unwind(AssertUnwindSafe(compute));
+            let dt = t0.elapsed().as_secs_f64();
+            {
+                let mut stats = shared.stats.lock().unwrap();
+                match result {
+                    Ok(payload) => {
+                        handle.publish(payload, snapshot_step);
+                        stats.completed += 1;
+                        stats.total_secs += dt;
+                        stats.max_secs = stats.max_secs.max(dt);
+                    }
+                    Err(_) => {
+                        handle.abort_refresh();
+                        stats.failed += 1;
+                    }
+                }
+            }
+            let mut pending = shared.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                shared.idle.notify_all();
+            }
+        });
+    }
+
+    /// Jobs enqueued but not yet finished.
+    pub fn pending(&self) -> usize {
+        *self.shared.pending.lock().unwrap()
+    }
+
+    /// Block until every enqueued refresh has finished (tests, shutdown
+    /// barriers). Safe to call from any thread except a pool worker.
+    pub fn wait_idle(&self) {
+        let mut pending = self.shared.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.shared.idle.wait(pending).unwrap();
+        }
+    }
+
+    pub fn stats(&self) -> RefreshStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Cumulative background refresh seconds — the async analogue of
+    /// `LayerOptimizer::refresh_seconds`, surfaced per step by the trainer
+    /// as `StepTiming::bg_refresh_s`.
+    pub fn refresh_seconds(&self) -> f64 {
+        self.stats().total_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{power_iter_refresh, qr_positive, Matrix};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn publishes_and_counts() {
+        let svc = RefreshService::new(2);
+        let handle = Arc::new(BasisHandle::new());
+        for step in 1..=4u64 {
+            // wait_idle below guarantees the previous publish released the
+            // gate, so each claim must succeed — the optimizer's cadence.
+            assert!(handle.try_begin_refresh());
+            svc.enqueue(
+                Arc::clone(&handle),
+                step,
+                Box::new(move || BasisPayload {
+                    left: Some(Matrix::eye(3).scale(step as f32)),
+                    ..Default::default()
+                }),
+            );
+            svc.wait_idle();
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.total_secs >= 0.0 && stats.max_secs <= stats.total_secs + 1e-12);
+        let latest = handle.latest().unwrap();
+        assert_eq!(latest.version, 4);
+        assert_eq!(latest.snapshot_step, 4);
+    }
+
+    #[test]
+    fn delayed_swap_is_never_torn_and_stays_orthonormal() {
+        // The satellite invariant: a slow background refresh must never
+        // expose a non-orthonormal or half-updated basis. The compute closure
+        // sleeps to force the consumer to observe the stale version first.
+        let mut rng = Rng::new(7);
+        let n = 16;
+        let p = Matrix::rand_psd(&mut rng, n);
+        let (q0, _) = qr_positive(&Matrix::randn(&mut rng, n, n, 1.0));
+
+        let svc = RefreshService::new(1);
+        let handle = Arc::new(BasisHandle::new());
+        assert!(handle.try_begin_refresh());
+        let (pj, qj) = (p.clone(), q0.clone());
+        svc.enqueue(
+            Arc::clone(&handle),
+            42,
+            Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+                let q = power_iter_refresh(&pj, &qj);
+                BasisPayload { left: Some(q.clone()), right: Some(q), ..Default::default() }
+            }),
+        );
+        // While the refresh is in flight the handle must still serve the old
+        // state (here: nothing yet) — never a partial result.
+        assert!(handle.latest().is_none() || handle.version() == 1);
+        svc.wait_idle();
+        let published = handle.latest().expect("refresh published");
+        assert_eq!(published.version, 1);
+        assert_eq!(published.snapshot_step, 42);
+        let ql = published.payload.left.as_ref().unwrap();
+        let qr = published.payload.right.as_ref().unwrap();
+        assert_eq!(ql.data, qr.data, "pair published atomically");
+        let qtq = ql.matmul_tn(ql);
+        assert!(
+            qtq.max_abs_diff(&Matrix::eye(n)) < 1e-4,
+            "async-refreshed basis lost orthonormality: {}",
+            qtq.max_abs_diff(&Matrix::eye(n))
+        );
+        assert!(!handle.refresh_in_flight());
+    }
+
+    #[test]
+    fn panicking_compute_releases_gate_without_publishing() {
+        let svc = RefreshService::new(1);
+        let handle = Arc::new(BasisHandle::new());
+        assert!(handle.try_begin_refresh());
+        svc.enqueue(Arc::clone(&handle), 1, Box::new(|| panic!("synthetic refresh failure")));
+        svc.wait_idle();
+        assert_eq!(svc.stats().failed, 1);
+        assert_eq!(handle.version(), 0, "failed refresh must not publish");
+        assert!(handle.try_begin_refresh(), "gate released after failure");
+    }
+
+    #[test]
+    fn many_layers_share_the_service() {
+        let svc = Arc::new(RefreshService::new(3));
+        let handles: Vec<Arc<BasisHandle>> =
+            (0..8).map(|_| Arc::new(BasisHandle::new())).collect();
+        for (i, h) in handles.iter().enumerate() {
+            assert!(h.try_begin_refresh());
+            let k = i as f32;
+            svc.enqueue(
+                Arc::clone(h),
+                i as u64,
+                Box::new(move || BasisPayload {
+                    left: Some(Matrix::eye(2).scale(k)),
+                    ..Default::default()
+                }),
+            );
+        }
+        svc.wait_idle();
+        for (i, h) in handles.iter().enumerate() {
+            let p = h.latest().unwrap();
+            assert_eq!(p.snapshot_step, i as u64);
+            assert_eq!(p.payload.left.as_ref().unwrap().at(0, 0), i as f32);
+        }
+        assert_eq!(svc.stats().completed, 8);
+    }
+}

@@ -3,7 +3,7 @@
 //! leans on; shapes and contents are randomized per case.
 
 use soap_lab::linalg::{
-    eigh, inv_root_eigh, power_iter_refresh, qr, qr_positive, roots::root_eigh, Matrix,
+    eigh, eigh_warm, inv_root_eigh, power_iter_refresh, qr, qr_positive, roots::root_eigh, Matrix,
 };
 use soap_lab::util::prop::{self, ensure};
 
@@ -102,6 +102,45 @@ fn prop_root_and_inv_root_cancel() {
         ensure(
             check.max_abs_diff(&Matrix::eye(n)) < 0.05,
             format!("err {}", check.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_power_iter_refresh_orthonormal_on_spd() {
+    // The async refresh service publishes exactly this product; the basis
+    // the optimizer adopts must be orthonormal to ‖QᵀQ − I‖∞ < 1e-4 (the
+    // precond invariant) for ANY SPD factor snapshot and warm-start basis.
+    prop::check("refresh: ‖QᵀQ − I‖∞ < 1e-4 on random SPD", 40, |rng| {
+        let n = 2 + rng.below(24) as usize;
+        let p = Matrix::rand_psd(rng, n);
+        let (q0, _) = qr_positive(&Matrix::randn(rng, n, n, 1.0));
+        let q = power_iter_refresh(&p, &q0);
+        let qtq = q.matmul_tn(&q);
+        ensure(
+            qtq.max_abs_diff(&Matrix::eye(n)) < 1e-4,
+            format!("n={n}: ‖QᵀQ−I‖∞ = {}", qtq.max_abs_diff(&Matrix::eye(n))),
+        )
+    });
+}
+
+#[test]
+fn prop_eigh_warm_orthonormal_on_spd() {
+    // Warm-started eigh (the RefreshMethod::Eigh arm and Shampoo's root
+    // recompute) must return an orthonormal eigenvector matrix even when the
+    // warm-start basis comes from a perturbed earlier factor — the
+    // refresh-over-EMA'd-factors situation.
+    prop::check("eigh_warm: ‖VᵀV − I‖∞ < 1e-4 on random SPD", 30, |rng| {
+        let n = 2 + rng.below(24) as usize;
+        let p = Matrix::rand_psd(rng, n);
+        let (_, v_prev) = eigh(&p);
+        // Drift the factor the way the EMA does between refreshes.
+        let p2 = p.add(&Matrix::rand_psd(rng, n).scale(0.05));
+        let (_, v) = eigh_warm(&p2, &v_prev);
+        let vtv = v.matmul_tn(&v);
+        ensure(
+            vtv.max_abs_diff(&Matrix::eye(n)) < 1e-4,
+            format!("n={n}: ‖VᵀV−I‖∞ = {}", vtv.max_abs_diff(&Matrix::eye(n))),
         )
     });
 }

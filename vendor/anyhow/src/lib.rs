@@ -1,0 +1,241 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The training image has no crates.io registry, so this vendored path
+//! dependency provides the subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! and the [`Context`] extension trait for `Result`/`Option`. Semantics match
+//! the real crate for these entry points (message-carrying dynamic error with
+//! an optional source), minus backtraces and downcasting.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error: a message plus an optional source error.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message (the chain is preserved as
+    /// the new error's source).
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Self { msg: context.to_string(), source: Some(Box::new(Wrapped(self))) }
+    }
+
+    /// Walk the source chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next = self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+/// Adapter so an [`Error`] can sit inside another error's `source` slot
+/// (`Error` itself deliberately does not implement `std::error::Error`,
+/// mirroring the real anyhow, which keeps the blanket `From` below coherent).
+struct Wrapped(Error);
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl StdError for Wrapped {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` prints the full cause chain inline, like anyhow.
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> = self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Conversion-to-[`Error`] bound for [`Context`] — implemented for both
+/// `anyhow::Error` itself and std errors (the disjointness holds because
+/// `Error` deliberately does not implement `std::error::Error`; this is the
+/// real anyhow's coherence pattern).
+pub trait IntoAnyhow {
+    fn into_anyhow(self) -> Error;
+}
+
+impl IntoAnyhow for Error {
+    fn into_anyhow(self) -> Error {
+        self
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoAnyhow for E {
+    fn into_anyhow(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoAnyhow> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let _ = std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        assert!(e.source.is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 41;
+        let e = anyhow!("x was {x}");
+        assert_eq!(e.to_string(), "x was 41");
+        let e = anyhow!("{} {}", "a", "b");
+        assert_eq!(e.to_string(), "a b");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag must hold");
+            ensure!(flag);
+            if !flag {
+                bail!("unreachable {}", 1);
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag must hold");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        let e = fails_io().context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        assert!(format!("{e:#}").contains("loading config: "));
+        assert!(e.chain().count() >= 1);
+    }
+}

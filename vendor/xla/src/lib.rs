@@ -1,0 +1,257 @@
+//! No-runtime stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The training image does not ship the XLA shared library, so this vendored
+//! crate provides the API surface `soap_lab::runtime` compiles against:
+//!
+//! - [`Literal`] is **fully functional** — an in-memory typed tensor with the
+//!   `vec1`/`reshape`/`to_vec`/`scalar`/`to_tuple` operations the engine's
+//!   host-side conversions use (and the engine's unit tests exercise).
+//! - [`PjRtClient::cpu`] returns a descriptive error, so every artifact code
+//!   path fails fast and gracefully: callers already gate on
+//!   `artifacts/manifest.json` existing and propagate `anyhow` errors.
+//!
+//! Swapping in the real bindings is a Cargo.toml change only; no source edits.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs' (only `Display` is consumed by the engine).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_RUNTIME: &str = "XLA/PJRT runtime unavailable: soap-lab was built against the vendored \
+     no-op `xla` stub (this image carries no libxla). Native paths \
+     (`Trainer::new_native`, sharded optimizers, all unit/property tests) are \
+     unaffected; artifact paths need the real xla-rs bindings.";
+
+/// Element types a [`Literal`] can hold.
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+pub trait NativeType: sealed::Sealed + Copy {
+    fn store(data: Vec<Self>) -> Storage;
+    fn load(s: &Storage) -> Option<Vec<Self>>;
+    const NAME: &'static str;
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+    fn load(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn store(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+    fn load(s: &Storage) -> Option<Vec<Self>> {
+        match s {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+/// In-memory typed tensor (host side of xla-rs' `Literal`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::store(data.to_vec()) }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { dims: Vec::new(), storage: Storage::F32(vec![x]) }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: {have} elements != {want}",
+                self.dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flat element buffer as `Vec<T>`; errors on dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage)
+            .ok_or_else(|| Error::new(format!("literal is not {}", T::NAME)))
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Destructure a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(parts) => Ok(parts),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    /// Build a tuple literal (host-side convenience, used by tests).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![parts.len() as i64], storage: Storage::Tuple(parts) }
+    }
+}
+
+/// Parsed HLO module handle (stub: retains the path for error messages).
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::new(format!("no such artifact file: {path:?}")));
+        }
+        Ok(Self { path: path.display().to_string() })
+    }
+}
+
+/// Computation handle (stub).
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    origin: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { origin: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub build.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::new(NO_RUNTIME))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(NO_RUNTIME))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub build — constructing a
+/// client already fails — but the types must line up for the engine).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(NO_RUNTIME))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(NO_RUNTIME))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.element_count(), 1);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![2.5]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_fails_gracefully() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
