@@ -2,6 +2,14 @@
 //! the EXPERIMENTS.md §Perf iteration log, plus a trainer-level refresh
 //! breakdown (inline vs async) read entirely from `TrainLog` — no reaching
 //! into optimizer internals.
+//!
+//! The trainer probe accepts any optimizer — preset name or composition
+//! spec — as the first CLI argument or `SOAP_PROBE_OPT`, so novel combos
+//! can be profiled without code changes:
+//!
+//! ```sh
+//! cargo run --release --example perf_probe -- basis=eigen:one-sided,inner=adafactor
+//! ```
 fn main() {
     use soap_lab::coordinator::{Trainer, TrainerConfig};
     use soap_lab::linalg::{eigh, eigh_warm, qr_positive, Matrix};
@@ -39,10 +47,18 @@ fn main() {
     // Trainer-level refresh accounting straight off the TrainLog — the
     // numbers the Fig 7 benches consume (refresh_seconds_total/refresh_frac)
     // plus the async-mode split (bg_refresh + staleness).
-    println!("\n== SOAP refresh accounting (native NPLM, f=10, 120 steps) ==");
+    let opt_spec = std::env::args()
+        .nth(1)
+        .or_else(|| std::env::var("SOAP_PROBE_OPT").ok())
+        .unwrap_or_else(|| "soap".to_string());
+    let opt = OptKind::parse(&opt_spec).unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    });
+    println!("\n== {} refresh accounting (native NPLM, f=10, 120 steps) ==", opt.name());
     for mode in [RefreshMode::Inline, RefreshMode::Async] {
         let cfg = TrainerConfig {
-            opt: OptKind::Soap,
+            opt,
             hyper: Hyper::default().with_refresh_mode(mode),
             schedule: Schedule::Constant { lr: 0.01 },
             steps: 120,

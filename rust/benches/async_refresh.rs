@@ -8,7 +8,13 @@
 //! `bench_results/async_refresh.json` for the record.
 //!
 //! Env knobs: `SOAP_BENCH_STEPS` (default 500), `SOAP_ASYNC_BENCH_F`
-//! (default 10).
+//! (default 10), and `SOAP_BENCH_OPT` (or the first CLI arg) — any preset
+//! name or `basis=…,inner=…[,graft=…]` composition spec, so novel combos
+//! can be benchmarked without code changes:
+//!
+//! ```sh
+//! cargo bench --bench async_refresh -- basis=eigen:one-sided,inner=adafactor
+//! ```
 
 use soap_lab::coordinator::{Trainer, TrainerConfig, TrainLog};
 use soap_lab::experiments::harness::bench_steps;
@@ -23,10 +29,10 @@ struct Arm {
     staleness: f64,
 }
 
-fn run(mode: RefreshMode, steps: u64, freq: u64) -> Arm {
+fn run(opt: OptKind, mode: RefreshMode, steps: u64, freq: u64) -> Arm {
     let hyper = Hyper { precond_freq: freq, ..Hyper::default() }.with_refresh_mode(mode);
     let cfg = TrainerConfig {
-        opt: OptKind::Soap,
+        opt,
         hyper,
         schedule: Schedule::Constant { lr: 0.01 },
         steps,
@@ -72,10 +78,21 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(10);
-    println!("async_refresh: native NPLM, steps={steps} f={freq}");
+    // Optimizer under test: preset name or composition spec (first non-flag
+    // CLI arg, else SOAP_BENCH_OPT, else soap).
+    let opt_spec = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .or_else(|| std::env::var("SOAP_BENCH_OPT").ok())
+        .unwrap_or_else(|| "soap".to_string());
+    let opt = OptKind::parse(&opt_spec).unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    });
+    println!("async_refresh: native NPLM, optimizer={} steps={steps} f={freq}", opt.name());
 
-    let inline = run(RefreshMode::Inline, steps, freq);
-    let asynced = run(RefreshMode::Async, steps, freq);
+    let inline = run(opt, RefreshMode::Inline, steps, freq);
+    let asynced = run(opt, RefreshMode::Async, steps, freq);
 
     let row = |name: &str, a: &Arm| {
         println!(
@@ -137,6 +154,7 @@ fn main() {
 
     let out = Json::obj(vec![
         ("bench", Json::str("async_refresh")),
+        ("optimizer", Json::str(opt.name())),
         ("model", Json::str(inline.log.model.clone())),
         ("steps", Json::num(steps as f64)),
         ("precond_freq", Json::num(freq as f64)),

@@ -93,6 +93,30 @@ impl RunConfig {
         if args.get("refresh-workers").is_some() {
             rc.refresh_workers = args.parse("refresh-workers")?;
         }
+        // Named forms of the --refresh-eigh / --async-refresh flags; both
+        // parse paths enumerate their valid values on error, and a named
+        // option that contradicts its legacy flag is rejected rather than
+        // silently resolved.
+        rc.refresh_eigh = args.flag("refresh-eigh");
+        if let Some(s) = args.get("refresh-method").filter(|s| !s.is_empty()) {
+            let method = RefreshMethod::parse(s)?;
+            anyhow::ensure!(
+                !(rc.refresh_eigh && method != RefreshMethod::Eigh),
+                "--refresh-method {} contradicts --refresh-eigh",
+                method.name()
+            );
+            rc.refresh_eigh = method == RefreshMethod::Eigh;
+        }
+        rc.async_refresh = args.flag("async-refresh");
+        if let Some(s) = args.get("refresh-mode").filter(|s| !s.is_empty()) {
+            let mode = RefreshMode::parse(s)?;
+            anyhow::ensure!(
+                !(rc.async_refresh && mode != RefreshMode::Async),
+                "--refresh-mode {} contradicts --async-refresh",
+                mode.name()
+            );
+            rc.async_refresh = mode == RefreshMode::Async;
+        }
         if let Some(d) = args.get("artifacts") {
             rc.artifacts_dir = d.to_string();
         }
@@ -101,9 +125,13 @@ impl RunConfig {
         }
         rc.one_sided = args.flag("one-sided");
         rc.factorized = args.flag("factorized");
-        rc.refresh_eigh = args.flag("refresh-eigh");
-        rc.async_refresh = args.flag("async-refresh");
         rc.pjrt_optimizer = args.flag("pjrt-optimizer");
+        // Same policy as the refresh options above: a composition spec that
+        // contradicts the legacy variant flags is an error, not a silent tie
+        // break.
+        if let OptKind::Composed(spec) = &rc.optimizer {
+            spec.check_flag_consistency(rc.one_sided, rc.factorized)?;
+        }
         rc.validate()?;
         Ok(rc)
     }
@@ -124,15 +152,23 @@ impl RunConfig {
         );
         if self.pjrt_optimizer {
             anyhow::ensure!(
-                matches!(self.optimizer, OptKind::Soap | OptKind::AdamW),
-                "--pjrt-optimizer supports soap|adamw"
+                matches!(self.optimizer.canonical(), OptKind::Soap | OptKind::AdamW),
+                "--pjrt-optimizer supports soap|adamw (or composition specs canonical to them)"
+            );
+            // The artifacts only implement the full-V Adam engine; reject
+            // factorized/adafactor-engine configs instead of silently
+            // running (and mislabeling) the wrong engine.
+            anyhow::ensure!(
+                !self.hyper().factorized,
+                "--pjrt-optimizer runs the full-V SOAP artifacts; the factorized \
+                 (adafactor-engine) variant is native-only"
             );
         }
         Ok(())
     }
 
     pub fn hyper(&self) -> Hyper {
-        Hyper {
+        let mut h = Hyper {
             precond_freq: self.precond_freq,
             one_sided: self.one_sided,
             factorized: self.factorized,
@@ -140,7 +176,14 @@ impl RunConfig {
             refresh_mode: if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline },
             refresh_workers: self.refresh_workers,
             ..Hyper::default()
+        };
+        // A composition spec's structural choices (side selection, factored
+        // engine, graft activation) override the per-flag knobs, so the
+        // resolved Hyper agrees with what the spec will build.
+        if let OptKind::Composed(spec) = &self.optimizer {
+            spec.apply(&mut h);
         }
+        h
     }
 
     pub fn schedule(&self) -> Schedule {
@@ -222,6 +265,30 @@ mod tests {
         let h = rc.hyper();
         assert_eq!(h.refresh_mode, RefreshMode::Async);
         assert_eq!(h.refresh_workers, 3);
+    }
+
+    #[test]
+    fn composed_spec_reaches_hyper() {
+        let mut rc = RunConfig::default();
+        rc.optimizer = OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+        rc.validate().unwrap();
+        let h = rc.hyper();
+        assert!(h.one_sided && h.factorized);
+        assert_eq!(rc.optimizer.canonical(), OptKind::Soap);
+
+        // Canonical-to-soap specs pass the PJRT gate; novel combos and
+        // adafactor-engine configs (no PJRT artifacts) don't.
+        let mut rc = RunConfig::default();
+        rc.pjrt_optimizer = true;
+        rc.optimizer = OptKind::parse("basis=eigen,inner=adam").unwrap();
+        rc.validate().unwrap();
+        rc.optimizer = OptKind::parse("basis=svd,inner=adafactor").unwrap();
+        assert!(rc.validate().is_err());
+        rc.optimizer = OptKind::parse("basis=eigen,inner=adafactor").unwrap();
+        assert!(rc.validate().is_err());
+        rc.optimizer = OptKind::Soap;
+        rc.factorized = true;
+        assert!(rc.validate().is_err());
     }
 
     #[test]

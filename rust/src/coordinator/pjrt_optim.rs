@@ -46,10 +46,17 @@ pub struct PjrtOptimizer {
 
 impl PjrtOptimizer {
     pub fn new(kind: OptKind, hyper: Hyper, shapes: &[(usize, usize)]) -> Result<Self> {
+        // Composition specs canonical to a preset (e.g. basis=eigen,inner=
+        // adam ≡ soap) ride the same artifacts.
+        let kind = kind.canonical();
         anyhow::ensure!(
             matches!(kind, OptKind::Soap | OptKind::AdamW),
             "PJRT optimizer path supports soap|adamw (got {})",
             kind.name()
+        );
+        anyhow::ensure!(
+            !(kind == OptKind::Soap && hyper.factorized),
+            "PJRT SOAP artifacts implement the full-V Adam engine; factorized SOAP is native-only"
         );
         let layers = shapes
             .iter()
@@ -264,6 +271,7 @@ impl PjrtOptimizer {
 /// Resolve which artifact a SOAP layer of a given shape needs — used by
 /// preflight checks so a missing artifact fails fast with a clear message.
 pub fn required_artifacts(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)]) -> Vec<String> {
+    let kind = kind.canonical();
     let mut keys = Vec::new();
     for &(rows, cols) in shapes {
         let is_1d = rows == 1 || cols == 1;
@@ -355,5 +363,18 @@ mod tests {
         let o = PjrtOptimizer::new(OptKind::Soap, Hyper::default(), &[(8, 8), (1, 8)]).unwrap();
         assert_eq!(o.layers.len(), 2);
         assert!(PjrtOptimizer::new(OptKind::Galore, Hyper::default(), &[(8, 8)]).is_err());
+    }
+
+    #[test]
+    fn canonical_composition_specs_ride_the_artifact_path() {
+        let soap_spec = OptKind::parse("basis=eigen,inner=adam").unwrap();
+        let o = PjrtOptimizer::new(soap_spec, Hyper::default(), &[(8, 8)]).unwrap();
+        assert_eq!(o.kind, OptKind::Soap);
+        assert_eq!(
+            required_artifacts(soap_spec, &Hyper::default(), &[(64, 256)]),
+            required_artifacts(OptKind::Soap, &Hyper::default(), &[(64, 256)]),
+        );
+        let novel = OptKind::parse("basis=svd,inner=adafactor").unwrap();
+        assert!(PjrtOptimizer::new(novel, Hyper::default(), &[(8, 8)]).is_err());
     }
 }

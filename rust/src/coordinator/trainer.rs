@@ -353,11 +353,19 @@ impl Trainer {
     }
 
     pub fn opt_label(&self) -> String {
-        let mut s = self.cfg.opt.name().to_string();
-        if self.cfg.hyper.one_sided {
+        // Canonicalize so the preset and composition-spec spellings of the
+        // same configuration share one label (one aggregation key in
+        // TrainLog / bench JSON): base name from the canonical kind, variant
+        // suffixes from the spec-resolved hyperparameters.
+        let mut h = self.cfg.hyper.clone();
+        if let crate::optim::OptKind::Composed(spec) = &self.cfg.opt {
+            spec.apply(&mut h);
+        }
+        let mut s = self.cfg.opt.canonical().name().to_string();
+        if h.one_sided {
             s.push_str("-onesided");
         }
-        if self.cfg.hyper.factorized {
+        if h.factorized {
             s.push_str("-factorized");
         }
         if self.cfg.hyper.refresh_mode == crate::optim::RefreshMode::Async {

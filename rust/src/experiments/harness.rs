@@ -16,6 +16,12 @@ pub fn tuned_lr(opt: OptKind) -> f32 {
         OptKind::Shampoo => 1e-2,
         OptKind::Soap => 1e-2,
         OptKind::Galore => 3.16e-3,
+        // Composition specs inherit their canonical preset's tuning; novel
+        // combos start from the conservative AdamW grid point.
+        OptKind::Composed(spec) => match spec.canonical() {
+            Some(kind) => tuned_lr(kind),
+            None => 3.16e-3,
+        },
     }
 }
 
@@ -127,6 +133,10 @@ mod tests {
         for k in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
             assert!(tuned_lr(k) > 0.0);
         }
+        let canonical = OptKind::parse("basis=eigen,inner=adam").unwrap();
+        assert_eq!(tuned_lr(canonical), tuned_lr(OptKind::Soap));
+        let novel = OptKind::parse("basis=svd,inner=adafactor").unwrap();
+        assert!(tuned_lr(novel) > 0.0);
     }
 
     #[test]

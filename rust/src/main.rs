@@ -18,7 +18,12 @@ fn app() -> App {
         .command(
             Command::new("train", "train a transformer LM via PJRT artifacts")
                 .opt("model", "nano", "model config from the artifact manifest")
-                .opt("optimizer", "soap", "adamw|adafactor|shampoo|soap|galore")
+                .opt(
+                    "optimizer",
+                    "soap",
+                    "adamw|adafactor|shampoo|soap|galore, or a composition \
+                     basis=<identity|eigen[:one-sided|:two-sided]|svd>,inner=<adam|adafactor|shampoo>[,graft=<adam|none>]",
+                )
                 .opt("lr", "0.00316", "peak learning rate")
                 .opt("steps", "200", "training steps")
                 .opt("warmup", "0", "warmup steps (0 = constant LR)")
@@ -27,6 +32,8 @@ fn app() -> App {
                 .opt("grad-accum", "1", "gradient-accumulation microbatches")
                 .opt("workers", "4", "optimizer worker threads")
                 .opt("refresh-workers", "2", "async refresh service worker threads")
+                .opt("refresh-method", "", "qr|eigh (named form of --refresh-eigh)")
+                .opt("refresh-mode", "", "inline|async (named form of --async-refresh)")
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
                 .opt("save", "", "write a checkpoint here at the end")

@@ -1,130 +1,45 @@
 //! Adafactor (Shazeer & Stern 2018), in the simplified form used by the
-//! paper (Zhai et al. 2022 / Zhao et al. 2024c): momentum is kept, the LR
-//! schedule is external, and only the second moment is factored:
+//! paper (Zhai et al. 2022 / Zhao et al. 2024c), as a named preset over the
+//! composable core:
+//!
+//! ```text
+//!   Adafactor = IdentityBasis × Adafactor(rank-1 V)
+//! ```
 //!
 //!   A ← β₂A + (1−β₂)·rowsum(G⊙G),  C ← β₂C + (1−β₂)·colsum(G⊙G)
 //!   V̂ᵢⱼ = AᵢCⱼ / ΣA,   W ← W − η · M̂/√(V̂+ε)
 //!
-//! This is the algorithm Claim 1 equates with Shampoo when run in Shampoo's
-//! eigenbasis; SOAP's `factorized` variant reuses the same factored second
-//! moment (see `soap.rs`).
+//! The same [`crate::optim::compose::AdafactorEngine`] run inside the eigenbasis is the
+//! paper's factorized SOAP (§7.2.1) — and, by Claim 1, idealized Shampoo
+//! with power 1/2. Momentum is kept, the LR schedule is external, and only
+//! the second moment is factored.
 
+use super::compose::{presets, DynComposed};
 use super::hyper::Hyper;
-use super::LayerOptimizer;
-use crate::linalg::Matrix;
 
-pub struct Adafactor {
-    h: Hyper,
-    m: Matrix,
-    /// Row second-moment EMA (m×1) — `A` in the paper's Algorithm 2.
-    a: Vec<f32>,
-    /// Column second-moment EMA (1×n) — `C`.
-    c: Vec<f32>,
-    /// For 1-D parameters the factorization is degenerate; fall back to a
-    /// full Adam `V` (matches practical Adafactor implementations).
-    v_1d: Option<Matrix>,
-}
+// The factored denominator is shared by every space the engine runs in;
+// re-exported here under its historical name.
+pub use super::compose::factored_normalize;
 
-/// Compute the factored second-moment denominator √(AᵢCⱼ/ΣA + ε) and return
-/// the elementwise-normalized `num / denom`. Shared with SOAP-factorized.
-pub fn factored_normalize(num: &Matrix, a: &[f32], c: &[f32], eps: f32) -> Matrix {
-    let sum_a: f32 = a.iter().map(|&x| x as f64).sum::<f64>() as f32;
-    let inv_sum = if sum_a > 0.0 { 1.0 / sum_a } else { 0.0 };
-    Matrix::from_fn(num.rows, num.cols, |i, j| {
-        let vhat = (a[i] * c[j] * inv_sum).max(0.0);
-        num.at(i, j) / (vhat + eps).sqrt()
-    })
-}
+/// Named preset: [`Adafactor::new`] builds the identity × rank-1-Adafactor
+/// composition. 1-D parameters degenerate the factorization and fall back to
+/// a full Adam `V` (matches practical Adafactor implementations).
+pub struct Adafactor;
 
 impl Adafactor {
-    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
-        let is_1d = rows == 1 || cols == 1;
-        Self {
-            h,
-            m: Matrix::zeros(rows, cols),
-            a: vec![0.0; rows],
-            c: vec![0.0; cols],
-            v_1d: if is_1d { Some(Matrix::zeros(rows, cols)) } else { None },
-        }
-    }
-}
-
-impl LayerOptimizer for Adafactor {
-    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
-        let h = &self.h;
-        self.m.ema_inplace(g, h.beta1);
-        let bc1 = 1.0 - h.beta1.powi(t as i32);
-        let bc2 = 1.0 - h.beta2.powi(t as i32);
-
-        let dir = if let Some(v) = &mut self.v_1d {
-            // Degenerate (vector) case: plain Adam second moment.
-            let g2 = g.hadamard(g);
-            v.ema_inplace(&g2, h.beta2);
-            self.m
-                .zip(v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps))
-        } else {
-            let g2 = g.hadamard(g);
-            let rows = g2.row_sums();
-            let cols = g2.col_sums();
-            for (ai, ri) in self.a.iter_mut().zip(&rows) {
-                *ai = h.beta2 * *ai + (1.0 - h.beta2) * ri;
-            }
-            for (ci, cj) in self.c.iter_mut().zip(&cols) {
-                *ci = h.beta2 * *ci + (1.0 - h.beta2) * cj;
-            }
-            // Bias-correct A, C and M; the ΣA normalization makes the A/C
-            // corrections cancel except through ε, but we keep them for
-            // parity with the Adam code path.
-            let a_hat: Vec<f32> = self.a.iter().map(|&x| x / bc2).collect();
-            let c_hat: Vec<f32> = self.c.iter().map(|&x| x / bc2).collect();
-            let m_hat = self.m.scale(1.0 / bc1);
-            factored_normalize(&m_hat, &a_hat, &c_hat, h.eps)
-        };
-
-        w.axpy_inplace(-lr, &dir);
-        if h.weight_decay != 0.0 {
-            w.scale_inplace(1.0 - lr * h.weight_decay);
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        let factored = (self.a.len() + self.c.len()) * 4;
-        let v1d = self.v_1d.as_ref().map(|v| v.numel() * 4).unwrap_or(0);
-        self.m.numel() * 4 + factored + v1d
-    }
-
-    fn name(&self) -> &'static str {
-        "adafactor"
-    }
-
-    fn export_state(&self) -> Vec<Matrix> {
-        let mut out = vec![
-            self.m.clone(),
-            Matrix::from_vec(1, self.a.len(), self.a.clone()),
-            Matrix::from_vec(1, self.c.len(), self.c.clone()),
-        ];
-        if let Some(v) = &self.v_1d {
-            out.push(v.clone());
-        }
-        out
-    }
-
-    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
-        anyhow::ensure!(state.len() >= 3, "adafactor expects ≥3 state tensors");
-        let mut it = state.into_iter();
-        self.m = it.next().unwrap();
-        self.a = it.next().unwrap().data;
-        self.c = it.next().unwrap().data;
-        if self.v_1d.is_some() {
-            self.v_1d = Some(it.next().ok_or_else(|| anyhow::anyhow!("missing v_1d"))?);
-        }
-        Ok(())
+    // Historical constructor name, kept across the compose refactor; it
+    // intentionally returns the composed type, not Self.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        presets::adafactor(rows, cols, h)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
+    use crate::optim::LayerOptimizer;
     use crate::util::rng::Rng;
 
     fn h_nowd() -> Hyper {

@@ -1,25 +1,35 @@
 //! AdamW (Kingma & Ba 2015; decoupled weight decay) — the paper's primary
-//! baseline, and the inner diagonal preconditioner that SOAP runs in the
-//! rotated space. Matches the standard PyTorch semantics: bias-corrected
-//! moments, `m̂ / (√v̂ + ε)`, decoupled weight decay.
+//! baseline, as the trivial point of the composable core:
+//!
+//! ```text
+//!   AdamW = IdentityBasis × Adam
+//! ```
+//!
+//! The same [`crate::optim::compose::AdamEngine`] is the inner rule of SOAP (rotated into
+//! the eigenbasis) and GaLore (in the gradient-SVD projection) — the paper's
+//! "Adam is the fixed point of the family" observation. Matches the standard
+//! PyTorch semantics: bias-corrected moments, `m̂ / (√v̂ + ε)`, decoupled
+//! weight decay.
 
+use super::compose::{presets, DynComposed};
 use super::hyper::Hyper;
-use super::LayerOptimizer;
 use crate::linalg::Matrix;
 
-pub struct AdamW {
-    h: Hyper,
-    m: Matrix,
-    v: Matrix,
-}
+/// Named preset: [`AdamW::new`] builds the identity × Adam composition.
+/// Also hosts [`AdamW::direction`], the raw update formula shared with the
+/// grafting wrapper.
+pub struct AdamW;
 
 impl AdamW {
-    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
-        Self { h, m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols) }
+    // Historical constructor name, kept across the compose refactor; it
+    // intentionally returns the composed type, not Self.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        presets::adamw(rows, cols, h)
     }
 
-    /// The raw AdamW direction `m̂/(√v̂+ε)` for the current state — exposed so
-    /// Shampoo's grafting can reuse it.
+    /// The raw AdamW direction `m̂/(√v̂+ε)` for the given moments — exposed so
+    /// [`crate::optim::compose::Graft`](super::compose::Graft) can reuse it.
     pub fn direction(m: &Matrix, v: &Matrix, t: u64, beta1: f32, beta2: f32, eps: f32) -> Matrix {
         let bc1 = 1.0 - beta1.powi(t as i32);
         let bc2 = 1.0 - beta2.powi(t as i32);
@@ -27,42 +37,10 @@ impl AdamW {
     }
 }
 
-impl LayerOptimizer for AdamW {
-    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
-        self.m.ema_inplace(g, self.h.beta1);
-        let g2 = g.hadamard(g);
-        self.v.ema_inplace(&g2, self.h.beta2);
-        let dir = Self::direction(&self.m, &self.v, t, self.h.beta1, self.h.beta2, self.h.eps);
-        w.axpy_inplace(-lr, &dir);
-        if self.h.weight_decay != 0.0 {
-            w.scale_inplace(1.0 - lr * self.h.weight_decay);
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        (self.m.numel() + self.v.numel()) * std::mem::size_of::<f32>()
-    }
-
-    fn name(&self) -> &'static str {
-        "adamw"
-    }
-
-    fn export_state(&self) -> Vec<Matrix> {
-        vec![self.m.clone(), self.v.clone()]
-    }
-
-    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
-        anyhow::ensure!(state.len() == 2, "adamw expects [m, v]");
-        let mut it = state.into_iter();
-        self.m = it.next().unwrap();
-        self.v = it.next().unwrap();
-        Ok(())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::LayerOptimizer;
     use crate::util::rng::Rng;
 
     fn h_nowd() -> Hyper {

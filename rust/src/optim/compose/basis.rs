@@ -1,0 +1,817 @@
+//! [`Basis`](super::Basis) implementations — the "which space does the
+//! update rule run in" axis of the paper's factorization.
+//!
+//! - [`IdentityBasis`] — no rotation; the engine works in the original
+//!   coordinates (AdamW, Adafactor).
+//! - [`EigenBasis`] — the slowly-refreshed Kronecker-factor decomposition
+//!   shared by SOAP and Shampoo. Two flavors: [`EigenFlavor::Rotation`]
+//!   maintains orthonormal eigenvector bases `Q_L`/`Q_R` (SOAP, Algorithm 3
+//!   + the Algorithm 4 QR power-iteration refresh), and
+//!   [`EigenFlavor::InverseRoot`] maintains cached inverse roots
+//!   `L^{-1/e}`/`R^{-1/e}` (Shampoo). Both support one-sided / max-dim-capped
+//!   side selection, QR-power-iteration or warm-`eigh` refresh, and inline or
+//!   async execution through the existing [`crate::precond::RefreshService`].
+//! - [`GradSvdBasis`] — GaLore's projector: the eigenbasis of the *current*
+//!   gradient's square factor (≡ its singular vectors at full rank),
+//!   recomputed from scratch at the refresh frequency (§3 difference #1).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{Basis, BasisState, StateLayout};
+use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
+use crate::optim::hyper::{Hyper, RefreshMethod};
+use crate::precond::{BasisHandle, BasisPayload, RefreshService};
+
+/// The trivial basis: the working space IS the original space.
+#[derive(Default)]
+pub struct IdentityBasis;
+
+impl IdentityBasis {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Basis for IdentityBasis {
+    fn begin_step(&mut self, _g: &Matrix, _t: u64) {}
+    fn end_step(&mut self, _g: &Matrix, _t: u64) {}
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn project(&self, x: &Matrix) -> Matrix {
+        x.clone()
+    }
+
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        x.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    fn export(&self) -> BasisState {
+        BasisState { flags: Vec::new(), tensors: Vec::new() }
+    }
+
+    fn import(
+        &mut self,
+        _flags: &[f32],
+        _it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn layout(&self) -> StateLayout {
+        StateLayout::Bare
+    }
+}
+
+/// What the periodic refresh of an [`EigenBasis`] produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EigenFlavor {
+    /// Orthonormal eigenvector bases; `project` = `Q_Lᵀ X Q_R`,
+    /// `project_back` = `Q_L X Q_Rᵀ` (SOAP).
+    Rotation,
+    /// Cached inverse roots; `project` = `L^{-1/e} X R^{-1/e}` applies the
+    /// whole Shampoo preconditioner at once and `project_back` is the
+    /// identity (the sandwich is self-inverse-free: there is no "back").
+    InverseRoot,
+}
+
+/// The slowly-rotating Kronecker-factor basis shared by SOAP and Shampoo.
+///
+/// Maintains the factor EMAs `L ← β_s L + (1−β_s) GGᵀ` and
+/// `R ← β_s R + (1−β_s) GᵀG` and, every `f` steps (at this layer's phase),
+/// refreshes the published matrices per [`EigenFlavor`]. Refreshes run
+/// inline or on the background [`RefreshService`] (`attach_async`), adopting
+/// the published pair tear-free through a [`BasisHandle`].
+pub struct EigenBasis {
+    h: Hyper,
+    pub flavor: EigenFlavor,
+    /// Kronecker-factor EMAs. `None` = that side is identity (one-sided /
+    /// max-dim-capped; Rotation flavor only — InverseRoot keeps both).
+    pub l: Option<Matrix>,
+    pub r: Option<Matrix>,
+    /// Rotation: eigenvector bases `Q_L`/`Q_R` (None until first init).
+    /// InverseRoot: cached `L^{-1/e}`/`R^{-1/e}` (start as identity).
+    pub left_q: Option<Matrix>,
+    pub right_q: Option<Matrix>,
+    /// InverseRoot only: warm-start eigenvector caches for `eigh_warm`.
+    pub l_vecs: Option<Matrix>,
+    pub r_vecs: Option<Matrix>,
+    pub initialized: bool,
+    refresh_secs: f64,
+    /// Async refresh plumbing (`None` ⇒ inline refreshes).
+    service: Option<Arc<RefreshService>>,
+    handle: Option<Arc<BasisHandle>>,
+    pub adopted_version: u64,
+    /// Step whose factors back the ACTIVE basis (staleness = t − this).
+    pub basis_step: u64,
+}
+
+impl EigenBasis {
+    /// SOAP-style rotation basis. §7.1 one-sided rotates only the smaller
+    /// side; implementation detail 3: dims over `max_precond_dim` keep
+    /// `Q = I`.
+    pub fn rotation(rows: usize, cols: usize, h: &Hyper) -> Self {
+        let mut left = rows <= h.max_precond_dim;
+        let mut right = cols <= h.max_precond_dim;
+        if h.one_sided {
+            if rows <= cols {
+                right = false;
+            } else {
+                left = false;
+            }
+        }
+        Self {
+            h: h.clone(),
+            flavor: EigenFlavor::Rotation,
+            l: left.then(|| Matrix::zeros(rows, rows)),
+            r: right.then(|| Matrix::zeros(cols, cols)),
+            left_q: None,
+            right_q: None,
+            l_vecs: None,
+            r_vecs: None,
+            initialized: false,
+            refresh_secs: 0.0,
+            service: None,
+            handle: None,
+            adopted_version: 0,
+            basis_step: 0,
+        }
+    }
+
+    /// Shampoo-style inverse-root basis: both sides always preconditioned
+    /// (Shampoo preconditions 1-D parameters too), roots start at identity.
+    pub fn inverse_root(rows: usize, cols: usize, h: &Hyper) -> Self {
+        Self {
+            h: h.clone(),
+            flavor: EigenFlavor::InverseRoot,
+            l: Some(Matrix::zeros(rows, rows)),
+            r: Some(Matrix::zeros(cols, cols)),
+            left_q: Some(Matrix::eye(rows)),
+            right_q: Some(Matrix::eye(cols)),
+            l_vecs: None,
+            r_vecs: None,
+            initialized: false,
+            refresh_secs: 0.0,
+            service: None,
+            handle: None,
+            adopted_version: 0,
+            basis_step: 0,
+        }
+    }
+
+    /// First-step initialization (Rotation): set L/R from the first gradient
+    /// and take a full eigendecomposition for the starting basis, as in the
+    /// official implementation.
+    fn init_rotation(&mut self, g: &Matrix, t: u64) {
+        let t0 = Instant::now();
+        if let Some(l) = &mut self.l {
+            *l = g.matmul_nt(g);
+            let (_, v) = eigh(l);
+            self.left_q = Some(v);
+        }
+        if let Some(r) = &mut self.r {
+            *r = g.matmul_tn(g);
+            let (_, v) = eigh(r);
+            self.right_q = Some(v);
+        }
+        self.initialized = true;
+        self.basis_step = t;
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// The Rotation refresh math (Algorithm 4 power-iteration + QR, or warm
+    /// `eigh`), as a pure function of factor/basis snapshots so the inline
+    /// and background paths run IDENTICAL code.
+    fn compute_rotation_refresh(
+        method: RefreshMethod,
+        l: Option<&Matrix>,
+        r: Option<&Matrix>,
+        ql: Option<&Matrix>,
+        qr: Option<&Matrix>,
+    ) -> (Option<Matrix>, Option<Matrix>) {
+        let one_side = |p: Option<&Matrix>, q: Option<&Matrix>| -> Option<Matrix> {
+            match method {
+                RefreshMethod::QrPowerIteration => match (p, q) {
+                    (Some(p), Some(q)) => Some(power_iter_refresh(p, q)),
+                    _ => None,
+                },
+                // Warm-start from the current basis (§Perf): the EMA'd
+                // factors drift slowly between refreshes, so the previous
+                // eigenvectors are an excellent initial guess.
+                RefreshMethod::Eigh => p.map(|p| match q {
+                    Some(prev) => eigh_warm(p, prev).1,
+                    None => eigh(p).1,
+                }),
+            }
+        };
+        (one_side(l, ql), one_side(r, qr))
+    }
+
+    /// The InverseRoot refresh math, pure in the bias-corrected factor
+    /// snapshots. Returns `(l_inv, r_inv, l_vecs, r_vecs)`.
+    fn compute_roots(
+        lh: &Matrix,
+        rh: &Matrix,
+        prev_l: Option<&Matrix>,
+        prev_r: Option<&Matrix>,
+        e: f32,
+        eps: f32,
+    ) -> (Matrix, Matrix, Matrix, Matrix) {
+        let (wl, vl) = match prev_l {
+            Some(prev) => eigh_warm(lh, prev),
+            None => eigh(lh),
+        };
+        let (wr, vr) = match prev_r {
+            Some(prev) => eigh_warm(rh, prev),
+            None => eigh(rh),
+        };
+        let l_inv = inv_root_from_eig(&wl, &vl, e, eps);
+        let r_inv = inv_root_from_eig(&wr, &vr, e, eps);
+        (l_inv, r_inv, vl, vr)
+    }
+
+    /// Bias-corrected factor snapshots at step `t` (InverseRoot flavor).
+    fn corrected_factors(&self, t: u64) -> (Matrix, Matrix) {
+        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
+        (
+            self.l.as_ref().expect("inverse-root basis has L").scale(1.0 / bc),
+            self.r.as_ref().expect("inverse-root basis has R").scale(1.0 / bc),
+        )
+    }
+
+    /// Periodic refresh, executed inline (synchronously).
+    fn refresh_inline(&mut self, t: u64) {
+        let t0 = Instant::now();
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                let (new_ql, new_qr) = Self::compute_rotation_refresh(
+                    self.h.refresh,
+                    self.l.as_ref(),
+                    self.r.as_ref(),
+                    self.left_q.as_ref(),
+                    self.right_q.as_ref(),
+                );
+                if let Some(q) = new_ql {
+                    self.left_q = Some(q);
+                }
+                if let Some(q) = new_qr {
+                    self.right_q = Some(q);
+                }
+            }
+            EigenFlavor::InverseRoot => {
+                // Per-factor exponent −1/e: e = 4 is original Shampoo, e = 2
+                // the Anil et al / Morwani et al power-1/2 variant, e = 2.5
+                // the paper's DistributedShampoo default (Appendix A).
+                let (lh, rh) = self.corrected_factors(t);
+                let (l_inv, r_inv, vl, vr) = Self::compute_roots(
+                    &lh,
+                    &rh,
+                    self.l_vecs.as_ref(),
+                    self.r_vecs.as_ref(),
+                    self.h.shampoo_exponent,
+                    self.h.shampoo_eps,
+                );
+                self.left_q = Some(l_inv);
+                self.right_q = Some(r_inv);
+                self.l_vecs = Some(vl);
+                self.r_vecs = Some(vr);
+            }
+        }
+        self.basis_step = t;
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Async mode: swap in the newest published basis, if any. One atomic
+    /// load on the no-news path; the payload pair is adopted wholesale, so a
+    /// torn basis is impossible (see `precond::handle`).
+    fn adopt_published(&mut self) {
+        let Some(handle) = &self.handle else { return };
+        if handle.version() <= self.adopted_version {
+            return;
+        }
+        if let Some(published) = handle.latest() {
+            if published.version > self.adopted_version {
+                match self.flavor {
+                    EigenFlavor::Rotation => {
+                        if let Some(q) = &published.payload.left {
+                            self.left_q = Some(q.clone());
+                        }
+                        if let Some(q) = &published.payload.right {
+                            self.right_q = Some(q.clone());
+                        }
+                    }
+                    EigenFlavor::InverseRoot => {
+                        let p = &published.payload;
+                        if let (Some(li), Some(ri)) = (&p.left, &p.right) {
+                            self.left_q = Some(li.clone());
+                            self.right_q = Some(ri.clone());
+                        }
+                        self.l_vecs = p.left_aux.clone().or_else(|| self.l_vecs.take());
+                        self.r_vecs = p.right_aux.clone().or_else(|| self.r_vecs.take());
+                    }
+                }
+                self.adopted_version = published.version;
+                self.basis_step = published.snapshot_step;
+            }
+        }
+    }
+
+    /// Async mode: snapshot the factor EMAs + current basis and hand the
+    /// refresh to the service. Skipped (not queued) while a previous refresh
+    /// is still in flight, so a slow decomposition sheds load instead of
+    /// building a backlog.
+    fn enqueue_refresh(&self, service: &Arc<RefreshService>, handle: &Arc<BasisHandle>, t: u64) {
+        if !handle.try_begin_refresh() {
+            return;
+        }
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                let method = self.h.refresh;
+                let l = self.l.clone();
+                let r = self.r.clone();
+                let ql = self.left_q.clone();
+                let qr = self.right_q.clone();
+                service.enqueue(
+                    Arc::clone(handle),
+                    t,
+                    Box::new(move || {
+                        let (left, right) = Self::compute_rotation_refresh(
+                            method,
+                            l.as_ref(),
+                            r.as_ref(),
+                            ql.as_ref(),
+                            qr.as_ref(),
+                        );
+                        BasisPayload { left, right, left_aux: None, right_aux: None }
+                    }),
+                );
+            }
+            EigenFlavor::InverseRoot => {
+                let (lh, rh) = self.corrected_factors(t);
+                let prev_l = self.l_vecs.clone();
+                let prev_r = self.r_vecs.clone();
+                let e = self.h.shampoo_exponent;
+                let eps = self.h.shampoo_eps;
+                service.enqueue(
+                    Arc::clone(handle),
+                    t,
+                    Box::new(move || {
+                        let (l_inv, r_inv, vl, vr) = Self::compute_roots(
+                            &lh,
+                            &rh,
+                            prev_l.as_ref(),
+                            prev_r.as_ref(),
+                            e,
+                            eps,
+                        );
+                        BasisPayload {
+                            left: Some(l_inv),
+                            right: Some(r_inv),
+                            left_aux: Some(vl),
+                            right_aux: Some(vr),
+                        }
+                    }),
+                );
+            }
+        }
+    }
+
+    /// Refresh now, routing through the service when attached.
+    fn refresh_or_enqueue(&mut self, t: u64) {
+        match (self.service.clone(), self.handle.clone()) {
+            (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
+            _ => self.refresh_inline(t),
+        }
+    }
+}
+
+impl Basis for EigenBasis {
+    fn begin_step(&mut self, g: &Matrix, t: u64) {
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                if !self.initialized {
+                    self.init_rotation(g, t);
+                }
+                // Pick up any basis the background service published since
+                // the last step — before projecting, so it's used now.
+                self.adopt_published();
+            }
+            EigenFlavor::InverseRoot => {
+                // Factor EMAs first (Shampoo updates them ahead of the
+                // direction — the roots computed this step may use them).
+                let ggt = g.matmul_nt(g);
+                let gtg = g.matmul_tn(g);
+                self.l.as_mut().unwrap().ema_inplace(&ggt, self.h.shampoo_beta);
+                self.r.as_mut().unwrap().ema_inplace(&gtg, self.h.shampoo_beta);
+                self.adopt_published();
+                // The first recompute always runs inline so the roots are
+                // never identity-only.
+                if !self.initialized {
+                    self.refresh_inline(t);
+                    self.initialized = true;
+                } else if self.h.is_refresh_step(t) {
+                    self.refresh_or_enqueue(t);
+                }
+            }
+        }
+    }
+
+    fn end_step(&mut self, g: &Matrix, t: u64) {
+        if self.flavor != EigenFlavor::Rotation {
+            return;
+        }
+        // Factor EMAs + periodic basis refresh AFTER the step, per Alg 3.
+        if let Some(l) = &mut self.l {
+            let ggt = g.matmul_nt(g);
+            l.ema_inplace(&ggt, self.h.shampoo_beta);
+        }
+        if let Some(r) = &mut self.r {
+            let gtg = g.matmul_tn(g);
+            r.ema_inplace(&gtg, self.h.shampoo_beta);
+        }
+        if self.h.is_refresh_step(t) {
+            self.refresh_or_enqueue(t);
+        }
+    }
+
+    fn project(&self, x: &Matrix) -> Matrix {
+        match self.flavor {
+            // Rotate into the eigenbasis: Q_Lᵀ · X · Q_R (identity sides
+            // skipped).
+            EigenFlavor::Rotation => {
+                let mut y = match &self.left_q {
+                    Some(ql) => ql.matmul_tn(x),
+                    None => x.clone(),
+                };
+                if let Some(qr) = &self.right_q {
+                    y = y.matmul(qr);
+                }
+                y
+            }
+            // Apply the whole preconditioner: L^{-1/e} · X · R^{-1/e}.
+            EigenFlavor::InverseRoot => self
+                .left_q
+                .as_ref()
+                .unwrap()
+                .matmul(x)
+                .matmul(self.right_q.as_ref().unwrap()),
+        }
+    }
+
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        match self.flavor {
+            // Rotate back: Q_L · X · Q_Rᵀ.
+            EigenFlavor::Rotation => {
+                let mut y = match &self.left_q {
+                    Some(ql) => ql.matmul(x),
+                    None => x.clone(),
+                };
+                if let Some(qr) = &self.right_q {
+                    y = y.matmul_nt(qr);
+                }
+                y
+            }
+            EigenFlavor::InverseRoot => x.clone(),
+        }
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.refresh_secs
+    }
+
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        if self.l.is_none() && self.r.is_none() {
+            return false; // both sides identity ⇒ nothing to refresh
+        }
+        self.service = Some(Arc::clone(service));
+        self.handle = Some(Arc::new(BasisHandle::new()));
+        self.adopted_version = 0;
+        true
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        match self.flavor {
+            EigenFlavor::Rotation => (self.initialized
+                && (self.left_q.is_some() || self.right_q.is_some()))
+            .then_some(self.basis_step),
+            EigenFlavor::InverseRoot => self.initialized.then_some(self.basis_step),
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let opt = |x: &Option<Matrix>| x.as_ref().map(|m| m.numel()).unwrap_or(0);
+        // The warm-start eigenvector caches ARE held state (the pre-refactor
+        // Shampoo under-reported by omitting them — §7.2 accounting).
+        (opt(&self.l)
+            + opt(&self.r)
+            + opt(&self.left_q)
+            + opt(&self.right_q)
+            + opt(&self.l_vecs)
+            + opt(&self.r_vecs))
+            * 4
+    }
+
+    fn export(&self) -> BasisState {
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                let flags = vec![
+                    self.initialized as u8 as f32,
+                    self.l.is_some() as u8 as f32,
+                    self.r.is_some() as u8 as f32,
+                    // f32 is exact up to 2^24 steps — far beyond our runs.
+                    self.basis_step as f32,
+                ];
+                let mut tensors = Vec::new();
+                for opt in [&self.l, &self.r, &self.left_q, &self.right_q] {
+                    if let Some(x) = opt {
+                        tensors.push(x.clone());
+                    }
+                }
+                BasisState { flags, tensors }
+            }
+            EigenFlavor::InverseRoot => BasisState {
+                flags: vec![self.initialized as u8 as f32, self.basis_step as f32],
+                // Warm-start caches deliberately not serialized (same as the
+                // pre-refactor layout): the first refresh after a restore
+                // cold-starts its eigh.
+                tensors: vec![
+                    self.l.clone().unwrap(),
+                    self.r.clone().unwrap(),
+                    self.left_q.clone().unwrap(),
+                    self.right_q.clone().unwrap(),
+                ],
+            },
+        }
+    }
+
+    fn import(
+        &mut self,
+        flags: &[f32],
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()> {
+        // Refreshes enqueued before the restore were computed from discarded
+        // factors; drain them, then skip every pre-restore publication.
+        if let (Some(service), Some(handle)) = (&self.service, &self.handle) {
+            service.wait_idle();
+            self.adopted_version = handle.version();
+        }
+        let mut next = |what: &str| {
+            it.next().ok_or_else(|| anyhow::anyhow!("basis state missing {what}"))
+        };
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                anyhow::ensure!(flags.len() == 4, "rotation basis flags malformed");
+                self.initialized = flags[0] != 0.0;
+                let has_l = flags[1] != 0.0;
+                let has_r = flags[2] != 0.0;
+                self.basis_step = flags[3] as u64;
+                self.l = if has_l { Some(next("l")?) } else { None };
+                self.r = if has_r { Some(next("r")?) } else { None };
+                if self.initialized {
+                    self.left_q = if has_l { Some(next("ql")?) } else { None };
+                    self.right_q = if has_r { Some(next("qr")?) } else { None };
+                }
+            }
+            EigenFlavor::InverseRoot => {
+                anyhow::ensure!(flags.len() == 2, "inverse-root basis flags malformed");
+                self.initialized = flags[0] != 0.0;
+                self.basis_step = flags[1] as u64;
+                self.l = Some(next("l")?);
+                self.r = Some(next("r")?);
+                self.left_q = Some(next("l_inv")?);
+                self.right_q = Some(next("r_inv")?);
+            }
+        }
+        Ok(())
+    }
+
+    fn layout(&self) -> StateLayout {
+        match self.flavor {
+            EigenFlavor::Rotation => StateLayout::BasisMid,
+            EigenFlavor::InverseRoot => StateLayout::InverseRoot,
+        }
+    }
+}
+
+/// GaLore's projector (Zhao et al. 2024a, full-rank): the eigenbasis of the
+/// CURRENT gradient's square factor, smaller side only, recomputed from
+/// scratch every `f` steps. For the full-rank square projector the left
+/// singular vectors of `G` are the eigenvectors of `GGᵀ`, so the basis comes
+/// from the Jacobi `eigh` of the square factor (no general SVD needed).
+pub struct GradSvdBasis {
+    h: Hyper,
+    /// Projection matrix P (k×k on the smaller side); `None` until the
+    /// first step.
+    pub p: Option<Matrix>,
+    /// Project the left side (true) or the right side (false).
+    pub left: bool,
+    refresh_secs: f64,
+}
+
+impl GradSvdBasis {
+    pub fn new(rows: usize, cols: usize, h: &Hyper) -> Self {
+        Self { h: h.clone(), p: None, left: rows <= cols, refresh_secs: 0.0 }
+    }
+}
+
+impl Basis for GradSvdBasis {
+    fn begin_step(&mut self, g: &Matrix, t: u64) {
+        // Basis refresh from the CURRENT gradient (§3 difference #1), at
+        // this layer's staggered phase.
+        if self.p.is_none() || self.h.is_refresh_step(t) {
+            let t0 = Instant::now();
+            let factor = if self.left { g.matmul_nt(g) } else { g.matmul_tn(g) };
+            let (_, vecs) = eigh(&factor);
+            self.p = Some(vecs);
+            // NOTE: the engine's momentum is deliberately NOT re-rotated
+            // (§3 difference #2).
+            self.refresh_secs += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    fn end_step(&mut self, _g: &Matrix, _t: u64) {}
+
+    fn project(&self, x: &Matrix) -> Matrix {
+        match (&self.p, self.left) {
+            (Some(p), true) => p.matmul_tn(x),
+            (Some(p), false) => x.matmul(p),
+            (None, _) => x.clone(),
+        }
+    }
+
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        let y = match (&self.p, self.left) {
+            (Some(p), true) => p.matmul(x),
+            (Some(p), false) => x.matmul_nt(p),
+            (None, _) => x.clone(),
+        };
+        // GaLore's update scale α rides with the projection (appendix B;
+        // 1.0 for the full-rank version — an exact no-op then).
+        y.scale(self.h.galore_scale)
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.refresh_secs
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.p.as_ref().map(|p| p.numel()).unwrap_or(0) * 4
+    }
+
+    fn export(&self) -> BasisState {
+        BasisState {
+            flags: vec![self.p.is_some() as u8 as f32],
+            tensors: self.p.clone().into_iter().collect(),
+        }
+    }
+
+    fn import(
+        &mut self,
+        flags: &[f32],
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(flags.len() == 1, "grad-svd basis flags malformed");
+        self.p = if flags[0] != 0.0 {
+            Some(it.next().ok_or_else(|| anyhow::anyhow!("missing p"))?)
+        } else {
+            None
+        };
+        Ok(())
+    }
+
+    fn layout(&self) -> StateLayout {
+        StateLayout::BasisLast
+    }
+}
+
+/// Closed set of shipped bases, so composed optimizers are a single concrete
+/// type (`DynComposed`) while [`Basis`] stays open for downstream impls.
+// One value per model layer; the variant-size spread (EigenBasis vs the
+// zero-sized identity) is irrelevant at that cardinality.
+#[allow(clippy::large_enum_variant)]
+pub enum AnyBasis {
+    Identity(IdentityBasis),
+    Eigen(EigenBasis),
+    GradSvd(GradSvdBasis),
+}
+
+impl AnyBasis {
+    pub fn as_eigen(&self) -> Option<&EigenBasis> {
+        match self {
+            AnyBasis::Eigen(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_grad_svd(&self) -> Option<&GradSvdBasis> {
+        match self {
+            AnyBasis::GradSvd(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+impl Basis for AnyBasis {
+    fn begin_step(&mut self, g: &Matrix, t: u64) {
+        match self {
+            AnyBasis::Identity(b) => b.begin_step(g, t),
+            AnyBasis::Eigen(b) => b.begin_step(g, t),
+            AnyBasis::GradSvd(b) => b.begin_step(g, t),
+        }
+    }
+
+    fn end_step(&mut self, g: &Matrix, t: u64) {
+        match self {
+            AnyBasis::Identity(b) => b.end_step(g, t),
+            AnyBasis::Eigen(b) => b.end_step(g, t),
+            AnyBasis::GradSvd(b) => b.end_step(g, t),
+        }
+    }
+
+    fn is_identity(&self) -> bool {
+        matches!(self, AnyBasis::Identity(_))
+    }
+
+    fn project(&self, x: &Matrix) -> Matrix {
+        match self {
+            AnyBasis::Identity(b) => b.project(x),
+            AnyBasis::Eigen(b) => b.project(x),
+            AnyBasis::GradSvd(b) => b.project(x),
+        }
+    }
+
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        match self {
+            AnyBasis::Identity(b) => b.project_back(x),
+            AnyBasis::Eigen(b) => b.project_back(x),
+            AnyBasis::GradSvd(b) => b.project_back(x),
+        }
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        match self {
+            AnyBasis::Identity(b) => b.refresh_seconds(),
+            AnyBasis::Eigen(b) => b.refresh_seconds(),
+            AnyBasis::GradSvd(b) => b.refresh_seconds(),
+        }
+    }
+
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        match self {
+            AnyBasis::Identity(b) => b.attach_async(service),
+            AnyBasis::Eigen(b) => b.attach_async(service),
+            AnyBasis::GradSvd(b) => b.attach_async(service),
+        }
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        match self {
+            AnyBasis::Identity(b) => b.basis_snapshot_step(),
+            AnyBasis::Eigen(b) => b.basis_snapshot_step(),
+            AnyBasis::GradSvd(b) => b.basis_snapshot_step(),
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        match self {
+            AnyBasis::Identity(b) => b.state_bytes(),
+            AnyBasis::Eigen(b) => b.state_bytes(),
+            AnyBasis::GradSvd(b) => b.state_bytes(),
+        }
+    }
+
+    fn export(&self) -> BasisState {
+        match self {
+            AnyBasis::Identity(b) => b.export(),
+            AnyBasis::Eigen(b) => b.export(),
+            AnyBasis::GradSvd(b) => b.export(),
+        }
+    }
+
+    fn import(
+        &mut self,
+        flags: &[f32],
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()> {
+        match self {
+            AnyBasis::Identity(b) => b.import(flags, it),
+            AnyBasis::Eigen(b) => b.import(flags, it),
+            AnyBasis::GradSvd(b) => b.import(flags, it),
+        }
+    }
+
+    fn layout(&self) -> StateLayout {
+        match self {
+            AnyBasis::Identity(b) => b.layout(),
+            AnyBasis::Eigen(b) => b.layout(),
+            AnyBasis::GradSvd(b) => b.layout(),
+        }
+    }
+}

@@ -1,0 +1,552 @@
+//! Composable optimizer core — the paper's factorization as an API.
+//!
+//! The central claim of "SOAP: Improving and Stabilizing Shampoo using Adam"
+//! (Vyas et al., 2024) is structural: SOAP is **Adam run in Shampoo's
+//! eigenbasis**; Shampoo with power 1/2 is **Adafactor in that same basis**
+//! (Claim 1, after Morwani et al. 2024); GaLore is **Adam in a gradient-SVD
+//! basis** (§3 / Appendix B). This module turns that observation into the
+//! optimizer architecture: every optimizer is a composition
+//!
+//! ```text
+//!   Composed = Graft? ∘ (Basis × MomentEngine)
+//! ```
+//!
+//! - [`Basis`] — how the gradient is carried into a working space and back:
+//!   [`basis::IdentityBasis`] (no rotation), [`basis::EigenBasis`] (the
+//!   slowly-refreshed Kronecker-factor decomposition, orthonormal-rotation
+//!   or inverse-root flavored, one/two-sided, dim-capped, QR-power-iteration
+//!   or warm-`eigh`, inline or async via `precond::RefreshService`), and
+//!   [`basis::GradSvdBasis`] (GaLore's current-gradient projector).
+//! - [`MomentEngine`] — the update rule inside that space:
+//!   [`engine::AdamEngine`], [`engine::AdafactorEngine`] (rank-1 factored),
+//!   [`engine::InverseRootEngine`] (Shampoo's `L^{-1/e}·M̂·R^{-1/e}`).
+//! - [`Graft`] — optional layerwise AdamW norm grafting
+//!   (DistributedShampoo-style), wrapping any engine's direction.
+//!
+//! [`Composed`] implements [`LayerOptimizer`] over any `(Basis, Engine)`
+//! pair; the named presets (`soap`, `shampoo`, `galore`, `adamw`,
+//! `adafactor`) are just labeled compositions (see [`presets`]), and the
+//! CLI's `--optimizer basis=…,inner=…[,graft=…]` grammar ([`spec`]) builds
+//! novel combinations with zero new code. Composed presets reproduce the
+//! pre-refactor monolithic optimizers bitwise (`rust/tests/golden_compose.rs`).
+
+pub mod basis;
+pub mod engine;
+pub mod spec;
+
+pub use basis::{AnyBasis, EigenBasis, EigenFlavor, GradSvdBasis, IdentityBasis};
+pub use engine::{
+    factored_normalize, AdafactorEngine, AdamEngine, AnyEngine, InverseRootEngine, MomentumSpace,
+};
+pub use spec::{BasisSpec, CompositionSpec, EngineSpec, GraftSpec, Sided};
+
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+use crate::optim::hyper::Hyper;
+use crate::optim::LayerOptimizer;
+use crate::precond::RefreshService;
+
+/// Serialized basis component: flag scalars + tensors, in the basis's
+/// canonical order. [`Composed`] assembles these into the wire layout.
+pub struct BasisState {
+    pub flags: Vec<f32>,
+    pub tensors: Vec<Matrix>,
+}
+
+/// Serialized engine component: first moment + second-moment tensors.
+pub struct EngineState {
+    pub momentum: Matrix,
+    pub second: Vec<Matrix>,
+}
+
+/// How a composition's state tensors are laid out on the wire. Pinned per
+/// basis kind so composed presets emit (and accept) EXACTLY the pre-refactor
+/// checkpoint rows — old checkpoints keep loading.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateLayout {
+    /// `[M, second…]` — identity basis (AdamW, Adafactor rows).
+    Bare,
+    /// `[flags(1×5), M, basis…, second…(, graft V)]` with flags
+    /// `[initialized, has_l, has_r, has_full_v, basis_step]` — rotation
+    /// eigenbasis (SOAP rows; cols == 4 accepts pre-`basis_step`
+    /// checkpoints).
+    BasisMid,
+    /// `[flags(1×2), M, L, R, L^{-1/e}, R^{-1/e}, graft V]` with flags
+    /// `[initialized, basis_step]` — inverse-root eigenbasis (Shampoo rows;
+    /// cols == 1 accepts pre-`basis_step` checkpoints).
+    InverseRoot,
+    /// `[flags(1×1 = has_p), M, second…, P?]` — gradient-SVD basis
+    /// (GaLore rows).
+    BasisLast,
+}
+
+/// Per-layer basis state machine: carries gradients into a working space,
+/// maintains whatever decomposition that requires, and schedules its
+/// periodic refresh (inline or async).
+///
+/// `begin_step` runs before the engine computes a direction, `end_step`
+/// after the weights moved — which hook does the factor bookkeeping is the
+/// basis's own contract (Shampoo refreshes pre-direction, SOAP post-update).
+pub trait Basis: Send {
+    fn begin_step(&mut self, g: &Matrix, t: u64);
+    fn end_step(&mut self, g: &Matrix, t: u64);
+
+    /// True when `project`/`project_back` are no-ops — engines use this to
+    /// skip the defensive clone on the hot path.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Carry `x` into the working space.
+    fn project(&self, x: &Matrix) -> Matrix;
+
+    /// Carry `x` back to the original space.
+    fn project_back(&self, x: &Matrix) -> Matrix;
+
+    /// Wall-clock spent in inline decompositions so far (Fig 7 accounting).
+    fn refresh_seconds(&self) -> f64 {
+        0.0
+    }
+
+    /// Route periodic refreshes through the background service. Returns
+    /// `false` when there is nothing to refresh.
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        let _ = service;
+        false
+    }
+
+    /// Step whose factor snapshots back the ACTIVE decomposition.
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        None
+    }
+
+    /// Bytes of state held by the basis (paper §7.2 accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn export(&self) -> BasisState;
+    fn import(
+        &mut self,
+        flags: &[f32],
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()>;
+
+    /// Which wire layout compositions over this basis use.
+    fn layout(&self) -> StateLayout;
+}
+
+/// Per-layer update rule inside (or around) a basis's working space.
+pub trait MomentEngine: Send {
+    /// Consume gradient `g` at step `t`, update the moments, and return the
+    /// un-scaled descent direction in the ORIGINAL space (the engine calls
+    /// `basis.project`/`project_back` itself, so it controls which space
+    /// each moment lives in).
+    fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix;
+
+    /// The first moment, for norm grafting.
+    fn momentum(&self) -> &Matrix;
+
+    /// Whether the second moment is a full matrix (`V`) rather than factored
+    /// — recorded in the `BasisMid` flags row for checkpoint self-description.
+    fn full_v(&self) -> bool;
+
+    /// Bytes of state held by the engine (paper §7.2 accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn export(&self) -> EngineState;
+    fn import(
+        &mut self,
+        momentum: Matrix,
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()>;
+}
+
+/// Layerwise AdamW norm grafting (DistributedShampoo default): rescale the
+/// composed direction to the Frobenius norm an AdamW step would have taken
+/// on the same gradient stream. Keeps the scalar step size adapting every
+/// step even while the basis ages — the same argument that lets SOAP
+/// tolerate a stale basis.
+pub struct Graft {
+    /// Grafting can be carried (state allocated, exported) but inactive —
+    /// the pre-refactor Shampoo always held `V_graft` even with
+    /// `Hyper::grafting == false`.
+    pub active: bool,
+    pub v: Matrix,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl Graft {
+    pub fn new(rows: usize, cols: usize, h: &Hyper) -> Self {
+        Self {
+            active: h.grafting,
+            v: Matrix::zeros(rows, cols),
+            beta1: h.beta1,
+            beta2: h.beta2,
+            eps: h.eps,
+        }
+    }
+
+    /// Rescale `dir` to AdamW's norm for this gradient; `m` is the engine's
+    /// momentum (shared — grafting adds only the second moment).
+    pub fn apply(&mut self, dir: &mut Matrix, g: &Matrix, m: &Matrix, t: u64) {
+        if !self.active {
+            return;
+        }
+        let g2 = g.hadamard(g);
+        self.v.ema_inplace(&g2, self.beta2);
+        let adam_dir =
+            crate::optim::adamw::AdamW::direction(m, &self.v, t, self.beta1, self.beta2, self.eps);
+        let target = adam_dir.frob_norm();
+        let actual = dir.frob_norm();
+        if actual > 1e-30 {
+            dir.scale_inplace(target / actual);
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.v.numel() * 4
+    }
+}
+
+/// A basis × engine composition (+ optional graft) as a [`LayerOptimizer`].
+///
+/// Generic over the component types; the shipped closed-world instantiation
+/// is [`DynComposed`] (`AnyBasis` × `AnyEngine`), which every preset and
+/// CLI-spec build returns.
+pub struct Composed<B: Basis, E: MomentEngine> {
+    pub basis: B,
+    pub engine: E,
+    pub graft: Option<Graft>,
+    h: Hyper,
+    label: &'static str,
+}
+
+/// The closed-world composition every factory returns.
+pub type DynComposed = Composed<AnyBasis, AnyEngine>;
+
+impl<B: Basis, E: MomentEngine> Composed<B, E> {
+    pub fn new(basis: B, engine: E, graft: Option<Graft>, h: Hyper, label: &'static str) -> Self {
+        Self { basis, engine, graft, h, label }
+    }
+
+    pub fn hyper(&self) -> &Hyper {
+        &self.h
+    }
+}
+
+impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
+    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+        self.basis.begin_step(g, t);
+        let mut dir = self.engine.direction(g, t, &self.basis);
+        if let Some(graft) = &mut self.graft {
+            graft.apply(&mut dir, g, self.engine.momentum(), t);
+        }
+        w.axpy_inplace(-lr, &dir);
+        if self.h.weight_decay != 0.0 {
+            w.scale_inplace(1.0 - lr * self.h.weight_decay);
+        }
+        self.basis.end_step(g, t);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Exactly basis + engine + graft — each component accounts for the
+        // tensors it owns (§7.2).
+        self.basis.state_bytes()
+            + self.engine.state_bytes()
+            + self.graft.as_ref().map(|g| g.state_bytes()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.basis.refresh_seconds()
+    }
+
+    fn export_state(&self) -> Vec<Matrix> {
+        let bs = self.basis.export();
+        let es = self.engine.export();
+        let mut out = Vec::new();
+        match self.basis.layout() {
+            StateLayout::Bare => {
+                out.push(es.momentum);
+                out.extend(es.second);
+            }
+            StateLayout::BasisMid => {
+                // Pre-refactor SOAP row: [flags(1×5), M, L?, R?, QL?, QR?,
+                // V | (va, vc)] with flags [init, has_l, has_r, has_v,
+                // basis_step].
+                let flags = Matrix::from_vec(
+                    1,
+                    5,
+                    vec![
+                        bs.flags[0],
+                        bs.flags[1],
+                        bs.flags[2],
+                        self.engine.full_v() as u8 as f32,
+                        bs.flags[3],
+                    ],
+                );
+                out.push(flags);
+                out.push(es.momentum);
+                out.extend(bs.tensors);
+                out.extend(es.second);
+            }
+            StateLayout::InverseRoot => {
+                // Pre-refactor Shampoo row: [flags(1×2), M, L, R, L_inv,
+                // R_inv, V_graft].
+                out.push(Matrix::from_vec(1, bs.flags.len(), bs.flags.clone()));
+                out.push(es.momentum);
+                out.extend(bs.tensors);
+            }
+            StateLayout::BasisLast => {
+                // Pre-refactor GaLore row: [has_p(1×1), M, V, P?].
+                out.push(Matrix::from_vec(1, bs.flags.len(), bs.flags.clone()));
+                out.push(es.momentum);
+                out.extend(es.second);
+                out.extend(bs.tensors);
+            }
+        }
+        if let Some(graft) = &self.graft {
+            out.push(graft.v.clone());
+        }
+        out
+    }
+
+    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
+        // A momentum tensor of the wrong shape means the row belongs to a
+        // different layer/optimizer — fail loudly instead of training on
+        // corrupted state.
+        fn ensure_momentum_shape(expect: &Matrix, got: &Matrix) -> anyhow::Result<()> {
+            anyhow::ensure!(
+                got.rows == expect.rows && got.cols == expect.cols,
+                "state momentum is {}×{} but the layer expects {}×{}",
+                got.rows,
+                got.cols,
+                expect.rows,
+                expect.cols,
+            );
+            Ok(())
+        }
+        let layout = self.basis.layout();
+        let mut it = state.into_iter();
+        match layout {
+            StateLayout::Bare => {
+                let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
+                ensure_momentum_shape(self.engine.momentum(), &m)?;
+                self.engine.import(m, &mut it)?;
+            }
+            StateLayout::BasisMid => {
+                let flags =
+                    it.next().ok_or_else(|| anyhow::anyhow!("state missing flags row"))?;
+                // cols == 4 accepts pre-basis_step checkpoints (staleness
+                // restarts from 0 after such a restore).
+                anyhow::ensure!(
+                    flags.cols == 4 || flags.cols == 5,
+                    "composed state flags malformed"
+                );
+                let has_v = flags.data[3] != 0.0;
+                anyhow::ensure!(
+                    has_v == self.engine.full_v(),
+                    "checkpoint second moment is {} but the composed engine expects {}",
+                    if has_v { "a full V" } else { "factored (va, vc)" },
+                    if self.engine.full_v() { "a full V" } else { "factored (va, vc)" },
+                );
+                let basis_step = if flags.cols == 5 { flags.data[4] } else { 0.0 };
+                let bflags = [flags.data[0], flags.data[1], flags.data[2], basis_step];
+                let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
+                ensure_momentum_shape(self.engine.momentum(), &m)?;
+                self.basis.import(&bflags, &mut it)?;
+                self.engine.import(m, &mut it)?;
+            }
+            StateLayout::InverseRoot => {
+                let flags =
+                    it.next().ok_or_else(|| anyhow::anyhow!("state missing flags row"))?;
+                // cols == 1 accepts pre-basis_step checkpoints.
+                anyhow::ensure!(
+                    flags.cols == 1 || flags.cols == 2,
+                    "composed state flags malformed"
+                );
+                let basis_step = if flags.cols == 2 { flags.data[1] } else { 0.0 };
+                let bflags = [flags.data[0], basis_step];
+                let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
+                ensure_momentum_shape(self.engine.momentum(), &m)?;
+                self.basis.import(&bflags, &mut it)?;
+                self.engine.import(m, &mut it)?;
+            }
+            StateLayout::BasisLast => {
+                let flags =
+                    it.next().ok_or_else(|| anyhow::anyhow!("state missing flags row"))?;
+                let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
+                ensure_momentum_shape(self.engine.momentum(), &m)?;
+                self.engine.import(m, &mut it)?;
+                self.basis.import(&flags.data, &mut it)?;
+            }
+        }
+        if let Some(graft) = &mut self.graft {
+            graft.v = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("state missing graft second moment"))?;
+        }
+        // Strict arity, as pre-refactor: leftover tensors mean the row was
+        // written by a different optimizer configuration.
+        anyhow::ensure!(
+            it.next().is_none(),
+            "state row carries unexpected extra tensors for optimizer '{}'",
+            self.label,
+        );
+        Ok(())
+    }
+
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        self.basis.attach_async(service)
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        self.basis.basis_snapshot_step()
+    }
+}
+
+/// Named preset constructors — the paper's optimizers as compositions. The
+/// thin `optim::{soap,shampoo,galore,adamw,adafactor}` modules re-expose
+/// these under the historical type names.
+pub mod presets {
+    use super::*;
+
+    /// SOAP (Algorithm 3): rotation eigenbasis × Adam — or × rank-1
+    /// Adafactor when `h.factorized` (§7.2.1).
+    pub fn soap(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        let basis = AnyBasis::Eigen(EigenBasis::rotation(rows, cols, &h));
+        let engine = if h.factorized {
+            AnyEngine::Adafactor(AdafactorEngine::new(rows, cols, &h, MomentumSpace::Original))
+        } else {
+            AnyEngine::Adam(AdamEngine::new(rows, cols, &h, MomentumSpace::Original))
+        };
+        Composed::new(basis, engine, None, h, "soap")
+    }
+
+    /// Shampoo (DistributedShampoo configuration): inverse-root eigenbasis ×
+    /// the Kronecker sandwich, wrapped in (optionally inactive) AdamW norm
+    /// grafting.
+    pub fn shampoo(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        let basis = AnyBasis::Eigen(EigenBasis::inverse_root(rows, cols, &h));
+        let engine = AnyEngine::InverseRoot(InverseRootEngine::new(rows, cols, &h));
+        let graft = Graft::new(rows, cols, &h);
+        Composed::new(basis, engine, Some(graft), h, "shampoo")
+    }
+
+    /// GaLore (full-rank, Appendix B): gradient-SVD basis × Adam with the
+    /// moments kept in the projected space.
+    pub fn galore(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        let basis = AnyBasis::GradSvd(GradSvdBasis::new(rows, cols, &h));
+        let engine = AnyEngine::Adam(AdamEngine::new(rows, cols, &h, MomentumSpace::InBasis));
+        Composed::new(basis, engine, None, h, "galore")
+    }
+
+    /// AdamW: identity basis × Adam.
+    pub fn adamw(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        let basis = AnyBasis::Identity(IdentityBasis::new());
+        let engine = AnyEngine::Adam(AdamEngine::new(rows, cols, &h, MomentumSpace::InBasis));
+        Composed::new(basis, engine, None, h, "adamw")
+    }
+
+    /// Adafactor: identity basis × rank-1 factored second moment.
+    pub fn adafactor(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        let basis = AnyBasis::Identity(IdentityBasis::new());
+        let engine =
+            AnyEngine::Adafactor(AdafactorEngine::new(rows, cols, &h, MomentumSpace::InBasis));
+        Composed::new(basis, engine, None, h, "adafactor")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn h_base() -> Hyper {
+        Hyper { weight_decay: 0.0, precond_freq: 5, ..Hyper::default() }
+    }
+
+    #[test]
+    fn composed_presets_carry_their_names() {
+        let h = h_base();
+        assert_eq!(presets::soap(4, 4, h.clone()).name(), "soap");
+        assert_eq!(presets::shampoo(4, 4, h.clone()).name(), "shampoo");
+        assert_eq!(presets::galore(4, 4, h.clone()).name(), "galore");
+        assert_eq!(presets::adamw(4, 4, h.clone()).name(), "adamw");
+        assert_eq!(presets::adafactor(4, 4, h).name(), "adafactor");
+    }
+
+    #[test]
+    fn state_bytes_decomposes_into_components() {
+        let h = Hyper::default();
+        let opt = presets::shampoo(8, 4, h);
+        assert_eq!(
+            opt.state_bytes(),
+            opt.basis.state_bytes()
+                + opt.engine.state_bytes()
+                + opt.graft.as_ref().unwrap().state_bytes()
+        );
+    }
+
+    #[test]
+    fn novel_combo_eigen_adafactor_one_sided_runs() {
+        // The acceptance combo: one-sided eigenbasis × rank-1 Adafactor.
+        let h = Hyper { one_sided: true, factorized: true, weight_decay: 0.0, ..h_base() };
+        let mut opt = presets::soap(4, 8, h);
+        let mut rng = Rng::new(71);
+        let target = Matrix::randn(&mut rng, 4, 8, 1.0);
+        let mut w = Matrix::zeros(4, 8);
+        for t in 1..=1500 {
+            let g = w.sub(&target).scale(2.0);
+            opt.update(&mut w, &g, t, 0.02);
+        }
+        assert!(w.max_abs_diff(&target) < 0.2, "{}", w.max_abs_diff(&target));
+    }
+
+    #[test]
+    fn composed_state_roundtrips() {
+        let mut rng = Rng::new(72);
+        for build in [presets::soap, presets::shampoo, presets::galore, presets::adamw] {
+            let h = h_base();
+            let mut a = build(5, 4, h.clone());
+            let mut w = Matrix::randn(&mut rng, 5, 4, 1.0);
+            for t in 1..=6 {
+                let g = Matrix::randn(&mut rng, 5, 4, 1.0);
+                a.update(&mut w, &g, t, 0.01);
+            }
+            let mut b = build(5, 4, h);
+            b.import_state(a.export_state()).unwrap();
+            let mut wa = w.clone();
+            let mut wb = w.clone();
+            for t in 7..=9 {
+                let g = Matrix::randn(&mut rng, 5, 4, 1.0);
+                a.update(&mut wa, &g, t, 0.01);
+                b.update(&mut wb, &g, t, 0.01);
+            }
+            for (x, y) in wa.data.iter().zip(&wb.data) {
+                assert_eq!(x, y, "{} drifted after state roundtrip", a.name());
+            }
+        }
+    }
+
+    #[test]
+    fn basis_mid_import_rejects_engine_mismatch() {
+        // A full-V checkpoint must not silently load into a factorized
+        // (Adafactor-engine) composition.
+        let h = h_base();
+        let mut full = presets::soap(4, 4, h.clone());
+        let mut w = Matrix::zeros(4, 4);
+        let mut rng = Rng::new(73);
+        let g = Matrix::randn(&mut rng, 4, 4, 1.0);
+        full.update(&mut w, &g, 1, 0.01);
+        let state = full.export_state();
+        let mut factored = presets::soap(4, 4, Hyper { factorized: true, ..h });
+        let err = factored.import_state(state).unwrap_err();
+        assert!(err.to_string().contains("full V"), "{err}");
+    }
+}

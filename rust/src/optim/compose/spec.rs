@@ -1,0 +1,380 @@
+//! The `--optimizer` composition grammar: `basis=…,inner=…[,graft=…]`.
+//!
+//! Every named preset is a point in this grammar
+//! (`basis=eigen,inner=adam` ≡ `soap`; `basis=eigen,inner=shampoo` ≡
+//! `shampoo`; `basis=svd,inner=adam` ≡ `galore`; …), and novel combinations
+//! — `basis=eigen:one-sided,inner=adafactor`, `basis=svd,inner=adafactor`,
+//! `basis=eigen,inner=adam,graft=adam` — build working optimizers with zero
+//! new code. Specs that exactly match a preset are canonicalized onto it, so
+//! they share the preset's label, tuned defaults, checkpoint layout, and
+//! PJRT artifact path.
+
+use super::presets;
+use super::{AnyBasis, AnyEngine, Composed, Graft};
+use super::{AdafactorEngine, AdamEngine, EigenBasis, GradSvdBasis, IdentityBasis, MomentumSpace};
+use crate::optim::hyper::Hyper;
+use crate::optim::{LayerOptimizer, OptKind};
+
+/// One-line grammar summary, embedded in parse errors and `--help`.
+pub const GRAMMAR_HELP: &str = "basis=<identity|eigen[:one-sided|:two-sided]|svd>,\
+inner=<adam|adafactor|shampoo>[,graft=<adam|none>]";
+
+/// Side selection for an eigenbasis spec. `Inherit` defers to
+/// `Hyper::one_sided` (the `--one-sided` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sided {
+    Inherit,
+    OneSided,
+    TwoSided,
+}
+
+/// Which [`super::Basis`] to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BasisSpec {
+    Identity,
+    Eigen { sided: Sided },
+    GradSvd,
+}
+
+/// Which [`super::MomentEngine`] to run inside it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineSpec {
+    Adam,
+    Adafactor,
+    InverseRoot,
+}
+
+/// Grafting wrapper selection. `Inherit` defers to `Hyper::grafting` for the
+/// Shampoo family and means "no graft" elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraftSpec {
+    Inherit,
+    Adam,
+    Off,
+}
+
+/// A parsed `--optimizer basis=…,inner=…[,graft=…]` composition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompositionSpec {
+    pub basis: BasisSpec,
+    pub inner: EngineSpec,
+    pub graft: GraftSpec,
+}
+
+impl CompositionSpec {
+    /// Parse the grammar. The caller routes any string containing `=` here.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut basis = BasisSpec::Identity;
+        let mut inner: Option<EngineSpec> = None;
+        let mut graft = GraftSpec::Inherit;
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "composition spec item '{part}' is not key=value; expected {GRAMMAR_HELP}"
+                )
+            })?;
+            match key.trim().to_ascii_lowercase().as_str() {
+                "basis" => {
+                    basis = match value.trim().to_ascii_lowercase().as_str() {
+                        "identity" | "none" | "i" => BasisSpec::Identity,
+                        "eigen" | "eig" => BasisSpec::Eigen { sided: Sided::Inherit },
+                        "eigen:one-sided" | "eig:one-sided" => {
+                            BasisSpec::Eigen { sided: Sided::OneSided }
+                        }
+                        "eigen:two-sided" | "eig:two-sided" => {
+                            BasisSpec::Eigen { sided: Sided::TwoSided }
+                        }
+                        "svd" | "grad-svd" | "gradsvd" => BasisSpec::GradSvd,
+                        other => anyhow::bail!(
+                            "unknown basis '{other}': expected identity, \
+                             eigen, eigen:one-sided, eigen:two-sided, or svd"
+                        ),
+                    };
+                }
+                "inner" | "engine" => {
+                    inner = Some(match value.trim().to_ascii_lowercase().as_str() {
+                        "adam" | "adamw" => EngineSpec::Adam,
+                        "adafactor" => EngineSpec::Adafactor,
+                        "shampoo" | "inverse-root" | "invroot" => EngineSpec::InverseRoot,
+                        other => anyhow::bail!(
+                            "unknown inner engine '{other}': expected adam, \
+                             adafactor, or shampoo"
+                        ),
+                    });
+                }
+                "graft" => {
+                    graft = match value.trim().to_ascii_lowercase().as_str() {
+                        "adam" | "adamw" => GraftSpec::Adam,
+                        "none" | "off" => GraftSpec::Off,
+                        other => {
+                            anyhow::bail!("unknown graft '{other}': expected adam or none")
+                        }
+                    };
+                }
+                other => anyhow::bail!(
+                    "unknown composition key '{other}': expected {GRAMMAR_HELP}"
+                ),
+            }
+        }
+        let inner = inner
+            .ok_or_else(|| anyhow::anyhow!("composition spec needs inner=…; {GRAMMAR_HELP}"))?;
+        let spec = Self { basis, inner, graft };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        if self.inner == EngineSpec::InverseRoot {
+            anyhow::ensure!(
+                matches!(self.basis, BasisSpec::Eigen { .. }),
+                "inner=shampoo applies the Kronecker inverse roots and needs basis=eigen"
+            );
+            anyhow::ensure!(
+                !matches!(self.basis, BasisSpec::Eigen { sided: Sided::OneSided }),
+                "inner=shampoo preconditions both sides; basis=eigen:one-sided is not supported"
+            );
+        }
+        Ok(())
+    }
+
+    /// Reject variant flags that contradict the spec's structural choices —
+    /// the same policy the refresh options follow (error, never silently
+    /// resolve).
+    pub fn check_flag_consistency(&self, one_sided: bool, factorized: bool) -> anyhow::Result<()> {
+        if matches!(self.basis, BasisSpec::Eigen { sided: Sided::TwoSided }) {
+            anyhow::ensure!(!one_sided, "--one-sided contradicts basis=eigen:two-sided");
+        }
+        if matches!(self.basis, BasisSpec::Eigen { .. }) && self.inner == EngineSpec::Adam {
+            anyhow::ensure!(
+                !factorized,
+                "--factorized contradicts inner=adam (use inner=adafactor)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Fold the spec's overrides into a [`Hyper`]: side selection, engine
+    /// choice (`factorized`), and graft activation. Idempotent.
+    pub fn apply(&self, h: &mut Hyper) {
+        match self.basis {
+            BasisSpec::Eigen { sided: Sided::OneSided } => h.one_sided = true,
+            BasisSpec::Eigen { sided: Sided::TwoSided } => h.one_sided = false,
+            _ => {}
+        }
+        if matches!(self.basis, BasisSpec::Eigen { .. }) {
+            match self.inner {
+                EngineSpec::Adam => h.factorized = false,
+                EngineSpec::Adafactor => h.factorized = true,
+                // `factorized` is a SOAP-family knob; the Shampoo engine
+                // ignores it, so leave the flag untouched.
+                EngineSpec::InverseRoot => {}
+            }
+        }
+        if self.inner == EngineSpec::InverseRoot {
+            match self.graft {
+                GraftSpec::Adam => h.grafting = true,
+                GraftSpec::Off => h.grafting = false,
+                GraftSpec::Inherit => {}
+            }
+        }
+    }
+
+    /// The preset this spec is exactly equivalent to, if any. Canonical specs
+    /// build (and label, checkpoint, tune) as that preset.
+    pub fn canonical(&self) -> Option<OptKind> {
+        let plain_graft = !matches!(self.graft, GraftSpec::Adam);
+        match (self.basis, self.inner) {
+            (BasisSpec::Identity, EngineSpec::Adam) if plain_graft => Some(OptKind::AdamW),
+            (BasisSpec::Identity, EngineSpec::Adafactor) if plain_graft => {
+                Some(OptKind::Adafactor)
+            }
+            (BasisSpec::Eigen { .. }, EngineSpec::Adam) if plain_graft => Some(OptKind::Soap),
+            (BasisSpec::Eigen { .. }, EngineSpec::Adafactor) if plain_graft => {
+                Some(OptKind::Soap)
+            }
+            (BasisSpec::Eigen { .. }, EngineSpec::InverseRoot) => Some(OptKind::Shampoo),
+            (BasisSpec::GradSvd, EngineSpec::Adam) if plain_graft => Some(OptKind::Galore),
+            _ => None,
+        }
+    }
+
+    /// Stable display label: the preset name when canonical, a structural
+    /// `basis+engine[+graft]` label otherwise.
+    pub fn label(&self) -> &'static str {
+        if let Some(kind) = self.canonical() {
+            // Eigen×Adafactor is factorized SOAP; keep the variant visible.
+            if matches!(
+                (self.basis, self.inner),
+                (BasisSpec::Eigen { .. }, EngineSpec::Adafactor)
+            ) {
+                return "soap-factorized";
+            }
+            // canonical() only ever returns preset kinds, so this cannot
+            // recurse back into label().
+            return kind.name();
+        }
+        match (self.basis, self.inner) {
+            (BasisSpec::Identity, EngineSpec::Adam) => "adamw+graft",
+            (BasisSpec::Identity, EngineSpec::Adafactor) => "adafactor+graft",
+            (BasisSpec::Eigen { .. }, EngineSpec::Adam) => "soap+graft",
+            (BasisSpec::Eigen { .. }, EngineSpec::Adafactor) => "soap-factorized+graft",
+            (BasisSpec::GradSvd, EngineSpec::Adam) => "galore+graft",
+            (BasisSpec::GradSvd, EngineSpec::Adafactor) => {
+                if matches!(self.graft, GraftSpec::Adam) {
+                    "svd+adafactor+graft"
+                } else {
+                    "svd+adafactor"
+                }
+            }
+            // validate() rules out InverseRoot off the eigen basis, and
+            // eigen×InverseRoot is always canonical (Shampoo).
+            (_, EngineSpec::InverseRoot) => "shampoo",
+        }
+    }
+
+    /// Build per-layer state for a `rows×cols` parameter. Canonical specs
+    /// route through the preset factories (same code, same label); novel
+    /// combinations assemble a [`Composed`] directly.
+    pub fn build(&self, rows: usize, cols: usize, h: &Hyper) -> Box<dyn LayerOptimizer> {
+        let mut h = h.clone();
+        self.apply(&mut h);
+        // Paper implementation detail 1: rotating bases run plain AdamW on
+        // 1-D parameters (the Shampoo family preconditions them instead).
+        let is_1d = rows == 1 || cols == 1;
+        if is_1d
+            && !matches!(self.basis, BasisSpec::Identity)
+            && self.inner != EngineSpec::InverseRoot
+        {
+            return Box::new(presets::adamw(rows, cols, h));
+        }
+        if let Some(kind) = self.canonical() {
+            return kind.build(rows, cols, &h);
+        }
+        // Novel combination: assemble directly.
+        let space = match self.basis {
+            BasisSpec::Eigen { .. } => MomentumSpace::Original,
+            _ => MomentumSpace::InBasis,
+        };
+        let basis = match self.basis {
+            BasisSpec::Identity => AnyBasis::Identity(IdentityBasis::new()),
+            BasisSpec::Eigen { .. } => AnyBasis::Eigen(EigenBasis::rotation(rows, cols, &h)),
+            BasisSpec::GradSvd => AnyBasis::GradSvd(GradSvdBasis::new(rows, cols, &h)),
+        };
+        let engine = match self.inner {
+            EngineSpec::Adam => AnyEngine::Adam(AdamEngine::new(rows, cols, &h, space)),
+            EngineSpec::Adafactor => {
+                AnyEngine::Adafactor(AdafactorEngine::new(rows, cols, &h, space))
+            }
+            EngineSpec::InverseRoot => unreachable!("inverse-root specs are canonical"),
+        };
+        let graft = matches!(self.graft, GraftSpec::Adam).then(|| {
+            let mut g = Graft::new(rows, cols, &h);
+            g.active = true;
+            g
+        });
+        let label = self.label();
+        Box::new(Composed::new(basis, engine, graft, h, label))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_presets_and_variants() {
+        let s = CompositionSpec::parse("basis=eigen,inner=adam").unwrap();
+        assert_eq!(s.canonical(), Some(OptKind::Soap));
+        assert_eq!(s.label(), "soap");
+
+        let s = CompositionSpec::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+        assert_eq!(s.basis, BasisSpec::Eigen { sided: Sided::OneSided });
+        assert_eq!(s.canonical(), Some(OptKind::Soap));
+        assert_eq!(s.label(), "soap-factorized");
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert!(h.one_sided && h.factorized);
+
+        let s = CompositionSpec::parse("basis=eigen,inner=shampoo,graft=none").unwrap();
+        assert_eq!(s.canonical(), Some(OptKind::Shampoo));
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert!(!h.grafting);
+
+        let s = CompositionSpec::parse("basis=svd,inner=adam").unwrap();
+        assert_eq!(s.canonical(), Some(OptKind::Galore));
+
+        let s = CompositionSpec::parse("inner=adafactor").unwrap();
+        assert_eq!(s.canonical(), Some(OptKind::Adafactor));
+    }
+
+    #[test]
+    fn novel_combos_have_no_canonical_preset() {
+        let s = CompositionSpec::parse("basis=svd,inner=adafactor").unwrap();
+        assert_eq!(s.canonical(), None);
+        assert_eq!(s.label(), "svd+adafactor");
+        let s = CompositionSpec::parse("basis=eigen,inner=adam,graft=adam").unwrap();
+        assert_eq!(s.canonical(), None);
+        assert_eq!(s.label(), "soap+graft");
+    }
+
+    #[test]
+    fn parse_errors_enumerate_choices() {
+        let e = CompositionSpec::parse("basis=fourier,inner=adam").unwrap_err().to_string();
+        assert!(e.contains("eigen") && e.contains("svd"), "{e}");
+        let e = CompositionSpec::parse("basis=eigen,inner=sgd").unwrap_err().to_string();
+        assert!(e.contains("adafactor") && e.contains("shampoo"), "{e}");
+        let e = CompositionSpec::parse("basis=eigen").unwrap_err().to_string();
+        assert!(e.contains("inner="), "{e}");
+        let e = CompositionSpec::parse("basis=svd,inner=shampoo").unwrap_err().to_string();
+        assert!(e.contains("basis=eigen"), "{e}");
+        let e = CompositionSpec::parse("flavor=mint,inner=adam").unwrap_err().to_string();
+        assert!(e.contains("basis=") && e.contains("graft"), "{e}");
+        let e = CompositionSpec::parse("basis=eigen:one-sided,inner=shampoo")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("both sides"), "{e}");
+    }
+
+    #[test]
+    fn flag_contradictions_rejected() {
+        let s = CompositionSpec::parse("basis=eigen:two-sided,inner=adam").unwrap();
+        assert!(s.check_flag_consistency(true, false).is_err());
+        assert!(s.check_flag_consistency(false, false).is_ok());
+        let s = CompositionSpec::parse("basis=eigen,inner=adam").unwrap();
+        assert!(s.check_flag_consistency(false, true).is_err());
+        // Inherit defers to the flag — no contradiction.
+        assert!(s.check_flag_consistency(true, false).is_ok());
+        let s = CompositionSpec::parse("basis=eigen,inner=adafactor").unwrap();
+        assert!(s.check_flag_consistency(false, false).is_ok());
+    }
+
+    #[test]
+    fn build_routes_1d_to_adamw_for_rotating_bases() {
+        let h = Hyper::default();
+        let s = CompositionSpec::parse("basis=eigen,inner=adafactor").unwrap();
+        assert_eq!(s.build(1, 64, &h).name(), "adamw");
+        let s = CompositionSpec::parse("basis=eigen,inner=shampoo").unwrap();
+        assert_eq!(s.build(1, 64, &h).name(), "shampoo");
+        let s = CompositionSpec::parse("basis=identity,inner=adafactor").unwrap();
+        assert_eq!(s.build(1, 64, &h).name(), "adafactor");
+    }
+
+    #[test]
+    fn novel_combo_builds_and_descends() {
+        use crate::linalg::Matrix;
+        use crate::util::rng::Rng;
+        let h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+        let s = CompositionSpec::parse("basis=svd,inner=adafactor").unwrap();
+        let mut opt = s.build(5, 4, &h);
+        let mut rng = Rng::new(74);
+        let target = Matrix::randn(&mut rng, 5, 4, 1.0);
+        let mut w = Matrix::zeros(5, 4);
+        let d0 = w.sub(&target).frob_norm();
+        for t in 1..=800 {
+            let g = w.sub(&target).scale(2.0);
+            opt.update(&mut w, &g, t, 0.02);
+        }
+        assert!(w.sub(&target).frob_norm() < 0.5 * d0);
+    }
+}

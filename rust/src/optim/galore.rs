@@ -1,140 +1,53 @@
-//! GaLore (Zhao et al. 2024a), full-rank version — the Appendix B baseline.
+//! GaLore (Zhao et al. 2024a), full-rank version — the Appendix B baseline,
+//! as a named preset over the composable core:
 //!
-//! Differences from SOAP that the paper calls out (§3) and that Appendix B
-//! shows matter empirically:
-//!  1. the projection basis comes from the SVD of the **current gradient**
-//!     (not an EMA of GGᵀ/GᵀG);
-//!  2. Adam's momentum lives in the **projected space** and is *not*
-//!     re-rotated when the basis changes;
-//!  3. only ONE side is projected (the smaller one), identity on the other.
+//! ```text
+//!   GaLore = GradSvdBasis × Adam (moments in the projected space)
+//! ```
 //!
-//! For the full-rank square projector the left singular vectors of `G` are
-//! the eigenvectors of `GGᵀ`, so we compute the basis with the Jacobi `eigh`
-//! of the square factor (avoids needing a general SVD).
+//! The differences from SOAP that the paper calls out (§3) and that
+//! Appendix B shows matter empirically are exactly the composition's two
+//! swapped components:
+//!
+//!  1. the basis ([`crate::optim::compose::GradSvdBasis`]) comes from the SVD of the
+//!     **current gradient** (not an EMA of GGᵀ/GᵀG), one side only;
+//!  2. the engine ([`crate::optim::compose::AdamEngine`] with `MomentumSpace::InBasis`)
+//!     keeps Adam's moments in the **projected space** and does *not*
+//!     re-rotate them when the basis changes.
+//!
+//! The composition is bitwise-identical to the pre-refactor monolithic
+//! implementation (`rust/tests/golden_compose.rs`).
 
+use super::compose::{presets, DynComposed};
 use super::hyper::Hyper;
-use super::LayerOptimizer;
-use crate::linalg::{eigh, Matrix};
 
-pub struct Galore {
-    h: Hyper,
-    /// Projection matrix P (k×k on the smaller side); identity until the
-    /// first refresh step.
-    p: Option<Matrix>,
-    /// Project the left side (true) or the right side (false).
-    left: bool,
-    /// Adam moments in the PROJECTED space.
-    m: Matrix,
-    v: Matrix,
-    refresh_secs: f64,
-}
+/// Named preset: [`Galore::new`] builds the gradient-SVD × projected-Adam
+/// composition.
+pub struct Galore;
 
 impl Galore {
-    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
-        Self {
-            left: rows <= cols,
-            p: None,
-            m: Matrix::zeros(rows, cols),
-            v: Matrix::zeros(rows, cols),
-            refresh_secs: 0.0,
-            h,
-        }
-    }
-
-    fn project(&self, g: &Matrix) -> Matrix {
-        match (&self.p, self.left) {
-            (Some(p), true) => p.matmul_tn(g),
-            (Some(p), false) => g.matmul(p),
-            (None, _) => g.clone(),
-        }
-    }
-
-    fn project_back(&self, x: &Matrix) -> Matrix {
-        match (&self.p, self.left) {
-            (Some(p), true) => p.matmul(x),
-            (Some(p), false) => x.matmul_nt(p),
-            (None, _) => x.clone(),
-        }
-    }
-}
-
-impl LayerOptimizer for Galore {
-    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
-        let h = self.h.clone();
-
-        // Basis refresh from the CURRENT gradient (difference #1), at this
-        // layer's staggered phase (`build_staggered` sets layer_idx % f).
-        if self.p.is_none() || h.is_refresh_step(t) {
-            let t0 = std::time::Instant::now();
-            let factor = if self.left { g.matmul_nt(g) } else { g.matmul_tn(g) };
-            let (_, vecs) = eigh(&factor);
-            self.p = Some(vecs);
-            // NOTE: momentum is deliberately NOT re-rotated (difference #2).
-            self.refresh_secs += t0.elapsed().as_secs_f64();
-        }
-
-        let g_proj = self.project(g);
-        self.m.ema_inplace(&g_proj, h.beta1);
-        let g2 = g_proj.hadamard(&g_proj);
-        self.v.ema_inplace(&g2, h.beta2);
-
-        let bc1 = 1.0 - h.beta1.powi(t as i32);
-        let bc2 = 1.0 - h.beta2.powi(t as i32);
-        let dir_proj = self
-            .m
-            .zip(&self.v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps));
-        let dir = self.project_back(&dir_proj).scale(h.galore_scale);
-
-        w.axpy_inplace(-lr, &dir);
-        if h.weight_decay != 0.0 {
-            w.scale_inplace(1.0 - lr * h.weight_decay);
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        let p = self.p.as_ref().map(|p| p.numel()).unwrap_or(0);
-        (p + self.m.numel() + self.v.numel()) * 4
-    }
-
-    fn name(&self) -> &'static str {
-        "galore"
-    }
-
-    fn refresh_seconds(&self) -> f64 {
-        self.refresh_secs
-    }
-
-    fn export_state(&self) -> Vec<Matrix> {
-        let has_p = Matrix::from_vec(1, 1, vec![self.p.is_some() as u8 as f32]);
-        let mut out = vec![has_p, self.m.clone(), self.v.clone()];
-        if let Some(p) = &self.p {
-            out.push(p.clone());
-        }
-        out
-    }
-
-    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
-        anyhow::ensure!(state.len() >= 3, "galore expects ≥3 state tensors");
-        let mut it = state.into_iter();
-        let has_p = it.next().unwrap().data[0] != 0.0;
-        self.m = it.next().unwrap();
-        self.v = it.next().unwrap();
-        self.p = if has_p {
-            Some(it.next().ok_or_else(|| anyhow::anyhow!("missing p"))?)
-        } else {
-            None
-        };
-        Ok(())
+    // Historical constructor name, kept across the compose refactor; it
+    // intentionally returns the composed type, not Self.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        presets::galore(rows, cols, h)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
+    use crate::optim::compose::GradSvdBasis;
+    use crate::optim::LayerOptimizer;
     use crate::util::rng::Rng;
 
     fn h_base() -> Hyper {
         Hyper { weight_decay: 0.0, precond_freq: 5, ..Hyper::default() }
+    }
+
+    fn svd(opt: &DynComposed) -> &GradSvdBasis {
+        opt.basis.as_grad_svd().expect("galore preset uses the grad-svd basis")
     }
 
     #[test]
@@ -152,8 +65,8 @@ mod tests {
 
     #[test]
     fn projects_smaller_side() {
-        assert!(Galore::new(4, 16, h_base()).left);
-        assert!(!Galore::new(16, 4, h_base()).left);
+        assert!(svd(&Galore::new(4, 16, h_base())).left);
+        assert!(!svd(&Galore::new(16, 4, h_base())).left);
     }
 
     #[test]
@@ -163,7 +76,7 @@ mod tests {
         let mut w = Matrix::zeros(5, 9);
         let g = Matrix::randn(&mut rng, 5, 9, 1.0);
         opt.update(&mut w, &g, 1, 0.01);
-        let p = opt.p.as_ref().unwrap();
+        let p = svd(&opt).p.as_ref().unwrap();
         assert_eq!(p.rows, 5);
         assert!(p.matmul_tn(p).max_abs_diff(&Matrix::eye(5)) < 1e-3);
     }
@@ -174,13 +87,13 @@ mod tests {
         let mut opt = Galore::new(4, 4, h_base()); // f = 5
         let mut w = Matrix::zeros(4, 4);
         opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), 1, 0.01);
-        let p1 = opt.p.clone().unwrap();
+        let p1 = svd(&opt).p.clone().unwrap();
         for t in 2..=4 {
             opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), t, 0.01);
         }
-        assert_eq!(opt.p.as_ref().unwrap(), &p1, "P changed off-schedule");
+        assert_eq!(svd(&opt).p.as_ref().unwrap(), &p1, "P changed off-schedule");
         opt.update(&mut w, &Matrix::randn(&mut rng, 4, 4, 1.0), 5, 0.01);
-        assert!(opt.p.as_ref().unwrap().max_abs_diff(&p1) > 0.0);
+        assert!(svd(&opt).p.as_ref().unwrap().max_abs_diff(&p1) > 0.0);
     }
 
     #[test]

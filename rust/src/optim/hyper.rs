@@ -12,6 +12,26 @@ pub enum RefreshMethod {
     Eigh,
 }
 
+impl RefreshMethod {
+    /// Parse a CLI/config token. Errors enumerate the valid values.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "qr" | "power-iteration" | "qr-power-iteration" => RefreshMethod::QrPowerIteration,
+            "eigh" => RefreshMethod::Eigh,
+            other => anyhow::bail!(
+                "unknown refresh method '{other}': expected qr (alias power-iteration) or eigh"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefreshMethod::QrPowerIteration => "qr",
+            RefreshMethod::Eigh => "eigh",
+        }
+    }
+}
+
 /// Hyperparameters shared across all optimizers. Per-optimizer fields are
 /// ignored by optimizers that don't use them.
 #[derive(Clone, Debug)]
@@ -156,6 +176,14 @@ mod tests {
         let h = h.async_refresh().with_refresh_phase(3);
         assert_eq!(h.refresh_mode, RefreshMode::Async);
         assert_eq!(h.refresh_phase, 3);
+    }
+
+    #[test]
+    fn refresh_method_parse_enumerates_choices() {
+        assert_eq!(RefreshMethod::parse("QR").unwrap(), RefreshMethod::QrPowerIteration);
+        assert_eq!(RefreshMethod::parse("eigh").unwrap(), RefreshMethod::Eigh);
+        let e = RefreshMethod::parse("svd").unwrap_err().to_string();
+        assert!(e.contains("qr") && e.contains("eigh"), "{e}");
     }
 
     #[test]

@@ -1,6 +1,28 @@
-//! Optimizers — the paper's contribution (SOAP) plus every baseline it
-//! evaluates against: AdamW, Adafactor, Shampoo (DistributedShampoo-style),
-//! GaLore (appendix B), and the idealized algorithms of Claim 1.
+//! Optimizers — the paper's contribution (SOAP) and every baseline it
+//! evaluates against, built on a composable core that mirrors the paper's
+//! structural claim: **an optimizer is a basis × an update rule (± norm
+//! grafting)**.
+//!
+//! The [`compose`] subsystem provides the three axes:
+//!
+//! - [`compose::Basis`] — how the gradient is carried into a working space
+//!   and back: identity, the slowly-refreshed Kronecker eigenbasis
+//!   (rotation-flavored for SOAP, inverse-root-flavored for Shampoo;
+//!   one/two-sided, dim-capped, QR-power-iteration or warm-`eigh`, inline or
+//!   async through [`crate::precond::RefreshService`]), or GaLore's
+//!   current-gradient SVD projector.
+//! - [`compose::MomentEngine`] — the update rule inside that space: diagonal
+//!   Adam, rank-1 Adafactor, or Shampoo's `L^{-1/e}·M̂·R^{-1/e}` sandwich.
+//! - [`compose::Graft`] — optional layerwise AdamW norm grafting.
+//!
+//! The historical names are presets over that core — SOAP =
+//! eigenbasis × Adam, factorized SOAP = eigenbasis × Adafactor, Shampoo =
+//! Graft(eigenbasis × inverse-root), GaLore = grad-SVD × Adam, AdamW/
+//! Adafactor = identity × {Adam, Adafactor} — and the CLI's `--optimizer`
+//! accepts both the preset names and the full grammar
+//! (`basis=…,inner=…[,graft=…]`, see [`compose::spec`]). Composed presets
+//! reproduce the pre-refactor monolithic optimizers bitwise
+//! (`rust/tests/golden_compose.rs`).
 //!
 //! All optimizers implement [`LayerOptimizer`] over a single parameter
 //! matrix (1-D parameters are `1×n`), so the coordinator can shard layers
@@ -13,6 +35,7 @@
 
 pub mod adafactor;
 pub mod adamw;
+pub mod compose;
 pub mod galore;
 pub mod hyper;
 pub mod idealized;
@@ -22,6 +45,7 @@ pub mod soap;
 
 pub use adafactor::Adafactor;
 pub use adamw::AdamW;
+pub use compose::{Basis, Composed, CompositionSpec, DynComposed, Graft, MomentEngine};
 pub use galore::Galore;
 pub use hyper::{Hyper, RefreshMethod, RefreshMode};
 pub use schedule::Schedule;
@@ -83,7 +107,8 @@ pub trait LayerOptimizer: Send {
     }
 }
 
-/// Which optimizer to build (CLI/config surface).
+/// Which optimizer to build (CLI/config surface): a named preset or a
+/// [`CompositionSpec`] from the `basis=…,inner=…[,graft=…]` grammar.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptKind {
     AdamW,
@@ -91,17 +116,29 @@ pub enum OptKind {
     Shampoo,
     Soap,
     Galore,
+    Composed(CompositionSpec),
 }
+
+/// The preset names accepted by [`OptKind::parse`], embedded in its errors.
+pub const OPTIMIZER_NAMES: &str = "adamw (alias adam), adafactor, shampoo, soap, galore";
 
 impl OptKind {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
+        // Anything carrying `key=value` pairs is a composition spec.
+        if s.contains('=') {
+            return Ok(OptKind::Composed(CompositionSpec::parse(s)?));
+        }
         Ok(match s.to_ascii_lowercase().as_str() {
             "adamw" | "adam" => OptKind::AdamW,
             "adafactor" => OptKind::Adafactor,
             "shampoo" => OptKind::Shampoo,
             "soap" => OptKind::Soap,
             "galore" => OptKind::Galore,
-            other => anyhow::bail!("unknown optimizer '{other}'"),
+            other => anyhow::bail!(
+                "unknown optimizer '{other}': expected one of {OPTIMIZER_NAMES}, \
+                 or a composition spec {}",
+                compose::spec::GRAMMAR_HELP
+            ),
         })
     }
 
@@ -112,6 +149,18 @@ impl OptKind {
             OptKind::Shampoo => "shampoo",
             OptKind::Soap => "soap",
             OptKind::Galore => "galore",
+            OptKind::Composed(spec) => spec.label(),
+        }
+    }
+
+    /// Collapse a composition spec onto the preset it is exactly equivalent
+    /// to (identity for preset kinds and genuinely novel specs). Coordinators
+    /// use this so `basis=eigen,inner=adam` rides every soap-only path (PJRT
+    /// artifacts, tuned LRs) for free.
+    pub fn canonical(&self) -> OptKind {
+        match self {
+            OptKind::Composed(spec) => spec.canonical().unwrap_or(*self),
+            k => *k,
         }
     }
 
@@ -129,6 +178,7 @@ impl OptKind {
             OptKind::Soap => Box::new(Soap::new(rows, cols, h.clone())),
             OptKind::Galore if is_1d => Box::new(AdamW::new(rows, cols, h.clone())),
             OptKind::Galore => Box::new(Galore::new(rows, cols, h.clone())),
+            OptKind::Composed(spec) => spec.build(rows, cols, h),
         }
     }
 
@@ -216,6 +266,36 @@ mod tests {
         assert_eq!(OptKind::parse("SOAP").unwrap(), OptKind::Soap);
         assert_eq!(OptKind::parse("adam").unwrap(), OptKind::AdamW);
         assert!(OptKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn parse_error_enumerates_valid_names_and_grammar() {
+        let e = OptKind::parse("sgd").unwrap_err().to_string();
+        for name in ["adamw", "adafactor", "shampoo", "soap", "galore", "basis="] {
+            assert!(e.contains(name), "error should mention {name}: {e}");
+        }
+    }
+
+    #[test]
+    fn parse_composition_specs() {
+        let k = OptKind::parse("basis=eigen,inner=adam").unwrap();
+        assert_eq!(k.canonical(), OptKind::Soap);
+        assert_eq!(k.name(), "soap");
+        let k = OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+        assert_eq!(k.canonical(), OptKind::Soap);
+        assert_eq!(k.name(), "soap-factorized");
+        let k = OptKind::parse("basis=svd,inner=adafactor").unwrap();
+        assert_eq!(k.canonical(), k, "novel combos stay composed");
+        assert!(OptKind::parse("basis=svd,inner=shampoo").is_err());
+    }
+
+    #[test]
+    fn composed_spec_builds_through_optkind() {
+        let h = Hyper::default();
+        let k = OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+        let opt = k.build(8, 4, &h);
+        assert_eq!(opt.name(), "soap");
+        assert_eq!(k.build(1, 16, &h).name(), "adamw");
     }
 
     #[test]

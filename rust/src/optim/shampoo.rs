@@ -1,305 +1,64 @@
 //! Shampoo (Gupta et al. 2018), in the DistributedShampoo (Shi et al. 2023)
-//! configuration the paper benchmarks against: EMA Kronecker factors
-//! `L ← β_s L + (1−β_s) GGᵀ`, `R ← β_s R + (1−β_s) GᵀG`, inverse roots
-//! `L^{-1/e}, R^{-1/e}` recomputed every `f` steps (preconditioning
-//! frequency), layerwise AdamW **grafting**, and momentum applied in the
-//! original space.
+//! configuration the paper benchmarks against, as a named preset over the
+//! composable core:
+//!
+//! ```text
+//!   Shampoo = Graft( EigenBasis(inverse-root) × InverseRoot )
+//! ```
+//!
+//! The basis ([`crate::optim::compose::EigenBasis`], inverse-root flavor) owns the EMA
+//! Kronecker factors `L ← β_s L + (1−β_s) GGᵀ`, `R ← β_s R + (1−β_s) GᵀG`
+//! and the cached roots `L^{-1/e}, R^{-1/e}` recomputed every `f` steps
+//! (warm-started `eigh`, inline or async); the engine
+//! ([`crate::optim::compose::InverseRootEngine`]) applies them to the bias-corrected
+//! momentum; the [`crate::optim::compose::Graft`] wrapper rescales to AdamW's layerwise
+//! norm.
 //!
 //! The paper's key criticism — that Shampoo's second-moment "adaptivity" is
 //! frozen between refreshes (only the scalar grafting norm adapts per step)
-//! — falls straight out of this structure: the direction uses the stale
-//! `L^{-1/e}` factors, while SOAP (see `soap.rs`) refreshes its diagonal
-//! second moment every step.
+//! — falls straight out of this composition: swap the engine for Adam and
+//! the staleness problem disappears (that swap IS SOAP, see `soap.rs`).
+//!
+//! The composition is bitwise-identical to the pre-refactor monolithic
+//! implementation (`rust/tests/golden_compose.rs`).
 
-use std::sync::Arc;
-use std::time::Instant;
-
-use super::adamw::AdamW;
+use super::compose::{presets, DynComposed};
 use super::hyper::Hyper;
-use super::LayerOptimizer;
-use crate::linalg::{eigh, eigh_warm, roots::inv_root_from_eig, Matrix};
-use crate::precond::{BasisHandle, BasisPayload, RefreshService};
 
-pub struct Shampoo {
-    h: Hyper,
-    /// Momentum (original space).
-    m: Matrix,
-    /// Kronecker factors (EMAs).
-    l: Matrix,
-    r: Matrix,
-    /// Cached inverse roots, recomputed every `f` steps.
-    l_inv: Matrix,
-    r_inv: Matrix,
-    /// AdamW second moment for grafting.
-    v_graft: Matrix,
-    /// Cached eigenbases for warm-started refreshes (§Perf: the periodic
-    /// root recompute reuses the previous basis, dropping cold Jacobi cost
-    /// to a few GEMMs + ~1 sweep — the paper's refreshes change L/R slowly).
-    l_vecs: Option<Matrix>,
-    r_vecs: Option<Matrix>,
-    initialized: bool,
-    refresh_secs: f64,
-    /// Async refresh plumbing (`None` ⇒ inline root recomputes). Grafting
-    /// keeps the scalar step size adapting every step while the roots age —
-    /// the same argument that makes SOAP tolerate a stale basis.
-    service: Option<Arc<RefreshService>>,
-    handle: Option<Arc<BasisHandle>>,
-    adopted_version: u64,
-    /// Step whose factors back the ACTIVE inverse roots.
-    basis_step: u64,
-}
+/// Named preset: [`Shampoo::new`] builds
+/// `Graft(inverse-root eigenbasis × Kronecker sandwich)`. The graft state is
+/// always carried (matching DistributedShampoo checkpoints); `h.grafting`
+/// controls whether it is applied.
+pub struct Shampoo;
 
 impl Shampoo {
-    pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
-        Self {
-            h,
-            m: Matrix::zeros(rows, cols),
-            l: Matrix::zeros(rows, rows),
-            r: Matrix::zeros(cols, cols),
-            l_inv: Matrix::eye(rows),
-            r_inv: Matrix::eye(cols),
-            v_graft: Matrix::zeros(rows, cols),
-            l_vecs: None,
-            r_vecs: None,
-            initialized: false,
-            refresh_secs: 0.0,
-            service: None,
-            handle: None,
-            adopted_version: 0,
-            basis_step: 0,
-        }
-    }
-
-    /// The root-recompute math as a pure function of bias-corrected factor
-    /// snapshots, shared verbatim by the inline and background paths.
-    /// Returns `(l_inv, r_inv, l_vecs, r_vecs)`.
-    fn compute_roots(
-        lh: &Matrix,
-        rh: &Matrix,
-        prev_l: Option<&Matrix>,
-        prev_r: Option<&Matrix>,
-        e: f32,
-        eps: f32,
-    ) -> (Matrix, Matrix, Matrix, Matrix) {
-        let (wl, vl) = match prev_l {
-            Some(prev) => eigh_warm(lh, prev),
-            None => eigh(lh),
-        };
-        let (wr, vr) = match prev_r {
-            Some(prev) => eigh_warm(rh, prev),
-            None => eigh(rh),
-        };
-        let l_inv = inv_root_from_eig(&wl, &vl, e, eps);
-        let r_inv = inv_root_from_eig(&wr, &vr, e, eps);
-        (l_inv, r_inv, vl, vr)
-    }
-
-    /// Bias-corrected factor snapshots at step `t`.
-    fn corrected_factors(&self, t: u64) -> (Matrix, Matrix) {
-        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
-        (self.l.scale(1.0 / bc), self.r.scale(1.0 / bc))
-    }
-
-    fn refresh_roots(&mut self, t: u64) {
-        let t0 = Instant::now();
-        // Per-factor exponent −1/e: the update is L^{-1/e} G R^{-1/e}.
-        // e = 4 is original Shampoo, e = 2 the Anil et al / Morwani et al
-        // power-1/2 variant, e = 2.5 the paper's DistributedShampoo default
-        // (Appendix A: "we set the default values of exponent to be −1/2.5").
-        let (lh, rh) = self.corrected_factors(t);
-        let (l_inv, r_inv, vl, vr) = Self::compute_roots(
-            &lh,
-            &rh,
-            self.l_vecs.as_ref(),
-            self.r_vecs.as_ref(),
-            self.h.shampoo_exponent,
-            self.h.shampoo_eps,
-        );
-        self.l_inv = l_inv;
-        self.r_inv = r_inv;
-        self.l_vecs = Some(vl);
-        self.r_vecs = Some(vr);
-        self.basis_step = t;
-        self.refresh_secs += t0.elapsed().as_secs_f64();
-    }
-
-    /// Async mode: adopt the newest published inverse roots, if any.
-    fn adopt_published(&mut self) {
-        let Some(handle) = &self.handle else { return };
-        if handle.version() <= self.adopted_version {
-            return;
-        }
-        if let Some(published) = handle.latest() {
-            if published.version > self.adopted_version {
-                let p = &published.payload;
-                if let (Some(li), Some(ri)) = (&p.left, &p.right) {
-                    self.l_inv = li.clone();
-                    self.r_inv = ri.clone();
-                }
-                self.l_vecs = p.left_aux.clone().or_else(|| self.l_vecs.take());
-                self.r_vecs = p.right_aux.clone().or_else(|| self.r_vecs.take());
-                self.adopted_version = published.version;
-                self.basis_step = published.snapshot_step;
-            }
-        }
-    }
-
-    /// Async mode: snapshot bias-corrected factors + warm-start bases and
-    /// hand the inverse-root recompute to the service.
-    fn enqueue_refresh(&self, service: &Arc<RefreshService>, handle: &Arc<BasisHandle>, t: u64) {
-        if !handle.try_begin_refresh() {
-            return;
-        }
-        let (lh, rh) = self.corrected_factors(t);
-        let prev_l = self.l_vecs.clone();
-        let prev_r = self.r_vecs.clone();
-        let e = self.h.shampoo_exponent;
-        let eps = self.h.shampoo_eps;
-        service.enqueue(
-            Arc::clone(handle),
-            t,
-            Box::new(move || {
-                let (l_inv, r_inv, vl, vr) =
-                    Self::compute_roots(&lh, &rh, prev_l.as_ref(), prev_r.as_ref(), e, eps);
-                BasisPayload {
-                    left: Some(l_inv),
-                    right: Some(r_inv),
-                    left_aux: Some(vl),
-                    right_aux: Some(vr),
-                }
-            }),
-        );
+    // Historical constructor name, kept across the compose refactor; it
+    // intentionally returns the composed type, not Self.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(rows: usize, cols: usize, h: Hyper) -> DynComposed {
+        presets::shampoo(rows, cols, h)
     }
 }
 
-impl LayerOptimizer for Shampoo {
-    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
-        let h = self.h.clone();
-
-        // --- factor updates --------------------------------------------------
-        let ggt = g.matmul_nt(g);
-        let gtg = g.matmul_tn(g);
-        self.l.ema_inplace(&ggt, h.shampoo_beta);
-        self.r.ema_inplace(&gtg, h.shampoo_beta);
-
-        // --- refresh inverse roots at frequency f (and on first step) -------
-        // Async mode: adopt whatever the background service has published,
-        // then (at this layer's phase) snapshot and re-enqueue. The first
-        // recompute always runs inline so the roots are never identity-only.
-        self.adopt_published();
-        if !self.initialized {
-            self.refresh_roots(t);
-            self.initialized = true;
-        } else if h.is_refresh_step(t) {
-            match (self.service.clone(), self.handle.clone()) {
-                (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
-                _ => self.refresh_roots(t),
-            }
-        }
-
-        // --- momentum + preconditioned direction -----------------------------
-        self.m.ema_inplace(g, h.beta1);
-        let bc1 = 1.0 - h.beta1.powi(t as i32);
-        let m_hat = self.m.scale(1.0 / bc1);
-        let mut dir = self.l_inv.matmul(&m_hat).matmul(&self.r_inv);
-
-        // --- layerwise AdamW grafting ----------------------------------------
-        if h.grafting {
-            let g2 = g.hadamard(g);
-            self.v_graft.ema_inplace(&g2, h.beta2);
-            let adam_dir =
-                AdamW::direction(&self.m, &self.v_graft, t, h.beta1, h.beta2, h.eps);
-            let target = adam_dir.frob_norm();
-            let actual = dir.frob_norm();
-            if actual > 1e-30 {
-                dir.scale_inplace(target / actual);
-            }
-        }
-
-        w.axpy_inplace(-lr, &dir);
-        if h.weight_decay != 0.0 {
-            w.scale_inplace(1.0 - lr * h.weight_decay);
-        }
-    }
-
-    fn state_bytes(&self) -> usize {
-        // L, R, L_inv, R_inv (2m²+2n²) + M, V_graft (2mn) — matches the
-        // paper §7.2 DistributedShampoo accounting (their "Q_L,Q_R" slots are
-        // our cached inverse roots).
-        (self.l.numel() + self.r.numel() + self.l_inv.numel() + self.r_inv.numel()
-            + self.m.numel()
-            + self.v_graft.numel())
-            * 4
-    }
-
-    fn name(&self) -> &'static str {
-        "shampoo"
-    }
-
-    fn refresh_seconds(&self) -> f64 {
-        self.refresh_secs
-    }
-
-    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
-        self.service = Some(Arc::clone(service));
-        self.handle = Some(Arc::new(BasisHandle::new()));
-        self.adopted_version = 0;
-        true
-    }
-
-    fn basis_snapshot_step(&self) -> Option<u64> {
-        self.initialized.then_some(self.basis_step)
-    }
-
-    fn export_state(&self) -> Vec<Matrix> {
-        // flags[1] = basis_step, so staleness survives a checkpoint resume.
-        let flags = Matrix::from_vec(
-            1,
-            2,
-            vec![self.initialized as u8 as f32, self.basis_step as f32],
-        );
-        vec![
-            flags,
-            self.m.clone(),
-            self.l.clone(),
-            self.r.clone(),
-            self.l_inv.clone(),
-            self.r_inv.clone(),
-            self.v_graft.clone(),
-        ]
-    }
-
-    fn import_state(&mut self, state: Vec<Matrix>) -> anyhow::Result<()> {
-        anyhow::ensure!(state.len() == 7, "shampoo expects 7 state tensors");
-        let mut it = state.into_iter();
-        let flags = it.next().unwrap();
-        // cols == 1 accepts pre-basis_step checkpoints.
-        anyhow::ensure!(flags.cols == 1 || flags.cols == 2, "shampoo state flags malformed");
-        self.initialized = flags.data[0] != 0.0;
-        self.basis_step = if flags.cols == 2 { flags.data[1] as u64 } else { 0 };
-        // Refreshes enqueued before the restore were computed from discarded
-        // factors; drain them, then skip every pre-restore publication.
-        if let (Some(service), Some(handle)) = (&self.service, &self.handle) {
-            service.wait_idle();
-            self.adopted_version = handle.version();
-        }
-        self.m = it.next().unwrap();
-        self.l = it.next().unwrap();
-        self.r = it.next().unwrap();
-        self.l_inv = it.next().unwrap();
-        self.r_inv = it.next().unwrap();
-        self.v_graft = it.next().unwrap();
-        Ok(())
-    }
-}
+pub use super::compose::EigenFlavor;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
+    use crate::optim::adamw::AdamW;
+    use crate::optim::compose::EigenBasis;
+    use crate::optim::LayerOptimizer;
+    use crate::precond::RefreshService;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     fn h_base() -> Hyper {
         Hyper { weight_decay: 0.0, precond_freq: 1, ..Hyper::default() }
+    }
+
+    fn eigen(opt: &DynComposed) -> &EigenBasis {
+        opt.basis.as_eigen().expect("shampoo preset uses the eigenbasis")
     }
 
     #[test]
@@ -343,15 +102,22 @@ mod tests {
         let mut w = Matrix::zeros(4, 4);
         let g = Matrix::randn(&mut rng, 4, 4, 1.0);
         opt.update(&mut w, &g, 1, 0.01); // initializes roots
-        let l_after_1 = opt.l_inv.clone();
+        let l_after_1 = eigen(&opt).left_q.clone().unwrap();
         for t in 2..=9 {
             let g = Matrix::randn(&mut rng, 4, 4, 1.0);
             opt.update(&mut w, &g, t, 0.01);
         }
-        assert_eq!(opt.l_inv, l_after_1, "roots changed between refreshes");
+        assert_eq!(
+            eigen(&opt).left_q.as_ref().unwrap(),
+            &l_after_1,
+            "roots changed between refreshes"
+        );
         let g = Matrix::randn(&mut rng, 4, 4, 1.0);
         opt.update(&mut w, &g, 10, 0.01);
-        assert!(opt.l_inv.max_abs_diff(&l_after_1) > 0.0, "roots must refresh at f");
+        assert!(
+            eigen(&opt).left_q.as_ref().unwrap().max_abs_diff(&l_after_1) > 0.0,
+            "roots must refresh at f"
+        );
     }
 
     #[test]
@@ -369,8 +135,17 @@ mod tests {
     #[test]
     fn state_bytes_matches_paper_formula() {
         let opt = Shampoo::new(8, 4, Hyper::default());
-        // 2m² + 2n² + 2mn floats.
+        // Pre-init: L, R, L_inv, R_inv (2m²+2n²) + M, V_graft (2mn).
         assert_eq!(opt.state_bytes(), (2 * 64 + 2 * 16 + 2 * 32) * 4);
+        // After the first refresh the warm-start eigenvector caches exist
+        // and are honestly accounted (the pre-refactor code omitted them):
+        // + m² + n².
+        let mut opt = opt;
+        let mut rng = Rng::new(11);
+        let mut w = Matrix::zeros(8, 4);
+        let g = Matrix::randn(&mut rng, 8, 4, 1.0);
+        opt.update(&mut w, &g, 1, 0.01);
+        assert_eq!(opt.state_bytes(), (3 * 64 + 3 * 16 + 2 * 32) * 4);
     }
 
     #[test]
@@ -387,7 +162,7 @@ mod tests {
             opt.update(&mut w, &g, t, 0.02);
             svc.wait_idle();
         }
-        assert!(opt.adopted_version > 0, "no background root recompute adopted");
+        assert!(eigen(&opt).adopted_version > 0, "no background root recompute adopted");
         // The t=1500 snapshot published but was never adopted (the run
         // ended); the active roots are backed by the t=1495 snapshot.
         assert_eq!(opt.basis_snapshot_step(), Some(1495));

@@ -55,6 +55,18 @@ impl RefreshMode {
             RefreshMode::Async => "async",
         }
     }
+
+    /// Parse a CLI/config token. Errors enumerate the valid values.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "inline" | "sync" => RefreshMode::Inline,
+            "async" | "background" => RefreshMode::Async,
+            other => anyhow::bail!(
+                "unknown refresh mode '{other}': expected inline (alias sync) or async \
+                 (alias background)"
+            ),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -65,5 +77,13 @@ mod tests {
     fn mode_defaults_inline() {
         assert_eq!(RefreshMode::default(), RefreshMode::Inline);
         assert_eq!(RefreshMode::Async.name(), "async");
+    }
+
+    #[test]
+    fn mode_parse_enumerates_choices() {
+        assert_eq!(RefreshMode::parse("ASYNC").unwrap(), RefreshMode::Async);
+        assert_eq!(RefreshMode::parse("inline").unwrap(), RefreshMode::Inline);
+        let e = RefreshMode::parse("eager").unwrap_err().to_string();
+        assert!(e.contains("inline") && e.contains("async"), "{e}");
     }
 }

@@ -61,6 +61,20 @@ fn prop_soap_identity_basis_is_adamw() {
     });
 }
 
+/// The preset kinds plus two composition-grammar kinds (one canonical, one
+/// novel), so the property suite covers the composed core's full surface.
+fn all_kinds() -> Vec<OptKind> {
+    vec![
+        OptKind::AdamW,
+        OptKind::Adafactor,
+        OptKind::Shampoo,
+        OptKind::Soap,
+        OptKind::Galore,
+        OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap(),
+        OptKind::parse("basis=svd,inner=adafactor").unwrap(),
+    ]
+}
+
 #[test]
 fn prop_all_optimizers_descend_on_quadratic() {
     prop::check("every optimizer reduces a random quadratic", 10, |rng| {
@@ -102,7 +116,7 @@ fn prop_all_optimizers_finite_under_extreme_gradients() {
         let m = 2 + rng.below(5) as usize;
         let n = 2 + rng.below(5) as usize;
         let scales = [0.0f32, 1e-20, 1e20];
-        for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
+        for kind in all_kinds() {
             let h = Hyper { precond_freq: 2, ..Hyper::default() };
             let mut opt = kind.build(m, n, &h);
             let mut w = Matrix::randn(rng, m, n, 1.0);
@@ -124,7 +138,7 @@ fn prop_state_roundtrip_all_optimizers() {
     prop::check("export/import state preserves the trajectory", 8, |rng| {
         let m = 2 + rng.below(6) as usize;
         let n = 2 + rng.below(6) as usize;
-        for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Shampoo, OptKind::Soap, OptKind::Galore] {
+        for kind in all_kinds() {
             let h = Hyper { precond_freq: 2, ..Hyper::default() };
             let mut a = kind.build(m, n, &h);
             let mut wa = Matrix::randn(rng, m, n, 1.0);
