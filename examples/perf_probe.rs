@@ -28,6 +28,68 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64() / iters as f64;
         println!("gemm n={n}: {:.3} ms, {:.2} GFLOP/s", dt * 1e3, 2.0 * (n * n * n) as f64 / dt / 1e9);
     }
+
+    // The serial `*_into` kernel family (the zero-allocation step path) vs
+    // the allocating parallel entries, per transpose variant.
+    for n in [128usize, 256] {
+        let a = Matrix::randn(&mut rng, n, n, 1.0);
+        let b = Matrix::randn(&mut rng, n, n, 1.0);
+        let mut out = Matrix::zeros(n, n);
+        let mut pack = Vec::new();
+        let iters = (128 * 1024 * 1024) / (n * n * n) + 1;
+        let flops = 2.0 * (n * n * n) as f64;
+        fn time_kernel(iters: usize, flops: f64, mut f: impl FnMut()) -> f64 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            flops / (t0.elapsed().as_secs_f64() / iters as f64) / 1e9
+        }
+        let nn = time_kernel(iters, flops, || a.matmul_into(&b, &mut out));
+        let tn = time_kernel(iters, flops, || a.matmul_tn_into(&b, &mut out));
+        let nt = time_kernel(iters, flops, || a.matmul_nt_into(&b, &mut out, &mut pack));
+        let par_nn = time_kernel(iters, flops, || {
+            let _ = a.matmul(&b);
+        });
+        println!(
+            "kernels n={n}: nn_into {nn:.2}  tn_into {tn:.2}  nt_into(packed) {nt:.2}  \
+             par nn {par_nn:.2} GFLOP/s"
+        );
+    }
+
+    // Workspace step path vs the allocating-engine reference on one SOAP
+    // layer (same basis hooks in both arms — the true pre-PR baseline is
+    // the step_latency bench's `--legacy-alloc` arm; full sweep there).
+    {
+        use soap_lab::optim::compose::presets;
+        let (m, n) = (64usize, 256usize);
+        let h = Hyper::default();
+        let grads: Vec<Matrix> =
+            (0..16).map(|_| Matrix::randn(&mut rng, m, n, 0.5)).collect();
+        let steps = 60;
+        let mut run = |legacy: bool| -> f64 {
+            let mut opt = presets::soap(m, n, h.clone());
+            let mut w = Matrix::zeros(m, n);
+            let t0 = std::time::Instant::now();
+            for i in 0..steps {
+                let g = &grads[i % grads.len()];
+                if legacy {
+                    opt.update_legacy_alloc(&mut w, g, i as u64 + 1, 1e-3);
+                } else {
+                    use soap_lab::optim::LayerOptimizer;
+                    opt.update(&mut w, g, i as u64 + 1, 1e-3);
+                }
+            }
+            steps as f64 / t0.elapsed().as_secs_f64()
+        };
+        let alloc_sps = run(true);
+        let ws_sps = run(false);
+        println!(
+            "soap {m}x{n} step: workspace {ws_sps:.1} steps/s vs allocating {alloc_sps:.1} \
+             ({:.2}x)",
+            ws_sps / alloc_sps.max(1e-12)
+        );
+    }
     for n in [64usize, 128, 256] {
         let p = Matrix::rand_psd(&mut rng, n);
         let t0 = std::time::Instant::now();
@@ -79,13 +141,14 @@ fn main() {
         t.wait_refresh_idle(); // fold in refreshes still in flight at the end
         println!(
             "{:<7} hot-path refresh {:>7.1} ms ({:>4.1}% of step)  background {:>7.1} ms  \
-             mean staleness {:>4.1} steps  p99 step {:>6.2} ms",
+             mean staleness {:>4.1} steps  p99 step {:>6.2} ms  workspace {:>6.1} KiB",
             mode.name(),
             1e3 * log.refresh_seconds_total(),
             100.0 * log.refresh_frac(),
             1e3 * t.async_refresh_seconds(),
             log.mean_staleness(),
             1e3 * log.step_time_quantile(0.99),
+            t.scratch_bytes() as f64 / 1024.0,
         );
     }
 }

@@ -1,0 +1,576 @@
+//! Step-latency bench: the PR-3 zero-allocation step path, measured.
+//!
+//! For every optimizer preset × layer shape this reports p50/p99 step
+//! latency (µs), steps/sec, allocations per step (counting-allocator shim;
+//! the p50 row is the steady-state figure — refresh steps allocate by
+//! design), and the workspace arena size. With `--legacy-alloc` it ALSO
+//! measures, in the same run, the **pre-PR allocating path**: the frozen
+//! seed kernels (`matmul_tn`/`matmul_nt` per-element dot loops, the
+//! zero-skipping blocked NN kernel) driving the allocating clone/map/zip
+//! step math — and emits the workspace-vs-legacy steps/sec speedups.
+//!
+//! Results go to `bench_results/step_latency.json`. Knobs:
+//! `SOAP_BENCH_STEPS` (timed steps per cell, default 150).
+//!
+//! ```sh
+//! cargo bench --bench step_latency -- --legacy-alloc
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use soap_lab::linalg::Matrix;
+use soap_lab::optim::compose::presets;
+use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer};
+use soap_lab::util::bench::fmt_duration;
+use soap_lab::util::json::Json;
+use soap_lab::util::rng::Rng;
+use soap_lab::util::stats::Samples;
+
+/// Counts every alloc/realloc so `allocs/step` is measured, not inferred.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The pre-PR substrate and step math, frozen verbatim from the seed so the
+/// `--legacy-alloc` arm measures what the repo actually shipped before this
+/// PR — not the new kernels driven allocating-ly. Refresh-time
+/// decompositions go through the live crate (they are amortized over `f`
+/// steps and not what this bench isolates).
+mod prepr {
+    use soap_lab::linalg::{eigh, power_iter_refresh, Matrix};
+    use soap_lab::optim::Hyper;
+
+    /// Seed NN kernel: k-blocked axpy WITH the `av == 0.0` skip.
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        const KB: usize = 256;
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in 0..m {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for p in k0..k1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    for (cj, &bj) in crow.iter_mut().zip(brow) {
+                        *cj += av * bj;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Seed TN kernel: index-based axpy with the zero skip, no blocking.
+    #[allow(clippy::needless_range_loop)]
+    pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (a.rows, a.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for p in 0..k {
+            let arow = a.row(p);
+            let brow = b.row(p);
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Seed NT kernel: per-element serial dot product (the accumulation
+    /// chain that cannot vectorize — the panel-packing rationale).
+    pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (a.rows, a.cols, b.rows);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = a.row(i);
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                c.data[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn factored_normalize(num: &Matrix, a: &[f32], c: &[f32], eps: f32) -> Matrix {
+        let sum_a: f32 = a.iter().map(|&x| x as f64).sum::<f64>() as f32;
+        let inv_sum = if sum_a > 0.0 { 1.0 / sum_a } else { 0.0 };
+        Matrix::from_fn(num.rows, num.cols, |i, j| {
+            let vhat = (a[i] * c[j] * inv_sum).max(0.0);
+            num.at(i, j) / (vhat + eps).sqrt()
+        })
+    }
+
+    /// Pre-PR SOAP (inline mode): allocating rotations/EMAs over the seed
+    /// kernels. `h.factorized` selects the rank-1 second moment.
+    pub struct Soap {
+        h: Hyper,
+        m: Matrix,
+        l: Option<Matrix>,
+        r: Option<Matrix>,
+        ql: Option<Matrix>,
+        qr: Option<Matrix>,
+        v: Option<Matrix>,
+        va: Vec<f32>,
+        vc: Vec<f32>,
+        initialized: bool,
+    }
+
+    impl Soap {
+        pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
+            let factorized = h.factorized;
+            Self {
+                m: Matrix::zeros(rows, cols),
+                l: Some(Matrix::zeros(rows, rows)),
+                r: Some(Matrix::zeros(cols, cols)),
+                ql: None,
+                qr: None,
+                v: (!factorized).then(|| Matrix::zeros(rows, cols)),
+                va: if factorized { vec![0.0; rows] } else { Vec::new() },
+                vc: if factorized { vec![0.0; cols] } else { Vec::new() },
+                initialized: false,
+                h,
+            }
+        }
+
+        fn project(&self, x: &Matrix) -> Matrix {
+            let mut y = match &self.ql {
+                Some(ql) => matmul_tn(ql, x),
+                None => x.clone(),
+            };
+            if let Some(qr) = &self.qr {
+                y = matmul(&y, qr);
+            }
+            y
+        }
+
+        fn project_back(&self, x: &Matrix) -> Matrix {
+            let mut y = match &self.ql {
+                Some(ql) => matmul(ql, x),
+                None => x.clone(),
+            };
+            if let Some(qr) = &self.qr {
+                y = matmul_nt(&y, qr);
+            }
+            y
+        }
+
+        pub fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+            let h = self.h.clone();
+            if !self.initialized {
+                if let Some(l) = &mut self.l {
+                    *l = matmul_nt(g, g);
+                    let (_, v) = eigh(l);
+                    self.ql = Some(v);
+                }
+                if let Some(r) = &mut self.r {
+                    *r = matmul_tn(g, g);
+                    let (_, v) = eigh(r);
+                    self.qr = Some(v);
+                }
+                self.initialized = true;
+            }
+
+            self.m.ema_inplace(g, h.beta1);
+            let g_rot = self.project(g);
+            let m_rot = self.project(&self.m);
+
+            let bc1 = 1.0 - h.beta1.powi(t as i32);
+            let bc2 = 1.0 - h.beta2.powi(t as i32);
+            let m_hat = m_rot.scale(1.0 / bc1);
+
+            let n_rot = if let Some(v) = &mut self.v {
+                let g2 = g_rot.hadamard(&g_rot);
+                v.ema_inplace(&g2, h.beta2);
+                m_hat.zip(v, |mi, vi| mi / ((vi / bc2).max(0.0).sqrt() + h.eps))
+            } else {
+                let g2 = g_rot.hadamard(&g_rot);
+                let rows = g2.row_sums();
+                let cols = g2.col_sums();
+                for (ai, ri) in self.va.iter_mut().zip(&rows) {
+                    *ai = h.beta2 * *ai + (1.0 - h.beta2) * ri;
+                }
+                for (ci, cj) in self.vc.iter_mut().zip(&cols) {
+                    *ci = h.beta2 * *ci + (1.0 - h.beta2) * cj;
+                }
+                let a_hat: Vec<f32> = self.va.iter().map(|&x| x / bc2).collect();
+                let c_hat: Vec<f32> = self.vc.iter().map(|&x| x / bc2).collect();
+                factored_normalize(&m_hat, &a_hat, &c_hat, h.eps)
+            };
+
+            let n = self.project_back(&n_rot);
+            w.axpy_inplace(-lr, &n);
+            if h.weight_decay != 0.0 {
+                w.scale_inplace(1.0 - lr * h.weight_decay);
+            }
+
+            if let Some(l) = &mut self.l {
+                let ggt = matmul_nt(g, g);
+                l.ema_inplace(&ggt, h.shampoo_beta);
+            }
+            if let Some(r) = &mut self.r {
+                let gtg = matmul_tn(g, g);
+                r.ema_inplace(&gtg, h.shampoo_beta);
+            }
+            if h.is_refresh_step(t) {
+                if let (Some(l), Some(ql)) = (&self.l, &self.ql) {
+                    self.ql = Some(power_iter_refresh(l, ql));
+                }
+                if let (Some(r), Some(qr)) = (&self.r, &self.qr) {
+                    self.qr = Some(power_iter_refresh(r, qr));
+                }
+            }
+        }
+    }
+
+    /// Pre-PR AdamW: the allocating hadamard/zip chain.
+    pub struct AdamW {
+        h: Hyper,
+        m: Matrix,
+        v: Matrix,
+    }
+
+    impl AdamW {
+        pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
+            Self { m: Matrix::zeros(rows, cols), v: Matrix::zeros(rows, cols), h }
+        }
+
+        pub fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+            let h = &self.h;
+            self.m.ema_inplace(g, h.beta1);
+            let g2 = g.hadamard(g);
+            self.v.ema_inplace(&g2, h.beta2);
+            let bc1 = 1.0 - h.beta1.powi(t as i32);
+            let bc2 = 1.0 - h.beta2.powi(t as i32);
+            let dir = self
+                .m
+                .zip(&self.v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps));
+            w.axpy_inplace(-lr, &dir);
+            if h.weight_decay != 0.0 {
+                w.scale_inplace(1.0 - lr * h.weight_decay);
+            }
+        }
+    }
+
+    /// Pre-PR Adafactor (2-D path): allocating factored chain.
+    pub struct Adafactor {
+        h: Hyper,
+        m: Matrix,
+        va: Vec<f32>,
+        vc: Vec<f32>,
+    }
+
+    impl Adafactor {
+        pub fn new(rows: usize, cols: usize, h: Hyper) -> Self {
+            Self { m: Matrix::zeros(rows, cols), va: vec![0.0; rows], vc: vec![0.0; cols], h }
+        }
+
+        pub fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+            let h = self.h.clone();
+            let bc1 = 1.0 - h.beta1.powi(t as i32);
+            let bc2 = 1.0 - h.beta2.powi(t as i32);
+            self.m.ema_inplace(g, h.beta1);
+            let g2 = g.hadamard(g);
+            let rows = g2.row_sums();
+            let cols = g2.col_sums();
+            for (ai, ri) in self.va.iter_mut().zip(&rows) {
+                *ai = h.beta2 * *ai + (1.0 - h.beta2) * ri;
+            }
+            for (ci, cj) in self.vc.iter_mut().zip(&cols) {
+                *ci = h.beta2 * *ci + (1.0 - h.beta2) * cj;
+            }
+            let a_hat: Vec<f32> = self.va.iter().map(|&x| x / bc2).collect();
+            let c_hat: Vec<f32> = self.vc.iter().map(|&x| x / bc2).collect();
+            let m_hat = self.m.scale(1.0 / bc1);
+            let dir = factored_normalize(&m_hat, &a_hat, &c_hat, h.eps);
+            w.axpy_inplace(-lr, &dir);
+            if h.weight_decay != 0.0 {
+                w.scale_inplace(1.0 - lr * h.weight_decay);
+            }
+        }
+    }
+}
+
+struct Row {
+    preset: &'static str,
+    path: &'static str,
+    rows: usize,
+    cols: usize,
+    p50_us: f64,
+    p99_us: f64,
+    steps_per_sec: f64,
+    /// Median per-step allocation count — the steady-state figure (refresh
+    /// steps allocate by design and land in the tail).
+    allocs_per_step_p50: f64,
+    allocs_per_step_mean: f64,
+    scratch_bytes: usize,
+}
+
+/// Drive `step` over a fixed gradient stream and measure per-step latency
+/// and allocation counts. Measurement buffers are pre-reserved so the
+/// harness itself allocates nothing inside the timed window.
+fn drive(
+    rows: usize,
+    cols: usize,
+    warmup: usize,
+    steps: usize,
+    mut step: impl FnMut(&mut Matrix, &Matrix, u64),
+) -> (f64, f64, f64, f64, f64) {
+    let mut rng = Rng::new(7);
+    let grads: Vec<Matrix> = (0..32).map(|_| Matrix::randn(&mut rng, rows, cols, 0.5)).collect();
+    let mut w = Matrix::zeros(rows, cols);
+    for i in 0..warmup {
+        step(&mut w, &grads[i % grads.len()], i as u64 + 1);
+    }
+    let mut times_us: Vec<f64> = Vec::with_capacity(steps);
+    let mut step_allocs: Vec<f64> = Vec::with_capacity(steps);
+    let t_all = Instant::now();
+    for i in 0..steps {
+        let t = (warmup + i) as u64 + 1;
+        let g = &grads[(warmup + i) % grads.len()];
+        let a0 = allocs();
+        let t0 = Instant::now();
+        step(&mut w, g, t);
+        times_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        step_allocs.push((allocs() - a0) as f64);
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    let mut ts = Samples::new();
+    for &x in &times_us {
+        ts.push(x);
+    }
+    let mut asamp = Samples::new();
+    let mut amean = 0.0;
+    for &x in &step_allocs {
+        asamp.push(x);
+        amean += x;
+    }
+    amean /= steps as f64;
+    (ts.quantile(0.50), ts.quantile(0.99), steps as f64 / total, asamp.quantile(0.50), amean)
+}
+
+fn row_json(r: &Row) -> Json {
+    Json::obj(vec![
+        ("preset", Json::str(r.preset)),
+        ("path", Json::str(r.path)),
+        ("rows", Json::num(r.rows as f64)),
+        ("cols", Json::num(r.cols as f64)),
+        ("p50_step_us", Json::num(r.p50_us)),
+        ("p99_step_us", Json::num(r.p99_us)),
+        ("steps_per_sec", Json::num(r.steps_per_sec)),
+        ("allocs_per_step_p50", Json::num(r.allocs_per_step_p50)),
+        ("allocs_per_step_mean", Json::num(r.allocs_per_step_mean)),
+        ("scratch_bytes", Json::num(r.scratch_bytes as f64)),
+    ])
+}
+
+fn main() {
+    let legacy = std::env::args().any(|a| a == "--legacy-alloc");
+    let steps: usize = std::env::var("SOAP_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let warmup = (steps / 5).clamp(10, 50);
+    let h = Hyper::default(); // f = 10, phase 0
+    let shapes: [(usize, usize); 3] = [(64, 256), (128, 128), (32, 1024)];
+
+    type Build = fn(usize, usize, Hyper) -> DynComposed;
+    let builds: [(&str, Build); 6] = [
+        ("soap", presets::soap),
+        ("soap-factorized", |r, c, h| presets::soap(r, c, Hyper { factorized: true, ..h })),
+        ("shampoo", presets::shampoo),
+        ("galore", presets::galore),
+        ("adamw", presets::adamw),
+        ("adafactor", presets::adafactor),
+    ];
+
+    let mut rows_out: Vec<Row> = Vec::new();
+    println!(
+        "{:<18} {:<13} {:>9} {:>10} {:>10} {:>11} {:>11}",
+        "preset", "path", "shape", "p50", "p99", "steps/s", "allocs/step"
+    );
+    let mut emit = |r: Row| {
+        println!(
+            "{:<18} {:<13} {:>9} {:>10} {:>10} {:>11.1} {:>11.1}",
+            r.preset,
+            r.path,
+            format!("{}x{}", r.rows, r.cols),
+            fmt_duration(r.p50_us * 1e-6),
+            fmt_duration(r.p99_us * 1e-6),
+            r.steps_per_sec,
+            r.allocs_per_step_p50,
+        );
+        rows_out.push(r);
+    };
+
+    for &(m, n) in &shapes {
+        for (preset, build) in builds {
+            let mut opt = build(m, n, h.clone());
+            let (p50, p99, sps, ap50, amean) =
+                drive(m, n, warmup, steps, |w, g, t| opt.update(w, g, t, 1e-3));
+            emit(Row {
+                preset,
+                path: "workspace",
+                rows: m,
+                cols: n,
+                p50_us: p50,
+                p99_us: p99,
+                steps_per_sec: sps,
+                allocs_per_step_p50: ap50,
+                allocs_per_step_mean: amean,
+                scratch_bytes: opt.scratch_bytes(),
+            });
+        }
+        if legacy {
+            let mut soap = prepr::Soap::new(m, n, h.clone());
+            let (p50, p99, sps, ap50, amean) =
+                drive(m, n, warmup, steps, |w, g, t| soap.update(w, g, t, 1e-3));
+            emit(Row {
+                preset: "soap",
+                path: "legacy-alloc",
+                rows: m,
+                cols: n,
+                p50_us: p50,
+                p99_us: p99,
+                steps_per_sec: sps,
+                allocs_per_step_p50: ap50,
+                allocs_per_step_mean: amean,
+                scratch_bytes: 0,
+            });
+            let mut soap_f =
+                prepr::Soap::new(m, n, Hyper { factorized: true, ..h.clone() });
+            let (p50, p99, sps, ap50, amean) =
+                drive(m, n, warmup, steps, |w, g, t| soap_f.update(w, g, t, 1e-3));
+            emit(Row {
+                preset: "soap-factorized",
+                path: "legacy-alloc",
+                rows: m,
+                cols: n,
+                p50_us: p50,
+                p99_us: p99,
+                steps_per_sec: sps,
+                allocs_per_step_p50: ap50,
+                allocs_per_step_mean: amean,
+                scratch_bytes: 0,
+            });
+            let mut adamw = prepr::AdamW::new(m, n, h.clone());
+            let (p50, p99, sps, ap50, amean) =
+                drive(m, n, warmup, steps, |w, g, t| adamw.update(w, g, t, 1e-3));
+            emit(Row {
+                preset: "adamw",
+                path: "legacy-alloc",
+                rows: m,
+                cols: n,
+                p50_us: p50,
+                p99_us: p99,
+                steps_per_sec: sps,
+                allocs_per_step_p50: ap50,
+                allocs_per_step_mean: amean,
+                scratch_bytes: 0,
+            });
+            let mut adafactor = prepr::Adafactor::new(m, n, h.clone());
+            let (p50, p99, sps, ap50, amean) =
+                drive(m, n, warmup, steps, |w, g, t| adafactor.update(w, g, t, 1e-3));
+            emit(Row {
+                preset: "adafactor",
+                path: "legacy-alloc",
+                rows: m,
+                cols: n,
+                p50_us: p50,
+                p99_us: p99,
+                steps_per_sec: sps,
+                allocs_per_step_p50: ap50,
+                allocs_per_step_mean: amean,
+                scratch_bytes: 0,
+            });
+        }
+    }
+
+    // Workspace-vs-legacy speedups (same run, same gradient streams).
+    let mut speedups: Vec<Json> = Vec::new();
+    if legacy {
+        println!();
+        for ws_row in rows_out.iter().filter(|r| r.path == "workspace") {
+            if let Some(lg) = rows_out.iter().find(|r| {
+                r.path == "legacy-alloc"
+                    && r.preset == ws_row.preset
+                    && (r.rows, r.cols) == (ws_row.rows, ws_row.cols)
+            }) {
+                let ratio = ws_row.steps_per_sec / lg.steps_per_sec.max(1e-12);
+                println!(
+                    "speedup {:<18} {}x{}: {:.2}x steps/sec vs pre-PR allocating path{}",
+                    ws_row.preset,
+                    ws_row.rows,
+                    ws_row.cols,
+                    ratio,
+                    if ws_row.preset == "soap" && ratio >= 2.0 { "  [acceptance PASS]" } else { "" },
+                );
+                speedups.push(Json::obj(vec![
+                    ("preset", Json::str(ws_row.preset)),
+                    ("rows", Json::num(ws_row.rows as f64)),
+                    ("cols", Json::num(ws_row.cols as f64)),
+                    ("steps_per_sec_ratio", Json::num(ratio)),
+                ]));
+            }
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("step_latency")),
+        ("timed_steps", Json::num(steps as f64)),
+        ("warmup_steps", Json::num(warmup as f64)),
+        ("legacy_measured", Json::Bool(legacy)),
+        (
+            "cpus",
+            Json::num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        ("rows", Json::arr(rows_out.iter().map(row_json))),
+        ("speedups_vs_legacy_alloc", Json::Arr(speedups)),
+    ]);
+    std::fs::create_dir_all("bench_results").expect("create bench_results/");
+    std::fs::write("bench_results/step_latency.json", doc.pretty())
+        .expect("write step_latency.json");
+    println!("\nwrote bench_results/step_latency.json");
+}

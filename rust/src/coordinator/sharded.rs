@@ -186,6 +186,18 @@ impl ShardedOptimizer {
             .sum()
     }
 
+    /// Total workspace-arena bytes across layers (the zero-allocation step
+    /// path's grow-only scratch; 0 before the first step). Each layer's
+    /// workspace is owned by its shard slot, so it is only ever touched by
+    /// that shard's worker thread.
+    pub fn scratch_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|s| s.opt.scratch_bytes())
+            .sum()
+    }
+
     /// Cumulative eigen/inverse-root refresh seconds across all layers.
     pub fn refresh_seconds(&self) -> f64 {
         self.shards

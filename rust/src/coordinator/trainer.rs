@@ -352,6 +352,15 @@ impl Trainer {
         }
     }
 
+    /// Workspace-arena bytes held by the native step path (0 for PJRT,
+    /// whose scratch lives device-side in the compiled artifact).
+    pub fn scratch_bytes(&self) -> usize {
+        match &self.update {
+            UpdateBackend::Native(s) => s.scratch_bytes(),
+            UpdateBackend::Pjrt(_) => 0,
+        }
+    }
+
     pub fn opt_label(&self) -> String {
         // Canonicalize so the preset and composition-spec spellings of the
         // same configuration share one label (one aggregation key in

@@ -351,8 +351,9 @@ mod tests {
         let a = Matrix::from_fn(4, 4, |i, j| if i == j { (i + 1) as f32 } else { 0.0 });
         let (w, v) = eigh(&a);
         assert_eq!(w, vec![4.0, 3.0, 2.0, 1.0]);
+        let mut col = Vec::new();
         for j in 0..4 {
-            let col = v.col(j);
+            v.col_into(j, &mut col);
             assert!((col[3 - j] - 1.0).abs() < 1e-6);
         }
     }

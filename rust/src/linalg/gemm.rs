@@ -1,32 +1,64 @@
-//! Blocked f32 GEMM kernel for the native hot paths (preconditioner updates
-//! `GGᵀ`, projections `QᵀGQ` in the oracle/refresh code).
+//! Blocked f32 GEMM kernel family for the native hot paths (preconditioner
+//! products `GGᵀ`/`GᵀG`, projections `QᵀGQ`, refresh-time power iterations).
 //!
-//! Strategy: ikj loop order (unit-stride on both B-row and C-row) with k-tiled
-//! blocking for L1/L2 locality and a 4-wide manually unrolled inner update
-//! that the compiler auto-vectorizes. This is the §Perf-tuned version; see
-//! EXPERIMENTS.md §Perf for the before/after on the baseline naive kernel.
+//! Three transpose variants share one inner loop shape — k-blocked, axpy-form
+//! (`crow += av · brow`), unit-stride on both the B-row and the C-row — so
+//! the compiler emits packed mul/add over whole rows for all of them:
+//!
+//! - [`gemm_into`]    — `C = A·B`       (`A: m×k`, `B: k×n`)
+//! - [`gemm_tn_into`] — `C = Aᵀ·B`      (`A: k×m`, `B: k×n`)
+//! - [`gemm_nt_into`] — `C = A·Bᵀ`      (`A: m×k`, `B: n×k`), via **B-panel
+//!   packing**: `Bᵀ` is transposed once into a caller-provided grow-only
+//!   buffer and the product runs as the plain `NN` kernel over the packed
+//!   panel. The previous bespoke NT loop was a per-element dot product whose
+//!   serial accumulation chain cannot vectorize; packing converts it to the
+//!   axpy form.
+//!
+//! The `*_into` kernels are **serial and allocation-free** (given a
+//! pre-grown pack buffer) — they are the steady-state optimizer step path.
+//! The `par_*` drivers row-partition `C` across a process-wide
+//! [`ThreadPool`] (`soap-worker-*` threads, size from
+//! `SOAP_GEMM_THREADS` or `available_parallelism`) for the large
+//! refresh-time products; row partitioning preserves each element's
+//! accumulation order, so serial and parallel results are **bitwise
+//! identical** at any worker count.
+//!
+//! Accumulation order is ascending-`p` for every element in every variant —
+//! the same order as the pre-blocked reference loops — so golden trajectory
+//! tests stay bitwise across this kernel family. There is deliberately *no*
+//! skip of zero `A` elements: the old `av == 0.0` `continue` silently
+//! dropped NaN/Inf propagation from `B` (a poisoned gradient could be
+//! masked to 0 by a zero momentum row); see `nan_propagates_through_zero_a`.
 
-/// `c[m×n] += 0; c = a[m×k] · b[k×n]` — all row-major, `c` assumed zeroed.
-pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    const KB: usize = 256; // k-block: keeps a KB×n panel of B in cache
-    for k0 in (0..k).step_by(KB) {
-        let k1 = (k0 + KB).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for p in k0..k1 {
-                let av = arow[p];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..(p + 1) * n];
-                axpy(av, brow, crow);
-            }
-        }
-    }
+use std::sync::OnceLock;
+
+use crate::util::pool::ThreadPool;
+
+/// k-block: keeps a KB×n panel of B in cache.
+const KB: usize = 256;
+/// i-block for the TN kernel: bounds the C working set per B sweep.
+const IB: usize = 64;
+/// Don't parallelize below this many flops (2·m·k·n) — fan-out overhead
+/// dominates small products, and the step path must stay allocation-free.
+const PAR_MIN_FLOPS: usize = 1 << 22;
+/// Minimum C rows per parallel chunk.
+const PAR_MIN_ROWS: usize = 16;
+
+/// The process-wide pool backing the `par_*` drivers. `None` when
+/// single-threaded (1 CPU or `SOAP_GEMM_THREADS=1`). Never dropped — the
+/// workers are idle daemons between fan-outs.
+fn linalg_pool() -> Option<&'static ThreadPool> {
+    static POOL: OnceLock<Option<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = std::env::var("SOAP_GEMM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        (threads > 1).then(|| ThreadPool::new(threads))
+    })
+    .as_ref()
 }
 
 /// crow += av * brow. Iterator zip elides all bounds checks, so LLVM emits
@@ -39,18 +71,187 @@ fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     }
 }
 
+/// `c[rows×n] += a[rows×k] · b[k×n]` — the shared NN accumulation core.
+fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in k0..k1 {
+                axpy(arow[p], &b[p * n..(p + 1) * n], crow);
+            }
+        }
+    }
+}
+
+/// `c[rows×n] = (Aᵀ·B)[i0..i0+rows, :]` with `A: k×m`, `B: k×n`. `c` is the
+/// chunk's rows only; `i0` is its absolute offset into Aᵀ's rows (= A's
+/// columns).
+#[allow(clippy::too_many_arguments)]
+fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    c.fill(0.0);
+    for ib in (0..rows).step_by(IB) {
+        let ie = (ib + IB).min(rows);
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for i in ib..ie {
+                axpy(arow[i0 + i], brow, &mut c[i * n..(i + 1) * n]);
+            }
+        }
+    }
+}
+
+/// Pack `Bᵀ` (`B: n×k`, row-major) into `pack` as a `k×n` row-major panel.
+/// Grow-only: the buffer reallocates at most up to the largest `B` ever
+/// packed through it.
+fn pack_bt(k: usize, n: usize, b: &[f32], pack: &mut Vec<f32>) {
+    pack.resize(k * n, 0.0);
+    for j in 0..n {
+        let brow = &b[j * k..(j + 1) * k];
+        for (p, &x) in brow.iter().enumerate() {
+            pack[p * n + j] = x;
+        }
+    }
+}
+
+/// `c[m×n] = a[m×k] · b[k×n]` (overwrites `c`). Serial, allocation-free.
+pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    nn_acc(m, k, n, a, b, c);
+}
+
+/// `c[m×n] = aᵀ · b` with `a: k×m`, `b: k×n` (overwrites `c`). Serial,
+/// allocation-free; the transpose is never materialized.
+pub fn gemm_tn_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    tn_rows(0, m, m, k, n, a, b, c);
+}
+
+/// `c[m×n] = a · bᵀ` with `a: m×k`, `b: n×k` (overwrites `c`). `Bᵀ` is
+/// packed into `pack` (grow-only; zero allocations once grown), then the
+/// product runs as the vectorizable NN kernel.
+pub fn gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], pack: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    pack_bt(k, n, b, pack);
+    c.fill(0.0);
+    nn_acc(m, k, n, a, pack, c);
+}
+
+/// Rows per parallel chunk, or `None` when the product should stay serial
+/// (small, single CPU, or not enough rows to split).
+fn par_chunk_rows(m: usize, k: usize, n: usize) -> Option<(usize, &'static ThreadPool)> {
+    // Size gates BEFORE touching the pool: the first large product — not the
+    // first product of any size — is what spawns the worker threads.
+    if 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
+        return None;
+    }
+    let max_chunks = m / PAR_MIN_ROWS;
+    if max_chunks < 2 {
+        return None;
+    }
+    let pool = linalg_pool()?;
+    let chunks = pool.size().min(max_chunks);
+    if chunks < 2 {
+        return None;
+    }
+    Some((m.div_ceil(chunks), pool))
+}
+
+/// [`gemm_into`], row-partitioned across the process pool when large.
+/// Bitwise identical to the serial kernel at any worker count.
+pub fn par_gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    match par_chunk_rows(m, k, n) {
+        Some((chunk, pool)) => {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, c_chunk) in c.chunks_mut(chunk * n).enumerate() {
+                let rows = c_chunk.len() / n;
+                let i0 = ci * chunk;
+                let a_chunk = &a[i0 * k..(i0 + rows) * k];
+                jobs.push(Box::new(move || {
+                    c_chunk.fill(0.0);
+                    nn_acc(rows, k, n, a_chunk, b, c_chunk);
+                }));
+            }
+            pool.scope_borrowed(jobs);
+        }
+        None => gemm_into(m, k, n, a, b, c),
+    }
+}
+
+/// [`gemm_tn_into`], row-partitioned across the process pool when large.
+pub fn par_gemm_tn_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    match par_chunk_rows(m, k, n) {
+        Some((chunk, pool)) => {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, c_chunk) in c.chunks_mut(chunk * n).enumerate() {
+                let rows = c_chunk.len() / n;
+                let i0 = ci * chunk;
+                jobs.push(Box::new(move || {
+                    tn_rows(i0, rows, m, k, n, a, b, c_chunk);
+                }));
+            }
+            pool.scope_borrowed(jobs);
+        }
+        None => gemm_tn_into(m, k, n, a, b, c),
+    }
+}
+
+/// [`gemm_nt_into`], row-partitioned across the process pool when large.
+/// The packed `Bᵀ` panel is built once and shared read-only by all chunks.
+pub fn par_gemm_nt_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], pack: &mut Vec<f32>) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    match par_chunk_rows(m, k, n) {
+        Some((chunk, pool)) => {
+            pack_bt(k, n, b, pack);
+            let packed: &[f32] = pack;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, c_chunk) in c.chunks_mut(chunk * n).enumerate() {
+                let rows = c_chunk.len() / n;
+                let i0 = ci * chunk;
+                let a_chunk = &a[i0 * k..(i0 + rows) * k];
+                jobs.push(Box::new(move || {
+                    c_chunk.fill(0.0);
+                    nn_acc(rows, k, n, a_chunk, packed, c_chunk);
+                }));
+            }
+            pool.scope_borrowed(jobs);
+        }
+        None => gemm_nt_into(m, k, n, a, b, c, pack),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    /// f64 reference: `op(A)·op(B)` with per-element f64 accumulation.
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], ta: bool, tb: bool) -> Vec<f32> {
         let mut c = vec![0.0f32; m * n];
         for i in 0..m {
             for j in 0..n {
                 let mut acc = 0.0f64;
                 for p in 0..k {
-                    acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                    let av = if ta { a[p * m + i] } else { a[i * k + p] };
+                    let bv = if tb { b[j * k + p] } else { b[p * n + j] };
+                    acc += av as f64 * bv as f64;
                 }
                 c[i * n + j] = acc as f32;
             }
@@ -58,27 +259,142 @@ mod tests {
         c
     }
 
+    fn close(got: &[f32], want: &[f32]) {
+        for (x, y) in got.iter().zip(want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 1),
+        (1, 1, 9),
+        (5, 1, 3),
+        (3, 5, 2),
+        (17, 33, 9),
+        (64, 300, 48),
+    ];
+
     #[test]
     fn matches_naive_various_shapes() {
         let mut rng = Rng::new(77);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 300, 48)] {
+        for &(m, k, n) in SHAPES {
             let mut a = vec![0.0f32; m * k];
             let mut b = vec![0.0f32; k * n];
             rng.fill_normal(&mut a, 1.0);
             rng.fill_normal(&mut b, 1.0);
             let mut c = vec![0.0f32; m * n];
-            gemm(m, k, n, &a, &b, &mut c);
-            let want = naive(m, k, n, &a, &b);
-            for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{x} vs {y}");
-            }
+            gemm_into(m, k, n, &a, &b, &mut c);
+            close(&c, &naive(m, k, n, &a, &b, false, false));
         }
+    }
+
+    #[test]
+    fn into_family_matches_naive() {
+        let mut rng = Rng::new(78);
+        for &(m, k, n) in SHAPES {
+            let mut a = vec![0.0f32; m * k];
+            let mut at = vec![0.0f32; k * m];
+            let mut bt = vec![0.0f32; n * k];
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut at, 1.0);
+            rng.fill_normal(&mut bt, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            // Overwrite semantics: poison c first.
+            let mut c = vec![f32::NAN; m * n];
+            gemm_into(m, k, n, &a, &b, &mut c);
+            close(&c, &naive(m, k, n, &a, &b, false, false));
+            c.fill(f32::NAN);
+            gemm_tn_into(m, k, n, &at, &b, &mut c);
+            close(&c, &naive(m, k, n, &at, &b, true, false));
+            c.fill(f32::NAN);
+            let mut pack = Vec::new();
+            gemm_nt_into(m, k, n, &a, &bt, &mut c, &mut pack);
+            close(&c, &naive(m, k, n, &a, &bt, false, true));
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(79);
+        // Big enough to cross PAR_MIN_FLOPS with rows to split.
+        let (m, k, n) = (160, 130, 120);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        let mut bt = vec![0.0f32; n * k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut bt, 1.0);
+        let (mut s, mut p) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+
+        gemm_into(m, k, n, &a, &b, &mut s);
+        par_gemm_into(m, k, n, &a, &b, &mut p);
+        assert_eq!(s, p, "NN parallel drifted from serial");
+
+        // TN: treat `a` as a m×k matrix whose transpose is k×m; result k×n.
+        let mut b2 = vec![0.0f32; m * n];
+        rng.fill_normal(&mut b2, 1.0);
+        let mut s2 = vec![0.0f32; k * n];
+        let mut p2 = vec![0.0f32; k * n];
+        gemm_tn_into(k, m, n, &a, &b2, &mut s2);
+        par_gemm_tn_into(k, m, n, &a, &b2, &mut p2);
+        assert_eq!(s2, p2, "TN parallel drifted from serial");
+
+        let mut s3 = vec![0.0f32; m * n];
+        let mut p3 = vec![0.0f32; m * n];
+        let (mut pk1, mut pk2) = (Vec::new(), Vec::new());
+        gemm_nt_into(m, k, n, &a, &bt, &mut s3, &mut pk1);
+        par_gemm_nt_into(m, k, n, &a, &bt, &mut p3, &mut pk2);
+        assert_eq!(s3, p3, "NT parallel drifted from serial");
     }
 
     #[test]
     fn zero_inputs() {
         let mut c = vec![0.0f32; 4];
-        gemm(2, 3, 2, &[0.0; 6], &[0.0; 6], &mut c);
+        gemm_into(2, 3, 2, &[0.0; 6], &[0.0; 6], &mut c);
         assert_eq!(c, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn nan_propagates_through_zero_a() {
+        // Regression: the old kernel skipped `av == 0.0` rows of B entirely,
+        // so a NaN-poisoned B could be silently masked to 0. IEEE semantics
+        // demand 0·NaN = NaN.
+        let a = [0.0f32, 1.0, 2.0, 3.0];
+        let b = [f32::NAN, f32::NAN, 1.0, 1.0];
+        let mut c = vec![0.0f32; 4];
+        gemm_into(2, 2, 2, &a, &b, &mut c);
+        assert!(c[0].is_nan() && c[1].is_nan(), "NaN from B masked by zero A: {c:?}");
+        // Row 2 of A has no zeros — NaN still reaches it through column sums.
+        assert!(c[2].is_nan() && c[3].is_nan());
+
+        // TN variant: zero column of A against a NaN row of B.
+        let at = [0.0f32, 5.0, 0.0, 7.0]; // A: 2×2, first column zero
+        let mut c = vec![0.0f32; 4];
+        gemm_tn_into(2, 2, 2, &at, &b, &mut c);
+        assert!(c[0].is_nan() && c[1].is_nan(), "TN kernel masked NaN: {c:?}");
+
+        // NT variant: Inf must survive too.
+        let bt = [f32::INFINITY, 0.0, 0.0, 1.0];
+        let mut c = vec![0.0f32; 4];
+        let mut pack = Vec::new();
+        gemm_nt_into(2, 2, 2, &a, &bt, &mut c, &mut pack);
+        assert!(c[0].is_nan(), "0·Inf must be NaN, got {}", c[0]); // 0·Inf + 1·0
+    }
+
+    #[test]
+    fn pack_buffer_grows_only() {
+        let mut pack = Vec::new();
+        let a = vec![1.0f32; 8 * 6];
+        let b = vec![1.0f32; 4 * 6];
+        let mut c = vec![0.0f32; 8 * 4];
+        gemm_nt_into(8, 6, 4, &a, &b, &mut c, &mut pack);
+        let cap = pack.capacity();
+        assert!(cap >= 24);
+        // Smaller product: no shrink, no realloc.
+        let mut c2 = vec![0.0f32; 2 * 2];
+        gemm_nt_into(2, 3, 2, &a[..6], &b[..6], &mut c2, &mut pack);
+        assert_eq!(pack.capacity(), cap);
     }
 }

@@ -84,11 +84,35 @@ impl Matrix {
     }
 
     pub fn col(&self, j: usize) -> Vec<f32> {
-        (0..self.rows).map(|i| self.at(i, j)).collect()
+        let mut out = Vec::new();
+        self.col_into(j, &mut out);
+        out
+    }
+
+    /// No-alloc companion of [`Matrix::col`] for callers that loop over
+    /// columns: reuses `out`'s allocation (grow-only).
+    pub fn col_into(&self, j: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend((0..self.rows).map(|i| self.at(i, j)));
     }
 
     pub fn numel(&self) -> usize {
         self.rows * self.cols
+    }
+
+    /// Reshape `self` for use as an output buffer, reusing its allocation
+    /// (grow-only). Contents are unspecified afterwards — every caller
+    /// overwrites before reading.
+    pub fn reuse_shape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// `self ← src` without allocating (beyond grow-only buffer growth).
+    pub fn copy_from(&mut self, src: &Matrix) {
+        self.reuse_shape(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
     }
 
     // ---- elementwise ops ---------------------------------------------------
@@ -207,56 +231,69 @@ impl Matrix {
     }
 
     // ---- matmul family ---------------------------------------------------------
-    /// C = A·B. Row-major ikj loop with the B row kept hot; adequate for the
-    /// slow path (see `gemm.rs` for the blocked kernel used on hot paths).
+    //
+    // All three transpose variants route through the blocked kernel family
+    // in `gemm.rs`. The allocating entry points (`matmul*`) dispatch to the
+    // row-partitioned parallel drivers — large refresh-time products
+    // (`GGᵀ`, power-iteration `P·Q`, warm-eigh rotations) fan out across
+    // the process pool, bitwise identically to the serial kernels. The
+    // `*_into` methods are the serial, allocation-free forms the optimizer
+    // step path uses with per-layer `Workspace` buffers.
+
+    /// C = A·B (allocating; parallel when large).
     pub fn matmul(&self, b: &Self) -> Self {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let mut c = Self::zeros(self.rows, b.cols);
-        super::gemm::gemm(
+        super::gemm::par_gemm_into(
             self.rows, self.cols, b.cols, &self.data, &b.data, &mut c.data,
         );
         c
     }
 
-    /// C = Aᵀ·B without materializing the transpose.
+    /// `out = A·B` without allocating (grow-only `out` reuse). Serial —
+    /// the zero-allocation step path.
+    pub fn matmul_into(&self, b: &Self, out: &mut Self) {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        out.reuse_shape(self.rows, b.cols);
+        super::gemm::gemm_into(self.rows, self.cols, b.cols, &self.data, &b.data, &mut out.data);
+    }
+
+    /// C = Aᵀ·B without materializing the transpose (allocating; parallel
+    /// when large).
     pub fn matmul_tn(&self, b: &Self) -> Self {
         assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
         let (k, m, n) = (self.rows, self.cols, b.cols);
         let mut c = Self::zeros(m, n);
-        for p in 0..k {
-            let arow = self.row(p);
-            let brow = b.row(p);
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += a * brow[j];
-                }
-            }
-        }
+        super::gemm::par_gemm_tn_into(m, k, n, &self.data, &b.data, &mut c.data);
         c
     }
 
-    /// C = A·Bᵀ without materializing the transpose.
+    /// `out = Aᵀ·B` without allocating. Serial.
+    pub fn matmul_tn_into(&self, b: &Self, out: &mut Self) {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        out.reuse_shape(m, n);
+        super::gemm::gemm_tn_into(m, k, n, &self.data, &b.data, &mut out.data);
+    }
+
+    /// C = A·Bᵀ without materializing the transpose (allocating; parallel
+    /// when large; `Bᵀ` packed internally).
     pub fn matmul_nt(&self, b: &Self) -> Self {
         assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.rows);
         let mut c = Self::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            for j in 0..n {
-                let brow = b.row(j);
-                let mut acc = 0.0f32;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
-                }
-                c.data[i * n + j] = acc;
-            }
-        }
+        let mut pack = Vec::new();
+        super::gemm::par_gemm_nt_into(m, k, n, &self.data, &b.data, &mut c.data, &mut pack);
         c
+    }
+
+    /// `out = A·Bᵀ` without allocating once `pack` has grown to `B`'s size
+    /// (the `Workspace` owns that buffer on the step path). Serial.
+    pub fn matmul_nt_into(&self, b: &Self, out: &mut Self, pack: &mut Vec<f32>) {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        out.reuse_shape(m, n);
+        super::gemm::gemm_nt_into(m, k, n, &self.data, &b.data, &mut out.data, pack);
     }
 }
 
@@ -340,5 +377,46 @@ mod tests {
     fn shape_mismatch_panics() {
         let (a, _) = small();
         let _ = a.matmul(&a);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_bitwise() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 7, 5, 1.0);
+        let b = Matrix::randn(&mut rng, 5, 6, 1.0);
+        let bt = Matrix::randn(&mut rng, 6, 5, 1.0);
+        let at = Matrix::randn(&mut rng, 7, 4, 1.0);
+        // Pre-dirty buffers with wrong shapes: reuse must still be exact.
+        let mut out = Matrix::randn(&mut rng, 2, 9, 1.0);
+        let mut pack = vec![7.0f32; 3];
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        a.matmul_tn_into(&at, &mut out);
+        assert_eq!(out, a.matmul_tn(&at));
+        a.matmul_nt_into(&bt, &mut out, &mut pack);
+        assert_eq!(out, a.matmul_nt(&bt));
+    }
+
+    #[test]
+    fn col_into_reuses_buffer() {
+        let (a, _) = small();
+        let mut buf = Vec::new();
+        a.col_into(1, &mut buf);
+        assert_eq!(buf, vec![2.0, 5.0]);
+        let cap = buf.capacity();
+        a.col_into(0, &mut buf);
+        assert_eq!(buf, vec![1.0, 4.0]);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(a.col(2), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn copy_from_and_reuse_shape() {
+        let (a, _) = small();
+        let mut dst = Matrix::zeros(9, 9);
+        dst.copy_from(&a);
+        assert_eq!(dst, a);
+        dst.reuse_shape(1, 4);
+        assert_eq!((dst.rows, dst.cols, dst.data.len()), (1, 4, 4));
     }
 }

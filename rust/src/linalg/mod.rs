@@ -13,6 +13,9 @@ pub mod qr;
 pub mod roots;
 
 pub use eigh::{eigh, eigh_warm};
+pub use gemm::{
+    gemm_into, gemm_nt_into, gemm_tn_into, par_gemm_into, par_gemm_nt_into, par_gemm_tn_into,
+};
 pub use matrix::Matrix;
 pub use qr::{power_iter_refresh, qr, qr_positive};
 pub use roots::{inv_root_eigh, inv_root_newton, root_eigh};

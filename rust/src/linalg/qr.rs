@@ -169,9 +169,11 @@ mod tests {
         for _ in 0..200 {
             q = power_iter_refresh(&p, &q);
         }
-        // Columns of q should be ± canonical basis vectors.
+        // Columns of q should be ± canonical basis vectors (col_into: one
+        // buffer reused across the column loop).
+        let mut col = Vec::new();
         for j in 0..n {
-            let col = q.col(j);
+            q.col_into(j, &mut col);
             let max = col.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
             assert!(max > 0.999, "col {j} max {max}");
         }

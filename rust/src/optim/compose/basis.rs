@@ -18,6 +18,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::workspace::{Scratch, Workspace};
 use super::{Basis, BasisState, StateLayout};
 use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
 use crate::optim::hyper::{Hyper, RefreshMethod};
@@ -34,19 +35,19 @@ impl IdentityBasis {
 }
 
 impl Basis for IdentityBasis {
-    fn begin_step(&mut self, _g: &Matrix, _t: u64) {}
-    fn end_step(&mut self, _g: &Matrix, _t: u64) {}
+    fn begin_step(&mut self, _g: &Matrix, _t: u64, _ws: &mut Workspace) {}
+    fn end_step(&mut self, _g: &Matrix, _t: u64, _ws: &mut Workspace) {}
 
     fn is_identity(&self) -> bool {
         true
     }
 
-    fn project(&self, x: &Matrix) -> Matrix {
-        x.clone()
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, _scratch: &mut Scratch) {
+        out.copy_from(x);
     }
 
-    fn project_back(&self, x: &Matrix) -> Matrix {
-        x.clone()
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, _scratch: &mut Scratch) {
+        out.copy_from(x);
     }
 
     fn state_bytes(&self) -> usize {
@@ -393,7 +394,7 @@ impl EigenBasis {
 }
 
 impl Basis for EigenBasis {
-    fn begin_step(&mut self, g: &Matrix, t: u64) {
+    fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         match self.flavor {
             EigenFlavor::Rotation => {
                 if !self.initialized {
@@ -406,10 +407,13 @@ impl Basis for EigenBasis {
             EigenFlavor::InverseRoot => {
                 // Factor EMAs first (Shampoo updates them ahead of the
                 // direction — the roots computed this step may use them).
-                let ggt = g.matmul_nt(g);
-                let gtg = g.matmul_tn(g);
-                self.l.as_mut().unwrap().ema_inplace(&ggt, self.h.shampoo_beta);
-                self.r.as_mut().unwrap().ema_inplace(&gtg, self.h.shampoo_beta);
+                // `GGᵀ` and `GᵀG` share `ws.factor` serially: the serial
+                // into-kernels are bitwise identical to the parallel
+                // allocating path and cost zero steady-state allocations.
+                g.matmul_nt_into(g, &mut ws.factor, &mut ws.scratch.pack);
+                self.l.as_mut().unwrap().ema_inplace(&ws.factor, self.h.shampoo_beta);
+                g.matmul_tn_into(g, &mut ws.factor);
+                self.r.as_mut().unwrap().ema_inplace(&ws.factor, self.h.shampoo_beta);
                 self.adopt_published();
                 // The first recompute always runs inline so the roots are
                 // never identity-only.
@@ -423,62 +427,61 @@ impl Basis for EigenBasis {
         }
     }
 
-    fn end_step(&mut self, g: &Matrix, t: u64) {
+    fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         if self.flavor != EigenFlavor::Rotation {
             return;
         }
         // Factor EMAs + periodic basis refresh AFTER the step, per Alg 3.
         if let Some(l) = &mut self.l {
-            let ggt = g.matmul_nt(g);
-            l.ema_inplace(&ggt, self.h.shampoo_beta);
+            g.matmul_nt_into(g, &mut ws.factor, &mut ws.scratch.pack);
+            l.ema_inplace(&ws.factor, self.h.shampoo_beta);
         }
         if let Some(r) = &mut self.r {
-            let gtg = g.matmul_tn(g);
-            r.ema_inplace(&gtg, self.h.shampoo_beta);
+            g.matmul_tn_into(g, &mut ws.factor);
+            r.ema_inplace(&ws.factor, self.h.shampoo_beta);
         }
         if self.h.is_refresh_step(t) {
             self.refresh_or_enqueue(t);
         }
     }
 
-    fn project(&self, x: &Matrix) -> Matrix {
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
         match self.flavor {
             // Rotate into the eigenbasis: Q_Lᵀ · X · Q_R (identity sides
             // skipped).
-            EigenFlavor::Rotation => {
-                let mut y = match &self.left_q {
-                    Some(ql) => ql.matmul_tn(x),
-                    None => x.clone(),
-                };
-                if let Some(qr) = &self.right_q {
-                    y = y.matmul(qr);
+            EigenFlavor::Rotation => match (&self.left_q, &self.right_q) {
+                (Some(ql), Some(qr)) => {
+                    ql.matmul_tn_into(x, &mut scratch.tmp);
+                    scratch.tmp.matmul_into(qr, out);
                 }
-                y
-            }
+                (Some(ql), None) => ql.matmul_tn_into(x, out),
+                (None, Some(qr)) => x.matmul_into(qr, out),
+                (None, None) => out.copy_from(x),
+            },
             // Apply the whole preconditioner: L^{-1/e} · X · R^{-1/e}.
-            EigenFlavor::InverseRoot => self
-                .left_q
-                .as_ref()
-                .unwrap()
-                .matmul(x)
-                .matmul(self.right_q.as_ref().unwrap()),
+            EigenFlavor::InverseRoot => {
+                self.left_q.as_ref().unwrap().matmul_into(x, &mut scratch.tmp);
+                scratch.tmp.matmul_into(self.right_q.as_ref().unwrap(), out);
+            }
         }
     }
 
-    fn project_back(&self, x: &Matrix) -> Matrix {
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
         match self.flavor {
             // Rotate back: Q_L · X · Q_Rᵀ.
             EigenFlavor::Rotation => {
-                let mut y = match &self.left_q {
-                    Some(ql) => ql.matmul(x),
-                    None => x.clone(),
-                };
-                if let Some(qr) = &self.right_q {
-                    y = y.matmul_nt(qr);
+                let Scratch { tmp, pack } = scratch;
+                match (&self.left_q, &self.right_q) {
+                    (Some(ql), Some(qr)) => {
+                        ql.matmul_into(x, tmp);
+                        tmp.matmul_nt_into(qr, out, pack);
+                    }
+                    (Some(ql), None) => ql.matmul_into(x, out),
+                    (None, Some(qr)) => x.matmul_nt_into(qr, out, pack),
+                    (None, None) => out.copy_from(x),
                 }
-                y
             }
-            EigenFlavor::InverseRoot => x.clone(),
+            EigenFlavor::InverseRoot => out.copy_from(x),
         }
     }
 
@@ -622,9 +625,10 @@ impl GradSvdBasis {
 }
 
 impl Basis for GradSvdBasis {
-    fn begin_step(&mut self, g: &Matrix, t: u64) {
+    fn begin_step(&mut self, g: &Matrix, t: u64, _ws: &mut Workspace) {
         // Basis refresh from the CURRENT gradient (§3 difference #1), at
-        // this layer's staggered phase.
+        // this layer's staggered phase. Refresh-time only — the allocating
+        // parallel matmuls are the right tool here.
         if self.p.is_none() || self.h.is_refresh_step(t) {
             let t0 = Instant::now();
             let factor = if self.left { g.matmul_nt(g) } else { g.matmul_tn(g) };
@@ -636,25 +640,25 @@ impl Basis for GradSvdBasis {
         }
     }
 
-    fn end_step(&mut self, _g: &Matrix, _t: u64) {}
+    fn end_step(&mut self, _g: &Matrix, _t: u64, _ws: &mut Workspace) {}
 
-    fn project(&self, x: &Matrix) -> Matrix {
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, _scratch: &mut Scratch) {
         match (&self.p, self.left) {
-            (Some(p), true) => p.matmul_tn(x),
-            (Some(p), false) => x.matmul(p),
-            (None, _) => x.clone(),
+            (Some(p), true) => p.matmul_tn_into(x, out),
+            (Some(p), false) => x.matmul_into(p, out),
+            (None, _) => out.copy_from(x),
         }
     }
 
-    fn project_back(&self, x: &Matrix) -> Matrix {
-        let y = match (&self.p, self.left) {
-            (Some(p), true) => p.matmul(x),
-            (Some(p), false) => x.matmul_nt(p),
-            (None, _) => x.clone(),
-        };
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
+        match (&self.p, self.left) {
+            (Some(p), true) => p.matmul_into(x, out),
+            (Some(p), false) => x.matmul_nt_into(p, out, &mut scratch.pack),
+            (None, _) => out.copy_from(x),
+        }
         // GaLore's update scale α rides with the projection (appendix B;
-        // 1.0 for the full-rank version — an exact no-op then).
-        y.scale(self.h.galore_scale)
+        // 1.0 for the full-rank version — bitwise a no-op then).
+        out.scale_inplace(self.h.galore_scale);
     }
 
     fn refresh_seconds(&self) -> f64 {
@@ -719,19 +723,19 @@ impl AnyBasis {
 }
 
 impl Basis for AnyBasis {
-    fn begin_step(&mut self, g: &Matrix, t: u64) {
+    fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         match self {
-            AnyBasis::Identity(b) => b.begin_step(g, t),
-            AnyBasis::Eigen(b) => b.begin_step(g, t),
-            AnyBasis::GradSvd(b) => b.begin_step(g, t),
+            AnyBasis::Identity(b) => b.begin_step(g, t, ws),
+            AnyBasis::Eigen(b) => b.begin_step(g, t, ws),
+            AnyBasis::GradSvd(b) => b.begin_step(g, t, ws),
         }
     }
 
-    fn end_step(&mut self, g: &Matrix, t: u64) {
+    fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         match self {
-            AnyBasis::Identity(b) => b.end_step(g, t),
-            AnyBasis::Eigen(b) => b.end_step(g, t),
-            AnyBasis::GradSvd(b) => b.end_step(g, t),
+            AnyBasis::Identity(b) => b.end_step(g, t, ws),
+            AnyBasis::Eigen(b) => b.end_step(g, t, ws),
+            AnyBasis::GradSvd(b) => b.end_step(g, t, ws),
         }
     }
 
@@ -739,19 +743,19 @@ impl Basis for AnyBasis {
         matches!(self, AnyBasis::Identity(_))
     }
 
-    fn project(&self, x: &Matrix) -> Matrix {
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
         match self {
-            AnyBasis::Identity(b) => b.project(x),
-            AnyBasis::Eigen(b) => b.project(x),
-            AnyBasis::GradSvd(b) => b.project(x),
+            AnyBasis::Identity(b) => b.project_into(x, out, scratch),
+            AnyBasis::Eigen(b) => b.project_into(x, out, scratch),
+            AnyBasis::GradSvd(b) => b.project_into(x, out, scratch),
         }
     }
 
-    fn project_back(&self, x: &Matrix) -> Matrix {
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
         match self {
-            AnyBasis::Identity(b) => b.project_back(x),
-            AnyBasis::Eigen(b) => b.project_back(x),
-            AnyBasis::GradSvd(b) => b.project_back(x),
+            AnyBasis::Identity(b) => b.project_back_into(x, out, scratch),
+            AnyBasis::Eigen(b) => b.project_back_into(x, out, scratch),
+            AnyBasis::GradSvd(b) => b.project_back_into(x, out, scratch),
         }
     }
 

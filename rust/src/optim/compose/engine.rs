@@ -14,6 +14,7 @@
 //!   Kronecker preconditioner `L^{-1/e} · M̂ · R^{-1/e}` (Shampoo). Requires
 //!   an inverse-root flavored [`EigenBasis`](super::basis::EigenBasis).
 
+use super::workspace::Workspace;
 use super::{Basis, EngineState, MomentEngine};
 use crate::linalg::Matrix;
 use crate::optim::hyper::Hyper;
@@ -28,6 +29,69 @@ pub fn factored_normalize(num: &Matrix, a: &[f32], c: &[f32], eps: f32) -> Matri
         let vhat = (a[i] * c[j] * inv_sum).max(0.0);
         num.at(i, j) / (vhat + eps).sqrt()
     })
+}
+
+/// Fused, allocation-free companion of `AdafactorEngine::factored_dir`: the
+/// g² row/col sums (f64 accumulation, matching `Matrix::row_sums`/
+/// `col_sums`), the A/C EMAs, their bias corrections, and the factored
+/// normalize — with every intermediate in caller-provided scratch and the
+/// numerator's `1/bc1` correction folded into the final pass. Each f32
+/// expression and accumulation order matches the allocating reference, so
+/// the result is bitwise identical.
+#[allow(clippy::too_many_arguments)]
+fn factored_dir_into(
+    a: &mut [f32],
+    c: &mut [f32],
+    beta2: f32,
+    eps: f32,
+    gp: &Matrix,
+    num: &Matrix,
+    num_scale: f32,
+    bc2: f32,
+    sums_row: &mut Vec<f64>,
+    sums_col: &mut Vec<f64>,
+    hat_row: &mut Vec<f32>,
+    hat_col: &mut Vec<f32>,
+    out: &mut Matrix,
+) {
+    let (rows, cols) = (gp.rows, gp.cols);
+    sums_row.clear();
+    sums_row.resize(rows, 0.0);
+    sums_col.clear();
+    sums_col.resize(cols, 0.0);
+    for i in 0..rows {
+        let mut acc = 0.0f64;
+        for (cj, &x) in sums_col.iter_mut().zip(gp.row(i)) {
+            let x2 = x * x;
+            acc += x2 as f64;
+            *cj += x2 as f64;
+        }
+        sums_row[i] = acc;
+    }
+    let ob2 = 1.0 - beta2;
+    for (ai, &ri) in a.iter_mut().zip(sums_row.iter()) {
+        *ai = beta2 * *ai + ob2 * (ri as f32);
+    }
+    for (ci, &cj) in c.iter_mut().zip(sums_col.iter()) {
+        *ci = beta2 * *ci + ob2 * (cj as f32);
+    }
+    hat_row.clear();
+    hat_row.extend(a.iter().map(|&x| x / bc2));
+    hat_col.clear();
+    hat_col.extend(c.iter().map(|&x| x / bc2));
+    // `factored_normalize`, fused with the numerator bias correction.
+    let sum_a: f32 = hat_row.iter().map(|&x| x as f64).sum::<f64>() as f32;
+    let inv_sum = if sum_a > 0.0 { 1.0 / sum_a } else { 0.0 };
+    out.reuse_shape(rows, cols);
+    for i in 0..rows {
+        let ai = hat_row[i];
+        let nrow = &num.data[i * cols..(i + 1) * cols];
+        let orow = &mut out.data[i * cols..(i + 1) * cols];
+        for ((oj, &nj), &cjv) in orow.iter_mut().zip(nrow).zip(hat_col.iter()) {
+            let vhat = (ai * cjv * inv_sum).max(0.0);
+            *oj = (nj * num_scale) / (vhat + eps).sqrt();
+        }
+    }
 }
 
 /// Where an engine's first moment lives relative to the basis.
@@ -62,6 +126,67 @@ impl AdamEngine {
 }
 
 impl MomentEngine for AdamEngine {
+    fn direction_into(&mut self, g: &Matrix, t: u64, basis: &dyn Basis, ws: &mut Workspace) {
+        let h = &self.h;
+        let bc1 = 1.0 - h.beta1.powi(t as i32);
+        let bc2 = 1.0 - h.beta2.powi(t as i32);
+        let ob2 = 1.0 - h.beta2;
+        match self.space {
+            MomentumSpace::InBasis => {
+                // Identity basis: skip the projection copies entirely and
+                // write the fused update straight into `ws.dir`.
+                let identity = basis.is_identity();
+                if !identity {
+                    basis.project_into(g, &mut ws.rot_g, &mut ws.scratch);
+                }
+                let gp: &Matrix = if identity { g } else { &ws.rot_g };
+                self.m.ema_inplace(gp, h.beta1);
+                let out = if identity { &mut ws.dir } else { &mut ws.nrot };
+                out.reuse_shape(gp.rows, gp.cols);
+                // Fused pass: V EMA + bias correction + m̂/√v̂ — the same f32
+                // expressions, in the same order, as the allocating
+                // `hadamard`/`ema_inplace`/`zip` chain in `direction`.
+                for (((vi, &gi), &mi), oi) in self
+                    .v
+                    .data
+                    .iter_mut()
+                    .zip(&gp.data)
+                    .zip(&self.m.data)
+                    .zip(out.data.iter_mut())
+                {
+                    *vi = h.beta2 * *vi + ob2 * (gi * gi);
+                    *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                }
+                if !identity {
+                    basis.project_back_into(&ws.nrot, &mut ws.dir, &mut ws.scratch);
+                }
+            }
+            MomentumSpace::Original => {
+                // SOAP Algorithm 3: momentum in the original space, G and M
+                // rotated every step, V updated in the rotated space.
+                self.m.ema_inplace(g, h.beta1);
+                basis.project_into(g, &mut ws.rot_g, &mut ws.scratch);
+                basis.project_into(&self.m, &mut ws.rot_m, &mut ws.scratch);
+                ws.nrot.reuse_shape(ws.rot_g.rows, ws.rot_g.cols);
+                // `m_hat = m_rot.scale(1/bc1)` in the reference — keep the
+                // multiply-by-reciprocal form for bitwise parity.
+                let inv_bc1 = 1.0 / bc1;
+                for (((vi, &gi), &mi), ni) in self
+                    .v
+                    .data
+                    .iter_mut()
+                    .zip(&ws.rot_g.data)
+                    .zip(&ws.rot_m.data)
+                    .zip(ws.nrot.data.iter_mut())
+                {
+                    *vi = h.beta2 * *vi + ob2 * (gi * gi);
+                    *ni = (mi * inv_bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                }
+                basis.project_back_into(&ws.nrot, &mut ws.dir, &mut ws.scratch);
+            }
+        }
+    }
+
     fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix {
         let h = &self.h;
         let bc1 = 1.0 - h.beta1.powi(t as i32);
@@ -184,6 +309,83 @@ impl AdafactorEngine {
 }
 
 impl MomentEngine for AdafactorEngine {
+    fn direction_into(&mut self, g: &Matrix, t: u64, basis: &dyn Basis, ws: &mut Workspace) {
+        let bc1 = 1.0 - self.h.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.h.beta2.powi(t as i32);
+        let (beta1, beta2, eps) = (self.h.beta1, self.h.beta2, self.h.eps);
+        let Workspace {
+            rot_g, rot_m, nrot, dir, sums_row, sums_col, hat_row, hat_col, scratch, ..
+        } = ws;
+        match self.space {
+            MomentumSpace::InBasis => {
+                let identity = basis.is_identity();
+                if !identity {
+                    basis.project_into(g, rot_g, scratch);
+                }
+                let gp: &Matrix = if identity { g } else { &*rot_g };
+                self.m.ema_inplace(gp, beta1);
+                let out: &mut Matrix = if identity { &mut *dir } else { &mut *nrot };
+                if let Some(v) = &mut self.v_1d {
+                    // Degenerate (vector) case: plain Adam second moment,
+                    // fused exactly like `AdamEngine::direction_into`.
+                    out.reuse_shape(gp.rows, gp.cols);
+                    let ob2 = 1.0 - beta2;
+                    for (((vi, &gi), &mi), oi) in v
+                        .data
+                        .iter_mut()
+                        .zip(&gp.data)
+                        .zip(&self.m.data)
+                        .zip(out.data.iter_mut())
+                    {
+                        *vi = beta2 * *vi + ob2 * (gi * gi);
+                        *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + eps);
+                    }
+                } else {
+                    factored_dir_into(
+                        &mut self.a,
+                        &mut self.c,
+                        beta2,
+                        eps,
+                        gp,
+                        &self.m,
+                        1.0 / bc1,
+                        bc2,
+                        sums_row,
+                        sums_col,
+                        hat_row,
+                        hat_col,
+                        out,
+                    );
+                }
+                if !identity {
+                    basis.project_back_into(nrot, dir, scratch);
+                }
+            }
+            MomentumSpace::Original => {
+                // Factorized SOAP (§7.2.1): rank-1 V in the eigenbasis.
+                self.m.ema_inplace(g, beta1);
+                basis.project_into(g, rot_g, scratch);
+                basis.project_into(&self.m, rot_m, scratch);
+                factored_dir_into(
+                    &mut self.a,
+                    &mut self.c,
+                    beta2,
+                    eps,
+                    rot_g,
+                    rot_m,
+                    1.0 / bc1,
+                    bc2,
+                    sums_row,
+                    sums_col,
+                    hat_row,
+                    hat_col,
+                    nrot,
+                );
+                basis.project_back_into(nrot, dir, scratch);
+            }
+        }
+    }
+
     fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix {
         let h = self.h.clone();
         let bc1 = 1.0 - h.beta1.powi(t as i32);
@@ -287,6 +489,20 @@ impl InverseRootEngine {
 }
 
 impl MomentEngine for InverseRootEngine {
+    fn direction_into(&mut self, g: &Matrix, t: u64, basis: &dyn Basis, ws: &mut Workspace) {
+        self.m.ema_inplace(g, self.h.beta1);
+        let bc1 = 1.0 - self.h.beta1.powi(t as i32);
+        // `m_hat = m.scale(1/bc1)` materialized into scratch (same
+        // multiply-by-reciprocal expression as the reference), then the full
+        // sandwich applies through `project_into`.
+        let inv_bc1 = 1.0 / bc1;
+        ws.rot_m.reuse_shape(self.m.rows, self.m.cols);
+        for (oi, &mi) in ws.rot_m.data.iter_mut().zip(&self.m.data) {
+            *oi = mi * inv_bc1;
+        }
+        basis.project_into(&ws.rot_m, &mut ws.dir, &mut ws.scratch);
+    }
+
     fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix {
         self.m.ema_inplace(g, self.h.beta1);
         let bc1 = 1.0 - self.h.beta1.powi(t as i32);
@@ -348,6 +564,14 @@ impl AnyEngine {
 }
 
 impl MomentEngine for AnyEngine {
+    fn direction_into(&mut self, g: &Matrix, t: u64, basis: &dyn Basis, ws: &mut Workspace) {
+        match self {
+            AnyEngine::Adam(e) => e.direction_into(g, t, basis, ws),
+            AnyEngine::Adafactor(e) => e.direction_into(g, t, basis, ws),
+            AnyEngine::InverseRoot(e) => e.direction_into(g, t, basis, ws),
+        }
+    }
+
     fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix {
         match self {
             AnyEngine::Adam(e) => e.direction(g, t, basis),

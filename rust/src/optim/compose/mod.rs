@@ -33,12 +33,14 @@
 pub mod basis;
 pub mod engine;
 pub mod spec;
+pub mod workspace;
 
 pub use basis::{AnyBasis, EigenBasis, EigenFlavor, GradSvdBasis, IdentityBasis};
 pub use engine::{
     factored_normalize, AdafactorEngine, AdamEngine, AnyEngine, InverseRootEngine, MomentumSpace,
 };
 pub use spec::{BasisSpec, CompositionSpec, EngineSpec, GraftSpec, Sided};
+pub use workspace::{Scratch, Workspace};
 
 use std::sync::Arc;
 
@@ -89,20 +91,43 @@ pub enum StateLayout {
 /// after the weights moved — which hook does the factor bookkeeping is the
 /// basis's own contract (Shampoo refreshes pre-direction, SOAP post-update).
 pub trait Basis: Send {
-    fn begin_step(&mut self, g: &Matrix, t: u64);
-    fn end_step(&mut self, g: &Matrix, t: u64);
+    /// Pre-direction hook. `ws` provides the factor-product scratch
+    /// (`ws.factor`, `ws.scratch.pack`) so the per-step `GGᵀ`/`GᵀG` EMAs
+    /// allocate nothing in steady state.
+    fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace);
+    /// Post-update hook (same workspace contract).
+    fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace);
 
     /// True when `project`/`project_back` are no-ops — engines use this to
-    /// skip the defensive clone on the hot path.
+    /// skip the defensive copy on the hot path.
     fn is_identity(&self) -> bool {
         false
     }
 
-    /// Carry `x` into the working space.
-    fn project(&self, x: &Matrix) -> Matrix;
+    /// Carry `x` into the working space, writing into `out` (grow-only
+    /// reuse; `scratch` supplies the two-sided intermediate and NT pack).
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch);
 
-    /// Carry `x` back to the original space.
-    fn project_back(&self, x: &Matrix) -> Matrix;
+    /// Carry `x` back to the original space, into `out`.
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch);
+
+    /// Allocating wrapper over [`Basis::project_into`] — the reference path
+    /// (`Composed::update_legacy_alloc`) and one-off callers use it; the
+    /// step path never does.
+    fn project(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        let mut scratch = Scratch::new();
+        self.project_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocating wrapper over [`Basis::project_back_into`].
+    fn project_back(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        let mut scratch = Scratch::new();
+        self.project_back_into(x, &mut out, &mut scratch);
+        out
+    }
 
     /// Wall-clock spent in inline decompositions so far (Fig 7 accounting).
     fn refresh_seconds(&self) -> f64 {
@@ -137,10 +162,18 @@ pub trait Basis: Send {
 
 /// Per-layer update rule inside (or around) a basis's working space.
 pub trait MomentEngine: Send {
-    /// Consume gradient `g` at step `t`, update the moments, and return the
-    /// un-scaled descent direction in the ORIGINAL space (the engine calls
-    /// `basis.project`/`project_back` itself, so it controls which space
-    /// each moment lives in).
+    /// Consume gradient `g` at step `t`, update the moments, and leave the
+    /// un-scaled descent direction in the ORIGINAL space in `ws.dir`. The
+    /// engine calls `basis.project_into`/`project_back_into` itself, so it
+    /// controls which space each moment lives in. Steady-state
+    /// allocation-free: all intermediates live in `ws`, and the EMA +
+    /// bias-correction + `m/√v` arithmetic runs as one fused pass.
+    fn direction_into(&mut self, g: &Matrix, t: u64, basis: &dyn Basis, ws: &mut Workspace);
+
+    /// Allocating reference implementation of the same math (the frozen
+    /// pre-workspace `clone`/`map`/`zip` path). `Composed::update_legacy_alloc`
+    /// and the golden workspace-vs-alloc pin test run it; results are
+    /// bitwise identical to [`MomentEngine::direction_into`].
     fn direction(&mut self, g: &Matrix, t: u64, basis: &dyn Basis) -> Matrix;
 
     /// The first moment, for norm grafting.
@@ -190,15 +223,26 @@ impl Graft {
 
     /// Rescale `dir` to AdamW's norm for this gradient; `m` is the engine's
     /// momentum (shared — grafting adds only the second moment).
+    ///
+    /// Fused and allocation-free: the `V` EMA, the AdamW direction, and its
+    /// Frobenius norm run in one pass — the reference AdamW direction matrix
+    /// (`AdamW::direction`) is never materialized, but each of its elements
+    /// is computed with the identical f32 expressions, so the resulting
+    /// norm (f64-accumulated, in element order) is bitwise the same.
     pub fn apply(&mut self, dir: &mut Matrix, g: &Matrix, m: &Matrix, t: u64) {
         if !self.active {
             return;
         }
-        let g2 = g.hadamard(g);
-        self.v.ema_inplace(&g2, self.beta2);
-        let adam_dir =
-            crate::optim::adamw::AdamW::direction(m, &self.v, t, self.beta1, self.beta2, self.eps);
-        let target = adam_dir.frob_norm();
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        let ob2 = 1.0 - self.beta2;
+        let mut norm2 = 0.0f64;
+        for ((vi, &gi), &mi) in self.v.data.iter_mut().zip(&g.data).zip(&m.data) {
+            *vi = self.beta2 * *vi + ob2 * (gi * gi);
+            let di = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + self.eps);
+            norm2 += di as f64 * di as f64;
+        }
+        let target = norm2.sqrt() as f32;
         let actual = dir.frob_norm();
         if actual > 1e-30 {
             dir.scale_inplace(target / actual);
@@ -219,6 +263,10 @@ pub struct Composed<B: Basis, E: MomentEngine> {
     pub basis: B,
     pub engine: E,
     pub graft: Option<Graft>,
+    /// Per-layer scratch arena (see [`workspace`]): owned here, never
+    /// shared — the sharded coordinator assigns each layer to exactly one
+    /// worker thread.
+    ws: Workspace,
     h: Hyper,
     label: &'static str,
 }
@@ -228,17 +276,23 @@ pub type DynComposed = Composed<AnyBasis, AnyEngine>;
 
 impl<B: Basis, E: MomentEngine> Composed<B, E> {
     pub fn new(basis: B, engine: E, graft: Option<Graft>, h: Hyper, label: &'static str) -> Self {
-        Self { basis, engine, graft, h, label }
+        Self { basis, engine, graft, ws: Workspace::new(), h, label }
     }
 
     pub fn hyper(&self) -> &Hyper {
         &self.h
     }
-}
 
-impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
-    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
-        self.basis.begin_step(g, t);
+    /// The allocating step path, kept as the executable reference:
+    /// identical math through `MomentEngine::direction`'s
+    /// `clone`/`map`/`zip` chain, over the same (workspace-backed) basis
+    /// hooks as the fused path. `rust/tests/golden_compose.rs` pins
+    /// [`LayerOptimizer::update`] bitwise against this. Note this is NOT
+    /// the pre-PR baseline — that (seed kernels + allocating everything)
+    /// lives in the `step_latency` bench's `prepr` module, behind its
+    /// `--legacy-alloc` flag.
+    pub fn update_legacy_alloc(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+        self.basis.begin_step(g, t, &mut self.ws);
         let mut dir = self.engine.direction(g, t, &self.basis);
         if let Some(graft) = &mut self.graft {
             graft.apply(&mut dir, g, self.engine.momentum(), t);
@@ -247,7 +301,26 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
         if self.h.weight_decay != 0.0 {
             w.scale_inplace(1.0 - lr * self.h.weight_decay);
         }
-        self.basis.end_step(g, t);
+        self.basis.end_step(g, t, &mut self.ws);
+    }
+}
+
+impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
+    fn update(&mut self, w: &mut Matrix, g: &Matrix, t: u64, lr: f32) {
+        self.basis.begin_step(g, t, &mut self.ws);
+        self.engine.direction_into(g, t, &self.basis, &mut self.ws);
+        if let Some(graft) = &mut self.graft {
+            graft.apply(&mut self.ws.dir, g, self.engine.momentum(), t);
+        }
+        w.axpy_inplace(-lr, &self.ws.dir);
+        if self.h.weight_decay != 0.0 {
+            w.scale_inplace(1.0 - lr * self.h.weight_decay);
+        }
+        self.basis.end_step(g, t, &mut self.ws);
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.ws.bytes()
     }
 
     fn state_bytes(&self) -> usize {

@@ -1,0 +1,140 @@
+//! Per-layer scratch arenas for the zero-allocation optimizer step path.
+//!
+//! Every [`Composed`](super::Composed) optimizer owns one [`Workspace`]: a
+//! set of grow-only buffers that the basis projections, the fused moment
+//! kernels, and the factor-EMA products write through instead of allocating
+//! fresh `Matrix` values. After a warm-up step has grown every buffer to its
+//! steady-state size, a non-refresh `Composed::update` performs **zero heap
+//! allocations** (asserted by `rust/tests/alloc_step.rs` with a counting
+//! allocator).
+//!
+//! # Ownership rules
+//!
+//! - **One workspace per layer**, owned by that layer's `Composed` value.
+//!   Buffers carry no layer state between steps — only capacity.
+//! - **Never shared across threads.** The sharded coordinator gives each
+//!   worker disjoint layers, so each workspace stays thread-confined; the
+//!   background `RefreshService` never sees a workspace (refresh closures
+//!   snapshot their inputs).
+//! - Buffers are **grow-only**: `Matrix::reuse_shape` / `Vec::resize` reuse
+//!   the allocation and only ever grow it, so steady state is allocation-free
+//!   even when a basis alternates between differently-shaped products
+//!   (`GGᵀ` then `GᵀG` through the same `factor` buffer).
+//!
+//! Scratch bytes are real memory and are reported via
+//! [`Workspace::bytes`] → `LayerOptimizer::scratch_bytes`, kept separate
+//! from `state_bytes` (persistent optimizer state, the paper's §7.2
+//! accounting).
+
+use crate::linalg::Matrix;
+
+/// Buffers shared by basis projections: the two-sided rotation intermediate
+/// and the NT kernel's `Bᵀ` packing panel. Split out of [`Workspace`] so a
+/// caller can lend a projection output buffer and the scratch
+/// simultaneously (disjoint field borrows).
+pub struct Scratch {
+    /// Projection intermediate (`QᵀX` before the right-side multiply).
+    pub tmp: Matrix,
+    /// Transposed-B packing buffer for `matmul_nt_into`.
+    pub pack: Vec<f32>,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self { tmp: Matrix::zeros(0, 0), pack: Vec::new() }
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.tmp.data.capacity() + self.pack.capacity()) * 4
+    }
+}
+
+/// The per-layer scratch arena threaded through `Basis` and `MomentEngine`.
+pub struct Workspace {
+    /// Basis-space gradient (`QᵀGQ`).
+    pub rot_g: Matrix,
+    /// Basis-space momentum (SOAP re-rotates M every step) / bias-corrected
+    /// momentum for the inverse-root engine.
+    pub rot_m: Matrix,
+    /// Basis-space direction before rotating back.
+    pub nrot: Matrix,
+    /// Original-space direction — `Composed::update` applies this to the
+    /// weights after the engine returns.
+    pub dir: Matrix,
+    /// Kronecker-factor product scratch (`GGᵀ` / `GᵀG` share it serially).
+    pub factor: Matrix,
+    /// Adafactor row-sum scratch (`Σⱼ g²`). f64: the allocating reference
+    /// (`Matrix::row_sums`) accumulates in f64, and the fused kernel must
+    /// stay bitwise identical to it.
+    pub sums_row: Vec<f64>,
+    /// Adafactor column-sum scratch (f64, same rationale).
+    pub sums_col: Vec<f64>,
+    /// Bias-corrected `A/(1−β₂ᵗ)` scratch.
+    pub hat_row: Vec<f32>,
+    /// Bias-corrected `C/(1−β₂ᵗ)` scratch.
+    pub hat_col: Vec<f32>,
+    /// Projection + NT-packing scratch.
+    pub scratch: Scratch,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self {
+            rot_g: Matrix::zeros(0, 0),
+            rot_m: Matrix::zeros(0, 0),
+            nrot: Matrix::zeros(0, 0),
+            dir: Matrix::zeros(0, 0),
+            factor: Matrix::zeros(0, 0),
+            sums_row: Vec::new(),
+            sums_col: Vec::new(),
+            hat_row: Vec::new(),
+            hat_col: Vec::new(),
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// Bytes currently held by the arena (capacities, not lengths — what the
+    /// allocator actually handed out).
+    pub fn bytes(&self) -> usize {
+        (self.rot_g.data.capacity()
+            + self.rot_m.data.capacity()
+            + self.nrot.data.capacity()
+            + self.dir.data.capacity()
+            + self.factor.data.capacity()
+            + self.hat_row.capacity()
+            + self.hat_col.capacity())
+            * 4
+            + (self.sums_row.capacity() + self.sums_col.capacity()) * 8
+            + self.scratch.bytes()
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_tracks_growth_and_never_shrinks() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.bytes(), 0);
+        ws.dir.reuse_shape(8, 8);
+        let grown = ws.bytes();
+        assert!(grown >= 8 * 8 * 4);
+        ws.dir.reuse_shape(2, 2);
+        assert_eq!(ws.bytes(), grown, "grow-only arena shrank");
+        ws.scratch.pack.resize(100, 0.0);
+        assert!(ws.bytes() >= grown + 400);
+    }
+}

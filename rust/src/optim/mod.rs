@@ -68,6 +68,14 @@ pub trait LayerOptimizer: Send {
     /// Bytes of optimizer state held for this layer (paper §7.2 accounting).
     fn state_bytes(&self) -> usize;
 
+    /// Bytes of reusable scratch currently held for this layer (the
+    /// zero-allocation step path's workspace arena — grow-only, transient).
+    /// Reported separately from [`Self::state_bytes`] so the §7.2 table
+    /// stays persistent-state-only while total memory stays visible.
+    fn scratch_bytes(&self) -> usize {
+        0
+    }
+
     /// Human name, e.g. `"soap"`.
     fn name(&self) -> &'static str;
 
@@ -242,6 +250,12 @@ impl ModelOptimizer {
         self.layers.iter().map(|l| l.state_bytes()).sum()
     }
 
+    /// Total workspace-arena bytes across layers (0 before the first step;
+    /// grow-only afterwards).
+    pub fn scratch_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.scratch_bytes()).sum()
+    }
+
     pub fn refresh_seconds(&self) -> f64 {
         self.layers.iter().map(|l| l.refresh_seconds()).sum()
     }
@@ -322,5 +336,6 @@ mod tests {
             assert!(b.max_abs_diff(a) > 0.0);
         }
         assert_eq!(mo.step, 1);
+        assert!(mo.scratch_bytes() > 0, "workspace arenas should have grown after a step");
     }
 }

@@ -1,18 +1,33 @@
 //! Fixed-size worker thread pool (tokio stand-in for our workloads).
 //!
-//! The coordinator's layer-sharded optimizer updates and the precond
-//! module's background refreshes are CPU-bound, so a plain thread pool with
-//! an mpsc work queue is the right substrate: `scope_execute` fans a set of
-//! closures out to the workers and joins them, propagating panics; `submit`
-//! is the fire-and-forget entry the refresh service uses. Work items are
-//! `FnOnce` boxed closures; results flow back through a channel.
+//! The coordinator's layer-sharded optimizer updates, the precond module's
+//! background refreshes, and the linalg parallel GEMM driver are CPU-bound,
+//! so a plain thread pool is the right substrate: `scope_execute` fans a set
+//! of closures out to the workers and joins them, propagating panics;
+//! `submit` is the fire-and-forget entry the refresh service uses;
+//! `scope_borrowed` runs *borrowing* closures (the GEMM driver hands out
+//! disjoint `&mut` row chunks of one output matrix).
+//!
+//! Dispatch is **per-worker channels with round-robin assignment**: each
+//! worker owns its own mpsc `Receiver` and `submit` rotates across the
+//! senders. The previous design funneled every dequeue through one
+//! `Mutex<Receiver>`, which serializes workers at 8+ threads exactly when
+//! the row-partitioned GEMM fan-out wants them all running — per-worker
+//! queues make the dequeue path lock-free (the submit side keeps a short
+//! `Mutex` critical section so the pool stays `Sync` on every toolchain,
+//! independent of whether `mpsc::Sender` implements `Sync`). The trade-off
+//! is load balance: round-robin is not work-conserving, so a long job
+//! delays jobs queued behind it on the same worker while others idle. The
+//! GEMM fan-out is uniform (equal row chunks) and unaffected; refresh jobs
+//! scale with layer dim³ and CAN collide on one queue — tolerable because
+//! `BasisHandle::try_begin_refresh` sheds refreshes rather than queueing a
+//! backlog, and a late basis only adds staleness the optimizer already
+//! tolerates. If per-layer heterogeneity ever dominates, work stealing (or
+//! a shared queue for `submit` only) is the next step.
 //!
 //! Shutdown is deterministic: `Drop` enqueues one `Shutdown` message per
-//! worker (FIFO behind any pending jobs, so queued work drains first) and
-//! joins every handle — no leaked `soap-worker-*` threads. The sender side
-//! sits behind a `Mutex` so the pool is `Sync` (shareable via `Arc` across
-//! shard workers) on every toolchain, independent of whether `mpsc::Sender`
-//! implements `Sync`.
+//! worker (FIFO behind that worker's pending jobs, so queued work drains
+//! first) and joins every handle — no leaked `soap-worker-*` threads.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -26,9 +41,10 @@ enum Msg {
     Shutdown,
 }
 
-/// A fixed pool of worker threads consuming from a shared queue.
+/// A fixed pool of worker threads, each consuming from its own queue.
 pub struct ThreadPool {
-    tx: Mutex<Sender<Msg>>,
+    txs: Mutex<Vec<Sender<Msg>>>,
+    next: AtomicUsize,
     workers: Vec<JoinHandle<()>>,
     size: usize,
 }
@@ -36,44 +52,53 @@ pub struct ThreadPool {
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
-        let (tx, rx) = channel::<Msg>();
-        // Workers share the receiver; the constructor's reference is dropped
-        // here — only `tx` (for submission) and the worker handles remain.
-        let rx_shared = Arc::new(Mutex::new(rx));
+        let mut txs = Vec::with_capacity(size);
         let mut workers = Vec::with_capacity(size);
         for id in 0..size {
-            let rx = Arc::clone(&rx_shared);
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("soap-worker-{id}"))
                     .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => job(),
+                        match rx.recv() {
+                            // A panicking fire-and-forget job must not take
+                            // the worker (and, with per-worker queues, every
+                            // job behind it + the round-robin sender) down
+                            // with it. The scoped entries propagate panics
+                            // to the caller through their token channels.
+                            Ok(Msg::Run(job)) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
                     })
                     .expect("spawn worker"),
             );
         }
-        Self { tx: Mutex::new(tx), workers, size }
+        Self { txs: Mutex::new(txs), next: AtomicUsize::new(0), workers, size }
     }
 
     pub fn size(&self) -> usize {
         self.size
     }
 
-    /// Submit a single fire-and-forget job.
+    /// Submit a single fire-and-forget job (round-robin worker assignment).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Msg::Run(Box::new(f)))
-            .expect("pool alive");
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, job: Job) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.size;
+        self.txs.lock().unwrap()[i].send(Msg::Run(job)).expect("pool alive");
     }
 
     /// Run `jobs` across the pool and collect their results **in input
-    /// order**; blocks until all complete. Panics in jobs are surfaced.
+    /// order**; blocks until all complete. Panics in jobs are surfaced
+    /// (after every job has finished, so sibling jobs never outlive the
+    /// call).
     pub fn scope_execute<T, F>(&self, jobs: Vec<F>) -> Vec<T>
     where
         T: Send + 'static,
@@ -90,14 +115,91 @@ impl ThreadPool {
         }
         drop(rtx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_panic = None;
         for _ in 0..n {
             let (i, res) = rrx.recv().expect("worker result");
             match res {
                 Ok(v) => slots[i] = Some(v),
-                Err(p) => std::panic::resume_unwind(p),
+                Err(p) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
             }
         }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
         slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    /// Run closures that **borrow** from the caller's stack (e.g. disjoint
+    /// `&mut` row chunks of one matrix) across the pool; blocks until every
+    /// job has finished, then propagates the first panic if any.
+    ///
+    /// This is the scoped entry point the parallel GEMM driver uses: the
+    /// borrowed data outlives the call because the call does not return (or
+    /// unwind) until every submitted job has dropped its completion sender.
+    ///
+    /// Deadlock hazard (as with any blocking scope on a fixed pool): do NOT
+    /// call this — or `scope_execute`/`par_map` — from a job running on the
+    /// SAME pool; round-robin can queue a child job behind the blocked
+    /// parent. Current callers can't nest: the GEMM drivers use the static
+    /// linalg pool, the refresh service its own pool.
+    pub fn scope_borrowed<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (rtx, rrx) = channel::<std::thread::Result<()>>();
+        // Unwind guard: if anything below panics after jobs were submitted
+        // (poisoned submit mutex, a closed worker channel), lifetime-erased
+        // jobs may still be running against this frame's borrows. Dropping
+        // the guard first drops the original sender it owns (so recv can
+        // observe disconnection), then blocks until every job's sender
+        // clone is gone — i.e. every submitted job has finished — so memory
+        // safety never depends on the happy path reaching its receive loop.
+        struct DrainOnDrop {
+            rx: std::sync::mpsc::Receiver<std::thread::Result<()>>,
+            tx: Option<Sender<std::thread::Result<()>>>,
+        }
+        impl Drop for DrainOnDrop {
+            fn drop(&mut self) {
+                drop(self.tx.take());
+                while self.rx.recv().is_ok() {}
+            }
+        }
+        let mut guard = DrainOnDrop { rx: rrx, tx: Some(rtx) };
+        for job in jobs {
+            // SAFETY: lifetime erasure only. Every job owns a clone of the
+            // result sender and drops it when it finishes (catch_unwind
+            // makes the send-then-drop unconditional); both the receive
+            // loop below and the `DrainOnDrop` unwind path block until all
+            // clones are gone, so no job can run, or be alive, after the
+            // 'scope borrows end — whether this function returns or
+            // unwinds.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let rtx = guard.tx.as_ref().expect("sender held until submit loop ends").clone();
+            self.submit_boxed(Box::new(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let _ = rtx.send(out);
+            }));
+        }
+        drop(guard.tx.take());
+        let mut first_panic = None;
+        for _ in 0..n {
+            match guard.rx.recv().expect("worker result") {
+                Ok(()) => {}
+                Err(p) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
     }
 
     /// Map `f` over `items` in parallel, preserving order.
@@ -121,11 +223,12 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // One Shutdown per worker, queued FIFO behind pending jobs so the
-        // queue drains before the workers exit; then join every handle.
+        // One Shutdown per worker, queued FIFO behind that worker's pending
+        // jobs so every queue drains before its worker exits; then join
+        // every handle.
         {
-            let tx = self.tx.lock().unwrap();
-            for _ in 0..self.workers.len() {
+            let txs = self.txs.lock().unwrap();
+            for tx in txs.iter() {
                 let _ = tx.send(Msg::Shutdown);
             }
         }
@@ -191,6 +294,19 @@ mod tests {
     }
 
     #[test]
+    fn panicking_submit_job_does_not_kill_worker() {
+        // Fire-and-forget panics are contained in the worker loop; with
+        // per-worker queues a dead worker would strand its queue and break
+        // every size-th later submit.
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.submit(|| panic!("fire-and-forget failure"));
+        }
+        let out = pool.par_map(vec![1i64, 2, 3, 4, 5, 6], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
     fn drop_joins_cleanly() {
         let pool = ThreadPool::new(2);
         pool.submit(|| {
@@ -203,8 +319,8 @@ mod tests {
     fn drop_drains_queue_then_joins_every_worker() {
         // Each queued job holds a clone of `alive`. After drop() returns
         // (which joins every worker), only our reference may remain — proof
-        // that the queue drained and every job closure was consumed before
-        // the workers shut down.
+        // that every per-worker queue drained and every job closure was
+        // consumed before the workers shut down.
         let alive = Arc::new(());
         let ran = Arc::new(SharedCounter::new());
         let pool = ThreadPool::new(3);
@@ -248,7 +364,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        // Drop the pool (drains the queue) by unwrapping the Arc.
+        // Drop the pool (drains the queues) by unwrapping the Arc.
         drop(Arc::try_unwrap(pool).ok());
         assert_eq!(c.get(), 4);
     }
@@ -262,5 +378,67 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(50))
         });
         assert!(t0.elapsed() < std::time::Duration::from_millis(190));
+    }
+
+    #[test]
+    fn round_robin_touches_every_worker() {
+        // `size` jobs submitted back-to-back land on `size` distinct workers
+        // (round-robin), so they all run concurrently: a rendezvous barrier
+        // completes only if every worker got exactly one job. Run under a
+        // watchdog — a dispatch regression (two jobs on one queue) would
+        // otherwise deadlock the barrier and hang the suite instead of
+        // failing.
+        let (done_tx, done_rx) = channel::<()>();
+        let runner = std::thread::spawn(move || {
+            let pool = ThreadPool::new(4);
+            let barrier = Arc::new(std::sync::Barrier::new(4));
+            let jobs: Vec<_> = (0..4)
+                .map(|_| {
+                    let b = Arc::clone(&barrier);
+                    move || {
+                        b.wait();
+                    }
+                })
+                .collect();
+            pool.scope_execute(jobs);
+            let _ = done_tx.send(());
+        });
+        match done_rx.recv_timeout(std::time::Duration::from_secs(5)) {
+            Ok(()) => runner.join().unwrap(),
+            // Leak the wedged runner thread: joining it would hang too.
+            Err(_) => panic!("round-robin dispatch failed to reach all workers (barrier stuck)"),
+        }
+    }
+
+    #[test]
+    fn scope_borrowed_mutates_disjoint_chunks() {
+        let pool = ThreadPool::new(4);
+        let mut v = vec![0u32; 103];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = v
+            .chunks_mut(25)
+            .map(|chunk| {
+                Box::new(move || {
+                    for x in chunk.iter_mut() {
+                        *x += 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope_borrowed(jobs);
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn scope_borrowed_propagates_panics_after_completion() {
+        let pool = ThreadPool::new(2);
+        let data = [1u32, 2, 3];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {
+                let _ = data[0];
+            }),
+            Box::new(|| panic!("synthetic kernel failure")),
+        ];
+        pool.scope_borrowed(jobs);
     }
 }

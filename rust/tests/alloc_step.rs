@@ -1,0 +1,88 @@
+//! Steady-state allocation count of the composed optimizer step path.
+//!
+//! A counting [`GlobalAlloc`] shim wraps the system allocator for this test
+//! binary. After a warm-up window has initialized every basis and grown
+//! every workspace buffer to its steady-state size, a non-refresh
+//! `Composed::update` must perform **zero** heap allocations — the PR-3
+//! tentpole invariant that makes step latency allocation-noise-free.
+//!
+//! Kept as a single `#[test]` on purpose: the default harness runs tests on
+//! multiple threads, and a sibling test's allocations would pollute the
+//! global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use soap_lab::linalg::Matrix;
+use soap_lab::optim::compose::presets;
+use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer};
+use soap_lab::util::rng::Rng;
+
+/// Counts every `alloc`/`realloc` (the events that would show up as
+/// per-step latency noise); `dealloc` is free of arena growth and untracked.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_composed_step_allocates_zero() {
+    type Build = fn(usize, usize, Hyper) -> DynComposed;
+    let builds: [(&str, Build); 6] = [
+        ("soap", presets::soap),
+        ("soap-factorized", |r, c, h| presets::soap(r, c, Hyper { factorized: true, ..h })),
+        ("shampoo", presets::shampoo),
+        ("galore", presets::galore),
+        ("adamw", presets::adamw),
+        ("adafactor", presets::adafactor),
+    ];
+    // f = 10, phase 0: refreshes land on t ∈ {10, 20, 30, …}; t = 23..=26
+    // below is pure steady state.
+    let h = Hyper { precond_freq: 10, ..Hyper::default() };
+    let (rows, cols) = (12, 8);
+    for (label, build) in builds {
+        let mut opt = build(rows, cols, h.clone());
+        let mut rng = Rng::new(41);
+        let grads: Vec<Matrix> =
+            (0..26).map(|_| Matrix::randn(&mut rng, rows, cols, 1.0)).collect();
+        let mut w = Matrix::zeros(rows, cols);
+        // Warm-up: basis init, two refresh cycles, every arena buffer grown.
+        for (i, g) in grads.iter().take(22).enumerate() {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        let scratch = opt.scratch_bytes();
+        let before = allocs();
+        for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        let n = allocs() - before;
+        assert_eq!(n, 0, "{label}: steady-state step performed {n} heap allocations");
+        assert_eq!(
+            opt.scratch_bytes(),
+            scratch,
+            "{label}: workspace arena changed size in steady state"
+        );
+    }
+}

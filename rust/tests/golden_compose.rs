@@ -1211,3 +1211,80 @@ fn composed_spec_trains_end_to_end_and_checkpoints_roundtrip() {
         assert_eq!(x.data, y.data, "composed-spec resume diverged");
     }
 }
+
+#[test]
+fn workspace_path_matches_allocating_path_bitwise_all_presets() {
+    // PR-3 tentpole pin: `Composed::update` (the fused, zero-allocation
+    // workspace path) against `Composed::update_legacy_alloc` (the frozen
+    // allocating clone/map/zip reference) — bitwise, for every preset plus
+    // the factorized-SOAP engine path, over ≥ 3·f steps so basis inits and
+    // refreshes land inside the window.
+    use soap_lab::optim::compose::presets;
+    use soap_lab::optim::DynComposed;
+    let h = Hyper { precond_freq: 5, ..Hyper::default() };
+    type Build = fn(usize, usize, Hyper) -> DynComposed;
+    let builds: [(&str, Build); 6] = [
+        ("soap", presets::soap),
+        ("soap-factorized", |r, c, h| presets::soap(r, c, Hyper { factorized: true, ..h })),
+        ("shampoo", presets::shampoo),
+        ("galore", presets::galore),
+        ("adamw", presets::adamw),
+        ("adafactor", presets::adafactor),
+    ];
+    for (label, build) in builds {
+        let grads = seeded_grads(950, 17, 6, 8);
+        let mut fused = build(6, 8, h.clone());
+        let mut reference = build(6, 8, h.clone());
+        let mut w_f = Matrix::zeros(6, 8);
+        let mut w_r = Matrix::zeros(6, 8);
+        for (i, g) in grads.iter().enumerate() {
+            let t = i as u64 + 1;
+            fused.update(&mut w_f, g, t, 0.01);
+            reference.update_legacy_alloc(&mut w_r, g, t, 0.01);
+            assert_eq!(
+                w_f.data, w_r.data,
+                "{label}: workspace path diverged from allocating path at step {t}"
+            );
+        }
+        assert!(fused.scratch_bytes() > 0, "{label}: workspace never grew");
+    }
+}
+
+#[test]
+fn workspace_path_matches_allocating_path_async_drained() {
+    // Same pin in drained-async mode: publication timing is deterministic,
+    // so the two paths must stay bitwise equal under background refreshes
+    // too. Presets without async bases degrade to the inline comparison.
+    use soap_lab::optim::compose::presets;
+    use soap_lab::optim::DynComposed;
+    let h = Hyper { precond_freq: 5, ..Hyper::default() };
+    type Build = fn(usize, usize, Hyper) -> DynComposed;
+    let builds: [(&str, Build); 5] = [
+        ("soap", presets::soap),
+        ("shampoo", presets::shampoo),
+        ("galore", presets::galore),
+        ("adamw", presets::adamw),
+        ("adafactor", presets::adafactor),
+    ];
+    for (label, build) in builds {
+        let svc_f = Arc::new(RefreshService::new(1));
+        let svc_r = Arc::new(RefreshService::new(1));
+        let grads = seeded_grads(951, 17, 6, 6);
+        let mut fused = build(6, 6, h.clone());
+        let mut reference = build(6, 6, h.clone());
+        assert_eq!(fused.attach_async(&svc_f), reference.attach_async(&svc_r));
+        let mut w_f = Matrix::zeros(6, 6);
+        let mut w_r = Matrix::zeros(6, 6);
+        for (i, g) in grads.iter().enumerate() {
+            let t = i as u64 + 1;
+            fused.update(&mut w_f, g, t, 0.01);
+            svc_f.wait_idle();
+            reference.update_legacy_alloc(&mut w_r, g, t, 0.01);
+            svc_r.wait_idle();
+            assert_eq!(
+                w_f.data, w_r.data,
+                "{label} (async drained): workspace path diverged at step {t}"
+            );
+        }
+    }
+}

@@ -238,3 +238,95 @@ fn prop_transpose_contractions_consistent() {
         ensure(nt.max_abs_diff(&want) < 1e-3, "nt mismatch")
     });
 }
+
+#[test]
+fn prop_gemm_into_family_matches_f64_naive() {
+    // f64-accumulated reference for `op(A)·op(B)`.
+    fn naive(m: usize, k: usize, n: usize, a: &Matrix, b: &Matrix, ta: bool, tb: bool) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    let av = if ta { a.at(p, i) } else { a.at(i, p) };
+                    let bv = if tb { b.at(j, p) } else { b.at(p, j) };
+                    acc += av as f64 * bv as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+    prop::check("gemm `*_into` family matches the f64 naive reference", 60, |rng| {
+        // Bias toward degenerate dims so 1×1, 1×n, tall and wide shapes all
+        // appear alongside generic rectangles.
+        fn dim(rng: &mut soap_lab::util::rng::Rng) -> usize {
+            if rng.below(5) == 0 {
+                1
+            } else {
+                1 + rng.below(28) as usize
+            }
+        }
+        let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let at = Matrix::randn(rng, k, m, 1.0);
+        let bt = Matrix::randn(rng, n, k, 1.0);
+        // Dirty, wrongly-shaped out/pack buffers: the `*_into` kernels must
+        // overwrite (never blend with) previous contents.
+        let (dr, dc) = (1 + rng.below(4) as usize, 1 + rng.below(4) as usize);
+        let mut out = Matrix::randn(rng, dr, dc, 1.0);
+        let mut pack = vec![3.0f32; rng.below(9) as usize];
+
+        a.matmul_into(&b, &mut out);
+        prop::close_slices(&out.data, &naive(m, k, n, &a, &b, false, false), 2e-4)?;
+        at.matmul_tn_into(&b, &mut out);
+        prop::close_slices(&out.data, &naive(m, k, n, &at, &b, true, false), 2e-4)?;
+        a.matmul_nt_into(&bt, &mut out, &mut pack);
+        prop::close_slices(&out.data, &naive(m, k, n, &a, &bt, false, true), 2e-4)?;
+        ensure(
+            (out.rows, out.cols) == (m, n),
+            format!("out shape {}×{} after reuse", out.rows, out.cols),
+        )
+    });
+}
+
+#[test]
+fn prop_allocating_matmuls_match_into_kernels_bitwise() {
+    // The allocating entries dispatch to the parallel drivers; row
+    // partitioning preserves accumulation order, so they must agree
+    // BITWISE with the serial `*_into` kernels. Shapes are drawn ABOVE the
+    // parallel gate (2·m·k·n ≥ 2²², ≥ 2 chunks of 16 rows) so the parallel
+    // code actually runs — smaller products would silently compare the
+    // serial fallback against itself.
+    //
+    // Mirror `linalg_pool`'s sizing: with one thread the pool is disabled
+    // and this comparison would be vacuous — skip loudly instead.
+    let threads = std::env::var("SOAP_GEMM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    if threads <= 1 {
+        eprintln!("SKIP prop_allocating_matmuls_match_into_kernels_bitwise: GEMM pool disabled (1 thread)");
+        return;
+    }
+    prop::check("parallel matmul/matmul_tn/matmul_nt ≡ serial `*_into` bitwise", 6, |rng| {
+        // Minimum draw: 2·96·160·160 = 4.9M flops > 2²² and 96/16 = 6
+        // chunks, so every case clears the gate in `par_chunk_rows`.
+        let m = 96 + rng.below(64) as usize;
+        let k = 160 + rng.below(64) as usize;
+        let n = 160 + rng.below(64) as usize;
+        let a = Matrix::randn(rng, m, k, 1.0);
+        let b = Matrix::randn(rng, k, n, 1.0);
+        let at = Matrix::randn(rng, k, m, 1.0);
+        let bt = Matrix::randn(rng, n, k, 1.0);
+        let mut out = Matrix::zeros(0, 0);
+        let mut pack = Vec::new();
+        a.matmul_into(&b, &mut out);
+        ensure(a.matmul(&b).data == out.data, "NN parallel/serial drift")?;
+        at.matmul_tn_into(&b, &mut out);
+        ensure(at.matmul_tn(&b).data == out.data, "TN parallel/serial drift")?;
+        a.matmul_nt_into(&bt, &mut out, &mut pack);
+        ensure(a.matmul_nt(&bt).data == out.data, "NT parallel/serial drift")
+    });
+}
