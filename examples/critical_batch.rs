@@ -6,21 +6,22 @@
 //! cargo run --release --example critical_batch
 //! ```
 
-use soap_lab::coordinator::{Trainer, TrainerConfig};
 use soap_lab::experiments::batch_scaling_analysis;
 use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::session::{ModelSpec, TrainSession};
 
-fn run(opt: OptKind, lr: f32, accum: usize, steps: u64, f: u64) -> anyhow::Result<soap_lab::coordinator::TrainLog> {
-    let cfg = TrainerConfig {
-        opt,
-        hyper: Hyper::default().with_freq(f),
-        schedule: Schedule::Constant { lr },
-        steps,
-        grad_accum: accum,
-        log_every: 0,
-        ..TrainerConfig::default()
-    };
-    Ok(Trainer::new_pjrt("nano", cfg, "artifacts")?.run()?)
+use soap_lab::coordinator::TrainLog;
+
+fn run(opt: OptKind, lr: f32, accum: usize, steps: u64, f: u64) -> anyhow::Result<TrainLog> {
+    TrainSession::builder()
+        .model(ModelSpec::artifact("nano"))
+        .optimizer(opt)
+        .hyper(Hyper::default().with_freq(f))
+        .schedule(Schedule::Constant { lr })
+        .steps(steps)
+        .grad_accum(accum)
+        .build()?
+        .run()
 }
 
 fn main() -> anyhow::Result<()> {

@@ -11,10 +11,9 @@
 //! cargo run --release --example perf_probe -- basis=eigen:one-sided,inner=adafactor
 //! ```
 fn main() {
-    use soap_lab::coordinator::{Trainer, TrainerConfig};
     use soap_lab::linalg::{eigh, eigh_warm, qr_positive, Matrix};
-    use soap_lab::model::NplmConfig;
     use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
+    use soap_lab::session::{ModelSpec, TrainSession};
     use soap_lab::util::rng::Rng;
     let mut rng = Rng::new(1);
     for n in [128usize, 256, 512] {
@@ -119,36 +118,27 @@ fn main() {
     });
     println!("\n== {} refresh accounting (native NPLM, f=10, 120 steps) ==", opt.name());
     for mode in [RefreshMode::Inline, RefreshMode::Async] {
-        let cfg = TrainerConfig {
-            opt,
-            hyper: Hyper::default().with_refresh_mode(mode),
-            schedule: Schedule::Constant { lr: 0.01 },
-            steps: 120,
-            seed: 3,
-            grad_accum: 1,
-            workers: 4,
-            log_every: 0,
-            vocab: 128,
-            zipf_alpha: 1.2,
-        };
-        let mut t = Trainer::new_native(
-            NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 },
-            cfg,
-            32,
-            16,
-        );
-        let log = t.run().expect("probe run");
-        t.wait_refresh_idle(); // fold in refreshes still in flight at the end
+        let mut session = TrainSession::builder()
+            .model(ModelSpec::parse("nplm").expect("builtin model"))
+            .optimizer(opt)
+            .hyper(Hyper::default().with_refresh_mode(mode))
+            .schedule(Schedule::Constant { lr: 0.01 })
+            .steps(120)
+            .seed(3)
+            .build()
+            .expect("probe session");
+        let log = session.run().expect("probe run");
+        session.wait_refresh_idle(); // fold in refreshes still in flight at the end
         println!(
             "{:<7} hot-path refresh {:>7.1} ms ({:>4.1}% of step)  background {:>7.1} ms  \
              mean staleness {:>4.1} steps  p99 step {:>6.2} ms  workspace {:>6.1} KiB",
             mode.name(),
             1e3 * log.refresh_seconds_total(),
             100.0 * log.refresh_frac(),
-            1e3 * t.async_refresh_seconds(),
+            1e3 * session.async_refresh_seconds(),
             log.mean_staleness(),
             1e3 * log.step_time_quantile(0.99),
-            t.scratch_bytes() as f64 / 1024.0,
+            session.scratch_bytes() as f64 / 1024.0,
         );
     }
 }

@@ -6,31 +6,29 @@
 //! cargo run --release --example precond_frequency
 //! ```
 
-use soap_lab::coordinator::{Trainer, TrainerConfig};
 use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::session::{ModelSpec, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     let steps = 150u64;
     println!("{:<10} {:>5} {:>12} {:>14} {:>16}", "optimizer", "f", "tail loss", "tokens/s", "refresh secs");
     for opt in [OptKind::Soap, OptKind::Shampoo] {
         for f in [1u64, 10, 100] {
-            let cfg = TrainerConfig {
-                opt,
-                hyper: Hyper::default().with_freq(f),
-                schedule: Schedule::paper(0.01, steps / 5, steps),
-                steps,
-                log_every: 0,
-                ..TrainerConfig::default()
-            };
-            let mut trainer = Trainer::new_pjrt("nano", cfg, "artifacts")?;
-            let log = trainer.run()?;
+            let mut session = TrainSession::builder()
+                .model(ModelSpec::artifact("nano"))
+                .optimizer(opt)
+                .hyper(Hyper::default().with_freq(f))
+                .schedule(Schedule::paper(0.01, steps / 5, steps))
+                .steps(steps)
+                .build()?;
+            let log = session.run()?;
             println!(
                 "{:<10} {:>5} {:>12.4} {:>14.0} {:>16.2}",
                 opt.name(),
                 f,
                 log.tail_loss(15),
                 log.tokens_per_second(),
-                trainer.refresh_seconds()
+                session.refresh_seconds()
             );
         }
     }

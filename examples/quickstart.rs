@@ -1,36 +1,30 @@
 //! Quickstart: train a tiny transformer LM with SOAP through the full
 //! three-layer stack (JAX-lowered HLO transformer + Pallas-built SOAP
-//! artifacts where enabled + rust coordinator), in ~20 lines of API.
+//! artifacts where enabled + rust coordinator), in ~15 lines of API.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use soap_lab::coordinator::{Trainer, TrainerConfig};
-use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::optim::Schedule;
+use soap_lab::session::{ModelSpec, TrainSession};
 
 fn main() -> anyhow::Result<()> {
     let steps = 100;
-    let cfg = TrainerConfig {
-        opt: OptKind::Soap,
-        hyper: Hyper::default(),                       // paper Appendix A defaults, f = 10
-        schedule: Schedule::paper(0.01, 20, steps),    // warmup → cosine to 0.1×
-        steps,
-        seed: 0,
-        grad_accum: 1,
-        workers: 4,
-        log_every: 10,
-        ..TrainerConfig::default()
-    };
+    let mut session = TrainSession::builder()
+        .model(ModelSpec::artifact("nano"))
+        .schedule(Schedule::paper(0.01, 20, steps)) // warmup → cosine to 0.1×
+        .steps(steps)
+        .log_every(10)
+        .build()?; // SOAP with paper Appendix A defaults (f = 10)
 
-    let mut trainer = Trainer::new_pjrt("nano", cfg, "artifacts")?;
     println!(
         "training nano ({} params) with SOAP; data entropy floor {:.3} nats",
-        trainer.params.iter().map(|p| p.numel()).sum::<usize>(),
-        trainer.entropy_floor()
+        session.params.iter().map(|p| p.numel()).sum::<usize>(),
+        session.entropy_floor()
     );
 
-    let log = trainer.run()?;
+    let log = session.run()?;
 
     println!(
         "\nloss {:.4} → {:.4} over {} steps  ({:.0} tokens/s, optimizer overhead {:.1}%)",

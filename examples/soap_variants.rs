@@ -6,8 +6,20 @@
 //! cargo run --release --example soap_variants
 //! ```
 
-use soap_lab::coordinator::{Trainer, TrainerConfig};
 use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::session::{ModelSpec, TrainSession};
+
+fn run(opt: OptKind, hyper: Hyper, lr: f32, steps: u64) -> anyhow::Result<(f32, usize)> {
+    let mut session = TrainSession::builder()
+        .model(ModelSpec::artifact("nano"))
+        .optimizer(opt)
+        .hyper(hyper)
+        .schedule(Schedule::paper(lr, steps / 5, steps))
+        .steps(steps)
+        .build()?;
+    let log = session.run()?;
+    Ok((log.tail_loss(15), session.state_bytes()))
+}
 
 fn main() -> anyhow::Result<()> {
     let steps = 150u64;
@@ -19,36 +31,17 @@ fn main() -> anyhow::Result<()> {
     ];
 
     // AdamW reference for the memory comparison.
-    let adamw_cfg = TrainerConfig {
-        opt: OptKind::AdamW,
-        schedule: Schedule::paper(3.16e-3, steps / 5, steps),
-        steps,
-        log_every: 0,
-        ..TrainerConfig::default()
-    };
-    let mut adamw = Trainer::new_pjrt("nano", adamw_cfg, "artifacts")?;
-    let adamw_log = adamw.run()?;
-    let adamw_bytes = adamw.state_bytes();
+    let (adamw_loss, adamw_bytes) = run(OptKind::AdamW, Hyper::default(), 3.16e-3, steps)?;
     println!(
         "{:<18} {:>12} {:>16}\n{:<18} {:>12.4} {:>16}",
-        "variant", "tail loss", "state bytes", "adamw", adamw_log.tail_loss(15), adamw_bytes
+        "variant", "tail loss", "state bytes", "adamw", adamw_loss, adamw_bytes
     );
 
     for (name, hyper) in variants {
-        let cfg = TrainerConfig {
-            opt: OptKind::Soap,
-            hyper,
-            schedule: Schedule::paper(0.01, steps / 5, steps),
-            steps,
-            log_every: 0,
-            ..TrainerConfig::default()
-        };
-        let mut t = Trainer::new_pjrt("nano", cfg, "artifacts")?;
-        let log = t.run()?;
-        let bytes = t.state_bytes();
+        let (loss, bytes) = run(OptKind::Soap, hyper, 0.01, steps)?;
         println!(
             "{name:<18} {:>12.4} {:>16}{}",
-            log.tail_loss(15),
+            loss,
             bytes,
             if bytes < adamw_bytes { "  ← smaller than AdamW (§7.2)" } else { "" }
         );

@@ -13,8 +13,8 @@
 //! #    --configs nano,small,medium,big100m)
 //! ```
 
-use soap_lab::coordinator::{Checkpoint, Trainer, TrainerConfig};
-use soap_lab::optim::{Hyper, OptKind, Schedule};
+use soap_lab::optim::{OptKind, Schedule};
+use soap_lab::session::{Backend, ModelSpec, TrainSession};
 use soap_lab::util::bench::Report;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -34,52 +34,45 @@ fn main() -> anyhow::Result<()> {
     let mut summary = Vec::new();
 
     for (opt, lr) in [(OptKind::AdamW, 3.16e-3f32), (OptKind::Soap, 1e-2)] {
-        let cfg = TrainerConfig {
-            opt,
-            hyper: Hyper::default(),
-            schedule: Schedule::paper(lr, steps / 5, steps),
-            steps,
-            seed: 0,
-            grad_accum: 1,
-            workers: 4,
-            log_every: 25,
-            ..TrainerConfig::default()
-        };
-        let mut trainer = if pjrt_opt && opt == OptKind::Soap {
-            Trainer::new_pjrt_full(&model, cfg, "artifacts")?
-        } else {
-            Trainer::new_pjrt(&model, cfg, "artifacts")?
-        };
+        let backend =
+            if pjrt_opt && opt == OptKind::Soap { Backend::Pjrt } else { Backend::Sharded };
+        let mut session = TrainSession::builder()
+            .model(ModelSpec::artifact(&model))
+            .optimizer(opt)
+            .schedule(Schedule::paper(lr, steps / 5, steps))
+            .steps(steps)
+            .backend(backend)
+            .log_every(25)
+            .build()?;
         println!(
             "\n=== {} on {model}: {} params, floor {:.3} nats ===",
-            trainer.opt_label(),
-            trainer.params.iter().map(|p| p.numel()).sum::<usize>(),
-            trainer.entropy_floor()
+            session.opt_label(),
+            session.params.iter().map(|p| p.numel()).sum::<usize>(),
+            session.entropy_floor()
         );
         let t0 = std::time::Instant::now();
-        let log = trainer.run()?;
+        let log = session.run()?;
         let wall = t0.elapsed().as_secs_f64();
-        let eval = trainer.eval_loss(4)?;
+        let eval = session.eval_loss(4)?;
 
         println!(
             "{}: train tail {:.4} | eval {:.4} | {:.0} tok/s | {:.1}% optimizer overhead | {:.1}s wall",
-            trainer.opt_label(),
+            session.opt_label(),
             log.tail_loss(20),
             eval,
             log.tokens_per_second(),
             100.0 * log.optimizer_overhead_frac(),
             wall
         );
-        summary.push((trainer.opt_label(), log.tail_loss(20), eval, log.tokens_per_second()));
-        report.add_series(&trainer.opt_label(), log.loss_series());
+        summary.push((session.opt_label(), log.tail_loss(20), eval, log.tokens_per_second()));
+        report.add_series(&session.opt_label(), log.loss_series());
 
-        // Persist the SOAP run for resumption demos.
-        if opt == OptKind::Soap {
-            let state = trainer.native_optimizer().map(|o| o.export_state()).unwrap_or_default();
+        // Persist the SOAP run for resumption demos (native backends only —
+        // the pjrt executor has no checkpoint support).
+        if opt == OptKind::Soap && backend != Backend::Pjrt {
             let path = format!("bench_results/e2e_{model}.ckpt");
             std::fs::create_dir_all("bench_results").ok();
-            Checkpoint { step: trainer.step, params: trainer.params.clone(), opt_state: state }
-                .save(&path)?;
+            session.save_checkpoint(&path)?;
             println!("checkpoint → {path}");
         }
     }

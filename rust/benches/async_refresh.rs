@@ -16,10 +16,10 @@
 //! cargo bench --bench async_refresh -- basis=eigen:one-sided,inner=adafactor
 //! ```
 
-use soap_lab::coordinator::{Trainer, TrainerConfig, TrainLog};
+use soap_lab::coordinator::TrainLog;
 use soap_lab::experiments::harness::bench_steps;
-use soap_lab::model::NplmConfig;
 use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use soap_lab::session::{ModelSpec, TrainSession};
 use soap_lab::util::bench::{fmt_duration, Report};
 use soap_lab::util::json::Json;
 
@@ -30,29 +30,22 @@ struct Arm {
 }
 
 fn run(opt: OptKind, mode: RefreshMode, steps: u64, freq: u64) -> Arm {
-    let hyper = Hyper { precond_freq: freq, ..Hyper::default() }.with_refresh_mode(mode);
-    let cfg = TrainerConfig {
-        opt,
-        hyper,
-        schedule: Schedule::Constant { lr: 0.01 },
-        steps,
-        seed: 7,
-        grad_accum: 1,
-        workers: 4,
-        log_every: 0,
-        vocab: 128,
-        zipf_alpha: 1.2,
-    };
-    // Large-ish NPLM so the refresh actually costs something: layer shapes
-    // (128×48), (192×96), (96×128) ⇒ eigenbases up to 192×192.
-    let nplm = NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 };
-    let mut trainer = Trainer::new_native(nplm, cfg, 32, 16);
-    let log = trainer.run().expect("bench run");
-    if let Some(opt) = trainer.native_optimizer() {
-        opt.wait_refresh_idle();
-    }
+    // The `nplm` preset is large-ish so the refresh actually costs
+    // something: layer shapes (128×48), (192×96), (96×128) ⇒ eigenbases up
+    // to 192×192.
+    let mut session = TrainSession::builder()
+        .model(ModelSpec::parse("nplm").expect("builtin model"))
+        .optimizer(opt)
+        .hyper(Hyper { precond_freq: freq, ..Hyper::default() }.with_refresh_mode(mode))
+        .schedule(Schedule::Constant { lr: 0.01 })
+        .steps(steps)
+        .seed(7)
+        .build()
+        .expect("bench session");
+    let log = session.run().expect("bench run");
+    session.wait_refresh_idle();
     Arm {
-        bg_secs: trainer.async_refresh_seconds(),
+        bg_secs: session.async_refresh_seconds(),
         staleness: log.mean_staleness(),
         log,
     }

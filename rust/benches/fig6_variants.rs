@@ -38,15 +38,10 @@ fn main() {
     for (name, opt, hyper) in cases {
         let spec = RunSpec::new(&model, opt, steps).with_hyper(hyper);
         let (log, secs) = spec.run().expect("run");
-        // Rebuild a trainer just for the state-bytes accounting.
-        let mut t = soap_lab::coordinator::Trainer::new_pjrt(
-            &model,
-            spec.trainer_config(),
-            "artifacts",
-        )
-        .unwrap();
-        let _ = t.train_step();
-        let state_mb = t.state_bytes() as f64 / 1e6;
+        // A fresh one-step session for the state-bytes accounting.
+        let mut probe = spec.build_session().expect("probe session");
+        let _ = probe.step();
+        let state_mb = probe.state_bytes() as f64 / 1e6;
         println!(
             "{name:<30} tail loss {:.4}  {:.2}s/step  optimizer state {:.2} MB",
             log.tail_loss(20),

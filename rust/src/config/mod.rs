@@ -1,6 +1,6 @@
-//! Experiment/run configuration: a typed layer over the CLI (and the INI-ish
-//! config files the launcher accepts), translating user intent into
-//! `TrainerConfig` + model/artifact choices.
+//! Experiment/run configuration: a typed layer over the CLI (and the
+//! `key=value` config files the launcher accepts), translating user intent
+//! into a `session::SessionBuilder` + model/artifact choices.
 
 pub mod run;
 

@@ -1,19 +1,62 @@
-//! Run configuration: the launcher surface. Parses CLI options / key=value
-//! config files into a validated run description, and owns the
-//! paper-default hyperparameter policy (Appendix A).
+//! Run configuration: the launcher surface. Parses CLI options and
+//! `key=value` config files into a validated run description, owns the
+//! paper-default hyperparameter policy (Appendix A), and maps onto the
+//! typed [`SessionBuilder`] — the one seam where the whole configuration is
+//! validated.
+//!
+//! Precedence is defaults < `--config` file < explicit CLI arguments.
+//! `--dump-config` emits the CONFIGURATION subset of the key set
+//! [`RunConfig::apply_kv`] accepts — run actions (`save`/`resume`) and the
+//! legacy flag aliases (`refresh-eigh`/`async-refresh`/`pjrt-optimizer`,
+//! already folded into their named forms) are intentionally not dumped —
+//! and that subset round-trips losslessly (identical [`Hyper`], identical
+//! session).
 
 use crate::coordinator::TrainerConfig;
 use crate::optim::{Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
+use crate::session::{Backend, ModelSpec, SessionBuilder, TrainSession};
 use crate::util::cli::Args;
 
 /// The learning-rate sweep grid of Appendix A: {.1, .0316, .01, …, 3.16e-4}.
 pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
+
+/// Config keys carrying a value, shared between the CLI option set and the
+/// `--config` file format (embedded in unknown-key errors).
+pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, seed, \
+precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
+artifacts, log-every, save, resume, one-sided, factorized, refresh-eigh, \
+async-refresh, pjrt-optimizer";
+
+const VALUE_KEYS: [&str; 17] = [
+    "model",
+    "optimizer",
+    "backend",
+    "lr",
+    "steps",
+    "warmup",
+    "seed",
+    "precond-freq",
+    "grad-accum",
+    "workers",
+    "refresh-workers",
+    "refresh-method",
+    "refresh-mode",
+    "artifacts",
+    "log-every",
+    "save",
+    "resume",
+];
+
+const FLAG_KEYS: [&str; 5] =
+    ["one-sided", "factorized", "refresh-eigh", "async-refresh", "pjrt-optimizer"];
 
 /// A fully-resolved run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub model: String,
     pub optimizer: OptKind,
+    /// Optimizer executor: serial | sharded | pjrt.
+    pub backend: Backend,
     pub lr: f32,
     pub steps: u64,
     pub warmup: u64,
@@ -29,9 +72,12 @@ pub struct RunConfig {
     pub async_refresh: bool,
     /// Worker threads for the async refresh service.
     pub refresh_workers: usize,
-    pub pjrt_optimizer: bool,
     pub artifacts_dir: String,
     pub log_every: u64,
+    /// Resume from this checkpoint at build time (empty = fresh run).
+    pub resume: Option<String>,
+    /// Write a checkpoint here after the run (empty = none).
+    pub save: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -39,6 +85,7 @@ impl Default for RunConfig {
         Self {
             model: "nano".into(),
             optimizer: OptKind::Soap,
+            backend: Backend::Sharded,
             lr: 3e-3,
             steps: 200,
             warmup: 0,
@@ -51,84 +98,189 @@ impl Default for RunConfig {
             refresh_eigh: false,
             async_refresh: false,
             refresh_workers: 2,
-            pjrt_optimizer: false,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
+            resume: None,
+            save: None,
         }
     }
 }
 
+fn parse_bool(key: &str, v: &str) -> anyhow::Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => anyhow::bail!("{key}={v}: expected true/false"),
+    }
+}
+
 impl RunConfig {
-    /// Build from parsed CLI args (all options optional; see `main.rs` for
-    /// the declared option set).
+    /// Apply one `key=value` setting (the shared vocabulary of the CLI
+    /// options and the `--config` file). Unknown keys error and enumerate
+    /// the valid set.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        fn num<T: std::str::FromStr>(key: &str, v: &str) -> anyhow::Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>().map_err(|e| anyhow::anyhow!("{key}={v}: {e}"))
+        }
+        match key {
+            "model" => self.model = value.to_string(),
+            "optimizer" => self.optimizer = OptKind::parse(value)?,
+            "backend" => self.backend = Backend::parse(value)?,
+            "lr" => self.lr = num(key, value)?,
+            "steps" => self.steps = num(key, value)?,
+            "warmup" => self.warmup = num(key, value)?,
+            "seed" => self.seed = num(key, value)?,
+            "precond-freq" => self.precond_freq = num(key, value)?,
+            "grad-accum" => self.grad_accum = num(key, value)?,
+            "workers" => self.workers = num(key, value)?,
+            "refresh-workers" => self.refresh_workers = num(key, value)?,
+            "refresh-method" => {
+                self.refresh_eigh = RefreshMethod::parse(value)? == RefreshMethod::Eigh;
+            }
+            "refresh-mode" => {
+                self.async_refresh = RefreshMode::parse(value)? == RefreshMode::Async;
+            }
+            "artifacts" => self.artifacts_dir = value.to_string(),
+            "log-every" => self.log_every = num(key, value)?,
+            "save" => self.save = (!value.is_empty()).then(|| value.to_string()),
+            "resume" => self.resume = (!value.is_empty()).then(|| value.to_string()),
+            "one-sided" => self.one_sided = parse_bool(key, value)?,
+            "factorized" => self.factorized = parse_bool(key, value)?,
+            "refresh-eigh" => self.refresh_eigh = parse_bool(key, value)?,
+            "async-refresh" => self.async_refresh = parse_bool(key, value)?,
+            "pjrt-optimizer" => {
+                if parse_bool(key, value)? {
+                    self.backend = Backend::Pjrt;
+                }
+            }
+            other => anyhow::bail!("unknown config key '{other}': expected one of {CONFIG_KEYS}"),
+        }
+        Ok(())
+    }
+
+    /// Apply a `--config` file body: one `key=value` per line, `#` comments
+    /// and blank lines ignored. Errors carry the line number.
+    pub fn apply_kv_text(&mut self, text: &str) -> anyhow::Result<()> {
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("config line {}: '{line}' is not key=value", lineno + 1)
+            })?;
+            self.apply_kv(k.trim(), v.trim())
+                .map_err(|e| anyhow::anyhow!("config line {}: {e:#}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Serialize the resolved CONFIGURATION as a `--config`-loadable file.
+    /// Round-trip guarantee: `RunConfig::default().apply_kv_text(&rc.dump())`
+    /// reproduces `rc`'s configuration (same [`Hyper`], same session),
+    /// covered by tests. Run actions (`save`/`resume`) are deliberately not
+    /// dumped — pass them per invocation.
+    pub fn dump(&self) -> String {
+        let mut s = String::from(
+            "# soap-lab run config — load with `soap-lab train --config <file>`;\n\
+             # explicit CLI arguments override these values.\n",
+        );
+        s.push_str(&format!("model={}\n", self.model));
+        s.push_str(&format!("optimizer={}\n", self.optimizer.spec_string()));
+        s.push_str(&format!("backend={}\n", self.backend.name()));
+        s.push_str(&format!("lr={}\n", self.lr));
+        s.push_str(&format!("steps={}\n", self.steps));
+        s.push_str(&format!("warmup={}\n", self.warmup));
+        s.push_str(&format!("seed={}\n", self.seed));
+        s.push_str(&format!("precond-freq={}\n", self.precond_freq));
+        s.push_str(&format!("grad-accum={}\n", self.grad_accum));
+        s.push_str(&format!("workers={}\n", self.workers));
+        s.push_str(&format!("refresh-workers={}\n", self.refresh_workers));
+        s.push_str(&format!(
+            "refresh-method={}\n",
+            if self.refresh_eigh { RefreshMethod::Eigh } else { RefreshMethod::QrPowerIteration }
+                .name()
+        ));
+        s.push_str(&format!(
+            "refresh-mode={}\n",
+            if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline }.name()
+        ));
+        s.push_str(&format!("one-sided={}\n", self.one_sided));
+        s.push_str(&format!("factorized={}\n", self.factorized));
+        s.push_str(&format!("artifacts={}\n", self.artifacts_dir));
+        s.push_str(&format!("log-every={}\n", self.log_every));
+        s
+    }
+
+    /// Build from parsed CLI args, with `--config` layering: CLI-declared
+    /// defaults < config file < explicitly typed CLI arguments.
     pub fn from_args(args: &Args) -> anyhow::Result<Self> {
+        // A named option that contradicts its legacy flag is rejected rather
+        // than silently resolved (unchanged policy).
+        if args.flag("refresh-eigh") {
+            if let Some(s) = args.get("refresh-method").filter(|s| !s.is_empty()) {
+                let method = RefreshMethod::parse(s)?;
+                anyhow::ensure!(
+                    method == RefreshMethod::Eigh,
+                    "--refresh-method {} contradicts --refresh-eigh",
+                    method.name()
+                );
+            }
+        }
+        if args.flag("async-refresh") {
+            if let Some(s) = args.get("refresh-mode").filter(|s| !s.is_empty()) {
+                let mode = RefreshMode::parse(s)?;
+                anyhow::ensure!(
+                    mode == RefreshMode::Async,
+                    "--refresh-mode {} contradicts --async-refresh",
+                    mode.name()
+                );
+            }
+        }
+        if args.flag("pjrt-optimizer") && args.is_explicit("backend") {
+            if let Some(s) = args.get("backend") {
+                anyhow::ensure!(
+                    Backend::parse(s)? == Backend::Pjrt,
+                    "--backend {s} contradicts --pjrt-optimizer"
+                );
+            }
+        }
+
         let mut rc = RunConfig::default();
-        if let Some(m) = args.get("model") {
-            rc.model = m.to_string();
+        // Pass 1: CLI-declared defaults (option present but not typed).
+        for key in VALUE_KEYS {
+            if !args.is_explicit(key) {
+                if let Some(v) = args.get(key).filter(|s| !s.is_empty()) {
+                    rc.apply_kv(key, v)?;
+                }
+            }
         }
-        if let Some(o) = args.get("optimizer") {
-            rc.optimizer = OptKind::parse(o)?;
+        // Pass 2: config file.
+        if let Some(path) = args.get("config").filter(|s| !s.is_empty()) {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e}"))?;
+            rc.apply_kv_text(&text)
+                .map_err(|e| anyhow::anyhow!("--config {path}: {e:#}"))?;
         }
-        if args.get("lr").is_some() {
-            rc.lr = args.parse("lr")?;
+        // Pass 3: explicitly typed CLI options and flags have the last word.
+        for key in VALUE_KEYS {
+            if args.is_explicit(key) {
+                if let Some(v) = args.get(key).filter(|s| !s.is_empty()) {
+                    rc.apply_kv(key, v)?;
+                }
+            }
         }
-        if args.get("steps").is_some() {
-            rc.steps = args.parse("steps")?;
+        for key in FLAG_KEYS {
+            if args.flag(key) {
+                rc.apply_kv(key, "true")?;
+            }
         }
-        if args.get("warmup").is_some() {
-            rc.warmup = args.parse("warmup")?;
-        }
-        if args.get("seed").is_some() {
-            rc.seed = args.parse("seed")?;
-        }
-        if args.get("precond-freq").is_some() {
-            rc.precond_freq = args.parse("precond-freq")?;
-        }
-        if args.get("grad-accum").is_some() {
-            rc.grad_accum = args.parse("grad-accum")?;
-        }
-        if args.get("workers").is_some() {
-            rc.workers = args.parse("workers")?;
-        }
-        if args.get("refresh-workers").is_some() {
-            rc.refresh_workers = args.parse("refresh-workers")?;
-        }
-        // Named forms of the --refresh-eigh / --async-refresh flags; both
-        // parse paths enumerate their valid values on error, and a named
-        // option that contradicts its legacy flag is rejected rather than
-        // silently resolved.
-        rc.refresh_eigh = args.flag("refresh-eigh");
-        if let Some(s) = args.get("refresh-method").filter(|s| !s.is_empty()) {
-            let method = RefreshMethod::parse(s)?;
-            anyhow::ensure!(
-                !(rc.refresh_eigh && method != RefreshMethod::Eigh),
-                "--refresh-method {} contradicts --refresh-eigh",
-                method.name()
-            );
-            rc.refresh_eigh = method == RefreshMethod::Eigh;
-        }
-        rc.async_refresh = args.flag("async-refresh");
-        if let Some(s) = args.get("refresh-mode").filter(|s| !s.is_empty()) {
-            let mode = RefreshMode::parse(s)?;
-            anyhow::ensure!(
-                !(rc.async_refresh && mode != RefreshMode::Async),
-                "--refresh-mode {} contradicts --async-refresh",
-                mode.name()
-            );
-            rc.async_refresh = mode == RefreshMode::Async;
-        }
-        if let Some(d) = args.get("artifacts") {
-            rc.artifacts_dir = d.to_string();
-        }
-        if args.get("log-every").is_some() {
-            rc.log_every = args.parse("log-every")?;
-        }
-        rc.one_sided = args.flag("one-sided");
-        rc.factorized = args.flag("factorized");
-        rc.pjrt_optimizer = args.flag("pjrt-optimizer");
-        // Same policy as the refresh options above: a composition spec that
-        // contradicts the legacy variant flags is an error, not a silent tie
-        // break.
+
+        // A composition spec that contradicts the legacy variant flags is an
+        // error, not a silent tie break.
         if let OptKind::Composed(spec) = &rc.optimizer {
             spec.check_flag_consistency(rc.one_sided, rc.factorized)?;
         }
@@ -136,35 +288,47 @@ impl RunConfig {
         Ok(rc)
     }
 
+    /// Validate the whole configuration: the CLI-level range checks here,
+    /// everything structural through the [`SessionBuilder`] seam (one set
+    /// of rules for the CLI and the API). Pure — touches no files.
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.steps > 0, "steps must be > 0");
-        anyhow::ensure!(self.precond_freq > 0, "precond-freq must be > 0");
-        anyhow::ensure!(self.grad_accum >= 1, "grad-accum must be ≥ 1");
-        anyhow::ensure!(self.refresh_workers >= 1, "refresh-workers must be ≥ 1");
-        anyhow::ensure!(
-            !(self.async_refresh && self.pjrt_optimizer),
-            "--async-refresh applies to the native optimizer path (drop --pjrt-optimizer)"
-        );
         anyhow::ensure!(self.lr > 0.0 && self.lr < 1.0, "lr out of range (0, 1)");
         anyhow::ensure!(
             self.warmup < self.steps || self.warmup == 0,
             "warmup must be < steps"
         );
-        if self.pjrt_optimizer {
-            anyhow::ensure!(
-                matches!(self.optimizer.canonical(), OptKind::Soap | OptKind::AdamW),
-                "--pjrt-optimizer supports soap|adamw (or composition specs canonical to them)"
-            );
-            // The artifacts only implement the full-V Adam engine; reject
-            // factorized/adafactor-engine configs instead of silently
-            // running (and mislabeling) the wrong engine.
-            anyhow::ensure!(
-                !self.hyper().factorized,
-                "--pjrt-optimizer runs the full-V SOAP artifacts; the factorized \
-                 (adafactor-engine) variant is native-only"
-            );
+        // Fail at launch, not after the full run has trained: the pjrt
+        // executor has no checkpoint support, so a --save that can only
+        // error at the end is rejected here.
+        anyhow::ensure!(
+            !(self.backend == Backend::Pjrt && self.save.is_some()),
+            "--save requires a native backend (serial/sharded); the pjrt executor \
+             does not checkpoint"
+        );
+        self.session_builder()?.validate()
+    }
+
+    /// Map onto the typed builder — the single construction path `main.rs`,
+    /// benches, and tests share. `resume` is wired in; `save` stays a
+    /// launcher action (see `cmd_train`).
+    pub fn session_builder(&self) -> anyhow::Result<SessionBuilder> {
+        let spec = ModelSpec::parse(&self.model)?;
+        let mut b = TrainSession::builder()
+            .model(spec)
+            .artifacts_dir(&self.artifacts_dir)
+            .optimizer(self.optimizer)
+            .hyper(self.hyper())
+            .schedule(self.schedule())
+            .steps(self.steps)
+            .seed(self.seed)
+            .grad_accum(self.grad_accum)
+            .workers(self.workers)
+            .backend(self.backend)
+            .log_every(self.log_every);
+        if let Some(path) = &self.resume {
+            b = b.resume_from(path);
         }
-        Ok(())
+        Ok(b)
     }
 
     pub fn hyper(&self) -> Hyper {
@@ -194,6 +358,8 @@ impl RunConfig {
         }
     }
 
+    /// Legacy mapping onto the pre-redesign [`TrainerConfig`] — kept for the
+    /// integration tests that pin the session API to the old `Trainer`.
     pub fn trainer_config(&self) -> TrainerConfig {
         TrainerConfig {
             opt: self.optimizer,
@@ -227,8 +393,19 @@ mod tests {
         rc.lr = 2.0;
         assert!(rc.validate().is_err());
         let mut rc = RunConfig::default();
-        rc.pjrt_optimizer = true;
+        rc.backend = Backend::Pjrt;
         rc.optimizer = OptKind::Shampoo;
+        assert!(rc.validate().is_err());
+        // PJRT backend over a native model is structurally impossible.
+        let mut rc = RunConfig::default();
+        rc.backend = Backend::Pjrt;
+        rc.model = "nplm".into();
+        assert!(rc.validate().is_err());
+        // --save on the pjrt backend would only fail AFTER the run; reject
+        // at launch instead.
+        let mut rc = RunConfig::default();
+        rc.backend = Backend::Pjrt;
+        rc.save = Some("run.ckpt".into());
         assert!(rc.validate().is_err());
     }
 
@@ -279,7 +456,7 @@ mod tests {
         // Canonical-to-soap specs pass the PJRT gate; novel combos and
         // adafactor-engine configs (no PJRT artifacts) don't.
         let mut rc = RunConfig::default();
-        rc.pjrt_optimizer = true;
+        rc.backend = Backend::Pjrt;
         rc.optimizer = OptKind::parse("basis=eigen,inner=adam").unwrap();
         rc.validate().unwrap();
         rc.optimizer = OptKind::parse("basis=svd,inner=adafactor").unwrap();
@@ -300,7 +477,80 @@ mod tests {
         assert!(rc.validate().is_err());
         let mut rc = RunConfig::default();
         rc.async_refresh = true;
-        rc.pjrt_optimizer = true;
+        rc.backend = Backend::Pjrt;
         assert!(rc.validate().is_err());
+    }
+
+    #[test]
+    fn dump_load_roundtrips_identical_hyper() {
+        let mut rc = RunConfig::default();
+        rc.model = "nplm".into();
+        rc.optimizer = OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+        rc.backend = Backend::Serial;
+        rc.lr = 3.16e-3;
+        rc.steps = 123;
+        rc.warmup = 17;
+        rc.seed = 9;
+        rc.precond_freq = 25;
+        rc.grad_accum = 2;
+        rc.workers = 3;
+        rc.refresh_workers = 4;
+        rc.refresh_eigh = true;
+        rc.async_refresh = true;
+        rc.log_every = 5;
+        rc.validate().unwrap();
+
+        let mut back = RunConfig::default();
+        back.apply_kv_text(&rc.dump()).unwrap();
+        assert_eq!(back.model, rc.model);
+        assert_eq!(back.optimizer, rc.optimizer);
+        assert_eq!(back.backend, rc.backend);
+        assert_eq!(back.lr, rc.lr);
+        assert_eq!(back.steps, rc.steps);
+        assert_eq!(back.warmup, rc.warmup);
+        assert_eq!(back.seed, rc.seed);
+        assert_eq!(back.grad_accum, rc.grad_accum);
+        assert_eq!(back.workers, rc.workers);
+        assert_eq!(back.log_every, rc.log_every);
+        // The acceptance bar: the resolved Hyper is IDENTICAL.
+        let (ha, hb) = (rc.hyper(), back.hyper());
+        assert_eq!(format!("{ha:?}"), format!("{hb:?}"), "dump→load changed the Hyper");
+        assert!(matches!(back.schedule(), Schedule::WarmupCosine { .. }));
+    }
+
+    #[test]
+    fn kv_text_rejects_unknown_keys_and_bad_lines() {
+        let mut rc = RunConfig::default();
+        let e = rc.apply_kv_text("bogus-key=3\n").unwrap_err().to_string();
+        assert!(e.contains("bogus-key") && e.contains("model"), "{e}");
+        let e = rc.apply_kv_text("no equals sign\n").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        // Comments and blanks are fine.
+        rc.apply_kv_text("# comment\n\nsteps=50\n").unwrap();
+        assert_eq!(rc.steps, 50);
+    }
+
+    #[test]
+    fn pjrt_optimizer_key_maps_to_backend() {
+        let mut rc = RunConfig::default();
+        rc.apply_kv("pjrt-optimizer", "true").unwrap();
+        assert_eq!(rc.backend, Backend::Pjrt);
+        // false does NOT un-pick an explicit backend choice.
+        let mut rc = RunConfig::default();
+        rc.backend = Backend::Serial;
+        rc.apply_kv("pjrt-optimizer", "false").unwrap();
+        assert_eq!(rc.backend, Backend::Serial);
+    }
+
+    #[test]
+    fn session_builder_maps_config() {
+        let mut rc = RunConfig::default();
+        rc.model = "nplm-tiny".into();
+        rc.steps = 4;
+        rc.optimizer = OptKind::AdamW;
+        let mut session = rc.session_builder().unwrap().build().unwrap();
+        let log = session.run().unwrap();
+        assert_eq!(log.losses.len(), 4);
+        assert!(log.final_loss().is_finite());
     }
 }

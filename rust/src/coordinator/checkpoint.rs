@@ -1,28 +1,78 @@
 //! Checkpointing: binary save/restore of parameters + optimizer state +
-//! step counter, so long runs (Fig 5) survive interruption and runs can be
-//! forked (e.g. the shorter-LR-schedule runs of Fig 2 resume from a common
-//! prefix).
+//! step counter + data cursor, so long runs (Fig 5) survive interruption and
+//! runs can be forked (e.g. the shorter-LR-schedule runs of Fig 2 resume
+//! from a common prefix).
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian):
 //!   magic "SOAPCKPT" | version u32 | step u64
+//!   | data_batches u64 | has_seed u8 | seed u64
+//!   | stream_batch u32 | stream_seq u32
 //!   | n_params u32 | per param: rows u32, cols u32, f32 data
 //!   | n_state u32  | per layer: layer_idx u32, n_tensors u32,
 //!                    per tensor: rows u32, cols u32, f32 data
+//!   | end of file (strict — trailing bytes are rejected)
+//!
+//! v1 (legacy, before the data cursor) lacked the `data_batches`/seed/
+//! stream-geometry fields; such files still load, with `data_batches`
+//! defaulting to `step` (one batch per step — true for every writer this
+//! repo ever shipped), `seed` unknown, and the geometry unrecorded. Files
+//! with a version newer than [`VERSION`] are rejected with a clear error
+//! instead of being misparsed into garbage state, and truncated files name
+//! the field at which the data ran out.
 
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::linalg::Matrix;
 
 const MAGIC: &[u8; 8] = b"SOAPCKPT";
-const VERSION: u32 = 1;
+/// Newest checkpoint format this build reads and the one it writes.
+pub const VERSION: u32 = 2;
+
+/// Upper bounds used for strict field validation: a corrupt or foreign file
+/// should fail on a bound check, not attempt a multi-gigabyte allocation.
+const MAX_PARAMS: usize = 1 << 20;
+const MAX_TENSORS_PER_LAYER: usize = 1 << 12;
 
 pub struct Checkpoint {
     pub step: u64,
     pub params: Vec<Matrix>,
     pub opt_state: Vec<(usize, Vec<Matrix>)>,
+    /// Batches drawn from the training stream when the checkpoint was taken
+    /// — the data cursor a resumed run fast-forwards to. Equals `step` for
+    /// every current trainer (one batch per optimizer step) and for legacy
+    /// v1 files.
+    pub data_batches: u64,
+    /// Data/init seed of the run that wrote the checkpoint (`None` for
+    /// legacy v1 files). Resume paths use it to reject a mismatched seed
+    /// instead of silently training on a different data stream.
+    pub seed: Option<u64>,
+    /// Rows per stream batch (batch × grad-accum) when the checkpoint was
+    /// taken; 0 = unrecorded (legacy v1). The cursor counts batches of THIS
+    /// size, so resume paths reject a mismatched geometry (e.g. a changed
+    /// `--grad-accum`) instead of fast-forwarding to the wrong tokens.
+    pub stream_batch: u32,
+    /// Sequence length of the stream; 0 = unrecorded (legacy v1).
+    pub stream_seq: u32,
+}
+
+impl Checkpoint {
+    /// Convenience constructor for the common "cursor follows the step
+    /// counter" case (v1 semantics; the session layer fills the cursor,
+    /// seed, and stream geometry explicitly).
+    pub fn new(step: u64, params: Vec<Matrix>, opt_state: Vec<(usize, Vec<Matrix>)>) -> Self {
+        Self {
+            step,
+            params,
+            opt_state,
+            data_batches: step,
+            seed: None,
+            stream_batch: 0,
+            stream_seq: 0,
+        }
+    }
 }
 
 fn write_matrix(out: &mut Vec<u8>, m: &Matrix) {
@@ -33,27 +83,45 @@ fn write_matrix(out: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
+fn read_u8(r: &mut impl Read, what: &str) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).with_context(|| format!("checkpoint truncated at {what}"))?;
+    Ok(b[0])
+}
+
+fn read_u32(r: &mut impl Read, what: &str) -> Result<u32> {
     let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
+    r.read_exact(&mut b).with_context(|| format!("checkpoint truncated at {what}"))?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
+fn read_u64(r: &mut impl Read, what: &str) -> Result<u64> {
     let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
+    r.read_exact(&mut b).with_context(|| format!("checkpoint truncated at {what}"))?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_matrix(r: &mut impl Read) -> Result<Matrix> {
-    let rows = read_u32(r)? as usize;
-    let cols = read_u32(r)? as usize;
-    anyhow::ensure!(rows.saturating_mul(cols) < (1 << 31), "matrix too large");
-    let mut data = vec![0f32; rows * cols];
-    let mut buf = vec![0u8; rows * cols * 4];
-    r.read_exact(&mut buf)?;
-    for (i, c) in buf.chunks_exact(4).enumerate() {
-        data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+fn read_matrix(r: &mut &[u8], what: &str) -> Result<Matrix> {
+    let rows = read_u32(r, what)? as usize;
+    let cols = read_u32(r, what)? as usize;
+    anyhow::ensure!(
+        rows.saturating_mul(cols) < (1 << 31),
+        "checkpoint {what}: matrix {rows}×{cols} too large"
+    );
+    // Bound-check against the REMAINING bytes before allocating, so a
+    // corrupt dimension header fails cleanly instead of attempting a
+    // multi-gigabyte allocation and only then discovering the truncation.
+    let nbytes = rows * cols * 4;
+    anyhow::ensure!(
+        r.len() >= nbytes,
+        "checkpoint truncated inside {what} ({rows}×{cols}: need {nbytes} bytes, {} left)",
+        r.len()
+    );
+    let (payload, rest) = r.split_at(nbytes);
+    *r = rest;
+    let mut data = Vec::with_capacity(rows * cols);
+    for c in payload.chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
     }
     Ok(Matrix::from_vec(rows, cols, data))
 }
@@ -64,6 +132,11 @@ impl Checkpoint {
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.data_batches.to_le_bytes());
+        out.push(self.seed.is_some() as u8);
+        out.extend_from_slice(&self.seed.unwrap_or(0).to_le_bytes());
+        out.extend_from_slice(&self.stream_batch.to_le_bytes());
+        out.extend_from_slice(&self.stream_seq.to_le_bytes());
         out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
         for p in &self.params {
             write_matrix(&mut out, p);
@@ -88,28 +161,55 @@ impl Checkpoint {
             .map_err(|e| anyhow!("checkpoint {:?}: {e}", path.as_ref()))?;
         let mut r = data.as_slice();
         let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
+        r.read_exact(&mut magic).context("checkpoint truncated at magic")?;
         anyhow::ensure!(&magic == MAGIC, "not a soap-lab checkpoint");
-        let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
-        let step = read_u64(&mut r)?;
-        let n_params = read_u32(&mut r)? as usize;
+        let version = read_u32(&mut r, "version")?;
+        anyhow::ensure!(
+            (1..=VERSION).contains(&version),
+            "checkpoint version {version} is newer than this build supports (≤ {VERSION}); \
+             refusing to misparse it"
+        );
+        let step = read_u64(&mut r, "step")?;
+        let (data_batches, seed, stream_batch, stream_seq) = if version >= 2 {
+            let cursor = read_u64(&mut r, "data cursor")?;
+            let has_seed = read_u8(&mut r, "seed flag")?;
+            anyhow::ensure!(has_seed <= 1, "checkpoint seed flag malformed ({has_seed})");
+            let seed = read_u64(&mut r, "seed")?;
+            let stream_batch = read_u32(&mut r, "stream batch")?;
+            let stream_seq = read_u32(&mut r, "stream seq")?;
+            (cursor, (has_seed == 1).then_some(seed), stream_batch, stream_seq)
+        } else {
+            // Legacy v1: one batch per step, seed + geometry unrecorded.
+            (step, None, 0, 0)
+        };
+        let n_params = read_u32(&mut r, "param count")? as usize;
+        anyhow::ensure!(n_params <= MAX_PARAMS, "checkpoint param count {n_params} implausible");
         let mut params = Vec::with_capacity(n_params);
-        for _ in 0..n_params {
-            params.push(read_matrix(&mut r)?);
+        for i in 0..n_params {
+            params.push(read_matrix(&mut r, &format!("param {i}"))?);
         }
-        let n_state = read_u32(&mut r)? as usize;
+        let n_state = read_u32(&mut r, "state row count")? as usize;
+        anyhow::ensure!(n_state <= MAX_PARAMS, "checkpoint state count {n_state} implausible");
         let mut opt_state = Vec::with_capacity(n_state);
-        for _ in 0..n_state {
-            let idx = read_u32(&mut r)? as usize;
-            let n_tensors = read_u32(&mut r)? as usize;
+        for row in 0..n_state {
+            let idx = read_u32(&mut r, &format!("state row {row} layer index"))? as usize;
+            let n_tensors = read_u32(&mut r, &format!("state row {row} tensor count"))? as usize;
+            anyhow::ensure!(
+                n_tensors <= MAX_TENSORS_PER_LAYER,
+                "checkpoint state row {row}: tensor count {n_tensors} implausible"
+            );
             let mut tensors = Vec::with_capacity(n_tensors);
-            for _ in 0..n_tensors {
-                tensors.push(read_matrix(&mut r)?);
+            for t in 0..n_tensors {
+                tensors.push(read_matrix(&mut r, &format!("state row {row} tensor {t}"))?);
             }
             opt_state.push((idx, tensors));
         }
-        Ok(Self { step, params, opt_state })
+        anyhow::ensure!(
+            r.is_empty(),
+            "checkpoint carries {} unexpected trailing bytes (truncated rewrite or foreign data)",
+            r.len()
+        );
+        Ok(Self { step, params, opt_state, data_batches, seed, stream_batch, stream_seq })
     }
 }
 
@@ -122,22 +222,33 @@ mod tests {
         std::env::temp_dir().join(format!("soap_ckpt_test_{name}_{}", std::process::id()))
     }
 
-    #[test]
-    fn roundtrip() {
+    fn sample() -> Checkpoint {
         let mut rng = Rng::new(1);
-        let ck = Checkpoint {
+        Checkpoint {
             step: 42,
             params: vec![Matrix::randn(&mut rng, 3, 4, 1.0), Matrix::randn(&mut rng, 1, 7, 1.0)],
             opt_state: vec![
                 (0, vec![Matrix::randn(&mut rng, 3, 4, 1.0)]),
                 (1, vec![Matrix::randn(&mut rng, 1, 7, 1.0), Matrix::eye(7)]),
             ],
-        };
+            data_batches: 42,
+            seed: Some(7),
+            stream_batch: 16,
+            stream_seq: 32,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample();
         let path = tmpfile("roundtrip");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(back.step, 42);
+        assert_eq!(back.data_batches, 42);
+        assert_eq!(back.seed, Some(7));
+        assert_eq!((back.stream_batch, back.stream_seq), (16, 32));
         assert_eq!(back.params.len(), 2);
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(7).data);
@@ -154,5 +265,110 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(Checkpoint::load("/nonexistent/soap.ckpt").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_with_field_context() {
+        let ck = sample();
+        let path = tmpfile("full");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // Chop at several depths; every prefix must error (never garbage
+        // state), and mid-tensor cuts must say so.
+        for cut in [4usize, 11, 20, 40, bytes.len() - 3] {
+            let path = tmpfile("trunc");
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err();
+            std::fs::remove_file(&path).ok();
+            assert!(
+                format!("{err:#}").contains("truncated"),
+                "cut at {cut}: error should mention truncation: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_dims_fail_before_allocating() {
+        // A foreign/corrupt matrix header must hit the remaining-bytes
+        // bound check, not attempt a multi-gigabyte allocation.
+        let ck = sample();
+        let path = tmpfile("hugedims");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Param 0 header sits right after the fixed v2 prefix:
+        // magic(8)+version(4)+step(8)+cursor(8)+flag(1)+seed(8)+geom(8)+n(4).
+        let hdr = 8 + 4 + 8 + 8 + 1 + 8 + 8 + 4;
+        bytes[hdr..hdr + 4].copy_from_slice(&46_000u32.to_le_bytes());
+        bytes[hdr + 4..hdr + 8].copy_from_slice(&46_000u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(format!("{err:#}").contains("truncated inside param 0"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let ck = sample();
+        let path = tmpfile("trailing");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_future_version_with_clear_error() {
+        let ck = sample();
+        let path = tmpfile("future");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version 99") && msg.contains("newer"), "{msg}");
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // Hand-write a v1 file: no data cursor / seed fields.
+        let ck = sample();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&ck.step.to_le_bytes());
+        out.extend_from_slice(&(ck.params.len() as u32).to_le_bytes());
+        for p in &ck.params {
+            write_matrix(&mut out, p);
+        }
+        out.extend_from_slice(&(ck.opt_state.len() as u32).to_le_bytes());
+        for (idx, tensors) in &ck.opt_state {
+            out.extend_from_slice(&(*idx as u32).to_le_bytes());
+            out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+            for t in tensors {
+                write_matrix(&mut out, t);
+            }
+        }
+        let path = tmpfile("v1");
+        std::fs::write(&path, &out).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.data_batches, 42, "v1 cursor defaults to step");
+        assert_eq!(back.seed, None);
+        assert_eq!((back.stream_batch, back.stream_seq), (0, 0), "v1 geometry unrecorded");
+        assert_eq!(back.params[0].data, ck.params[0].data);
+    }
+
+    #[test]
+    fn new_defaults_cursor_to_step() {
+        let ck = Checkpoint::new(9, Vec::new(), Vec::new());
+        assert_eq!(ck.data_batches, 9);
+        assert_eq!(ck.seed, None);
     }
 }

@@ -137,6 +137,17 @@ impl ShardedOptimizer {
         }
     }
 
+    /// Drain the refresh service and fold every published-but-unadopted
+    /// basis into its layer's state, so [`Self::export_state`] captures what
+    /// an uninterrupted run would use on its next step. Checkpointing calls
+    /// this; a no-op in Inline mode.
+    pub fn finish_pending(&mut self) {
+        self.wait_refresh_idle();
+        for slot in self.shards.iter_mut().flat_map(|s| s.iter_mut()) {
+            slot.opt.finish_pending();
+        }
+    }
+
     /// One sharded optimizer step: updates `params` in place given `grads`.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix], t: u64, lr: f32) {
         assert_eq!(params.len(), grads.len());

@@ -86,6 +86,11 @@ pub struct Trainer {
 impl Trainer {
     /// Build a trainer with PJRT gradients (`lm_grads_<model>`) and native
     /// sharded optimizer updates — the default configuration.
+    ///
+    /// **Deprecated** in favor of the session builder:
+    /// `TrainSession::builder().model(ModelSpec::artifact(name))…` — see
+    /// [`crate::session`]. Kept for the integration tests that pin the
+    /// session API bitwise to this path.
     pub fn new_pjrt(model_name: &str, cfg: TrainerConfig, artifacts_dir: &str) -> Result<Self> {
         let engine = Engine::load(artifacts_dir)?;
         let info = engine.manifest.config(model_name)?.clone();
@@ -115,6 +120,9 @@ impl Trainer {
 
     /// PJRT gradients AND PJRT optimizer updates (the full artifact hot
     /// path, SOAP through the Pallas kernels).
+    ///
+    /// **Deprecated** in favor of the session builder with
+    /// [`crate::session::Backend::Pjrt`] — see [`crate::session`].
     pub fn new_pjrt_full(model_name: &str, cfg: TrainerConfig, artifacts_dir: &str) -> Result<Self> {
         let mut t = Self::new_pjrt(model_name, cfg, artifacts_dir)?;
         let GradBackend::Pjrt { engine, .. } = &t.grad else { unreachable!() };
@@ -128,6 +136,10 @@ impl Trainer {
     }
 
     /// Native MLP gradients + native sharded optimizer — no artifacts needed.
+    ///
+    /// **Deprecated** in favor of the session builder:
+    /// `TrainSession::builder().model(ModelSpec::nplm(cfg, seq, batch))…` —
+    /// see [`crate::session`].
     pub fn new_native(nplm: NplmConfig, mut cfg: TrainerConfig, seq: usize, batch: usize) -> Self {
         cfg.vocab = nplm.vocab;
         let mut rng = Rng::new(cfg.seed);

@@ -1,9 +1,12 @@
-//! Shared harness for the figure-regeneration benches: builds trainers with
-//! the paper's per-optimizer tuned defaults, runs them, and returns
-//! [`TrainLog`]s. Keeps each `benches/fig*.rs` thin and consistent.
+//! Shared harness for the figure-regeneration benches: maps the paper's
+//! per-optimizer tuned defaults onto the [`crate::session`] builder, runs
+//! the session, and returns [`TrainLog`]s. Keeps each `benches/fig*.rs`
+//! thin and consistent — every figure bench rides the same construction
+//! path as `main.rs`.
 
-use crate::coordinator::{Trainer, TrainerConfig, TrainLog};
+use crate::coordinator::TrainLog;
 use crate::optim::{Hyper, OptKind, Schedule};
+use crate::session::{ModelSpec, SessionBuilder, TrainSession};
 
 /// Tuned peak LRs on the scaled testbed (selected by an Appendix-A-style
 /// sweep over {.1, .0316, …, 3.16e-4} on the nano config; see
@@ -89,30 +92,40 @@ impl RunSpec {
         self
     }
 
-    pub fn trainer_config(&self) -> TrainerConfig {
+    /// Map onto the session builder — the same construction path `main.rs`
+    /// uses, so a bench run and a CLI run of the same spec are identical.
+    /// Model names resolve like the CLI's `--model`: `nplm*` picks the
+    /// native presets (`SOAP_BENCH_MODEL=nplm` runs figure benches
+    /// artifact-free), anything else is an artifact manifest config.
+    /// Errors on `nplm`-prefixed typos, same as the CLI.
+    pub fn session(&self) -> anyhow::Result<SessionBuilder> {
         let lr = self.lr.unwrap_or_else(|| tuned_lr(self.opt));
-        TrainerConfig {
-            opt: self.opt,
-            hyper: self.hyper.clone(),
-            schedule: if self.constant_lr {
+        Ok(TrainSession::builder()
+            .model(ModelSpec::parse(&self.model)?)
+            .optimizer(self.opt)
+            .hyper(self.hyper.clone())
+            .schedule(if self.constant_lr {
                 Schedule::Constant { lr }
             } else {
                 paper_schedule(lr, self.steps)
-            },
-            steps: self.steps,
-            seed: self.seed,
-            grad_accum: self.grad_accum,
-            workers: 4,
-            log_every: 0,
-            ..TrainerConfig::default()
-        }
+            })
+            .steps(self.steps)
+            .seed(self.seed)
+            .grad_accum(self.grad_accum)
+            .workers(4))
     }
 
-    /// Run through the PJRT transformer path. Returns the training log plus
-    /// mean seconds/step.
+    /// Build the session without running it — state/scratch accounting
+    /// probes (e.g. the Fig 6 memory table) use this.
+    pub fn build_session(&self) -> anyhow::Result<TrainSession> {
+        self.session()?.build()
+    }
+
+    /// Build and run the session. Returns the training log plus mean
+    /// seconds/step.
     pub fn run(&self) -> anyhow::Result<(TrainLog, f64)> {
-        let mut trainer = Trainer::new_pjrt(&self.model, self.trainer_config(), "artifacts")?;
-        let log = trainer.run()?;
+        let mut session = self.build_session()?;
+        let log = session.run()?;
         let secs = log.total_seconds() / log.timings.len().max(1) as f64;
         Ok((log, secs))
     }
@@ -142,9 +155,14 @@ mod tests {
     #[test]
     fn spec_builders() {
         let s = RunSpec::new("nano", OptKind::Soap, 100).with_freq(32).with_lr(0.01);
-        let tc = s.trainer_config();
-        assert_eq!(tc.hyper.precond_freq, 32);
-        assert_eq!(tc.steps, 100);
+        assert_eq!(s.hyper.precond_freq, 32);
+        assert_eq!(s.steps, 100);
+        // The builder mapping is structurally valid without artifacts on
+        // disk (engine load happens at build()).
+        s.session().unwrap().validate().unwrap();
+        // nplm-prefixed typos surface parse's clear error, as on the CLI.
+        let bad = RunSpec::new("nplm-huge", OptKind::Soap, 10);
+        assert!(bad.session().is_err());
     }
 
     #[test]

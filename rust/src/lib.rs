@@ -17,6 +17,20 @@
 //! `make artifacts` and executed from Rust via the PJRT CPU client
 //! ([`runtime`]).
 //!
+//! ## Training sessions
+//!
+//! Every entry point (CLI, benches, examples) constructs runs through the
+//! [`session`] layer: `TrainSession::builder()` takes a model spec, an
+//! optimizer preset/composition, a schedule, and a
+//! [`session::Backend`] (serial / sharded / PJRT), validates the whole
+//! configuration up front, and yields a session with a uniform lifecycle —
+//! `step()`/`run()`, typed [`session::MetricsSink`] streaming,
+//! `state_bytes`/`scratch_bytes`, and first-class checkpoint/resume that
+//! round-trips the step counter, data cursor, and drained async-refresh
+//! state (a resumed run is bitwise-identical to an uninterrupted one). See
+//! the [`session`] module docs for the builder example, the backend
+//! matrix, and the resume semantics.
+//!
 //! ## Refresh modes
 //!
 //! SOAP/Shampoo periodically recompute their preconditioner decompositions
@@ -49,4 +63,5 @@ pub mod model;
 pub mod optim;
 pub mod precond;
 pub mod runtime;
+pub mod session;
 pub mod util;

@@ -1,14 +1,17 @@
-//! `soap-lab` CLI — the launcher.
+//! `soap-lab` CLI — the launcher. Every command rides the typed
+//! `session::TrainSession` builder; `main.rs` only parses options and
+//! prints summaries.
 //!
 //! ```text
 //! soap-lab train      --model small --optimizer soap --lr 3.16e-3 …
+//! soap-lab train      --model nplm --backend serial --save run.ckpt
+//! soap-lab train      --config run.cfg --resume run.ckpt --steps 400
 //! soap-lab sweep-lr   --model nano  --optimizer soap --steps 150
 //! soap-lab inspect    --artifacts artifacts
 //! soap-lab corpus     --vocab 512
 //! ```
 
 use soap_lab::config::RunConfig;
-use soap_lab::coordinator::{Checkpoint, Trainer};
 use soap_lab::data::{CorpusSpec, SyntheticCorpus};
 use soap_lab::runtime::Engine;
 use soap_lab::util::cli::{App, Command};
@@ -16,16 +19,21 @@ use soap_lab::util::cli::{App, Command};
 fn app() -> App {
     App::new("soap-lab", "SOAP optimizer reproduction (rust + JAX + Pallas)")
         .command(
-            Command::new("train", "train a transformer LM via PJRT artifacts")
-                .opt("model", "nano", "model config from the artifact manifest")
+            Command::new("train", "train an LM through the session builder")
+                .opt(
+                    "model",
+                    "nano",
+                    "artifact manifest config, or a native model (nplm|nplm-tiny)",
+                )
                 .opt(
                     "optimizer",
                     "soap",
                     "adamw|adafactor|shampoo|soap|galore, or a composition \
                      basis=<identity|eigen[:one-sided|:two-sided]|svd>,inner=<adam|adafactor|shampoo>[,graft=<adam|none>]",
                 )
+                .opt("backend", "sharded", "optimizer executor: serial|sharded|pjrt")
                 .opt("lr", "0.00316", "peak learning rate")
-                .opt("steps", "200", "training steps")
+                .opt("steps", "200", "TOTAL training steps (a resumed run continues to this total)")
                 .opt("warmup", "0", "warmup steps (0 = constant LR)")
                 .opt("seed", "0", "data/init seed")
                 .opt("precond-freq", "10", "preconditioning frequency f")
@@ -36,18 +44,21 @@ fn app() -> App {
                 .opt("refresh-mode", "", "inline|async (named form of --async-refresh)")
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
+                .opt("config", "", "key=value config file (CLI args override it)")
                 .opt("save", "", "write a checkpoint here at the end")
-                .opt("resume", "", "resume from this checkpoint")
+                .opt("resume", "", "resume from this checkpoint (restores step + data cursor)")
+                .flag("dump-config", "print the resolved config as a loadable file and exit")
                 .flag("one-sided", "SOAP one-sided variant (§7.1)")
                 .flag("factorized", "SOAP factorized variant (§7.2.1)")
                 .flag("refresh-eigh", "use full eigh refresh (Fig 7 right)")
                 .flag("async-refresh", "run eigenbasis refreshes on the background service (off the hot path)")
-                .flag("pjrt-optimizer", "run optimizer updates through PJRT/Pallas artifacts"),
+                .flag("pjrt-optimizer", "legacy alias for --backend pjrt"),
         )
         .command(
             Command::new("sweep-lr", "learning-rate sweep (Appendix A grid)")
                 .opt("model", "nano", "model config")
                 .opt("optimizer", "soap", "optimizer")
+                .opt("backend", "sharded", "optimizer executor: serial|sharded|pjrt")
                 .opt("steps", "150", "steps per point")
                 .opt("seed", "0", "seed")
                 .opt("precond-freq", "10", "preconditioning frequency")
@@ -67,62 +78,58 @@ fn app() -> App {
 
 fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     let rc = RunConfig::from_args(args)?;
+    if args.flag("dump-config") {
+        print!("{}", rc.dump());
+        return Ok(());
+    }
     println!(
-        "train: model={} optimizer={} lr={} steps={} f={} accum={} refresh={}",
+        "train: model={} optimizer={} backend={} lr={} steps={} f={} accum={} refresh={}",
         rc.model,
         rc.optimizer.name(),
+        rc.backend.name(),
         rc.lr,
         rc.steps,
         rc.precond_freq,
         rc.grad_accum,
         if rc.async_refresh { "async" } else { "inline" }
     );
-    let mut trainer = if rc.pjrt_optimizer {
-        Trainer::new_pjrt_full(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?
-    } else {
-        Trainer::new_pjrt(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?
-    };
-
-    if let Some(path) = args.get("resume").filter(|s| !s.is_empty()) {
-        let ck = Checkpoint::load(path)?;
-        anyhow::ensure!(ck.params.len() == trainer.params.len(), "checkpoint shape mismatch");
-        trainer.params = ck.params;
-        trainer.step = ck.step;
-        if let Some(opt) = trainer.native_optimizer_mut() {
-            opt.import_state(ck.opt_state)?;
-        }
-        println!("resumed from {path} at step {}", ck.step);
+    // One seam: validation, artifact preflight, and checkpoint resume
+    // (params + optimizer state + schedule step + data cursor together)
+    // all happen inside build().
+    let mut session = rc.session_builder()?.build()?;
+    if let Some(path) = &rc.resume {
+        println!(
+            "resumed from {path} at step {} ({} steps remaining)",
+            session.current_step(),
+            session.total_steps() - session.current_step()
+        );
     }
 
-    let log = trainer.run()?;
+    let log = session.run()?;
     println!(
         "\nfinal loss {:.4} (tail {:.4})  entropy floor {:.4}",
         log.final_loss(),
         log.tail_loss(20),
-        trainer.entropy_floor()
+        session.entropy_floor()
     );
     println!(
-        "throughput {:.0} tok/s   optimizer overhead {:.1}%   state {} bytes",
+        "throughput {:.0} tok/s   optimizer overhead {:.1}%   state {} bytes   scratch {} bytes",
         log.tokens_per_second(),
         100.0 * log.optimizer_overhead_frac(),
-        trainer.state_bytes()
+        session.state_bytes(),
+        session.scratch_bytes()
     );
-    trainer.wait_refresh_idle(); // count refreshes still in flight at the end
+    session.wait_refresh_idle(); // count refreshes still in flight at the end
     println!(
         "refresh: hot-path {:.3}s  background {:.3}s  mean staleness {:.1} steps  p99 step {:.1}ms",
         log.refresh_seconds_total(),
-        trainer.async_refresh_seconds(),
+        session.async_refresh_seconds(),
         log.mean_staleness(),
         1e3 * log.step_time_quantile(0.99),
     );
 
-    if let Some(path) = args.get("save").filter(|s| !s.is_empty()) {
-        let opt_state = trainer
-            .native_optimizer()
-            .map(|o| o.export_state())
-            .unwrap_or_default();
-        Checkpoint { step: trainer.step, params: trainer.params.clone(), opt_state }
-            .save(path)?;
+    if let Some(path) = &rc.save {
+        session.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
     }
     Ok(())
@@ -134,8 +141,8 @@ fn cmd_sweep_lr(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     let mut best: Option<(f32, f32)> = None;
     for &lr in &soap_lab::config::DEFAULT_LRS {
         rc.lr = lr;
-        let mut trainer = Trainer::new_pjrt(&rc.model, rc.trainer_config(), &rc.artifacts_dir)?;
-        let log = trainer.run()?;
+        let mut session = rc.session_builder()?.build()?;
+        let log = session.run()?;
         let tail = log.tail_loss(20);
         println!("  lr {lr:>9.5}  tail loss {tail:.4}");
         if tail.is_finite() && best.map(|(_, b)| tail < b).unwrap_or(true) {

@@ -499,6 +499,10 @@ impl Basis for EigenBasis {
         true
     }
 
+    fn adopt_pending(&mut self) {
+        self.adopt_published();
+    }
+
     fn basis_snapshot_step(&self) -> Option<u64> {
         match self.flavor {
             EigenFlavor::Rotation => (self.initialized
@@ -539,18 +543,30 @@ impl Basis for EigenBasis {
                 }
                 BasisState { flags, tensors }
             }
-            EigenFlavor::InverseRoot => BasisState {
-                flags: vec![self.initialized as u8 as f32, self.basis_step as f32],
-                // Warm-start caches deliberately not serialized (same as the
-                // pre-refactor layout): the first refresh after a restore
-                // cold-starts its eigh.
-                tensors: vec![
+            EigenFlavor::InverseRoot => {
+                // Warm-start eigenvector caches ride along (has_vecs flag)
+                // so a restored run's next refresh warm-starts exactly like
+                // the uninterrupted run's — required for bitwise resume.
+                let has_vecs = self.l_vecs.is_some() && self.r_vecs.is_some();
+                let mut tensors = vec![
                     self.l.clone().unwrap(),
                     self.r.clone().unwrap(),
                     self.left_q.clone().unwrap(),
                     self.right_q.clone().unwrap(),
-                ],
-            },
+                ];
+                if has_vecs {
+                    tensors.push(self.l_vecs.clone().unwrap());
+                    tensors.push(self.r_vecs.clone().unwrap());
+                }
+                BasisState {
+                    flags: vec![
+                        self.initialized as u8 as f32,
+                        self.basis_step as f32,
+                        has_vecs as u8 as f32,
+                    ],
+                    tensors,
+                }
+            }
         }
     }
 
@@ -583,13 +599,22 @@ impl Basis for EigenBasis {
                 }
             }
             EigenFlavor::InverseRoot => {
-                anyhow::ensure!(flags.len() == 2, "inverse-root basis flags malformed");
+                anyhow::ensure!(flags.len() == 3, "inverse-root basis flags malformed");
                 self.initialized = flags[0] != 0.0;
                 self.basis_step = flags[1] as u64;
                 self.l = Some(next("l")?);
                 self.r = Some(next("r")?);
                 self.left_q = Some(next("l_inv")?);
                 self.right_q = Some(next("r_inv")?);
+                if flags[2] != 0.0 {
+                    self.l_vecs = Some(next("l_vecs")?);
+                    self.r_vecs = Some(next("r_vecs")?);
+                } else {
+                    // Legacy row without warm caches: the next refresh
+                    // cold-starts its eigh (pre-refactor behavior).
+                    self.l_vecs = None;
+                    self.r_vecs = None;
+                }
             }
         }
         Ok(())
@@ -772,6 +797,14 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.attach_async(service),
             AnyBasis::Eigen(b) => b.attach_async(service),
             AnyBasis::GradSvd(b) => b.attach_async(service),
+        }
+    }
+
+    fn adopt_pending(&mut self) {
+        match self {
+            AnyBasis::Identity(b) => b.adopt_pending(),
+            AnyBasis::Eigen(b) => b.adopt_pending(),
+            AnyBasis::GradSvd(b) => b.adopt_pending(),
         }
     }
 

@@ -141,6 +141,13 @@ pub trait Basis: Send {
         false
     }
 
+    /// Adopt any decomposition the background service has published but the
+    /// step loop has not picked up yet (adoption normally happens at the next
+    /// `begin_step`). Checkpointing calls this — after draining the service —
+    /// so `export` captures the same basis an uninterrupted run would use on
+    /// its next step. No-op for inline bases.
+    fn adopt_pending(&mut self) {}
+
     /// Step whose factor snapshots back the ACTIVE decomposition.
     fn basis_snapshot_step(&self) -> Option<u64> {
         None
@@ -369,8 +376,10 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
                 out.extend(es.second);
             }
             StateLayout::InverseRoot => {
-                // Pre-refactor Shampoo row: [flags(1×2), M, L, R, L_inv,
-                // R_inv, V_graft].
+                // Shampoo row: [flags(1×3), M, L, R, L_inv, R_inv,
+                // V_L?, V_R?, V_graft] with flags [init, basis_step,
+                // has_vecs]. Pre-refactor rows (flags 1×1 / 1×2, no
+                // warm-start eigenvector caches) still import.
                 out.push(Matrix::from_vec(1, bs.flags.len(), bs.flags.clone()));
                 out.push(es.momentum);
                 out.extend(bs.tensors);
@@ -438,13 +447,16 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
             StateLayout::InverseRoot => {
                 let flags =
                     it.next().ok_or_else(|| anyhow::anyhow!("state missing flags row"))?;
-                // cols == 1 accepts pre-basis_step checkpoints.
+                // cols == 1 accepts pre-basis_step checkpoints; cols == 2
+                // pre-warm-cache ones (their first refresh after a restore
+                // cold-starts its eigh, as pre-refactor).
                 anyhow::ensure!(
-                    flags.cols == 1 || flags.cols == 2,
+                    (1..=3).contains(&flags.cols),
                     "composed state flags malformed"
                 );
-                let basis_step = if flags.cols == 2 { flags.data[1] } else { 0.0 };
-                let bflags = [flags.data[0], basis_step];
+                let basis_step = if flags.cols >= 2 { flags.data[1] } else { 0.0 };
+                let has_vecs = if flags.cols >= 3 { flags.data[2] } else { 0.0 };
+                let bflags = [flags.data[0], basis_step, has_vecs];
                 let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
                 ensure_momentum_shape(self.engine.momentum(), &m)?;
                 self.basis.import(&bflags, &mut it)?;
@@ -476,6 +488,10 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
 
     fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
         self.basis.attach_async(service)
+    }
+
+    fn finish_pending(&mut self) {
+        self.basis.adopt_pending();
     }
 
     fn basis_snapshot_step(&self) -> Option<u64> {

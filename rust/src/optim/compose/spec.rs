@@ -198,6 +198,31 @@ impl CompositionSpec {
         }
     }
 
+    /// The grammar spelling of this spec — [`CompositionSpec::parse`] maps
+    /// it back to an equal value, so configs can be dumped and reloaded
+    /// losslessly (unlike [`CompositionSpec::label`], which is display-only).
+    pub fn spec_string(&self) -> String {
+        let basis = match self.basis {
+            BasisSpec::Identity => "identity",
+            BasisSpec::Eigen { sided: Sided::Inherit } => "eigen",
+            BasisSpec::Eigen { sided: Sided::OneSided } => "eigen:one-sided",
+            BasisSpec::Eigen { sided: Sided::TwoSided } => "eigen:two-sided",
+            BasisSpec::GradSvd => "svd",
+        };
+        let inner = match self.inner {
+            EngineSpec::Adam => "adam",
+            EngineSpec::Adafactor => "adafactor",
+            EngineSpec::InverseRoot => "shampoo",
+        };
+        let mut s = format!("basis={basis},inner={inner}");
+        match self.graft {
+            GraftSpec::Inherit => {}
+            GraftSpec::Adam => s.push_str(",graft=adam"),
+            GraftSpec::Off => s.push_str(",graft=none"),
+        }
+        s
+    }
+
     /// Stable display label: the preset name when canonical, a structural
     /// `basis+engine[+graft]` label otherwise.
     pub fn label(&self) -> &'static str {

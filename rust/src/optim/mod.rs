@@ -106,6 +106,14 @@ pub trait LayerOptimizer: Send {
         false
     }
 
+    /// Fold in any async-refresh result that has been published but not yet
+    /// adopted (adoption normally happens at the next `update`). The
+    /// checkpoint path calls this — after the refresh service is drained —
+    /// so `export_state` captures exactly the state an uninterrupted run
+    /// would use on its next step. Default no-op (inline optimizers have
+    /// nothing pending).
+    fn finish_pending(&mut self) {}
+
     /// Step at which the factor EMAs backing the *active* preconditioner
     /// were snapshotted — `t - basis_snapshot_step()` is the staleness the
     /// coordinator reports. `None` when the layer has no preconditioner
@@ -158,6 +166,17 @@ impl OptKind {
             OptKind::Soap => "soap",
             OptKind::Galore => "galore",
             OptKind::Composed(spec) => spec.label(),
+        }
+    }
+
+    /// A spelling that [`OptKind::parse`] maps back to this exact value —
+    /// preset name for presets, the full `basis=…,inner=…[,graft=…]` grammar
+    /// for composition specs. This is what `--dump-config` writes (labels
+    /// like `soap-factorized` are display-only and do not parse).
+    pub fn spec_string(&self) -> String {
+        match self {
+            OptKind::Composed(spec) => spec.spec_string(),
+            k => k.name().to_string(),
         }
     }
 

@@ -1,0 +1,442 @@
+//! Executor backends — the one seam behind which the serial / layer-sharded
+//! / PJRT optimizer branching lives. [`super::TrainSession`] drives a
+//! `Box<dyn ExecutorBackend>` and never matches on the execution strategy
+//! again (the pre-redesign code repeated that match across `Trainer`,
+//! `main.rs`, and every bench harness).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{PjrtOptimizer, ShardedOptimizer};
+use crate::linalg::Matrix;
+use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
+use crate::precond::RefreshService;
+use crate::runtime::Engine;
+
+/// Which optimizer executor a session runs updates on.
+///
+/// Serial and Sharded are bitwise-interchangeable (sharding is a pure
+/// execution strategy); Pjrt routes updates through the compiled
+/// Pallas/PJRT artifacts and requires an artifact model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-threaded native executor: every layer updated in order on the
+    /// caller's thread. Simplest, fully deterministic, no thread spawns.
+    Serial,
+    /// Layer-sharded native worker threads (cost-balanced static
+    /// assignment) — the default. Bitwise-identical to [`Backend::Serial`].
+    Sharded,
+    /// Per-layer PJRT artifacts (SOAP/AdamW through the L1 Pallas kernels).
+    Pjrt,
+}
+
+/// The backend names accepted by [`Backend::parse`], embedded in errors.
+pub const BACKEND_NAMES: &str = "serial, sharded, pjrt";
+
+impl Backend {
+    /// Parse a CLI/config token. Errors enumerate the valid values.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "serial" => Backend::Serial,
+            "sharded" | "native" => Backend::Sharded,
+            "pjrt" => Backend::Pjrt,
+            other => anyhow::bail!("unknown backend '{other}': expected one of {BACKEND_NAMES}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Serial => "serial",
+            Backend::Sharded => "sharded",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Uniform surface over the optimizer executors: one `step` entry point plus
+/// the accounting and checkpoint hooks the session lifecycle needs. The
+/// `engine` argument carries the PJRT runtime when the model is
+/// artifact-backed (`None` on native models); only [`PjrtExecutor`] uses it.
+pub trait ExecutorBackend {
+    /// Backend name for labels ("serial" / "sharded" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Apply one optimizer step in place. `t` is the 1-based global step.
+    fn step(
+        &mut self,
+        engine: Option<&Engine>,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()>;
+
+    /// Persistent optimizer-state bytes (paper §7.2 accounting).
+    fn state_bytes(&self) -> usize;
+
+    /// Workspace-arena bytes (the zero-allocation step path's grow-only
+    /// scratch; 0 for PJRT, whose scratch lives in the compiled artifact).
+    fn scratch_bytes(&self) -> usize {
+        0
+    }
+
+    /// Cumulative hot-path refresh seconds.
+    fn refresh_seconds(&self) -> f64;
+
+    /// Cumulative background (async-service) refresh seconds.
+    fn async_refresh_seconds(&self) -> f64 {
+        0.0
+    }
+
+    /// Mean basis staleness at step `t`, averaged over preconditioned layers.
+    fn mean_basis_staleness(&self, _t: u64) -> f64 {
+        0.0
+    }
+
+    /// Barrier: wait for in-flight background refreshes (no-op inline/PJRT).
+    fn wait_refresh_idle(&self) {}
+
+    /// Make the in-memory state checkpoint-complete: drain the refresh
+    /// service and adopt anything published-but-unadopted, so
+    /// [`Self::export_state`] captures exactly the state an uninterrupted
+    /// run would use on its next step. Default no-op.
+    fn prepare_export(&mut self) {}
+
+    /// Serialize per-layer optimizer state, layer-ordered. Errors on
+    /// backends that do not support checkpointing (PJRT).
+    fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>>;
+
+    /// Restore state produced by [`Self::export_state`].
+    fn import_state(&mut self, state: Vec<(usize, Vec<Matrix>)>) -> Result<()>;
+}
+
+/// Single-threaded native executor: the layers in order, on this thread.
+pub struct SerialExecutor {
+    slots: Vec<Box<dyn LayerOptimizer>>,
+    refresh_service: Option<Arc<RefreshService>>,
+}
+
+impl SerialExecutor {
+    pub fn new(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)]) -> Self {
+        let mut slots: Vec<Box<dyn LayerOptimizer>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(idx, &(m, n))| kind.build_staggered(idx, m, n, hyper))
+            .collect();
+        // Same service policy as ShardedOptimizer: spin one up only in
+        // Async mode and only if at least one layer has work to offload.
+        let refresh_service = (hyper.refresh_mode == RefreshMode::Async)
+            .then(|| Arc::new(RefreshService::new(hyper.refresh_workers)))
+            .filter(|svc| {
+                let mut any = false;
+                for slot in slots.iter_mut() {
+                    any |= slot.attach_async(svc);
+                }
+                any
+            });
+        Self { slots, refresh_service }
+    }
+}
+
+impl ExecutorBackend for SerialExecutor {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn step(
+        &mut self,
+        _engine: Option<&Engine>,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(params.len() == self.slots.len(), "layer count mismatch");
+        for ((slot, w), g) in self.slots.iter_mut().zip(params.iter_mut()).zip(grads) {
+            slot.update(w, g, t, lr);
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.scratch_bytes()).sum()
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.slots.iter().map(|s| s.refresh_seconds()).sum()
+    }
+
+    fn async_refresh_seconds(&self) -> f64 {
+        self.refresh_service.as_ref().map(|s| s.refresh_seconds()).unwrap_or(0.0)
+    }
+
+    fn mean_basis_staleness(&self, t: u64) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u32);
+        for slot in &self.slots {
+            if let Some(snap) = slot.basis_snapshot_step() {
+                sum += t.saturating_sub(snap) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    fn wait_refresh_idle(&self) {
+        if let Some(svc) = &self.refresh_service {
+            svc.wait_idle();
+        }
+    }
+
+    fn prepare_export(&mut self) {
+        self.wait_refresh_idle();
+        for slot in self.slots.iter_mut() {
+            slot.finish_pending();
+        }
+    }
+
+    fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>> {
+        Ok(self.slots.iter().enumerate().map(|(i, s)| (i, s.export_state())).collect())
+    }
+
+    fn import_state(&mut self, mut state: Vec<(usize, Vec<Matrix>)>) -> Result<()> {
+        state.sort_by_key(|&(i, _)| i);
+        for (idx, slot) in self.slots.iter_mut().enumerate() {
+            let pos = state
+                .binary_search_by_key(&idx, |&(i, _)| i)
+                .map_err(|_| anyhow!("missing state for layer {idx}"))?;
+            slot.import_state(std::mem::take(&mut state[pos].1))?;
+        }
+        Ok(())
+    }
+}
+
+/// Layer-sharded native executor (worker threads) — wraps the coordinator's
+/// [`ShardedOptimizer`] behind the backend seam.
+pub struct ShardedExecutor {
+    inner: ShardedOptimizer,
+}
+
+impl ShardedExecutor {
+    pub fn new(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)], workers: usize) -> Self {
+        Self { inner: ShardedOptimizer::new(kind, hyper, shapes, workers) }
+    }
+
+    /// The wrapped optimizer (coordinator-level tooling).
+    pub fn inner(&self) -> &ShardedOptimizer {
+        &self.inner
+    }
+}
+
+impl ExecutorBackend for ShardedExecutor {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn step(
+        &mut self,
+        _engine: Option<&Engine>,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        self.inner.step(params, grads, t, lr);
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.inner.scratch_bytes()
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.inner.refresh_seconds()
+    }
+
+    fn async_refresh_seconds(&self) -> f64 {
+        self.inner.async_refresh_seconds()
+    }
+
+    fn mean_basis_staleness(&self, t: u64) -> f64 {
+        self.inner.mean_basis_staleness(t)
+    }
+
+    fn wait_refresh_idle(&self) {
+        self.inner.wait_refresh_idle();
+    }
+
+    fn prepare_export(&mut self) {
+        self.inner.finish_pending();
+    }
+
+    fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>> {
+        Ok(self.inner.export_state())
+    }
+
+    fn import_state(&mut self, state: Vec<(usize, Vec<Matrix>)>) -> Result<()> {
+        self.inner.import_state(state)
+    }
+}
+
+/// PJRT executor — optimizer updates through the compiled artifacts. Needs
+/// the engine handed in at step time (the session owns it alongside the
+/// gradient artifacts).
+pub struct PjrtExecutor {
+    inner: PjrtOptimizer,
+}
+
+impl PjrtExecutor {
+    pub fn new(kind: OptKind, hyper: Hyper, shapes: &[(usize, usize)]) -> Result<Self> {
+        Ok(Self { inner: PjrtOptimizer::new(kind, hyper, shapes)? })
+    }
+}
+
+impl ExecutorBackend for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn step(
+        &mut self,
+        engine: Option<&Engine>,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        let engine =
+            engine.ok_or_else(|| anyhow!("pjrt executor requires an artifact-backed model"))?;
+        self.inner.step(engine, params, grads, t, lr)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.inner.refresh_secs
+    }
+
+    fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>> {
+        Err(anyhow!(
+            "checkpointing is not supported on the pjrt backend — use a native backend \
+             (serial/sharded) for runs that save or resume"
+        ))
+    }
+
+    fn import_state(&mut self, _state: Vec<(usize, Vec<Matrix>)>) -> Result<()> {
+        Err(anyhow!(
+            "checkpoint resume is not supported on the pjrt backend — use a native backend"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn shapes() -> Vec<(usize, usize)> {
+        vec![(12, 12), (1, 24), (8, 16)]
+    }
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(Backend::parse("serial").unwrap(), Backend::Serial);
+        assert_eq!(Backend::parse("SHARDED").unwrap(), Backend::Sharded);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        let e = Backend::parse("gpu").unwrap_err().to_string();
+        for name in ["serial", "sharded", "pjrt"] {
+            assert!(e.contains(name), "{e}");
+        }
+    }
+
+    #[test]
+    fn serial_matches_sharded_bitwise() {
+        let shapes = shapes();
+        let hyper = Hyper { precond_freq: 3, ..Hyper::default() };
+        let mut rng = Rng::new(77);
+        let init: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        let mut serial = SerialExecutor::new(OptKind::Soap, &hyper, &shapes);
+        let mut sharded = ShardedExecutor::new(OptKind::Soap, &hyper, &shapes, 3);
+        let mut ps = init.clone();
+        let mut pt = init;
+        for t in 1..=8 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            serial.step(None, &mut ps, &grads, t, 0.01).unwrap();
+            sharded.step(None, &mut pt, &grads, t, 0.01).unwrap();
+        }
+        for (a, b) in ps.iter().zip(&pt) {
+            assert_eq!(a.data, b.data, "serial executor diverged from sharded");
+        }
+        assert_eq!(serial.state_bytes(), sharded.state_bytes());
+    }
+
+    #[test]
+    fn serial_state_roundtrips_through_sharded() {
+        let shapes = shapes();
+        let hyper = Hyper::default();
+        let mut rng = Rng::new(78);
+        let mut a = SerialExecutor::new(OptKind::Soap, &hyper, &shapes);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        for t in 1..=3 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            a.step(None, &mut params, &grads, t, 0.01).unwrap();
+        }
+        let state = a.export_state().unwrap();
+        let mut b = ShardedExecutor::new(OptKind::Soap, &hyper, &shapes, 2);
+        b.import_state(state).unwrap();
+        let mut pa = params.clone();
+        let mut pb = params;
+        for t in 4..=6 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            a.step(None, &mut pa, &grads, t, 0.01).unwrap();
+            b.step(None, &mut pb, &grads, t, 0.01).unwrap();
+        }
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.data, y.data, "state moved between executors diverged");
+        }
+    }
+
+    #[test]
+    fn pjrt_executor_rejects_checkpointing() {
+        let exec = PjrtExecutor::new(OptKind::AdamW, Hyper::default(), &[(4, 4)]).unwrap();
+        assert!(exec.export_state().is_err());
+    }
+
+    #[test]
+    fn serial_async_drives_service() {
+        let shapes = shapes();
+        let hyper = Hyper { precond_freq: 3, ..Hyper::default() }.async_refresh();
+        let mut exec = SerialExecutor::new(OptKind::Soap, &hyper, &shapes);
+        let mut rng = Rng::new(79);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        for t in 1..=12 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            exec.step(None, &mut params, &grads, t, 0.01).unwrap();
+        }
+        exec.wait_refresh_idle();
+        assert!(exec.async_refresh_seconds() > 0.0, "no background refresh ran");
+        exec.prepare_export();
+        assert!(exec.export_state().is_ok());
+    }
+}

@@ -1,0 +1,462 @@
+//! [`SessionBuilder`] — the single typed entry point for constructing a
+//! training run. Takes a model spec, an optimizer composition/preset, a
+//! schedule, data knobs, and a [`Backend`]; validates the WHOLE
+//! configuration up front (the checks that used to live in
+//! `RunConfig::validate` plus the PJRT artifact preflight); and yields a
+//! [`TrainSession`] with a uniform lifecycle.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::backend::{Backend, ExecutorBackend, PjrtExecutor, SerialExecutor, ShardedExecutor};
+use super::sink::{MetricsSink, StdoutSink};
+use super::TrainSession;
+use crate::coordinator::pjrt_optim::preflight;
+use crate::coordinator::{init_lm_params, Checkpoint, GradBackend};
+use crate::data::{BatchStream, CorpusSpec};
+use crate::model::{self, NplmConfig};
+use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// What produces gradients: a native NPLM (artifact-free, runs on any
+/// checkout) or a transformer LM from the compiled artifact manifest.
+#[derive(Clone, Debug)]
+pub enum ModelSpec {
+    /// Native hand-backpropped NPLM with its data geometry.
+    Nplm { cfg: NplmConfig, seq: usize, batch: usize },
+    /// Artifact manifest config name (`nano`, `small`, …); gradients come
+    /// from the `lm_grads_<name>` PJRT executable.
+    Artifact { name: String },
+}
+
+/// The native model names accepted by [`ModelSpec::parse`].
+pub const NPLM_NAMES: &str = "nplm (128-vocab probe config), nplm-tiny (test-scale)";
+
+impl ModelSpec {
+    pub fn artifact(name: &str) -> Self {
+        ModelSpec::Artifact { name: name.to_string() }
+    }
+
+    pub fn nplm(cfg: NplmConfig, seq: usize, batch: usize) -> Self {
+        ModelSpec::Nplm { cfg, seq, batch }
+    }
+
+    /// Map a CLI/config model name onto a spec: the `nplm*` names select the
+    /// built-in native presets (so artifact-free runs work from the CLI);
+    /// anything else is an artifact manifest config name, checked when the
+    /// manifest loads.
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            // The perf-probe / async-refresh bench geometry: layer shapes
+            // up to 192×192 so preconditioning actually costs something.
+            "nplm" => ModelSpec::nplm(
+                NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 },
+                32,
+                16,
+            ),
+            // The integration-test geometry: small enough for smoke jobs.
+            "nplm-tiny" => ModelSpec::nplm(
+                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+                24,
+                8,
+            ),
+            other if other.starts_with("nplm") => anyhow::bail!(
+                "unknown native model '{name}': expected one of {NPLM_NAMES}"
+            ),
+            _ => ModelSpec::artifact(name),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ModelSpec::Artifact { name } => name.clone(),
+            ModelSpec::Nplm { cfg, .. } => {
+                format!("nplm-v{}d{}h{}", cfg.vocab, cfg.dim, cfg.hidden)
+            }
+        }
+    }
+}
+
+enum ResumeSource {
+    Path(PathBuf),
+    Loaded(Checkpoint),
+}
+
+/// Builder for [`TrainSession`] — see the [`crate::session`] module docs for
+/// a worked example. Every knob has the paper-default value; only `model`
+/// is required.
+pub struct SessionBuilder {
+    model: Option<ModelSpec>,
+    artifacts_dir: String,
+    opt: OptKind,
+    hyper: Hyper,
+    schedule: Schedule,
+    steps: u64,
+    seed: u64,
+    grad_accum: usize,
+    workers: usize,
+    backend: Backend,
+    zipf_alpha: f64,
+    log_every: u64,
+    drain_refresh: bool,
+    resume: Option<ResumeSource>,
+    sinks: Vec<Box<dyn MetricsSink>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self {
+            model: None,
+            artifacts_dir: "artifacts".into(),
+            opt: OptKind::Soap,
+            hyper: Hyper::default(),
+            schedule: Schedule::Constant { lr: 3e-3 },
+            steps: 100,
+            seed: 0,
+            grad_accum: 1,
+            workers: 4,
+            backend: Backend::Sharded,
+            zipf_alpha: 1.2,
+            log_every: 0,
+            drain_refresh: false,
+            resume: None,
+            sinks: Vec::new(),
+        }
+    }
+
+    /// REQUIRED: what to train.
+    pub fn model(mut self, spec: ModelSpec) -> Self {
+        self.model = Some(spec);
+        self
+    }
+
+    /// Artifact directory for [`ModelSpec::Artifact`] models (default
+    /// `artifacts`).
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = dir.to_string();
+        self
+    }
+
+    /// Optimizer preset or composition spec (default SOAP).
+    pub fn optimizer(mut self, opt: OptKind) -> Self {
+        self.opt = opt;
+        self
+    }
+
+    pub fn hyper(mut self, h: Hyper) -> Self {
+        self.hyper = h;
+        self
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    /// TOTAL step budget; a resumed session runs the remainder.
+    pub fn steps(mut self, n: u64) -> Self {
+        self.steps = n;
+        self
+    }
+
+    /// Data/init seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Gradient-accumulation microbatches per step (≥ 1).
+    pub fn grad_accum(mut self, k: usize) -> Self {
+        self.grad_accum = k;
+        self
+    }
+
+    /// Worker threads for [`Backend::Sharded`].
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Optimizer executor (default [`Backend::Sharded`]).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Zipf exponent of the synthetic corpus (default 1.2).
+    pub fn zipf_alpha(mut self, a: f64) -> Self {
+        self.zipf_alpha = a;
+        self
+    }
+
+    /// Attach a stdout progress sink printing every `k`-th step (0 = none).
+    pub fn log_every(mut self, k: u64) -> Self {
+        self.log_every = k;
+        self
+    }
+
+    /// Deterministic async mode: drain the refresh service after every step
+    /// so basis adoption timing is a pure function of the step count and
+    /// runs (and checkpoint/resume) are replayable bitwise. Costs the
+    /// overlap benefit; meant for tests and reproducibility studies.
+    pub fn drain_refresh_each_step(mut self, on: bool) -> Self {
+        self.drain_refresh = on;
+        self
+    }
+
+    /// Resume from a checkpoint file at build time (params, optimizer
+    /// state, step counter, and data cursor are all restored together).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(ResumeSource::Path(path.into()));
+        self
+    }
+
+    /// Resume from an in-memory [`Checkpoint`].
+    pub fn resume_checkpoint(mut self, ck: Checkpoint) -> Self {
+        self.resume = Some(ResumeSource::Loaded(ck));
+        self
+    }
+
+    /// Attach a typed metrics sink.
+    pub fn sink(mut self, sink: Box<dyn MetricsSink>) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
+    /// The hyperparameters as the optimizer will actually see them — with a
+    /// composition spec's structural overrides folded in.
+    fn resolved_hyper(&self) -> Hyper {
+        let mut h = self.hyper.clone();
+        if let OptKind::Composed(spec) = &self.opt {
+            spec.apply(&mut h);
+        }
+        h
+    }
+
+    /// Validate the whole configuration, without touching the filesystem.
+    /// `build()` runs this first; `RunConfig::validate` delegates here so
+    /// the CLI and the API reject the same configurations with the same
+    /// messages.
+    pub fn validate(&self) -> Result<()> {
+        let model = self
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("SessionBuilder requires a model spec"))?;
+        anyhow::ensure!(self.steps > 0, "steps must be > 0");
+        anyhow::ensure!(self.grad_accum >= 1, "grad-accum must be ≥ 1");
+        anyhow::ensure!(self.workers >= 1, "workers must be ≥ 1");
+        anyhow::ensure!(self.hyper.precond_freq > 0, "precond-freq must be > 0");
+        anyhow::ensure!(self.hyper.refresh_workers >= 1, "refresh-workers must be ≥ 1");
+        if let OptKind::Composed(spec) = &self.opt {
+            spec.check_flag_consistency(self.hyper.one_sided, self.hyper.factorized)?;
+        }
+        let resolved = self.resolved_hyper();
+        if self.backend == Backend::Pjrt {
+            anyhow::ensure!(
+                matches!(model, ModelSpec::Artifact { .. }),
+                "the pjrt backend runs on artifact models (native nplm models have no \
+                 compiled optimizer kernels)"
+            );
+            anyhow::ensure!(
+                resolved.refresh_mode != RefreshMode::Async,
+                "async refresh applies to the native backends (serial/sharded)"
+            );
+            anyhow::ensure!(
+                matches!(self.opt.canonical(), OptKind::Soap | OptKind::AdamW),
+                "the pjrt backend supports soap|adamw (or composition specs canonical to them)"
+            );
+            anyhow::ensure!(
+                !resolved.factorized,
+                "the pjrt backend runs the full-V SOAP artifacts; the factorized \
+                 (adafactor-engine) variant is native-only"
+            );
+            anyhow::ensure!(
+                self.resume.is_none(),
+                "checkpoint resume requires a native backend (serial/sharded)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate, load what the configuration needs (artifact engine +
+    /// preflight for PJRT paths), build the executor, and — when a resume
+    /// source is set — restore the checkpoint into the fresh session.
+    pub fn build(self) -> Result<TrainSession> {
+        self.validate()?;
+        let SessionBuilder {
+            model,
+            artifacts_dir,
+            opt,
+            hyper,
+            schedule,
+            steps,
+            seed,
+            grad_accum,
+            workers,
+            backend,
+            zipf_alpha,
+            log_every,
+            drain_refresh,
+            resume,
+            mut sinks,
+        } = self;
+        let model = model.expect("validated");
+
+        let mut rng = Rng::new(seed);
+        let (grad, params, vocab, seq, batch) = match &model {
+            ModelSpec::Artifact { name } => {
+                let engine = Engine::load(&artifacts_dir)?;
+                let info = engine.manifest.config(name)?.clone();
+                let params = init_lm_params(&info.params, &mut rng);
+                let grad = GradBackend::Pjrt { engine, config: name.clone() };
+                (grad, params, info.vocab, info.seq, info.batch)
+            }
+            ModelSpec::Nplm { cfg, seq, batch } => {
+                let params = model::init_params(cfg, &mut rng);
+                (GradBackend::Native { cfg: *cfg }, params, cfg.vocab, *seq, *batch)
+            }
+        };
+        let shapes: Vec<(usize, usize)> = params.iter().map(|p| (p.rows, p.cols)).collect();
+        let stream = BatchStream::new(
+            CorpusSpec { vocab_size: vocab, zipf_alpha, seed, stream: 0 },
+            batch * grad_accum,
+            seq,
+            0,
+            1,
+        );
+
+        let exec: Box<dyn ExecutorBackend> = match backend {
+            Backend::Serial => Box::new(SerialExecutor::new(opt, &hyper, &shapes)),
+            Backend::Sharded => Box::new(ShardedExecutor::new(opt, &hyper, &shapes, workers)),
+            Backend::Pjrt => {
+                let GradBackend::Pjrt { engine, .. } = &grad else {
+                    unreachable!("validate() pinned pjrt to artifact models");
+                };
+                preflight(engine, opt, &hyper, &shapes)?;
+                Box::new(PjrtExecutor::new(opt, hyper.clone(), &shapes)?)
+            }
+        };
+
+        if log_every > 0 {
+            sinks.push(Box::new(StdoutSink::every(log_every)));
+        }
+
+        let mut session = TrainSession {
+            opt,
+            hyper,
+            schedule,
+            total_steps: steps,
+            seed,
+            grad_accum,
+            vocab,
+            zipf_alpha,
+            grad,
+            model_label: model.label(),
+            exec,
+            params,
+            shapes,
+            stream,
+            steps_done: 0,
+            drain_refresh,
+            sinks,
+        };
+        if let Some(src) = resume {
+            let ck = match src {
+                ResumeSource::Path(p) => Checkpoint::load(&p)?,
+                ResumeSource::Loaded(ck) => ck,
+            };
+            session.apply_resume(ck)?;
+        }
+        Ok(session)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_builder() -> SessionBuilder {
+        TrainSession::builder()
+            .model(ModelSpec::parse("nplm-tiny").unwrap())
+            .optimizer(OptKind::AdamW)
+            .steps(3)
+            .workers(2)
+    }
+
+    #[test]
+    fn model_spec_parse() {
+        assert!(matches!(ModelSpec::parse("nplm").unwrap(), ModelSpec::Nplm { .. }));
+        assert!(matches!(ModelSpec::parse("NPLM-TINY").unwrap(), ModelSpec::Nplm { .. }));
+        assert!(matches!(
+            ModelSpec::parse("nano").unwrap(),
+            ModelSpec::Artifact { name } if name == "nano"
+        ));
+        let e = ModelSpec::parse("nplm-huge").unwrap_err().to_string();
+        assert!(e.contains("nplm-tiny"), "{e}");
+    }
+
+    #[test]
+    fn missing_model_rejected_up_front() {
+        let e = TrainSession::builder().validate().unwrap_err().to_string();
+        assert!(e.contains("model"), "{e}");
+    }
+
+    #[test]
+    fn bad_configs_rejected_up_front() {
+        assert!(native_builder().steps(0).validate().is_err());
+        assert!(native_builder().grad_accum(0).validate().is_err());
+        assert!(native_builder()
+            .hyper(Hyper { precond_freq: 0, ..Hyper::default() })
+            .validate()
+            .is_err());
+        // PJRT gates: native model, async refresh, non-artifact optimizer.
+        assert!(native_builder().backend(Backend::Pjrt).validate().is_err());
+        let artifact = || {
+            TrainSession::builder()
+                .model(ModelSpec::artifact("nano"))
+                .backend(Backend::Pjrt)
+        };
+        assert!(artifact().optimizer(OptKind::Shampoo).validate().is_err());
+        assert!(artifact()
+            .hyper(Hyper::default().async_refresh())
+            .validate()
+            .is_err());
+        assert!(artifact()
+            .hyper(Hyper::default().factorized())
+            .validate()
+            .is_err());
+        assert!(artifact().resume_from("/tmp/x.ckpt").validate().is_err());
+        assert!(artifact().validate().is_ok());
+    }
+
+    #[test]
+    fn builds_native_session_and_trains() {
+        let mut s = native_builder().build().unwrap();
+        assert_eq!(s.current_step(), 0);
+        let log = s.run().unwrap();
+        assert_eq!(s.current_step(), 3);
+        assert_eq!(log.losses.len(), 3);
+        assert!(log.final_loss().is_finite());
+        assert!(s.state_bytes() > 0);
+        // run() is budget-based: a second call is a no-op at the budget.
+        let log2 = s.run().unwrap();
+        assert!(log2.losses.is_empty());
+    }
+
+    #[test]
+    fn composed_spec_flag_contradiction_rejected() {
+        let spec = OptKind::parse("basis=eigen:two-sided,inner=adam").unwrap();
+        let b = native_builder()
+            .optimizer(spec)
+            .hyper(Hyper::default().one_sided());
+        assert!(b.validate().is_err());
+    }
+}

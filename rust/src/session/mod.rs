@@ -1,0 +1,80 @@
+//! The unified training API: one typed entry point over the serial /
+//! sharded / PJRT executor backends, with first-class checkpoint/resume.
+//!
+//! [`TrainSession`] (alias [`Session`]) replaces the three bespoke
+//! `Trainer::new_*` constructors and the per-bench hand-rolled harness
+//! code: a [`SessionBuilder`] takes a model spec, an optimizer
+//! preset/composition, a schedule, data knobs, and a [`Backend`], validates
+//! the whole configuration up front (including the PJRT artifact
+//! preflight), and yields a session with a uniform lifecycle.
+//!
+//! ```no_run
+//! use soap_lab::optim::{OptKind, Schedule};
+//! use soap_lab::session::{Backend, ModelSpec, TrainSession};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = TrainSession::builder()
+//!     .model(ModelSpec::parse("nplm")?)      // or .model(ModelSpec::artifact("nano"))
+//!     .optimizer(OptKind::parse("soap")?)    // presets or basis=…,inner=… specs
+//!     .schedule(Schedule::Constant { lr: 0.01 })
+//!     .steps(200)
+//!     .backend(Backend::Sharded)             // Serial | Sharded | Pjrt
+//!     .log_every(10)
+//!     .build()?;                             // all validation happens here
+//!
+//! let log = session.run()?;                  // or session.step() in a loop
+//! session.save_checkpoint("run.ckpt")?;
+//! println!("tail loss {:.4}, state {} bytes", log.tail_loss(20), session.state_bytes());
+//!
+//! // Later (even in a new process): resume and run to a larger budget.
+//! let mut resumed = TrainSession::builder()
+//!     .model(ModelSpec::parse("nplm")?)
+//!     .optimizer(OptKind::parse("soap")?)
+//!     .schedule(Schedule::Constant { lr: 0.01 })
+//!     .steps(400)                            // TOTAL budget; runs the remainder
+//!     .resume_from("run.ckpt")               // params + moments + step + data cursor
+//!     .build()?;
+//! resumed.run()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## Backend matrix
+//!
+//! | backend   | gradients        | optimizer updates          | checkpoint |
+//! |-----------|------------------|----------------------------|------------|
+//! | `Serial`  | native or PJRT   | this thread, layer order   | yes        |
+//! | `Sharded` | native or PJRT   | cost-balanced worker pool  | yes        |
+//! | `Pjrt`    | PJRT artifacts   | compiled Pallas kernels    | no         |
+//!
+//! `Serial` and `Sharded` are bitwise-interchangeable; both are
+//! bitwise-identical to the pre-redesign `Trainer` paths
+//! (`rust/tests/session.rs` pins this for adamw/soap/shampoo).
+//!
+//! ## Resume semantics
+//!
+//! [`TrainSession::checkpoint`] drains the async refresh service, folds in
+//! any published-but-unadopted eigenbasis, and records params, optimizer
+//! state, the step counter, the data cursor, and the seed. A session built
+//! with `resume_from` restores ALL of them together, so a resumed run is
+//! bitwise-identical to an uninterrupted one in `Inline` refresh mode — and
+//! in `Async` mode when each step drains the service
+//! ([`SessionBuilder::drain_refresh_each_step`]); undrained async adoption
+//! timing is inherently racy, so there the bar is loss parity, not bit
+//! equality. `steps` is a TOTAL budget: resuming at step `k` runs `steps −
+//! k` more, with the LR schedule continuing from `k` (the pre-redesign
+//! `--resume` restored the schedule but replayed data from batch 0 and ran
+//! `steps` EXTRA steps; both drifts are gone).
+
+pub mod backend;
+pub mod builder;
+pub mod sink;
+mod train;
+
+pub use backend::{Backend, ExecutorBackend, PjrtExecutor, SerialExecutor, ShardedExecutor};
+pub use builder::{ModelSpec, SessionBuilder};
+pub use sink::{CollectSink, JsonlSink, MetricsSink, StdoutSink, StepRecord};
+pub use train::TrainSession;
+
+/// Short alias: `Session::builder()` reads naturally at call sites.
+pub type Session = TrainSession;

@@ -1,0 +1,139 @@
+//! Typed metrics streaming for [`super::TrainSession`]: every training step
+//! emits a [`StepRecord`] to each attached [`MetricsSink`], and the final
+//! [`TrainLog`] is offered once at the end of `run()`. Sinks replace the
+//! ad-hoc `println!` blocks the pre-redesign entry points each hand-rolled.
+
+use std::io::Write;
+
+use crate::coordinator::{StepTiming, TrainLog};
+use crate::util::json::Json;
+
+/// One step's worth of metrics, as handed to sinks.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord<'a> {
+    /// 1-based global step.
+    pub step: u64,
+    pub loss: f32,
+    /// Learning rate applied on this step.
+    pub lr: f32,
+    /// Tokens consumed per optimizer step.
+    pub tokens_per_step: usize,
+    pub timing: &'a StepTiming,
+}
+
+/// Streaming consumer of training metrics.
+pub trait MetricsSink {
+    /// Called after every training step.
+    fn on_step(&mut self, rec: &StepRecord<'_>);
+
+    /// Called once when `run()` finishes, with the full log.
+    fn on_complete(&mut self, _log: &TrainLog) {}
+}
+
+/// Human-readable progress lines on stdout, every `k`-th step — the format
+/// the pre-redesign `Trainer::run` printed.
+pub struct StdoutSink {
+    every: u64,
+}
+
+impl StdoutSink {
+    pub fn every(k: u64) -> Self {
+        Self { every: k }
+    }
+}
+
+impl MetricsSink for StdoutSink {
+    fn on_step(&mut self, rec: &StepRecord<'_>) {
+        if self.every > 0 && rec.step % self.every == 0 {
+            println!(
+                "step {:>6}  loss {:.4}  lr {:.2e}  {:.0} tok/s",
+                rec.step,
+                rec.loss,
+                rec.lr,
+                rec.tokens_per_step as f64 / rec.timing.total().max(1e-9),
+            );
+        }
+    }
+}
+
+/// One JSON object per step on any writer — machine-readable streaming for
+/// dashboards and log scrapers.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(out: W) -> Self {
+        Self { out }
+    }
+}
+
+impl<W: Write> MetricsSink for JsonlSink<W> {
+    fn on_step(&mut self, rec: &StepRecord<'_>) {
+        let line = Json::obj(vec![
+            ("step", Json::num(rec.step as f64)),
+            ("loss", Json::num(rec.loss as f64)),
+            ("lr", Json::num(rec.lr as f64)),
+            ("step_s", Json::num(rec.timing.total())),
+            ("refresh_s", Json::num(rec.timing.refresh_s)),
+            ("staleness_steps", Json::num(rec.timing.staleness_steps)),
+        ]);
+        let _ = writeln!(self.out, "{}", line.dump());
+    }
+
+    fn on_complete(&mut self, _log: &TrainLog) {
+        let _ = self.out.flush();
+    }
+}
+
+/// In-memory sink: collects `(step, loss)` pairs. Mostly for tests and
+/// programmatic consumers that want live losses without parsing the log.
+#[derive(Default)]
+pub struct CollectSink {
+    pub losses: Vec<(u64, f32)>,
+    pub completed: bool,
+}
+
+impl MetricsSink for CollectSink {
+    fn on_step(&mut self, rec: &StepRecord<'_>) {
+        self.losses.push((rec.step, rec.loss));
+    }
+
+    fn on_complete(&mut self, _log: &TrainLog) {
+        self.completed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(timing: &StepTiming) -> StepRecord<'_> {
+        StepRecord { step: 3, loss: 1.5, lr: 0.01, tokens_per_step: 256, timing }
+    }
+
+    #[test]
+    fn jsonl_sink_emits_parseable_lines() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf);
+            let t = StepTiming { grad_s: 0.5, update_s: 0.25, ..Default::default() };
+            sink.on_step(&rec(&t));
+        }
+        let line = String::from_utf8(buf).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("step").as_f64(), Some(3.0));
+        assert_eq!(v.get("loss").as_f64(), Some(1.5));
+        assert_eq!(v.get("step_s").as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn collect_sink_accumulates() {
+        let mut sink = CollectSink::default();
+        let t = StepTiming::default();
+        sink.on_step(&rec(&t));
+        sink.on_complete(&TrainLog::default());
+        assert_eq!(sink.losses, vec![(3, 1.5)]);
+        assert!(sink.completed);
+    }
+}

@@ -1,0 +1,376 @@
+//! [`TrainSession`] — the uniform training lifecycle every entry point
+//! (CLI, benches, examples) drives: `step()` / `run()` over a validated
+//! configuration, typed metrics streaming, state accounting, and
+//! first-class `checkpoint()`/resume.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::backend::ExecutorBackend;
+use super::sink::{MetricsSink, StepRecord};
+use crate::coordinator::{Checkpoint, GradBackend, StepTiming, TrainLog};
+use crate::data::{Batch, BatchStream, CorpusSpec};
+use crate::linalg::Matrix;
+use crate::model;
+use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use crate::runtime::{
+    literal_from_matrix, literal_from_tokens, matrix_from_literal, scalar_from_literal,
+};
+
+/// A built training session: model + data + executor behind one lifecycle.
+///
+/// Construct through [`crate::session::SessionBuilder`] (via
+/// `TrainSession::builder()`), which validates the whole configuration up
+/// front. `steps` is the TOTAL step budget: a session resumed from a
+/// checkpoint at step `k` runs `steps − k` more steps, with the LR schedule
+/// and the data cursor both restored — unlike the pre-redesign `--resume`
+/// path, which restored the schedule step but replayed data from batch 0.
+pub struct TrainSession {
+    pub(super) opt: OptKind,
+    pub(super) hyper: Hyper,
+    pub(super) schedule: Schedule,
+    pub(super) total_steps: u64,
+    pub(super) seed: u64,
+    pub(super) grad_accum: usize,
+    pub(super) vocab: usize,
+    pub(super) zipf_alpha: f64,
+    pub(super) grad: GradBackend,
+    /// Display label from the [`super::ModelSpec`] (one source of truth for
+    /// log aggregation keys).
+    pub(super) model_label: String,
+    pub(super) exec: Box<dyn ExecutorBackend>,
+    pub params: Vec<Matrix>,
+    pub shapes: Vec<(usize, usize)>,
+    pub(super) stream: BatchStream,
+    pub(super) steps_done: u64,
+    pub(super) drain_refresh: bool,
+    pub(super) sinks: Vec<Box<dyn MetricsSink>>,
+}
+
+impl TrainSession {
+    /// Entry point: a builder with the paper-default configuration.
+    pub fn builder() -> super::SessionBuilder {
+        super::SessionBuilder::new()
+    }
+
+    /// 1-based step counter (0 before the first step; equals the checkpoint
+    /// step right after a resume).
+    pub fn current_step(&self) -> u64 {
+        self.steps_done
+    }
+
+    /// The session's total step budget (`run()` stops here).
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Tokens consumed per optimizer step.
+    pub fn tokens_per_step(&self) -> usize {
+        self.stream.batch * self.stream.seq
+    }
+
+    pub fn entropy_floor(&self) -> f64 {
+        self.stream.entropy_floor()
+    }
+
+    /// Discard `k` batches from the data stream (resume fast-forward; the
+    /// stream is a pure function of (seed, position)).
+    pub(super) fn skip_batches(&mut self, k: u64) {
+        for _ in 0..k {
+            let _ = self.stream.next_batch();
+        }
+    }
+
+    fn grads_for(&self, batch: &Batch) -> Result<(f32, Vec<Matrix>)> {
+        match &self.grad {
+            GradBackend::Pjrt { engine, config } => {
+                let info = engine.manifest.config(config)?;
+                anyhow::ensure!(batch.batch == info.batch, "microbatch must equal artifact batch");
+                let mut inputs = Vec::with_capacity(self.params.len() + 2);
+                for p in &self.params {
+                    inputs.push(literal_from_matrix(p)?);
+                }
+                inputs.push(literal_from_tokens(&batch.tokens, batch.batch, batch.seq)?);
+                inputs.push(literal_from_tokens(&batch.targets, batch.batch, batch.seq)?);
+                let out = engine.run(&format!("lm_grads_{config}"), &inputs)?;
+                let loss = scalar_from_literal(&out[0])?;
+                let mut grads = Vec::with_capacity(self.params.len());
+                for (i, &(r, c)) in self.shapes.iter().enumerate() {
+                    grads.push(matrix_from_literal(&out[1 + i], r, c)?);
+                }
+                Ok((loss, grads))
+            }
+            GradBackend::Native { cfg } => {
+                let (loss, grads) = model::loss_and_grads(cfg, &self.params, batch);
+                Ok((loss, grads))
+            }
+        }
+    }
+
+    /// Run one training step; returns (loss, timing). Metrics sinks fire
+    /// after the step completes.
+    pub fn step(&mut self) -> Result<(f32, StepTiming)> {
+        let mut timing = StepTiming::default();
+
+        let t0 = Instant::now();
+        let batch = self.stream.next_batch();
+        let micro = batch.microbatches(self.grad_accum);
+        timing.data_s = t0.elapsed().as_secs_f64();
+
+        // Gradient accumulation: mean over microbatches.
+        let t0 = Instant::now();
+        let mut loss_acc = 0.0f64;
+        let mut grads: Option<Vec<Matrix>> = None;
+        for mb in &micro {
+            let (loss, g) = self.grads_for(mb)?;
+            loss_acc += loss as f64;
+            grads = Some(match grads.take() {
+                None => g,
+                Some(mut acc) => {
+                    for (a, b) in acc.iter_mut().zip(&g) {
+                        a.axpy_inplace(1.0, b);
+                    }
+                    acc
+                }
+            });
+        }
+        let mut grads = grads.ok_or_else(|| anyhow!("no microbatches"))?;
+        if micro.len() > 1 {
+            let s = 1.0 / micro.len() as f32;
+            for g in &mut grads {
+                g.scale_inplace(s);
+            }
+        }
+        let loss = (loss_acc / micro.len() as f64) as f32;
+        timing.grad_s = t0.elapsed().as_secs_f64();
+
+        // Optimizer step (+ refresh accounting): hot-path refresh seconds
+        // from the executor's inline account, background seconds reported
+        // separately (they overlap the step instead of extending it).
+        self.steps_done += 1;
+        let t = self.steps_done;
+        let lr = self.schedule.lr_at(t - 1);
+        let t0 = Instant::now();
+        let refresh_before = self.exec.refresh_seconds();
+        let bg_before = self.exec.async_refresh_seconds();
+        let engine = match &self.grad {
+            GradBackend::Pjrt { engine, .. } => Some(engine),
+            GradBackend::Native { .. } => None,
+        };
+        self.exec.step(engine, &mut self.params, &grads, t, lr)?;
+        if self.drain_refresh {
+            // Deterministic-async mode: adoption timing becomes a pure
+            // function of the step count, so runs are replayable bitwise.
+            // The drain wait is real critical-path time — captured below in
+            // update_total so reported throughput stays honest.
+            self.exec.wait_refresh_idle();
+        }
+        let update_total = t0.elapsed().as_secs_f64();
+        timing.refresh_s = self.exec.refresh_seconds() - refresh_before;
+        timing.update_s = (update_total - timing.refresh_s).max(0.0);
+        timing.bg_refresh_s = (self.exec.async_refresh_seconds() - bg_before).max(0.0);
+        timing.staleness_steps = self.exec.mean_basis_staleness(t);
+
+        let rec = StepRecord {
+            step: t,
+            loss,
+            lr,
+            tokens_per_step: self.stream.batch * self.stream.seq,
+            timing: &timing,
+        };
+        for sink in &mut self.sinks {
+            sink.on_step(&rec);
+        }
+        Ok((loss, timing))
+    }
+
+    /// Train up to the session's total step budget, returning the full log.
+    pub fn run(&mut self) -> Result<TrainLog> {
+        let mut log = TrainLog {
+            optimizer: self.opt_label(),
+            model: self.model_label(),
+            tokens_per_batch: self.tokens_per_step(),
+            ..Default::default()
+        };
+        while self.steps_done < self.total_steps {
+            let (loss, timing) = self.step()?;
+            log.losses.push((self.steps_done, loss));
+            log.timings.push(timing);
+        }
+        for sink in &mut self.sinks {
+            sink.on_complete(&log);
+        }
+        Ok(log)
+    }
+
+    /// Evaluate mean loss over `batches` held-out batches (same language,
+    /// fresh sample stream).
+    pub fn eval_loss(&mut self, batches: usize) -> Result<f32> {
+        let mut eval_stream = BatchStream::new(
+            CorpusSpec {
+                vocab_size: self.vocab,
+                zipf_alpha: self.zipf_alpha,
+                seed: self.seed,      // SAME language…
+                stream: 0xE7A1,       // …fresh held-out sample stream
+            },
+            self.stream.batch / self.grad_accum.max(1),
+            self.stream.seq,
+            0,
+            1,
+        );
+        let mut total = 0.0f64;
+        for _ in 0..batches {
+            let b = eval_stream.next_batch();
+            let (loss, _) = self.grads_for(&b)?;
+            total += loss as f64;
+        }
+        Ok((total / batches as f64) as f32)
+    }
+
+    /// Snapshot the full resumable state: parameters, optimizer state
+    /// (drained and adoption-complete in async mode), step counter, data
+    /// cursor, and seed. A session resumed from this checkpoint continues
+    /// bitwise-identically to an uninterrupted run (inline and drained-async
+    /// refresh modes; undrained async is nondeterministic by nature).
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        self.exec.prepare_export();
+        Ok(Checkpoint {
+            step: self.steps_done,
+            params: self.params.clone(),
+            opt_state: self.exec.export_state()?,
+            data_batches: self.stream.batches_produced(),
+            seed: Some(self.seed),
+            stream_batch: self.stream.batch as u32,
+            stream_seq: self.stream.seq as u32,
+        })
+    }
+
+    /// [`Self::checkpoint`] straight to a file.
+    pub fn save_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        self.checkpoint()?.save(path)
+    }
+
+    /// Restore a checkpoint into this (freshly built) session — the builder
+    /// calls this for `resume_from`; strict about shape/seed/step mismatches.
+    pub(super) fn apply_resume(&mut self, ck: Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ck.params.len() == self.params.len(),
+            "checkpoint has {} parameter tensors but the model has {}",
+            ck.params.len(),
+            self.params.len()
+        );
+        for (i, (p, q)) in ck.params.iter().zip(&self.params).enumerate() {
+            anyhow::ensure!(
+                p.rows == q.rows && p.cols == q.cols,
+                "checkpoint param {i} is {}×{} but the model expects {}×{}",
+                p.rows,
+                p.cols,
+                q.rows,
+                q.cols
+            );
+        }
+        if let Some(s) = ck.seed {
+            anyhow::ensure!(
+                s == self.seed,
+                "checkpoint was written with seed {s} but the session uses seed {} — a \
+                 resumed run would train on a different data stream (pass the original seed)",
+                self.seed
+            );
+        }
+        // The data cursor counts stream batches of the ORIGINAL geometry; a
+        // changed batch size / grad-accum / sequence length would silently
+        // fast-forward to the wrong tokens. (0 = legacy v1, unrecorded.)
+        if ck.stream_batch != 0 {
+            anyhow::ensure!(
+                ck.stream_batch as usize == self.stream.batch
+                    && ck.stream_seq as usize == self.stream.seq,
+                "checkpoint was written with stream geometry {}×{} (batch·grad-accum × seq) \
+                 but the session uses {}×{} — resume with the original batch/grad-accum/seq",
+                ck.stream_batch,
+                ck.stream_seq,
+                self.stream.batch,
+                self.stream.seq
+            );
+        }
+        anyhow::ensure!(
+            ck.step <= self.total_steps,
+            "checkpoint is already at step {} but the session's total budget is {} — \
+             raise steps to continue the run",
+            ck.step,
+            self.total_steps
+        );
+        self.exec.import_state(ck.opt_state)?;
+        self.params = ck.params;
+        self.steps_done = ck.step;
+        self.skip_batches(ck.data_batches);
+        Ok(())
+    }
+
+    // ---- accounting passthroughs -------------------------------------
+
+    /// Persistent optimizer state bytes (paper §7.2 accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.exec.state_bytes()
+    }
+
+    /// Workspace-arena bytes held by the step path (0 for PJRT).
+    pub fn scratch_bytes(&self) -> usize {
+        self.exec.scratch_bytes()
+    }
+
+    /// Cumulative hot-path refresh seconds.
+    pub fn refresh_seconds(&self) -> f64 {
+        self.exec.refresh_seconds()
+    }
+
+    /// Cumulative background (async-service) refresh seconds.
+    pub fn async_refresh_seconds(&self) -> f64 {
+        self.exec.async_refresh_seconds()
+    }
+
+    /// Mean basis staleness (steps) right now.
+    pub fn mean_basis_staleness(&self) -> f64 {
+        self.exec.mean_basis_staleness(self.steps_done)
+    }
+
+    /// Drain in-flight background refreshes (no-op inline/PJRT). Call
+    /// before reading final `async_refresh_seconds` totals.
+    pub fn wait_refresh_idle(&self) {
+        self.exec.wait_refresh_idle();
+    }
+
+    /// Attach another metrics sink mid-run.
+    pub fn add_sink(&mut self, sink: Box<dyn MetricsSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Canonicalized optimizer label — preset/spec spellings of the same
+    /// configuration share one aggregation key, variant suffixes come from
+    /// the spec-resolved hyperparameters, and the backend is tagged.
+    pub fn opt_label(&self) -> String {
+        let mut h = self.hyper.clone();
+        if let OptKind::Composed(spec) = &self.opt {
+            spec.apply(&mut h);
+        }
+        let mut s = self.opt.canonical().name().to_string();
+        if h.one_sided {
+            s.push_str("-onesided");
+        }
+        if h.factorized {
+            s.push_str("-factorized");
+        }
+        if self.hyper.refresh_mode == RefreshMode::Async {
+            s.push_str("-async");
+        }
+        if self.exec.name() == "pjrt" {
+            s.push_str("(pjrt)");
+        }
+        s
+    }
+
+    pub fn model_label(&self) -> String {
+        self.model_label.clone()
+    }
+}

@@ -4,7 +4,7 @@
 //! defaults, and auto-generated `--help`. Typed accessors parse on demand and
 //! report readable errors.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Clone, Debug)]
 pub struct OptSpec {
@@ -48,12 +48,20 @@ pub struct Args {
     pub command: String,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Option/flag names the user actually typed (vs. declared defaults) —
+    /// lets config-file layering give explicit CLI args the last word.
+    explicit: BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Was this option/flag passed on the command line (not a default)?
+    pub fn is_explicit(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn str(&self, name: &str) -> anyhow::Result<String> {
@@ -150,6 +158,7 @@ impl App {
 
         let mut values = BTreeMap::new();
         let mut flags = BTreeMap::new();
+        let mut explicit = BTreeSet::new();
         let mut positional = Vec::new();
         for o in &cmd.opts {
             if let Some(d) = o.default {
@@ -190,6 +199,7 @@ impl App {
                     };
                     values.insert(key.to_string(), v);
                 }
+                explicit.insert(key.to_string());
             } else {
                 positional.push(a.clone());
             }
@@ -203,7 +213,7 @@ impl App {
             }
         }
 
-        Ok(Args { command: cmd_name.clone(), values, flags, positional })
+        Ok(Args { command: cmd_name.clone(), values, flags, explicit, positional })
     }
 }
 
@@ -234,6 +244,17 @@ mod tests {
         assert_eq!(a.get("optimizer"), Some("soap"));
         assert_eq!(a.get("out"), Some("/tmp/x"));
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_tracks_typed_options_only() {
+        let a = app()
+            .parse(&argv(&["train", "--steps", "250", "--out=/tmp/x", "--verbose"]))
+            .unwrap();
+        assert!(a.is_explicit("steps"));
+        assert!(a.is_explicit("out"));
+        assert!(a.is_explicit("verbose"));
+        assert!(!a.is_explicit("optimizer"), "defaults are not explicit");
     }
 
     #[test]

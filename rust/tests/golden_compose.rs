@@ -1186,11 +1186,11 @@ fn composed_spec_trains_end_to_end_and_checkpoints_roundtrip() {
     // 15 steps + checkpoint + restore + 15 steps ≡ 30 straight.
     let mut first = mk(15);
     first.run().unwrap();
-    let ck = Checkpoint {
-        step: first.step,
-        params: first.params.clone(),
-        opt_state: first.native_optimizer().unwrap().export_state(),
-    };
+    let ck = Checkpoint::new(
+        first.step,
+        first.params.clone(),
+        first.native_optimizer().unwrap().export_state(),
+    );
     let path = std::env::temp_dir().join(format!("golden_compose_{}.ckpt", std::process::id()));
     ck.save(&path).unwrap();
 

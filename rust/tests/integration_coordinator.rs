@@ -46,11 +46,11 @@ fn checkpoint_resume_continues_exactly() {
 
     let mut first = native(OptKind::Soap, 15, 11, 2);
     first.run().unwrap();
-    let ck = Checkpoint {
-        step: first.step,
-        params: first.params.clone(),
-        opt_state: first.native_optimizer().unwrap().export_state(),
-    };
+    let ck = Checkpoint::new(
+        first.step,
+        first.params.clone(),
+        first.native_optimizer().unwrap().export_state(),
+    );
     let path = std::env::temp_dir().join(format!("soap_resume_{}.ckpt", std::process::id()));
     ck.save(&path).unwrap();
 

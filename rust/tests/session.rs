@@ -1,0 +1,261 @@
+//! Session-API acceptance pins (the PR-4 tentpole):
+//!
+//! 1. a `TrainSession` run is BITWISE-identical (params + loss trajectory)
+//!    to the equivalent pre-redesign `Trainer` run, for adamw/soap/shampoo
+//!    on both native backends (serial and sharded);
+//! 2. checkpoint→resume through the session API matches the uninterrupted
+//!    run bitwise — N steps + checkpoint + resume to 2N ≡ 2N straight —
+//!    for one preset per family, in inline AND drained-async refresh modes,
+//!    through the v2 checkpoint file format;
+//! 3. resume is strict: wrong seed, wrong shapes, and an exhausted step
+//!    budget are errors, not silent divergence.
+
+use soap_lab::coordinator::{Trainer, TrainerConfig};
+use soap_lab::model::NplmConfig;
+use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use soap_lab::session::{Backend, ModelSpec, SessionBuilder, TrainSession};
+
+const SEQ: usize = 24;
+const BATCH: usize = 8;
+
+fn nplm() -> NplmConfig {
+    NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 }
+}
+
+fn hyper(mode: RefreshMode) -> Hyper {
+    Hyper { precond_freq: 4, ..Hyper::default() }.with_refresh_mode(mode)
+}
+
+fn builder(opt: OptKind, steps: u64, seed: u64, mode: RefreshMode) -> SessionBuilder {
+    TrainSession::builder()
+        .model(ModelSpec::nplm(nplm(), SEQ, BATCH))
+        .optimizer(opt)
+        .hyper(hyper(mode))
+        .schedule(Schedule::Constant { lr: 0.02 })
+        .steps(steps)
+        .seed(seed)
+        .workers(2)
+        .drain_refresh_each_step(mode == RefreshMode::Async)
+}
+
+fn legacy_trainer(opt: OptKind, steps: u64, seed: u64) -> Trainer {
+    let cfg = TrainerConfig {
+        opt,
+        hyper: hyper(RefreshMode::Inline),
+        schedule: Schedule::Constant { lr: 0.02 },
+        steps,
+        seed,
+        grad_accum: 1,
+        workers: 2,
+        log_every: 0,
+        vocab: 64,
+        zipf_alpha: 1.2,
+    };
+    Trainer::new_native(nplm(), cfg, SEQ, BATCH)
+}
+
+#[test]
+fn session_matches_legacy_trainer_bitwise() {
+    // Acceptance: the redesign changed the API, not one bit of the math.
+    for opt in [OptKind::AdamW, OptKind::Soap, OptKind::Shampoo] {
+        let mut trainer = legacy_trainer(opt, 20, 3);
+        let trainer_log = trainer.run().unwrap();
+
+        for backend in [Backend::Serial, Backend::Sharded] {
+            let mut session = builder(opt, 20, 3, RefreshMode::Inline)
+                .backend(backend)
+                .build()
+                .unwrap();
+            let log = session.run().unwrap();
+            assert_eq!(
+                log.losses, trainer_log.losses,
+                "{} on {:?}: session loss trajectory diverged from Trainer",
+                opt.name(),
+                backend
+            );
+            for (i, (a, b)) in session.params.iter().zip(&trainer.params).enumerate() {
+                assert_eq!(
+                    a.data,
+                    b.data,
+                    "{} on {:?}: session param {i} diverged from Trainer",
+                    opt.name(),
+                    backend
+                );
+            }
+            assert_eq!(session.state_bytes(), trainer.state_bytes());
+        }
+    }
+}
+
+fn resume_roundtrip(opt: OptKind, mode: RefreshMode, backend: Backend, seed: u64) {
+    let n = 12u64;
+    let label = format!("{} {:?} {:?}", opt.name(), mode, backend);
+
+    // Uninterrupted 2N-step reference.
+    let mut full = builder(opt, 2 * n, seed, mode).backend(backend).build().unwrap();
+    let full_log = full.run().unwrap();
+
+    // N steps → checkpoint through the v2 file format → resume → N more.
+    let mut first = builder(opt, n, seed, mode).backend(backend).build().unwrap();
+    first.run().unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "soap_session_resume_{}_{}_{}.ckpt",
+        opt.name(),
+        seed,
+        std::process::id()
+    ));
+    first.save_checkpoint(&path).unwrap();
+
+    let mut resumed = builder(opt, 2 * n, seed, mode)
+        .backend(backend)
+        .resume_from(&path)
+        .build()
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.current_step(), n, "{label}: resume did not restore the step");
+    let resumed_log = resumed.run().unwrap();
+    assert_eq!(resumed.current_step(), 2 * n);
+
+    // Bitwise: parameters and the post-resume loss trajectory.
+    for (i, (a, b)) in resumed.params.iter().zip(&full.params).enumerate() {
+        assert_eq!(a.data, b.data, "{label}: resumed param {i} diverged from uninterrupted");
+    }
+    assert_eq!(
+        resumed_log.losses,
+        full_log.losses[n as usize..].to_vec(),
+        "{label}: resumed losses diverged (schedule step or data cursor drift)"
+    );
+
+    // The optimizer state itself must also agree (moments, bases, caches).
+    let full_state = full.checkpoint().unwrap();
+    let resumed_state = resumed.checkpoint().unwrap();
+    assert_eq!(full_state.opt_state.len(), resumed_state.opt_state.len());
+    for ((ia, ta), (ib, tb)) in full_state.opt_state.iter().zip(&resumed_state.opt_state) {
+        assert_eq!(ia, ib);
+        assert_eq!(ta.len(), tb.len(), "{label}: state row {ia} arity changed");
+        for (j, (x, y)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(x.data, y.data, "{label}: state row {ia} tensor {j} diverged");
+        }
+    }
+}
+
+#[test]
+fn resume_bitwise_inline_adamw() {
+    resume_roundtrip(OptKind::AdamW, RefreshMode::Inline, Backend::Serial, 11);
+}
+
+#[test]
+fn resume_bitwise_inline_soap() {
+    resume_roundtrip(OptKind::Soap, RefreshMode::Inline, Backend::Sharded, 12);
+}
+
+#[test]
+fn resume_bitwise_inline_shampoo() {
+    // Pins the warm-start eigenvector caches riding the checkpoint: without
+    // them the first post-resume refresh cold-starts its eigh and drifts.
+    resume_roundtrip(OptKind::Shampoo, RefreshMode::Inline, Backend::Sharded, 13);
+}
+
+#[test]
+fn resume_bitwise_drained_async_adamw() {
+    // AdamW has nothing to refresh — drained-async degenerates to inline,
+    // and the checkpoint path must not trip over the absent service.
+    resume_roundtrip(OptKind::AdamW, RefreshMode::Async, Backend::Sharded, 14);
+}
+
+#[test]
+fn resume_bitwise_drained_async_soap() {
+    resume_roundtrip(OptKind::Soap, RefreshMode::Async, Backend::Sharded, 15);
+}
+
+#[test]
+fn resume_bitwise_drained_async_shampoo() {
+    resume_roundtrip(OptKind::Shampoo, RefreshMode::Async, Backend::Serial, 16);
+}
+
+#[test]
+fn resume_rejects_wrong_seed() {
+    let mut first = builder(OptKind::AdamW, 4, 21, RefreshMode::Inline).build().unwrap();
+    first.run().unwrap();
+    let ck = first.checkpoint().unwrap();
+    let err = builder(OptKind::AdamW, 8, 22, RefreshMode::Inline)
+        .resume_checkpoint(ck)
+        .build()
+        .err()
+        .expect("seed mismatch must be rejected")
+        .to_string();
+    assert!(err.contains("seed"), "{err}");
+}
+
+#[test]
+fn resume_rejects_exhausted_budget_and_wrong_shapes() {
+    let mut first = builder(OptKind::AdamW, 6, 23, RefreshMode::Inline).build().unwrap();
+    first.run().unwrap();
+    let ck = first.checkpoint().unwrap();
+    // Budget already spent: steps(4) < checkpoint step 6.
+    let err = builder(OptKind::AdamW, 4, 23, RefreshMode::Inline)
+        .resume_checkpoint(ck)
+        .build()
+        .err()
+        .expect("exhausted budget must be rejected")
+        .to_string();
+    assert!(err.contains("budget") || err.contains("steps"), "{err}");
+
+    // Different model geometry: shape mismatch is an error, not garbage.
+    let mut first = builder(OptKind::AdamW, 3, 24, RefreshMode::Inline).build().unwrap();
+    first.run().unwrap();
+    let ck = first.checkpoint().unwrap();
+    let other = NplmConfig { vocab: 64, context: 3, dim: 16, hidden: 24 };
+    let err = TrainSession::builder()
+        .model(ModelSpec::nplm(other, SEQ, BATCH))
+        .optimizer(OptKind::AdamW)
+        .steps(6)
+        .seed(24)
+        .resume_checkpoint(ck)
+        .build()
+        .err()
+        .expect("shape mismatch must be rejected")
+        .to_string();
+    assert!(err.contains("×") || err.contains("param"), "{err}");
+}
+
+#[test]
+fn resume_rejects_changed_data_geometry() {
+    // The cursor counts stream batches of (batch × grad-accum) rows; a
+    // different grad-accum on resume would fast-forward to the wrong
+    // tokens. Strict: rejected, not silently divergent.
+    let mut first = builder(OptKind::AdamW, 4, 25, RefreshMode::Inline)
+        .grad_accum(2)
+        .build()
+        .unwrap();
+    first.run().unwrap();
+    let ck = first.checkpoint().unwrap();
+    assert_eq!(ck.stream_batch as usize, BATCH * 2);
+    let err = builder(OptKind::AdamW, 8, 25, RefreshMode::Inline)
+        .resume_checkpoint(ck)
+        .build()
+        .err()
+        .expect("geometry mismatch must be rejected")
+        .to_string();
+    assert!(err.contains("geometry") || err.contains("grad-accum"), "{err}");
+}
+
+#[test]
+fn composed_spec_session_trains_and_resumes() {
+    // The builder is spec-transparent: a novel basis×engine combo trains
+    // and checkpoints through the same path as the presets.
+    let spec = OptKind::parse("basis=eigen:one-sided,inner=adafactor").unwrap();
+    resume_roundtrip(spec, RefreshMode::Inline, Backend::Sharded, 31);
+}
+
+#[test]
+fn session_learns_on_soap() {
+    let mut session = builder(OptKind::Soap, 150, 1, RefreshMode::Inline).build().unwrap();
+    let log = session.run().unwrap();
+    assert!(
+        log.tail_loss(10) < log.losses[0].1 - 0.4,
+        "SOAP did not learn through the session API: {} → {}",
+        log.losses[0].1,
+        log.tail_loss(10)
+    );
+}
