@@ -24,10 +24,10 @@ pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
 /// `--config` file format (embedded in unknown-key errors).
 pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, seed, \
 precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
-artifacts, log-every, save, resume, one-sided, factorized, refresh-eigh, \
-async-refresh, pjrt-optimizer";
+max-precond-dim, merge-dims, artifacts, log-every, save, resume, one-sided, \
+factorized, refresh-eigh, async-refresh, pjrt-optimizer";
 
-const VALUE_KEYS: [&str; 17] = [
+const VALUE_KEYS: [&str; 19] = [
     "model",
     "optimizer",
     "backend",
@@ -41,6 +41,8 @@ const VALUE_KEYS: [&str; 17] = [
     "refresh-workers",
     "refresh-method",
     "refresh-mode",
+    "max-precond-dim",
+    "merge-dims",
     "artifacts",
     "log-every",
     "save",
@@ -72,6 +74,11 @@ pub struct RunConfig {
     pub async_refresh: bool,
     /// Worker threads for the async refresh service.
     pub refresh_workers: usize,
+    /// Dimensions larger than this keep Q = identity (per mode for rank-3+
+    /// tensors; `== cap` is still preconditioned).
+    pub max_precond_dim: usize,
+    /// Adjacent-mode merge threshold for rank-3+ tensors (0 = off).
+    pub merge_dims: usize,
     pub artifacts_dir: String,
     pub log_every: u64,
     /// Resume from this checkpoint at build time (empty = fresh run).
@@ -98,6 +105,8 @@ impl Default for RunConfig {
             refresh_eigh: false,
             async_refresh: false,
             refresh_workers: 2,
+            max_precond_dim: 4096,
+            merge_dims: 0,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             resume: None,
@@ -143,6 +152,8 @@ impl RunConfig {
             "refresh-mode" => {
                 self.async_refresh = RefreshMode::parse(value)? == RefreshMode::Async;
             }
+            "max-precond-dim" => self.max_precond_dim = num(key, value)?,
+            "merge-dims" => self.merge_dims = num(key, value)?,
             "artifacts" => self.artifacts_dir = value.to_string(),
             "log-every" => self.log_every = num(key, value)?,
             "save" => self.save = (!value.is_empty()).then(|| value.to_string()),
@@ -208,6 +219,8 @@ impl RunConfig {
             "refresh-mode={}\n",
             if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline }.name()
         ));
+        s.push_str(&format!("max-precond-dim={}\n", self.max_precond_dim));
+        s.push_str(&format!("merge-dims={}\n", self.merge_dims));
         s.push_str(&format!("one-sided={}\n", self.one_sided));
         s.push_str(&format!("factorized={}\n", self.factorized));
         s.push_str(&format!("artifacts={}\n", self.artifacts_dir));
@@ -336,6 +349,8 @@ impl RunConfig {
             precond_freq: self.precond_freq,
             one_sided: self.one_sided,
             factorized: self.factorized,
+            max_precond_dim: self.max_precond_dim,
+            merge_dims: self.merge_dims,
             refresh: if self.refresh_eigh { RefreshMethod::Eigh } else { RefreshMethod::QrPowerIteration },
             refresh_mode: if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline },
             refresh_workers: self.refresh_workers,
@@ -442,6 +457,12 @@ mod tests {
         let h = rc.hyper();
         assert_eq!(h.refresh_mode, RefreshMode::Async);
         assert_eq!(h.refresh_workers, 3);
+
+        rc.max_precond_dim = 128;
+        rc.merge_dims = 256;
+        let h = rc.hyper();
+        assert_eq!(h.max_precond_dim, 128);
+        assert_eq!(h.merge_dims, 256);
     }
 
     #[test]
@@ -497,6 +518,8 @@ mod tests {
         rc.refresh_workers = 4;
         rc.refresh_eigh = true;
         rc.async_refresh = true;
+        rc.max_precond_dim = 96;
+        rc.merge_dims = 64;
         rc.log_every = 5;
         rc.validate().unwrap();
 

@@ -3,22 +3,33 @@
 //! runs can be forked (e.g. the shorter-LR-schedule runs of Fig 2 resume
 //! from a common prefix).
 //!
-//! Format v2 (little-endian):
+//! Format v3 (little-endian):
 //!   magic "SOAPCKPT" | version u32 | step u64
 //!   | data_batches u64 | has_seed u8 | seed u64
 //!   | stream_batch u32 | stream_seq u32
+//!   | n_shapes u32 | per param: rank u32, dims (rank × u32)
 //!   | n_params u32 | per param: rows u32, cols u32, f32 data
 //!   | n_state u32  | per layer: layer_idx u32, n_tensors u32,
 //!                    per tensor: rows u32, cols u32, f32 data
 //!   | end of file (strict — trailing bytes are rejected)
 //!
-//! v1 (legacy, before the data cursor) lacked the `data_batches`/seed/
-//! stream-geometry fields; such files still load, with `data_batches`
-//! defaulting to `step` (one batch per step — true for every writer this
-//! repo ever shipped), `seed` unknown, and the geometry unrecorded. Files
-//! with a version newer than [`VERSION`] are rejected with a clear error
-//! instead of being misparsed into garbage state, and truncated files name
-//! the field at which the data ran out.
+//! v3 adds the **tensor-shape section**: the true N-dimensional dims of
+//! every parameter (a rank-3 conv kernel is carried as its 2-D fold in the
+//! param section, so without the dims a resumed run could silently rebuild
+//! it as a matrix and precondition it differently). `n_shapes` must equal
+//! `n_params` and each shape's element count must match its param's — both
+//! are validated with field-naming errors. Optimizer state rows for rank-3+
+//! layers carry per-mode factor records (see
+//! `optim::compose::StateLayout::TensorModes`).
+//!
+//! v2 (before the shape section) and v1 (before the data cursor — such
+//! files load with `data_batches` defaulting to `step`, one batch per step,
+//! true for every writer this repo ever shipped, `seed` unknown, and the
+//! geometry unrecorded) both still load, with `param_dims` left empty
+//! (= unrecorded; rank-2 assumed). Files with a version newer than
+//! [`VERSION`] are rejected with a clear error instead of being misparsed
+//! into garbage state, and truncated files name the field at which the data
+//! ran out.
 
 use std::io::Read;
 use std::path::Path;
@@ -29,12 +40,14 @@ use crate::linalg::Matrix;
 
 const MAGIC: &[u8; 8] = b"SOAPCKPT";
 /// Newest checkpoint format this build reads and the one it writes.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// Upper bounds used for strict field validation: a corrupt or foreign file
 /// should fail on a bound check, not attempt a multi-gigabyte allocation.
 const MAX_PARAMS: usize = 1 << 20;
 const MAX_TENSORS_PER_LAYER: usize = 1 << 12;
+/// No realistic parameter exceeds this rank; a bigger value is corruption.
+const MAX_RANK: usize = 16;
 
 pub struct Checkpoint {
     pub step: u64,
@@ -56,6 +69,12 @@ pub struct Checkpoint {
     pub stream_batch: u32,
     /// Sequence length of the stream; 0 = unrecorded (legacy v1).
     pub stream_seq: u32,
+    /// True N-dimensional dims of each parameter (aligned with `params`,
+    /// which carry the 2-D fold). Empty = unrecorded (legacy v1/v2 files;
+    /// rank-2 assumed). When present, resume paths reject a session whose
+    /// tensor shapes disagree instead of silently re-preconditioning a
+    /// rank-3 kernel as a matrix.
+    pub param_dims: Vec<Vec<usize>>,
 }
 
 impl Checkpoint {
@@ -63,6 +82,10 @@ impl Checkpoint {
     /// counter" case (v1 semantics; the session layer fills the cursor,
     /// seed, and stream geometry explicitly).
     pub fn new(step: u64, params: Vec<Matrix>, opt_state: Vec<(usize, Vec<Matrix>)>) -> Self {
+        // Dims default to each param's carrier fold (rank 2) — callers with
+        // genuine tensor parameters (the session layer) fill `param_dims`
+        // explicitly.
+        let param_dims = params.iter().map(|p| vec![p.rows, p.cols]).collect();
         Self {
             step,
             params,
@@ -71,6 +94,7 @@ impl Checkpoint {
             seed: None,
             stream_batch: 0,
             stream_seq: 0,
+            param_dims,
         }
     }
 }
@@ -137,6 +161,20 @@ impl Checkpoint {
         out.extend_from_slice(&self.seed.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&self.stream_batch.to_le_bytes());
         out.extend_from_slice(&self.stream_seq.to_le_bytes());
+        // v3 tensor-shape section: one dims record per param, falling back
+        // to the carrier fold for callers that never set `param_dims`.
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for (i, p) in self.params.iter().enumerate() {
+            let fallback = [p.rows, p.cols];
+            let dims: &[usize] = match self.param_dims.get(i) {
+                Some(d) if !d.is_empty() => d,
+                _ => &fallback,
+            };
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for &d in dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+        }
         out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
         for p in &self.params {
             write_matrix(&mut out, p);
@@ -182,11 +220,57 @@ impl Checkpoint {
             // Legacy v1: one batch per step, seed + geometry unrecorded.
             (step, None, 0, 0)
         };
+        let param_dims: Vec<Vec<usize>> = if version >= 3 {
+            let n_shapes = read_u32(&mut r, "shape count")? as usize;
+            anyhow::ensure!(
+                n_shapes <= MAX_PARAMS,
+                "checkpoint shape count {n_shapes} implausible"
+            );
+            let mut dims = Vec::with_capacity(n_shapes);
+            for i in 0..n_shapes {
+                let rank = read_u32(&mut r, &format!("shape {i} rank"))? as usize;
+                anyhow::ensure!(
+                    (1..=MAX_RANK).contains(&rank),
+                    "checkpoint shape {i}: rank {rank} implausible (expected 1..={MAX_RANK})"
+                );
+                let mut d = Vec::with_capacity(rank);
+                for m in 0..rank {
+                    let v = read_u32(&mut r, &format!("shape {i} dim {m}"))? as usize;
+                    anyhow::ensure!(v > 0, "checkpoint shape {i}: dim {m} is zero");
+                    d.push(v);
+                }
+                let numel = d.iter().try_fold(1usize, |a, &x| a.checked_mul(x));
+                anyhow::ensure!(
+                    matches!(numel, Some(n) if n < (1 << 31)),
+                    "checkpoint shape {i}: element count overflows"
+                );
+                dims.push(d);
+            }
+            dims
+        } else {
+            Vec::new() // legacy v1/v2: shapes unrecorded, rank-2 assumed
+        };
         let n_params = read_u32(&mut r, "param count")? as usize;
         anyhow::ensure!(n_params <= MAX_PARAMS, "checkpoint param count {n_params} implausible");
+        anyhow::ensure!(
+            version < 3 || param_dims.len() == n_params,
+            "checkpoint shape section lists {} shapes but there are {n_params} params",
+            param_dims.len()
+        );
         let mut params = Vec::with_capacity(n_params);
         for i in 0..n_params {
-            params.push(read_matrix(&mut r, &format!("param {i}"))?);
+            let p = read_matrix(&mut r, &format!("param {i}"))?;
+            if let Some(dims) = param_dims.get(i) {
+                let numel: usize = dims.iter().product();
+                anyhow::ensure!(
+                    numel == p.numel(),
+                    "checkpoint param {i}: tensor shape {dims:?} has {numel} elements but \
+                     the stored matrix is {}×{}",
+                    p.rows,
+                    p.cols
+                );
+            }
+            params.push(p);
         }
         let n_state = read_u32(&mut r, "state row count")? as usize;
         anyhow::ensure!(n_state <= MAX_PARAMS, "checkpoint state count {n_state} implausible");
@@ -209,7 +293,16 @@ impl Checkpoint {
             "checkpoint carries {} unexpected trailing bytes (truncated rewrite or foreign data)",
             r.len()
         );
-        Ok(Self { step, params, opt_state, data_batches, seed, stream_batch, stream_seq })
+        Ok(Self {
+            step,
+            params,
+            opt_state,
+            data_batches,
+            seed,
+            stream_batch,
+            stream_seq,
+            param_dims,
+        })
     }
 }
 
@@ -235,6 +328,7 @@ mod tests {
             seed: Some(7),
             stream_batch: 16,
             stream_seq: 32,
+            param_dims: vec![vec![3, 4], vec![1, 7]],
         }
     }
 
@@ -252,6 +346,29 @@ mod tests {
         assert_eq!(back.params.len(), 2);
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(7).data);
+        assert_eq!(back.param_dims, ck.param_dims, "v3 shape section must round-trip");
+    }
+
+    #[test]
+    fn rank3_dims_roundtrip_and_mismatch_named() {
+        let mut rng = Rng::new(2);
+        let mut ck = sample();
+        // Declare param 0 (3×4 carrier) as a rank-3 [3, 2, 2] tensor.
+        ck.param_dims[0] = vec![3, 2, 2];
+        ck.params[0] = Matrix::randn(&mut rng, 3, 4, 1.0);
+        let path = tmpfile("rank3dims");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.param_dims[0], vec![3, 2, 2]);
+        // A dims/param element-count mismatch must error naming the param.
+        let mut ck = sample();
+        ck.param_dims[0] = vec![5, 5];
+        let path = tmpfile("baddims");
+        ck.save(&path).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(format!("{err:#}").contains("param 0"), "{err:#}");
     }
 
     #[test]
@@ -296,9 +413,10 @@ mod tests {
         let path = tmpfile("hugedims");
         ck.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        // Param 0 header sits right after the fixed v2 prefix:
-        // magic(8)+version(4)+step(8)+cursor(8)+flag(1)+seed(8)+geom(8)+n(4).
-        let hdr = 8 + 4 + 8 + 8 + 1 + 8 + 8 + 4;
+        // Param 0 header sits right after the fixed v3 prefix:
+        // magic(8)+version(4)+step(8)+cursor(8)+flag(1)+seed(8)+geom(8)
+        // + shape section (n(4) + two rank-2 records of 4+8 bytes) + n(4).
+        let hdr = 8 + 4 + 8 + 8 + 1 + 8 + 8 + (4 + 2 * 12) + 4;
         bytes[hdr..hdr + 4].copy_from_slice(&46_000u32.to_le_bytes());
         bytes[hdr + 4..hdr + 8].copy_from_slice(&46_000u32.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
@@ -363,6 +481,43 @@ mod tests {
         assert_eq!(back.seed, None);
         assert_eq!((back.stream_batch, back.stream_seq), (0, 0), "v1 geometry unrecorded");
         assert_eq!(back.params[0].data, ck.params[0].data);
+        assert!(back.param_dims.is_empty(), "v1 shapes unrecorded");
+    }
+
+    #[test]
+    fn legacy_v2_files_still_load() {
+        // Hand-write a v2 file: cursor/seed/geometry but no shape section.
+        let ck = sample();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&ck.step.to_le_bytes());
+        out.extend_from_slice(&ck.data_batches.to_le_bytes());
+        out.push(1u8);
+        out.extend_from_slice(&ck.seed.unwrap().to_le_bytes());
+        out.extend_from_slice(&ck.stream_batch.to_le_bytes());
+        out.extend_from_slice(&ck.stream_seq.to_le_bytes());
+        out.extend_from_slice(&(ck.params.len() as u32).to_le_bytes());
+        for p in &ck.params {
+            write_matrix(&mut out, p);
+        }
+        out.extend_from_slice(&(ck.opt_state.len() as u32).to_le_bytes());
+        for (idx, tensors) in &ck.opt_state {
+            out.extend_from_slice(&(*idx as u32).to_le_bytes());
+            out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+            for t in tensors {
+                write_matrix(&mut out, t);
+            }
+        }
+        let path = tmpfile("v2");
+        std::fs::write(&path, &out).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.seed, Some(7));
+        assert_eq!((back.stream_batch, back.stream_seq), (16, 32));
+        assert_eq!(back.params[0].data, ck.params[0].data);
+        assert!(back.param_dims.is_empty(), "v2 shapes unrecorded");
     }
 
     #[test]

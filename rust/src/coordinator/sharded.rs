@@ -11,37 +11,70 @@
 
 use std::sync::Arc;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, TensorShape};
 use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
 use crate::precond::{RefreshService, RefreshStats};
 
-/// Per-step FLOP estimate of a rotating optimizer on an m×n layer (§7.3).
+/// Per-step FLOP estimate of a rotating optimizer on an arbitrary-rank
+/// layer: the per-mode decomposition cost `Σₖ dₖ³` (eigh / power-iteration
+/// per Kronecker factor) plus the per-mode projection cost
+/// `2·numel·Σₖ dₖ` (each mode-k product touches every element `dₖ` times,
+/// twice per step for rotate + rotate-back). On rank-2 this reduces to
+/// exactly the paper's §7.3 matrix model `m³ + n³ + 2m²n + 2mn²`.
+pub fn tensor_update_flops(dims: &[usize]) -> f64 {
+    let numel: f64 = dims.iter().map(|&d| d as f64).product();
+    let mut cost = 0.0;
+    for &d in dims {
+        let d = d as f64;
+        cost += d * d * d;
+    }
+    for &d in dims {
+        cost += 2.0 * numel * d as f64;
+    }
+    cost
+}
+
+/// Per-step FLOP estimate of a rotating optimizer on an m×n layer (§7.3) —
+/// the rank-2 specialization of [`tensor_update_flops`].
 pub fn layer_update_flops(m: usize, n: usize) -> f64 {
-    let (m, n) = (m as f64, n as f64);
-    m * m * m + n * n * n + 2.0 * m * m * n + 2.0 * m * n * n
+    tensor_update_flops(&[m, n])
+}
+
+/// Greedy longest-processing-time assignment of `costs` to `k` shards —
+/// the core both shape-typed entry points share. Deterministic: ties in
+/// cost break on the lower layer index, ties in load on the lower shard
+/// index. Empty inputs yield an empty assignment; `k` larger than the
+/// layer count simply leaves shards empty.
+fn assign_by_cost(costs: &[f64], k: usize) -> Vec<usize> {
+    assert!(k > 0);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap().then(a.cmp(&b)));
+    let mut load = vec![0.0f64; k];
+    let mut assign = vec![0usize; costs.len()];
+    for idx in order {
+        let best = (0..k)
+            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+            .unwrap();
+        assign[idx] = best;
+        load[best] += costs[idx];
+    }
+    assign
 }
 
 /// Greedy longest-processing-time assignment of layers to `k` shards.
 /// Returns shard index per layer. Deterministic.
 pub fn assign_shards(shapes: &[(usize, usize)], k: usize) -> Vec<usize> {
-    assert!(k > 0);
-    let mut order: Vec<usize> = (0..shapes.len()).collect();
-    order.sort_by(|&a, &b| {
-        let ca = layer_update_flops(shapes[a].0, shapes[a].1);
-        let cb = layer_update_flops(shapes[b].0, shapes[b].1);
-        cb.partial_cmp(&ca).unwrap().then(a.cmp(&b))
-    });
-    let mut load = vec![0.0f64; k];
-    let mut assign = vec![0usize; shapes.len()];
-    for idx in order {
-        let (m, n) = shapes[idx];
-        let best = (0..k)
-            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
-            .unwrap();
-        assign[idx] = best;
-        load[best] += layer_update_flops(m, n);
-    }
-    assign
+    let costs: Vec<f64> = shapes.iter().map(|&(m, n)| layer_update_flops(m, n)).collect();
+    assign_by_cost(&costs, k)
+}
+
+/// [`assign_shards`] over arbitrary-rank shapes: the cost model is the
+/// per-mode decomposition cost ([`tensor_update_flops`]), not the carrier
+/// `m·n` fold — a `[8, 8, 8]` kernel costs three cheap 8³ factors, not one
+/// 64³ one, and the balancer must know that.
+pub fn assign_shards_tensors(shapes: &[TensorShape], k: usize) -> Vec<usize> {
+    let costs: Vec<f64> = shapes.iter().map(|s| tensor_update_flops(s.dims())).collect();
+    assign_by_cost(&costs, k)
 }
 
 struct ShardSlot {
@@ -68,15 +101,34 @@ pub struct ShardedOptimizer {
 
 impl ShardedOptimizer {
     pub fn new(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)], workers: usize) -> Self {
+        let tshapes: Vec<TensorShape> =
+            shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+        Self::new_tensors(kind, hyper, &tshapes, workers)
+    }
+
+    /// [`Self::new`] over arbitrary-rank parameter shapes: layers are
+    /// cost-balanced by the per-mode decomposition model
+    /// ([`tensor_update_flops`]) and rank-3+ layers build per-mode bases.
+    /// Rank-2 shapes build the identical matrix-path layers [`Self::new`]
+    /// builds.
+    pub fn new_tensors(
+        kind: OptKind,
+        hyper: &Hyper,
+        shapes: &[TensorShape],
+        workers: usize,
+    ) -> Self {
         let workers = workers.max(1);
-        let assign = assign_shards(shapes, workers);
+        let assign = assign_shards_tensors(shapes, workers);
         let mut shards: Vec<Vec<ShardSlot>> = (0..workers).map(|_| Vec::new()).collect();
-        for (idx, (&(m, n), &s)) in shapes.iter().zip(&assign).enumerate() {
+        for (idx, (shape, &s)) in shapes.iter().zip(&assign).enumerate() {
             // Staggered refresh phase (layer_idx % f): spreads the periodic
             // decomposition cost across steps in Inline mode and spreads the
             // enqueue burst in Async mode. Serial ModelOptimizer staggers
             // identically, keeping the two executors bitwise equal.
-            shards[s].push(ShardSlot { layer_idx: idx, opt: kind.build_staggered(idx, m, n, hyper) });
+            shards[s].push(ShardSlot {
+                layer_idx: idx,
+                opt: kind.build_staggered_tensor(idx, shape, hyper),
+            });
         }
         let refresh_service = (hyper.refresh_mode == RefreshMode::Async).then(|| {
             Arc::new(RefreshService::new(hyper.refresh_workers))

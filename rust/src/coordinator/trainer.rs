@@ -457,7 +457,7 @@ mod tests {
             zipf_alpha: 1.3,
         };
         Trainer::new_native(
-            NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+            NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false },
             cfg,
             24,
             8,
@@ -497,7 +497,7 @@ mod tests {
             t.cfg.grad_accum = 2;
             // rebuild stream with doubled batch
             Trainer::new_native(
-                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false },
                 TrainerConfig { grad_accum: 2, ..t.cfg },
                 24,
                 8,
@@ -532,7 +532,7 @@ mod tests {
         t.cfg.hyper = Hyper { precond_freq: 4, ..Hyper::default() }.async_refresh();
         // Rebuild with the async hyper (native_trainer built an inline one).
         let mut t = Trainer::new_native(
-            NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+            NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false },
             t.cfg.clone(),
             24,
             8,

@@ -11,6 +11,7 @@ pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod roots;
+pub mod tensor;
 
 pub use eigh::{eigh, eigh_warm};
 pub use gemm::{
@@ -19,3 +20,4 @@ pub use gemm::{
 pub use matrix::Matrix;
 pub use qr::{power_iter_refresh, qr, qr_positive};
 pub use roots::{inv_root_eigh, inv_root_newton, root_eigh};
+pub use tensor::TensorShape;

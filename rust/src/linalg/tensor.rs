@@ -1,0 +1,381 @@
+//! N-dimensional tensor shapes and mode-k (unfolding) operations over the
+//! crate's contiguous row-major `f32` storage.
+//!
+//! Shampoo (Gupta et al., 2018) is defined for arbitrary-rank parameters via
+//! one Kronecker factor **per mode**; the SOAP recipe inherits that
+//! decomposition for its eigenbasis. This module supplies the substrate:
+//!
+//! - [`TensorShape`] — the dimension vector of a parameter, with the
+//!   canonical 2-D **carrier** fold `(numel/d_last, d_last)` under which the
+//!   rest of the system (model gradients, [`Matrix`] storage, checkpoints)
+//!   moves the data. A rank-2 shape's carrier is itself, so every existing
+//!   matrix parameter is a tensor parameter already.
+//! - mode-k **gram products** ([`mode_gram_into`]) — `G₍ₖ₎·G₍ₖ₎ᵀ`, the
+//!   per-mode factor statistic, computed without materializing the unfolding
+//!   for the first and last modes (they are reshapes of row-major storage)
+//!   and through a caller-provided unfold buffer for interior modes.
+//! - mode-k **products** ([`mode_apply_into`]) — `T ×ₖ Q` (or `×ₖ Qᵀ`),
+//!   the per-mode basis rotation, executed as contiguous-slice GEMMs over
+//!   the existing blocked [`crate::linalg::gemm`] kernel family.
+//!
+//! Everything here is **allocation-free in steady state**: the `*_into`
+//! entry points write through caller-provided grow-only buffers (the
+//! optimizer threads its per-layer `Workspace` arena), so the zero-alloc
+//! step path extends to rank-3+ parameters unchanged.
+
+use super::gemm::{gemm_into, gemm_nt_into, gemm_tn_into};
+use super::Matrix;
+
+/// The dimension vector of an N-dimensional parameter.
+///
+/// Rank 1 covers bias/gain vectors, rank 2 the classic weight matrices,
+/// rank 3+ convolution-style kernels. Data is always carried row-major and
+/// contiguous in a [`Matrix`] of the [`TensorShape::carrier`] shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorShape {
+    dims: Vec<usize>,
+}
+
+impl TensorShape {
+    /// A shape from explicit dims. Zero-sized dims are rejected (a zero-size
+    /// parameter has no optimizer state to shape).
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(!dims.is_empty(), "TensorShape needs at least one dim");
+        assert!(dims.iter().all(|&d| d > 0), "TensorShape dims must be > 0: {dims:?}");
+        Self { dims }
+    }
+
+    /// The rank-2 shape of an `m×n` matrix parameter.
+    pub fn matrix(rows: usize, cols: usize) -> Self {
+        Self::new(vec![rows, cols])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// The canonical 2-D fold the data is carried under:
+    /// `(numel / d_last, d_last)`. For rank ≤ 2 this is the shape itself
+    /// (`(1, n)` for vectors), and for a conv-style `[k, in, out]` kernel it
+    /// is the `(k·in, out)` matrix its forward GEMM uses — i.e. exactly the
+    /// [`Matrix`] the model already materializes.
+    pub fn carrier(&self) -> (usize, usize) {
+        let last = *self.dims.last().expect("non-empty");
+        (self.numel() / last, last)
+    }
+
+    /// Greedy adjacent-mode merging (`merge_small_dims` in
+    /// DistributedShampoo): walk the dims left to right, folding a dim into
+    /// its left neighbour while the merged size stays ≤ `cap`. `cap == 0`
+    /// disables merging. Never changes `numel`.
+    pub fn merge_adjacent(&self, cap: usize) -> TensorShape {
+        if cap == 0 || self.rank() <= 1 {
+            return self.clone();
+        }
+        let mut out = vec![self.dims[0]];
+        for &d in &self.dims[1..] {
+            let last = out.last_mut().expect("non-empty");
+            if last.saturating_mul(d) <= cap {
+                *last *= d;
+            } else {
+                out.push(d);
+            }
+        }
+        TensorShape::new(out)
+    }
+
+    /// The shape the optimizer actually preconditions: rank ≤ 2 passes
+    /// through untouched (the matrix path is the golden reference), rank ≥ 3
+    /// drops size-1 modes and applies [`TensorShape::merge_adjacent`] with
+    /// `merge_cap`. A rank-3+ shape that collapses to rank ≤ 2 with its
+    /// carrier fold preserved re-joins the bitwise-pinned matrix path (see
+    /// `OptKind::build_tensor`).
+    pub fn effective(&self, merge_cap: usize) -> TensorShape {
+        if self.rank() <= 2 {
+            return self.clone();
+        }
+        let squeezed: Vec<usize> = self.dims.iter().copied().filter(|&d| d > 1).collect();
+        let mut s = TensorShape::new(if squeezed.is_empty() { vec![1] } else { squeezed });
+        if s.rank() > 2 {
+            s = s.merge_adjacent(merge_cap);
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for d in &self.dims {
+            if !first {
+                write!(f, "×")?;
+            }
+            write!(f, "{d}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+#[inline]
+fn split_at_mode(dims: &[usize], k: usize) -> (usize, usize, usize) {
+    let outer: usize = dims[..k].iter().product();
+    let dk = dims[k];
+    let inner: usize = dims[k + 1..].iter().product();
+    (outer, dk, inner)
+}
+
+/// Copy the mode-`k` unfolding `G₍ₖ₎` (shape `dk × numel/dk`) of `data`
+/// into `out` (grow-only reuse). Only interior modes need this copy — the
+/// first and last modes of a row-major tensor are reshapes.
+pub fn unfold_into(data: &[f32], dims: &[usize], k: usize, out: &mut Matrix) {
+    let (outer, dk, inner) = split_at_mode(dims, k);
+    debug_assert_eq!(data.len(), outer * dk * inner, "data/shape mismatch");
+    let cols = outer * inner;
+    out.reuse_shape(dk, cols);
+    for o in 0..outer {
+        for i in 0..dk {
+            let src = &data[(o * dk + i) * inner..(o * dk + i + 1) * inner];
+            out.data[i * cols + o * inner..i * cols + o * inner + inner].copy_from_slice(src);
+        }
+    }
+}
+
+/// `out ← G₍ₖ₎·G₍ₖ₎ᵀ` (`dk × dk`), the mode-`k` gram of `data` with shape
+/// `dims`. Allocation-free given grow-only `out`/`unfold`/`pack` buffers:
+/// mode 0 runs `A·Aᵀ` on the `(d₀ × rest)` reshape, the last mode runs
+/// `MᵀM` on the carrier reshape, interior modes unfold into `unfold` first.
+pub fn mode_gram_into(
+    data: &[f32],
+    dims: &[usize],
+    k: usize,
+    out: &mut Matrix,
+    unfold: &mut Matrix,
+    pack: &mut Vec<f32>,
+) {
+    let (outer, dk, inner) = split_at_mode(dims, k);
+    debug_assert_eq!(data.len(), outer * dk * inner, "data/shape mismatch");
+    let rest = outer * inner;
+    out.reuse_shape(dk, dk);
+    if outer == 1 {
+        // First (or only) mode: data IS the (dk × inner) unfolding.
+        gemm_nt_into(dk, rest, dk, data, data, &mut out.data, pack);
+    } else if inner == 1 {
+        // Last mode: data reshapes to M (rest × dk); G₍ₖ₎G₍ₖ₎ᵀ = MᵀM.
+        gemm_tn_into(dk, rest, dk, data, data, &mut out.data);
+    } else {
+        unfold_into(data, dims, k, unfold);
+        gemm_nt_into(dk, rest, dk, &unfold.data, &unfold.data, &mut out.data, pack);
+    }
+}
+
+/// Allocating convenience wrapper over [`mode_gram_into`] (init/refresh-time
+/// and test callers).
+pub fn mode_gram(data: &[f32], dims: &[usize], k: usize) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    let mut unfold = Matrix::zeros(0, 0);
+    let mut pack = Vec::new();
+    mode_gram_into(data, dims, k, &mut out, &mut unfold, &mut pack);
+    out
+}
+
+/// Mode-`k` product: every mode-`k` fiber `f` of `src` is replaced by
+/// `Qᵀ·f` (`transpose_q == true`, the into-basis rotation) or `Q·f`
+/// (`false`, the back-rotation / symmetric-factor application). `src` and
+/// `dst` must be distinct buffers of `numel` elements; `q` is `dk × dk`.
+///
+/// Executes as contiguous-slice GEMMs: the last mode is one `(rest × dk)`
+/// row-wise product, earlier modes run one `(dk × inner)` GEMM per outer
+/// slice. No allocation beyond grow-only `pack`.
+pub fn mode_apply_into(
+    src: &[f32],
+    dst: &mut [f32],
+    dims: &[usize],
+    k: usize,
+    q: &Matrix,
+    transpose_q: bool,
+    pack: &mut Vec<f32>,
+) {
+    let (outer, dk, inner) = split_at_mode(dims, k);
+    debug_assert_eq!(src.len(), outer * dk * inner, "src/shape mismatch");
+    debug_assert_eq!(dst.len(), src.len(), "dst/shape mismatch");
+    assert_eq!((q.rows, q.cols), (dk, dk), "mode-{k} factor must be {dk}×{dk}");
+    if inner == 1 {
+        // Fibers are the rows of the (outer × dk) reshape: Qᵀf ≡ row·Q,
+        // Q·f ≡ row·Qᵀ.
+        if transpose_q {
+            gemm_into(outer, dk, dk, src, &q.data, dst);
+        } else {
+            gemm_nt_into(outer, dk, dk, src, &q.data, dst, pack);
+        }
+    } else {
+        for o in 0..outer {
+            let s = &src[o * dk * inner..(o + 1) * dk * inner];
+            let d = &mut dst[o * dk * inner..(o + 1) * dk * inner];
+            if transpose_q {
+                gemm_tn_into(dk, dk, inner, &q.data, s, d);
+            } else {
+                gemm_into(dk, dk, inner, &q.data, s, d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor3(rng: &mut Rng, d: [usize; 3]) -> (Vec<f32>, Vec<usize>) {
+        let n: usize = d.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_normal(&mut data, 1.0);
+        (data, d.to_vec())
+    }
+
+    /// Reference mode-k unfolding via explicit index arithmetic.
+    fn unfold_ref(data: &[f32], dims: &[usize], k: usize) -> Matrix {
+        let (outer, dk, inner) = split_at_mode(dims, k);
+        Matrix::from_fn(dk, outer * inner, |i, col| {
+            let (o, j) = (col / inner, col % inner);
+            data[(o * dk + i) * inner + j]
+        })
+    }
+
+    #[test]
+    fn shape_basics_and_carrier() {
+        let s = TensorShape::new(vec![3, 4, 5]);
+        assert_eq!((s.rank(), s.numel()), (3, 60));
+        assert_eq!(s.carrier(), (12, 5));
+        assert_eq!(TensorShape::matrix(7, 2).carrier(), (7, 2));
+        assert_eq!(TensorShape::new(vec![9]).carrier(), (1, 9));
+        assert_eq!(format!("{s}"), "3×4×5");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_dim_rejected() {
+        let _ = TensorShape::new(vec![3, 0]);
+    }
+
+    #[test]
+    fn merge_adjacent_greedy() {
+        let s = TensorShape::new(vec![2, 3, 4, 5]);
+        assert_eq!(s.merge_adjacent(6).dims(), &[6, 4, 5]);
+        assert_eq!(s.merge_adjacent(24).dims(), &[24, 5]);
+        assert_eq!(s.merge_adjacent(1000).dims(), &[120]);
+        assert_eq!(s.merge_adjacent(0).dims(), s.dims(), "0 disables merging");
+        assert_eq!(s.merge_adjacent(6).numel(), s.numel());
+    }
+
+    #[test]
+    fn effective_squeezes_and_merges_only_rank3_plus() {
+        // Rank ≤ 2 is untouched — the matrix path stays the reference.
+        let m = TensorShape::matrix(1, 8);
+        assert_eq!(m.effective(1000), m);
+        // Size-1 modes drop; [2,1,3] is really a 2×3 matrix.
+        assert_eq!(TensorShape::new(vec![2, 1, 3]).effective(0).dims(), &[2, 3]);
+        // Merging applies after the squeeze.
+        assert_eq!(TensorShape::new(vec![2, 3, 4]).effective(6).dims(), &[6, 4]);
+        assert_eq!(TensorShape::new(vec![2, 3, 4]).effective(0).dims(), &[2, 3, 4]);
+        assert_eq!(TensorShape::new(vec![1, 1, 1]).effective(0).dims(), &[1]);
+    }
+
+    #[test]
+    fn unfold_matches_reference_all_modes() {
+        let mut rng = Rng::new(11);
+        let (data, dims) = tensor3(&mut rng, [3, 4, 5]);
+        for k in 0..3 {
+            let mut out = Matrix::zeros(0, 0);
+            unfold_into(&data, &dims, k, &mut out);
+            let want = unfold_ref(&data, &dims, k);
+            assert_eq!(out, want, "mode {k}");
+        }
+    }
+
+    #[test]
+    fn mode_gram_matches_unfold_product() {
+        let mut rng = Rng::new(12);
+        let (data, dims) = tensor3(&mut rng, [3, 4, 5]);
+        for k in 0..3 {
+            let got = mode_gram(&data, &dims, k);
+            let unf = unfold_ref(&data, &dims, k);
+            let want = unf.matmul_nt(&unf);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "mode {k}: {}",
+                got.max_abs_diff(&want)
+            );
+            assert_eq!((got.rows, got.cols), (dims[k], dims[k]));
+        }
+    }
+
+    #[test]
+    fn mode_apply_matches_unfolded_gemm() {
+        let mut rng = Rng::new(13);
+        let (data, dims) = tensor3(&mut rng, [3, 4, 5]);
+        for k in 0..3 {
+            let q = Matrix::randn(&mut rng, dims[k], dims[k], 1.0);
+            for &transpose in &[true, false] {
+                let mut dst = vec![0.0f32; data.len()];
+                let mut pack = Vec::new();
+                mode_apply_into(&data, &mut dst, &dims, k, &q, transpose, &mut pack);
+                // Reference: unfold, multiply, compare unfolded results.
+                let unf = unfold_ref(&data, &dims, k);
+                let want = if transpose { q.matmul_tn(&unf) } else { q.matmul(&unf) };
+                let got = unfold_ref(&dst, &dims, k);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-4,
+                    "mode {k} transpose={transpose}: {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mode_apply_round_trips_with_orthonormal_q() {
+        use crate::linalg::qr_positive;
+        let mut rng = Rng::new(14);
+        let (data, dims) = tensor3(&mut rng, [4, 3, 6]);
+        for k in 0..3 {
+            let (q, _) = qr_positive(&Matrix::randn(&mut rng, dims[k], dims[k], 1.0));
+            let mut mid = vec![0.0f32; data.len()];
+            let mut back = vec![0.0f32; data.len()];
+            let mut pack = Vec::new();
+            mode_apply_into(&data, &mut mid, &dims, k, &q, true, &mut pack);
+            mode_apply_into(&mid, &mut back, &dims, k, &q, false, &mut pack);
+            for (a, b) in data.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-4, "mode {k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank2_mode_ops_match_matrix_products() {
+        // The rank-2 special case must agree with the plain matrix algebra
+        // the 2-D eigenbasis uses: mode-0 gram = G·Gᵀ, mode-1 gram = Gᵀ·G.
+        let mut rng = Rng::new(15);
+        let g = Matrix::randn(&mut rng, 5, 7, 1.0);
+        let dims = vec![5, 7];
+        assert!(mode_gram(&g.data, &dims, 0).max_abs_diff(&g.matmul_nt(&g)) < 1e-4);
+        assert!(mode_gram(&g.data, &dims, 1).max_abs_diff(&g.matmul_tn(&g)) < 1e-4);
+        let q = Matrix::randn(&mut rng, 5, 5, 1.0);
+        let mut dst = vec![0.0f32; g.data.len()];
+        let mut pack = Vec::new();
+        mode_apply_into(&g.data, &mut dst, &dims, 0, &q, true, &mut pack);
+        let want = q.matmul_tn(&g);
+        assert!(
+            Matrix::from_vec(5, 7, dst).max_abs_diff(&want) < 1e-4,
+            "mode-0 rotation disagrees with QᵀG"
+        );
+    }
+}

@@ -23,7 +23,7 @@ fn app() -> App {
                 .opt(
                     "model",
                     "nano",
-                    "artifact manifest config, or a native model (nplm|nplm-tiny)",
+                    "artifact manifest config, or a native model (nplm|nplm-tiny|nplm-conv)",
                 )
                 .opt(
                     "optimizer",
@@ -42,6 +42,16 @@ fn app() -> App {
                 .opt("refresh-workers", "2", "async refresh service worker threads")
                 .opt("refresh-method", "", "qr|eigh (named form of --refresh-eigh)")
                 .opt("refresh-mode", "", "inline|async (named form of --async-refresh)")
+                .opt(
+                    "max-precond-dim",
+                    "4096",
+                    "dims above this keep Q=identity (per mode for rank-3+ tensors; == is preconditioned)",
+                )
+                .opt(
+                    "merge-dims",
+                    "0",
+                    "rank-3+ tensors: merge adjacent modes while the product stays <= this (0 = off)",
+                )
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
                 .opt("config", "", "key=value config file (CLI args override it)")

@@ -9,7 +9,7 @@
 //! two together.
 
 use crate::data::Batch;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, TensorShape};
 use crate::util::rng::Rng;
 
 /// GeLU (tanh approximation, as in the paper's models).
@@ -38,19 +38,39 @@ pub struct NplmConfig {
     pub dim: usize,
     /// Hidden width.
     pub hidden: usize,
+    /// Declare W1 as the rank-3 convolution kernel it actually is
+    /// (`[context, dim, hidden]` — a width-`context` conv over the embedded
+    /// history, carried as its `(context·dim) × hidden` GEMM fold). The
+    /// forward/backward math is identical either way; the optimizer sees a
+    /// genuine rank-3 parameter and preconditions it per mode (the
+    /// `nplm-conv` model preset).
+    pub conv: bool,
 }
 
 impl NplmConfig {
     pub fn tiny() -> Self {
-        Self { vocab: 64, context: 4, dim: 16, hidden: 32 }
+        Self { vocab: 64, context: 4, dim: 16, hidden: 32, conv: false }
     }
 
-    /// Parameter shapes in canonical order: [E, W1, W2].
+    /// Parameter shapes in canonical order: [E, W1, W2] — always the 2-D
+    /// carrier folds the forward/backward GEMMs use.
     pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.tensor_shapes().iter().map(|s| s.carrier()).collect()
+    }
+
+    /// True tensor shapes of the parameters: with `conv`, W1 is the rank-3
+    /// `[context, dim, hidden]` kernel; otherwise its 2-D fold. Each
+    /// shape's [`TensorShape::carrier`] equals the matching [`Self::shapes`]
+    /// entry, so gradients and checkpoints are unchanged.
+    pub fn tensor_shapes(&self) -> Vec<TensorShape> {
         vec![
-            (self.vocab, self.dim),
-            (self.context * self.dim, self.hidden),
-            (self.hidden, self.vocab),
+            TensorShape::matrix(self.vocab, self.dim),
+            if self.conv {
+                TensorShape::new(vec![self.context, self.dim, self.hidden])
+            } else {
+                TensorShape::matrix(self.context * self.dim, self.hidden)
+            },
+            TensorShape::matrix(self.hidden, self.vocab),
         ]
     }
 
@@ -172,7 +192,7 @@ mod tests {
 
     #[test]
     fn gradients_match_finite_differences() {
-        let cfg = NplmConfig { vocab: 12, context: 2, dim: 4, hidden: 6 };
+        let cfg = NplmConfig { vocab: 12, context: 2, dim: 4, hidden: 6, conv: false };
         let mut rng = Rng::new(71);
         let mut params = init_params(&cfg, &mut rng);
         let batch = toy_batch(&cfg, 2);
@@ -237,5 +257,22 @@ mod tests {
             assert_eq!((p.rows, p.cols), (m, n));
         }
         assert_eq!(cfg.num_params(), 64 * 16 + 64 * 32 + 32 * 64);
+    }
+
+    #[test]
+    fn conv_variant_declares_rank3_w1_with_same_carrier() {
+        let cfg = NplmConfig { conv: true, ..NplmConfig::tiny() };
+        let ts = cfg.tensor_shapes();
+        assert_eq!(ts[1].dims(), &[cfg.context, cfg.dim, cfg.hidden]);
+        // Carriers (and therefore gradients, params, checkpoints) are the
+        // SAME matrices as the non-conv model — only the optimizer's view
+        // of W1 changes.
+        let plain = NplmConfig { conv: false, ..cfg };
+        assert_eq!(cfg.shapes(), plain.shapes());
+        let mut rng = Rng::new(74);
+        let params = init_params(&cfg, &mut rng);
+        for (p, s) in params.iter().zip(&ts) {
+            assert_eq!((p.rows, p.cols), s.carrier());
+        }
     }
 }

@@ -729,6 +729,8 @@ pub enum AnyBasis {
     Identity(IdentityBasis),
     Eigen(EigenBasis),
     GradSvd(GradSvdBasis),
+    /// Per-mode eigenbasis for rank-3+ tensor parameters.
+    TensorEigen(super::tensor_basis::TensorEigenBasis),
 }
 
 impl AnyBasis {
@@ -745,6 +747,13 @@ impl AnyBasis {
             _ => None,
         }
     }
+
+    pub fn as_tensor_eigen(&self) -> Option<&super::tensor_basis::TensorEigenBasis> {
+        match self {
+            AnyBasis::TensorEigen(b) => Some(b),
+            _ => None,
+        }
+    }
 }
 
 impl Basis for AnyBasis {
@@ -753,6 +762,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.begin_step(g, t, ws),
             AnyBasis::Eigen(b) => b.begin_step(g, t, ws),
             AnyBasis::GradSvd(b) => b.begin_step(g, t, ws),
+            AnyBasis::TensorEigen(b) => b.begin_step(g, t, ws),
         }
     }
 
@@ -761,6 +771,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.end_step(g, t, ws),
             AnyBasis::Eigen(b) => b.end_step(g, t, ws),
             AnyBasis::GradSvd(b) => b.end_step(g, t, ws),
+            AnyBasis::TensorEigen(b) => b.end_step(g, t, ws),
         }
     }
 
@@ -773,6 +784,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.project_into(x, out, scratch),
             AnyBasis::Eigen(b) => b.project_into(x, out, scratch),
             AnyBasis::GradSvd(b) => b.project_into(x, out, scratch),
+            AnyBasis::TensorEigen(b) => b.project_into(x, out, scratch),
         }
     }
 
@@ -781,6 +793,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.project_back_into(x, out, scratch),
             AnyBasis::Eigen(b) => b.project_back_into(x, out, scratch),
             AnyBasis::GradSvd(b) => b.project_back_into(x, out, scratch),
+            AnyBasis::TensorEigen(b) => b.project_back_into(x, out, scratch),
         }
     }
 
@@ -789,6 +802,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.refresh_seconds(),
             AnyBasis::Eigen(b) => b.refresh_seconds(),
             AnyBasis::GradSvd(b) => b.refresh_seconds(),
+            AnyBasis::TensorEigen(b) => b.refresh_seconds(),
         }
     }
 
@@ -797,6 +811,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.attach_async(service),
             AnyBasis::Eigen(b) => b.attach_async(service),
             AnyBasis::GradSvd(b) => b.attach_async(service),
+            AnyBasis::TensorEigen(b) => b.attach_async(service),
         }
     }
 
@@ -805,6 +820,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.adopt_pending(),
             AnyBasis::Eigen(b) => b.adopt_pending(),
             AnyBasis::GradSvd(b) => b.adopt_pending(),
+            AnyBasis::TensorEigen(b) => b.adopt_pending(),
         }
     }
 
@@ -813,6 +829,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.basis_snapshot_step(),
             AnyBasis::Eigen(b) => b.basis_snapshot_step(),
             AnyBasis::GradSvd(b) => b.basis_snapshot_step(),
+            AnyBasis::TensorEigen(b) => b.basis_snapshot_step(),
         }
     }
 
@@ -821,6 +838,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.state_bytes(),
             AnyBasis::Eigen(b) => b.state_bytes(),
             AnyBasis::GradSvd(b) => b.state_bytes(),
+            AnyBasis::TensorEigen(b) => b.state_bytes(),
         }
     }
 
@@ -829,6 +847,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.export(),
             AnyBasis::Eigen(b) => b.export(),
             AnyBasis::GradSvd(b) => b.export(),
+            AnyBasis::TensorEigen(b) => b.export(),
         }
     }
 
@@ -841,6 +860,7 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.import(flags, it),
             AnyBasis::Eigen(b) => b.import(flags, it),
             AnyBasis::GradSvd(b) => b.import(flags, it),
+            AnyBasis::TensorEigen(b) => b.import(flags, it),
         }
     }
 
@@ -849,6 +869,28 @@ impl Basis for AnyBasis {
             AnyBasis::Identity(b) => b.layout(),
             AnyBasis::Eigen(b) => b.layout(),
             AnyBasis::GradSvd(b) => b.layout(),
+            AnyBasis::TensorEigen(b) => b.layout(),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eigen_dim_cap_boundary_preconditions_at_equality() {
+        // The 2-D reference for the boundary convention the tensor basis
+        // must agree with (see `tensor_basis::tests`): a side whose dim is
+        // EXACTLY `max_precond_dim` is preconditioned; `cap + 1` keeps
+        // identity. Both sides of the boundary, both sides of the matrix.
+        let h = Hyper { max_precond_dim: 8, ..Hyper::default() };
+        let b = EigenBasis::rotation(8, 9, &h);
+        assert!(b.l.is_some(), "rows == cap must be preconditioned");
+        assert!(b.r.is_none(), "cols == cap + 1 must stay identity");
+        let b = EigenBasis::rotation(9, 8, &h);
+        assert!(b.l.is_none() && b.r.is_some());
+        let b = EigenBasis::rotation(8, 8, &h);
+        assert!(b.l.is_some() && b.r.is_some());
     }
 }

@@ -29,13 +29,39 @@
 //! CLI's `--optimizer basis=…,inner=…[,graft=…]` grammar ([`spec`]) builds
 //! novel combinations with zero new code. Composed presets reproduce the
 //! pre-refactor monolithic optimizers bitwise (`rust/tests/golden_compose.rs`).
+//!
+//! # Tensor parameters (rank ≠ 2)
+//!
+//! Shampoo is defined for arbitrary-rank tensors (one Kronecker factor per
+//! mode — Gupta et al., 2018), and the SOAP recipe prescribes how each rank
+//! is treated in practice. `OptKind::build_tensor` routes a
+//! [`crate::linalg::TensorShape`] accordingly:
+//!
+//! - **rank 1** (biases, gains): plain Adam — the paper's implementation
+//!   detail 1. The rotating bases fall back to [`basis::IdentityBasis`];
+//!   Shampoo still preconditions the `1×n` carrier.
+//! - **rank 2**: the existing two/one-sided [`basis::EigenBasis`] path,
+//!   bitwise identical to the pre-tensor code (`rust/tests/golden_tensor.rs`).
+//! - **rank 3+**: [`tensor_basis::TensorEigenBasis`] — per-mode factor EMAs
+//!   and eigenbases applied as a chain of mode-k products, after
+//!   `merge_dims`-style adjacent-mode merging (`Hyper::merge_dims`) and with
+//!   any mode larger than `Hyper::max_precond_dim` kept at identity
+//!   (`d == cap` is still preconditioned — the 2-D boundary convention).
+//!
+//! Engines are rank-agnostic: they run over the carrier fold
+//! (`TensorShape::carrier`) and talk to the basis only through
+//! `project_into`/`project_back_into`, so SOAP's momentum-re-rotation,
+//! factorized second moments, grafting, and the zero-allocation workspace
+//! path all carry over to any rank unchanged.
 
 pub mod basis;
 pub mod engine;
 pub mod spec;
+pub mod tensor_basis;
 pub mod workspace;
 
 pub use basis::{AnyBasis, EigenBasis, EigenFlavor, GradSvdBasis, IdentityBasis};
+pub use tensor_basis::TensorEigenBasis;
 pub use engine::{
     factored_normalize, AdafactorEngine, AdamEngine, AnyEngine, InverseRootEngine, MomentumSpace,
 };
@@ -81,6 +107,10 @@ pub enum StateLayout {
     /// `[flags(1×1 = has_p), M, second…, P?]` — gradient-SVD basis
     /// (GaLore rows).
     BasisLast,
+    /// `[flags(1×(2+3r+1)), M, per-mode records…, second…(, graft V)]` with
+    /// flags `[initialized, rank, (has_k, step_k, vecs_k)×r, full_v]` —
+    /// per-mode tensor eigenbasis (rank-3+ rows, checkpoint format v3).
+    TensorModes,
 }
 
 /// Per-layer basis state machine: carries gradients into a working space,
@@ -391,6 +421,19 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
                 out.extend(es.second);
                 out.extend(bs.tensors);
             }
+            StateLayout::TensorModes => {
+                // Rank-3+ row (checkpoint v3): the basis's self-describing
+                // per-mode flags with the engine's full-V marker appended,
+                // then momentum, per-mode factor records, engine second
+                // moments. No legacy spelling to match — this layout is new
+                // with tensor parameters.
+                let mut flags = bs.flags.clone();
+                flags.push(self.engine.full_v() as u8 as f32);
+                out.push(Matrix::from_vec(1, flags.len(), flags));
+                out.push(es.momentum);
+                out.extend(bs.tensors);
+                out.extend(es.second);
+            }
         }
         if let Some(graft) = &self.graft {
             out.push(graft.v.clone());
@@ -470,6 +513,24 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
                 self.engine.import(m, &mut it)?;
                 self.basis.import(&flags.data, &mut it)?;
             }
+            StateLayout::TensorModes => {
+                let flags =
+                    it.next().ok_or_else(|| anyhow::anyhow!("state missing flags row"))?;
+                // [initialized, rank, (has, step, vecs)×r, full_v] — at
+                // least rank 2 ⇒ 9 values.
+                anyhow::ensure!(flags.cols >= 9, "tensor-mode state flags malformed");
+                let has_v = flags.data[flags.cols - 1] != 0.0;
+                anyhow::ensure!(
+                    has_v == self.engine.full_v(),
+                    "checkpoint second moment is {} but the composed engine expects {}",
+                    if has_v { "a full V" } else { "factored (va, vc)" },
+                    if self.engine.full_v() { "a full V" } else { "factored (va, vc)" },
+                );
+                let m = it.next().ok_or_else(|| anyhow::anyhow!("state missing momentum"))?;
+                ensure_momentum_shape(self.engine.momentum(), &m)?;
+                self.basis.import(&flags.data[..flags.cols - 1], &mut it)?;
+                self.engine.import(m, &mut it)?;
+            }
         }
         if let Some(graft) = &mut self.graft {
             graft.v = it
@@ -548,6 +609,45 @@ pub mod presets {
         let engine =
             AnyEngine::Adafactor(AdafactorEngine::new(rows, cols, &h, MomentumSpace::InBasis));
         Composed::new(basis, engine, None, h, "adafactor")
+    }
+
+    /// SOAP on a rank-3+ tensor: per-mode rotation eigenbasis × Adam (or ×
+    /// rank-1 Adafactor over the carrier fold when `h.factorized`). `carrier`
+    /// is the 2-D fold the gradients arrive under
+    /// ([`crate::linalg::TensorShape::carrier`]); `modes` the (squeezed,
+    /// merged) mode sizes the basis preconditions over — same `numel`,
+    /// possibly different split.
+    pub fn soap_nd(
+        carrier: (usize, usize),
+        modes: &crate::linalg::TensorShape,
+        h: Hyper,
+    ) -> DynComposed {
+        let basis = AnyBasis::TensorEigen(TensorEigenBasis::rotation(modes, &h));
+        let engine = if h.factorized {
+            AnyEngine::Adafactor(AdafactorEngine::new(
+                carrier.0,
+                carrier.1,
+                &h,
+                MomentumSpace::Original,
+            ))
+        } else {
+            AnyEngine::Adam(AdamEngine::new(carrier.0, carrier.1, &h, MomentumSpace::Original))
+        };
+        Composed::new(basis, engine, None, h, "soap")
+    }
+
+    /// Shampoo on a rank-3+ tensor: per-mode inverse-root basis × the
+    /// Kronecker sandwich, with (optionally inactive) AdamW norm grafting —
+    /// the Gupta et al. (2018) tensor case.
+    pub fn shampoo_nd(
+        carrier: (usize, usize),
+        modes: &crate::linalg::TensorShape,
+        h: Hyper,
+    ) -> DynComposed {
+        let basis = AnyBasis::TensorEigen(TensorEigenBasis::inverse_root(modes, &h));
+        let engine = AnyEngine::InverseRoot(InverseRootEngine::new(carrier.0, carrier.1, &h));
+        let graft = Graft::new(carrier.0, carrier.1, &h);
+        Composed::new(basis, engine, Some(graft), h, "shampoo")
     }
 }
 

@@ -12,6 +12,7 @@
 use super::presets;
 use super::{AnyBasis, AnyEngine, Composed, Graft};
 use super::{AdafactorEngine, AdamEngine, EigenBasis, GradSvdBasis, IdentityBasis, MomentumSpace};
+use crate::linalg::TensorShape;
 use crate::optim::hyper::Hyper;
 use crate::optim::{LayerOptimizer, OptKind};
 
@@ -254,6 +255,52 @@ impl CompositionSpec {
             // validate() rules out InverseRoot off the eigen basis, and
             // eigen×InverseRoot is always canonical (Shampoo).
             (_, EngineSpec::InverseRoot) => "shampoo",
+        }
+    }
+
+    /// Build per-layer state for an arbitrary-rank tensor parameter — the
+    /// spec-grammar analogue of `OptKind::build_tensor`: rank ≤ 2 (and
+    /// carrier-preserving collapses) take the exact matrix path, rank ≥ 3
+    /// eigen-basis specs precondition per mode, and bases without a
+    /// per-mode generalization (identity, grad-SVD) run on the carrier fold.
+    pub fn build_tensor(&self, shape: &TensorShape, h: &Hyper) -> Box<dyn LayerOptimizer> {
+        let mut hr = h.clone();
+        self.apply(&mut hr);
+        let eff = shape.effective(hr.merge_dims);
+        let carrier = shape.carrier();
+        // Rank-≤1 collapses always take the carrier matrix path (no
+        // per-mode structure left); rank-2 collapses only when the merge
+        // preserved the carrier fold (see `OptKind::build_tensor`).
+        if eff.rank() < 2 || (eff.rank() == 2 && eff.carrier() == carrier) {
+            return self.build(carrier.0, carrier.1, h);
+        }
+        match (self.basis, self.inner) {
+            (BasisSpec::Eigen { .. }, EngineSpec::InverseRoot) => {
+                let mut opt = presets::shampoo_nd(carrier, &eff, hr);
+                if let Some(graft) = &mut opt.graft {
+                    match self.graft {
+                        GraftSpec::Adam => graft.active = true,
+                        GraftSpec::Off => graft.active = false,
+                        GraftSpec::Inherit => {}
+                    }
+                }
+                Box::new(opt)
+            }
+            // `apply` already folded the engine choice into `hr.factorized`.
+            (BasisSpec::Eigen { .. }, _) => {
+                let mut opt = presets::soap_nd(carrier, &eff, hr);
+                if matches!(self.graft, GraftSpec::Adam) {
+                    let mut g = Graft::new(carrier.0, carrier.1, opt.hyper());
+                    g.active = true;
+                    opt.graft = Some(g);
+                }
+                Box::new(opt)
+            }
+            // Identity / grad-SVD bases have no per-mode decomposition —
+            // the carrier fold is their native space.
+            (BasisSpec::Identity, _) | (BasisSpec::GradSvd, _) => {
+                self.build(carrier.0, carrier.1, h)
+            }
         }
     }
 

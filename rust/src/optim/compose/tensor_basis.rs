@@ -1,0 +1,696 @@
+//! [`TensorEigenBasis`] — the per-mode Kronecker-factor basis for rank-3+
+//! tensor parameters.
+//!
+//! Shampoo (Gupta et al., 2018) defines one factor per tensor mode:
+//! `L_k ← β·L_k + (1−β)·G₍ₖ₎G₍ₖ₎ᵀ`, with the preconditioner applied as a
+//! chain of mode-k products. This basis generalizes the 2-D
+//! [`EigenBasis`](super::basis::EigenBasis) to any rank with the same two
+//! flavors:
+//!
+//! - [`EigenFlavor::Rotation`] (SOAP): per-mode orthonormal eigenvector
+//!   bases `Q_k`; `project` applies `×ₖ Q_kᵀ` over all modes, `project_back`
+//!   applies `×ₖ Q_k`. Factor EMAs update *after* the step (Algorithm 3),
+//!   refreshed by QR power iteration or warm `eigh` per mode.
+//! - [`EigenFlavor::InverseRoot`] (Shampoo): per-mode cached inverse roots
+//!   `L_k^{-1/e}`; `project` applies the whole sandwich (`project_back` is
+//!   the identity). Factor EMAs update *before* the direction.
+//!
+//! Paper implementation detail 3 applies per mode: a mode with
+//! `d_k > max_precond_dim` keeps `Q_k = I` (it is simply skipped in the
+//! product chain), with the boundary convention `d_k == max_precond_dim` ⇒
+//! **preconditioned** — identical to the 2-D basis (pinned by boundary
+//! tests on both). Mode merging (`Hyper::merge_dims`) happens *before* this
+//! basis is built — see `TensorShape::effective`.
+//!
+//! Async refresh enqueues **one task per mode**, each with its own
+//! [`BasisHandle`]: modes publish and are adopted independently, so a slow
+//! large-mode decomposition never delays a cheap small-mode refresh.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::basis::EigenFlavor;
+use super::workspace::{Scratch, Workspace};
+use super::{Basis, BasisState, StateLayout};
+use crate::linalg::tensor::{mode_apply_into, mode_gram, mode_gram_into};
+use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
+use crate::optim::hyper::{Hyper, RefreshMethod};
+use crate::precond::{BasisHandle, BasisPayload, RefreshService};
+
+/// Per-mode eigenbasis (rank-3+ tensors). One factor EMA, one published
+/// basis matrix, and (for the inverse-root flavor) one warm-start
+/// eigenvector cache **per mode**.
+pub struct TensorEigenBasis {
+    h: Hyper,
+    pub flavor: EigenFlavor,
+    /// The (squeezed, merged) mode sizes this basis preconditions over.
+    dims: Vec<usize>,
+    /// Per-mode factor EMAs; `None` = that mode is identity (dim-capped).
+    pub factors: Vec<Option<Matrix>>,
+    /// Rotation: eigenvector bases `Q_k` (None until first init).
+    /// InverseRoot: cached `L_k^{-1/e}` (identity at start).
+    pub qs: Vec<Option<Matrix>>,
+    /// InverseRoot only: per-mode warm-start eigenvector caches.
+    vecs: Vec<Option<Matrix>>,
+    pub initialized: bool,
+    refresh_secs: f64,
+    /// Async refresh plumbing: one handle per preconditioned mode
+    /// (`None` entries for capped modes / inline operation).
+    service: Option<Arc<RefreshService>>,
+    handles: Vec<Option<Arc<BasisHandle>>>,
+    adopted: Vec<u64>,
+    /// Step whose factor snapshot backs each mode's ACTIVE basis.
+    mode_steps: Vec<u64>,
+}
+
+impl TensorEigenBasis {
+    fn build(dims: &[usize], h: &Hyper, flavor: EigenFlavor) -> Self {
+        assert!(dims.len() >= 2, "TensorEigenBasis needs rank ≥ 2 (got {dims:?})");
+        // Boundary convention: d_k == max_precond_dim IS preconditioned —
+        // the same `<=` the 2-D EigenBasis uses (see the boundary tests).
+        let active: Vec<bool> = dims.iter().map(|&d| d <= h.max_precond_dim).collect();
+        let factors = dims
+            .iter()
+            .zip(&active)
+            .map(|(&d, &a)| a.then(|| Matrix::zeros(d, d)))
+            .collect();
+        let qs: Vec<Option<Matrix>> = match flavor {
+            EigenFlavor::Rotation => vec![None; dims.len()],
+            // Inverse roots start at identity so the sandwich is well-defined
+            // before the first refresh (mirrors the 2-D basis).
+            EigenFlavor::InverseRoot => dims
+                .iter()
+                .zip(&active)
+                .map(|(&d, &a)| a.then(|| Matrix::eye(d)))
+                .collect(),
+        };
+        let r = dims.len();
+        Self {
+            h: h.clone(),
+            flavor,
+            dims: dims.to_vec(),
+            factors,
+            qs,
+            vecs: (0..r).map(|_| None).collect(),
+            initialized: false,
+            refresh_secs: 0.0,
+            service: None,
+            handles: (0..r).map(|_| None).collect(),
+            adopted: vec![0; r],
+            mode_steps: vec![0; r],
+        }
+    }
+
+    /// SOAP-style per-mode rotation basis.
+    pub fn rotation(modes: &crate::linalg::TensorShape, h: &Hyper) -> Self {
+        Self::build(modes.dims(), h, EigenFlavor::Rotation)
+    }
+
+    /// Shampoo-style per-mode inverse-root basis.
+    pub fn inverse_root(modes: &crate::linalg::TensorShape, h: &Hyper) -> Self {
+        Self::build(modes.dims(), h, EigenFlavor::InverseRoot)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn any_active(&self) -> bool {
+        self.factors.iter().any(|f| f.is_some())
+    }
+
+    /// First-step initialization (Rotation): set each `L_k` from the first
+    /// gradient's mode-k gram and take a full eigendecomposition for the
+    /// starting basis — the rank-2 `init_rotation` per mode.
+    fn init_rotation(&mut self, g: &Matrix, t: u64) {
+        let t0 = Instant::now();
+        for k in 0..self.dims.len() {
+            if self.factors[k].is_none() {
+                continue;
+            }
+            let f = mode_gram(&g.data, &self.dims, k);
+            let (_, v) = eigh(&f);
+            self.factors[k] = Some(f);
+            self.qs[k] = Some(v);
+            self.mode_steps[k] = t;
+        }
+        self.initialized = true;
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// One mode's rotation refresh, pure in the (factor, basis) snapshot so
+    /// the inline and background paths run identical code.
+    fn rotation_refresh_one(method: RefreshMethod, f: &Matrix, q: &Matrix) -> Matrix {
+        match method {
+            RefreshMethod::QrPowerIteration => power_iter_refresh(f, q),
+            RefreshMethod::Eigh => eigh_warm(f, q).1,
+        }
+    }
+
+    /// One mode's inverse-root refresh, pure in the bias-corrected factor
+    /// snapshot. Returns `(L_k^{-1/e}, eigenvectors)`.
+    fn root_refresh_one(
+        fhat: &Matrix,
+        prev: Option<&Matrix>,
+        e: f32,
+        eps: f32,
+    ) -> (Matrix, Matrix) {
+        let (w, v) = match prev {
+            Some(prev) => eigh_warm(fhat, prev),
+            None => eigh(fhat),
+        };
+        (inv_root_from_eig(&w, &v, e, eps), v)
+    }
+
+    /// Bias-corrected snapshot of mode `k`'s factor at step `t`.
+    fn corrected_factor(&self, k: usize, t: u64) -> Matrix {
+        let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
+        self.factors[k].as_ref().expect("active mode has factor").scale(1.0 / bc)
+    }
+
+    /// Periodic refresh, executed inline (synchronously), all modes.
+    fn refresh_inline(&mut self, t: u64) {
+        let t0 = Instant::now();
+        for k in 0..self.dims.len() {
+            if self.factors[k].is_none() {
+                continue;
+            }
+            match self.flavor {
+                EigenFlavor::Rotation => {
+                    let q_new = Self::rotation_refresh_one(
+                        self.h.refresh,
+                        self.factors[k].as_ref().expect("checked"),
+                        self.qs[k].as_ref().expect("initialized before refresh"),
+                    );
+                    self.qs[k] = Some(q_new);
+                }
+                EigenFlavor::InverseRoot => {
+                    let fhat = self.corrected_factor(k, t);
+                    let (inv, v) = Self::root_refresh_one(
+                        &fhat,
+                        self.vecs[k].as_ref(),
+                        self.h.shampoo_exponent,
+                        self.h.shampoo_eps,
+                    );
+                    self.qs[k] = Some(inv);
+                    self.vecs[k] = Some(v);
+                }
+            }
+            self.mode_steps[k] = t;
+        }
+        self.refresh_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Async mode: enqueue ONE refresh task per preconditioned mode, each
+    /// gated by its own handle — a mode with a refresh still in flight is
+    /// skipped (load shedding), the others proceed independently.
+    fn enqueue_refresh(&self, service: &Arc<RefreshService>, t: u64) {
+        for k in 0..self.dims.len() {
+            let Some(handle) = &self.handles[k] else { continue };
+            if self.factors[k].is_none() || !handle.try_begin_refresh() {
+                continue;
+            }
+            match self.flavor {
+                EigenFlavor::Rotation => {
+                    let method = self.h.refresh;
+                    let f = self.factors[k].clone().expect("checked");
+                    let q = self.qs[k].clone().expect("initialized before refresh");
+                    service.enqueue(
+                        Arc::clone(handle),
+                        t,
+                        Box::new(move || BasisPayload {
+                            left: Some(Self::rotation_refresh_one(method, &f, &q)),
+                            right: None,
+                            left_aux: None,
+                            right_aux: None,
+                        }),
+                    );
+                }
+                EigenFlavor::InverseRoot => {
+                    let fhat = self.corrected_factor(k, t);
+                    let prev = self.vecs[k].clone();
+                    let e = self.h.shampoo_exponent;
+                    let eps = self.h.shampoo_eps;
+                    service.enqueue(
+                        Arc::clone(handle),
+                        t,
+                        Box::new(move || {
+                            let (inv, v) =
+                                Self::root_refresh_one(&fhat, prev.as_ref(), e, eps);
+                            BasisPayload {
+                                left: Some(inv),
+                                right: None,
+                                left_aux: Some(v),
+                                right_aux: None,
+                            }
+                        }),
+                    );
+                }
+            }
+        }
+    }
+
+    fn refresh_or_enqueue(&mut self, t: u64) {
+        match self.service.clone() {
+            Some(service) => self.enqueue_refresh(&service, t),
+            None => self.refresh_inline(t),
+        }
+    }
+
+    /// Async mode: adopt each mode's newest published basis independently.
+    /// One atomic load per mode on the no-news path; each mode's payload is
+    /// adopted wholesale, so a torn per-mode basis is impossible (modes are
+    /// independent factors — there is no cross-mode pair to tear).
+    fn adopt_published(&mut self) {
+        for k in 0..self.dims.len() {
+            let Some(handle) = &self.handles[k] else { continue };
+            if handle.version() <= self.adopted[k] {
+                continue;
+            }
+            if let Some(published) = handle.latest() {
+                if published.version > self.adopted[k] {
+                    if let Some(q) = &published.payload.left {
+                        self.qs[k] = Some(q.clone());
+                    }
+                    if self.flavor == EigenFlavor::InverseRoot {
+                        // Keep the previous warm cache when the payload
+                        // carries none (mirrors the 2-D adoption).
+                        if let Some(v) = &published.payload.left_aux {
+                            self.vecs[k] = Some(v.clone());
+                        }
+                    }
+                    self.adopted[k] = published.version;
+                    self.mode_steps[k] = published.snapshot_step;
+                }
+            }
+        }
+    }
+
+    /// Update every active mode's factor EMA from `g`, through the workspace
+    /// (zero steady-state allocations; the per-mode grams cycle through
+    /// `ws.factor`/`ws.unfold` serially, exactly like the 2-D basis shares
+    /// `ws.factor` between `GGᵀ` and `GᵀG`).
+    fn ema_factors(&mut self, g: &Matrix, ws: &mut Workspace) {
+        debug_assert_eq!(
+            g.numel(),
+            self.dims.iter().product::<usize>(),
+            "gradient numel does not match the basis dims"
+        );
+        let Workspace { factor, unfold, scratch, .. } = ws;
+        for k in 0..self.dims.len() {
+            let Some(l) = &mut self.factors[k] else { continue };
+            mode_gram_into(&g.data, &self.dims, k, factor, unfold, &mut scratch.pack);
+            l.ema_inplace(factor, self.h.shampoo_beta);
+        }
+    }
+
+    /// Apply the active modes' factors as a chain of mode-k products,
+    /// ping-ponging between `scratch.tmp` and `out` so the final hop always
+    /// lands in `out`. `transpose == true` applies `Q_kᵀ` to each fiber
+    /// (into-basis), `false` applies `Q_k` (back / symmetric sandwich).
+    fn apply_modes(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch, transpose: bool) {
+        let active = self.qs.iter().filter(|q| q.is_some()).count();
+        if active == 0 {
+            out.copy_from(x);
+            return;
+        }
+        let Scratch { tmp, pack } = scratch;
+        out.reuse_shape(x.rows, x.cols);
+        tmp.reuse_shape(x.rows, x.cols);
+        let mut applied = 0usize;
+        for (k, q) in self.qs.iter().enumerate() {
+            let Some(q) = q else { continue };
+            applied += 1;
+            // Land hop `active` in `out`, alternating backwards from there.
+            let to_out = (active - applied) % 2 == 0;
+            if to_out {
+                let src: &[f32] = if applied == 1 { &x.data } else { &tmp.data };
+                mode_apply_into(src, &mut out.data, &self.dims, k, q, transpose, pack);
+            } else {
+                let src: &[f32] = if applied == 1 { &x.data } else { &out.data };
+                mode_apply_into(src, &mut tmp.data, &self.dims, k, q, transpose, pack);
+            }
+        }
+    }
+}
+
+impl Basis for TensorEigenBasis {
+    fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                if !self.initialized {
+                    self.init_rotation(g, t);
+                }
+                // Pick up anything the background service published since
+                // the last step — before projecting, so it's used now.
+                self.adopt_published();
+            }
+            EigenFlavor::InverseRoot => {
+                // Factor EMAs first (Shampoo updates them ahead of the
+                // direction — the roots computed this step may use them).
+                self.ema_factors(g, ws);
+                self.adopt_published();
+                // The first recompute always runs inline so the roots are
+                // never identity-only.
+                if !self.initialized {
+                    self.refresh_inline(t);
+                    self.initialized = true;
+                } else if self.h.is_refresh_step(t) {
+                    self.refresh_or_enqueue(t);
+                }
+            }
+        }
+    }
+
+    fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
+        if self.flavor != EigenFlavor::Rotation {
+            return;
+        }
+        // Per-mode factor EMAs + periodic refresh AFTER the step (Alg 3).
+        self.ema_factors(g, ws);
+        if self.h.is_refresh_step(t) {
+            self.refresh_or_enqueue(t);
+        }
+    }
+
+    fn project_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
+        match self.flavor {
+            // Rotate into the eigenbasis: ×ₖ Q_kᵀ over every active mode.
+            EigenFlavor::Rotation => self.apply_modes(x, out, scratch, true),
+            // Apply the whole preconditioner: ×ₖ L_k^{-1/e} (symmetric).
+            EigenFlavor::InverseRoot => self.apply_modes(x, out, scratch, false),
+        }
+    }
+
+    fn project_back_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut Scratch) {
+        match self.flavor {
+            // Rotate back: ×ₖ Q_k.
+            EigenFlavor::Rotation => self.apply_modes(x, out, scratch, false),
+            EigenFlavor::InverseRoot => out.copy_from(x),
+        }
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.refresh_secs
+    }
+
+    fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
+        if !self.any_active() {
+            return false; // every mode capped to identity ⇒ nothing to refresh
+        }
+        self.service = Some(Arc::clone(service));
+        for k in 0..self.dims.len() {
+            self.handles[k] = self.factors[k].is_some().then(|| Arc::new(BasisHandle::new()));
+            self.adopted[k] = 0;
+        }
+        true
+    }
+
+    fn adopt_pending(&mut self) {
+        self.adopt_published();
+    }
+
+    fn basis_snapshot_step(&self) -> Option<u64> {
+        if !self.initialized {
+            return None;
+        }
+        // The most conservative (stalest) mode bounds the whole layer.
+        self.factors
+            .iter()
+            .zip(&self.mode_steps)
+            .filter_map(|(f, &s)| f.as_ref().map(|_| s))
+            .min()
+    }
+
+    fn state_bytes(&self) -> usize {
+        let opt = |x: &Option<Matrix>| x.as_ref().map(|m| m.numel()).unwrap_or(0);
+        let sum = |v: &[Option<Matrix>]| v.iter().map(opt).sum::<usize>();
+        (sum(&self.factors) + sum(&self.qs) + sum(&self.vecs)) * 4
+    }
+
+    fn export(&self) -> BasisState {
+        // Flags: [initialized, rank, (has_k, step_k, has_vecs_k) × rank] —
+        // per-mode factor records, self-describing for checkpoint v3.
+        let r = self.dims.len();
+        let mut flags = Vec::with_capacity(2 + 3 * r);
+        flags.push(self.initialized as u8 as f32);
+        flags.push(r as f32);
+        for k in 0..r {
+            flags.push(self.factors[k].is_some() as u8 as f32);
+            // f32 is exact up to 2^24 steps — far beyond our runs.
+            flags.push(self.mode_steps[k] as f32);
+            flags.push(self.vecs[k].is_some() as u8 as f32);
+        }
+        let mut tensors = Vec::new();
+        for k in 0..r {
+            if let Some(f) = &self.factors[k] {
+                tensors.push(f.clone());
+                if let Some(q) = &self.qs[k] {
+                    tensors.push(q.clone());
+                }
+                if let Some(v) = &self.vecs[k] {
+                    tensors.push(v.clone());
+                }
+            }
+        }
+        BasisState { flags, tensors }
+    }
+
+    fn import(
+        &mut self,
+        flags: &[f32],
+        it: &mut dyn Iterator<Item = Matrix>,
+    ) -> anyhow::Result<()> {
+        // Refreshes enqueued before the restore were computed from discarded
+        // factors; drain them, then skip every pre-restore publication.
+        if let Some(service) = &self.service {
+            service.wait_idle();
+            for k in 0..self.dims.len() {
+                if let Some(handle) = &self.handles[k] {
+                    self.adopted[k] = handle.version();
+                }
+            }
+        }
+        anyhow::ensure!(
+            flags.len() >= 2,
+            "tensor basis flags row too short ({} values)",
+            flags.len()
+        );
+        let r = flags[1] as usize;
+        anyhow::ensure!(
+            r == self.dims.len(),
+            "tensor basis state has rank {r} but the layer preconditions rank {}",
+            self.dims.len()
+        );
+        anyhow::ensure!(
+            flags.len() == 2 + 3 * r,
+            "tensor basis flags row malformed ({} values for rank {r})",
+            flags.len()
+        );
+        self.initialized = flags[0] != 0.0;
+        let mut next = |what: String| {
+            it.next().ok_or_else(|| anyhow::anyhow!("tensor basis state missing {what}"))
+        };
+        for k in 0..r {
+            let has_factor = flags[2 + 3 * k] != 0.0;
+            self.mode_steps[k] = flags[2 + 3 * k + 1] as u64;
+            let has_vecs = flags[2 + 3 * k + 2] != 0.0;
+            if has_factor {
+                let f = next(format!("mode-{k} factor"))?;
+                anyhow::ensure!(
+                    f.rows == self.dims[k] && f.cols == self.dims[k],
+                    "mode-{k} factor is {}×{} but the mode size is {}",
+                    f.rows,
+                    f.cols,
+                    self.dims[k]
+                );
+                self.factors[k] = Some(f);
+                self.qs[k] = if self.initialized || self.flavor == EigenFlavor::InverseRoot {
+                    Some(next(format!("mode-{k} basis"))?)
+                } else {
+                    None
+                };
+                self.vecs[k] = if has_vecs {
+                    Some(next(format!("mode-{k} warm eigenvectors"))?)
+                } else {
+                    None
+                };
+            } else {
+                self.factors[k] = None;
+                self.qs[k] = None;
+                self.vecs[k] = None;
+            }
+        }
+        Ok(())
+    }
+
+    fn layout(&self) -> StateLayout {
+        StateLayout::TensorModes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::TensorShape;
+    use crate::util::rng::Rng;
+
+    fn h_base() -> Hyper {
+        Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() }
+    }
+
+    fn grad3(rng: &mut Rng, dims: &[usize]) -> Matrix {
+        let shape = TensorShape::new(dims.to_vec());
+        let (r, c) = shape.carrier();
+        Matrix::randn(rng, r, c, 1.0)
+    }
+
+    #[test]
+    fn dim_cap_boundary_matches_2d_convention() {
+        // Satellite fix: `d == max_precond_dim` is PRECONDITIONED (the 2-D
+        // EigenBasis `<=` convention), `d == cap + 1` keeps identity — on
+        // both sides of the boundary, per mode.
+        let h = Hyper { max_precond_dim: 6, ..h_base() };
+        let b = TensorEigenBasis::rotation(&TensorShape::new(vec![6, 7, 5]), &h);
+        assert!(b.factors[0].is_some(), "d == cap must be preconditioned");
+        assert!(b.factors[1].is_none(), "d == cap + 1 must stay identity");
+        assert!(b.factors[2].is_some());
+        // Inverse-root flavor uses the same per-mode convention.
+        let b = TensorEigenBasis::inverse_root(&TensorShape::new(vec![6, 7, 5]), &h);
+        assert!(b.factors[0].is_some() && b.factors[1].is_none());
+        assert!(b.qs[1].is_none(), "capped mode has no root");
+    }
+
+    #[test]
+    fn all_modes_capped_projects_identity() {
+        let h = Hyper { max_precond_dim: 1, ..h_base() };
+        let b = TensorEigenBasis::rotation(&TensorShape::new(vec![3, 4, 5]), &h);
+        let mut rng = Rng::new(21);
+        let x = grad3(&mut rng, &[3, 4, 5]);
+        let mut out = Matrix::zeros(0, 0);
+        let mut scratch = Scratch::new();
+        b.project_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, x, "capped basis must be the identity");
+        assert_eq!(b.state_bytes(), 0);
+    }
+
+    #[test]
+    fn rotation_projection_is_orthogonal_after_init() {
+        let h = h_base();
+        let mut b = TensorEigenBasis::rotation(&TensorShape::new(vec![4, 3, 5]), &h);
+        let mut rng = Rng::new(22);
+        let g = grad3(&mut rng, &[4, 3, 5]);
+        let mut ws = Workspace::new();
+        b.begin_step(&g, 1, &mut ws);
+        assert!(b.initialized);
+        let x = grad3(&mut rng, &[4, 3, 5]);
+        let mut rot = Matrix::zeros(0, 0);
+        let mut back = Matrix::zeros(0, 0);
+        let mut scratch = Scratch::new();
+        b.project_into(&x, &mut rot, &mut scratch);
+        // Orthogonal rotations preserve the Frobenius norm…
+        assert!((rot.frob_norm() - x.frob_norm()).abs() < 1e-3 * x.frob_norm());
+        // …and project ∘ project_back is the identity.
+        b.project_back_into(&rot, &mut back, &mut scratch);
+        assert!(back.max_abs_diff(&x) < 1e-4, "{}", back.max_abs_diff(&x));
+    }
+
+    #[test]
+    fn rank2_tensor_basis_matches_eigen_basis_projection() {
+        // On a rank-2 shape the per-mode chain must agree (numerically) with
+        // the dedicated 2-D basis: same grams, same eigh, same rotation.
+        use super::super::basis::EigenBasis;
+        let h = h_base();
+        let mut tb = TensorEigenBasis::rotation(&TensorShape::matrix(5, 4), &h);
+        let mut eb = EigenBasis::rotation(5, 4, &h);
+        let mut rng = Rng::new(23);
+        let g = Matrix::randn(&mut rng, 5, 4, 1.0);
+        let mut ws = Workspace::new();
+        tb.begin_step(&g, 1, &mut ws);
+        eb.begin_step(&g, 1, &mut ws);
+        let x = Matrix::randn(&mut rng, 5, 4, 1.0);
+        let (mut a, mut b) = (Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        let mut scratch = Scratch::new();
+        tb.project_into(&x, &mut a, &mut scratch);
+        eb.project_into(&x, &mut b, &mut scratch);
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn export_import_roundtrips_per_mode_records() {
+        let h = h_base();
+        let dims = TensorShape::new(vec![4, 3, 5]);
+        let mut a = TensorEigenBasis::rotation(&dims, &h);
+        let mut rng = Rng::new(24);
+        let mut ws = Workspace::new();
+        for t in 1..=5 {
+            let g = grad3(&mut rng, &[4, 3, 5]);
+            a.begin_step(&g, t, &mut ws);
+            a.end_step(&g, t, &mut ws);
+        }
+        let state = a.export();
+        let mut b = TensorEigenBasis::rotation(&dims, &h);
+        let mut it = state.tensors.into_iter();
+        b.import(&state.flags, &mut it).unwrap();
+        assert!(it.next().is_none(), "import must consume every tensor");
+        assert_eq!(b.initialized, a.initialized);
+        assert_eq!(b.mode_steps, a.mode_steps);
+        for k in 0..3 {
+            assert_eq!(
+                a.qs[k].as_ref().unwrap().data,
+                b.qs[k].as_ref().unwrap().data,
+                "mode {k} basis drifted through export/import"
+            );
+        }
+        // A rank mismatch is a named error, not a misparse.
+        let mut wrong = TensorEigenBasis::rotation(&TensorShape::matrix(4, 15), &h);
+        let state = a.export();
+        let err = wrong
+            .import(&state.flags, &mut state.tensors.into_iter())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rank"), "{err}");
+    }
+
+    #[test]
+    fn inverse_root_descends_on_quadratic() {
+        use super::super::presets;
+        let h = Hyper { precond_freq: 3, ..h_base() };
+        let shape = TensorShape::new(vec![3, 4, 5]);
+        let mut opt = presets::shampoo_nd(shape.carrier(), &shape, h);
+        let mut rng = Rng::new(25);
+        let target = grad3(&mut rng, &[3, 4, 5]);
+        let mut w = Matrix::zeros(target.rows, target.cols);
+        let d0 = w.sub(&target).frob_norm();
+        for t in 1..=400 {
+            let g = w.sub(&target).scale(2.0);
+            crate::optim::LayerOptimizer::update(&mut opt, &mut w, &g, t, 0.02);
+        }
+        let d1 = w.sub(&target).frob_norm();
+        assert!(d1 < 0.5 * d0, "tensor shampoo failed to descend: {d0} → {d1}");
+    }
+
+    #[test]
+    fn async_refresh_one_task_per_mode() {
+        let h = h_base().async_refresh();
+        let mut b = TensorEigenBasis::rotation(&TensorShape::new(vec![4, 3, 5]), &h);
+        let svc = Arc::new(RefreshService::new(2));
+        assert!(b.attach_async(&svc));
+        let mut rng = Rng::new(26);
+        let mut ws = Workspace::new();
+        let g = grad3(&mut rng, &[4, 3, 5]);
+        b.begin_step(&g, 1, &mut ws);
+        b.end_step(&g, 1, &mut ws);
+        // Hit the refresh step: one task PER MODE must be enqueued.
+        let t = h.precond_freq;
+        for step in 2..=t {
+            let g = grad3(&mut rng, &[4, 3, 5]);
+            b.begin_step(&g, step, &mut ws);
+            b.end_step(&g, step, &mut ws);
+        }
+        svc.wait_idle();
+        assert_eq!(svc.stats().completed, 3, "expected one refresh task per mode");
+        b.adopt_pending();
+        assert_eq!(b.basis_snapshot_step(), Some(t));
+    }
+}

@@ -67,8 +67,12 @@ pub struct Workspace {
     /// Original-space direction — `Composed::update` applies this to the
     /// weights after the engine returns.
     pub dir: Matrix,
-    /// Kronecker-factor product scratch (`GGᵀ` / `GᵀG` share it serially).
+    /// Kronecker-factor product scratch (`GGᵀ` / `GᵀG` share it serially;
+    /// rank-3+ bases cycle their per-mode grams through it the same way).
     pub factor: Matrix,
+    /// Mode-k unfolding scratch for rank-3+ parameters (interior modes only
+    /// — the first and last modes of a row-major tensor are reshapes).
+    pub unfold: Matrix,
     /// Adafactor row-sum scratch (`Σⱼ g²`). f64: the allocating reference
     /// (`Matrix::row_sums`) accumulates in f64, and the fused kernel must
     /// stay bitwise identical to it.
@@ -91,6 +95,7 @@ impl Workspace {
             nrot: Matrix::zeros(0, 0),
             dir: Matrix::zeros(0, 0),
             factor: Matrix::zeros(0, 0),
+            unfold: Matrix::zeros(0, 0),
             sums_row: Vec::new(),
             sums_col: Vec::new(),
             hat_row: Vec::new(),
@@ -107,6 +112,7 @@ impl Workspace {
             + self.nrot.data.capacity()
             + self.dir.data.capacity()
             + self.factor.data.capacity()
+            + self.unfold.data.capacity()
             + self.hat_row.capacity()
             + self.hat_col.capacity())
             * 4

@@ -62,8 +62,15 @@ pub struct Hyper {
     /// SOAP: Adafactor (rank-1) second moment in the eigenbasis — §7.2.1.
     pub factorized: bool,
     /// Dimensions larger than this keep Q = identity (paper implementation
-    /// detail 3: embedding/output layers).
+    /// detail 3: embedding/output layers). Applies per mode for rank-3+
+    /// tensors; a dimension EQUAL to the cap is still preconditioned.
     pub max_precond_dim: usize,
+    /// Rank-3+ tensors: merge adjacent modes while the merged size stays ≤
+    /// this (`merge_small_dims` in DistributedShampoo) before building the
+    /// per-mode basis — fewer, larger factors. 0 disables merging (default).
+    /// Never applied to rank-≤2 parameters, whose matrix path is the
+    /// bitwise-pinned reference.
+    pub merge_dims: usize,
     /// Eigenbasis refresh method (Fig 7 right ablation).
     pub refresh: RefreshMethod,
     /// Refresh execution mode: `Inline` (synchronous, deterministic) or
@@ -101,6 +108,7 @@ impl Default for Hyper {
             one_sided: false,
             factorized: false,
             max_precond_dim: 4096,
+            merge_dims: 0,
             refresh: RefreshMethod::QrPowerIteration,
             refresh_mode: RefreshMode::Inline,
             refresh_phase: 0,
@@ -126,6 +134,16 @@ impl Hyper {
     }
     pub fn with_refresh(mut self, r: RefreshMethod) -> Self {
         self.refresh = r;
+        self
+    }
+    /// Set the adjacent-mode merge threshold for rank-3+ tensors.
+    pub fn with_merge_dims(mut self, cap: usize) -> Self {
+        self.merge_dims = cap;
+        self
+    }
+    /// Set the per-mode preconditioning dim cap.
+    pub fn with_max_precond_dim(mut self, cap: usize) -> Self {
+        self.max_precond_dim = cap;
         self
     }
     pub fn async_refresh(mut self) -> Self {

@@ -54,7 +54,7 @@ pub use soap::Soap;
 
 use std::sync::Arc;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, TensorShape};
 use crate::precond::RefreshService;
 
 /// Per-layer optimizer state machine.
@@ -191,6 +191,58 @@ impl OptKind {
         }
     }
 
+    /// Build per-layer state for an arbitrary-rank tensor parameter.
+    ///
+    /// Routing follows the paper's practical recipe: rank ≤ 2 takes the
+    /// EXACT matrix path ([`Self::build`] — bitwise identical, pinned by
+    /// `rust/tests/golden_tensor.rs`), rank ≥ 3 squeezes size-1 modes,
+    /// applies `Hyper::merge_dims` adjacent-mode merging, and — when still
+    /// rank ≥ 3 (or the merge changed the carrier fold) — preconditions
+    /// per mode through [`compose::TensorEigenBasis`]. Optimizers without a
+    /// per-mode decomposition (AdamW, Adafactor, GaLore) run on the 2-D
+    /// carrier fold, which is the same elementwise math they always had.
+    pub fn build_tensor(&self, shape: &TensorShape, h: &Hyper) -> Box<dyn LayerOptimizer> {
+        let eff = shape.effective(h.merge_dims);
+        let carrier = shape.carrier();
+        if eff.rank() < 2 || (eff.rank() == 2 && eff.carrier() == carrier) {
+            // Matrix path — covers every rank-≤2 parameter (where
+            // `eff == shape`), rank-3+ shapes that collapse to a
+            // carrier-preserving matrix (size-1 modes, merged modes), and
+            // shapes that collapse all the way to a vector (an
+            // over-aggressive `merge_dims`, or `[1, n, 1]`-style padding):
+            // there is no per-mode structure left, so the 2-D carrier view
+            // — with its own 1-D Adam fallback — is the optimizer.
+            return self.build(carrier.0, carrier.1, h);
+        }
+        match self {
+            OptKind::Soap => Box::new(compose::presets::soap_nd(carrier, &eff, h.clone())),
+            OptKind::Shampoo => Box::new(compose::presets::shampoo_nd(carrier, &eff, h.clone())),
+            // No per-mode decomposition to generalize — the carrier fold IS
+            // their update rule (GaLore is defined on matrices; its
+            // projector sees the carrier).
+            OptKind::AdamW | OptKind::Adafactor | OptKind::Galore => {
+                self.build(carrier.0, carrier.1, h)
+            }
+            OptKind::Composed(spec) => spec.build_tensor(shape, h),
+        }
+    }
+
+    /// [`Self::build_tensor`] with the coordinator's staggered refresh phase
+    /// applied (see [`Self::build_staggered`]).
+    pub fn build_staggered_tensor(
+        &self,
+        layer_idx: usize,
+        shape: &TensorShape,
+        h: &Hyper,
+    ) -> Box<dyn LayerOptimizer> {
+        if !h.stagger_refresh {
+            return self.build_tensor(shape, h);
+        }
+        let mut hl = h.clone();
+        hl.refresh_phase = layer_idx as u64 % h.precond_freq.max(1);
+        self.build_tensor(shape, &hl)
+    }
+
     /// Build per-layer state for a parameter of shape `rows×cols`.
     ///
     /// Paper implementation detail 1: SOAP and GaLore run plain AdamW on 1-D
@@ -244,10 +296,23 @@ pub struct ModelOptimizer {
 
 impl ModelOptimizer {
     pub fn new(kind: OptKind, hyper: Hyper, schedule: Schedule, shapes: &[(usize, usize)]) -> Self {
+        let tshapes: Vec<TensorShape> =
+            shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+        Self::new_tensors(kind, hyper, schedule, &tshapes)
+    }
+
+    /// [`Self::new`] over arbitrary-rank parameter shapes. Rank-2 shapes
+    /// build the identical matrix-path layers [`Self::new`] builds.
+    pub fn new_tensors(
+        kind: OptKind,
+        hyper: Hyper,
+        schedule: Schedule,
+        shapes: &[TensorShape],
+    ) -> Self {
         let layers = shapes
             .iter()
             .enumerate()
-            .map(|(idx, &(m, n))| kind.build_staggered(idx, m, n, &hyper))
+            .map(|(idx, shape)| kind.build_staggered_tensor(idx, shape, &hyper))
             .collect();
         Self { kind, hyper, schedule, layers, step: 0 }
     }

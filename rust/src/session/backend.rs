@@ -9,7 +9,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{PjrtOptimizer, ShardedOptimizer};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, TensorShape};
 use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
 use crate::precond::RefreshService;
 use crate::runtime::Engine;
@@ -119,10 +119,18 @@ pub struct SerialExecutor {
 
 impl SerialExecutor {
     pub fn new(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)]) -> Self {
+        let tshapes: Vec<TensorShape> =
+            shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+        Self::new_tensors(kind, hyper, &tshapes)
+    }
+
+    /// [`Self::new`] over arbitrary-rank parameter shapes; rank-2 shapes
+    /// build the identical matrix-path layers.
+    pub fn new_tensors(kind: OptKind, hyper: &Hyper, shapes: &[TensorShape]) -> Self {
         let mut slots: Vec<Box<dyn LayerOptimizer>> = shapes
             .iter()
             .enumerate()
-            .map(|(idx, &(m, n))| kind.build_staggered(idx, m, n, hyper))
+            .map(|(idx, shape)| kind.build_staggered_tensor(idx, shape, hyper))
             .collect();
         // Same service policy as ShardedOptimizer: spin one up only in
         // Async mode and only if at least one layer has work to offload.
@@ -228,6 +236,17 @@ pub struct ShardedExecutor {
 impl ShardedExecutor {
     pub fn new(kind: OptKind, hyper: &Hyper, shapes: &[(usize, usize)], workers: usize) -> Self {
         Self { inner: ShardedOptimizer::new(kind, hyper, shapes, workers) }
+    }
+
+    /// [`Self::new`] over arbitrary-rank parameter shapes (cost-balanced by
+    /// the per-mode decomposition model).
+    pub fn new_tensors(
+        kind: OptKind,
+        hyper: &Hyper,
+        shapes: &[TensorShape],
+        workers: usize,
+    ) -> Self {
+        Self { inner: ShardedOptimizer::new_tensors(kind, hyper, shapes, workers) }
     }
 
     /// The wrapped optimizer (coordinator-level tooling).

@@ -15,6 +15,7 @@ use super::TrainSession;
 use crate::coordinator::pjrt_optim::preflight;
 use crate::coordinator::{init_lm_params, Checkpoint, GradBackend};
 use crate::data::{BatchStream, CorpusSpec};
+use crate::linalg::TensorShape;
 use crate::model::{self, NplmConfig};
 use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
 use crate::runtime::Engine;
@@ -32,7 +33,8 @@ pub enum ModelSpec {
 }
 
 /// The native model names accepted by [`ModelSpec::parse`].
-pub const NPLM_NAMES: &str = "nplm (128-vocab probe config), nplm-tiny (test-scale)";
+pub const NPLM_NAMES: &str = "nplm (128-vocab probe config), nplm-tiny (test-scale), \
+nplm-conv (test-scale with a rank-3 conv kernel)";
 
 impl ModelSpec {
     pub fn artifact(name: &str) -> Self {
@@ -52,13 +54,22 @@ impl ModelSpec {
             // The perf-probe / async-refresh bench geometry: layer shapes
             // up to 192×192 so preconditioning actually costs something.
             "nplm" => ModelSpec::nplm(
-                NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96 },
+                NplmConfig { vocab: 128, context: 4, dim: 48, hidden: 96, conv: false },
                 32,
                 16,
             ),
             // The integration-test geometry: small enough for smoke jobs.
             "nplm-tiny" => ModelSpec::nplm(
-                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 },
+                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false },
+                24,
+                8,
+            ),
+            // nplm-tiny with W1 declared as the rank-3 [context, dim,
+            // hidden] conv kernel it is — exercises per-mode tensor
+            // preconditioning end-to-end (same gradients and carrier
+            // matrices as nplm-tiny; only the optimizer's view changes).
+            "nplm-conv" => ModelSpec::nplm(
+                NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: true },
                 24,
                 8,
             ),
@@ -325,6 +336,20 @@ impl SessionBuilder {
             }
         };
         let shapes: Vec<(usize, usize)> = params.iter().map(|p| (p.rows, p.cols)).collect();
+        // True N-D shapes for the optimizer: artifact params are matrices,
+        // native models declare theirs (the nplm-conv preset's rank-3 W1).
+        let tensor_shapes: Vec<TensorShape> = match &model {
+            ModelSpec::Artifact { .. } => {
+                shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect()
+            }
+            ModelSpec::Nplm { cfg, .. } => cfg.tensor_shapes(),
+        };
+        for (i, (ts, &(m, n))) in tensor_shapes.iter().zip(&shapes).enumerate() {
+            anyhow::ensure!(
+                ts.carrier() == (m, n),
+                "model bug: param {i} tensor shape {ts} does not fold to its {m}×{n} carrier"
+            );
+        }
         let stream = BatchStream::new(
             CorpusSpec { vocab_size: vocab, zipf_alpha, seed, stream: 0 },
             batch * grad_accum,
@@ -334,8 +359,10 @@ impl SessionBuilder {
         );
 
         let exec: Box<dyn ExecutorBackend> = match backend {
-            Backend::Serial => Box::new(SerialExecutor::new(opt, &hyper, &shapes)),
-            Backend::Sharded => Box::new(ShardedExecutor::new(opt, &hyper, &shapes, workers)),
+            Backend::Serial => Box::new(SerialExecutor::new_tensors(opt, &hyper, &tensor_shapes)),
+            Backend::Sharded => {
+                Box::new(ShardedExecutor::new_tensors(opt, &hyper, &tensor_shapes, workers))
+            }
             Backend::Pjrt => {
                 let GradBackend::Pjrt { engine, .. } = &grad else {
                     unreachable!("validate() pinned pjrt to artifact models");
@@ -363,6 +390,7 @@ impl SessionBuilder {
             exec,
             params,
             shapes,
+            tensor_shapes,
             stream,
             steps_done: 0,
             drain_refresh,
@@ -395,6 +423,10 @@ mod tests {
     fn model_spec_parse() {
         assert!(matches!(ModelSpec::parse("nplm").unwrap(), ModelSpec::Nplm { .. }));
         assert!(matches!(ModelSpec::parse("NPLM-TINY").unwrap(), ModelSpec::Nplm { .. }));
+        assert!(matches!(
+            ModelSpec::parse("nplm-conv").unwrap(),
+            ModelSpec::Nplm { cfg, .. } if cfg.conv
+        ));
         assert!(matches!(
             ModelSpec::parse("nano").unwrap(),
             ModelSpec::Artifact { name } if name == "nano"

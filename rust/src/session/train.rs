@@ -12,7 +12,7 @@ use super::backend::ExecutorBackend;
 use super::sink::{MetricsSink, StepRecord};
 use crate::coordinator::{Checkpoint, GradBackend, StepTiming, TrainLog};
 use crate::data::{Batch, BatchStream, CorpusSpec};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, TensorShape};
 use crate::model;
 use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
 use crate::runtime::{
@@ -43,6 +43,10 @@ pub struct TrainSession {
     pub(super) exec: Box<dyn ExecutorBackend>,
     pub params: Vec<Matrix>,
     pub shapes: Vec<(usize, usize)>,
+    /// True N-dimensional shapes of the parameters (each folds to the
+    /// matching `shapes` carrier); recorded in checkpoints (format v3) and
+    /// validated on resume.
+    pub tensor_shapes: Vec<TensorShape>,
     pub(super) stream: BatchStream,
     pub(super) steps_done: u64,
     pub(super) drain_refresh: bool,
@@ -244,6 +248,7 @@ impl TrainSession {
             seed: Some(self.seed),
             stream_batch: self.stream.batch as u32,
             stream_seq: self.stream.seq as u32,
+            param_dims: self.tensor_shapes.iter().map(|s| s.dims().to_vec()).collect(),
         })
     }
 
@@ -270,6 +275,21 @@ impl TrainSession {
                 q.rows,
                 q.cols
             );
+        }
+        // v3 checkpoints record each param's true N-D shape. A mismatch
+        // means the optimizer state rows were built over a DIFFERENT
+        // per-mode decomposition (e.g. a rank-3 kernel resumed as a
+        // matrix) — reject instead of misinterpreting the factor records.
+        // Empty = legacy v1/v2 file, shapes unrecorded.
+        if !ck.param_dims.is_empty() {
+            for (i, (dims, ts)) in ck.param_dims.iter().zip(&self.tensor_shapes).enumerate() {
+                anyhow::ensure!(
+                    dims == ts.dims(),
+                    "checkpoint param {i} has tensor shape {dims:?} but the session's model \
+                     declares {:?} — resume with the model the checkpoint was written from",
+                    ts.dims()
+                );
+            }
         }
         if let Some(s) = ck.seed {
             anyhow::ensure!(

@@ -13,7 +13,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use soap_lab::linalg::Matrix;
+use soap_lab::linalg::{Matrix, TensorShape};
 use soap_lab::optim::compose::presets;
 use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer};
 use soap_lab::util::rng::Rng;
@@ -79,6 +79,44 @@ fn steady_state_composed_step_allocates_zero() {
         }
         let n = allocs() - before;
         assert_eq!(n, 0, "{label}: steady-state step performed {n} heap allocations");
+        assert_eq!(
+            opt.scratch_bytes(),
+            scratch,
+            "{label}: workspace arena changed size in steady state"
+        );
+    }
+
+    // Rank-3 per-mode path: the zero-allocation invariant extends to tensor
+    // parameters — mode grams, unfolds, and the mode-product ping-pong all
+    // run through the grow-only arena. Interior mode (5) exercises the
+    // unfold buffer; SOAP covers rotate/rotate-back chains, Shampoo the
+    // inverse-root sandwich + grafting.
+    let shape = TensorShape::new(vec![4, 5, 6]);
+    let carrier = shape.carrier();
+    type BuildNd = fn((usize, usize), &TensorShape, Hyper) -> DynComposed;
+    let nd_builds: [(&str, BuildNd); 3] = [
+        ("soap-rank3", presets::soap_nd),
+        ("soap-rank3-factorized", |c, s, h| {
+            presets::soap_nd(c, s, Hyper { factorized: true, ..h })
+        }),
+        ("shampoo-rank3", presets::shampoo_nd),
+    ];
+    for (label, build) in nd_builds {
+        let mut opt = build(carrier, &shape, h.clone());
+        let mut rng = Rng::new(42);
+        let grads: Vec<Matrix> =
+            (0..26).map(|_| Matrix::randn(&mut rng, carrier.0, carrier.1, 1.0)).collect();
+        let mut w = Matrix::zeros(carrier.0, carrier.1);
+        for (i, g) in grads.iter().take(22).enumerate() {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        let scratch = opt.scratch_bytes();
+        let before = allocs();
+        for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        let n = allocs() - before;
+        assert_eq!(n, 0, "{label}: steady-state rank-3 step performed {n} heap allocations");
         assert_eq!(
             opt.scratch_bytes(),
             scratch,

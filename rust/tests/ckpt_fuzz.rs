@@ -1,0 +1,264 @@
+//! Checkpoint format v3 hardening: corruption fuzzing + legacy fixtures.
+//!
+//! The container format must never panic or silently accept a damaged
+//! file — every corruption class here must surface as an `Err` whose
+//! message NAMES the field where parsing stopped:
+//!
+//! - random truncations at every depth (header, shape section, tensor
+//!   payloads) — seeded sweep over a real v3 file with a rank-3 state row;
+//! - targeted header corruptions (future version, malformed seed flag,
+//!   implausible counts/ranks, oversized dims);
+//! - trailing bytes after a valid payload;
+//! - bit-flipped optimizer-state *flags rows* — the container parses (flags
+//!   are ordinary f32 rows) but `import_state` must reject the
+//!   now-inconsistent record instead of training on corrupted state.
+//!
+//! Checked-in `rust/tests/fixtures/{v1,v2}.ckpt` prove the legacy formats
+//! keep loading and round-trip through the current writer.
+
+use soap_lab::coordinator::Checkpoint;
+use soap_lab::linalg::{Matrix, TensorShape};
+use soap_lab::optim::compose::presets;
+use soap_lab::optim::{Hyper, LayerOptimizer};
+use soap_lab::util::rng::Rng;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("soap_fuzz_{name}_{}", std::process::id()))
+}
+
+fn fixture(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name)
+}
+
+/// A realistic v3 checkpoint: a rank-3 parameter with a genuine per-mode
+/// (`TensorModes`) optimizer state row next to a rank-2 one.
+fn v3_checkpoint() -> Checkpoint {
+    let mut rng = Rng::new(91);
+    let shape3 = TensorShape::new(vec![3, 4, 5]);
+    let (r3, c3) = shape3.carrier();
+    let h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+
+    let mut opt3 = presets::soap_nd((r3, c3), &shape3, h.clone());
+    let mut w3 = Matrix::randn(&mut rng, r3, c3, 1.0);
+    let mut opt2 = presets::soap(6, 4, h);
+    let mut w2 = Matrix::randn(&mut rng, 6, 4, 1.0);
+    for t in 1..=5 {
+        let g3 = Matrix::randn(&mut rng, r3, c3, 1.0);
+        let g2 = Matrix::randn(&mut rng, 6, 4, 1.0);
+        opt3.update(&mut w3, &g3, t, 0.01);
+        opt2.update(&mut w2, &g2, t, 0.01);
+    }
+    Checkpoint {
+        step: 5,
+        params: vec![w3, w2],
+        opt_state: vec![(0, opt3.export_state()), (1, opt2.export_state())],
+        data_batches: 5,
+        seed: Some(3),
+        stream_batch: 8,
+        stream_seq: 16,
+        param_dims: vec![vec![3, 4, 5], vec![6, 4]],
+    }
+}
+
+fn v3_bytes(tag: &str) -> Vec<u8> {
+    // Per-caller temp name: the tests sharing this run on parallel harness
+    // threads within one process, so the pid alone does not disambiguate.
+    let path = tmpfile(&format!("v3base_{tag}"));
+    v3_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+fn load_bytes(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+    let tag = bytes.len() ^ ((bytes.first().copied().unwrap_or(0) as usize) << 13);
+    let path = tmpfile(&format!("case_{tag:x}"));
+    std::fs::write(&path, bytes).unwrap();
+    let out = Checkpoint::load(&path);
+    std::fs::remove_file(&path).ok();
+    out
+}
+
+#[test]
+fn random_truncations_always_error_with_field_context() {
+    let bytes = v3_bytes("trunc");
+    let mut rng = Rng::new(0xFADE);
+    // Boundary cuts plus a seeded random sweep across every depth.
+    let mut cuts: Vec<usize> = vec![0, 1, 7, 8, 11, 12, 44, 45, bytes.len() - 1];
+    for _ in 0..150 {
+        cuts.push(rng.below(bytes.len() as u64) as usize);
+    }
+    for cut in cuts {
+        let err = match load_bytes(&bytes[..cut]) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("truncation at {cut}/{} silently accepted", bytes.len()),
+        };
+        // Every truncation error names the field (or dies on the magic).
+        assert!(
+            err.contains("truncated") || err.contains("not a soap-lab checkpoint"),
+            "cut at {cut}: unexpected error shape: {err}"
+        );
+    }
+}
+
+#[test]
+fn trailing_bytes_rejected() {
+    let mut bytes = v3_bytes("trail");
+    bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+    let err = format!("{:#}", load_bytes(&bytes).unwrap_err());
+    assert!(err.contains("trailing"), "{err}");
+}
+
+#[test]
+fn targeted_header_corruptions_name_their_field() {
+    let base = v3_bytes("hdr");
+    // Fixed v3 prefix offsets: magic[0..8] version[8..12] step[12..20]
+    // cursor[20..28] seed-flag[28] seed[29..37] batch[37..41] seq[41..45]
+    // n_shapes[45..49] shape0-rank[49..53] …
+    let mutate = |at: usize, val: &[u8]| {
+        let mut b = base.clone();
+        b[at..at + val.len()].copy_from_slice(val);
+        b
+    };
+
+    // Future version: refused, never misparsed.
+    let err = format!("{:#}", load_bytes(&mutate(8, &99u32.to_le_bytes())).unwrap_err());
+    assert!(err.contains("version 99") && err.contains("newer"), "{err}");
+
+    // Non-boolean seed flag.
+    let err = format!("{:#}", load_bytes(&mutate(28, &[7])).unwrap_err());
+    assert!(err.contains("seed flag"), "{err}");
+
+    // Implausible shape count: bound-checked before any allocation.
+    let err =
+        format!("{:#}", load_bytes(&mutate(45, &(u32::MAX).to_le_bytes())).unwrap_err());
+    assert!(err.contains("shape count"), "{err}");
+
+    // Implausible rank on shape 0.
+    let err = format!("{:#}", load_bytes(&mutate(49, &4096u32.to_le_bytes())).unwrap_err());
+    assert!(err.contains("shape 0") && err.contains("rank"), "{err}");
+
+    // Zero dim on shape 0 (first dim sits right after its rank).
+    let err = format!("{:#}", load_bytes(&mutate(53, &0u32.to_le_bytes())).unwrap_err());
+    assert!(err.contains("shape 0") && err.contains("dim 0"), "{err}");
+
+    // A bit-flipped dim value survives the shape section but must then be
+    // caught by the shape/param element-count cross-check, naming the param.
+    let err = format!("{:#}", load_bytes(&mutate(53, &7u32.to_le_bytes())).unwrap_err());
+    assert!(err.contains("param 0") && err.contains("tensor shape"), "{err}");
+}
+
+#[test]
+fn bit_flipped_state_flags_rows_are_rejected_on_import() {
+    // The container cannot distinguish a flipped flag from data (flags are
+    // ordinary f32 rows) — the OPTIMIZER import must catch the
+    // inconsistency. Never a panic, never silent acceptance.
+    let h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+
+    // Rank-2 SOAP row: flipping the full-V flag claims a factored second
+    // moment the engine does not have.
+    let mut opt = presets::soap(6, 4, h.clone());
+    let mut w = Matrix::randn(&mut Rng::new(92), 6, 4, 1.0);
+    for t in 1..=4 {
+        let g = Matrix::randn(&mut Rng::new(92 + t), 6, 4, 1.0);
+        opt.update(&mut w, &g, t, 0.01);
+    }
+    let mut state = opt.export_state();
+    state[0].data[3] = 0.0; // has_full_v: 1 → 0
+    let mut fresh = presets::soap(6, 4, h.clone());
+    let err = fresh.import_state(state).unwrap_err().to_string();
+    assert!(err.contains("full V") || err.contains("factored"), "{err}");
+
+    // Flipping has_l desynchronizes the tensor count: strict arity must
+    // notice the leftover tensor rather than shifting every later field.
+    let mut state = opt.export_state();
+    state[0].data[1] = 0.0; // has_l: 1 → 0
+    let mut fresh = presets::soap(6, 4, h.clone());
+    assert!(fresh.import_state(state).is_err(), "has_l flip silently accepted");
+
+    // Rank-3 (TensorModes) row: a flipped rank field must be a named error.
+    let shape = TensorShape::new(vec![3, 4, 5]);
+    let mut opt3 = presets::soap_nd(shape.carrier(), &shape, h.clone());
+    let mut w3 = Matrix::randn(&mut Rng::new(93), 12, 5, 1.0);
+    for t in 1..=4 {
+        let g = Matrix::randn(&mut Rng::new(93 + t), 12, 5, 1.0);
+        opt3.update(&mut w3, &g, t, 0.01);
+    }
+    let mut state = opt3.export_state();
+    state[0].data[1] = 2.0; // rank: 3 → 2
+    let mut fresh = presets::soap_nd(shape.carrier(), &shape, h.clone());
+    let err = fresh.import_state(state).unwrap_err().to_string();
+    assert!(err.contains("rank"), "{err}");
+
+    // …and a flipped per-mode has-factor flag must not shift the records.
+    let mut state = opt3.export_state();
+    state[0].data[2] = 0.0; // mode-0 has_factor: 1 → 0
+    let mut fresh = presets::soap_nd(shape.carrier(), &shape, h);
+    assert!(fresh.import_state(state).is_err(), "mode-flag flip silently accepted");
+}
+
+#[test]
+fn v1_fixture_loads_and_roundtrips() {
+    let back = Checkpoint::load(fixture("v1.ckpt")).unwrap();
+    assert_eq!(back.step, 5);
+    assert_eq!(back.data_batches, 5, "v1 cursor defaults to step");
+    assert_eq!(back.seed, None);
+    assert_eq!((back.stream_batch, back.stream_seq), (0, 0));
+    assert!(back.param_dims.is_empty(), "v1 records no tensor shapes");
+    assert_eq!((back.params[0].rows, back.params[0].cols), (2, 3));
+    assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
+    assert_eq!(back.params[1].data, vec![10.0, 20.0, 30.0, 40.0]);
+    assert_eq!(back.opt_state.len(), 2);
+    assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(4).data);
+
+    // Round-trip through the CURRENT writer: data is preserved and the
+    // rewrite upgrades to v3 with carrier-fold shapes.
+    let path = tmpfile("v1rt");
+    back.save(&path).unwrap();
+    let again = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(again.step, back.step);
+    assert_eq!(again.params[0].data, back.params[0].data);
+    assert_eq!(again.opt_state[1].1[0].data, back.opt_state[1].1[0].data);
+    assert_eq!(again.param_dims, vec![vec![2, 3], vec![1, 4]]);
+}
+
+#[test]
+fn v2_fixture_loads_and_roundtrips() {
+    let back = Checkpoint::load(fixture("v2.ckpt")).unwrap();
+    assert_eq!(back.step, 9);
+    assert_eq!(back.data_batches, 9);
+    assert_eq!(back.seed, Some(77));
+    assert_eq!((back.stream_batch, back.stream_seq), (8, 16));
+    assert!(back.param_dims.is_empty(), "v2 records no tensor shapes");
+    assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
+
+    let path = tmpfile("v2rt");
+    back.save(&path).unwrap();
+    let again = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(again.seed, Some(77));
+    assert_eq!((again.stream_batch, again.stream_seq), (8, 16));
+    assert_eq!(again.params[1].data, back.params[1].data);
+    assert_eq!(again.opt_state[0].1[0].data, back.opt_state[0].1[0].data);
+}
+
+#[test]
+fn v3_roundtrip_preserves_rank3_shapes_and_state() {
+    let ck = v3_checkpoint();
+    let path = tmpfile("v3rt");
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.param_dims, vec![vec![3, 4, 5], vec![6, 4]]);
+    assert_eq!(back.opt_state.len(), 2);
+    for ((ia, ta), (ib, tb)) in ck.opt_state.iter().zip(&back.opt_state) {
+        assert_eq!(ia, ib);
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(tb) {
+            assert_eq!(x.data, y.data, "state tensor drifted through save/load");
+        }
+    }
+}

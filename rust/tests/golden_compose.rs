@@ -1169,7 +1169,7 @@ fn composed_spec_trains_end_to_end_and_checkpoints_roundtrip() {
             zipf_alpha: 1.3,
             ..TrainerConfig::default()
         };
-        Trainer::new_native(NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 }, cfg, 24, 8)
+        Trainer::new_native(NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false }, cfg, 24, 8)
     };
 
     let mut full = mk(30);

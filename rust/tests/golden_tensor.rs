@@ -1,0 +1,390 @@
+//! Golden tests for the N-dimensional tensor-parameter path.
+//!
+//! The contract of the tensor generalization is: **rank ≤ 2 changes
+//! nothing**. Every preset built through `OptKind::build_tensor` /
+//! `ModelOptimizer::new_tensors` / the tensor-shaped executors on a rank-2
+//! shape must be BITWISE identical to the pre-existing matrix path — inline
+//! and drained-async — because they route onto exactly that path. Rank-3+
+//! must train end-to-end through the serial and sharded backends with
+//! checkpoint/resume bitwise-equal to an uninterrupted run (the acceptance
+//! bar), and the merge/squeeze collapses must rejoin the matrix path.
+
+use soap_lab::coordinator::ShardedOptimizer;
+use soap_lab::linalg::{Matrix, TensorShape};
+use soap_lab::optim::{Hyper, ModelOptimizer, OptKind, Schedule};
+use soap_lab::session::{Backend, ExecutorBackend, ModelSpec, SerialExecutor, TrainSession};
+use soap_lab::util::rng::Rng;
+
+fn seeded_grads(seed: u64, steps: usize, m: usize, n: usize) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed);
+    (0..steps).map(|_| Matrix::randn(&mut rng, m, n, 1.0)).collect()
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("soap_golden_tensor_{name}_{}", std::process::id()))
+}
+
+/// Every preset (and the SOAP variants), rank-2 shapes: `build_tensor` must
+/// reproduce `build` bitwise, step for step — wide, tall, and 1-D carriers.
+#[test]
+fn rank2_tensor_build_bitwise_matches_matrix_build() {
+    let base = Hyper { weight_decay: 1e-4, precond_freq: 5, ..Hyper::default() };
+    let variants: Vec<(&str, OptKind, Hyper)> = vec![
+        ("adamw", OptKind::AdamW, base.clone()),
+        ("adafactor", OptKind::Adafactor, base.clone()),
+        ("shampoo", OptKind::Shampoo, base.clone()),
+        ("soap", OptKind::Soap, base.clone()),
+        ("soap-one-sided", OptKind::Soap, Hyper { one_sided: true, ..base.clone() }),
+        ("soap-factorized", OptKind::Soap, Hyper { factorized: true, ..base.clone() }),
+        ("soap-dim-capped", OptKind::Soap, Hyper { max_precond_dim: 9, ..base.clone() }),
+        ("galore", OptKind::Galore, base.clone()),
+    ];
+    for &(m, n) in &[(12usize, 8usize), (8, 12), (1, 16)] {
+        for (label, kind, h) in &variants {
+            let mut a = kind.build(m, n, h);
+            let mut b = kind.build_tensor(&TensorShape::matrix(m, n), h);
+            assert_eq!(a.name(), b.name(), "{label} {m}×{n}: label changed");
+            let mut rng = Rng::new(7);
+            let mut wa = Matrix::randn(&mut rng, m, n, 1.0);
+            let mut wb = wa.clone();
+            for (t, g) in seeded_grads(100, 26, m, n).iter().enumerate() {
+                a.update(&mut wa, g, t as u64 + 1, 0.01);
+                b.update(&mut wb, g, t as u64 + 1, 0.01);
+                assert_eq!(
+                    wa.data,
+                    wb.data,
+                    "{label} {m}×{n}: tensor path diverged from matrix path at step {}",
+                    t + 1
+                );
+            }
+        }
+    }
+}
+
+/// The serial executor over tensor shapes ≡ over (m, n) shapes, bitwise —
+/// inline AND drained-async (the service is drained after every step so
+/// adoption timing is a pure function of the step count).
+#[test]
+fn rank2_executors_bitwise_inline_and_drained_async() {
+    let shapes: Vec<(usize, usize)> = vec![(12, 12), (1, 24), (8, 16), (16, 8)];
+    let tshapes: Vec<TensorShape> =
+        shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+    for kind in [OptKind::Soap, OptKind::Shampoo, OptKind::Galore] {
+        for asynchronous in [false, true] {
+            let mut h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+            if asynchronous {
+                h = h.async_refresh();
+            }
+            let mut a = SerialExecutor::new(kind, &h, &shapes);
+            let mut b = SerialExecutor::new_tensors(kind, &h, &tshapes);
+            let mut rng = Rng::new(11);
+            let init: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            let mut pa = init.clone();
+            let mut pb = init;
+            for t in 1..=10u64 {
+                let grads: Vec<Matrix> = shapes
+                    .iter()
+                    .map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0))
+                    .collect();
+                a.step(None, &mut pa, &grads, t, 0.01).unwrap();
+                b.step(None, &mut pb, &grads, t, 0.01).unwrap();
+                if asynchronous {
+                    // Drain both so each adopts the same publications at the
+                    // same steps — the deterministic-async contract.
+                    a.wait_refresh_idle();
+                    b.wait_refresh_idle();
+                }
+            }
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(
+                    x.data, y.data,
+                    "{} (async={asynchronous}): tensor-shaped executor diverged",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// `ModelOptimizer::new_tensors` on rank-2 shapes ≡ `ModelOptimizer::new`.
+#[test]
+fn model_optimizer_tensor_ctor_bitwise() {
+    let shapes = [(6usize, 10usize), (1, 12), (10, 6)];
+    let tshapes: Vec<TensorShape> =
+        shapes.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+    let h = Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() };
+    let sched = Schedule::Constant { lr: 0.01 };
+    let mut a = ModelOptimizer::new(OptKind::Soap, h.clone(), sched.clone(), &shapes);
+    let mut b = ModelOptimizer::new_tensors(OptKind::Soap, h, sched, &tshapes);
+    let mut rng = Rng::new(13);
+    let init: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+    let mut pa = init.clone();
+    let mut pb = init;
+    for _ in 0..9 {
+        let grads: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        a.step(&mut pa, &grads);
+        b.step(&mut pb, &grads);
+    }
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.data, y.data, "new_tensors diverged from new");
+    }
+}
+
+/// A rank-3 shape whose modes merge into its own carrier fold rejoins the
+/// matrix path — bitwise, not approximately.
+#[test]
+fn merged_rank3_collapse_routes_to_matrix_path_bitwise() {
+    // [3, 4, 6] with merge cap 12 → [12, 6] == the (12, 6) carrier.
+    let h = Hyper { weight_decay: 0.0, precond_freq: 4, merge_dims: 12, ..Hyper::default() };
+    let shape = TensorShape::new(vec![3, 4, 6]);
+    assert_eq!(shape.carrier(), (12, 6));
+    let mut a = OptKind::Soap.build(12, 6, &h);
+    let mut b = OptKind::Soap.build_tensor(&shape, &h);
+    let mut rng = Rng::new(17);
+    let mut wa = Matrix::randn(&mut rng, 12, 6, 1.0);
+    let mut wb = wa.clone();
+    for (t, g) in seeded_grads(200, 14, 12, 6).iter().enumerate() {
+        a.update(&mut wa, g, t as u64 + 1, 0.01);
+        b.update(&mut wb, g, t as u64 + 1, 0.01);
+    }
+    assert_eq!(wa.data, wb.data, "merged collapse must rejoin the matrix path");
+    // Without merging the same shape takes the per-mode path (different
+    // math — three factors, not two) yet still descends and stays finite.
+    let h_nd = Hyper { merge_dims: 0, ..h };
+    let mut c = OptKind::Soap.build_tensor(&shape, &h_nd);
+    let mut wc = Matrix::randn(&mut rng, 12, 6, 1.0);
+    for (t, g) in seeded_grads(201, 14, 12, 6).iter().enumerate() {
+        c.update(&mut wc, g, t as u64 + 1, 0.01);
+    }
+    assert!(wc.data.iter().all(|x| x.is_finite()));
+}
+
+/// Degenerate collapses must route, not panic: an over-aggressive
+/// `merge_dims` that folds everything into one mode, and size-1 padding
+/// that squeezes to a vector, both land on the carrier matrix path.
+#[test]
+fn degenerate_rank_collapses_route_to_carrier_path() {
+    // [3, 12, 24] with merge cap ≥ numel → effective [864] (rank 1, carrier
+    // changed): must behave exactly like 2-D SOAP on the (36, 24) carrier.
+    let h = Hyper { weight_decay: 0.0, precond_freq: 4, merge_dims: 900, ..Hyper::default() };
+    let shape = TensorShape::new(vec![3, 12, 24]);
+    let mut a = OptKind::Soap.build(36, 24, &h);
+    let mut b = OptKind::Soap.build_tensor(&shape, &h);
+    assert_eq!(b.name(), "soap");
+    let mut rng = Rng::new(23);
+    let mut wa = Matrix::randn(&mut rng, 36, 24, 1.0);
+    let mut wb = wa.clone();
+    for (t, g) in seeded_grads(300, 6, 36, 24).iter().enumerate() {
+        a.update(&mut wa, g, t as u64 + 1, 0.01);
+        b.update(&mut wb, g, t as u64 + 1, 0.01);
+    }
+    assert_eq!(wa.data, wb.data, "over-merged collapse must rejoin the carrier path");
+    // [1, n, 1] squeezes to a vector (carrier (n, 1)): the 1-D Adam
+    // fallback applies, for the preset and the spec grammar alike.
+    let padded = TensorShape::new(vec![1, 16, 1]);
+    assert_eq!(OptKind::Soap.build_tensor(&padded, &Hyper::default()).name(), "adamw");
+    let spec = OptKind::parse("basis=eigen,inner=adafactor").unwrap();
+    assert_eq!(spec.build_tensor(&padded, &Hyper::default()).name(), "adamw");
+    // Shampoo still preconditions the degenerate vector's carrier.
+    assert_eq!(OptKind::Shampoo.build_tensor(&padded, &Hyper::default()).name(), "shampoo");
+}
+
+/// Rank-3+ state rows survive executor-to-executor transfer (serial exports,
+/// sharded imports) and continue bitwise — the per-mode factor records are
+/// complete.
+#[test]
+fn rank3_state_moves_between_executors_bitwise() {
+    let tshapes = vec![
+        TensorShape::new(vec![3, 4, 5]),
+        TensorShape::matrix(6, 8),
+        TensorShape::new(vec![2, 3, 4, 2]),
+        TensorShape::matrix(1, 10),
+    ];
+    let shapes: Vec<(usize, usize)> = tshapes.iter().map(|s| s.carrier()).collect();
+    let h = Hyper { weight_decay: 0.0, precond_freq: 3, ..Hyper::default() };
+    for kind in [OptKind::Soap, OptKind::Shampoo] {
+        let mut a = SerialExecutor::new_tensors(kind, &h, &tshapes);
+        let mut rng = Rng::new(19);
+        let mut params: Vec<Matrix> =
+            shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+        for t in 1..=5u64 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            a.step(None, &mut params, &grads, t, 0.01).unwrap();
+        }
+        let state = a.export_state().unwrap();
+        let mut b = ShardedOptimizer::new_tensors(kind, &h, &tshapes, 3);
+        b.import_state(state).unwrap();
+        let mut pa = params.clone();
+        let mut pb = params;
+        for t in 6..=9u64 {
+            let grads: Vec<Matrix> =
+                shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+            ExecutorBackend::step(&mut a, None, &mut pa, &grads, t, 0.01).unwrap();
+            b.step(&mut pb, &grads, t, 0.01);
+        }
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.data, y.data, "{}: rank-3 state transfer drifted", kind.name());
+        }
+    }
+}
+
+fn conv_session(backend: Backend, opt: &str, steps: u64) -> TrainSession {
+    TrainSession::builder()
+        .model(ModelSpec::parse("nplm-conv").unwrap())
+        .optimizer(OptKind::parse(opt).unwrap())
+        .hyper(Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() })
+        .schedule(Schedule::Constant { lr: 0.01 })
+        .steps(steps)
+        .workers(3)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+/// The acceptance bar, part 1: a rank-3 parameter trains end-to-end through
+/// the serial AND sharded backends, bitwise-identically.
+#[test]
+fn rank3_conv_model_serial_matches_sharded_bitwise() {
+    let mut serial = conv_session(Backend::Serial, "soap", 8);
+    let mut sharded = conv_session(Backend::Sharded, "soap", 8);
+    // The conv model really does declare a rank-3 W1.
+    assert_eq!(serial.tensor_shapes[1].dims(), &[3, 12, 24]);
+    let log_a = serial.run().unwrap();
+    let log_b = sharded.run().unwrap();
+    assert!(log_a.final_loss().is_finite());
+    for (i, (a, b)) in serial.params.iter().zip(&sharded.params).enumerate() {
+        assert_eq!(a.data, b.data, "param {i}: sharded diverged from serial on rank-3");
+    }
+    // Identical data + identical layers ⇒ identical losses too.
+    for ((sa, la), (sb, lb)) in log_a.losses.iter().zip(&log_b.losses) {
+        assert_eq!((sa, la), (sb, lb));
+    }
+    // SOAP actually preconditions the rank-3 layer (per-mode factors carry
+    // state an AdamW layer would not have).
+    let mut adam = conv_session(Backend::Serial, "adamw", 1);
+    adam.run().unwrap();
+    assert!(
+        serial.state_bytes() > adam.state_bytes(),
+        "rank-3 SOAP should hold per-mode factor state beyond AdamW's moments"
+    );
+}
+
+/// The acceptance bar, part 2: checkpoint/resume on the rank-3 model is
+/// bitwise-identical to the uninterrupted run — inline and drained-async.
+#[test]
+fn rank3_conv_checkpoint_resume_bitwise() {
+    for asynchronous in [false, true] {
+        let build = |steps: u64| {
+            let mut h = Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() };
+            if asynchronous {
+                h = h.async_refresh();
+            }
+            TrainSession::builder()
+                .model(ModelSpec::parse("nplm-conv").unwrap())
+                .optimizer(OptKind::Soap)
+                .hyper(h)
+                .schedule(Schedule::Constant { lr: 0.01 })
+                .steps(steps)
+                .backend(Backend::Serial)
+                .drain_refresh_each_step(asynchronous)
+                .build()
+                .unwrap()
+        };
+        // Uninterrupted: 12 straight steps.
+        let mut full = build(12);
+        full.run().unwrap();
+        // Interrupted: 6 steps, checkpoint to disk, resume, 6 more.
+        let path = tmpfile(&format!("resume_{asynchronous}"));
+        let mut first = build(12);
+        while first.current_step() < 6 {
+            first.step().unwrap();
+        }
+        first.save_checkpoint(&path).unwrap();
+        drop(first);
+        let mut h = Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() };
+        if asynchronous {
+            h = h.async_refresh();
+        }
+        let mut resumed = TrainSession::builder()
+            .model(ModelSpec::parse("nplm-conv").unwrap())
+            .optimizer(OptKind::Soap)
+            .hyper(h)
+            .schedule(Schedule::Constant { lr: 0.01 })
+            .steps(12)
+            .backend(Backend::Serial)
+            .drain_refresh_each_step(asynchronous)
+            .resume_from(&path)
+            .build()
+            .unwrap();
+        assert_eq!(resumed.current_step(), 6);
+        resumed.run().unwrap();
+        std::fs::remove_file(&path).ok();
+        for (i, (a, b)) in full.params.iter().zip(&resumed.params).enumerate() {
+            assert_eq!(
+                a.data, b.data,
+                "param {i} (async={asynchronous}): resume diverged from uninterrupted"
+            );
+        }
+    }
+}
+
+/// Resuming the rank-3 checkpoint into a model that declares W1 as a matrix
+/// must be rejected (the v3 shape record disagrees) — not silently
+/// re-preconditioned.
+#[test]
+fn rank3_checkpoint_rejected_by_matrix_model() {
+    let path = tmpfile("shape_mismatch");
+    let mut conv = conv_session(Backend::Serial, "soap", 6);
+    while conv.current_step() < 3 {
+        conv.step().unwrap();
+    }
+    conv.save_checkpoint(&path).unwrap();
+    let err = TrainSession::builder()
+        .model(ModelSpec::parse("nplm-tiny").unwrap()) // same carriers, rank-2 W1
+        .optimizer(OptKind::Soap)
+        .hyper(Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() })
+        .schedule(Schedule::Constant { lr: 0.01 })
+        .steps(6)
+        .backend(Backend::Serial)
+        .resume_from(&path)
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("tensor shape"), "{err}");
+}
+
+/// Other presets and the composition grammar also run the rank-3 model
+/// end-to-end: tensor Shampoo (per-mode inverse roots + grafting) and the
+/// factorized eigen×adafactor spec.
+#[test]
+fn rank3_conv_other_optimizers_train() {
+    for opt in ["shampoo", "basis=eigen,inner=adafactor", "adamw", "adafactor"] {
+        let mut s = conv_session(Backend::Sharded, opt, 6);
+        let log = s.run().unwrap();
+        assert!(
+            log.final_loss().is_finite(),
+            "{opt}: non-finite loss on the rank-3 model"
+        );
+        // And the state is checkpoint-complete: a fresh session resumes it.
+        let ck = s.checkpoint().unwrap();
+        let mut t = TrainSession::builder()
+            .model(ModelSpec::parse("nplm-conv").unwrap())
+            .optimizer(OptKind::parse(opt).unwrap())
+            .hyper(Hyper { weight_decay: 0.0, precond_freq: 4, ..Hyper::default() })
+            .schedule(Schedule::Constant { lr: 0.01 })
+            .steps(8)
+            .workers(3)
+            .backend(Backend::Sharded)
+            .resume_checkpoint(ck)
+            .build()
+            .unwrap();
+        assert_eq!(t.current_step(), 6);
+        t.run().unwrap();
+    }
+}

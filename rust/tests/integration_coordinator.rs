@@ -20,7 +20,7 @@ fn native(opt: OptKind, steps: u64, seed: u64, workers: usize) -> Trainer {
         zipf_alpha: 1.3,
         ..TrainerConfig::default()
     };
-    Trainer::new_native(NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 }, cfg, 24, 8)
+    Trainer::new_native(NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false }, cfg, 24, 8)
 }
 
 #[test]

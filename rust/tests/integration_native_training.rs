@@ -21,7 +21,7 @@ fn trainer(opt: OptKind, hyper: Hyper, steps: u64, lr: f32, seed: u64) -> Traine
         zipf_alpha: 1.3,
         ..TrainerConfig::default()
     };
-    Trainer::new_native(NplmConfig { vocab: 64, context: 4, dim: 16, hidden: 32 }, cfg, 32, 16)
+    Trainer::new_native(NplmConfig { vocab: 64, context: 4, dim: 16, hidden: 32, conv: false }, cfg, 32, 16)
 }
 
 #[test]
@@ -106,7 +106,7 @@ fn grad_accum_consistency() {
         zipf_alpha: 1.3,
         ..TrainerConfig::default()
     };
-    let mut t = Trainer::new_native(NplmConfig { vocab: 64, context: 4, dim: 16, hidden: 32 }, cfg, 32, 8);
+    let mut t = Trainer::new_native(NplmConfig { vocab: 64, context: 4, dim: 16, hidden: 32, conv: false }, cfg, 32, 8);
     assert_eq!(t.tokens_per_step(), 16 * 32);
     let log = t.run().unwrap();
     assert!(log.final_loss().is_finite());

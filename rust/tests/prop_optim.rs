@@ -1,11 +1,18 @@
 //! Property tests over the optimizer family — the paper's structural claims
 //! as invariants: Claim 1 equivalence, SOAP(Q=I) ≡ AdamW, grafting norm
-//! equality, refresh staleness semantics, descent on random quadratics.
+//! equality, refresh staleness semantics, descent on random quadratics —
+//! plus the sharding balancer's invariants (determinism, exact partition,
+//! the LPT balance bound, and degenerate inputs).
 
-use soap_lab::linalg::Matrix;
+use soap_lab::coordinator::sharded::{
+    assign_shards, assign_shards_tensors, layer_update_flops, tensor_update_flops,
+};
+use soap_lab::coordinator::ShardedOptimizer;
+use soap_lab::linalg::{Matrix, TensorShape};
 use soap_lab::optim::idealized::{claim1_row_identity, idealized_adafactor_dir, idealized_shampoo_dir};
 use soap_lab::optim::{AdamW, Hyper, LayerOptimizer, OptKind, Soap};
 use soap_lab::util::prop::{self, ensure};
+use soap_lab::util::rng::Rng;
 
 #[test]
 fn prop_claim1_equivalence() {
@@ -184,6 +191,127 @@ fn prop_grafting_matches_adamw_norm() {
             format!("norms {ns} vs {na}"),
         )
     });
+}
+
+/// Random mixed-rank shape lists for the sharding properties.
+fn random_shapes(rng: &mut Rng, n: usize) -> Vec<TensorShape> {
+    (0..n)
+        .map(|_| {
+            let rank = 1 + rng.below(3) as usize; // 1..=3
+            let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(24) as usize).collect();
+            TensorShape::new(dims)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_assign_shards_partitions_every_layer_exactly_once() {
+    prop::check("assign_shards: exact partition, valid shard ids", 25, |rng| {
+        let n = rng.below(14) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let shapes = random_shapes(rng, n);
+        let assign = assign_shards_tensors(&shapes, k);
+        // Every layer appears exactly once (the output IS the partition
+        // function), and every shard id is in range.
+        ensure(assign.len() == n, format!("{} assignments for {n} layers", assign.len()))?;
+        ensure(assign.iter().all(|&s| s < k), format!("shard id out of range: {assign:?}"))
+    });
+}
+
+#[test]
+fn prop_assign_shards_deterministic_across_runs() {
+    prop::check("assign_shards: same input ⇒ same assignment", 20, |rng| {
+        let n = rng.below(12) as usize;
+        let k = 1 + rng.below(5) as usize;
+        let shapes = random_shapes(rng, n);
+        let a = assign_shards_tensors(&shapes, k);
+        let b = assign_shards_tensors(&shapes, k);
+        ensure(a == b, format!("nondeterministic assignment: {a:?} vs {b:?}"))?;
+        // The rank-2 entry point agrees with the tensor one on matrices.
+        let mats: Vec<(usize, usize)> = shapes.iter().map(|s| s.carrier()).collect();
+        let rank2: Vec<TensorShape> =
+            mats.iter().map(|&(m, n)| TensorShape::matrix(m, n)).collect();
+        ensure(
+            assign_shards(&mats, k) == assign_shards_tensors(&rank2, k),
+            "matrix and tensor entry points disagree on rank-2 input".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_assign_shards_lpt_balance_bound() {
+    prop::check("assign_shards: max shard cost ≤ 4/3 · OPT proxy", 30, |rng| {
+        let n = 1 + rng.below(16) as usize;
+        let k = 1 + rng.below(5) as usize;
+        let shapes = random_shapes(rng, n);
+        let costs: Vec<f64> = shapes.iter().map(|s| tensor_update_flops(s.dims())).collect();
+        let assign = assign_shards_tensors(&shapes, k);
+        let mut load = vec![0.0f64; k];
+        for (i, &s) in assign.iter().enumerate() {
+            load[s] += costs[i];
+        }
+        let max_load = load.iter().cloned().fold(0.0f64, f64::max);
+        // OPT lower-bound proxy: mean load, the biggest single job, and —
+        // when there are more jobs than shards — the two smallest of the
+        // k+1 largest jobs (some shard must take two of them). Graham's
+        // LPT guarantee (≤ 4/3·OPT − 1/(3k)) holds against any OPT ≥ proxy.
+        let total: f64 = costs.iter().sum();
+        let mut sorted = costs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut proxy = (total / k as f64).max(sorted.first().copied().unwrap_or(0.0));
+        if n > k {
+            proxy = proxy.max(sorted[k - 1] + sorted[k]);
+        }
+        ensure(
+            max_load <= 4.0 / 3.0 * proxy + 1e-6,
+            format!("LPT bound violated: max {max_load} vs proxy {proxy} (k={k}, n={n})"),
+        )
+    });
+}
+
+#[test]
+fn assign_shards_degenerate_inputs() {
+    // Empty shape list: an empty assignment, from both entry points.
+    assert!(assign_shards(&[], 3).is_empty());
+    assert!(assign_shards_tensors(&[], 3).is_empty());
+    // More shards than layers: everything assigned, ids in range, and the
+    // sharded optimizer still constructs and steps.
+    let shapes = vec![(4usize, 4usize), (1, 8)];
+    let assign = assign_shards(&shapes, 7);
+    assert_eq!(assign.len(), 2);
+    assert!(assign.iter().all(|&s| s < 7));
+    let hyper = Hyper { weight_decay: 0.0, ..Hyper::default() };
+    let mut opt = ShardedOptimizer::new(OptKind::Soap, &hyper, &shapes, 7);
+    let mut rng = Rng::new(5);
+    let mut params: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+    let grads: Vec<Matrix> =
+        shapes.iter().map(|&(m, n)| Matrix::randn(&mut rng, m, n, 1.0)).collect();
+    opt.step(&mut params, &grads, 1, 0.01);
+    assert!(params.iter().all(|p| p.data.iter().all(|x| x.is_finite())));
+    // An empty model is a no-op, not a panic.
+    let mut empty = ShardedOptimizer::new(OptKind::Soap, &hyper, &[], 3);
+    empty.step(&mut [], &[], 1, 0.01);
+    assert_eq!(empty.state_bytes(), 0);
+}
+
+#[test]
+fn tensor_cost_model_reduces_to_paper_matrix_model() {
+    // Σ dₖ³ + 2·numel·Σ dₖ on [m, n] IS m³ + n³ + 2m²n + 2mn² (§7.3), and
+    // the per-mode model values a cube of small factors far below its
+    // carrier fold — the point of threading true shapes to the balancer.
+    for &(m, n) in &[(8usize, 4usize), (64, 64), (1, 128)] {
+        let got = layer_update_flops(m, n);
+        let (mf, nf) = (m as f64, n as f64);
+        let want = mf * mf * mf + nf * nf * nf + 2.0 * mf * mf * nf + 2.0 * mf * nf * nf;
+        assert!((got - want).abs() <= 1e-9 * want.abs(), "{m}×{n}: {got} vs {want}");
+    }
+    let cube = tensor_update_flops(&[8, 8, 8]);
+    let folded = tensor_update_flops(&[64, 8]);
+    assert!(
+        cube < folded,
+        "per-mode cost of [8,8,8] ({cube}) should be far below its 64×8 fold ({folded})"
+    );
 }
 
 #[test]

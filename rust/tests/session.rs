@@ -19,7 +19,7 @@ const SEQ: usize = 24;
 const BATCH: usize = 8;
 
 fn nplm() -> NplmConfig {
-    NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24 }
+    NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false }
 }
 
 fn hyper(mode: RefreshMode) -> Hyper {
@@ -205,7 +205,7 @@ fn resume_rejects_exhausted_budget_and_wrong_shapes() {
     let mut first = builder(OptKind::AdamW, 3, 24, RefreshMode::Inline).build().unwrap();
     first.run().unwrap();
     let ck = first.checkpoint().unwrap();
-    let other = NplmConfig { vocab: 64, context: 3, dim: 16, hidden: 24 };
+    let other = NplmConfig { vocab: 64, context: 3, dim: 16, hidden: 24, conv: false };
     let err = TrainSession::builder()
         .model(ModelSpec::nplm(other, SEQ, BATCH))
         .optimizer(OptKind::AdamW)
