@@ -10,7 +10,9 @@
 //! step math — and emits the workspace-vs-legacy steps/sec speedups.
 //!
 //! Results go to `bench_results/step_latency.json`. Knobs:
-//! `SOAP_BENCH_STEPS` (timed steps per cell, default 150).
+//! `SOAP_BENCH_STEPS` (timed steps per cell, default 150) and
+//! `SOAP_BENCH_TELEMETRY=1` (measure with span tracing + metrics enabled,
+//! to quantify the telemetry overhead against the default-off run).
 //!
 //! ```sh
 //! cargo bench --bench step_latency -- --legacy-alloc
@@ -408,6 +410,8 @@ fn row_json(r: &Row) -> Json {
 
 fn main() {
     let legacy = std::env::args().any(|a| a == "--legacy-alloc");
+    let telemetry = std::env::var("SOAP_BENCH_TELEMETRY").map(|v| v == "1").unwrap_or(false);
+    soap_lab::telemetry::set_enabled(telemetry);
     let steps: usize = std::env::var("SOAP_BENCH_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -562,6 +566,7 @@ fn main() {
         ("timed_steps", Json::num(steps as f64)),
         ("warmup_steps", Json::num(warmup as f64)),
         ("legacy_measured", Json::Bool(legacy)),
+        ("telemetry", Json::Bool(telemetry)),
         (
             "cpus",
             Json::num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),

@@ -24,10 +24,11 @@ pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
 /// `--config` file format (embedded in unknown-key errors).
 pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, seed, \
 precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
-max-precond-dim, merge-dims, artifacts, log-every, save, resume, one-sided, \
-factorized, refresh-eigh, async-refresh, pjrt-optimizer";
+max-precond-dim, merge-dims, artifacts, log-every, metrics-every, trace-out, \
+metrics-out, jsonl-out, save, resume, one-sided, factorized, refresh-eigh, \
+async-refresh, pjrt-optimizer, telemetry";
 
-const VALUE_KEYS: [&str; 19] = [
+const VALUE_KEYS: [&str; 23] = [
     "model",
     "optimizer",
     "backend",
@@ -45,12 +46,16 @@ const VALUE_KEYS: [&str; 19] = [
     "merge-dims",
     "artifacts",
     "log-every",
+    "metrics-every",
+    "trace-out",
+    "metrics-out",
+    "jsonl-out",
     "save",
     "resume",
 ];
 
-const FLAG_KEYS: [&str; 5] =
-    ["one-sided", "factorized", "refresh-eigh", "async-refresh", "pjrt-optimizer"];
+const FLAG_KEYS: [&str; 6] =
+    ["one-sided", "factorized", "refresh-eigh", "async-refresh", "pjrt-optimizer", "telemetry"];
 
 /// A fully-resolved run description.
 #[derive(Clone, Debug)]
@@ -81,6 +86,19 @@ pub struct RunConfig {
     pub merge_dims: usize,
     pub artifacts_dir: String,
     pub log_every: u64,
+    /// Master telemetry switch: span tracing, the metrics registry, and
+    /// per-layer health snapshots every `metrics_every` steps.
+    pub telemetry: bool,
+    /// Health-snapshot cadence in steps (0 = never; only with telemetry).
+    pub metrics_every: u64,
+    /// Write a Chrome trace-event JSON here after the run (empty = none).
+    pub trace_out: Option<String>,
+    /// Write a Prometheus text-exposition snapshot of the metrics registry
+    /// here after the run (empty = none).
+    pub metrics_out: Option<String>,
+    /// Stream one JSON object per step (and per health snapshot, with
+    /// telemetry on) to this file (empty = none).
+    pub jsonl_out: Option<String>,
     /// Resume from this checkpoint at build time (empty = fresh run).
     pub resume: Option<String>,
     /// Write a checkpoint here after the run (empty = none).
@@ -109,6 +127,11 @@ impl Default for RunConfig {
             merge_dims: 0,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
+            telemetry: false,
+            metrics_every: 10,
+            trace_out: None,
+            metrics_out: None,
+            jsonl_out: None,
             resume: None,
             save: None,
         }
@@ -156,8 +179,13 @@ impl RunConfig {
             "merge-dims" => self.merge_dims = num(key, value)?,
             "artifacts" => self.artifacts_dir = value.to_string(),
             "log-every" => self.log_every = num(key, value)?,
+            "metrics-every" => self.metrics_every = num(key, value)?,
+            "trace-out" => self.trace_out = (!value.is_empty()).then(|| value.to_string()),
+            "metrics-out" => self.metrics_out = (!value.is_empty()).then(|| value.to_string()),
+            "jsonl-out" => self.jsonl_out = (!value.is_empty()).then(|| value.to_string()),
             "save" => self.save = (!value.is_empty()).then(|| value.to_string()),
             "resume" => self.resume = (!value.is_empty()).then(|| value.to_string()),
+            "telemetry" => self.telemetry = parse_bool(key, value)?,
             "one-sided" => self.one_sided = parse_bool(key, value)?,
             "factorized" => self.factorized = parse_bool(key, value)?,
             "refresh-eigh" => self.refresh_eigh = parse_bool(key, value)?,
@@ -225,6 +253,11 @@ impl RunConfig {
         s.push_str(&format!("factorized={}\n", self.factorized));
         s.push_str(&format!("artifacts={}\n", self.artifacts_dir));
         s.push_str(&format!("log-every={}\n", self.log_every));
+        s.push_str(&format!("telemetry={}\n", self.telemetry));
+        s.push_str(&format!("metrics-every={}\n", self.metrics_every));
+        // trace-out / metrics-out / jsonl-out are run actions like
+        // save/resume: pass them per invocation, don't bake output paths
+        // into a config file.
         s
     }
 
@@ -337,7 +370,12 @@ impl RunConfig {
             .grad_accum(self.grad_accum)
             .workers(self.workers)
             .backend(self.backend)
-            .log_every(self.log_every);
+            .log_every(self.log_every)
+            .telemetry(self.telemetry)
+            .metrics_every(self.metrics_every);
+        if let Some(path) = &self.trace_out {
+            b = b.trace_out(path);
+        }
         if let Some(path) = &self.resume {
             b = b.resume_from(path);
         }
@@ -521,6 +559,8 @@ mod tests {
         rc.max_precond_dim = 96;
         rc.merge_dims = 64;
         rc.log_every = 5;
+        rc.telemetry = true;
+        rc.metrics_every = 7;
         rc.validate().unwrap();
 
         let mut back = RunConfig::default();
@@ -535,6 +575,8 @@ mod tests {
         assert_eq!(back.grad_accum, rc.grad_accum);
         assert_eq!(back.workers, rc.workers);
         assert_eq!(back.log_every, rc.log_every);
+        assert_eq!(back.telemetry, rc.telemetry);
+        assert_eq!(back.metrics_every, rc.metrics_every);
         // The acceptance bar: the resolved Hyper is IDENTICAL.
         let (ha, hb) = (rc.hyper(), back.hyper());
         assert_eq!(format!("{ha:?}"), format!("{hb:?}"), "dump→load changed the Hyper");

@@ -129,19 +129,23 @@ impl TrainLog {
     /// First step (1-based) whose loss reaches `target`, if any — the
     /// steps-to-target metric of Fig 4. Uses a trailing mean of width `k`
     /// to suppress single-batch noise.
+    ///
+    /// The window is a `VecDeque` with a running `f64` sum — O(1) per step
+    /// instead of the O(k) `Vec::remove(0)` shuffle this used to do, which
+    /// matters when the figure benches sweep many (target, k) pairs over
+    /// long loss curves.
     pub fn steps_to_loss(&self, target: f32, k: usize) -> Option<u64> {
         let k = k.max(1);
-        let mut window: Vec<f32> = Vec::new();
+        let mut window: std::collections::VecDeque<f32> = std::collections::VecDeque::new();
+        let mut sum = 0.0f64;
         for &(step, l) in &self.losses {
-            window.push(l);
+            window.push_back(l);
+            sum += l as f64;
             if window.len() > k {
-                window.remove(0);
+                sum -= window.pop_front().expect("window non-empty") as f64;
             }
-            if window.len() == k {
-                let mean = window.iter().sum::<f32>() / k as f32;
-                if mean <= target {
-                    return Some(step);
-                }
+            if window.len() == k && sum / k as f64 <= target as f64 {
+                return Some(step);
             }
         }
         None
@@ -220,6 +224,50 @@ mod tests {
         // width-2 mean reaches ≤3.0 at step 4 ((3+2)/2 = 2.5).
         assert_eq!(log.steps_to_loss(3.0, 2), Some(4));
         assert_eq!(log.steps_to_loss(0.5, 1), None);
+    }
+
+    /// Reference implementation: recompute the trailing-window sum from
+    /// scratch at every step (the behavior the `Vec::remove(0)` version
+    /// had, minus its O(k) shuffle).
+    fn steps_to_loss_naive(losses: &[(u64, f32)], target: f32, k: usize) -> Option<u64> {
+        let k = k.max(1);
+        for (i, &(step, _)) in losses.iter().enumerate() {
+            if i + 1 < k {
+                continue;
+            }
+            let sum: f64 = losses[i + 1 - k..=i].iter().map(|&(_, l)| l as f64).sum();
+            if sum / k as f64 <= target as f64 {
+                return Some(step);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn steps_to_loss_running_sum_matches_naive() {
+        // Deterministic LCG; losses are multiples of 2⁻⁷ in [0, 8), so both
+        // the running f64 add/subtract and the fresh window sums are exact —
+        // the two implementations must agree on every (target, k) pair.
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state
+        };
+        for trial in 0..50 {
+            let n = 1 + (next() % 120) as usize;
+            let losses: Vec<(u64, f32)> = (0..n)
+                .map(|i| (i as u64 + 1, ((next() >> 20) & 0x3FF) as f32 / 128.0))
+                .collect();
+            let log = TrainLog { losses: losses.clone(), ..Default::default() };
+            for k in [1usize, 2, 3, 7, n, n + 3] {
+                let target = ((next() >> 20) & 0x3FF) as f32 / 128.0;
+                assert_eq!(
+                    log.steps_to_loss(target, k),
+                    steps_to_loss_naive(&losses, target, k),
+                    "trial {trial}: divergence at n={n} k={k} target={target}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -181,6 +181,36 @@ impl ShardedOptimizer {
         }
     }
 
+    /// Per-layer optimizer health at step `t`, layer-ordered: update norm,
+    /// basis staleness, whitening quality. `grad_norm` is left 0.0 — the
+    /// session fills it in from the gradients it owns.
+    pub fn layer_health(&self, t: u64) -> Vec<crate::session::LayerHealth> {
+        let mut out: Vec<crate::session::LayerHealth> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|s| crate::session::LayerHealth {
+                layer: s.layer_idx,
+                grad_norm: 0.0,
+                update_norm: s.opt.update_norm(),
+                staleness: s.opt.basis_snapshot_step().map(|snap| t.saturating_sub(snap)),
+                whitening_offdiag: s.opt.whitening_offdiag(),
+            })
+            .collect();
+        out.sort_by_key(|h| h.layer);
+        out
+    }
+
+    /// Refresh-service queue depth (0 in Inline mode).
+    pub fn refresh_queue_depth(&self) -> usize {
+        self.refresh_service.as_ref().map(|s| s.pending()).unwrap_or(0)
+    }
+
+    /// Refresh-pool utilization `(jobs, busy seconds)` in Async mode.
+    pub fn refresh_pool_stats(&self) -> Option<(u64, f64)> {
+        self.refresh_service.as_ref().map(|s| s.pool_stats())
+    }
+
     /// Barrier: wait for every in-flight background refresh (tests and
     /// orderly shutdown; a no-op in Inline mode).
     pub fn wait_refresh_idle(&self) {

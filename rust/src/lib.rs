@@ -51,6 +51,17 @@
 //!   Prefer Async when step time matters (throughput/p99); prefer Inline
 //!   for exact reproducibility of the paper's trajectories.
 //!
+//! ## Observability
+//!
+//! The [`telemetry`] module provides opt-in span tracing (Chrome
+//! trace-event export via `--trace-out`), a counters/gauges/histograms
+//! registry with Prometheus text exposition (`--metrics-out`), and
+//! per-layer optimizer health snapshots (gradient/update norms, basis
+//! staleness, refresh-queue depth, whitening quality) streamed through
+//! [`session::MetricsSink::on_health`]. Telemetry is free when disabled:
+//! the steady-state step stays zero-alloc and trajectories are bitwise
+//! unchanged.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions.
 
@@ -64,4 +75,5 @@ pub mod optim;
 pub mod precond;
 pub mod runtime;
 pub mod session;
+pub mod telemetry;
 pub mod util;

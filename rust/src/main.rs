@@ -54,10 +54,30 @@ fn app() -> App {
                 )
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
+                .opt(
+                    "metrics-every",
+                    "10",
+                    "emit a health snapshot every k steps (with --telemetry)",
+                )
+                .opt(
+                    "trace-out",
+                    "",
+                    "write a Chrome trace-event JSON here at the end (with --telemetry)",
+                )
+                .opt(
+                    "metrics-out",
+                    "",
+                    "write a Prometheus text snapshot here at the end (with --telemetry)",
+                )
+                .opt("jsonl-out", "", "stream per-step (and per-health) JSON lines to this file")
                 .opt("config", "", "key=value config file (CLI args override it)")
                 .opt("save", "", "write a checkpoint here at the end")
                 .opt("resume", "", "resume from this checkpoint (restores step + data cursor)")
                 .flag("dump-config", "print the resolved config as a loadable file and exit")
+                .flag(
+                    "telemetry",
+                    "enable span tracing + health metrics (see README: Observability)",
+                )
                 .flag("one-sided", "SOAP one-sided variant (§7.1)")
                 .flag("factorized", "SOAP factorized variant (§7.2.1)")
                 .flag("refresh-eigh", "use full eigh refresh (Fig 7 right)")
@@ -107,6 +127,12 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     // (params + optimizer state + schedule step + data cursor together)
     // all happen inside build().
     let mut session = rc.session_builder()?.build()?;
+    if let Some(path) = &rc.jsonl_out {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("--jsonl-out {path}: {e}"))?;
+        let sink = soap_lab::session::JsonlSink::new(std::io::BufWriter::new(file));
+        session.add_sink(Box::new(sink));
+    }
     if let Some(path) = &rc.resume {
         println!(
             "resumed from {path} at step {} ({} steps remaining)",
@@ -141,6 +167,15 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     if let Some(path) = &rc.save {
         session.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
+    }
+    if let Some(path) = &rc.trace_out {
+        println!("chrome trace written to {path}");
+    }
+    if let Some(path) = &rc.metrics_out {
+        let text = soap_lab::telemetry::metrics::registry().prometheus();
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing metrics snapshot to {path}: {e}"))?;
+        println!("metrics snapshot written to {path}");
     }
     Ok(())
 }

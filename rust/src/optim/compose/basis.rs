@@ -15,6 +15,7 @@
 //!   gradient's square factor (≡ its singular vectors at full rank),
 //!   recomputed from scratch at the refresh frequency (§3 difference #1).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -23,6 +24,42 @@ use super::{Basis, BasisState, StateLayout};
 use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
 use crate::optim::hyper::{Hyper, RefreshMethod};
 use crate::precond::{BasisHandle, BasisPayload, RefreshService};
+
+/// Process-wide basis id counter: gives every refreshable basis a stable
+/// per-layer tag for trace spans without threading layer indices through
+/// construction. Observation-only — never touches the math.
+static NEXT_BASIS_ID: AtomicU64 = AtomicU64::new(0);
+
+fn next_basis_id() -> u64 {
+    NEXT_BASIS_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Sample the whitening-quality metric on every k-th completed refresh
+/// (1st, 1+k-th, …). Refresh-time only, telemetry-gated, so the allocating
+/// matmuls never touch the steady-state step.
+const WHITENING_SAMPLE_EVERY: u64 = 4;
+
+/// Off-diagonal mass fraction of a square matrix: ‖offdiag(A)‖²_F / ‖A‖²_F.
+/// 0 = perfectly diagonal (ideal whitening), → 1 = energy all off-diagonal.
+fn offdiag_ratio(a: &Matrix) -> f64 {
+    let n = a.rows.min(a.cols);
+    let mut off = 0.0f64;
+    let mut tot = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let x = a.at(i, j) as f64;
+            tot += x * x;
+            if i != j {
+                off += x * x;
+            }
+        }
+    }
+    if tot > 0.0 {
+        off / tot
+    } else {
+        0.0
+    }
+}
 
 /// The trivial basis: the working space IS the original space.
 #[derive(Default)]
@@ -112,6 +149,16 @@ pub struct EigenBasis {
     pub adopted_version: u64,
     /// Step whose factors back the ACTIVE basis (staleness = t − this).
     pub basis_step: u64,
+    /// Stable id tagging this basis's refresh spans (`args.layer` in the
+    /// Chrome trace). Assigned once at construction from a global counter.
+    trace_id: u64,
+    /// Completed refreshes adopted by THIS basis (init + inline + async
+    /// adoptions) — drives the every-k-th whitening sample cadence.
+    refresh_count: u64,
+    /// Latest whitening-quality sample: off-diagonal mass fraction of the
+    /// rotated second moment `QᵀLQ` (ROADMAP metric). `None` until telemetry
+    /// is enabled and a sampled refresh has run.
+    whitening: Option<f64>,
 }
 
 impl EigenBasis {
@@ -143,6 +190,9 @@ impl EigenBasis {
             handle: None,
             adopted_version: 0,
             basis_step: 0,
+            trace_id: next_basis_id(),
+            refresh_count: 0,
+            whitening: None,
         }
     }
 
@@ -164,13 +214,52 @@ impl EigenBasis {
             handle: None,
             adopted_version: 0,
             basis_step: 0,
+            trace_id: next_basis_id(),
+            refresh_count: 0,
+            whitening: None,
         }
+    }
+
+    /// Bookkeeping shared by every path that installs a fresh basis: advance
+    /// the refresh counter and, when telemetry is on, sample the whitening
+    /// metric on the every-k-th cadence.
+    fn note_refresh_completed(&mut self) {
+        self.refresh_count += 1;
+        if crate::telemetry::enabled() && self.refresh_count % WHITENING_SAMPLE_EVERY == 1 {
+            self.sample_whitening();
+        }
+    }
+
+    /// Whitening quality: rotate the factor EMA into the active basis and
+    /// measure the off-diagonal mass of `QᵀLQ`. A perfectly whitened layer is
+    /// diagonal (Q exactly L's eigenbasis); basis staleness shows up as mass
+    /// leaking off the diagonal. The allocating matmuls are fine here — this
+    /// runs only at (sampled) refresh time, never in the steady-state step.
+    fn sample_whitening(&mut self) {
+        let (p, q) = match self.flavor {
+            EigenFlavor::Rotation => match (&self.l, &self.left_q) {
+                (Some(l), Some(ql)) => (l, ql),
+                _ => match (&self.r, &self.right_q) {
+                    (Some(r), Some(qr)) => (r, qr),
+                    _ => return,
+                },
+            },
+            // InverseRoot: `left_q` holds `L^{-1/e}`, not an orthonormal
+            // basis — rotate with the warm-start eigenvector cache instead.
+            EigenFlavor::InverseRoot => match (&self.l, &self.l_vecs) {
+                (Some(l), Some(vl)) => (l, vl),
+                _ => return,
+            },
+        };
+        let rotated = q.matmul_tn(&p.matmul(q));
+        self.whitening = Some(offdiag_ratio(&rotated));
     }
 
     /// First-step initialization (Rotation): set L/R from the first gradient
     /// and take a full eigendecomposition for the starting basis, as in the
     /// official implementation.
     fn init_rotation(&mut self, g: &Matrix, t: u64) {
+        let _span = crate::telemetry::span_layer("refresh.init", "refresh", self.trace_id);
         let t0 = Instant::now();
         if let Some(l) = &mut self.l {
             *l = g.matmul_nt(g);
@@ -185,6 +274,7 @@ impl EigenBasis {
         self.initialized = true;
         self.basis_step = t;
         self.refresh_secs += t0.elapsed().as_secs_f64();
+        self.note_refresh_completed();
     }
 
     /// The Rotation refresh math (Algorithm 4 power-iteration + QR, or warm
@@ -249,6 +339,7 @@ impl EigenBasis {
 
     /// Periodic refresh, executed inline (synchronously).
     fn refresh_inline(&mut self, t: u64) {
+        let _span = crate::telemetry::span_layer("refresh.inline", "refresh", self.trace_id);
         let t0 = Instant::now();
         match self.flavor {
             EigenFlavor::Rotation => {
@@ -287,6 +378,7 @@ impl EigenBasis {
         }
         self.basis_step = t;
         self.refresh_secs += t0.elapsed().as_secs_f64();
+        self.note_refresh_completed();
     }
 
     /// Async mode: swap in the newest published basis, if any. One atomic
@@ -320,6 +412,7 @@ impl EigenBasis {
                 }
                 self.adopted_version = published.version;
                 self.basis_step = published.snapshot_step;
+                self.note_refresh_completed();
             }
         }
     }
@@ -330,8 +423,14 @@ impl EigenBasis {
     /// building a backlog.
     fn enqueue_refresh(&self, service: &Arc<RefreshService>, handle: &Arc<BasisHandle>, t: u64) {
         if !handle.try_begin_refresh() {
+            // Shed, not queued: this is the single load-shedding point the
+            // refresh-service introspection counts.
+            if crate::telemetry::enabled() {
+                crate::telemetry::metrics::refresh_shed_total().inc();
+            }
             return;
         }
+        let trace_id = self.trace_id;
         match self.flavor {
             EigenFlavor::Rotation => {
                 let method = self.h.refresh;
@@ -343,6 +442,8 @@ impl EigenBasis {
                     Arc::clone(handle),
                     t,
                     Box::new(move || {
+                        let _span =
+                            crate::telemetry::span_layer("refresh.bg", "refresh", trace_id);
                         let (left, right) = Self::compute_rotation_refresh(
                             method,
                             l.as_ref(),
@@ -364,6 +465,8 @@ impl EigenBasis {
                     Arc::clone(handle),
                     t,
                     Box::new(move || {
+                        let _span =
+                            crate::telemetry::span_layer("refresh.bg", "refresh", trace_id);
                         let (l_inv, r_inv, vl, vr) = Self::compute_roots(
                             &lh,
                             &rh,
@@ -510,6 +613,10 @@ impl Basis for EigenBasis {
             .then_some(self.basis_step),
             EigenFlavor::InverseRoot => self.initialized.then_some(self.basis_step),
         }
+    }
+
+    fn whitening_offdiag(&self) -> Option<f64> {
+        self.whitening
     }
 
     fn state_bytes(&self) -> usize {
@@ -830,6 +937,15 @@ impl Basis for AnyBasis {
             AnyBasis::Eigen(b) => b.basis_snapshot_step(),
             AnyBasis::GradSvd(b) => b.basis_snapshot_step(),
             AnyBasis::TensorEigen(b) => b.basis_snapshot_step(),
+        }
+    }
+
+    fn whitening_offdiag(&self) -> Option<f64> {
+        match self {
+            AnyBasis::Identity(b) => b.whitening_offdiag(),
+            AnyBasis::Eigen(b) => b.whitening_offdiag(),
+            AnyBasis::GradSvd(b) => b.whitening_offdiag(),
+            AnyBasis::TensorEigen(b) => b.whitening_offdiag(),
         }
     }
 

@@ -137,6 +137,7 @@ impl MomentEngine for AdamEngine {
                 // write the fused update straight into `ws.dir`.
                 let identity = basis.is_identity();
                 if !identity {
+                    let _span = crate::telemetry::span("engine.project", "engine");
                     basis.project_into(g, &mut ws.rot_g, &mut ws.scratch);
                 }
                 let gp: &Matrix = if identity { g } else { &ws.rot_g };
@@ -146,18 +147,22 @@ impl MomentEngine for AdamEngine {
                 // Fused pass: V EMA + bias correction + m̂/√v̂ — the same f32
                 // expressions, in the same order, as the allocating
                 // `hadamard`/`ema_inplace`/`zip` chain in `direction`.
-                for (((vi, &gi), &mi), oi) in self
-                    .v
-                    .data
-                    .iter_mut()
-                    .zip(&gp.data)
-                    .zip(&self.m.data)
-                    .zip(out.data.iter_mut())
                 {
-                    *vi = h.beta2 * *vi + ob2 * (gi * gi);
-                    *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                    let _span = crate::telemetry::span("engine.moment", "engine");
+                    for (((vi, &gi), &mi), oi) in self
+                        .v
+                        .data
+                        .iter_mut()
+                        .zip(&gp.data)
+                        .zip(&self.m.data)
+                        .zip(out.data.iter_mut())
+                    {
+                        *vi = h.beta2 * *vi + ob2 * (gi * gi);
+                        *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                    }
                 }
                 if !identity {
+                    let _span = crate::telemetry::span("engine.project_back", "engine");
                     basis.project_back_into(&ws.nrot, &mut ws.dir, &mut ws.scratch);
                 }
             }
@@ -165,23 +170,30 @@ impl MomentEngine for AdamEngine {
                 // SOAP Algorithm 3: momentum in the original space, G and M
                 // rotated every step, V updated in the rotated space.
                 self.m.ema_inplace(g, h.beta1);
-                basis.project_into(g, &mut ws.rot_g, &mut ws.scratch);
-                basis.project_into(&self.m, &mut ws.rot_m, &mut ws.scratch);
+                {
+                    let _span = crate::telemetry::span("engine.project", "engine");
+                    basis.project_into(g, &mut ws.rot_g, &mut ws.scratch);
+                    basis.project_into(&self.m, &mut ws.rot_m, &mut ws.scratch);
+                }
                 ws.nrot.reuse_shape(ws.rot_g.rows, ws.rot_g.cols);
                 // `m_hat = m_rot.scale(1/bc1)` in the reference — keep the
                 // multiply-by-reciprocal form for bitwise parity.
                 let inv_bc1 = 1.0 / bc1;
-                for (((vi, &gi), &mi), ni) in self
-                    .v
-                    .data
-                    .iter_mut()
-                    .zip(&ws.rot_g.data)
-                    .zip(&ws.rot_m.data)
-                    .zip(ws.nrot.data.iter_mut())
                 {
-                    *vi = h.beta2 * *vi + ob2 * (gi * gi);
-                    *ni = (mi * inv_bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                    let _span = crate::telemetry::span("engine.moment", "engine");
+                    for (((vi, &gi), &mi), ni) in self
+                        .v
+                        .data
+                        .iter_mut()
+                        .zip(&ws.rot_g.data)
+                        .zip(&ws.rot_m.data)
+                        .zip(ws.nrot.data.iter_mut())
+                    {
+                        *vi = h.beta2 * *vi + ob2 * (gi * gi);
+                        *ni = (mi * inv_bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
+                    }
                 }
+                let _span = crate::telemetry::span("engine.project_back", "engine");
                 basis.project_back_into(&ws.nrot, &mut ws.dir, &mut ws.scratch);
             }
         }
@@ -320,11 +332,13 @@ impl MomentEngine for AdafactorEngine {
             MomentumSpace::InBasis => {
                 let identity = basis.is_identity();
                 if !identity {
+                    let _span = crate::telemetry::span("engine.project", "engine");
                     basis.project_into(g, rot_g, scratch);
                 }
                 let gp: &Matrix = if identity { g } else { &*rot_g };
                 self.m.ema_inplace(gp, beta1);
                 let out: &mut Matrix = if identity { &mut *dir } else { &mut *nrot };
+                let moment_span = crate::telemetry::span("engine.moment", "engine");
                 if let Some(v) = &mut self.v_1d {
                     // Degenerate (vector) case: plain Adam second moment,
                     // fused exactly like `AdamEngine::direction_into`.
@@ -357,30 +371,39 @@ impl MomentEngine for AdafactorEngine {
                         out,
                     );
                 }
+                drop(moment_span);
                 if !identity {
+                    let _span = crate::telemetry::span("engine.project_back", "engine");
                     basis.project_back_into(nrot, dir, scratch);
                 }
             }
             MomentumSpace::Original => {
                 // Factorized SOAP (§7.2.1): rank-1 V in the eigenbasis.
                 self.m.ema_inplace(g, beta1);
-                basis.project_into(g, rot_g, scratch);
-                basis.project_into(&self.m, rot_m, scratch);
-                factored_dir_into(
-                    &mut self.a,
-                    &mut self.c,
-                    beta2,
-                    eps,
-                    rot_g,
-                    rot_m,
-                    1.0 / bc1,
-                    bc2,
-                    sums_row,
-                    sums_col,
-                    hat_row,
-                    hat_col,
-                    nrot,
-                );
+                {
+                    let _span = crate::telemetry::span("engine.project", "engine");
+                    basis.project_into(g, rot_g, scratch);
+                    basis.project_into(&self.m, rot_m, scratch);
+                }
+                {
+                    let _span = crate::telemetry::span("engine.moment", "engine");
+                    factored_dir_into(
+                        &mut self.a,
+                        &mut self.c,
+                        beta2,
+                        eps,
+                        rot_g,
+                        rot_m,
+                        1.0 / bc1,
+                        bc2,
+                        sums_row,
+                        sums_col,
+                        hat_row,
+                        hat_col,
+                        nrot,
+                    );
+                }
+                let _span = crate::telemetry::span("engine.project_back", "engine");
                 basis.project_back_into(nrot, dir, scratch);
             }
         }
@@ -496,10 +519,15 @@ impl MomentEngine for InverseRootEngine {
         // multiply-by-reciprocal expression as the reference), then the full
         // sandwich applies through `project_into`.
         let inv_bc1 = 1.0 / bc1;
-        ws.rot_m.reuse_shape(self.m.rows, self.m.cols);
-        for (oi, &mi) in ws.rot_m.data.iter_mut().zip(&self.m.data) {
-            *oi = mi * inv_bc1;
+        {
+            let _span = crate::telemetry::span("engine.moment", "engine");
+            ws.rot_m.reuse_shape(self.m.rows, self.m.cols);
+            for (oi, &mi) in ws.rot_m.data.iter_mut().zip(&self.m.data) {
+                *oi = mi * inv_bc1;
+            }
         }
+        // The whole Kronecker sandwich applies in `project` — no back-rotate.
+        let _span = crate::telemetry::span("engine.project", "engine");
         basis.project_into(&ws.rot_m, &mut ws.dir, &mut ws.scratch);
     }
 

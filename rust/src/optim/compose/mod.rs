@@ -183,6 +183,13 @@ pub trait Basis: Send {
         None
     }
 
+    /// Off-diagonal mass ratio of the rotated second moment at the most
+    /// recent refresh (see `LayerOptimizer::whitening_offdiag`). Bases
+    /// without a rotation — or that have not sampled yet — return `None`.
+    fn whitening_offdiag(&self) -> Option<f64> {
+        None
+    }
+
     /// Bytes of state held by the basis (paper §7.2 accounting).
     fn state_bytes(&self) -> usize;
 
@@ -557,6 +564,17 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
 
     fn basis_snapshot_step(&self) -> Option<u64> {
         self.basis.basis_snapshot_step()
+    }
+
+    fn update_norm(&self) -> Option<f64> {
+        if self.ws.dir.numel() == 0 {
+            return None;
+        }
+        Some(self.ws.dir.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt())
+    }
+
+    fn whitening_offdiag(&self) -> Option<f64> {
+        self.basis.whitening_offdiag()
     }
 }
 

@@ -121,6 +121,23 @@ pub trait LayerOptimizer: Send {
     fn basis_snapshot_step(&self) -> Option<u64> {
         None
     }
+
+    /// Frobenius norm of the most recent preconditioned update direction
+    /// (pre-`lr` scaling), for per-layer health metrics. `None` when the
+    /// optimizer does not retain its last direction (monolithic baselines,
+    /// PJRT) or has not stepped yet.
+    fn update_norm(&self) -> Option<f64> {
+        None
+    }
+
+    /// Whitening quality: off-diagonal mass ratio of the rotated second
+    /// moment `QᵀLQ` at the most recent refresh (0 = the basis perfectly
+    /// diagonalizes the factor — the property SOAP's rotation maintains).
+    /// `None` for optimizers without a rotating basis, before the first
+    /// refresh, or while telemetry is disabled (sampling is gated).
+    fn whitening_offdiag(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Which optimizer to build (CLI/config surface): a named preset or a

@@ -68,11 +68,22 @@ impl RefreshService {
         compute: Box<dyn FnOnce() -> BasisPayload + Send + 'static>,
     ) {
         *self.shared.pending.lock().unwrap() += 1;
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::refresh_enqueued_total().inc();
+        }
         let shared = Arc::clone(&self.shared);
         self.pool.submit(move || {
             let t0 = Instant::now();
-            let result = catch_unwind(AssertUnwindSafe(compute));
+            let result = {
+                // Generic task span; the compute closure itself opens the
+                // per-layer `refresh.bg` span with its basis id.
+                let _span = crate::telemetry::span("refresh.task", "refresh");
+                catch_unwind(AssertUnwindSafe(compute))
+            };
             let dt = t0.elapsed().as_secs_f64();
+            if crate::telemetry::enabled() {
+                crate::telemetry::metrics::refresh_latency_seconds().observe(dt);
+            }
             {
                 let mut stats = shared.stats.lock().unwrap();
                 match result {
@@ -119,6 +130,12 @@ impl RefreshService {
     /// as `StepTiming::bg_refresh_s`.
     pub fn refresh_seconds(&self) -> f64 {
         self.stats().total_secs
+    }
+
+    /// Refresh-pool utilization: `(jobs executed, cumulative busy seconds)`.
+    /// Advances only while telemetry is enabled.
+    pub fn pool_stats(&self) -> (u64, f64) {
+        self.pool.stats()
     }
 }
 

@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use super::sink::LayerHealth;
 use crate::coordinator::{PjrtOptimizer, ShardedOptimizer};
 use crate::linalg::{Matrix, TensorShape};
 use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
@@ -92,6 +93,23 @@ pub trait ExecutorBackend {
     /// Mean basis staleness at step `t`, averaged over preconditioned layers.
     fn mean_basis_staleness(&self, _t: u64) -> f64 {
         0.0
+    }
+
+    /// Per-layer optimizer health at step `t`, layer-ordered. `grad_norm`
+    /// is left 0.0 — the session fills it in from the gradients it owns.
+    /// Empty when the backend has no per-layer introspection (PJRT).
+    fn collect_layer_health(&self, _t: u64) -> Vec<LayerHealth> {
+        Vec::new()
+    }
+
+    /// Background refresh-service queue depth (0 without a service).
+    fn refresh_queue_depth(&self) -> usize {
+        0
+    }
+
+    /// Refresh-pool utilization `(jobs, busy seconds)`, when a service runs.
+    fn refresh_pool_stats(&self) -> Option<(u64, f64)> {
+        None
     }
 
     /// Barrier: wait for in-flight background refreshes (no-op inline/PJRT).
@@ -198,6 +216,28 @@ impl ExecutorBackend for SerialExecutor {
         }
     }
 
+    fn collect_layer_health(&self, t: u64) -> Vec<LayerHealth> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(layer, slot)| LayerHealth {
+                layer,
+                grad_norm: 0.0,
+                update_norm: slot.update_norm(),
+                staleness: slot.basis_snapshot_step().map(|snap| t.saturating_sub(snap)),
+                whitening_offdiag: slot.whitening_offdiag(),
+            })
+            .collect()
+    }
+
+    fn refresh_queue_depth(&self) -> usize {
+        self.refresh_service.as_ref().map(|s| s.pending()).unwrap_or(0)
+    }
+
+    fn refresh_pool_stats(&self) -> Option<(u64, f64)> {
+        self.refresh_service.as_ref().map(|s| s.pool_stats())
+    }
+
     fn wait_refresh_idle(&self) {
         if let Some(svc) = &self.refresh_service {
             svc.wait_idle();
@@ -290,6 +330,18 @@ impl ExecutorBackend for ShardedExecutor {
 
     fn mean_basis_staleness(&self, t: u64) -> f64 {
         self.inner.mean_basis_staleness(t)
+    }
+
+    fn collect_layer_health(&self, t: u64) -> Vec<LayerHealth> {
+        self.inner.layer_health(t)
+    }
+
+    fn refresh_queue_depth(&self) -> usize {
+        self.inner.refresh_queue_depth()
+    }
+
+    fn refresh_pool_stats(&self) -> Option<(u64, f64)> {
+        self.inner.refresh_pool_stats()
     }
 
     fn wait_refresh_idle(&self) {

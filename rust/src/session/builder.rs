@@ -114,6 +114,9 @@ pub struct SessionBuilder {
     drain_refresh: bool,
     resume: Option<ResumeSource>,
     sinks: Vec<Box<dyn MetricsSink>>,
+    telemetry: bool,
+    metrics_every: u64,
+    trace_out: Option<PathBuf>,
 }
 
 impl Default for SessionBuilder {
@@ -140,6 +143,9 @@ impl SessionBuilder {
             drain_refresh: false,
             resume: None,
             sinks: Vec::new(),
+            telemetry: false,
+            metrics_every: 10,
+            trace_out: None,
         }
     }
 
@@ -242,6 +248,31 @@ impl SessionBuilder {
         self
     }
 
+    /// Master telemetry switch (default off). When on, `build()` enables
+    /// the process-wide [`crate::telemetry`] recorder: span tracing, the
+    /// metrics registry, and per-layer [`super::HealthSnapshot`] emission
+    /// every [`Self::metrics_every`] steps. When off (the default), the
+    /// instrumentation compiles to one relaxed atomic load per span site and
+    /// the trained trajectory is bitwise identical to a build without it.
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.telemetry = on;
+        self
+    }
+
+    /// Health-snapshot cadence in steps (default 10; 0 = never). Only
+    /// meaningful with [`Self::telemetry`] on.
+    pub fn metrics_every(mut self, k: u64) -> Self {
+        self.metrics_every = k;
+        self
+    }
+
+    /// Write a Chrome trace-event JSON (`chrome://tracing` / Perfetto) of
+    /// every recorded span when `run()` completes.
+    pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace_out = Some(path.into());
+        self
+    }
+
     /// The hyperparameters as the optimizer will actually see them — with a
     /// composition spec's structural overrides folded in.
     fn resolved_hyper(&self) -> Hyper {
@@ -318,8 +349,14 @@ impl SessionBuilder {
             drain_refresh,
             resume,
             mut sinks,
+            telemetry,
+            metrics_every,
+            trace_out,
         } = self;
         let model = model.expect("validated");
+        // The span recorder and instrument gates are process-global; the
+        // builder is the one place sessions flip them.
+        crate::telemetry::set_enabled(telemetry);
 
         let mut rng = Rng::new(seed);
         let (grad, params, vocab, seq, batch) = match &model {
@@ -395,6 +432,9 @@ impl SessionBuilder {
             steps_done: 0,
             drain_refresh,
             sinks,
+            telemetry,
+            metrics_every,
+            trace_out,
         };
         if let Some(src) = resume {
             let ck = match src {

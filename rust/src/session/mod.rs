@@ -73,7 +73,9 @@ mod train;
 
 pub use backend::{Backend, ExecutorBackend, PjrtExecutor, SerialExecutor, ShardedExecutor};
 pub use builder::{ModelSpec, SessionBuilder};
-pub use sink::{CollectSink, JsonlSink, MetricsSink, StdoutSink, StepRecord};
+pub use sink::{
+    CollectSink, HealthSnapshot, JsonlSink, LayerHealth, MetricsSink, StdoutSink, StepRecord,
+};
 pub use train::TrainSession;
 
 /// Short alias: `Session::builder()` reads naturally at call sites.

@@ -21,10 +21,58 @@ pub struct StepRecord<'a> {
     pub timing: &'a StepTiming,
 }
 
+/// Per-layer optimizer health, one entry per parameter tensor.
+#[derive(Clone, Debug, Default)]
+pub struct LayerHealth {
+    /// Layer index in executor order (matches checkpoint layer order).
+    pub layer: usize,
+    /// Frobenius norm of this step's (accumulated) gradient.
+    pub grad_norm: f64,
+    /// Frobenius norm of the last preconditioned update direction, when the
+    /// optimizer exposes one (composed optimizers do; PJRT does not).
+    pub update_norm: Option<f64>,
+    /// Basis staleness in steps (`t − basis_step`); `None` for optimizers
+    /// without a refreshed basis (AdamW, Adafactor, identity basis).
+    pub staleness: Option<u64>,
+    /// Whitening quality: off-diagonal mass ratio of the rotated second
+    /// moment `QᵀLQ` (0 = perfectly diagonal), sampled at the most recent
+    /// refresh. `None` until first sampled or for basis-free optimizers.
+    pub whitening_offdiag: Option<f64>,
+}
+
+/// A periodic optimizer-health sample (every `metrics_every` steps when
+/// telemetry is enabled), combining per-layer state with refresh-service
+/// and thread-pool introspection.
+#[derive(Clone, Debug, Default)]
+pub struct HealthSnapshot {
+    /// 1-based global step this snapshot was taken after.
+    pub step: u64,
+    /// Background refreshes currently pending in the refresh service.
+    pub queue_depth: usize,
+    /// Cumulative refresh snapshots shed (skipped because the previous
+    /// refresh of the same basis was still in flight).
+    pub shed_total: u64,
+    /// Background refresh-task latency quantiles, seconds (`NaN` until the
+    /// first background refresh completes).
+    pub refresh_p50_s: f64,
+    pub refresh_p99_s: f64,
+    /// Background refresh tasks completed so far.
+    pub refresh_count: u64,
+    /// Refresh `ThreadPool` utilization: jobs executed and cumulative busy
+    /// seconds across workers (`None` when no async refresh service runs).
+    pub pool_jobs: Option<u64>,
+    pub pool_busy_s: Option<f64>,
+    pub layers: Vec<LayerHealth>,
+}
+
 /// Streaming consumer of training metrics.
 pub trait MetricsSink {
     /// Called after every training step.
     fn on_step(&mut self, rec: &StepRecord<'_>);
+
+    /// Called on health-sample steps (telemetry enabled, every
+    /// `metrics_every`-th step) with per-layer optimizer health.
+    fn on_health(&mut self, _health: &HealthSnapshot) {}
 
     /// Called once when `run()` finishes, with the full log.
     fn on_complete(&mut self, _log: &TrainLog) {}
@@ -68,6 +116,19 @@ impl<W: Write> JsonlSink<W> {
     }
 }
 
+/// `NaN`/infinite floats have no JSON representation; emit `null` so every
+/// line stays parseable.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::num(x) } else { Json::Null }
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => num_or_null(v),
+        None => Json::Null,
+    }
+}
+
 impl<W: Write> MetricsSink for JsonlSink<W> {
     fn on_step(&mut self, rec: &StepRecord<'_>) {
         let line = Json::obj(vec![
@@ -75,8 +136,41 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
             ("loss", Json::num(rec.loss as f64)),
             ("lr", Json::num(rec.lr as f64)),
             ("step_s", Json::num(rec.timing.total())),
+            ("data_s", Json::num(rec.timing.data_s)),
+            ("grad_s", Json::num(rec.timing.grad_s)),
+            ("update_s", Json::num(rec.timing.update_s)),
             ("refresh_s", Json::num(rec.timing.refresh_s)),
+            ("bg_refresh_s", Json::num(rec.timing.bg_refresh_s)),
             ("staleness_steps", Json::num(rec.timing.staleness_steps)),
+        ]);
+        let _ = writeln!(self.out, "{}", line.dump());
+    }
+
+    fn on_health(&mut self, health: &HealthSnapshot) {
+        let layers = health
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("layer", Json::num(l.layer as f64)),
+                    ("grad_norm", num_or_null(l.grad_norm)),
+                    ("update_norm", opt_num(l.update_norm)),
+                    ("staleness", opt_num(l.staleness.map(|s| s as f64))),
+                    ("whitening_offdiag", opt_num(l.whitening_offdiag)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let line = Json::obj(vec![
+            ("kind", Json::str("health")),
+            ("step", Json::num(health.step as f64)),
+            ("queue_depth", Json::num(health.queue_depth as f64)),
+            ("shed_total", Json::num(health.shed_total as f64)),
+            ("refresh_p50_s", num_or_null(health.refresh_p50_s)),
+            ("refresh_p99_s", num_or_null(health.refresh_p99_s)),
+            ("refresh_count", Json::num(health.refresh_count as f64)),
+            ("pool_jobs", opt_num(health.pool_jobs.map(|j| j as f64))),
+            ("pool_busy_s", opt_num(health.pool_busy_s)),
+            ("layers", Json::Arr(layers)),
         ]);
         let _ = writeln!(self.out, "{}", line.dump());
     }
@@ -86,17 +180,23 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
     }
 }
 
-/// In-memory sink: collects `(step, loss)` pairs. Mostly for tests and
-/// programmatic consumers that want live losses without parsing the log.
+/// In-memory sink: collects `(step, loss)` pairs and health snapshots.
+/// Mostly for tests and programmatic consumers that want live metrics
+/// without parsing the log.
 #[derive(Default)]
 pub struct CollectSink {
     pub losses: Vec<(u64, f32)>,
+    pub health: Vec<HealthSnapshot>,
     pub completed: bool,
 }
 
 impl MetricsSink for CollectSink {
     fn on_step(&mut self, rec: &StepRecord<'_>) {
         self.losses.push((rec.step, rec.loss));
+    }
+
+    fn on_health(&mut self, health: &HealthSnapshot) {
+        self.health.push(health.clone());
     }
 
     fn on_complete(&mut self, _log: &TrainLog) {
@@ -117,14 +217,66 @@ mod tests {
         let mut buf = Vec::new();
         {
             let mut sink = JsonlSink::new(&mut buf);
-            let t = StepTiming { grad_s: 0.5, update_s: 0.25, ..Default::default() };
+            let t = StepTiming {
+                data_s: 0.125,
+                grad_s: 0.5,
+                update_s: 0.25,
+                bg_refresh_s: 0.0625,
+                ..Default::default()
+            };
             sink.on_step(&rec(&t));
         }
         let line = String::from_utf8(buf).unwrap();
         let v = Json::parse(line.trim()).unwrap();
         assert_eq!(v.get("step").as_f64(), Some(3.0));
         assert_eq!(v.get("loss").as_f64(), Some(1.5));
-        assert_eq!(v.get("step_s").as_f64(), Some(0.75));
+        assert_eq!(v.get("step_s").as_f64(), Some(0.875));
+        // The full timing breakdown rides along (bg_refresh_s overlaps the
+        // step, so it is reported but excluded from step_s).
+        assert_eq!(v.get("data_s").as_f64(), Some(0.125));
+        assert_eq!(v.get("grad_s").as_f64(), Some(0.5));
+        assert_eq!(v.get("update_s").as_f64(), Some(0.25));
+        assert_eq!(v.get("bg_refresh_s").as_f64(), Some(0.0625));
+    }
+
+    #[test]
+    fn jsonl_sink_emits_parseable_health_lines() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf);
+            let h = HealthSnapshot {
+                step: 10,
+                queue_depth: 2,
+                shed_total: 1,
+                refresh_p50_s: f64::NAN, // no background refresh yet
+                refresh_p99_s: f64::NAN,
+                refresh_count: 0,
+                pool_jobs: Some(4),
+                pool_busy_s: Some(0.5),
+                layers: vec![
+                    LayerHealth {
+                        layer: 0,
+                        grad_norm: 2.0,
+                        update_norm: Some(0.25),
+                        staleness: Some(3),
+                        whitening_offdiag: Some(0.125),
+                    },
+                    LayerHealth { layer: 1, grad_norm: 1.0, ..Default::default() },
+                ],
+            };
+            sink.on_health(&h);
+        }
+        let line = String::from_utf8(buf).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("kind").as_str(), Some("health"));
+        assert_eq!(v.get("queue_depth").as_f64(), Some(2.0));
+        // NaN quantiles must serialize as null, keeping the line valid JSON.
+        assert_eq!(v.get("refresh_p50_s"), &Json::Null);
+        let layers = v.get("layers").as_arr().unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].get("staleness").as_f64(), Some(3.0));
+        assert_eq!(layers[0].get("whitening_offdiag").as_f64(), Some(0.125));
+        assert_eq!(layers[1].get("update_norm"), &Json::Null);
     }
 
     #[test]

@@ -3,13 +3,13 @@
 //! configuration, typed metrics streaming, state accounting, and
 //! first-class `checkpoint()`/resume.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::backend::ExecutorBackend;
-use super::sink::{MetricsSink, StepRecord};
+use super::sink::{HealthSnapshot, MetricsSink, StepRecord};
 use crate::coordinator::{Checkpoint, GradBackend, StepTiming, TrainLog};
 use crate::data::{Batch, BatchStream, CorpusSpec};
 use crate::linalg::{Matrix, TensorShape};
@@ -51,6 +51,14 @@ pub struct TrainSession {
     pub(super) steps_done: u64,
     pub(super) drain_refresh: bool,
     pub(super) sinks: Vec<Box<dyn MetricsSink>>,
+    /// Telemetry master switch for THIS session (mirrors the global
+    /// [`crate::telemetry::enabled`] flag the builder set).
+    pub(super) telemetry: bool,
+    /// Emit a [`HealthSnapshot`] every k-th step when telemetry is on
+    /// (0 = never).
+    pub(super) metrics_every: u64,
+    /// Where `run()` writes the Chrome trace-event JSON, if anywhere.
+    pub(super) trace_out: Option<PathBuf>,
 }
 
 impl TrainSession {
@@ -118,12 +126,15 @@ impl TrainSession {
     pub fn step(&mut self) -> Result<(f32, StepTiming)> {
         let mut timing = StepTiming::default();
 
+        let span_data = crate::telemetry::span("step.data", "step");
         let t0 = Instant::now();
         let batch = self.stream.next_batch();
         let micro = batch.microbatches(self.grad_accum);
         timing.data_s = t0.elapsed().as_secs_f64();
+        drop(span_data);
 
         // Gradient accumulation: mean over microbatches.
+        let span_grad = crate::telemetry::span("step.grad", "step");
         let t0 = Instant::now();
         let mut loss_acc = 0.0f64;
         let mut grads: Option<Vec<Matrix>> = None;
@@ -149,6 +160,7 @@ impl TrainSession {
         }
         let loss = (loss_acc / micro.len() as f64) as f32;
         timing.grad_s = t0.elapsed().as_secs_f64();
+        drop(span_grad);
 
         // Optimizer step (+ refresh accounting): hot-path refresh seconds
         // from the executor's inline account, background seconds reported
@@ -163,12 +175,16 @@ impl TrainSession {
             GradBackend::Pjrt { engine, .. } => Some(engine),
             GradBackend::Native { .. } => None,
         };
-        self.exec.step(engine, &mut self.params, &grads, t, lr)?;
+        {
+            let _span = crate::telemetry::span("step.update", "step");
+            self.exec.step(engine, &mut self.params, &grads, t, lr)?;
+        }
         if self.drain_refresh {
             // Deterministic-async mode: adoption timing becomes a pure
             // function of the step count, so runs are replayable bitwise.
             // The drain wait is real critical-path time — captured below in
             // update_total so reported throughput stays honest.
+            let _span = crate::telemetry::span("step.refresh", "step");
             self.exec.wait_refresh_idle();
         }
         let update_total = t0.elapsed().as_secs_f64();
@@ -187,7 +203,45 @@ impl TrainSession {
         for sink in &mut self.sinks {
             sink.on_step(&rec);
         }
+        if self.telemetry && self.metrics_every > 0 && t % self.metrics_every == 0 {
+            self.emit_health(t, &grads);
+        }
         Ok((loss, timing))
+    }
+
+    /// Assemble a [`HealthSnapshot`] — per-layer optimizer health plus
+    /// refresh-service and pool introspection — and publish it through every
+    /// sink, mirroring the queue depth into the metrics-registry gauge.
+    /// Telemetry-gated by the caller; runs on the metrics cadence only, so
+    /// its allocations never touch the steady-state step path.
+    fn emit_health(&mut self, t: u64, grads: &[Matrix]) {
+        let mut layers = self.exec.collect_layer_health(t);
+        for lh in layers.iter_mut() {
+            if let Some(g) = grads.get(lh.layer) {
+                lh.grad_norm = g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt();
+            }
+        }
+        let queue_depth = self.exec.refresh_queue_depth();
+        crate::telemetry::metrics::refresh_queue_depth().set(queue_depth as f64);
+        let (pool_jobs, pool_busy_s) = match self.exec.refresh_pool_stats() {
+            Some((jobs, busy)) => (Some(jobs), Some(busy)),
+            None => (None, None),
+        };
+        let lat = crate::telemetry::metrics::refresh_latency_seconds();
+        let health = HealthSnapshot {
+            step: t,
+            queue_depth,
+            shed_total: crate::telemetry::metrics::refresh_shed_total().get(),
+            refresh_p50_s: lat.quantile(0.5),
+            refresh_p99_s: lat.quantile(0.99),
+            refresh_count: lat.count(),
+            pool_jobs,
+            pool_busy_s,
+            layers,
+        };
+        for sink in &mut self.sinks {
+            sink.on_health(&health);
+        }
     }
 
     /// Train up to the session's total step budget, returning the full log.
@@ -205,6 +259,13 @@ impl TrainSession {
         }
         for sink in &mut self.sinks {
             sink.on_complete(&log);
+        }
+        // Trace requested with telemetry never enabled still writes a
+        // valid (empty) trace — the file's existence is part of the CLI
+        // contract, its contents are whatever the recorder captured.
+        if let Some(path) = self.trace_out.clone() {
+            crate::telemetry::trace::write_chrome_trace(&path)
+                .with_context(|| format!("writing chrome trace to {}", path.display()))?;
         }
         Ok(log)
     }

@@ -1,0 +1,419 @@
+//! Counters, gauges, and histograms with Prometheus text exposition.
+//!
+//! All instruments are lock-free atomics so hot paths (refresh workers, the
+//! GEMM pool) can record without contention or allocation; the registry's
+//! `Mutex` is touched only at get-or-create and snapshot time. Instruments
+//! are leaked (`Box::leak`) so call sites hold `&'static` references and a
+//! lookup is paid once, not per event.
+//!
+//! Histograms use power-of-two buckets over `[1 ns, ~1100 s)` — plenty of
+//! resolution for latencies — plus exact `count`/`sum`/`min`/`max`, which
+//! makes the common quantile edge cases exact: an empty histogram reports
+//! `NaN`, and single-sample / all-equal histograms report the sample value
+//! itself (no bucket interpolation error).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::Json;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+    fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+    fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+/// Histogram bucket count: powers of two from `BUCKET_BASE` up. Bucket 0
+/// holds everything below `BUCKET_BASE` (including non-positive values);
+/// bucket `i ≥ 1` covers `[BUCKET_BASE·2^(i-1), BUCKET_BASE·2^i)`; the last
+/// bucket also absorbs overflow.
+const N_BUCKETS: usize = 44;
+const BUCKET_BASE: f64 = 1e-9;
+
+fn bucket_index(x: f64) -> usize {
+    if x.is_nan() || x <= BUCKET_BASE {
+        return 0;
+    }
+    let i = (x / BUCKET_BASE).log2().floor() as usize + 1;
+    i.min(N_BUCKETS - 1)
+}
+
+fn bucket_bounds(i: usize) -> (f64, f64) {
+    if i == 0 {
+        (0.0, BUCKET_BASE)
+    } else {
+        (BUCKET_BASE * (1u64 << (i - 1)) as f64, BUCKET_BASE * (1u64 << i) as f64)
+    }
+}
+
+/// Lock-free latency/size histogram with exact count/sum/min/max.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, x: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let _ = self.sum_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            Some((f64::from_bits(b) + x).to_bits())
+        });
+        let _ = self.min_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            if x < f64::from_bits(b) { Some(x.to_bits()) } else { None }
+        });
+        let _ = self.max_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            if x > f64::from_bits(b) { Some(x.to_bits()) } else { None }
+        });
+        self.buckets[bucket_index(x)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+    pub fn min(&self) -> f64 {
+        if self.count() == 0 {
+            f64::NAN
+        } else {
+            f64::from_bits(self.min_bits.load(Ordering::Relaxed))
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.count() == 0 {
+            f64::NAN
+        } else {
+            f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+        }
+    }
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { f64::NAN } else { self.sum() / n as f64 }
+    }
+
+    /// Approximate quantile, `q ∈ [0, 1]`. Exact for the edge cases: `NaN`
+    /// when empty; the sample value when all samples are equal (covers the
+    /// single-sample case). Otherwise linear interpolation inside the
+    /// matching bucket, clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let (min, max) = (self.min(), self.max());
+        if min == max {
+            return min;
+        }
+        let rank = (q * n as f64).ceil().max(1.0);
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (rank - cum as f64) / c as f64;
+                return (lo + frac * (hi - lo)).clamp(min, max);
+            }
+            cum += c;
+        }
+        max
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0f64.to_bits(), Ordering::Relaxed);
+        self.min_bits.store(f64::INFINITY.to_bits(), Ordering::Relaxed);
+        self.max_bits.store(f64::NEG_INFINITY.to_bits(), Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Named instrument registry. Get-or-create hands out `&'static` references
+/// (instruments are leaked — they live for the process, like the series
+/// they describe).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
+    histograms: Mutex<BTreeMap<String, &'static Histogram>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut map = lock(&self.counters);
+        if let Some(c) = map.get(name) {
+            return c;
+        }
+        let c: &'static Counter = Box::leak(Box::default());
+        map.insert(name.to_string(), c);
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut map = lock(&self.gauges);
+        if let Some(g) = map.get(name) {
+            return g;
+        }
+        let g: &'static Gauge = Box::leak(Box::default());
+        map.insert(name.to_string(), g);
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        let mut map = lock(&self.histograms);
+        if let Some(h) = map.get(name) {
+            return h;
+        }
+        let h: &'static Histogram = Box::leak(Box::default());
+        map.insert(name.to_string(), h);
+        h
+    }
+
+    /// Zero every registered instrument (instruments stay registered).
+    pub fn reset(&self) {
+        for c in lock(&self.counters).values() {
+            c.reset();
+        }
+        for g in lock(&self.gauges).values() {
+            g.reset();
+        }
+        for h in lock(&self.histograms).values() {
+            h.reset();
+        }
+    }
+
+    /// Prometheus text exposition (format 0.0.4). Counters and gauges emit
+    /// one sample each; histograms emit a summary (`quantile` labels plus
+    /// `_sum`/`_count`).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in lock(&self.counters).iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in lock(&self.gauges).iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in lock(&self.histograms).iter() {
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for q in [0.5, 0.9, 0.99] {
+                let v = h.quantile(q);
+                let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.sum());
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+
+    /// JSON snapshot of every instrument (for JSONL metric streams).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        for (name, c) in lock(&self.counters).iter() {
+            fields.push((name.clone(), Json::num(c.get() as f64)));
+        }
+        for (name, g) in lock(&self.gauges).iter() {
+            fields.push((name.clone(), Json::num(g.get())));
+        }
+        for (name, h) in lock(&self.histograms).iter() {
+            fields.push((
+                name.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("sum", Json::num(h.sum())),
+                    ("p50", Json::num(h.quantile(0.5))),
+                    ("p99", Json::num(h.quantile(0.99))),
+                ]),
+            ));
+        }
+        Json::Obj(fields.into_iter().collect())
+    }
+}
+
+/// Process-wide registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+// ---- well-known series ---------------------------------------------------
+// Accessors cache the registry lookup so hot paths (refresh gating, pool
+// workers) touch only the instrument's atomics.
+
+/// Refresh snapshots skipped because the previous refresh of the same basis
+/// was still in flight (`BasisHandle::try_begin_refresh` said no).
+pub fn refresh_shed_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_refresh_shed_total"))
+}
+
+/// Background refresh tasks enqueued to the refresh service.
+pub fn refresh_enqueued_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_refresh_enqueued_total"))
+}
+
+/// Wall-clock latency of one background refresh task, seconds.
+pub fn refresh_latency_seconds() -> &'static Histogram {
+    static H: OnceLock<&'static Histogram> = OnceLock::new();
+    H.get_or_init(|| registry().histogram("soap_refresh_latency_seconds"))
+}
+
+/// Pending background refreshes at the last health sample.
+pub fn refresh_queue_depth() -> &'static Gauge {
+    static G: OnceLock<&'static Gauge> = OnceLock::new();
+    G.get_or_init(|| registry().gauge("soap_refresh_queue_depth"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantile_edge_cases() {
+        let h = Histogram::default();
+        assert!(h.quantile(0.5).is_nan(), "empty histogram must report NaN");
+        h.observe(0.125);
+        assert_eq!(h.quantile(0.0), 0.125, "single sample is exact");
+        assert_eq!(h.quantile(0.5), 0.125);
+        assert_eq!(h.quantile(1.0), 0.125);
+        for _ in 0..100 {
+            h.observe(0.125);
+        }
+        assert_eq!(h.quantile(0.99), 0.125, "all-equal samples are exact");
+        h.observe(4.0);
+        let p50 = h.quantile(0.5);
+        assert!((0.0625..=0.25).contains(&p50), "p50 {p50} should sit near 0.125");
+        assert_eq!(h.quantile(1.0), 4.0, "q=1 lands in the max bucket, clamped to max");
+        assert_eq!(h.min(), 0.125);
+        assert_eq!(h.max(), 4.0);
+        assert_eq!(h.count(), 102);
+    }
+
+    #[test]
+    fn histogram_bucket_bounds_cover_value() {
+        for &x in &[1e-10, 5e-9, 1e-6, 3.7e-3, 0.5, 1.0, 900.0, 1e9] {
+            let i = bucket_index(x);
+            let (lo, hi) = bucket_bounds(i);
+            if i == 0 {
+                assert!(x < hi);
+            } else if i < N_BUCKETS - 1 {
+                assert!(x >= lo && x < hi, "{x} not in [{lo}, {hi})");
+            } else {
+                assert!(x >= lo, "{x} below overflow bucket lower bound {lo}");
+            }
+        }
+    }
+
+    #[test]
+    fn registry_get_or_create_is_idempotent() {
+        let r = Registry::default();
+        let a = r.counter("x_total") as *const Counter;
+        let b = r.counter("x_total") as *const Counter;
+        assert_eq!(a, b);
+        r.counter("x_total").add(3);
+        assert_eq!(r.counter("x_total").get(), 3);
+        r.reset();
+        assert_eq!(r.counter("x_total").get(), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::default();
+        r.counter("a_total").add(2);
+        r.gauge("b_depth").set(1.5);
+        r.histogram("c_seconds").observe(0.25);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE a_total counter"));
+        assert!(text.contains("a_total 2"));
+        assert!(text.contains("# TYPE b_depth gauge"));
+        assert!(text.contains("b_depth 1.5"));
+        assert!(text.contains("# TYPE c_seconds summary"));
+        assert!(text.contains("c_seconds_count 1"));
+        assert!(text.contains("c_seconds{quantile=\"0.5\"} 0.25"));
+    }
+
+    #[test]
+    fn counters_are_safe_under_contention() {
+        let r = Registry::default();
+        let c = r.counter("contended_total");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+}

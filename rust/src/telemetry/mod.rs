@@ -1,0 +1,79 @@
+//! Telemetry: span tracing, metrics, and optimizer health introspection.
+//!
+//! The paper's central empirical claims are about *where time goes* (Fig. 7
+//! overhead accounting) and *how stale bases degrade loss* (Fig. 1 frequency
+//! sweep). This module makes both observable without perturbing the math:
+//!
+//! - [`trace`] — low-overhead span tracing. [`span`]/[`span_layer`] scoped
+//!   timers record into per-thread ring buffers;
+//!   [`trace::write_chrome_trace`] exports Chrome trace-event JSON
+//!   (openable in `chrome://tracing` or <https://ui.perfetto.dev>). Spans
+//!   cover the step phases (`step.data` / `step.grad` / `step.update` /
+//!   `step.refresh`), the engine hot path inside `Composed::update`
+//!   (`engine.project` / `engine.moment` / `engine.project_back`), and
+//!   every eigenbasis refresh (`refresh.init` / `refresh.inline` /
+//!   `refresh.bg`, tagged with the per-layer basis id).
+//! - [`metrics`] — a counters/gauges/histograms [`metrics::Registry`] with
+//!   Prometheus text exposition ([`metrics::Registry::prometheus`]).
+//!   Well-known series: `soap_refresh_shed_total` (snapshots skipped while
+//!   a previous refresh was in flight), `soap_refresh_latency_seconds`
+//!   (background refresh task latency histogram),
+//!   `soap_refresh_queue_depth` (pending background refreshes).
+//! - Per-layer optimizer health flows through the
+//!   [`crate::session::MetricsSink`] seam as
+//!   [`crate::session::HealthSnapshot`] records: gradient/update norms,
+//!   per-layer basis staleness, refresh-service queue depth + shed count +
+//!   latency quantiles, refresh `ThreadPool` utilization, and the
+//!   whitening-quality metric (off-diagonal mass of the rotated second
+//!   moment, sampled every k-th refresh).
+//!
+//! ## Provably free when disabled
+//!
+//! Everything is gated on one relaxed [`AtomicBool`]. With telemetry off
+//! (the default) [`span`] returns an inert guard — no clock read, no
+//! thread-local access, no allocation — and every metrics call site skips
+//! its recording. The steady-state optimizer step stays zero-alloc
+//! (`rust/tests/alloc_step.rs` asserts this with telemetry off AND on:
+//! enabled-mode recording writes into preallocated rings), and telemetry
+//! never reads or writes any f32 the update path consumes, so trajectories
+//! are bitwise identical either way (`rust/tests/telemetry.rs`).
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub use trace::{span, span_layer, SpanGuard};
+
+/// Global enable flag. Relaxed loads: the gate is advisory (a span that
+/// races an enable/disable edge is merely recorded or skipped — there is no
+/// ordering dependency on other memory).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is telemetry recording enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn telemetry recording on or off (process-wide). Sessions built with
+/// `SessionBuilder::telemetry(true)` call this; tests toggle it directly.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_toggleable() {
+        // Serialize against sibling tests that flip the global flag.
+        let _lock = trace::test_lock();
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+    }
+}

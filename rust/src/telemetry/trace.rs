@@ -1,0 +1,286 @@
+//! Low-overhead span tracing with a Chrome trace-event JSON exporter.
+//!
+//! [`span`] / [`span_layer`] return a scoped guard; when telemetry is
+//! enabled the guard's `Drop` records one [`SpanEvent`] into a per-thread
+//! ring buffer. When disabled the guard is inert: no clock read, no
+//! thread-local access, no allocation. Recording when enabled is also
+//! allocation-free in steady state — each thread's ring is a fixed-capacity
+//! buffer pre-filled at registration (the one-time registration allocation
+//! lands during session warm-up), and span names are `&'static str`.
+//!
+//! [`write_chrome_trace`] drains every ring into a Chrome trace-event JSON
+//! array of matched `"B"`/`"E"` duration events, ready for
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-thread ring capacity in events. At ~48 bytes/event this is ~0.8 MB
+/// per recording thread; a long run keeps the most recent window, which is
+/// the part worth looking at in a trace viewer anyway.
+const RING_CAP: usize = 16_384;
+
+/// Sentinel for spans not attached to a particular layer/basis.
+pub const NO_LAYER: u64 = u64::MAX;
+
+/// One completed span, timestamped in microseconds since the process trace
+/// epoch (first span or drain after program start).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Layer/basis id for per-layer spans, [`NO_LAYER`] otherwise.
+    pub layer: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tid: u32,
+}
+
+const EMPTY: SpanEvent =
+    SpanEvent { name: "", cat: "", layer: NO_LAYER, start_us: 0, dur_us: 0, tid: 0 };
+
+/// Monotonic epoch all span timestamps are relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next write index.
+    head: usize,
+    /// Number of valid events (saturates at capacity; oldest overwritten).
+    len: usize,
+}
+
+impl Ring {
+    fn new() -> Self {
+        Ring { buf: vec![EMPTY; RING_CAP], head: 0, len: 0 }
+    }
+
+    fn push(&mut self, ev: SpanEvent) {
+        self.buf[self.head] = ev;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<SpanEvent>) {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        for i in 0..self.len {
+            out.push(self.buf[(start + i) % cap]);
+        }
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+/// All registered per-thread rings (rings outlive their threads so a drain
+/// after a worker pool shuts down still sees its spans).
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+struct LocalRing {
+    ring: Arc<Mutex<Ring>>,
+    tid: u32,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalRing>> = const { RefCell::new(None) };
+}
+
+fn record(name: &'static str, cat: &'static str, layer: u64, start: Instant) {
+    let now = Instant::now();
+    let start_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+    let dur_us = now.saturating_duration_since(start).as_micros() as u64;
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let local = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring::new()));
+            lock(registry()).push(Arc::clone(&ring));
+            LocalRing { ring, tid: NEXT_TID.fetch_add(1, Ordering::Relaxed) }
+        });
+        let tid = local.tid;
+        lock(&local.ring).push(SpanEvent { name, cat, layer, start_us, dur_us, tid });
+    });
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Scoped span: records on drop when telemetry was enabled at creation.
+#[must_use = "a span measures the scope it is bound to; bind it to a variable"]
+pub struct SpanGuard {
+    /// `None` when telemetry was disabled at creation — fully inert.
+    start: Option<Instant>,
+    name: &'static str,
+    cat: &'static str,
+    layer: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record(self.name, self.cat, self.layer, start);
+        }
+    }
+}
+
+/// Open a span covering the enclosing scope. Free when telemetry is off.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    span_layer(name, cat, NO_LAYER)
+}
+
+/// Open a span tagged with a layer/basis id (shows as `args.layer` in the
+/// exported trace).
+#[inline]
+pub fn span_layer(name: &'static str, cat: &'static str, layer: u64) -> SpanGuard {
+    let start = if super::enabled() { Some(Instant::now()) } else { None };
+    SpanGuard { start, name, cat, layer }
+}
+
+/// Drain every thread's ring into one chronologically-ordered list. Clears
+/// the rings; intended for end-of-run export and tests.
+pub fn drain() -> Vec<SpanEvent> {
+    let rings = lock(registry());
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        lock(ring).drain_into(&mut out);
+    }
+    out.sort_by_key(|e| e.start_us);
+    out
+}
+
+/// Render spans as a Chrome trace-event JSON document: an object with a
+/// `traceEvents` array of matched `"B"`/`"E"` pairs, one pair per span,
+/// ordered so that within each thread the begin/end events nest properly.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    // (ts, kind, span index); kind 0 = end, 1 = begin so an end at t sorts
+    // before a begin at t (back-to-back siblings stay disjoint).
+    let mut marks: Vec<(u64, u8, usize)> = Vec::with_capacity(events.len() * 2);
+    for (i, e) in events.iter().enumerate() {
+        // A span shorter than the 1 µs clock tick still needs end > begin
+        // for the B/E stream to nest; clamp its duration up to one tick.
+        let dur = e.dur_us.max(1);
+        marks.push((e.start_us, 1, i));
+        marks.push((e.start_us + dur, 0, i));
+    }
+    marks.sort_by(|a, b| {
+        let ea = &events[a.2];
+        let eb = &events[b.2];
+        a.0.cmp(&b.0)
+            .then(a.1.cmp(&b.1))
+            // Tied ends: the later-started (inner) span closes first.
+            .then(if a.1 == 0 { eb.start_us.cmp(&ea.start_us) } else { std::cmp::Ordering::Equal })
+            // Tied begins: the longer (outer) span opens first.
+            .then(eb.dur_us.cmp(&ea.dur_us))
+    });
+    let mut out = Vec::with_capacity(marks.len());
+    for (ts, kind, i) in marks {
+        let e = &events[i];
+        let mut fields = vec![
+            ("name", Json::str(e.name)),
+            ("cat", Json::str(e.cat)),
+            ("ph", Json::str(if kind == 1 { "B" } else { "E" })),
+            ("ts", Json::num(ts as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.tid as f64)),
+        ];
+        if kind == 1 && e.layer != NO_LAYER {
+            fields.push(("args", Json::obj(vec![("layer", Json::num(e.layer as f64))])));
+        }
+        out.push(Json::obj(fields));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Drain all recorded spans and write them to `path` as Chrome trace-event
+/// JSON. Returns the number of spans exported.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<usize> {
+    let events = drain();
+    let doc = chrome_trace_json(&events);
+    std::fs::write(path, doc.dump())?;
+    Ok(events.len())
+}
+
+/// Serializes tests that toggle the process-wide telemetry flag or inspect
+/// the global span rings. Public so integration tests can share it.
+#[doc(hidden)]
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock(&LOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_lock();
+        super::super::set_enabled(false);
+        drain();
+        {
+            let _s = span("test.noop", "test");
+        }
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_spans_round_trip_through_chrome_export() {
+        let _g = test_lock();
+        super::super::set_enabled(true);
+        drain();
+        {
+            let _outer = span("test.outer", "test");
+            let _inner = span_layer("test.inner", "test", 3);
+        }
+        super::super::set_enabled(false);
+        let events = drain();
+        assert_eq!(events.len(), 2);
+        // Inner drops first, so it is recorded first but starts no earlier.
+        assert!(events.iter().any(|e| e.name == "test.outer" && e.layer == NO_LAYER));
+        assert!(events.iter().any(|e| e.name == "test.inner" && e.layer == 3));
+        let doc = chrome_trace_json(&events);
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs.len(), 4);
+        let b = evs.iter().filter(|e| e.get("ph").as_str() == Some("B")).count();
+        let e = evs.iter().filter(|e| e.get("ph").as_str() == Some("E")).count();
+        assert_eq!(b, 2);
+        assert_eq!(e, 2);
+        // The layer tag rides on the begin event.
+        assert!(evs.iter().any(|ev| {
+            ev.get("ph").as_str() == Some("B")
+                && ev.get("name").as_str() == Some("test.inner")
+                && ev.get("args").get("layer").as_f64() == Some(3.0)
+        }));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut ring = Ring::new();
+        for i in 0..(RING_CAP + 10) {
+            ring.push(SpanEvent { start_us: i as u64, ..EMPTY });
+        }
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), RING_CAP);
+        assert_eq!(out.first().unwrap().start_us, 10);
+        assert_eq!(out.last().unwrap().start_us, (RING_CAP + 9) as u64);
+    }
+}

@@ -29,7 +29,7 @@
 //! worker (FIFO behind that worker's pending jobs, so queued work drains
 //! first) and joins every handle — no leaked `soap-worker-*` threads.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -41,22 +41,44 @@ enum Msg {
     Shutdown,
 }
 
+/// Per-pool utilization counters. Workers record into these only while
+/// telemetry is enabled (one relaxed-load check per job otherwise), so the
+/// disabled cost is a branch — no clock read, no contention.
+#[derive(Default)]
+pub struct PoolStats {
+    jobs: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+impl PoolStats {
+    /// `(jobs executed, cumulative busy seconds)` across all workers.
+    pub fn snapshot(&self) -> (u64, f64) {
+        (
+            self.jobs.load(Ordering::Relaxed),
+            self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
 /// A fixed pool of worker threads, each consuming from its own queue.
 pub struct ThreadPool {
     txs: Mutex<Vec<Sender<Msg>>>,
     next: AtomicUsize,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    stats: Arc<PoolStats>,
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size > 0);
+        let stats = Arc::new(PoolStats::default());
         let mut txs = Vec::with_capacity(size);
         let mut workers = Vec::with_capacity(size);
         for id in 0..size {
             let (tx, rx) = channel::<Msg>();
             txs.push(tx);
+            let stats = Arc::clone(&stats);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("soap-worker-{id}"))
@@ -68,9 +90,21 @@ impl ThreadPool {
                             // with it. The scoped entries propagate panics
                             // to the caller through their token channels.
                             Ok(Msg::Run(job)) => {
-                                let _ = std::panic::catch_unwind(
-                                    std::panic::AssertUnwindSafe(job),
-                                );
+                                if crate::telemetry::enabled() {
+                                    let t0 = std::time::Instant::now();
+                                    let _ = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(job),
+                                    );
+                                    stats.jobs.fetch_add(1, Ordering::Relaxed);
+                                    stats.busy_ns.fetch_add(
+                                        t0.elapsed().as_nanos() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                } else {
+                                    let _ = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(job),
+                                    );
+                                }
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
@@ -78,11 +112,17 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        Self { txs: Mutex::new(txs), next: AtomicUsize::new(0), workers, size }
+        Self { txs: Mutex::new(txs), next: AtomicUsize::new(0), workers, size, stats }
     }
 
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Utilization snapshot: `(jobs executed, cumulative busy seconds)`.
+    /// Only advances while telemetry is enabled.
+    pub fn stats(&self) -> (u64, f64) {
+        self.stats.snapshot()
     }
 
     /// Submit a single fire-and-forget job (round-robin worker assignment).
@@ -408,6 +448,20 @@ mod tests {
             // Leak the wedged runner thread: joining it would hang too.
             Err(_) => panic!("round-robin dispatch failed to reach all workers (barrier stuck)"),
         }
+    }
+
+    #[test]
+    fn pool_stats_track_jobs_only_while_telemetry_enabled() {
+        let _g = crate::telemetry::trace::test_lock();
+        let pool = ThreadPool::new(2);
+        pool.par_map(vec![1u32, 2, 3], |x| x);
+        assert_eq!(pool.stats().0, 0, "disabled telemetry must not count jobs");
+        crate::telemetry::set_enabled(true);
+        pool.par_map(vec![1u32, 2, 3, 4], |x| x);
+        crate::telemetry::set_enabled(false);
+        let (jobs, busy_s) = pool.stats();
+        assert_eq!(jobs, 4);
+        assert!(busy_s >= 0.0);
     }
 
     #[test]

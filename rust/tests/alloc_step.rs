@@ -123,4 +123,35 @@ fn steady_state_composed_step_allocates_zero() {
             "{label}: workspace arena changed size in steady state"
         );
     }
+
+    // Telemetry-enabled rerun: span recording must also be allocation-free
+    // in steady state. The per-thread ring registers (and allocates) on the
+    // first enabled span — during warm-up — after which every recorded span
+    // is a fixed-slot write. Whitening sampling allocates only on refresh
+    // steps, which the measured window excludes by construction.
+    {
+        let _g = soap_lab::telemetry::trace::test_lock();
+        soap_lab::telemetry::set_enabled(true);
+        for (label, build) in builds {
+            let mut opt = build(rows, cols, h.clone());
+            let mut rng = Rng::new(43);
+            let grads: Vec<Matrix> =
+                (0..26).map(|_| Matrix::randn(&mut rng, rows, cols, 1.0)).collect();
+            let mut w = Matrix::zeros(rows, cols);
+            for (i, g) in grads.iter().take(22).enumerate() {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+            }
+            let before = allocs();
+            for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+            }
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "{label}: steady-state step with telemetry ENABLED performed {n} heap allocations"
+            );
+        }
+        soap_lab::telemetry::set_enabled(false);
+        soap_lab::telemetry::trace::drain();
+    }
 }

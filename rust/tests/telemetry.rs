@@ -1,0 +1,194 @@
+//! Telemetry acceptance pins (the observability tentpole):
+//!
+//! 1. `trace_out` produces a VALID Chrome trace-event JSON document — every
+//!    `"B"` has a matching `"E"`, in-step phase spans and per-layer refresh
+//!    spans are present — for the serial AND sharded backends;
+//! 2. per-layer health (grad/update norms, staleness, whitening
+//!    off-diagonality) plus refresh-service introspection (queue depth,
+//!    shed count, latency quantiles, pool utilization) reach an attached
+//!    [`MetricsSink`] every `metrics_every` steps;
+//! 3. telemetry off ≡ telemetry on, bitwise: the recorder observes the
+//!    trajectory, it never perturbs one bit of it.
+//!
+//! Every test takes [`soap_lab::telemetry::trace::test_lock`]: the enabled
+//! flag and the span rings are process-global, and the default harness runs
+//! tests on multiple threads.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use soap_lab::model::NplmConfig;
+use soap_lab::optim::{Hyper, OptKind, RefreshMode, Schedule};
+use soap_lab::session::{
+    Backend, HealthSnapshot, MetricsSink, ModelSpec, SessionBuilder, StepRecord, TrainSession,
+};
+use soap_lab::telemetry;
+use soap_lab::util::json::Json;
+
+const SEQ: usize = 24;
+const BATCH: usize = 8;
+
+fn nplm() -> NplmConfig {
+    NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false }
+}
+
+fn builder(steps: u64, mode: RefreshMode) -> SessionBuilder {
+    TrainSession::builder()
+        .model(ModelSpec::nplm(nplm(), SEQ, BATCH))
+        .optimizer(OptKind::Soap)
+        .hyper(Hyper { precond_freq: 4, ..Hyper::default() }.with_refresh_mode(mode))
+        .schedule(Schedule::Constant { lr: 0.02 })
+        .steps(steps)
+        .seed(5)
+        .workers(2)
+        .drain_refresh_each_step(mode == RefreshMode::Async)
+}
+
+/// Parse `path` as Chrome trace-event JSON and hand back the event list
+/// after checking the structural invariants a trace viewer relies on.
+fn checked_trace_events(path: &Path, label: &str) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).unwrap();
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{label}: invalid JSON: {e}"));
+    let events = doc.get("traceEvents").as_arr().unwrap_or_else(|| {
+        panic!("{label}: missing traceEvents array");
+    });
+    assert!(!events.is_empty(), "{label}: trace has no events");
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    for ev in events {
+        assert!(ev.get("name").as_str().is_some(), "{label}: event without name");
+        assert!(ev.get("ts").as_f64().is_some(), "{label}: event without ts");
+        assert_eq!(ev.get("pid").as_f64(), Some(1.0), "{label}: bad pid");
+        assert!(ev.get("tid").as_f64().is_some(), "{label}: event without tid");
+        match ev.get("ph").as_str() {
+            Some("B") => begins += 1,
+            Some("E") => ends += 1,
+            other => panic!("{label}: unexpected ph {other:?}"),
+        }
+    }
+    assert_eq!(begins, ends, "{label}: unmatched B/E events");
+    events.to_vec()
+}
+
+fn has_begin(events: &[Json], name: &str) -> bool {
+    events
+        .iter()
+        .any(|e| e.get("ph").as_str() == Some("B") && e.get("name").as_str() == Some(name))
+}
+
+#[test]
+fn trace_out_writes_valid_chrome_trace_serial_and_sharded() {
+    let _g = telemetry::trace::test_lock();
+    for (backend, label) in [(Backend::Serial, "serial"), (Backend::Sharded, "sharded")] {
+        telemetry::trace::drain(); // spans left over from sibling tests
+        let path = std::env::temp_dir()
+            .join(format!("soap_trace_{label}_{}.json", std::process::id()));
+        let mut session = builder(10, RefreshMode::Inline)
+            .backend(backend)
+            .telemetry(true)
+            .trace_out(&path)
+            .build()
+            .unwrap();
+        session.run().unwrap();
+        let events = checked_trace_events(&path, label);
+        std::fs::remove_file(&path).ok();
+
+        // In-step phase spans...
+        for name in ["step.data", "step.grad", "step.update"] {
+            assert!(has_begin(&events, name), "{label}: missing {name} span");
+        }
+        // ...the spans inside Composed::update...
+        for name in ["engine.project", "engine.moment", "engine.project_back"] {
+            assert!(has_begin(&events, name), "{label}: missing {name} span");
+        }
+        // ...and per-layer refresh spans (basis init + the f=4 refreshes),
+        // tagged with the basis id so a trace viewer can tell layers apart.
+        let layer_tagged_refresh = events.iter().any(|e| {
+            e.get("ph").as_str() == Some("B")
+                && e.get("cat").as_str() == Some("refresh")
+                && e.get("args").get("layer").as_f64().is_some()
+        });
+        assert!(layer_tagged_refresh, "{label}: no layer-tagged refresh span");
+    }
+    telemetry::set_enabled(false);
+}
+
+/// Forwards health snapshots out of the boxed-sink seam for inspection.
+struct ShareSink {
+    health: Arc<Mutex<Vec<HealthSnapshot>>>,
+}
+
+impl MetricsSink for ShareSink {
+    fn on_step(&mut self, _rec: &StepRecord<'_>) {}
+
+    fn on_health(&mut self, h: &HealthSnapshot) {
+        self.health.lock().unwrap().push(h.clone());
+    }
+}
+
+#[test]
+fn health_snapshots_reach_sinks_with_per_layer_metrics() {
+    let _g = telemetry::trace::test_lock();
+    telemetry::trace::drain();
+    let health = Arc::new(Mutex::new(Vec::new()));
+    let mut session = builder(12, RefreshMode::Async)
+        .backend(Backend::Sharded)
+        .telemetry(true)
+        .metrics_every(3)
+        .sink(Box::new(ShareSink { health: Arc::clone(&health) }))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    telemetry::set_enabled(false);
+    telemetry::trace::drain();
+
+    let snaps = health.lock().unwrap();
+    // Steps 3, 6, 9, 12.
+    assert_eq!(snaps.len(), 4, "expected a snapshot every metrics_every steps");
+    let last = snaps.last().unwrap();
+    assert_eq!(last.step, 12);
+    assert!(!last.layers.is_empty(), "snapshot carries no per-layer health");
+    assert!(last.refresh_count > 0, "drained async run completed no background refreshes");
+    assert!(last.refresh_p50_s.is_finite() && last.refresh_p50_s >= 0.0);
+    assert!(last.pool_jobs.unwrap_or(0) > 0, "refresh pool utilization missing");
+
+    // Every SOAP layer has an eigenbasis: per-layer (not just mean)
+    // staleness and an update norm must be reported for each.
+    for l in &last.layers {
+        assert!(l.grad_norm > 0.0, "layer {}: zero grad norm", l.layer);
+        assert!(l.update_norm.is_some(), "layer {}: no update norm", l.layer);
+        assert!(l.staleness.is_some(), "layer {}: no staleness", l.layer);
+    }
+    // With f=4 every basis refreshed at t=12, so staleness is small and
+    // differs from a global mean only by per-layer stagger.
+    assert!(last.layers.iter().all(|l| l.staleness.unwrap() <= 4));
+    // Whitening off-diagonality is sampled on the 1st/5th/… completed
+    // refresh of each basis; by step 12 every basis sampled at least once.
+    assert!(
+        last.layers.iter().any(|l| {
+            l.whitening_offdiag.map(|w| (0.0..=1.0).contains(&w)).unwrap_or(false)
+        }),
+        "no layer reported a whitening off-diagonality sample"
+    );
+}
+
+#[test]
+fn telemetry_on_is_bitwise_invisible_to_the_trajectory() {
+    let _g = telemetry::trace::test_lock();
+    let run = |on: bool| {
+        telemetry::trace::drain();
+        let b = builder(14, RefreshMode::Inline).backend(Backend::Serial);
+        let b = if on { b.telemetry(true).metrics_every(2) } else { b.telemetry(false) };
+        let mut session = b.build().unwrap();
+        let log = session.run().unwrap();
+        telemetry::set_enabled(false);
+        telemetry::trace::drain();
+        (session.params.clone(), log.losses)
+    };
+    let (params_off, losses_off) = run(false);
+    let (params_on, losses_on) = run(true);
+    assert_eq!(losses_off, losses_on, "telemetry changed the loss trajectory");
+    for (i, (a, b)) in params_off.iter().zip(&params_on).enumerate() {
+        assert_eq!(a.data, b.data, "telemetry changed param {i} bitwise");
+    }
+}

@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Step-latency regression gate.
+
+Compares a fresh `cargo bench --bench step_latency` result
+(`bench_results/step_latency.json`) against the tracked baseline
+(`BENCH_step_latency.json` at the repo root) and fails when any
+workspace-path cell's p50 step latency regressed by more than the
+threshold (default 15%).
+
+Two checks always run, baseline or not:
+
+  * the result document has the expected shape (rows, required keys);
+  * every workspace-path row reports `allocs_per_step_p50 == 0` — the
+    zero-allocation steady-state invariant, measured.
+
+A baseline with `"provisional": true` (e.g. freshly regenerated, or the
+initial checked-in placeholder awaiting numbers from quiet hardware)
+skips the latency-ratio gate but still runs the structural and
+allocation checks.
+
+Usage:
+  scripts/check_step_latency.py                      # gate current vs baseline
+  scripts/check_step_latency.py --update             # rewrite the baseline
+  scripts/check_step_latency.py --threshold 0.25     # looser gate
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED_ROW_KEYS = (
+    "preset",
+    "path",
+    "rows",
+    "cols",
+    "p50_step_us",
+    "p99_step_us",
+    "steps_per_sec",
+    "allocs_per_step_p50",
+)
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} not found")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+
+def validate(doc, path, allow_empty=False):
+    if doc.get("bench") != "step_latency":
+        fail(f"{path}: bench != step_latency")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        fail(f"{path}: missing rows array")
+    if not rows and not allow_empty:
+        fail(f"{path}: rows is empty")
+    for row in rows:
+        for key in REQUIRED_ROW_KEYS:
+            if key not in row:
+                fail(f"{path}: row missing key {key!r}: {row}")
+    return rows
+
+
+def cell_key(row):
+    return (row["preset"], row["path"], row["rows"], row["cols"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default="bench_results/step_latency.json")
+    ap.add_argument("--baseline", default="BENCH_step_latency.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed p50 regression fraction (default 0.15)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current results")
+    args = ap.parse_args()
+
+    current = load(args.current)
+    rows = validate(current, args.current)
+
+    # The measured zero-allocation invariant: no workspace cell may allocate
+    # in its median (steady-state) step.
+    for row in rows:
+        if row["path"] == "workspace" and row["allocs_per_step_p50"] != 0:
+            fail(
+                f"{row['preset']} {row['rows']}x{row['cols']}: "
+                f"allocs_per_step_p50 = {row['allocs_per_step_p50']} (want 0)"
+            )
+    print(f"OK: {sum(r['path'] == 'workspace' for r in rows)} workspace cells at 0 allocs/step")
+
+    if args.update:
+        current.pop("provisional", None)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=False)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+        return
+
+    baseline = load(args.baseline)
+    base_rows = validate(baseline, args.baseline, allow_empty=bool(baseline.get("provisional")))
+    if baseline.get("provisional"):
+        print("baseline is provisional: skipping the latency-ratio gate "
+              "(regenerate with --update on quiet hardware)")
+        return
+
+    base = {cell_key(r): r for r in base_rows}
+    worst = None
+    compared = 0
+    for row in rows:
+        if row["path"] != "workspace":
+            continue
+        ref = base.get(cell_key(row))
+        if ref is None or ref["p50_step_us"] <= 0:
+            continue
+        compared += 1
+        ratio = row["p50_step_us"] / ref["p50_step_us"]
+        if worst is None or ratio > worst[0]:
+            worst = (ratio, row)
+        if ratio > 1.0 + args.threshold:
+            fail(
+                f"{row['preset']} {row['rows']}x{row['cols']}: p50 "
+                f"{row['p50_step_us']:.1f}us vs baseline {ref['p50_step_us']:.1f}us "
+                f"({(ratio - 1.0) * 100:+.1f}% > +{args.threshold * 100:.0f}%)"
+            )
+    if compared == 0:
+        fail("no comparable workspace cells between current and baseline")
+    ratio, row = worst
+    print(
+        f"OK: {compared} cells within +{args.threshold * 100:.0f}% of baseline "
+        f"(worst {row['preset']} {row['rows']}x{row['cols']}: {(ratio - 1.0) * 100:+.1f}%)"
+    )
+
+
+if __name__ == "__main__":
+    main()
