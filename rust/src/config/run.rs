@@ -12,9 +12,12 @@
 //! and that subset round-trips losslessly (identical [`Hyper`], identical
 //! session).
 
+use std::time::Duration;
+
 use crate::coordinator::TrainerConfig;
+use crate::dist::Transport;
 use crate::optim::{Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
-use crate::session::{Backend, ModelSpec, SessionBuilder, TrainSession};
+use crate::session::{Backend, DistEndpoint, DistOptions, ModelSpec, SessionBuilder, TrainSession};
 use crate::util::cli::Args;
 
 /// The learning-rate sweep grid of Appendix A: {.1, .0316, .01, …, 3.16e-4}.
@@ -24,11 +27,12 @@ pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
 /// `--config` file format (embedded in unknown-key errors).
 pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, seed, \
 precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
-max-precond-dim, merge-dims, artifacts, log-every, metrics-every, trace-out, \
-metrics-out, jsonl-out, save, resume, one-sided, factorized, refresh-eigh, \
-async-refresh, pjrt-optimizer, telemetry";
+max-precond-dim, merge-dims, adam-warmup, precond-warmup, ranks, rank, \
+coordinator-addr, dist-timeout, dist-transport, artifacts, log-every, \
+metrics-every, trace-out, metrics-out, jsonl-out, save, resume, one-sided, \
+factorized, refresh-eigh, async-refresh, pjrt-optimizer, telemetry";
 
-const VALUE_KEYS: [&str; 23] = [
+const VALUE_KEYS: [&str; 30] = [
     "model",
     "optimizer",
     "backend",
@@ -44,6 +48,13 @@ const VALUE_KEYS: [&str; 23] = [
     "refresh-mode",
     "max-precond-dim",
     "merge-dims",
+    "adam-warmup",
+    "precond-warmup",
+    "ranks",
+    "rank",
+    "coordinator-addr",
+    "dist-timeout",
+    "dist-transport",
     "artifacts",
     "log-every",
     "metrics-every",
@@ -84,6 +95,22 @@ pub struct RunConfig {
     pub max_precond_dim: usize,
     /// Adjacent-mode merge threshold for rank-3+ tensors (0 = off).
     pub merge_dims: usize,
+    /// Pure-Adam ramp: steps before any eigenbasis initializes/refreshes
+    /// (`Hyper::adam_warmup_steps`; 0 = off).
+    pub adam_warmup: u64,
+    /// Refresh-every-step early phase (`Hyper::precondition_warmup`; 0 = off).
+    pub precond_warmup: u64,
+    /// World size for `--backend distributed` (≥ 2).
+    pub ranks: usize,
+    /// Manual-launch worker mode: this process's rank (requires
+    /// `coordinator-addr`). Unset = coordinator, which self-spawns workers.
+    pub dist_rank: Option<usize>,
+    /// Rendezvous address a manually launched worker dials.
+    pub coordinator_addr: Option<String>,
+    /// Peer-failure timeout for distributed collectives, milliseconds.
+    pub dist_timeout_ms: u64,
+    /// Distributed wire (`tcp` only from the CLI; `mem` is API-only).
+    pub dist_transport: Transport,
     pub artifacts_dir: String,
     pub log_every: u64,
     /// Master telemetry switch: span tracing, the metrics registry, and
@@ -125,6 +152,13 @@ impl Default for RunConfig {
             refresh_workers: 2,
             max_precond_dim: 4096,
             merge_dims: 0,
+            adam_warmup: 0,
+            precond_warmup: 0,
+            ranks: 2,
+            dist_rank: None,
+            coordinator_addr: None,
+            dist_timeout_ms: 30_000,
+            dist_transport: Transport::Tcp,
             artifacts_dir: "artifacts".into(),
             log_every: 10,
             telemetry: false,
@@ -177,6 +211,15 @@ impl RunConfig {
             }
             "max-precond-dim" => self.max_precond_dim = num(key, value)?,
             "merge-dims" => self.merge_dims = num(key, value)?,
+            "adam-warmup" => self.adam_warmup = num(key, value)?,
+            "precond-warmup" => self.precond_warmup = num(key, value)?,
+            "ranks" => self.ranks = num(key, value)?,
+            "rank" => self.dist_rank = Some(num(key, value)?),
+            "coordinator-addr" => {
+                self.coordinator_addr = (!value.is_empty()).then(|| value.to_string());
+            }
+            "dist-timeout" => self.dist_timeout_ms = num(key, value)?,
+            "dist-transport" => self.dist_transport = Transport::parse(value)?,
             "artifacts" => self.artifacts_dir = value.to_string(),
             "log-every" => self.log_every = num(key, value)?,
             "metrics-every" => self.metrics_every = num(key, value)?,
@@ -249,6 +292,11 @@ impl RunConfig {
         ));
         s.push_str(&format!("max-precond-dim={}\n", self.max_precond_dim));
         s.push_str(&format!("merge-dims={}\n", self.merge_dims));
+        s.push_str(&format!("adam-warmup={}\n", self.adam_warmup));
+        s.push_str(&format!("precond-warmup={}\n", self.precond_warmup));
+        s.push_str(&format!("ranks={}\n", self.ranks));
+        s.push_str(&format!("dist-timeout={}\n", self.dist_timeout_ms));
+        s.push_str(&format!("dist-transport={}\n", self.dist_transport.name()));
         s.push_str(&format!("one-sided={}\n", self.one_sided));
         s.push_str(&format!("factorized={}\n", self.factorized));
         s.push_str(&format!("artifacts={}\n", self.artifacts_dir));
@@ -351,7 +399,41 @@ impl RunConfig {
             "--save requires a native backend (serial/sharded); the pjrt executor \
              does not checkpoint"
         );
+        if matches!(self.backend, Backend::Distributed { .. }) {
+            anyhow::ensure!(
+                self.dist_transport == Transport::Tcp,
+                "the CLI runs distributed ranks as separate processes, so only the tcp \
+                 transport applies here (the mem transport is the in-process API path)"
+            );
+            anyhow::ensure!(
+                self.dist_timeout_ms > 0,
+                "dist-timeout must be > 0 milliseconds"
+            );
+            if self.dist_rank.is_some() {
+                anyhow::ensure!(
+                    self.coordinator_addr.is_some(),
+                    "--rank puts this process in manual worker mode, which needs \
+                     --coordinator-addr to find the rendezvous"
+                );
+            }
+        } else {
+            anyhow::ensure!(
+                self.dist_rank.is_none() && self.coordinator_addr.is_none(),
+                "--rank/--coordinator-addr apply to --backend distributed only"
+            );
+        }
         self.session_builder()?.validate()
+    }
+
+    /// The backend with the distributed knobs (`ranks`, `dist-transport`)
+    /// resolved in — `Backend::parse` alone only sees the token.
+    pub fn resolved_backend(&self) -> Backend {
+        match self.backend {
+            Backend::Distributed { .. } => {
+                Backend::Distributed { ranks: self.ranks, transport: self.dist_transport }
+            }
+            b => b,
+        }
     }
 
     /// Map onto the typed builder — the single construction path `main.rs`,
@@ -359,6 +441,7 @@ impl RunConfig {
     /// launcher action (see `cmd_train`).
     pub fn session_builder(&self) -> anyhow::Result<SessionBuilder> {
         let spec = ModelSpec::parse(&self.model)?;
+        let backend = self.resolved_backend();
         let mut b = TrainSession::builder()
             .model(spec)
             .artifacts_dir(&self.artifacts_dir)
@@ -369,10 +452,28 @@ impl RunConfig {
             .seed(self.seed)
             .grad_accum(self.grad_accum)
             .workers(self.workers)
-            .backend(self.backend)
+            .backend(backend)
             .log_every(self.log_every)
             .telemetry(self.telemetry)
             .metrics_every(self.metrics_every);
+        if let Backend::Distributed { ranks, .. } = backend {
+            // Worker mode dials the given coordinator. Coordinator mode gets
+            // a placeholder endpoint — `cmd_train` re-attaches DistOptions
+            // with the listener it bound before spawning workers — so
+            // `validate()` can check the full wiring either way.
+            b = b.dist(DistOptions {
+                rank: self.dist_rank.unwrap_or(0),
+                ranks,
+                timeout: Duration::from_millis(self.dist_timeout_ms),
+                endpoint: DistEndpoint::Tcp {
+                    coordinator: self
+                        .coordinator_addr
+                        .clone()
+                        .unwrap_or_else(|| "127.0.0.1:0".into()),
+                    listener: None,
+                },
+            });
+        }
         if let Some(path) = &self.trace_out {
             b = b.trace_out(path);
         }
@@ -392,6 +493,8 @@ impl RunConfig {
             refresh: if self.refresh_eigh { RefreshMethod::Eigh } else { RefreshMethod::QrPowerIteration },
             refresh_mode: if self.async_refresh { RefreshMode::Async } else { RefreshMode::Inline },
             refresh_workers: self.refresh_workers,
+            adam_warmup_steps: self.adam_warmup,
+            precondition_warmup: self.precond_warmup,
             ..Hyper::default()
         };
         // A composition spec's structural choices (side selection, factored
@@ -501,6 +604,49 @@ mod tests {
         let h = rc.hyper();
         assert_eq!(h.max_precond_dim, 128);
         assert_eq!(h.merge_dims, 256);
+
+        rc.adam_warmup = 40;
+        rc.precond_warmup = 6;
+        let h = rc.hyper();
+        assert_eq!(h.adam_warmup_steps, 40);
+        assert_eq!(h.precondition_warmup, 6);
+    }
+
+    #[test]
+    fn distributed_config_validation() {
+        let mut rc = RunConfig::default();
+        rc.model = "nplm-tiny".into();
+        rc.backend = Backend::parse("distributed").unwrap();
+        // Coordinator (self-spawn) mode validates without an address: the
+        // launcher binds the listener and fills the endpoint in.
+        rc.validate().unwrap();
+        assert_eq!(
+            rc.resolved_backend(),
+            Backend::Distributed { ranks: 2, transport: Transport::Tcp }
+        );
+        rc.ranks = 4;
+        assert!(matches!(rc.resolved_backend(), Backend::Distributed { ranks: 4, .. }));
+        rc.validate().unwrap();
+        // The mem transport is API-only.
+        rc.dist_transport = Transport::Mem;
+        let e = rc.validate().unwrap_err().to_string();
+        assert!(e.contains("tcp"), "{e}");
+        rc.dist_transport = Transport::Tcp;
+        // Worker mode needs the rendezvous address.
+        rc.dist_rank = Some(1);
+        let e = rc.validate().unwrap_err().to_string();
+        assert!(e.contains("coordinator-addr"), "{e}");
+        rc.coordinator_addr = Some("127.0.0.1:29400".into());
+        rc.validate().unwrap();
+        // A 1-rank "distributed" run is a config error, not a silent serial.
+        rc.ranks = 1;
+        assert!(rc.validate().is_err());
+        // Launch wiring without the distributed backend is rejected.
+        let mut rc = RunConfig::default();
+        rc.dist_rank = Some(0);
+        rc.coordinator_addr = Some("127.0.0.1:29400".into());
+        let e = rc.validate().unwrap_err().to_string();
+        assert!(e.contains("--backend distributed"), "{e}");
     }
 
     #[test]
@@ -558,6 +704,10 @@ mod tests {
         rc.async_refresh = true;
         rc.max_precond_dim = 96;
         rc.merge_dims = 64;
+        rc.adam_warmup = 11;
+        rc.precond_warmup = 3;
+        rc.ranks = 3;
+        rc.dist_timeout_ms = 12_000;
         rc.log_every = 5;
         rc.telemetry = true;
         rc.metrics_every = 7;
@@ -577,6 +727,9 @@ mod tests {
         assert_eq!(back.log_every, rc.log_every);
         assert_eq!(back.telemetry, rc.telemetry);
         assert_eq!(back.metrics_every, rc.metrics_every);
+        assert_eq!(back.ranks, rc.ranks);
+        assert_eq!(back.dist_timeout_ms, rc.dist_timeout_ms);
+        assert_eq!(back.dist_transport, rc.dist_transport);
         // The acceptance bar: the resolved Hyper is IDENTICAL.
         let (ha, hb) = (rc.hyper(), back.hyper());
         assert_eq!(format!("{ha:?}"), format!("{hb:?}"), "dump→load changed the Hyper");

@@ -182,7 +182,7 @@ impl ShardedOptimizer {
     }
 
     /// Per-layer optimizer health at step `t`, layer-ordered: update norm,
-    /// basis staleness, whitening quality. `grad_norm` is left 0.0 — the
+    /// basis staleness, whitening quality. `grad_norm` is left `None` — the
     /// session fills it in from the gradients it owns.
     pub fn layer_health(&self, t: u64) -> Vec<crate::session::LayerHealth> {
         let mut out: Vec<crate::session::LayerHealth> = self
@@ -191,7 +191,7 @@ impl ShardedOptimizer {
             .flat_map(|s| s.iter())
             .map(|s| crate::session::LayerHealth {
                 layer: s.layer_idx,
-                grad_norm: 0.0,
+                grad_norm: None,
                 update_norm: s.opt.update_norm(),
                 staleness: s.opt.basis_snapshot_step().map(|snap| t.saturating_sub(snap)),
                 whitening_offdiag: s.opt.whitening_offdiag(),

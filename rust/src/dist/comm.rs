@@ -1,0 +1,679 @@
+//! [`DistComm`] — one rank's view of the worker mesh: rendezvous, framed
+//! point-to-point links, and the three collectives the distributed executor
+//! needs (gradient fold-reduce, basis broadcast, health gather) plus a
+//! rank-0-centric barrier.
+//!
+//! ## Determinism contract
+//!
+//! [`DistComm::fold_all_reduce`] reproduces the serial gradient-accumulation
+//! fold EXACTLY: microbatch partial sums travel rank 0 → N−1 with each rank
+//! adding its per-microbatch gradients one at a time (never pre-folded), so
+//! the f32 summation tree is the serial fold-left chain regardless of rank
+//! count. The last rank broadcasts the finished (unscaled) sum; every rank
+//! then applies the identical `1/k` scale. Losses ride the same chain in
+//! f64, matching the serial accumulator's width.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::frame::{
+    self, BasisEntry, Cursor, FRAME_BARRIER, FRAME_BASIS_BATCH, FRAME_GRAD_CHUNK, FRAME_HEALTH,
+    FRAME_HELLO, FRAME_MESH_HELLO, FRAME_SCALARS, FRAME_SHUTDOWN, FRAME_TOPOLOGY,
+};
+use super::transport::{accept_deadline, connect_deadline, tcp_read_frame, tcp_write_frame};
+use super::transport::MemEndpoint;
+use super::{DistError, DistPhase};
+use crate::linalg::Matrix;
+use crate::session::RankHealth;
+
+/// Contiguous microbatch slice owned by `rank` out of `k` total: the first
+/// `k % nranks` ranks take one extra. Returns `(start, count)`.
+pub fn microbatch_slice(rank: usize, nranks: usize, k: usize) -> (usize, usize) {
+    let base = k / nranks;
+    let extra = k % nranks;
+    let count = base + usize::from(rank < extra);
+    let start = rank * base + rank.min(extra);
+    (start, count)
+}
+
+/// Traffic counters for one rank (instance-scoped, unlike the process-global
+/// telemetry registry — the mem transport runs every rank in one process, so
+/// per-rank attribution has to live here).
+#[derive(Default)]
+struct Counters {
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    allreduce_nanos: AtomicU64,
+}
+
+enum Wire {
+    /// `links[peer]` is the framed stream to that peer (`None` at self).
+    Tcp(Vec<Option<Mutex<TcpStream>>>),
+    Mem(MemEndpoint),
+}
+
+/// One rank's communicator over the full peer mesh.
+pub struct DistComm {
+    rank: usize,
+    nranks: usize,
+    timeout: Duration,
+    wire: Wire,
+    counters: Counters,
+}
+
+impl DistComm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// Wrap a [`MemEndpoint`] (from [`super::MemCluster::new`]) — the
+    /// in-process transport has no rendezvous to run.
+    pub fn connect_mem(endpoint: MemEndpoint, timeout: Duration) -> Result<Self, DistError> {
+        if endpoint.nranks < 2 {
+            return Err(DistError::new(
+                endpoint.rank,
+                DistPhase::Rendezvous,
+                "distributed backend needs at least 2 ranks",
+            ));
+        }
+        Ok(Self {
+            rank: endpoint.rank,
+            nranks: endpoint.nranks,
+            timeout,
+            wire: Wire::Mem(endpoint),
+            counters: Counters::default(),
+        })
+    }
+
+    /// Full TCP rendezvous. Rank 0 owns `listener` (binding
+    /// `coordinator_addr` itself when the launcher didn't pre-bind one),
+    /// collects a `Hello{rank, mesh_port, fingerprint}` from every worker,
+    /// validates the fingerprints, and broadcasts the mesh address table;
+    /// every pair of nonzero ranks then dials lower-rank → listener so the
+    /// mesh is complete. Ends with a barrier, so a returned communicator
+    /// means every rank is fully connected.
+    pub fn connect_tcp(
+        rank: usize,
+        nranks: usize,
+        coordinator_addr: &str,
+        listener: Option<TcpListener>,
+        timeout: Duration,
+        fingerprint: u64,
+    ) -> Result<Self, DistError> {
+        let ph = DistPhase::Rendezvous;
+        if nranks < 2 {
+            return Err(DistError::new(rank, ph, "distributed backend needs at least 2 ranks"));
+        }
+        if rank >= nranks {
+            return Err(DistError::new(rank, ph, format!("rank {rank} out of range for {nranks} ranks")));
+        }
+        let deadline = Instant::now() + timeout;
+        let io = |peer: Option<usize>, what: &str, e: &dyn std::fmt::Display| DistError {
+            rank,
+            peer,
+            phase: ph,
+            detail: format!("{what}: {e}"),
+        };
+        let prep = |s: &TcpStream| -> std::io::Result<()> {
+            s.set_nodelay(true)?;
+            s.set_read_timeout(Some(timeout))
+        };
+
+        let mut links: Vec<Option<Mutex<TcpStream>>> = (0..nranks).map(|_| None).collect();
+        if rank == 0 {
+            let listener = match listener {
+                Some(l) => l,
+                None => TcpListener::bind(coordinator_addr)
+                    .map_err(|e| io(None, &format!("binding coordinator {coordinator_addr}"), &e))?,
+            };
+            let mut ports = vec![0u32; nranks];
+            for _ in 1..nranks {
+                let mut s = accept_deadline(&listener, deadline)
+                    .map_err(|e| io(None, "waiting for workers to register", &e))?;
+                prep(&s).map_err(|e| io(None, "configuring worker socket", &e))?;
+                let (ty, payload) = tcp_read_frame(&mut s)
+                    .map_err(|e| io(None, "reading worker hello", &e))?;
+                if ty != FRAME_HELLO {
+                    return Err(io(None, "expected hello frame, got", &frame::frame_name(ty)));
+                }
+                let mut c = Cursor::new(&payload);
+                let (r, port, fp) = (|| -> Result<_, String> {
+                    Ok((c.u32()? as usize, c.u32()?, c.u64()?))
+                })()
+                .map_err(|e| io(None, "decoding hello", &e))?;
+                if r == 0 || r >= nranks {
+                    return Err(io(None, "worker announced invalid rank", &r));
+                }
+                if links[r].is_some() {
+                    return Err(io(Some(r), "duplicate registration for rank", &r));
+                }
+                if fp != fingerprint {
+                    return Err(DistError::with_peer(
+                        rank,
+                        r,
+                        ph,
+                        format!(
+                            "config fingerprint mismatch (coordinator {fingerprint:#018x}, \
+                             worker {fp:#018x}) — every rank must run the identical \
+                             model/optimizer/data configuration"
+                        ),
+                    ));
+                }
+                ports[r] = port;
+                links[r] = Some(Mutex::new(s));
+            }
+            let mut payload = Vec::with_capacity(4 + 4 * nranks);
+            frame::put_u32(&mut payload, nranks as u32);
+            for &p in &ports {
+                frame::put_u32(&mut payload, p);
+            }
+            for (r, link) in links.iter().enumerate().skip(1) {
+                let mut s = link.as_ref().unwrap().lock().unwrap();
+                tcp_write_frame(&mut s, FRAME_TOPOLOGY, &payload)
+                    .map_err(|e| io(Some(r), "sending topology", &e))?;
+            }
+        } else {
+            // Mesh listener first, so its port rides in the hello.
+            let mesh_listener = TcpListener::bind("127.0.0.1:0")
+                .map_err(|e| io(None, "binding mesh listener", &e))?;
+            let my_port = mesh_listener
+                .local_addr()
+                .map_err(|e| io(None, "reading mesh listener addr", &e))?
+                .port() as u32;
+            let mut coord = connect_deadline(coordinator_addr, deadline)
+                .map_err(|e| io(Some(0), "dialing coordinator", &e))?;
+            prep(&coord).map_err(|e| io(Some(0), "configuring coordinator socket", &e))?;
+            let mut hello = Vec::with_capacity(16);
+            frame::put_u32(&mut hello, rank as u32);
+            frame::put_u32(&mut hello, my_port);
+            frame::put_u64(&mut hello, fingerprint);
+            tcp_write_frame(&mut coord, FRAME_HELLO, &hello)
+                .map_err(|e| io(Some(0), "sending hello", &e))?;
+            let (ty, payload) =
+                tcp_read_frame(&mut coord).map_err(|e| io(Some(0), "reading topology", &e))?;
+            if ty != FRAME_TOPOLOGY {
+                return Err(io(Some(0), "expected topology frame, got", &frame::frame_name(ty)));
+            }
+            let ports = (|| -> Result<Vec<u32>, String> {
+                let mut c = Cursor::new(&payload);
+                let n = c.u32()? as usize;
+                if n != nranks {
+                    return Err(format!("coordinator reports {n} ranks, this worker expects {nranks}"));
+                }
+                (0..n).map(|_| c.u32()).collect()
+            })()
+            .map_err(|e| io(Some(0), "decoding topology", &e))?;
+            links[0] = Some(Mutex::new(coord));
+            // Dial every lower nonzero rank; accept from every higher one.
+            for (j, port) in ports.iter().enumerate().take(rank).skip(1) {
+                let mut s = connect_deadline(&format!("127.0.0.1:{port}"), deadline)
+                    .map_err(|e| io(Some(j), "dialing mesh peer", &e))?;
+                prep(&s).map_err(|e| io(Some(j), "configuring mesh socket", &e))?;
+                let mut m = Vec::with_capacity(4);
+                frame::put_u32(&mut m, rank as u32);
+                tcp_write_frame(&mut s, FRAME_MESH_HELLO, &m)
+                    .map_err(|e| io(Some(j), "sending mesh hello", &e))?;
+                links[j] = Some(Mutex::new(s));
+            }
+            for _ in rank + 1..nranks {
+                let mut s = accept_deadline(&mesh_listener, deadline)
+                    .map_err(|e| io(None, "waiting for higher-rank mesh peers", &e))?;
+                prep(&s).map_err(|e| io(None, "configuring mesh socket", &e))?;
+                let (ty, payload) =
+                    tcp_read_frame(&mut s).map_err(|e| io(None, "reading mesh hello", &e))?;
+                if ty != FRAME_MESH_HELLO {
+                    return Err(io(None, "expected mesh hello, got", &frame::frame_name(ty)));
+                }
+                let r = Cursor::new(&payload)
+                    .u32()
+                    .map_err(|e| io(None, "decoding mesh hello", &e))? as usize;
+                if r <= rank || r >= nranks || links[r].is_some() {
+                    return Err(io(None, "mesh peer announced invalid rank", &r));
+                }
+                links[r] = Some(Mutex::new(s));
+            }
+        }
+        let comm = Self { rank, nranks, timeout, wire: Wire::Tcp(links), counters: Counters::default() };
+        // A completed barrier certifies the whole mesh end-to-end.
+        comm.barrier(0).map_err(|mut e| {
+            e.phase = ph;
+            e
+        })?;
+        Ok(comm)
+    }
+
+    // ---- framed point-to-point ---------------------------------------
+
+    fn send_frame(
+        &self,
+        peer: usize,
+        ty: u8,
+        payload: &[u8],
+        phase: DistPhase,
+    ) -> Result<(), DistError> {
+        let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
+        match &self.wire {
+            Wire::Tcp(links) => {
+                let link = links
+                    .get(peer)
+                    .and_then(|l| l.as_ref())
+                    .ok_or_else(|| err(format!("no link to rank {peer}")))?;
+                let mut s = link.lock().map_err(|_| err("link lock poisoned".into()))?;
+                tcp_write_frame(&mut s, ty, payload).map_err(|e| {
+                    err(format!("sending {} frame failed: {e}", frame::frame_name(ty)))
+                })?;
+            }
+            Wire::Mem(ep) => {
+                let mut f = Vec::with_capacity(payload.len() + 1);
+                f.push(ty);
+                f.extend_from_slice(payload);
+                ep.send(peer, f).map_err(|e| {
+                    err(format!("sending {} frame failed: {e}", frame::frame_name(ty)))
+                })?;
+            }
+        }
+        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_sent.fetch_add(payload.len() as u64 + 1, Ordering::Relaxed);
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::dist_frames_sent_total().inc();
+            crate::telemetry::metrics::dist_bytes_sent_total().add(payload.len() as u64 + 1);
+        }
+        Ok(())
+    }
+
+    fn recv_frame(&self, peer: usize, expect: u8, phase: DistPhase) -> Result<Vec<u8>, DistError> {
+        let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
+        let (ty, payload) = match &self.wire {
+            Wire::Tcp(links) => {
+                let link = links
+                    .get(peer)
+                    .and_then(|l| l.as_ref())
+                    .ok_or_else(|| err(format!("no link to rank {peer}")))?;
+                let mut s = link.lock().map_err(|_| err("link lock poisoned".into()))?;
+                tcp_read_frame(&mut s).map_err(|e| {
+                    let kind = e.kind();
+                    if kind == std::io::ErrorKind::WouldBlock || kind == std::io::ErrorKind::TimedOut
+                    {
+                        err(format!(
+                            "timed out after {:?} waiting for a {} frame — peer dead or hung?",
+                            self.timeout,
+                            frame::frame_name(expect)
+                        ))
+                    } else {
+                        err(format!(
+                            "reading {} frame failed: {e} — peer likely exited",
+                            frame::frame_name(expect)
+                        ))
+                    }
+                })?
+            }
+            Wire::Mem(ep) => {
+                let mut f = ep.recv(peer, self.timeout).map_err(&err)?;
+                if f.is_empty() {
+                    return Err(err("empty frame".into()));
+                }
+                let ty = f[0];
+                f.remove(0);
+                (ty, f)
+            }
+        };
+        self.counters.frames_recv.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_recv.fetch_add(payload.len() as u64 + 1, Ordering::Relaxed);
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::dist_frames_recv_total().inc();
+            crate::telemetry::metrics::dist_bytes_recv_total().add(payload.len() as u64 + 1);
+        }
+        if ty == FRAME_SHUTDOWN && expect != FRAME_SHUTDOWN {
+            return Err(err(format!(
+                "peer shut down while this rank expected a {} frame",
+                frame::frame_name(expect)
+            )));
+        }
+        if ty != expect {
+            return Err(err(format!(
+                "protocol desync: expected {} frame, got {}",
+                frame::frame_name(expect),
+                frame::frame_name(ty)
+            )));
+        }
+        Ok(payload)
+    }
+
+    // ---- gradient fold-reduce ----------------------------------------
+
+    fn send_grads(&self, peer: usize, loss: f64, acc: &[Matrix]) -> Result<(), DistError> {
+        for (i, g) in acc.iter().enumerate() {
+            let mut p = Vec::with_capacity(12 + g.data.len() * 4);
+            frame::put_u32(&mut p, i as u32);
+            frame::put_matrix(&mut p, g);
+            self.send_frame(peer, FRAME_GRAD_CHUNK, &p, DistPhase::AllReduce)?;
+        }
+        let mut p = Vec::with_capacity(8);
+        frame::put_f64(&mut p, loss);
+        self.send_frame(peer, FRAME_SCALARS, &p, DistPhase::AllReduce)
+    }
+
+    fn recv_grads(&self, peer: usize, n_layers: usize) -> Result<(f64, Vec<Matrix>), DistError> {
+        let err = |detail: String| DistError {
+            rank: self.rank,
+            peer: Some(peer),
+            phase: DistPhase::AllReduce,
+            detail,
+        };
+        let mut acc = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let payload = self.recv_frame(peer, FRAME_GRAD_CHUNK, DistPhase::AllReduce)?;
+            let mut c = Cursor::new(&payload);
+            let layer = c.u32().map_err(&err)? as usize;
+            if layer != i {
+                return Err(err(format!("grad chunk out of order: expected layer {i}, got {layer}")));
+            }
+            acc.push(c.matrix().map_err(&err)?);
+        }
+        let payload = self.recv_frame(peer, FRAME_SCALARS, DistPhase::AllReduce)?;
+        let loss = Cursor::new(&payload).f64().map_err(&err)?;
+        Ok((loss, acc))
+    }
+
+    /// Order-preserving fold-reduce: `local` is this rank's per-microbatch
+    /// `(f64 loss, grads)` list IN MICROBATCH ORDER. Returns the UNSCALED
+    /// global sum (gradients and f64 loss) on every rank; the caller applies
+    /// the serial `1/k` scaling. See the module docs for why this is a chain
+    /// and not a ring.
+    pub fn fold_all_reduce(
+        &self,
+        local: Vec<(f64, Vec<Matrix>)>,
+        n_layers: usize,
+    ) -> Result<(f64, Vec<Matrix>), DistError> {
+        let t0 = Instant::now();
+        let (mut loss, mut acc): (f64, Option<Vec<Matrix>>) = if self.rank == 0 {
+            (0.0, None)
+        } else {
+            let (l, g) = self.recv_grads(self.rank - 1, n_layers)?;
+            (l, Some(g))
+        };
+        // One microbatch at a time — pre-folding a slice would change the
+        // f32 summation bracketing vs the serial fold-left.
+        for (l, g) in local {
+            loss += l;
+            acc = Some(match acc.take() {
+                None => g,
+                Some(mut a) => {
+                    for (x, y) in a.iter_mut().zip(&g) {
+                        x.axpy_inplace(1.0, y);
+                    }
+                    a
+                }
+            });
+        }
+        let mut acc = acc.ok_or_else(|| {
+            DistError::new(self.rank, DistPhase::AllReduce, "no microbatches to reduce")
+        })?;
+        let last = self.nranks - 1;
+        if self.rank < last {
+            self.send_grads(self.rank + 1, loss, &acc)?;
+        }
+        if self.rank == last {
+            for r in 0..last {
+                self.send_grads(r, loss, &acc)?;
+            }
+        } else {
+            let (l, g) = self.recv_grads(last, n_layers)?;
+            loss = l;
+            acc = g;
+        }
+        let dt = t0.elapsed();
+        self.counters.allreduce_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::dist_allreduce_seconds().observe(dt.as_secs_f64());
+        }
+        Ok((loss, acc))
+    }
+
+    // ---- basis broadcast ---------------------------------------------
+
+    /// Owner side: ship one batch of publications to every peer (possibly
+    /// empty — the frame count per step is part of the protocol, so peers
+    /// always know to read it).
+    pub fn bcast_basis(&self, entries: &[BasisEntry]) -> Result<(), DistError> {
+        let payload = frame::encode_basis_batch(entries);
+        for r in 0..self.nranks {
+            if r != self.rank {
+                self.send_frame(r, FRAME_BASIS_BATCH, &payload, DistPhase::BasisBroadcast)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Receiver side of [`Self::bcast_basis`].
+    pub fn recv_basis(&self, from: usize) -> Result<Vec<BasisEntry>, DistError> {
+        let payload = self.recv_frame(from, FRAME_BASIS_BATCH, DistPhase::BasisBroadcast)?;
+        frame::decode_basis_batch(&payload).map_err(|e| DistError {
+            rank: self.rank,
+            peer: Some(from),
+            phase: DistPhase::BasisBroadcast,
+            detail: format!("decoding basis batch: {e}"),
+        })
+    }
+
+    // ---- barrier ------------------------------------------------------
+
+    /// Rank-0-centric barrier: workers check in, rank 0 releases everyone.
+    pub fn barrier(&self, tag: u64) -> Result<(), DistError> {
+        let ph = DistPhase::Barrier;
+        let err = |peer: usize, detail: String| DistError {
+            rank: self.rank,
+            peer: Some(peer),
+            phase: ph,
+            detail,
+        };
+        let mut payload = Vec::with_capacity(8);
+        frame::put_u64(&mut payload, tag);
+        if self.rank == 0 {
+            for r in 1..self.nranks {
+                let p = self.recv_frame(r, FRAME_BARRIER, ph)?;
+                let got = Cursor::new(&p).u64().map_err(|e| err(r, e))?;
+                if got != tag {
+                    return Err(err(r, format!("barrier tag mismatch: expected {tag}, got {got}")));
+                }
+            }
+            for r in 1..self.nranks {
+                self.send_frame(r, FRAME_BARRIER, &payload, ph)?;
+            }
+        } else {
+            self.send_frame(0, FRAME_BARRIER, &payload, ph)?;
+            let p = self.recv_frame(0, FRAME_BARRIER, ph)?;
+            let got = Cursor::new(&p).u64().map_err(|e| err(0, e))?;
+            if got != tag {
+                return Err(err(0, format!("barrier tag mismatch: expected {tag}, got {got}")));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- health gather -------------------------------------------------
+
+    fn encode_health(h: &RankHealth) -> Vec<u8> {
+        let mut p = Vec::with_capacity(64);
+        frame::put_u32(&mut p, h.rank as u32);
+        frame::put_u64(&mut p, h.owned_layers as u64);
+        frame::put_u64(&mut p, h.owned_refreshes);
+        frame::put_u64(&mut p, h.frames_sent);
+        frame::put_u64(&mut p, h.frames_recv);
+        frame::put_u64(&mut p, h.bytes_sent);
+        frame::put_u64(&mut p, h.bytes_recv);
+        frame::put_f64(&mut p, h.allreduce_s);
+        p
+    }
+
+    fn decode_health(p: &[u8]) -> Result<RankHealth, String> {
+        let mut c = Cursor::new(p);
+        Ok(RankHealth {
+            rank: c.u32()? as usize,
+            owned_layers: c.u64()? as usize,
+            owned_refreshes: c.u64()?,
+            frames_sent: c.u64()?,
+            frames_recv: c.u64()?,
+            bytes_sent: c.u64()?,
+            bytes_recv: c.u64()?,
+            allreduce_s: c.f64()?,
+        })
+    }
+
+    /// Collective on the metrics cadence: every rank contributes its row;
+    /// rank 0 gets the full rank-ordered table (`Ok(Some(...))`), workers get
+    /// `Ok(None)`. EVERY rank must call this at the same step — participation
+    /// cannot depend on sink presence (workers have no sinks).
+    pub fn gather_health(&self, local: &RankHealth) -> Result<Option<Vec<RankHealth>>, DistError> {
+        let ph = DistPhase::HealthGather;
+        if self.rank == 0 {
+            let mut out = Vec::with_capacity(self.nranks);
+            out.push(local.clone());
+            for r in 1..self.nranks {
+                let p = self.recv_frame(r, FRAME_HEALTH, ph)?;
+                let h = Self::decode_health(&p).map_err(|e| DistError {
+                    rank: self.rank,
+                    peer: Some(r),
+                    phase: ph,
+                    detail: format!("decoding health row: {e}"),
+                })?;
+                out.push(h);
+            }
+            Ok(Some(out))
+        } else {
+            self.send_frame(0, FRAME_HEALTH, &Self::encode_health(local), ph)?;
+            Ok(None)
+        }
+    }
+
+    // ---- teardown ------------------------------------------------------
+
+    /// Best-effort shutdown notice to every peer (errors ignored — peers may
+    /// already be gone).
+    pub fn shutdown(&self) {
+        for r in 0..self.nranks {
+            if r != self.rank {
+                let _ = self.send_frame(r, FRAME_SHUTDOWN, &[], DistPhase::Shutdown);
+            }
+        }
+    }
+
+    /// Instance traffic counters:
+    /// `(frames_sent, frames_recv, bytes_sent, bytes_recv, allreduce_seconds)`.
+    pub fn traffic(&self) -> (u64, u64, u64, u64, f64) {
+        (
+            self.counters.frames_sent.load(Ordering::Relaxed),
+            self.counters.frames_recv.load(Ordering::Relaxed),
+            self.counters.bytes_sent.load(Ordering::Relaxed),
+            self.counters.bytes_recv.load(Ordering::Relaxed),
+            self.counters.allreduce_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::MemCluster;
+    use std::sync::Arc;
+
+    fn mem_comms(n: usize) -> Vec<Arc<DistComm>> {
+        MemCluster::new(n)
+            .into_iter()
+            .map(|ep| Arc::new(DistComm::connect_mem(ep, Duration::from_secs(5)).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn microbatch_slices_cover_contiguously() {
+        for &(n, k) in &[(2usize, 4usize), (2, 5), (3, 4), (4, 4), (4, 2), (3, 1)] {
+            let mut next = 0;
+            for r in 0..n {
+                let (start, count) = microbatch_slice(r, n, k);
+                assert_eq!(start, next, "slice for rank {r}/{n} over {k} not contiguous");
+                next += count;
+            }
+            assert_eq!(next, k, "slices for {n} ranks over {k} microbatches don't cover");
+        }
+    }
+
+    #[test]
+    fn fold_all_reduce_matches_serial_fold() {
+        let n = 3;
+        // 5 microbatches: ranks get slices [0,2) [2,4) [4,5).
+        let mbs: Vec<(f64, Vec<Matrix>)> = (0..5)
+            .map(|i| {
+                let g = Matrix::from_vec(2, 2, vec![0.1 * i as f32, 1.0 / (i + 1) as f32, -0.3, 2.0]);
+                (0.25 * i as f64, vec![g])
+            })
+            .collect();
+        // Serial reference: strict fold-left.
+        let mut serial = mbs[0].1[0].clone();
+        let mut serial_loss = mbs[0].0;
+        for (l, g) in &mbs[1..] {
+            serial.axpy_inplace(1.0, &g[0]);
+            serial_loss += l;
+        }
+        let comms = mem_comms(n);
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|comm| {
+                let comm = Arc::clone(comm);
+                let mbs = mbs.clone();
+                std::thread::spawn(move || {
+                    let (start, count) = microbatch_slice(comm.rank(), comm.nranks(), mbs.len());
+                    let local = mbs[start..start + count].to_vec();
+                    comm.fold_all_reduce(local, 1).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let (loss, acc) = h.join().unwrap();
+            assert_eq!(loss.to_bits(), serial_loss.to_bits());
+            for (a, b) in acc[0].data.iter().zip(&serial.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "distributed sum diverged from serial fold");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_and_health_gather() {
+        let comms = mem_comms(2);
+        let c1 = Arc::clone(&comms[1]);
+        let t = std::thread::spawn(move || {
+            c1.barrier(7).unwrap();
+            let local = RankHealth { rank: 1, owned_layers: 3, ..RankHealth::new(1) };
+            assert!(c1.gather_health(&local).unwrap().is_none());
+        });
+        comms[0].barrier(7).unwrap();
+        let local = RankHealth { rank: 0, owned_layers: 2, ..RankHealth::new(0) };
+        let rows = comms[0].gather_health(&local).unwrap().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].rank, 0);
+        assert_eq!(rows[1].rank, 1);
+        assert_eq!(rows[1].owned_layers, 3);
+        t.join().unwrap();
+        let (fs, fr, bs, br, _) = comms[0].traffic();
+        assert!(fs > 0 && fr > 0 && bs > 0 && br > 0, "traffic counters never moved");
+    }
+
+    #[test]
+    fn dead_peer_trips_timeout_not_hang() {
+        let mut eps = MemCluster::new(2);
+        let ep0 = eps.remove(0);
+        drop(eps); // rank 1 never comes up — its endpoints are dropped
+        let comm = DistComm::connect_mem(ep0, Duration::from_millis(50)).unwrap();
+        let err = comm.barrier(1).unwrap_err();
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.phase, DistPhase::Barrier);
+        assert!(err.to_string().contains("hung up"), "{err}");
+    }
+}

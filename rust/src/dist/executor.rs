@@ -1,0 +1,478 @@
+//! [`DistExecutor`] — the distributed optimizer executor behind
+//! `Backend::Distributed`.
+//!
+//! Every rank holds the FULL replicated optimizer state (which is what makes
+//! rank 0's checkpoint format-identical to a serial checkpoint), but the
+//! periodic eigenbasis refreshes are partitioned: layer ownership comes from
+//! the same cost-balanced assignment the sharded backend uses
+//! ([`crate::coordinator::sharded::assign_shards_tensors`] over
+//! `nranks` "shards"), so every rank runs ~1/N of the eigendecomposition
+//! work and broadcasts the results.
+//!
+//! Two exchange points keep adoption step-synchronous on every rank:
+//!
+//! - **Mid-step** (inline Shampoo only): an inverse-root refresh feeds the
+//!   SAME step's update, so when `dist_mid_step_sync` fires for a layer the
+//!   owner updates that layer first and broadcasts the fresh roots; everyone
+//!   else receives + adopts before touching the layer. The predicate is a
+//!   pure function of replicated state, so all ranks agree on when this
+//!   happens with zero extra communication.
+//! - **Post-step**: each rank broadcasts exactly ONE (possibly empty) batch
+//!   of its pending publications every step, in rank order, and raises the
+//!   adopt caps only after the broadcast — no rank's active basis can run
+//!   ahead of its peers, even under undrained async refresh. With
+//!   `drain_refresh` the service is drained first, making the exchange (and
+//!   therefore the whole trajectory) bitwise-deterministic.
+//!
+//! Init-path decompositions (SOAP's first-gradient eigh, Shampoo's first
+//! inline root) intentionally run on EVERY rank: they bypass the publication
+//! machinery and are cheap one-offs, and replicating them keeps the
+//! first-step state identical without a broadcast.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::comm::DistComm;
+use super::frame::BasisEntry;
+use super::{DistError, DistPhase};
+use crate::linalg::{Matrix, TensorShape};
+use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
+use crate::precond::{DistBasisPort, RefreshService};
+use crate::runtime::Engine;
+use crate::session::backend::ExecutorBackend;
+use crate::session::{LayerHealth, RankHealth};
+
+/// Distributed executor: replicated per-layer optimizer slots plus the
+/// refresh-ownership map and the basis ports the exchange protocol drives.
+pub struct DistExecutor {
+    comm: Arc<DistComm>,
+    slots: Vec<Box<dyn LayerOptimizer>>,
+    refresh_service: Option<Arc<RefreshService>>,
+    /// `owner[layer]` = rank that runs this layer's periodic refreshes.
+    owner: Vec<usize>,
+    /// `ports[layer]` = broadcast mailboxes, in `attach_dist` order (the
+    /// wire address is `(layer, port_idx)`).
+    ports: Vec<Vec<DistBasisPort>>,
+    /// Drain the refresh service before the post-step exchange (the
+    /// deterministic-async contract).
+    drain: bool,
+    /// Publications this rank has broadcast (ownership telemetry).
+    owned_refreshes: u64,
+}
+
+impl DistExecutor {
+    pub fn new_tensors(
+        kind: OptKind,
+        hyper: &Hyper,
+        shapes: &[TensorShape],
+        comm: Arc<DistComm>,
+        drain: bool,
+    ) -> Self {
+        let mut slots: Vec<Box<dyn LayerOptimizer>> = shapes
+            .iter()
+            .enumerate()
+            .map(|(idx, shape)| kind.build_staggered_tensor(idx, shape, hyper))
+            .collect();
+        // Same async-service policy as the serial/sharded executors.
+        let refresh_service = (hyper.refresh_mode == RefreshMode::Async)
+            .then(|| Arc::new(RefreshService::new(hyper.refresh_workers)))
+            .filter(|svc| {
+                let mut any = false;
+                for slot in slots.iter_mut() {
+                    any |= slot.attach_async(svc);
+                }
+                any
+            });
+        // Refresh ownership: the sharded backend's deterministic
+        // cost-balanced assignment, with "shards" = ranks.
+        let owner = crate::coordinator::sharded::assign_shards_tensors(shapes, comm.nranks());
+        let rank = comm.rank();
+        let ports = slots
+            .iter_mut()
+            .zip(&owner)
+            .map(|(slot, &o)| slot.attach_dist(o == rank))
+            .collect();
+        Self { comm, slots, refresh_service, owner, ports, drain, owned_refreshes: 0 }
+    }
+
+    /// The communicator (rank/traffic introspection; tests).
+    pub fn comm(&self) -> &Arc<DistComm> {
+        &self.comm
+    }
+
+    /// The refresh-ownership map, layer-ordered (tests, docs tooling).
+    pub fn owners(&self) -> &[usize] {
+        &self.owner
+    }
+
+    /// Publications not yet broadcast for `layer`: handle version above the
+    /// adopt cap means the executor still owes peers this basis.
+    fn collect_pending(&self, layer: usize, out: &mut Vec<BasisEntry>) {
+        for (port_idx, port) in self.ports[layer].iter().enumerate() {
+            if port.handle.version() > port.adopt_cap.load(Ordering::Acquire) {
+                if let Some(p) = port.handle.latest() {
+                    out.push(BasisEntry {
+                        layer: layer as u32,
+                        port: port_idx as u32,
+                        snapshot_step: p.snapshot_step,
+                        version: p.version,
+                        payload: p.payload.clone(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Owner side: ship `entries` to every peer, then raise the local caps
+    /// to EXACTLY the broadcast versions (not `handle.version()` — the async
+    /// service may publish again between collect and cap, and that newer
+    /// publication must wait for the next exchange).
+    fn bcast_and_cap(&mut self, entries: Vec<BasisEntry>) -> Result<(), DistError> {
+        self.comm.bcast_basis(&entries)?;
+        for e in &entries {
+            self.ports[e.layer as usize][e.port as usize].raise_cap(e.version);
+        }
+        self.owned_refreshes += entries.len() as u64;
+        Ok(())
+    }
+
+    /// Receiver side: publish each entry into the addressed local mailbox
+    /// and raise its cap so the next `adopt_published` takes it.
+    fn apply_entries(&self, entries: Vec<BasisEntry>, from: usize) -> Result<(), DistError> {
+        for e in entries {
+            let port = self
+                .ports
+                .get(e.layer as usize)
+                .and_then(|ps| ps.get(e.port as usize))
+                .ok_or_else(|| {
+                    DistError::with_peer(
+                        self.comm.rank(),
+                        from,
+                        DistPhase::BasisBroadcast,
+                        format!("basis entry addresses unknown port ({}, {})", e.layer, e.port),
+                    )
+                })?;
+            // Versions are per-handle local counters; the cap is raised to
+            // OUR publish's version, which need not equal the owner's.
+            let v = port.handle.publish(e.payload, e.snapshot_step);
+            port.raise_cap(v);
+        }
+        Ok(())
+    }
+}
+
+impl ExecutorBackend for DistExecutor {
+    fn name(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn step(
+        &mut self,
+        _engine: Option<&Engine>,
+        params: &mut [Matrix],
+        grads: &[Matrix],
+        t: u64,
+        lr: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(params.len() == self.slots.len(), "layer count mismatch");
+        let rank = self.comm.rank();
+        for idx in 0..self.slots.len() {
+            // Pure function of replicated state — every rank computes the
+            // same value, so the frame pattern below needs no negotiation.
+            let mid_sync = self.slots[idx].dist_mid_step_sync(t);
+            if mid_sync && self.owner[idx] != rank {
+                let owner = self.owner[idx];
+                let entries = self.comm.recv_basis(owner)?;
+                self.apply_entries(entries, owner)?;
+            }
+            self.slots[idx].update(&mut params[idx], &grads[idx], t, lr);
+            if mid_sync && self.owner[idx] == rank {
+                let mut pending = Vec::new();
+                self.collect_pending(idx, &mut pending);
+                self.bcast_and_cap(pending)?;
+            }
+        }
+        // Post-step exchange: exactly one basis-batch frame from every rank,
+        // in rank order. Deterministic frame count, deadlock-free, and it
+        // runs HERE rather than at checkpoint/idle time so `prepare_export`
+        // never needs a collective (rank 0 checkpoints alone).
+        if self.drain {
+            if let Some(svc) = &self.refresh_service {
+                svc.wait_idle();
+            }
+        }
+        for r in 0..self.comm.nranks() {
+            if r == rank {
+                let mut pending = Vec::new();
+                for idx in 0..self.slots.len() {
+                    if self.owner[idx] == rank {
+                        self.collect_pending(idx, &mut pending);
+                    }
+                }
+                self.bcast_and_cap(pending)?;
+            } else {
+                let entries = self.comm.recv_basis(r)?;
+                self.apply_entries(entries, r)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.state_bytes()).sum()
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.scratch_bytes()).sum()
+    }
+
+    fn refresh_seconds(&self) -> f64 {
+        self.slots.iter().map(|s| s.refresh_seconds()).sum()
+    }
+
+    fn async_refresh_seconds(&self) -> f64 {
+        self.refresh_service.as_ref().map(|s| s.refresh_seconds()).unwrap_or(0.0)
+    }
+
+    fn mean_basis_staleness(&self, t: u64) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u32);
+        for slot in &self.slots {
+            if let Some(snap) = slot.basis_snapshot_step() {
+                sum += t.saturating_sub(snap) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    fn collect_layer_health(&self, t: u64) -> Vec<LayerHealth> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(layer, slot)| LayerHealth {
+                layer,
+                grad_norm: None,
+                update_norm: slot.update_norm(),
+                staleness: slot.basis_snapshot_step().map(|snap| t.saturating_sub(snap)),
+                whitening_offdiag: slot.whitening_offdiag(),
+            })
+            .collect()
+    }
+
+    fn dist_rank_health(&self) -> Option<RankHealth> {
+        let rank = self.comm.rank();
+        let (frames_sent, frames_recv, bytes_sent, bytes_recv, allreduce_s) = self.comm.traffic();
+        Some(RankHealth {
+            rank,
+            owned_layers: self.owner.iter().filter(|&&o| o == rank).count(),
+            owned_refreshes: self.owned_refreshes,
+            frames_sent,
+            frames_recv,
+            bytes_sent,
+            bytes_recv,
+            allreduce_s,
+        })
+    }
+
+    fn refresh_queue_depth(&self) -> usize {
+        self.refresh_service.as_ref().map(|s| s.pending()).unwrap_or(0)
+    }
+
+    fn refresh_pool_stats(&self) -> Option<(u64, f64)> {
+        self.refresh_service.as_ref().map(|s| s.pool_stats())
+    }
+
+    fn wait_refresh_idle(&self) {
+        if let Some(svc) = &self.refresh_service {
+            svc.wait_idle();
+        }
+    }
+
+    fn prepare_export(&mut self) {
+        // No collectives here: rank 0 checkpoints alone. Caps are already
+        // current in inline and drained-async modes (the post-step exchange
+        // runs every step); an undrained-async publication that has not been
+        // broadcast yet is simply not in the checkpoint — the same "refresh
+        // in flight is lost" semantics an undrained serial checkpoint has.
+        self.wait_refresh_idle();
+        for slot in self.slots.iter_mut() {
+            slot.finish_pending();
+        }
+    }
+
+    fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>> {
+        Ok(self.slots.iter().enumerate().map(|(i, s)| (i, s.export_state())).collect())
+    }
+
+    fn import_state(&mut self, mut state: Vec<(usize, Vec<Matrix>)>) -> Result<()> {
+        state.sort_by_key(|&(i, _)| i);
+        for (idx, slot) in self.slots.iter_mut().enumerate() {
+            let pos = state
+                .binary_search_by_key(&idx, |&(i, _)| i)
+                .map_err(|_| anyhow!("missing state for layer {idx}"))?;
+            slot.import_state(std::mem::take(&mut state[pos].1))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::MemCluster;
+    use crate::session::backend::SerialExecutor;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn shapes() -> Vec<TensorShape> {
+        [(12, 12), (1, 24), (8, 16), (16, 8), (24, 4)]
+            .iter()
+            .map(|&(m, n)| TensorShape::matrix(m, n))
+            .collect()
+    }
+
+    /// Shared grads/params script: a pure function of the seed, so serial
+    /// and every distributed rank regenerate identical inputs.
+    fn script(seed: u64, steps: u64) -> (Vec<Matrix>, Vec<Vec<Matrix>>) {
+        let shapes = shapes();
+        let mut rng = Rng::new(seed);
+        let init: Vec<Matrix> = shapes
+            .iter()
+            .map(|s| {
+                let (m, n) = s.carrier();
+                Matrix::randn(&mut rng, m, n, 1.0)
+            })
+            .collect();
+        let grads: Vec<Vec<Matrix>> = (0..steps)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let (m, n) = s.carrier();
+                        Matrix::randn(&mut rng, m, n, 1.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        (init, grads)
+    }
+
+    fn run_distributed(
+        kind: OptKind,
+        hyper: &Hyper,
+        nranks: usize,
+        steps: u64,
+    ) -> Vec<(Vec<Matrix>, RankHealth)> {
+        let handles: Vec<_> = MemCluster::new(nranks)
+            .into_iter()
+            .map(|ep| {
+                let hyper = hyper.clone();
+                std::thread::spawn(move || {
+                    let comm =
+                        Arc::new(DistComm::connect_mem(ep, Duration::from_secs(20)).unwrap());
+                    let mut exec =
+                        DistExecutor::new_tensors(kind, &hyper, &shapes(), comm, true);
+                    let (mut params, grads) = script(77, steps);
+                    for (i, g) in grads.iter().enumerate() {
+                        exec.step(None, &mut params, g, i as u64 + 1, 0.01).unwrap();
+                    }
+                    let health = exec.dist_rank_health().unwrap();
+                    (params, health)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn distributed_matches_serial_bitwise_with_owned_refreshes() {
+        // SOAP exercises the post-step (rotation) exchange; Shampoo the
+        // mid-step inverse-root sync. Both must be bitwise vs serial.
+        for kind in [OptKind::Soap, OptKind::Shampoo] {
+            let hyper = Hyper { precond_freq: 3, ..Hyper::default() };
+            let steps = 10;
+            let mut serial = SerialExecutor::new_tensors(kind, &hyper, &shapes());
+            let (mut sp, grads) = script(77, steps);
+            for (i, g) in grads.iter().enumerate() {
+                serial.step(None, &mut sp, g, i as u64 + 1, 0.01).unwrap();
+            }
+            for nranks in [2usize, 3] {
+                let results = run_distributed(kind, &hyper, nranks, steps);
+                let mut total_owned = 0;
+                for (rank, (params, health)) in results.iter().enumerate() {
+                    for (l, (a, b)) in params.iter().zip(&sp).enumerate() {
+                        for (x, y) in a.data.iter().zip(&b.data) {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{kind:?} rank {rank}/{nranks} layer {l} diverged from serial"
+                            );
+                        }
+                    }
+                    assert_eq!(health.rank, rank);
+                    total_owned += health.owned_refreshes;
+                    assert!(
+                        health.owned_layers > 0,
+                        "{kind:?}: rank {rank}/{nranks} owns no layers — assignment degenerate"
+                    );
+                }
+                assert!(total_owned > 0, "{kind:?}: no refresh was ever broadcast");
+                assert!(
+                    results.iter().skip(1).any(|(_, h)| h.owned_refreshes > 0),
+                    "{kind:?}: every broadcast refresh ran on rank 0 — ownership not distributed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_async_drained_matches_serial_async_drained() {
+        let hyper = Hyper { precond_freq: 3, ..Hyper::default() }.async_refresh();
+        let steps = 9;
+        let mut serial = SerialExecutor::new_tensors(OptKind::Soap, &hyper, &shapes());
+        let (mut sp, grads) = script(41, steps);
+        for (i, g) in grads.iter().enumerate() {
+            serial.step(None, &mut sp, g, i as u64 + 1, 0.01).unwrap();
+            serial.wait_refresh_idle();
+        }
+        let (mut dp, grads) = script(41, steps);
+        let mut eps = MemCluster::new(2);
+        let ep1 = eps.pop().unwrap();
+        let worker = {
+            let hyper = hyper.clone();
+            std::thread::spawn(move || {
+                let comm = Arc::new(DistComm::connect_mem(ep1, Duration::from_secs(20)).unwrap());
+                let mut exec =
+                    DistExecutor::new_tensors(OptKind::Soap, &hyper, &shapes(), comm, true);
+                let (mut params, grads) = script(41, steps);
+                for (i, g) in grads.iter().enumerate() {
+                    exec.step(None, &mut params, g, i as u64 + 1, 0.01).unwrap();
+                }
+                params
+            })
+        };
+        let ep0 = eps.pop().unwrap();
+        let comm = Arc::new(DistComm::connect_mem(ep0, Duration::from_secs(20)).unwrap());
+        let mut rank0 = DistExecutor::new_tensors(OptKind::Soap, &hyper, &shapes(), comm, true);
+        for (i, g) in grads.iter().enumerate() {
+            rank0.step(None, &mut dp, g, i as u64 + 1, 0.01).unwrap();
+        }
+        let worker_params = worker.join().expect("rank 1 thread panicked");
+        for (a, b) in worker_params.iter().zip(&dp) {
+            assert_eq!(a.data, b.data, "rank 1 state diverged from rank 0");
+        }
+        // Drained-async adoption timing is a pure function of the step
+        // count, so the distributed drained run must equal serial drained.
+        for (l, (a, b)) in dp.iter().zip(&sp).enumerate() {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "async drained layer {l} diverged");
+            }
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Wire codec for the distributed protocol: length-prefixed frames with a
+//! one-byte type tag and little-endian fixed-width payloads.
+//!
+//! Matrices serialize their `f32` elements via `to_le_bytes`, so a decoded
+//! matrix is BITWISE the encoder's matrix — the whole distributed-vs-serial
+//! golden guarantee rides on this round-trip being exact (no text formatting,
+//! no f64 widening).
+//!
+//! On TCP the frame is `[u32 len][u8 type][payload]` where `len` counts the
+//! type byte plus the payload; on the in-process channel transport a frame is
+//! just the `[type][payload]` byte vector (the channel preserves message
+//! boundaries).
+
+use crate::linalg::Matrix;
+use crate::precond::BasisPayload;
+
+// Frame type tags. Stable wire values — add, never renumber.
+/// Worker → coordinator registration: rank, mesh listen port, fingerprint.
+pub const FRAME_HELLO: u8 = 1;
+/// Coordinator → workers: the full rank → mesh-port address table.
+pub const FRAME_TOPOLOGY: u8 = 2;
+/// One layer's gradient partial sum in the fold-reduce chain.
+pub const FRAME_GRAD_CHUNK: u8 = 3;
+/// A batch of published eigenbasis payloads from their owning rank.
+pub const FRAME_BASIS_BATCH: u8 = 4;
+/// One rank's health row (health gather).
+pub const FRAME_HEALTH: u8 = 5;
+/// Barrier token.
+pub const FRAME_BARRIER: u8 = 6;
+/// Orderly shutdown notice.
+pub const FRAME_SHUTDOWN: u8 = 7;
+/// Mesh link identification (dialing rank announces itself).
+pub const FRAME_MESH_HELLO: u8 = 8;
+/// Scalar trailer of the fold-reduce chain (f64 loss partial).
+pub const FRAME_SCALARS: u8 = 9;
+
+pub fn frame_name(ty: u8) -> &'static str {
+    match ty {
+        FRAME_HELLO => "hello",
+        FRAME_TOPOLOGY => "topology",
+        FRAME_GRAD_CHUNK => "grad-chunk",
+        FRAME_BASIS_BATCH => "basis-batch",
+        FRAME_HEALTH => "health",
+        FRAME_BARRIER => "barrier",
+        FRAME_SHUTDOWN => "shutdown",
+        FRAME_MESH_HELLO => "mesh-hello",
+        FRAME_SCALARS => "scalars",
+        _ => "unknown",
+    }
+}
+
+// ---- primitive writers ---------------------------------------------------
+
+pub fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    put_u32(buf, m.rows as u32);
+    put_u32(buf, m.cols as u32);
+    buf.reserve(m.data.len() * 4);
+    for &x in &m.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn put_opt_matrix(buf: &mut Vec<u8>, m: &Option<Matrix>) {
+    match m {
+        Some(m) => {
+            buf.push(1);
+            put_matrix(buf, m);
+        }
+        None => buf.push(0),
+    }
+}
+
+// ---- cursor reader -------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a received payload. Decode
+/// errors are plain strings; the comm layer wraps them into [`DistError`]
+/// with the rank/peer/phase context it alone knows.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| format!("matrix dims overflow: {rows}×{cols}"))?;
+        let bytes = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    pub fn opt_matrix(&mut self) -> Result<Option<Matrix>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.matrix()?)),
+            other => Err(format!("bad option tag {other}")),
+        }
+    }
+}
+
+// ---- basis batch ---------------------------------------------------------
+
+/// One published eigenbasis in flight: the wire form of a
+/// [`crate::precond::BasisHandle`] publication, addressed by
+/// `(layer, port)` — ports are the deterministic per-layer list
+/// `LayerOptimizer::attach_dist` returned on every rank (a 2-D eigenbasis
+/// has one port; a rank-k tensor basis one per active mode, in mode order).
+#[derive(Clone, Debug)]
+pub struct BasisEntry {
+    pub layer: u32,
+    pub port: u32,
+    pub snapshot_step: u64,
+    /// The owner's handle version for this publication. Advisory on the
+    /// receiving side: each rank's handle numbers its own publications, and
+    /// the adopt cap is raised to the LOCAL version — cross-rank agreement
+    /// is on payload + adoption step, not on version arithmetic.
+    pub version: u64,
+    pub payload: BasisPayload,
+}
+
+pub fn encode_basis_batch(entries: &[BasisEntry]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, entries.len() as u32);
+    for e in entries {
+        put_u32(&mut buf, e.layer);
+        put_u32(&mut buf, e.port);
+        put_u64(&mut buf, e.snapshot_step);
+        put_u64(&mut buf, e.version);
+        put_opt_matrix(&mut buf, &e.payload.left);
+        put_opt_matrix(&mut buf, &e.payload.right);
+        put_opt_matrix(&mut buf, &e.payload.left_aux);
+        put_opt_matrix(&mut buf, &e.payload.right_aux);
+    }
+    buf
+}
+
+pub fn decode_basis_batch(buf: &[u8]) -> Result<Vec<BasisEntry>, String> {
+    let mut c = Cursor::new(buf);
+    let n = c.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(BasisEntry {
+            layer: c.u32()?,
+            port: c.u32()?,
+            snapshot_step: c.u64()?,
+            version: c.u64()?,
+            payload: BasisPayload {
+                left: c.opt_matrix()?,
+                right: c.opt_matrix()?,
+                left_aux: c.opt_matrix()?,
+                right_aux: c.opt_matrix()?,
+            },
+        });
+    }
+    if !c.done() {
+        return Err(format!("basis batch has {} trailing bytes", c.remaining()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip_is_bitwise() {
+        // Include values that would NOT survive a text round-trip.
+        let m = Matrix::from_vec(
+            2,
+            3,
+            vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1.0e-7, 3.4e38, 1.0 / 3.0],
+        );
+        let mut buf = Vec::new();
+        put_matrix(&mut buf, &m);
+        let back = Cursor::new(&buf).matrix().unwrap();
+        assert_eq!(back.rows, 2);
+        assert_eq!(back.cols, 3);
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "codec changed a bit pattern");
+        }
+    }
+
+    #[test]
+    fn basis_batch_roundtrip() {
+        let entries = vec![
+            BasisEntry {
+                layer: 3,
+                port: 1,
+                snapshot_step: 40,
+                version: 7,
+                payload: BasisPayload {
+                    left: Some(Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0])),
+                    right: None,
+                    left_aux: Some(Matrix::from_vec(1, 2, vec![0.5, -0.5])),
+                    right_aux: None,
+                },
+            },
+            BasisEntry {
+                layer: 0,
+                port: 0,
+                snapshot_step: 8,
+                version: 1,
+                payload: BasisPayload { left: None, right: None, left_aux: None, right_aux: None },
+            },
+        ];
+        let buf = encode_basis_batch(&entries);
+        let back = decode_basis_batch(&buf).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].layer, 3);
+        assert_eq!(back[0].port, 1);
+        assert_eq!(back[0].version, 7);
+        assert_eq!(back[0].payload.left.as_ref().unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(back[0].payload.right.is_none());
+        assert_eq!(back[1].snapshot_step, 8);
+        assert!(back[1].payload.left.is_none());
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        let mut buf = Vec::new();
+        put_matrix(&mut buf, &Matrix::from_vec(2, 2, vec![1.0; 4]));
+        assert!(Cursor::new(&buf[..buf.len() - 1]).matrix().is_err());
+        assert!(decode_basis_batch(&[1, 0, 0]).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! Worker-process launch for the self-spawning distributed CLI mode.
+//!
+//! `soap-lab train --backend distributed --ranks N` makes the invoking
+//! process rank 0: it binds the coordinator listener, re-executes its own
+//! binary N−1 times with `--rank r --coordinator-addr <addr>` appended, and
+//! trains alongside the children. [`ChildGuard`] owns the children for the
+//! duration: if rank 0 fails (or panics, or is interrupted past the guard's
+//! drop), every child is killed — no orphan workers grinding on after the
+//! coordinator is gone. Manual launch (operator starts each rank by hand
+//! with `--rank`/`--coordinator-addr`) bypasses this module entirely.
+
+use std::process::{Child, Command, Stdio};
+
+/// Spawn worker ranks `1..nranks` as copies of the current executable.
+///
+/// `argv` is the base argument vector to replay (typically the parent's own
+/// CLI args minus the program name); each child gets
+/// `--rank <r> --coordinator-addr <coordinator>` appended, which the CLI
+/// parser treats as "join an existing rendezvous" rather than self-spawn.
+/// Children inherit stdout/stderr so worker-side failures are visible in the
+/// parent's terminal.
+pub fn spawn_workers(
+    nranks: usize,
+    coordinator: &str,
+    argv: &[String],
+) -> std::io::Result<ChildGuard> {
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(nranks.saturating_sub(1));
+    for rank in 1..nranks {
+        let spawned = Command::new(&exe)
+            .args(argv)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--coordinator-addr")
+            .arg(coordinator)
+            .stdin(Stdio::null())
+            .spawn();
+        match spawned {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => {
+                // Partial spawn: reap what already started before bailing.
+                drop(ChildGuard { children });
+                return Err(e);
+            }
+        }
+    }
+    Ok(ChildGuard { children })
+}
+
+/// Owns spawned worker processes; `Drop` kills any still running. Call
+/// [`ChildGuard::wait_all`] on the success path to reap them cleanly and
+/// surface a nonzero worker exit as an error.
+pub struct ChildGuard {
+    children: Vec<(usize, Child)>,
+}
+
+impl ChildGuard {
+    /// Wait for every worker to exit; error if any exited nonzero. Consumes
+    /// the guard, so the kill-on-drop safety net is disarmed only once every
+    /// child has actually been reaped.
+    pub fn wait_all(mut self) -> std::io::Result<()> {
+        let mut failed = Vec::new();
+        for (rank, child) in self.children.iter_mut() {
+            let status = child.wait()?;
+            if !status.success() {
+                failed.push(format!("rank {rank} exited with {status}"));
+            }
+        }
+        self.children.clear();
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("worker failure: {}", failed.join("; ")),
+            ))
+        }
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for (_, child) in self.children.iter_mut() {
+            // Already-exited children make kill() a no-op error — ignore it;
+            // wait() after kill prevents zombies either way.
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Multi-process distributed executor with distributed eigenbasis ownership.
+//!
+//! N workers (separate processes over localhost TCP, or threads over an
+//! in-process channel mesh) each run the FULL training loop SPMD-style: the
+//! same seed drives the same [`crate::data::BatchStream`] on every rank, the
+//! optimizer state is fully replicated, and two collectives keep the ranks
+//! bitwise-identical to a serial run:
+//!
+//! - **Gradient fold-reduce** — the global batch's microbatches are split
+//!   into contiguous per-rank slices; partial sums travel rank 0 → N−1 in an
+//!   order-preserving chain (each rank adds its microbatch gradients ONE AT A
+//!   TIME, layer-chunked) and the last rank broadcasts the result. A textbook
+//!   ring all-reduce would re-associate the f32 summation differently on
+//!   every rank; the chain reproduces the serial fold-left bracketing
+//!   exactly, which is what makes `--backend distributed` bitwise-identical
+//!   to `--backend serial`.
+//! - **Eigenbasis broadcast** — each rank OWNS the periodic eigendecomposition
+//!   refreshes for a deterministic subset of layers (the same cost-balanced
+//!   assignment the sharded backend uses). The owner runs the refresh locally
+//!   and publishes it through the existing tear-free
+//!   [`crate::precond::BasisHandle`] double-buffer; the executor serializes
+//!   that publication as a versioned frame, broadcasts it, and every rank
+//!   adopts it at the same step (an adopt-version cap keeps any rank from
+//!   running ahead). Non-owners never run the eigendecomposition at all —
+//!   that is the point: refresh cost scales down ~1/N.
+//!
+//! Rendezvous is rank-0-centric: workers dial the coordinator, exchange a
+//! config fingerprint, and receive the address table for the full peer mesh.
+//! Every failure is a typed [`DistError`] carrying the local rank, the peer
+//! involved, and the protocol phase — a dead or hung peer trips the
+//! configurable `--dist-timeout` instead of wedging the run.
+
+pub mod comm;
+pub mod executor;
+pub mod frame;
+pub mod launch;
+pub mod transport;
+
+pub use comm::{microbatch_slice, DistComm};
+pub use executor::DistExecutor;
+pub use launch::{spawn_workers, ChildGuard};
+pub use transport::{MemCluster, MemEndpoint, Transport};
+
+use std::fmt;
+
+/// Which protocol phase a [`DistError`] happened in — part of the typed
+/// surface so operators (and the kill-a-rank integration test) can tell a
+/// rendezvous misconfiguration from a mid-run peer death.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistPhase {
+    /// Worker registration / address-table exchange / mesh dial-up.
+    Rendezvous,
+    /// The per-step gradient fold-reduce chain.
+    AllReduce,
+    /// Broadcasting or receiving a published eigenbasis.
+    BasisBroadcast,
+    /// Collecting per-rank health rows on the metrics cadence.
+    HealthGather,
+    /// The rank-0-centric barrier.
+    Barrier,
+    /// Orderly teardown.
+    Shutdown,
+}
+
+impl DistPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistPhase::Rendezvous => "rendezvous",
+            DistPhase::AllReduce => "allreduce",
+            DistPhase::BasisBroadcast => "basis-broadcast",
+            DistPhase::HealthGather => "health-gather",
+            DistPhase::Barrier => "barrier",
+            DistPhase::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// A distributed-protocol failure: which rank observed it, which peer was
+/// involved (when one was), and in which phase. Converts into
+/// [`anyhow::Error`] at the session boundary via the std-error blanket.
+#[derive(Debug)]
+pub struct DistError {
+    pub rank: usize,
+    pub peer: Option<usize>,
+    pub phase: DistPhase,
+    pub detail: String,
+}
+
+impl DistError {
+    pub fn new(rank: usize, phase: DistPhase, detail: impl Into<String>) -> Self {
+        Self { rank, peer: None, phase, detail: detail.into() }
+    }
+
+    pub fn with_peer(rank: usize, peer: usize, phase: DistPhase, detail: impl Into<String>) -> Self {
+        Self { rank, peer: Some(peer), phase, detail: detail.into() }
+    }
+}
+
+impl fmt::Display for DistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "distributed error on rank {} [{}", self.rank, self.phase.name())?;
+        if let Some(p) = self.peer {
+            write!(f, ", peer {p}")?;
+        }
+        write!(f, "]: {}", self.detail)
+    }
+}
+
+impl std::error::Error for DistError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_error_display_carries_rank_peer_phase() {
+        let e = DistError::with_peer(2, 0, DistPhase::AllReduce, "peer closed the connection");
+        let s = e.to_string();
+        assert!(s.contains("rank 2"), "{s}");
+        assert!(s.contains("allreduce"), "{s}");
+        assert!(s.contains("peer 0"), "{s}");
+        assert!(s.contains("closed"), "{s}");
+        let e = DistError::new(0, DistPhase::Rendezvous, "fingerprint mismatch");
+        assert!(!e.to_string().contains("peer"), "{e}");
+    }
+}

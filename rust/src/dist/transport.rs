@@ -1,0 +1,245 @@
+//! Transports for the distributed executor.
+//!
+//! - [`Transport::Tcp`] — localhost sockets between real processes (the
+//!   production shape; what `--backend distributed` self-spawn uses). Frames
+//!   are `[u32 len][u8 type][payload]`, streams run with `TCP_NODELAY` and a
+//!   read timeout so a dead peer surfaces as a typed error instead of a hang.
+//! - [`Transport::Mem`] — an in-process `mpsc` channel mesh
+//!   ([`MemCluster`]), one thread per rank. Same frames minus the length
+//!   prefix (channels preserve message boundaries). This is what the golden
+//!   tests use to run real multi-rank protocols inside one test process.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Which wire the distributed backend runs over. Parsed from
+/// `--dist-transport` / the `dist_transport` config key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Localhost TCP between worker processes (default).
+    Tcp,
+    /// In-process channel mesh between worker threads (tests, single-process
+    /// experiments).
+    Mem,
+}
+
+/// Transport names accepted by [`Transport::parse`], embedded in errors.
+pub const TRANSPORT_NAMES: &str = "tcp, mem";
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "tcp" => Transport::Tcp,
+            "mem" | "memory" | "shm" => Transport::Mem,
+            other => {
+                anyhow::bail!("unknown dist transport '{other}': expected one of {TRANSPORT_NAMES}")
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Mem => "mem",
+        }
+    }
+}
+
+// ---- TCP framing ---------------------------------------------------------
+
+/// Write one `[u32 len][u8 type][payload]` frame. `len` counts the type byte
+/// plus the payload so a reader can always pre-size its buffer.
+pub fn tcp_write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> std::io::Result<()> {
+    let len = (payload.len() + 1) as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(&[ty])?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; returns `(type, payload)`. A peer that died mid-frame
+/// shows up as an io error (timeout or unexpected EOF) for the comm layer to
+/// wrap with rank/phase context.
+pub fn tcp_read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut len_bytes = [0u8; 4];
+    stream.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len == 0 {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "zero-length frame"));
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    let ty = buf[0];
+    buf.remove(0);
+    Ok((ty, buf))
+}
+
+/// Accept one connection with a deadline: `TcpListener::accept` has no
+/// native timeout, so the listener runs nonblocking and polls.
+pub fn accept_deadline(listener: &TcpListener, deadline: Instant) -> std::io::Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "timed out waiting for a peer to connect",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Dial with retry until a deadline (a manually launched worker may start
+/// before the coordinator's listener is up).
+pub fn connect_deadline(addr: &str, deadline: Instant) -> std::io::Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("could not reach {addr}: {e}"),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+// ---- in-process channel mesh ---------------------------------------------
+
+/// One rank's two directed channels to one peer.
+pub struct MemPeer {
+    pub tx: Mutex<Sender<Vec<u8>>>,
+    pub rx: Mutex<Receiver<Vec<u8>>>,
+}
+
+/// One rank's endpoint of a [`MemCluster`]: directed channels to every other
+/// rank (`peers[self_rank]` is `None`).
+pub struct MemEndpoint {
+    pub rank: usize,
+    pub nranks: usize,
+    pub peers: Vec<Option<MemPeer>>,
+}
+
+impl MemEndpoint {
+    pub fn send(&self, peer: usize, frame: Vec<u8>) -> Result<(), String> {
+        let p = self.peers[peer].as_ref().ok_or("no channel to self")?;
+        p.tx.lock()
+            .map_err(|_| "mem transport lock poisoned".to_string())?
+            .send(frame)
+            .map_err(|_| format!("peer {peer} hung up (channel closed)"))
+    }
+
+    pub fn recv(&self, peer: usize, timeout: Duration) -> Result<Vec<u8>, String> {
+        let p = self.peers[peer].as_ref().ok_or("no channel to self")?;
+        let rx = p.rx.lock().map_err(|_| "mem transport lock poisoned".to_string())?;
+        rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => format!("timed out waiting on peer {peer}"),
+            RecvTimeoutError::Disconnected => format!("peer {peer} hung up (channel closed)"),
+        })
+    }
+}
+
+/// Build the full `n`-rank channel mesh and split it into per-rank
+/// endpoints — hand each to a worker thread.
+pub struct MemCluster;
+
+impl MemCluster {
+    pub fn new(n: usize) -> Vec<MemEndpoint> {
+        assert!(n >= 2, "a mem cluster needs at least 2 ranks");
+        // senders[i][j] carries i → j traffic; receivers[j][i] is its sink.
+        let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let (tx, rx) = channel();
+                txs[i][j] = Some(tx);
+                rxs[j][i] = Some(rx);
+            }
+        }
+        let mut endpoints = Vec::with_capacity(n);
+        for (rank, (tx_row, rx_row)) in txs.into_iter().zip(rxs).enumerate() {
+            let peers = tx_row
+                .into_iter()
+                .zip(rx_row)
+                .map(|(tx, rx)| match (tx, rx) {
+                    (Some(tx), Some(rx)) => {
+                        Some(MemPeer { tx: Mutex::new(tx), rx: Mutex::new(rx) })
+                    }
+                    _ => None,
+                })
+                .collect();
+            endpoints.push(MemEndpoint { rank, nranks: n, peers });
+        }
+        endpoints
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_parse_and_names() {
+        assert_eq!(Transport::parse("tcp").unwrap(), Transport::Tcp);
+        assert_eq!(Transport::parse("MEM").unwrap(), Transport::Mem);
+        let e = Transport::parse("infiniband").unwrap_err().to_string();
+        assert!(e.contains("tcp") && e.contains("mem"), "{e}");
+    }
+
+    #[test]
+    fn mem_cluster_routes_between_ranks() {
+        let mut eps = MemCluster::new(3);
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send(1, vec![1, 2, 3]).unwrap();
+        a.send(2, vec![9]).unwrap();
+        assert_eq!(b.recv(0, Duration::from_secs(1)).unwrap(), vec![1, 2, 3]);
+        assert_eq!(c.recv(0, Duration::from_secs(1)).unwrap(), vec![9]);
+        c.send(1, vec![7]).unwrap();
+        assert_eq!(b.recv(2, Duration::from_secs(1)).unwrap(), vec![7]);
+        // A rank that never sends trips the timeout, not a hang.
+        let err = b.recv(2, Duration::from_millis(20)).unwrap_err();
+        assert!(err.contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn tcp_frames_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            tcp_write_frame(&mut s, 4, &[10, 20, 30]).unwrap();
+            tcp_write_frame(&mut s, 6, &[]).unwrap();
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut s = accept_deadline(&listener, deadline).unwrap();
+        let (ty, payload) = tcp_read_frame(&mut s).unwrap();
+        assert_eq!((ty, payload), (4, vec![10, 20, 30]));
+        let (ty, payload) = tcp_read_frame(&mut s).unwrap();
+        assert_eq!(ty, 6);
+        assert!(payload.is_empty());
+        t.join().unwrap();
+    }
+}

@@ -68,6 +68,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod experiments;
 pub mod linalg;
 pub mod model;

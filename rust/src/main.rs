@@ -11,9 +11,13 @@
 //! soap-lab corpus     --vocab 512
 //! ```
 
+use std::time::Duration;
+
 use soap_lab::config::RunConfig;
 use soap_lab::data::{CorpusSpec, SyntheticCorpus};
+use soap_lab::dist::{spawn_workers, ChildGuard};
 use soap_lab::runtime::Engine;
+use soap_lab::session::{Backend, DistEndpoint, DistOptions};
 use soap_lab::util::cli::{App, Command};
 
 fn app() -> App {
@@ -31,7 +35,11 @@ fn app() -> App {
                     "adamw|adafactor|shampoo|soap|galore, or a composition \
                      basis=<identity|eigen[:one-sided|:two-sided]|svd>,inner=<adam|adafactor|shampoo>[,graft=<adam|none>]",
                 )
-                .opt("backend", "sharded", "optimizer executor: serial|sharded|pjrt")
+                .opt(
+                    "backend",
+                    "sharded",
+                    "optimizer executor: serial|sharded|pjrt|distributed",
+                )
                 .opt("lr", "0.00316", "peak learning rate")
                 .opt("steps", "200", "TOTAL training steps (a resumed run continues to this total)")
                 .opt("warmup", "0", "warmup steps (0 = constant LR)")
@@ -52,6 +60,33 @@ fn app() -> App {
                     "0",
                     "rank-3+ tensors: merge adjacent modes while the product stays <= this (0 = off)",
                 )
+                .opt(
+                    "adam-warmup",
+                    "0",
+                    "steps of pure inner-optimizer updates before any eigenbasis starts (0 = off)",
+                )
+                .opt(
+                    "precond-warmup",
+                    "0",
+                    "refresh the eigenbasis every step for the first k steps (0 = off)",
+                )
+                .opt("ranks", "2", "world size for --backend distributed (self-spawns workers)")
+                .opt(
+                    "rank",
+                    "",
+                    "manual-launch worker mode: this process's rank (with --coordinator-addr)",
+                )
+                .opt(
+                    "coordinator-addr",
+                    "",
+                    "rendezvous address for manually launched distributed ranks",
+                )
+                .opt(
+                    "dist-timeout",
+                    "30000",
+                    "distributed peer-failure timeout, milliseconds",
+                )
+                .opt("dist-transport", "tcp", "distributed wire: tcp (mem is API-only)")
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("log-every", "10", "log every k steps (0 = silent)")
                 .opt(
@@ -107,26 +142,74 @@ fn app() -> App {
 }
 
 fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
-    let rc = RunConfig::from_args(args)?;
+    let mut rc = RunConfig::from_args(args)?;
     if args.flag("dump-config") {
         print!("{}", rc.dump());
         return Ok(());
     }
-    println!(
-        "train: model={} optimizer={} backend={} lr={} steps={} f={} accum={} refresh={}",
-        rc.model,
-        rc.optimizer.name(),
-        rc.backend.name(),
-        rc.lr,
-        rc.steps,
-        rc.precond_freq,
-        rc.grad_accum,
-        if rc.async_refresh { "async" } else { "inline" }
-    );
+    // Distributed roles. A worker rank (--rank N>0, spawned by the
+    // coordinator or launched manually) is quiet: rank 0 owns the banner,
+    // the step log, the summary, the checkpoint, and the metrics files.
+    // Each rank still writes its OWN trace file (the recorder is
+    // per-process), so workers suffix theirs with the rank.
+    let worker_rank = match rc.backend {
+        Backend::Distributed { .. } => rc.dist_rank.filter(|&r| r > 0),
+        _ => None,
+    };
+    let quiet = worker_rank.is_some();
+    if let Some(r) = worker_rank {
+        rc.log_every = 0;
+        rc.save = None;
+        rc.jsonl_out = None;
+        rc.metrics_out = None;
+        rc.trace_out = rc.trace_out.take().map(|p| format!("{p}.rank{r}"));
+    }
+    if !quiet {
+        println!(
+            "train: model={} optimizer={} backend={} lr={} steps={} f={} accum={} refresh={}",
+            rc.model,
+            rc.optimizer.name(),
+            rc.backend.name(),
+            rc.lr,
+            rc.steps,
+            rc.precond_freq,
+            rc.grad_accum,
+            if rc.async_refresh { "async" } else { "inline" }
+        );
+    }
+    let mut builder = rc.session_builder()?;
+    // Coordinator side of the distributed backend: bind the rendezvous
+    // listener BEFORE spawning or building, so workers never dial a
+    // not-yet-listening address. Self-spawn mode (no --rank) replays this
+    // process's argv into `ranks-1` children with `--rank R
+    // --coordinator-addr ADDR` appended; manual mode (--rank 0) binds the
+    // user-supplied address and waits for externally launched peers.
+    let mut guard: Option<ChildGuard> = None;
+    if let Backend::Distributed { ranks, .. } = rc.resolved_backend() {
+        if worker_rank.is_none() {
+            let bind = match (&rc.dist_rank, &rc.coordinator_addr) {
+                (Some(0), Some(addr)) => addr.clone(),
+                _ => "127.0.0.1:0".to_string(),
+            };
+            let listener = std::net::TcpListener::bind(&bind)
+                .map_err(|e| anyhow::anyhow!("binding rendezvous listener on {bind}: {e}"))?;
+            let addr = listener.local_addr()?.to_string();
+            if rc.dist_rank.is_none() {
+                let argv: Vec<String> = std::env::args().skip(1).collect();
+                guard = Some(spawn_workers(ranks, &addr, &argv)?);
+            }
+            builder = builder.dist(DistOptions {
+                rank: 0,
+                ranks,
+                timeout: Duration::from_millis(rc.dist_timeout_ms),
+                endpoint: DistEndpoint::Tcp { coordinator: addr, listener: Some(listener) },
+            });
+        }
+    }
     // One seam: validation, artifact preflight, and checkpoint resume
     // (params + optimizer state + schedule step + data cursor together)
     // all happen inside build().
-    let mut session = rc.session_builder()?.build()?;
+    let mut session = builder.build()?;
     if let Some(path) = &rc.jsonl_out {
         let file = std::fs::File::create(path)
             .map_err(|e| anyhow::anyhow!("--jsonl-out {path}: {e}"))?;
@@ -134,42 +217,50 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
         session.add_sink(Box::new(sink));
     }
     if let Some(path) = &rc.resume {
-        println!(
-            "resumed from {path} at step {} ({} steps remaining)",
-            session.current_step(),
-            session.total_steps() - session.current_step()
-        );
+        if !quiet {
+            println!(
+                "resumed from {path} at step {} ({} steps remaining)",
+                session.current_step(),
+                session.total_steps() - session.current_step()
+            );
+        }
     }
 
     let log = session.run()?;
-    println!(
-        "\nfinal loss {:.4} (tail {:.4})  entropy floor {:.4}",
-        log.final_loss(),
-        log.tail_loss(20),
-        session.entropy_floor()
-    );
-    println!(
-        "throughput {:.0} tok/s   optimizer overhead {:.1}%   state {} bytes   scratch {} bytes",
-        log.tokens_per_second(),
-        100.0 * log.optimizer_overhead_frac(),
-        session.state_bytes(),
-        session.scratch_bytes()
-    );
+    if !quiet {
+        println!(
+            "\nfinal loss {:.4} (tail {:.4})  entropy floor {:.4}",
+            log.final_loss(),
+            log.tail_loss(20),
+            session.entropy_floor()
+        );
+        println!(
+            "throughput {:.0} tok/s   optimizer overhead {:.1}%   state {} bytes   scratch {} bytes",
+            log.tokens_per_second(),
+            100.0 * log.optimizer_overhead_frac(),
+            session.state_bytes(),
+            session.scratch_bytes()
+        );
+    }
     session.wait_refresh_idle(); // count refreshes still in flight at the end
-    println!(
-        "refresh: hot-path {:.3}s  background {:.3}s  mean staleness {:.1} steps  p99 step {:.1}ms",
-        log.refresh_seconds_total(),
-        session.async_refresh_seconds(),
-        log.mean_staleness(),
-        1e3 * log.step_time_quantile(0.99),
-    );
+    if !quiet {
+        println!(
+            "refresh: hot-path {:.3}s  background {:.3}s  mean staleness {:.1} steps  p99 step {:.1}ms",
+            log.refresh_seconds_total(),
+            session.async_refresh_seconds(),
+            log.mean_staleness(),
+            1e3 * log.step_time_quantile(0.99),
+        );
+    }
 
     if let Some(path) = &rc.save {
         session.save_checkpoint(path)?;
         println!("checkpoint saved to {path}");
     }
     if let Some(path) = &rc.trace_out {
-        println!("chrome trace written to {path}");
+        if !quiet {
+            println!("chrome trace written to {path}");
+        }
     }
     if let Some(path) = &rc.metrics_out {
         let text = soap_lab::telemetry::metrics::registry().prometheus();
@@ -177,11 +268,22 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("writing metrics snapshot to {path}: {e}"))?;
         println!("metrics snapshot written to {path}");
     }
+    // The session (and its sockets) must outlive the workers' final
+    // collectives; drop it only after they exit. A worker that died with a
+    // nonzero status turns into an error here, AFTER rank 0's own work —
+    // its checkpoint, if requested, is already safely on disk.
+    drop(session);
+    if let Some(g) = guard {
+        g.wait_all()?;
+    }
     Ok(())
 }
 
 fn cmd_sweep_lr(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
     let mut rc = RunConfig::from_args(args)?;
+    if matches!(rc.backend, Backend::Distributed { .. }) {
+        anyhow::bail!("sweep-lr drives in-process sessions; use --backend serial|sharded|pjrt");
+    }
     println!("lr sweep for {} on {}", rc.optimizer.name(), rc.model);
     let mut best: Option<(f32, f32)> = None;
     for &lr in &soap_lab::config::DEFAULT_LRS {

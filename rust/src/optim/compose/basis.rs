@@ -23,7 +23,7 @@ use super::workspace::{Scratch, Workspace};
 use super::{Basis, BasisState, StateLayout};
 use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
 use crate::optim::hyper::{Hyper, RefreshMethod};
-use crate::precond::{BasisHandle, BasisPayload, RefreshService};
+use crate::precond::{BasisHandle, BasisPayload, DistBasisPort, RefreshService};
 
 /// Process-wide basis id counter: gives every refreshable basis a stable
 /// per-layer tag for trace spans without threading layer indices through
@@ -146,6 +146,16 @@ pub struct EigenBasis {
     /// Async refresh plumbing (`None` ⇒ inline refreshes).
     service: Option<Arc<RefreshService>>,
     handle: Option<Arc<BasisHandle>>,
+    /// Distributed refresh ownership. `None` = not distributed (every rank
+    /// refreshes locally); `Some(true)` = this rank runs the refresh and
+    /// mirror-publishes it for broadcast; `Some(false)` = a peer owns the
+    /// refresh and this basis only adopts broadcast publications.
+    dist_owned: Option<bool>,
+    /// Highest published version this basis may adopt. Shared with the
+    /// distributed executor, which raises it only after a publication has
+    /// been broadcast to (or received from) every peer — so no rank's active
+    /// basis can run ahead of the others within a step.
+    adopt_cap: Option<Arc<AtomicU64>>,
     pub adopted_version: u64,
     /// Step whose factors back the ACTIVE basis (staleness = t − this).
     pub basis_step: u64,
@@ -188,6 +198,8 @@ impl EigenBasis {
             refresh_secs: 0.0,
             service: None,
             handle: None,
+            dist_owned: None,
+            adopt_cap: None,
             adopted_version: 0,
             basis_step: 0,
             trace_id: next_basis_id(),
@@ -212,6 +224,8 @@ impl EigenBasis {
             refresh_secs: 0.0,
             service: None,
             handle: None,
+            dist_owned: None,
+            adopt_cap: None,
             adopted_version: 0,
             basis_step: 0,
             trace_id: next_basis_id(),
@@ -391,6 +405,13 @@ impl EigenBasis {
         }
         if let Some(published) = handle.latest() {
             if published.version > self.adopted_version {
+                // Distributed: never adopt a publication the executor hasn't
+                // finished broadcasting — peers must see it the same step.
+                if let Some(cap) = &self.adopt_cap {
+                    if published.version > cap.load(Ordering::Acquire) {
+                        return;
+                    }
+                }
                 match self.flavor {
                     EigenFlavor::Rotation => {
                         if let Some(q) = &published.payload.left {
@@ -487,17 +508,45 @@ impl EigenBasis {
         }
     }
 
-    /// Refresh now, routing through the service when attached.
+    /// Refresh now, routing through the service when attached. Under
+    /// distributed ownership a non-owning rank skips the work entirely (it
+    /// adopts the owner's broadcast instead), while the owner's inline path
+    /// mirror-publishes the fresh basis so the executor can ship it.
     fn refresh_or_enqueue(&mut self, t: u64) {
+        if self.dist_owned == Some(false) {
+            return;
+        }
         match (self.service.clone(), self.handle.clone()) {
             (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
-            _ => self.refresh_inline(t),
+            _ => {
+                self.refresh_inline(t);
+                if self.dist_owned == Some(true) {
+                    if let Some(handle) = self.handle.clone() {
+                        let payload = BasisPayload {
+                            left: self.left_q.clone(),
+                            right: self.right_q.clone(),
+                            left_aux: self.l_vecs.clone(),
+                            right_aux: self.r_vecs.clone(),
+                        };
+                        // The inline write above already installed the basis;
+                        // fast-forwarding `adopted_version` stops this rank
+                        // from re-adopting its own publication.
+                        self.adopted_version = handle.publish(payload, t);
+                    }
+                }
+            }
         }
     }
 }
 
 impl Basis for EigenBasis {
     fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
+        // Pure-Adam ramp: no statistics, no init, no refresh — the basis
+        // stays in its pre-init state (identity projection) and the first
+        // post-warmup gradient seeds it fresh.
+        if t <= self.h.adam_warmup_steps {
+            return;
+        }
         match self.flavor {
             EigenFlavor::Rotation => {
                 if !self.initialized {
@@ -532,6 +581,9 @@ impl Basis for EigenBasis {
 
     fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         if self.flavor != EigenFlavor::Rotation {
+            return;
+        }
+        if t <= self.h.adam_warmup_steps {
             return;
         }
         // Factor EMAs + periodic basis refresh AFTER the step, per Alg 3.
@@ -600,6 +652,38 @@ impl Basis for EigenBasis {
         self.handle = Some(Arc::new(BasisHandle::new()));
         self.adopted_version = 0;
         true
+    }
+
+    fn attach_dist(&mut self, owned: bool) -> Vec<DistBasisPort> {
+        if self.l.is_none() && self.r.is_none() {
+            return Vec::new(); // both sides identity ⇒ nothing to broadcast
+        }
+        // Reuse the async-attached handle when present; otherwise the inline
+        // path still needs one as the broadcast mailbox.
+        let handle = match &self.handle {
+            Some(h) => Arc::clone(h),
+            None => {
+                let h = Arc::new(BasisHandle::new());
+                self.handle = Some(Arc::clone(&h));
+                h
+            }
+        };
+        let cap = Arc::new(AtomicU64::new(handle.version()));
+        self.adopt_cap = Some(Arc::clone(&cap));
+        self.dist_owned = Some(owned);
+        vec![DistBasisPort { handle, adopt_cap: cap }]
+    }
+
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        // Shampoo's inline periodic refresh feeds the SAME step's update, so
+        // a distributed run must exchange the owner's fresh roots mid-step.
+        // Every term below is replicated state — all ranks agree.
+        self.flavor == EigenFlavor::InverseRoot
+            && self.dist_owned.is_some()
+            && self.service.is_none()
+            && self.initialized
+            && t > self.h.adam_warmup_steps
+            && self.h.is_refresh_step(t)
     }
 
     fn adopt_pending(&mut self) {
@@ -919,6 +1003,24 @@ impl Basis for AnyBasis {
             AnyBasis::Eigen(b) => b.attach_async(service),
             AnyBasis::GradSvd(b) => b.attach_async(service),
             AnyBasis::TensorEigen(b) => b.attach_async(service),
+        }
+    }
+
+    fn attach_dist(&mut self, owned: bool) -> Vec<DistBasisPort> {
+        match self {
+            AnyBasis::Identity(b) => b.attach_dist(owned),
+            AnyBasis::Eigen(b) => b.attach_dist(owned),
+            AnyBasis::GradSvd(b) => b.attach_dist(owned),
+            AnyBasis::TensorEigen(b) => b.attach_dist(owned),
+        }
+    }
+
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        match self {
+            AnyBasis::Identity(b) => b.dist_mid_step_sync(t),
+            AnyBasis::Eigen(b) => b.dist_mid_step_sync(t),
+            AnyBasis::GradSvd(b) => b.dist_mid_step_sync(t),
+            AnyBasis::TensorEigen(b) => b.dist_mid_step_sync(t),
         }
     }
 

@@ -73,7 +73,7 @@ use std::sync::Arc;
 use crate::linalg::Matrix;
 use crate::optim::hyper::Hyper;
 use crate::optim::LayerOptimizer;
-use crate::precond::RefreshService;
+use crate::precond::{DistBasisPort, RefreshService};
 
 /// Serialized basis component: flag scalars + tensors, in the basis's
 /// canonical order. [`Composed`] assembles these into the wire layout.
@@ -168,6 +168,27 @@ pub trait Basis: Send {
     /// `false` when there is nothing to refresh.
     fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
         let _ = service;
+        false
+    }
+
+    /// Place this basis under distributed refresh ownership. `owned` says
+    /// whether THIS rank runs the layer's periodic refreshes (publishing
+    /// them for broadcast) or adopts a peer's broadcasts. Returns one
+    /// [`DistBasisPort`] per refreshable component in a deterministic order
+    /// (the wire address is `(layer_idx, port_idx)`); empty when there is
+    /// nothing to broadcast — such a basis refreshes locally as usual.
+    fn attach_dist(&mut self, owned: bool) -> Vec<DistBasisPort> {
+        let _ = owned;
+        Vec::new()
+    }
+
+    /// True when step `t`'s refresh runs inline and feeds the SAME step's
+    /// update (Shampoo's inverse-root flavor), so a distributed run must
+    /// exchange the owner's publication mid-step, before non-owning ranks
+    /// compute their direction. Must be a pure function of replicated state
+    /// — every rank evaluates it with the same result.
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        let _ = t;
         false
     }
 
@@ -556,6 +577,14 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
 
     fn attach_async(&mut self, service: &Arc<RefreshService>) -> bool {
         self.basis.attach_async(service)
+    }
+
+    fn attach_dist(&mut self, owned: bool) -> Vec<DistBasisPort> {
+        self.basis.attach_dist(owned)
+    }
+
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        self.basis.dist_mid_step_sync(t)
     }
 
     fn finish_pending(&mut self) {

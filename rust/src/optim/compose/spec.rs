@@ -18,7 +18,8 @@ use crate::optim::{LayerOptimizer, OptKind};
 
 /// One-line grammar summary, embedded in parse errors and `--help`.
 pub const GRAMMAR_HELP: &str = "basis=<identity|eigen[:one-sided|:two-sided]|svd>,\
-inner=<adam|adafactor|shampoo>[,graft=<adam|none>]";
+inner=<adam|adafactor|shampoo>[,graft=<adam|none>]\
+[,adam-warmup=<steps>][,precond-warmup=<steps>]";
 
 /// Side selection for an eigenbasis spec. `Inherit` defers to
 /// `Hyper::one_sided` (the `--one-sided` flag).
@@ -60,6 +61,13 @@ pub struct CompositionSpec {
     pub basis: BasisSpec,
     pub inner: EngineSpec,
     pub graft: GraftSpec,
+    /// Pure-Adam ramp length (`Hyper::adam_warmup_steps`). `None` inherits
+    /// whatever the surrounding config set — the spec only overrides when
+    /// the key is spelled out.
+    pub adam_warmup: Option<u64>,
+    /// Refresh-every-step early-phase length (`Hyper::precondition_warmup`);
+    /// `None` inherits.
+    pub precond_warmup: Option<u64>,
 }
 
 impl CompositionSpec {
@@ -68,6 +76,8 @@ impl CompositionSpec {
         let mut basis = BasisSpec::Identity;
         let mut inner: Option<EngineSpec> = None;
         let mut graft = GraftSpec::Inherit;
+        let mut adam_warmup: Option<u64> = None;
+        let mut precond_warmup: Option<u64> = None;
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             let (key, value) = part.split_once('=').ok_or_else(|| {
                 anyhow::anyhow!(
@@ -112,6 +122,16 @@ impl CompositionSpec {
                         }
                     };
                 }
+                "adam-warmup" | "adam_warmup" => {
+                    adam_warmup = Some(value.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("adam-warmup expects a step count, got '{value}'")
+                    })?);
+                }
+                "precond-warmup" | "precond_warmup" | "precondition-warmup" => {
+                    precond_warmup = Some(value.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("precond-warmup expects a step count, got '{value}'")
+                    })?);
+                }
                 other => anyhow::bail!(
                     "unknown composition key '{other}': expected {GRAMMAR_HELP}"
                 ),
@@ -119,7 +139,7 @@ impl CompositionSpec {
         }
         let inner = inner
             .ok_or_else(|| anyhow::anyhow!("composition spec needs inner=…; {GRAMMAR_HELP}"))?;
-        let spec = Self { basis, inner, graft };
+        let spec = Self { basis, inner, graft, adam_warmup, precond_warmup };
         spec.validate()?;
         Ok(spec)
     }
@@ -178,6 +198,12 @@ impl CompositionSpec {
                 GraftSpec::Inherit => {}
             }
         }
+        if let Some(w) = self.adam_warmup {
+            h.adam_warmup_steps = w;
+        }
+        if let Some(w) = self.precond_warmup {
+            h.precondition_warmup = w;
+        }
     }
 
     /// The preset this spec is exactly equivalent to, if any. Canonical specs
@@ -220,6 +246,12 @@ impl CompositionSpec {
             GraftSpec::Inherit => {}
             GraftSpec::Adam => s.push_str(",graft=adam"),
             GraftSpec::Off => s.push_str(",graft=none"),
+        }
+        if let Some(w) = self.adam_warmup {
+            s.push_str(&format!(",adam-warmup={w}"));
+        }
+        if let Some(w) = self.precond_warmup {
+            s.push_str(&format!(",precond-warmup={w}"));
         }
         s
     }
@@ -378,6 +410,34 @@ mod tests {
 
         let s = CompositionSpec::parse("inner=adafactor").unwrap();
         assert_eq!(s.canonical(), Some(OptKind::Adafactor));
+    }
+
+    #[test]
+    fn warmup_keys_parse_apply_and_roundtrip() {
+        let s =
+            CompositionSpec::parse("basis=eigen,inner=adam,adam-warmup=50,precond-warmup=9")
+                .unwrap();
+        assert_eq!(s.adam_warmup, Some(50));
+        assert_eq!(s.precond_warmup, Some(9));
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert_eq!(h.adam_warmup_steps, 50);
+        assert_eq!(h.precondition_warmup, 9);
+        // spec_string → parse is lossless.
+        let back = CompositionSpec::parse(&s.spec_string()).unwrap();
+        assert_eq!(back, s);
+        // Omitted keys inherit: apply must not clobber config-set values.
+        let s = CompositionSpec::parse("basis=eigen,inner=adam").unwrap();
+        assert_eq!(s.adam_warmup, None);
+        let mut h = Hyper::default().with_adam_warmup(7).with_precondition_warmup(3);
+        s.apply(&mut h);
+        assert_eq!(h.adam_warmup_steps, 7);
+        assert_eq!(h.precondition_warmup, 3);
+        // A malformed count is a named error.
+        let e = CompositionSpec::parse("basis=eigen,inner=adam,adam-warmup=soon")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("step count"), "{e}");
     }
 
     #[test]

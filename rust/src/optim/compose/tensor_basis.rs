@@ -26,6 +26,7 @@
 //! [`BasisHandle`]: modes publish and are adopted independently, so a slow
 //! large-mode decomposition never delays a cheap small-mode refresh.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -35,7 +36,7 @@ use super::{Basis, BasisState, StateLayout};
 use crate::linalg::tensor::{mode_apply_into, mode_gram, mode_gram_into};
 use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
 use crate::optim::hyper::{Hyper, RefreshMethod};
-use crate::precond::{BasisHandle, BasisPayload, RefreshService};
+use crate::precond::{BasisHandle, BasisPayload, DistBasisPort, RefreshService};
 
 /// Per-mode eigenbasis (rank-3+ tensors). One factor EMA, one published
 /// basis matrix, and (for the inverse-root flavor) one warm-start
@@ -59,6 +60,13 @@ pub struct TensorEigenBasis {
     service: Option<Arc<RefreshService>>,
     handles: Vec<Option<Arc<BasisHandle>>>,
     adopted: Vec<u64>,
+    /// Distributed refresh ownership for the whole layer (see the 2-D
+    /// basis): `Some(false)` skips local refreshes, `Some(true)` mirrors
+    /// inline refreshes into the per-mode handles for broadcast.
+    dist_owned: Option<bool>,
+    /// Per-mode adoption caps (aligned with `handles`), raised by the
+    /// distributed executor once each publication has been exchanged.
+    adopt_caps: Vec<Option<Arc<AtomicU64>>>,
     /// Step whose factor snapshot backs each mode's ACTIVE basis.
     mode_steps: Vec<u64>,
 }
@@ -97,6 +105,8 @@ impl TensorEigenBasis {
             service: None,
             handles: (0..r).map(|_| None).collect(),
             adopted: vec![0; r],
+            dist_owned: None,
+            adopt_caps: (0..r).map(|_| None).collect(),
             mode_steps: vec![0; r],
         }
     }
@@ -251,9 +261,29 @@ impl TensorEigenBasis {
     }
 
     fn refresh_or_enqueue(&mut self, t: u64) {
+        if self.dist_owned == Some(false) {
+            return; // a peer owns this layer's refresh; adopt its broadcast
+        }
         match self.service.clone() {
             Some(service) => self.enqueue_refresh(&service, t),
-            None => self.refresh_inline(t),
+            None => {
+                self.refresh_inline(t);
+                if self.dist_owned == Some(true) {
+                    // Mirror each mode's fresh basis into its handle so the
+                    // executor can ship it; fast-forwarding `adopted` stops
+                    // this rank from re-adopting its own publication.
+                    for k in 0..self.dims.len() {
+                        let Some(handle) = &self.handles[k] else { continue };
+                        let payload = BasisPayload {
+                            left: self.qs[k].clone(),
+                            right: None,
+                            left_aux: self.vecs[k].clone(),
+                            right_aux: None,
+                        };
+                        self.adopted[k] = handle.publish(payload, t);
+                    }
+                }
+            }
         }
     }
 
@@ -269,6 +299,13 @@ impl TensorEigenBasis {
             }
             if let Some(published) = handle.latest() {
                 if published.version > self.adopted[k] {
+                    // Distributed: never adopt a publication the executor
+                    // hasn't finished broadcasting to every peer.
+                    if let Some(cap) = &self.adopt_caps[k] {
+                        if published.version > cap.load(Ordering::Acquire) {
+                            continue;
+                        }
+                    }
                     if let Some(q) = &published.payload.left {
                         self.qs[k] = Some(q.clone());
                     }
@@ -336,6 +373,11 @@ impl TensorEigenBasis {
 
 impl Basis for TensorEigenBasis {
     fn begin_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
+        // Pure-Adam ramp: no statistics, no init, no refresh (see the 2-D
+        // basis for the convention).
+        if t <= self.h.adam_warmup_steps {
+            return;
+        }
         match self.flavor {
             EigenFlavor::Rotation => {
                 if !self.initialized {
@@ -364,6 +406,9 @@ impl Basis for TensorEigenBasis {
 
     fn end_step(&mut self, g: &Matrix, t: u64, ws: &mut Workspace) {
         if self.flavor != EigenFlavor::Rotation {
+            return;
+        }
+        if t <= self.h.adam_warmup_steps {
             return;
         }
         // Per-mode factor EMAs + periodic refresh AFTER the step (Alg 3).
@@ -404,6 +449,45 @@ impl Basis for TensorEigenBasis {
             self.adopted[k] = 0;
         }
         true
+    }
+
+    fn attach_dist(&mut self, owned: bool) -> Vec<DistBasisPort> {
+        if !self.any_active() {
+            return Vec::new(); // every mode capped ⇒ nothing to broadcast
+        }
+        // One port per active mode, in mode order — the deterministic
+        // ordering `(layer_idx, port_idx)` wire addresses rely on. Reuse
+        // async-attached handles when present.
+        let mut ports = Vec::new();
+        for k in 0..self.dims.len() {
+            if self.factors[k].is_none() {
+                continue;
+            }
+            let handle = match &self.handles[k] {
+                Some(h) => Arc::clone(h),
+                None => {
+                    let h = Arc::new(BasisHandle::new());
+                    self.handles[k] = Some(Arc::clone(&h));
+                    h
+                }
+            };
+            let cap = Arc::new(AtomicU64::new(handle.version()));
+            self.adopt_caps[k] = Some(Arc::clone(&cap));
+            ports.push(DistBasisPort { handle, adopt_cap: cap });
+        }
+        self.dist_owned = Some(owned);
+        ports
+    }
+
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        // Shampoo's inline periodic refresh feeds the SAME step's update —
+        // see the 2-D basis. Every term is replicated state.
+        self.flavor == EigenFlavor::InverseRoot
+            && self.dist_owned.is_some()
+            && self.service.is_none()
+            && self.initialized
+            && t > self.h.adam_warmup_steps
+            && self.h.is_refresh_step(t)
     }
 
     fn adopt_pending(&mut self) {

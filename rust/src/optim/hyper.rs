@@ -91,6 +91,16 @@ pub struct Hyper {
     pub refresh_workers: usize,
     /// GaLore update-scale α (appendix B; 1.0 for the full-rank version).
     pub galore_scale: f32,
+    /// Pure-Adam ramp: while `t ≤ adam_warmup_steps` the eigenbasis neither
+    /// accumulates factor statistics nor refreshes, so SOAP/Shampoo run
+    /// exactly AdamW math (identity basis) and the first basis is built
+    /// fresh from the first post-warmup gradient. 0 (default) disables.
+    pub adam_warmup_steps: u64,
+    /// Refresh-every-step early phase: while `t ≤ precondition_warmup`
+    /// every step is a refresh step regardless of `precond_freq`, matching
+    /// the production recipe of keeping the basis exact while statistics
+    /// are still moving fast. 0 (default) disables.
+    pub precondition_warmup: u64,
 }
 
 impl Default for Hyper {
@@ -115,6 +125,8 @@ impl Default for Hyper {
             stagger_refresh: true,
             refresh_workers: 2,
             galore_scale: 1.0,
+            adam_warmup_steps: 0,
+            precondition_warmup: 0,
         }
     }
 }
@@ -163,8 +175,23 @@ impl Hyper {
         self.stagger_refresh = false;
         self
     }
-    /// Does step `t` (1-based) hit this layer's refresh phase?
+    /// Pure-Adam ramp length (steps before the eigenbasis starts).
+    pub fn with_adam_warmup(mut self, steps: u64) -> Self {
+        self.adam_warmup_steps = steps;
+        self
+    }
+    /// Refresh-every-step early-phase length.
+    pub fn with_precondition_warmup(mut self, steps: u64) -> Self {
+        self.precondition_warmup = steps;
+        self
+    }
+    /// Does step `t` (1-based) hit this layer's refresh phase? Every step
+    /// inside the `precondition_warmup` window refreshes regardless of the
+    /// phase schedule.
     pub fn is_refresh_step(&self, t: u64) -> bool {
+        if t <= self.precondition_warmup {
+            return true;
+        }
         let f = self.precond_freq.max(1);
         t % f == self.refresh_phase % f
     }
@@ -215,5 +242,25 @@ mod tests {
         // Phase ≥ f wraps.
         let h = Hyper::default().with_freq(4).with_refresh_phase(6);
         assert!(h.is_refresh_step(2) && h.is_refresh_step(6));
+    }
+
+    #[test]
+    fn precondition_warmup_refreshes_every_early_step() {
+        let h = Hyper::default().with_freq(10).with_precondition_warmup(5);
+        for t in 1..=5 {
+            assert!(h.is_refresh_step(t), "step {t} inside the warmup must refresh");
+        }
+        assert!(!h.is_refresh_step(6));
+        assert!(h.is_refresh_step(10));
+    }
+
+    #[test]
+    fn warmup_builders_default_off() {
+        let h = Hyper::default();
+        assert_eq!(h.adam_warmup_steps, 0);
+        assert_eq!(h.precondition_warmup, 0);
+        let h = h.with_adam_warmup(50).with_precondition_warmup(9);
+        assert_eq!(h.adam_warmup_steps, 50);
+        assert_eq!(h.precondition_warmup, 9);
     }
 }

@@ -106,6 +106,26 @@ pub trait LayerOptimizer: Send {
         false
     }
 
+    /// Place this layer's preconditioner refreshes under distributed
+    /// ownership: `owned` says whether THIS rank runs them (publishing each
+    /// result for broadcast) or adopts a peer's broadcasts instead. Returns
+    /// one [`crate::precond::DistBasisPort`] per refreshable component, in a
+    /// deterministic order shared by every rank — empty (the default) for
+    /// optimizers with nothing to broadcast, which keep refreshing locally.
+    fn attach_dist(&mut self, owned: bool) -> Vec<crate::precond::DistBasisPort> {
+        let _ = owned;
+        Vec::new()
+    }
+
+    /// True when step `t`'s refresh runs inline and feeds the SAME step's
+    /// update, so a distributed run must exchange the owner's publication
+    /// mid-step (before non-owning ranks compute their direction). Must be a
+    /// pure function of state replicated on every rank.
+    fn dist_mid_step_sync(&self, t: u64) -> bool {
+        let _ = t;
+        false
+    }
+
     /// Fold in any async-refresh result that has been published but not yet
     /// adopted (adoption normally happens at the next `update`). The
     /// checkpoint path calls this — after the refresh service is drained —

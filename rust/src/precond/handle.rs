@@ -56,6 +56,24 @@ pub struct BasisHandle {
     in_flight: AtomicBool,
 }
 
+/// A distributed executor's grip on one refreshable basis (one per active
+/// mode): the publication mailbox plus the adoption cap the executor raises
+/// once a publication has been broadcast to (or received from) every peer.
+/// Ports are handed out by `attach_dist` in a deterministic per-layer order,
+/// which is what makes `(layer_idx, port_idx)` a valid wire address.
+#[derive(Clone, Debug)]
+pub struct DistBasisPort {
+    pub handle: Arc<BasisHandle>,
+    pub adopt_cap: Arc<AtomicU64>,
+}
+
+impl DistBasisPort {
+    /// Allow adoption of every publication up to and including `version`.
+    pub fn raise_cap(&self, version: u64) {
+        self.adopt_cap.fetch_max(version, Ordering::AcqRel);
+    }
+}
+
 impl BasisHandle {
     pub fn new() -> Self {
         Self::default()

@@ -31,7 +31,7 @@
 pub mod handle;
 pub mod service;
 
-pub use handle::{BasisHandle, BasisPayload, PublishedBasis};
+pub use handle::{BasisHandle, BasisPayload, DistBasisPort, PublishedBasis};
 pub use service::{RefreshService, RefreshStats};
 
 /// How a layer's periodic preconditioner recompute is executed.

@@ -8,8 +8,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::sink::LayerHealth;
+use super::sink::{LayerHealth, RankHealth};
 use crate::coordinator::{PjrtOptimizer, ShardedOptimizer};
+use crate::dist::Transport;
 use crate::linalg::{Matrix, TensorShape};
 use crate::optim::{Hyper, LayerOptimizer, OptKind, RefreshMode};
 use crate::precond::RefreshService;
@@ -30,18 +31,34 @@ pub enum Backend {
     Sharded,
     /// Per-layer PJRT artifacts (SOAP/AdamW through the L1 Pallas kernels).
     Pjrt,
+    /// Multi-process SPMD executor: `ranks` workers average gradients via an
+    /// order-preserving fold-reduce and partition eigenbasis refreshes by
+    /// layer ownership. Bitwise-identical to [`Backend::Serial`]
+    /// (inline / drained-async refresh modes).
+    Distributed {
+        /// World size (≥ 2).
+        ranks: usize,
+        /// Wire between ranks: localhost TCP processes or in-process
+        /// channel threads.
+        transport: Transport,
+    },
 }
 
 /// The backend names accepted by [`Backend::parse`], embedded in errors.
-pub const BACKEND_NAMES: &str = "serial, sharded, pjrt";
+pub const BACKEND_NAMES: &str = "serial, sharded, pjrt, distributed";
 
 impl Backend {
     /// Parse a CLI/config token. Errors enumerate the valid values.
+    /// `distributed` defaults to 2 TCP ranks; `--ranks`/`--dist-transport`
+    /// (or the config keys) override.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "serial" => Backend::Serial,
             "sharded" | "native" => Backend::Sharded,
             "pjrt" => Backend::Pjrt,
+            "distributed" | "dist" => {
+                Backend::Distributed { ranks: 2, transport: Transport::Tcp }
+            }
             other => anyhow::bail!("unknown backend '{other}': expected one of {BACKEND_NAMES}"),
         })
     }
@@ -51,6 +68,7 @@ impl Backend {
             Backend::Serial => "serial",
             Backend::Sharded => "sharded",
             Backend::Pjrt => "pjrt",
+            Backend::Distributed { .. } => "distributed",
         }
     }
 }
@@ -96,10 +114,17 @@ pub trait ExecutorBackend {
     }
 
     /// Per-layer optimizer health at step `t`, layer-ordered. `grad_norm`
-    /// is left 0.0 — the session fills it in from the gradients it owns.
-    /// Empty when the backend has no per-layer introspection (PJRT).
+    /// is left `None` — the session fills it in from the gradients it owns.
+    /// Fields a backend cannot observe stay `None` (never a fake 0.0);
+    /// empty when there is no per-layer introspection at all.
     fn collect_layer_health(&self, _t: u64) -> Vec<LayerHealth> {
         Vec::new()
+    }
+
+    /// This rank's distributed-health row (ownership + traffic counters).
+    /// `None` on single-process backends.
+    fn dist_rank_health(&self) -> Option<RankHealth> {
+        None
     }
 
     /// Background refresh-service queue depth (0 without a service).
@@ -222,7 +247,7 @@ impl ExecutorBackend for SerialExecutor {
             .enumerate()
             .map(|(layer, slot)| LayerHealth {
                 layer,
-                grad_norm: 0.0,
+                grad_norm: None,
                 update_norm: slot.update_norm(),
                 staleness: slot.basis_snapshot_step().map(|snap| t.saturating_sub(snap)),
                 whitening_offdiag: slot.whitening_offdiag(),
@@ -366,11 +391,12 @@ impl ExecutorBackend for ShardedExecutor {
 /// gradient artifacts).
 pub struct PjrtExecutor {
     inner: PjrtOptimizer,
+    n_layers: usize,
 }
 
 impl PjrtExecutor {
     pub fn new(kind: OptKind, hyper: Hyper, shapes: &[(usize, usize)]) -> Result<Self> {
-        Ok(Self { inner: PjrtOptimizer::new(kind, hyper, shapes)? })
+        Ok(Self { inner: PjrtOptimizer::new(kind, hyper, shapes)?, n_layers: shapes.len() })
     }
 }
 
@@ -398,6 +424,15 @@ impl ExecutorBackend for PjrtExecutor {
 
     fn refresh_seconds(&self) -> f64 {
         self.inner.refresh_secs
+    }
+
+    fn collect_layer_health(&self, _t: u64) -> Vec<LayerHealth> {
+        // The compiled artifacts expose no per-layer introspection: emit one
+        // row per layer with every observable `None` so downstream consumers
+        // see an explicit "unsupported" rather than fabricated zeros.
+        (0..self.n_layers)
+            .map(|layer| LayerHealth { layer, ..LayerHealth::default() })
+            .collect()
     }
 
     fn export_state(&self) -> Result<Vec<(usize, Vec<Matrix>)>> {
@@ -428,8 +463,13 @@ mod tests {
         assert_eq!(Backend::parse("serial").unwrap(), Backend::Serial);
         assert_eq!(Backend::parse("SHARDED").unwrap(), Backend::Sharded);
         assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert_eq!(
+            Backend::parse("distributed").unwrap(),
+            Backend::Distributed { ranks: 2, transport: Transport::Tcp }
+        );
+        assert_eq!(Backend::parse("dist").unwrap().name(), "distributed");
         let e = Backend::parse("gpu").unwrap_err().to_string();
-        for name in ["serial", "sharded", "pjrt"] {
+        for name in ["serial", "sharded", "pjrt", "distributed"] {
             assert!(e.contains(name), "{e}");
         }
     }

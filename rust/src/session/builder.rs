@@ -5,7 +5,10 @@
 //! `RunConfig::validate` plus the PJRT artifact preflight); and yields a
 //! [`TrainSession`] with a uniform lifecycle.
 
+use std::net::TcpListener;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -15,6 +18,7 @@ use super::TrainSession;
 use crate::coordinator::pjrt_optim::preflight;
 use crate::coordinator::{init_lm_params, Checkpoint, GradBackend};
 use crate::data::{BatchStream, CorpusSpec};
+use crate::dist::{DistComm, DistExecutor, MemEndpoint};
 use crate::linalg::TensorShape;
 use crate::model::{self, NplmConfig};
 use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
@@ -95,6 +99,31 @@ enum ResumeSource {
     Loaded(Checkpoint),
 }
 
+/// How one rank of a [`Backend::Distributed`] session reaches its peers.
+pub enum DistEndpoint {
+    /// Rendezvous over localhost TCP. Rank 0 should pass its pre-bound
+    /// listener (bind BEFORE spawning workers so no child races the
+    /// coordinator socket); workers pass `None` and dial `coordinator`.
+    Tcp { coordinator: String, listener: Option<TcpListener> },
+    /// A pre-built in-process channel endpoint from
+    /// [`crate::dist::MemCluster`] (tests, single-process experiments).
+    Mem(MemEndpoint),
+}
+
+/// Per-rank wiring for the distributed backend, attached with
+/// [`SessionBuilder::dist`]. The CLI assembles this from
+/// `--ranks/--rank/--coordinator-addr/--dist-timeout`.
+pub struct DistOptions {
+    /// This process's rank in `0..ranks`.
+    pub rank: usize,
+    /// World size; must equal the backend's `ranks`.
+    pub ranks: usize,
+    /// How long any collective waits on a peer before raising a typed
+    /// [`crate::dist::DistError`] (dead/hung worker detection).
+    pub timeout: Duration,
+    pub endpoint: DistEndpoint,
+}
+
 /// Builder for [`TrainSession`] — see the [`crate::session`] module docs for
 /// a worked example. Every knob has the paper-default value; only `model`
 /// is required.
@@ -117,6 +146,7 @@ pub struct SessionBuilder {
     telemetry: bool,
     metrics_every: u64,
     trace_out: Option<PathBuf>,
+    dist: Option<DistOptions>,
 }
 
 impl Default for SessionBuilder {
@@ -146,6 +176,7 @@ impl SessionBuilder {
             telemetry: false,
             metrics_every: 10,
             trace_out: None,
+            dist: None,
         }
     }
 
@@ -273,6 +304,13 @@ impl SessionBuilder {
         self
     }
 
+    /// REQUIRED with [`Backend::Distributed`]: this rank's wiring (rank id,
+    /// world size, peer timeout, transport endpoint).
+    pub fn dist(mut self, opts: DistOptions) -> Self {
+        self.dist = Some(opts);
+        self
+    }
+
     /// The hyperparameters as the optimizer will actually see them — with a
     /// composition spec's structural overrides folded in.
     fn resolved_hyper(&self) -> Hyper {
@@ -325,7 +363,58 @@ impl SessionBuilder {
                 "checkpoint resume requires a native backend (serial/sharded)"
             );
         }
+        if let Backend::Distributed { ranks, .. } = self.backend {
+            anyhow::ensure!(ranks >= 2, "the distributed backend needs ranks ≥ 2");
+            anyhow::ensure!(
+                matches!(model, ModelSpec::Nplm { .. }),
+                "the distributed backend runs native models (each PJRT engine is \
+                 process-local; artifact models are not supported across ranks)"
+            );
+            let opts = self.dist.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "the distributed backend needs per-rank wiring: call \
+                     SessionBuilder::dist (the CLI assembles it from \
+                     --ranks/--rank/--coordinator-addr)"
+                )
+            })?;
+            anyhow::ensure!(
+                opts.ranks == ranks,
+                "DistOptions declares {} ranks but the backend says {ranks}",
+                opts.ranks
+            );
+            anyhow::ensure!(
+                opts.rank < ranks,
+                "rank {} is out of range for a {ranks}-rank run",
+                opts.rank
+            );
+        } else {
+            anyhow::ensure!(
+                self.dist.is_none(),
+                "DistOptions are set but the backend is {} — pass Backend::Distributed",
+                self.backend.name()
+            );
+        }
         Ok(())
+    }
+
+    /// FNV-1a over the canonical run-configuration string: every rank's
+    /// rendezvous hello carries this, so a worker launched with a different
+    /// optimizer/model/schedule is rejected up front instead of silently
+    /// diverging mid-run.
+    fn config_fingerprint(opt: &OptKind, label: &str, parts: &[u64]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(format!("{opt:?}").as_bytes());
+        eat(label.as_bytes());
+        for p in parts {
+            eat(&p.to_le_bytes());
+        }
+        h
     }
 
     /// Validate, load what the configuration needs (artifact engine +
@@ -352,6 +441,7 @@ impl SessionBuilder {
             telemetry,
             metrics_every,
             trace_out,
+            mut dist,
         } = self;
         let model = model.expect("validated");
         // The span recorder and instrument gates are process-global; the
@@ -395,6 +485,7 @@ impl SessionBuilder {
             1,
         );
 
+        let mut dist_comm: Option<Arc<DistComm>> = None;
         let exec: Box<dyn ExecutorBackend> = match backend {
             Backend::Serial => Box::new(SerialExecutor::new_tensors(opt, &hyper, &tensor_shapes)),
             Backend::Sharded => {
@@ -406,6 +497,38 @@ impl SessionBuilder {
                 };
                 preflight(engine, opt, &hyper, &shapes)?;
                 Box::new(PjrtExecutor::new(opt, hyper.clone(), &shapes)?)
+            }
+            Backend::Distributed { ranks, .. } => {
+                let opts = dist.take().expect("validated: dist options present");
+                let fp = Self::config_fingerprint(
+                    &opt,
+                    &model.label(),
+                    &[
+                        steps,
+                        seed,
+                        batch as u64,
+                        grad_accum as u64,
+                        seq as u64,
+                        ranks as u64,
+                        hyper.precond_freq as u64,
+                        (hyper.refresh_mode == RefreshMode::Async) as u64,
+                        drain_refresh as u64,
+                    ],
+                );
+                let comm = match opts.endpoint {
+                    DistEndpoint::Tcp { coordinator, listener } => DistComm::connect_tcp(
+                        opts.rank,
+                        ranks,
+                        &coordinator,
+                        listener,
+                        opts.timeout,
+                        fp,
+                    )?,
+                    DistEndpoint::Mem(ep) => DistComm::connect_mem(ep, opts.timeout)?,
+                };
+                let comm = Arc::new(comm);
+                dist_comm = Some(Arc::clone(&comm));
+                Box::new(DistExecutor::new_tensors(opt, &hyper, &tensor_shapes, comm, drain_refresh))
             }
         };
 
@@ -435,6 +558,7 @@ impl SessionBuilder {
             telemetry,
             metrics_every,
             trace_out,
+            dist: dist_comm,
         };
         if let Some(src) = resume {
             let ck = match src {
@@ -521,6 +645,51 @@ mod tests {
         // run() is budget-based: a second call is a no-op at the budget.
         let log2 = s.run().unwrap();
         assert!(log2.losses.is_empty());
+    }
+
+    #[test]
+    fn distributed_wiring_validated_up_front() {
+        use crate::dist::MemCluster;
+        let dist_backend = Backend::Distributed { ranks: 2, transport: crate::dist::Transport::Mem };
+        // Missing DistOptions.
+        let e = native_builder().backend(dist_backend).validate().unwrap_err().to_string();
+        assert!(e.contains("--rank"), "{e}");
+        // World-size mismatch between backend and options.
+        let ep = MemCluster::new(3).pop().unwrap();
+        let e = native_builder()
+            .backend(dist_backend)
+            .dist(DistOptions {
+                rank: 2,
+                ranks: 3,
+                timeout: Duration::from_secs(1),
+                endpoint: DistEndpoint::Mem(ep),
+            })
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("3 ranks"), "{e}");
+        // Options on a non-distributed backend.
+        let ep = MemCluster::new(2).pop().unwrap();
+        let e = native_builder()
+            .backend(Backend::Serial)
+            .dist(DistOptions {
+                rank: 1,
+                ranks: 2,
+                timeout: Duration::from_secs(1),
+                endpoint: DistEndpoint::Mem(ep),
+            })
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("serial"), "{e}");
+        // Artifact models cannot run distributed.
+        let e = TrainSession::builder()
+            .model(ModelSpec::artifact("nano"))
+            .backend(dist_backend)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("native"), "{e}");
     }
 
     #[test]

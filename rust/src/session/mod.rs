@@ -41,15 +41,21 @@
 //!
 //! ## Backend matrix
 //!
-//! | backend   | gradients        | optimizer updates          | checkpoint |
-//! |-----------|------------------|----------------------------|------------|
-//! | `Serial`  | native or PJRT   | this thread, layer order   | yes        |
-//! | `Sharded` | native or PJRT   | cost-balanced worker pool  | yes        |
-//! | `Pjrt`    | PJRT artifacts   | compiled Pallas kernels    | no         |
+//! | backend       | gradients        | optimizer updates            | checkpoint |
+//! |---------------|------------------|------------------------------|------------|
+//! | `Serial`      | native or PJRT   | this thread, layer order     | yes        |
+//! | `Sharded`     | native or PJRT   | cost-balanced worker pool    | yes        |
+//! | `Pjrt`        | PJRT artifacts   | compiled Pallas kernels      | no         |
+//! | `Distributed` | native, SPMD     | replicated; refreshes owned  | yes (rank 0) |
 //!
 //! `Serial` and `Sharded` are bitwise-interchangeable; both are
 //! bitwise-identical to the pre-redesign `Trainer` paths
 //! (`rust/tests/session.rs` pins this for adamw/soap/shampoo).
+//! `Distributed` splits each batch's microbatches across ranks, averages
+//! gradients with an order-preserving fold-reduce, and partitions eigenbasis
+//! refreshes by layer ownership — also bitwise-identical to `Serial` in
+//! inline / drained-async refresh modes, and rank 0's checkpoint is
+//! format-identical to a serial checkpoint (any backend resumes it).
 //!
 //! ## Resume semantics
 //!
@@ -72,9 +78,10 @@ pub mod sink;
 mod train;
 
 pub use backend::{Backend, ExecutorBackend, PjrtExecutor, SerialExecutor, ShardedExecutor};
-pub use builder::{ModelSpec, SessionBuilder};
+pub use builder::{DistEndpoint, DistOptions, ModelSpec, SessionBuilder};
 pub use sink::{
-    CollectSink, HealthSnapshot, JsonlSink, LayerHealth, MetricsSink, StdoutSink, StepRecord,
+    CollectSink, HealthSnapshot, JsonlSink, LayerHealth, MetricsSink, RankHealth, StdoutSink,
+    StepRecord,
 };
 pub use train::TrainSession;
 

@@ -26,8 +26,10 @@ pub struct StepRecord<'a> {
 pub struct LayerHealth {
     /// Layer index in executor order (matches checkpoint layer order).
     pub layer: usize,
-    /// Frobenius norm of this step's (accumulated) gradient.
-    pub grad_norm: f64,
+    /// Frobenius norm of this step's (accumulated) gradient. `None` when the
+    /// backend cannot measure it (PJRT holds gradients device-side) — an
+    /// explicit "unsupported" marker, never a fake `0.0`.
+    pub grad_norm: Option<f64>,
     /// Frobenius norm of the last preconditioned update direction, when the
     /// optimizer exposes one (composed optimizers do; PJRT does not).
     pub update_norm: Option<f64>,
@@ -38,6 +40,33 @@ pub struct LayerHealth {
     /// moment `QᵀLQ` (0 = perfectly diagonal), sampled at the most recent
     /// refresh. `None` until first sampled or for basis-free optimizers.
     pub whitening_offdiag: Option<f64>,
+}
+
+/// One rank's row in a distributed health snapshot: refresh-ownership
+/// distribution plus communicator traffic. Gathered from every worker on the
+/// metrics cadence; empty (`HealthSnapshot::ranks`) outside the distributed
+/// backend.
+#[derive(Clone, Debug, Default)]
+pub struct RankHealth {
+    pub rank: usize,
+    /// Layers whose eigenbasis refreshes this rank owns.
+    pub owned_layers: usize,
+    /// Basis publications this rank has broadcast so far — the observable
+    /// proof that refreshes actually execute on non-zero ranks.
+    pub owned_refreshes: u64,
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// Cumulative wall-clock seconds this rank spent inside the gradient
+    /// fold-reduce (send + wait + local adds).
+    pub allreduce_s: f64,
+}
+
+impl RankHealth {
+    pub fn new(rank: usize) -> Self {
+        Self { rank, ..Self::default() }
+    }
 }
 
 /// A periodic optimizer-health sample (every `metrics_every` steps when
@@ -63,6 +92,9 @@ pub struct HealthSnapshot {
     pub pool_jobs: Option<u64>,
     pub pool_busy_s: Option<f64>,
     pub layers: Vec<LayerHealth>,
+    /// Per-rank rows (distributed backend only; empty elsewhere). Rank 0
+    /// gathers one row from every worker on the metrics cadence.
+    pub ranks: Vec<RankHealth>,
 }
 
 /// Streaming consumer of training metrics.
@@ -153,14 +185,14 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
             .map(|l| {
                 Json::obj(vec![
                     ("layer", Json::num(l.layer as f64)),
-                    ("grad_norm", num_or_null(l.grad_norm)),
+                    ("grad_norm", opt_num(l.grad_norm)),
                     ("update_norm", opt_num(l.update_norm)),
                     ("staleness", opt_num(l.staleness.map(|s| s as f64))),
                     ("whitening_offdiag", opt_num(l.whitening_offdiag)),
                 ])
             })
             .collect::<Vec<_>>();
-        let line = Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("health")),
             ("step", Json::num(health.step as f64)),
             ("queue_depth", Json::num(health.queue_depth as f64)),
@@ -171,8 +203,27 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
             ("pool_jobs", opt_num(health.pool_jobs.map(|j| j as f64))),
             ("pool_busy_s", opt_num(health.pool_busy_s)),
             ("layers", Json::Arr(layers)),
-        ]);
-        let _ = writeln!(self.out, "{}", line.dump());
+        ];
+        if !health.ranks.is_empty() {
+            let ranks = health
+                .ranks
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("rank", Json::num(r.rank as f64)),
+                        ("owned_layers", Json::num(r.owned_layers as f64)),
+                        ("owned_refreshes", Json::num(r.owned_refreshes as f64)),
+                        ("frames_sent", Json::num(r.frames_sent as f64)),
+                        ("frames_recv", Json::num(r.frames_recv as f64)),
+                        ("bytes_sent", Json::num(r.bytes_sent as f64)),
+                        ("bytes_recv", Json::num(r.bytes_recv as f64)),
+                        ("allreduce_s", num_or_null(r.allreduce_s)),
+                    ])
+                })
+                .collect::<Vec<_>>();
+            fields.push(("ranks", Json::Arr(ranks)));
+        }
+        let _ = writeln!(self.out, "{}", Json::obj(fields).dump());
     }
 
     fn on_complete(&mut self, _log: &TrainLog) {
@@ -256,13 +307,23 @@ mod tests {
                 layers: vec![
                     LayerHealth {
                         layer: 0,
-                        grad_norm: 2.0,
+                        grad_norm: Some(2.0),
                         update_norm: Some(0.25),
                         staleness: Some(3),
                         whitening_offdiag: Some(0.125),
                     },
-                    LayerHealth { layer: 1, grad_norm: 1.0, ..Default::default() },
+                    LayerHealth { layer: 1, ..Default::default() },
                 ],
+                ranks: vec![RankHealth {
+                    rank: 1,
+                    owned_layers: 4,
+                    owned_refreshes: 9,
+                    frames_sent: 100,
+                    frames_recv: 90,
+                    bytes_sent: 4096,
+                    bytes_recv: 2048,
+                    allreduce_s: 0.25,
+                }],
             };
             sink.on_health(&h);
         }
@@ -277,6 +338,24 @@ mod tests {
         assert_eq!(layers[0].get("staleness").as_f64(), Some(3.0));
         assert_eq!(layers[0].get("whitening_offdiag").as_f64(), Some(0.125));
         assert_eq!(layers[1].get("update_norm"), &Json::Null);
+        // Backend-unsupported grad_norm is an explicit null, not a fake 0.0.
+        assert_eq!(layers[1].get("grad_norm"), &Json::Null);
+        let ranks = v.get("ranks").as_arr().unwrap();
+        assert_eq!(ranks.len(), 1);
+        assert_eq!(ranks[0].get("rank").as_f64(), Some(1.0));
+        assert_eq!(ranks[0].get("owned_refreshes").as_f64(), Some(9.0));
+        assert_eq!(ranks[0].get("allreduce_s").as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn jsonl_health_omits_ranks_outside_distributed() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf);
+            sink.on_health(&HealthSnapshot { step: 1, ..Default::default() });
+        }
+        let v = Json::parse(String::from_utf8(buf).unwrap().trim()).unwrap();
+        assert_eq!(v.get("ranks"), &Json::Null, "single-process runs must not emit a ranks array");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! first-class `checkpoint()`/resume.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -12,6 +13,7 @@ use super::backend::ExecutorBackend;
 use super::sink::{HealthSnapshot, MetricsSink, StepRecord};
 use crate::coordinator::{Checkpoint, GradBackend, StepTiming, TrainLog};
 use crate::data::{Batch, BatchStream, CorpusSpec};
+use crate::dist::{microbatch_slice, DistComm};
 use crate::linalg::{Matrix, TensorShape};
 use crate::model;
 use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
@@ -59,6 +61,11 @@ pub struct TrainSession {
     pub(super) metrics_every: u64,
     /// Where `run()` writes the Chrome trace-event JSON, if anywhere.
     pub(super) trace_out: Option<PathBuf>,
+    /// The communicator when this session is one rank of a distributed run
+    /// (`Backend::Distributed`); `None` on single-process backends. Drives
+    /// the microbatch split + gradient fold-reduce in [`Self::step`] and the
+    /// health gather in `emit_health`.
+    pub(super) dist: Option<Arc<DistComm>>,
 }
 
 impl TrainSession {
@@ -133,25 +140,39 @@ impl TrainSession {
         timing.data_s = t0.elapsed().as_secs_f64();
         drop(span_data);
 
-        // Gradient accumulation: mean over microbatches.
+        // Gradient accumulation: mean over microbatches. Distributed runs
+        // split the microbatch list into contiguous per-rank slices and
+        // reproduce the serial fold-left bracketing through the
+        // order-preserving fold-reduce chain — the sum every rank gets back
+        // is BITWISE the sum this loop would have produced serially.
         let span_grad = crate::telemetry::span("step.grad", "step");
         let t0 = Instant::now();
-        let mut loss_acc = 0.0f64;
-        let mut grads: Option<Vec<Matrix>> = None;
-        for mb in &micro {
-            let (loss, g) = self.grads_for(mb)?;
-            loss_acc += loss as f64;
-            grads = Some(match grads.take() {
-                None => g,
-                Some(mut acc) => {
-                    for (a, b) in acc.iter_mut().zip(&g) {
-                        a.axpy_inplace(1.0, b);
+        let (loss_acc, mut grads) = if let Some(comm) = self.dist.clone() {
+            let (start, count) = microbatch_slice(comm.rank(), comm.nranks(), micro.len());
+            let mut local = Vec::with_capacity(count);
+            for mb in &micro[start..start + count] {
+                let (loss, g) = self.grads_for(mb)?;
+                local.push((loss as f64, g));
+            }
+            comm.fold_all_reduce(local, self.params.len())?
+        } else {
+            let mut loss_acc = 0.0f64;
+            let mut grads: Option<Vec<Matrix>> = None;
+            for mb in &micro {
+                let (loss, g) = self.grads_for(mb)?;
+                loss_acc += loss as f64;
+                grads = Some(match grads.take() {
+                    None => g,
+                    Some(mut acc) => {
+                        for (a, b) in acc.iter_mut().zip(&g) {
+                            a.axpy_inplace(1.0, b);
+                        }
+                        acc
                     }
-                    acc
-                }
-            });
-        }
-        let mut grads = grads.ok_or_else(|| anyhow!("no microbatches"))?;
+                });
+            }
+            (loss_acc, grads.ok_or_else(|| anyhow!("no microbatches"))?)
+        };
         if micro.len() > 1 {
             let s = 1.0 / micro.len() as f32;
             for g in &mut grads {
@@ -218,9 +239,29 @@ impl TrainSession {
         let mut layers = self.exec.collect_layer_health(t);
         for lh in layers.iter_mut() {
             if let Some(g) = grads.get(lh.layer) {
-                lh.grad_norm = g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt();
+                lh.grad_norm =
+                    Some(g.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt());
             }
         }
+        // Distributed: gather every rank's ownership/traffic row. This is a
+        // COLLECTIVE — all ranks reach it at the same metrics step (same
+        // config ⇒ same cadence), sinks or no sinks. A gather failure here
+        // must not kill the step (health is advisory); the next all-reduce
+        // surfaces the typed error if a peer is really gone.
+        let ranks = match &self.dist {
+            Some(comm) => {
+                let local = self.exec.dist_rank_health().unwrap_or_default();
+                match comm.gather_health(&local) {
+                    Ok(Some(rows)) => rows,
+                    Ok(None) => Vec::new(),
+                    Err(e) => {
+                        eprintln!("warning: distributed health gather failed: {e}");
+                        Vec::new()
+                    }
+                }
+            }
+            None => Vec::new(),
+        };
         let queue_depth = self.exec.refresh_queue_depth();
         crate::telemetry::metrics::refresh_queue_depth().set(queue_depth as f64);
         let (pool_jobs, pool_busy_s) = match self.exec.refresh_pool_stats() {
@@ -238,6 +279,7 @@ impl TrainSession {
             pool_jobs,
             pool_busy_s,
             layers,
+            ranks,
         };
         for sink in &mut self.sinks {
             sink.on_health(&health);

@@ -333,6 +333,39 @@ pub fn refresh_queue_depth() -> &'static Gauge {
     G.get_or_init(|| registry().gauge("soap_refresh_queue_depth"))
 }
 
+/// Distributed-protocol frames sent by this process (all ranks share the
+/// registry under the mem transport; per-rank attribution lives in the
+/// communicator's own counters → `HealthSnapshot::ranks`).
+pub fn dist_frames_sent_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_dist_frames_sent_total"))
+}
+
+/// Distributed-protocol frames received by this process.
+pub fn dist_frames_recv_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_dist_frames_recv_total"))
+}
+
+/// Distributed-protocol payload bytes sent by this process.
+pub fn dist_bytes_sent_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_dist_bytes_sent_total"))
+}
+
+/// Distributed-protocol payload bytes received by this process.
+pub fn dist_bytes_recv_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_dist_bytes_recv_total"))
+}
+
+/// Wall-clock seconds one rank spent inside the gradient fold-reduce
+/// (send + receive + add, per step).
+pub fn dist_allreduce_seconds() -> &'static Histogram {
+    static H: OnceLock<&'static Histogram> = OnceLock::new();
+    H.get_or_init(|| registry().histogram("soap_dist_allreduce_seconds"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,208 @@
+//! Multi-process distributed tests through the real CLI binary
+//! (`CARGO_BIN_EXE_soap-lab`): the TCP transport, the coordinator's
+//! self-spawn launcher, manual `--rank/--coordinator-addr` launch, and the
+//! dead-peer failure path. The in-process mem-transport pins live in
+//! `dist_golden`; this file is about processes and sockets.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_soap-lab")
+}
+
+fn run(args: &[&str]) -> Output {
+    Command::new(bin()).args(args).output().expect("spawning soap-lab")
+}
+
+fn assert_success(out: &Output, label: &str) {
+    assert!(
+        out.status.success(),
+        "{label} failed (status {:?})\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("soap_dist_proc_{}_{name}", std::process::id()))
+}
+
+/// Shared training flags — everything except backend/launch wiring, so the
+/// serial reference and the distributed runs are configured identically.
+fn train_flags(ckpt: &Path, steps: &str) -> Vec<String> {
+    [
+        "train",
+        "--model",
+        "nplm-tiny",
+        "--optimizer",
+        "soap",
+        "--lr",
+        "0.02",
+        "--steps",
+        steps,
+        "--seed",
+        "3",
+        "--precond-freq",
+        "4",
+        "--grad-accum",
+        "3",
+        "--workers",
+        "2",
+        "--log-every",
+        "0",
+        "--save",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .chain([ckpt.display().to_string()])
+    .collect()
+}
+
+/// The headline end-to-end path: `--backend distributed --ranks 3` makes the
+/// coordinator spawn two worker processes, rendezvous over localhost TCP,
+/// train, and write a rank-0 checkpoint that is BYTE-identical to the serial
+/// backend's — then a serial run resumes it.
+#[test]
+fn self_spawned_three_rank_train_checkpoint_resume() {
+    let dist_ckpt = tmp("self_spawn.ckpt");
+    let serial_ckpt = tmp("serial_ref.ckpt");
+
+    let mut args = train_flags(&dist_ckpt, "8");
+    args.extend(["--backend", "distributed", "--ranks", "3"].map(String::from));
+    let out = run(&args.iter().map(String::as_str).collect::<Vec<_>>());
+    assert_success(&out, "3-rank self-spawned train");
+    assert!(dist_ckpt.exists(), "coordinator wrote no checkpoint");
+
+    let mut args = train_flags(&serial_ckpt, "8");
+    args.extend(["--backend", "serial"].map(String::from));
+    let out = run(&args.iter().map(String::as_str).collect::<Vec<_>>());
+    assert_success(&out, "serial reference train");
+
+    // Uniform checkpoint semantics, the strong form: not just resumable,
+    // but the same bytes — same params, same optimizer state, same cursor.
+    let a = std::fs::read(&dist_ckpt).unwrap();
+    let b = std::fs::read(&serial_ckpt).unwrap();
+    assert_eq!(a, b, "distributed rank-0 checkpoint differs from the serial checkpoint");
+    std::fs::remove_file(&serial_ckpt).ok();
+
+    // Any backend resumes any backend's checkpoint: serial picks it up.
+    let resume_ckpt = tmp("resumed.ckpt");
+    let mut args = train_flags(&resume_ckpt, "12");
+    args.extend(["--backend", "serial", "--resume"].map(String::from));
+    args.push(dist_ckpt.display().to_string());
+    let out = run(&args.iter().map(String::as_str).collect::<Vec<_>>());
+    assert_success(&out, "serial resume of distributed checkpoint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("resumed from") && stdout.contains("at step 8"),
+        "resume banner missing: {stdout}"
+    );
+    std::fs::remove_file(&dist_ckpt).ok();
+    std::fs::remove_file(&resume_ckpt).ok();
+}
+
+fn wait_with_deadline(mut child: Child, secs: u64, label: &str) -> Output {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if child.try_wait().expect("try_wait").is_some() {
+            return child.wait_with_output().unwrap();
+        }
+        if Instant::now() > deadline {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("{label}: still running after {secs}s — dead-peer detection failed");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Kill a worker mid-run (manual two-rank launch): the coordinator must fail
+/// FAST with the typed distributed error — not hang, not write a checkpoint.
+#[test]
+fn killing_a_rank_fails_the_run_cleanly() {
+    // Reserve a port for the rendezvous address, then release it for rank 0.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+
+    let ckpt = tmp("killed.ckpt");
+    // A step budget far beyond what can finish before the kill lands.
+    let base = train_flags(&ckpt, "500000");
+    let spawn = |rank: &str| -> Child {
+        let mut args = base.clone();
+        args.extend(
+            ["--backend", "distributed", "--ranks", "2", "--dist-timeout", "8000", "--rank"]
+                .map(String::from),
+        );
+        args.push(rank.to_string());
+        args.extend(["--coordinator-addr".to_string(), addr.clone()]);
+        Command::new(bin())
+            .args(&args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawning rank")
+    };
+
+    let coordinator = spawn("0");
+    let mut worker = spawn("1");
+    // Let rendezvous complete and training get going, then kill the worker.
+    std::thread::sleep(Duration::from_millis(1500));
+    worker.kill().expect("killing worker");
+    worker.wait().ok();
+
+    let out = wait_with_deadline(coordinator, 60, "coordinator");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "coordinator exited cleanly despite a dead worker\nstderr: {stderr}"
+    );
+    assert!(
+        stderr.contains("distributed error on rank 0"),
+        "expected the typed DistError surface, got: {stderr}"
+    );
+    assert!(!ckpt.exists(), "a failed run must not leave a checkpoint behind");
+}
+
+/// A worker whose coordinator never shows up times out with a rendezvous
+/// error instead of wedging.
+#[test]
+fn worker_without_coordinator_times_out() {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe); // nobody ever listens here
+
+    let ckpt = tmp("orphan.ckpt");
+    let mut args = train_flags(&ckpt, "8");
+    args.extend(
+        [
+            "--backend",
+            "distributed",
+            "--ranks",
+            "2",
+            "--dist-timeout",
+            "2000",
+            "--rank",
+            "1",
+        ]
+        .map(String::from),
+    );
+    args.extend(["--coordinator-addr".to_string(), addr]);
+    let child = Command::new(bin())
+        .args(&args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning orphan worker");
+    let out = wait_with_deadline(child, 30, "orphan worker");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "orphan worker should fail\nstderr: {stderr}");
+    assert!(
+        stderr.contains("rendezvous") || stderr.contains("distributed error"),
+        "expected a rendezvous-phase error, got: {stderr}"
+    );
+    assert!(!ckpt.exists());
+}

@@ -155,7 +155,7 @@ fn health_snapshots_reach_sinks_with_per_layer_metrics() {
     // Every SOAP layer has an eigenbasis: per-layer (not just mean)
     // staleness and an update norm must be reported for each.
     for l in &last.layers {
-        assert!(l.grad_norm > 0.0, "layer {}: zero grad norm", l.layer);
+        assert!(l.grad_norm.unwrap_or(0.0) > 0.0, "layer {}: zero grad norm", l.layer);
         assert!(l.update_norm.is_some(), "layer {}: no update norm", l.layer);
         assert!(l.staleness.is_some(), "layer {}: no staleness", l.layer);
     }
