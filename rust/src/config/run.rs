@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use crate::coordinator::TrainerConfig;
 use crate::dist::Transport;
-use crate::optim::{Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
+use crate::optim::{GuardPolicy, Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
 use crate::session::{Backend, DistEndpoint, DistOptions, ModelSpec, SessionBuilder, TrainSession};
 use crate::util::cli::Args;
 
@@ -29,10 +29,11 @@ pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, see
 precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
 max-precond-dim, merge-dims, adam-warmup, precond-warmup, ranks, rank, \
 coordinator-addr, dist-timeout, dist-transport, artifacts, log-every, \
-metrics-every, trace-out, metrics-out, jsonl-out, save, resume, one-sided, \
-factorized, refresh-eigh, async-refresh, pjrt-optimizer, telemetry";
+metrics-every, trace-out, metrics-out, jsonl-out, save, resume, guard, \
+fault-plan, auto-resume, fault-attempt, one-sided, factorized, refresh-eigh, \
+async-refresh, pjrt-optimizer, telemetry";
 
-const VALUE_KEYS: [&str; 30] = [
+const VALUE_KEYS: [&str; 34] = [
     "model",
     "optimizer",
     "backend",
@@ -63,6 +64,10 @@ const VALUE_KEYS: [&str; 30] = [
     "jsonl-out",
     "save",
     "resume",
+    "guard",
+    "fault-plan",
+    "auto-resume",
+    "fault-attempt",
 ];
 
 const FLAG_KEYS: [&str; 6] =
@@ -130,6 +135,18 @@ pub struct RunConfig {
     pub resume: Option<String>,
     /// Write a checkpoint here after the run (empty = none).
     pub save: Option<String>,
+    /// Non-finite gradient/direction response (`Hyper::guard`).
+    pub guard: GuardPolicy,
+    /// Seeded fault-injection plan (`crate::fault::FaultPlan` grammar;
+    /// empty = none). Chaos testing only — never set on production runs.
+    pub fault_plan: Option<String>,
+    /// On a distributed peer failure, relaunch the workers from rank 0's
+    /// abort checkpoint up to this many times (0 = fail fast).
+    pub auto_resume: u32,
+    /// Which auto-resume relaunch this process is (0 = first attempt).
+    /// Internal plumbing — the coordinator appends it to relaunched worker
+    /// argv so one-shot fault clauses don't re-fire every attempt.
+    pub fault_attempt: u32,
 }
 
 impl Default for RunConfig {
@@ -168,6 +185,10 @@ impl Default for RunConfig {
             jsonl_out: None,
             resume: None,
             save: None,
+            guard: GuardPolicy::SkipStep,
+            fault_plan: None,
+            auto_resume: 0,
+            fault_attempt: 0,
         }
     }
 }
@@ -228,6 +249,10 @@ impl RunConfig {
             "jsonl-out" => self.jsonl_out = (!value.is_empty()).then(|| value.to_string()),
             "save" => self.save = (!value.is_empty()).then(|| value.to_string()),
             "resume" => self.resume = (!value.is_empty()).then(|| value.to_string()),
+            "guard" => self.guard = GuardPolicy::parse(value)?,
+            "fault-plan" => self.fault_plan = (!value.is_empty()).then(|| value.to_string()),
+            "auto-resume" => self.auto_resume = num(key, value)?,
+            "fault-attempt" => self.fault_attempt = num(key, value)?,
             "telemetry" => self.telemetry = parse_bool(key, value)?,
             "one-sided" => self.one_sided = parse_bool(key, value)?,
             "factorized" => self.factorized = parse_bool(key, value)?,
@@ -303,9 +328,14 @@ impl RunConfig {
         s.push_str(&format!("log-every={}\n", self.log_every));
         s.push_str(&format!("telemetry={}\n", self.telemetry));
         s.push_str(&format!("metrics-every={}\n", self.metrics_every));
+        s.push_str(&format!("guard={}\n", self.guard.name()));
+        if let Some(plan) = &self.fault_plan {
+            s.push_str(&format!("fault-plan={plan}\n"));
+        }
+        s.push_str(&format!("auto-resume={}\n", self.auto_resume));
         // trace-out / metrics-out / jsonl-out are run actions like
         // save/resume: pass them per invocation, don't bake output paths
-        // into a config file.
+        // into a config file. fault-attempt is internal relaunch plumbing.
         s
     }
 
@@ -387,6 +417,16 @@ impl RunConfig {
     /// of rules for the CLI and the API). Pure — touches no files.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.lr > 0.0 && self.lr < 1.0, "lr out of range (0, 1)");
+        // A malformed fault plan fails at launch, not mid-run.
+        if let Some(plan) = &self.fault_plan {
+            crate::fault::FaultPlan::parse(plan)
+                .map_err(|e| anyhow::anyhow!("fault-plan: {e:#}"))?;
+        }
+        anyhow::ensure!(
+            self.auto_resume == 0 || matches!(self.backend, Backend::Distributed { .. }),
+            "--auto-resume recovers from distributed peer failures; it needs \
+             --backend distributed"
+        );
         anyhow::ensure!(
             self.warmup < self.steps || self.warmup == 0,
             "warmup must be < steps"
@@ -480,6 +520,9 @@ impl RunConfig {
         if let Some(path) = &self.resume {
             b = b.resume_from(path);
         }
+        if let Some(plan) = &self.fault_plan {
+            b = b.fault_plan(plan, self.fault_attempt);
+        }
         Ok(b)
     }
 
@@ -495,6 +538,7 @@ impl RunConfig {
             refresh_workers: self.refresh_workers,
             adam_warmup_steps: self.adam_warmup,
             precondition_warmup: self.precond_warmup,
+            guard: self.guard,
             ..Hyper::default()
         };
         // A composition spec's structural choices (side selection, factored
@@ -563,6 +607,15 @@ mod tests {
         rc.backend = Backend::Pjrt;
         rc.save = Some("run.ckpt".into());
         assert!(rc.validate().is_err());
+        // A malformed fault plan fails at launch, not mid-run.
+        let mut rc = RunConfig::default();
+        rc.fault_plan = Some("drop-frame=2.0".into());
+        assert!(rc.validate().is_err());
+        // --auto-resume is a distributed recovery knob.
+        let mut rc = RunConfig::default();
+        rc.auto_resume = 2;
+        let e = rc.validate().unwrap_err().to_string();
+        assert!(e.contains("distributed"), "{e}");
     }
 
     #[test]
@@ -711,6 +764,8 @@ mod tests {
         rc.log_every = 5;
         rc.telemetry = true;
         rc.metrics_every = 7;
+        rc.guard = GuardPolicy::Clip(2.5);
+        rc.fault_plan = Some("seed=3;drop-frame=0.1".into());
         rc.validate().unwrap();
 
         let mut back = RunConfig::default();
@@ -730,6 +785,9 @@ mod tests {
         assert_eq!(back.ranks, rc.ranks);
         assert_eq!(back.dist_timeout_ms, rc.dist_timeout_ms);
         assert_eq!(back.dist_transport, rc.dist_transport);
+        assert_eq!(back.guard, rc.guard);
+        assert_eq!(back.fault_plan, rc.fault_plan);
+        assert_eq!(back.auto_resume, rc.auto_resume);
         // The acceptance bar: the resolved Hyper is IDENTICAL.
         let (ha, hb) = (rc.hyper(), back.hyper());
         assert_eq!(format!("{ha:?}"), format!("{hb:?}"), "dump→load changed the Hyper");

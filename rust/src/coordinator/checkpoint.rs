@@ -187,10 +187,27 @@ impl Checkpoint {
                 write_matrix(&mut out, t);
             }
         }
-        // Write-then-rename for atomicity.
-        let tmp = path.as_ref().with_extension("tmp");
-        std::fs::write(&tmp, &out)?;
-        std::fs::rename(&tmp, path.as_ref())?;
+        // Write-then-rename for atomicity: a writer killed mid-write leaves
+        // only a `.tmp` sibling behind — the destination is either the old
+        // complete file or the new complete file, never a torn prefix. The
+        // tmp name APPENDS the suffix (rather than replacing the extension)
+        // so two checkpoints differing only in extension cannot share a tmp
+        // slot, and the bytes are fsynced before the rename so a crash right
+        // after `save` returns cannot surface a renamed-but-empty file.
+        let path = path.as_ref();
+        let tmp = {
+            let mut s = path.as_os_str().to_os_string();
+            s.push(".tmp");
+            std::path::PathBuf::from(s)
+        };
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(&out).with_context(|| format!("writing {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} into place"))?;
         Ok(())
     }
 
@@ -518,6 +535,31 @@ mod tests {
         assert_eq!((back.stream_batch, back.stream_seq), (16, 32));
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert!(back.param_dims.is_empty(), "v2 shapes unrecorded");
+    }
+
+    #[test]
+    fn interrupted_save_leaves_previous_checkpoint_intact() {
+        // Simulated mid-write kill: a torn prefix sitting in the `.tmp`
+        // slot must never affect the destination — the previous complete
+        // checkpoint stays loadable, the torn bytes are rejected if read
+        // directly, and the next save consumes the leftover tmp file.
+        let ck = sample();
+        let path = tmpfile("atomic");
+        ck.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let tmp = {
+            let mut s = path.as_os_str().to_os_string();
+            s.push(".tmp");
+            std::path::PathBuf::from(s)
+        };
+        std::fs::write(&tmp, &good[..good.len() / 3]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), good, "destination untouched by torn tmp");
+        Checkpoint::load(&path).unwrap();
+        assert!(Checkpoint::load(&tmp).is_err(), "torn prefix must be rejected, not misparsed");
+        ck.save(&path).unwrap();
+        assert!(!tmp.exists(), "successful save must consume the tmp file");
+        assert_eq!(std::fs::read(&path).unwrap(), good, "rewrite is byte-identical");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

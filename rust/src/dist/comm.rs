@@ -15,18 +15,27 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::frame::{
     self, BasisEntry, Cursor, FRAME_BARRIER, FRAME_BASIS_BATCH, FRAME_GRAD_CHUNK, FRAME_HEALTH,
-    FRAME_HELLO, FRAME_MESH_HELLO, FRAME_SCALARS, FRAME_SHUTDOWN, FRAME_TOPOLOGY,
+    FRAME_HEARTBEAT, FRAME_HELLO, FRAME_MESH_HELLO, FRAME_SCALARS, FRAME_SHUTDOWN, FRAME_TOPOLOGY,
 };
 use super::transport::{accept_deadline, connect_deadline, tcp_read_frame, tcp_write_frame};
 use super::transport::MemEndpoint;
 use super::{DistError, DistPhase};
 use crate::linalg::Matrix;
 use crate::session::RankHealth;
+
+/// Sequence number carried by heartbeat frames: heartbeats are pure
+/// liveness probes injected between protocol frames by the monitor thread,
+/// so they are exempt from the per-link ordering contract.
+pub const HEARTBEAT_SEQ: u32 = u32::MAX;
+
+/// Sequence number on rendezvous-phase frames, which are exchanged on raw
+/// streams before the per-link counters start (readers ignore it).
+const RENDEZVOUS_SEQ: u32 = 0;
 
 /// Contiguous microbatch slice owned by `rank` out of `k` total: the first
 /// `k % nranks` ranks take one extra. Returns `(start, count)`.
@@ -63,9 +72,31 @@ pub struct DistComm {
     timeout: Duration,
     wire: Wire,
     counters: Counters,
+    /// Per-peer next outgoing sequence number (heartbeats excluded).
+    send_seq: Vec<AtomicU64>,
+    /// Per-peer next expected incoming sequence number.
+    recv_seq: Vec<AtomicU64>,
+    /// Millis since `epoch` anything was last read from each peer —
+    /// heartbeat or data. Feeds the silence gauge.
+    last_heard: Vec<AtomicU64>,
+    epoch: Instant,
 }
 
 impl DistComm {
+    fn new_with_wire(rank: usize, nranks: usize, timeout: Duration, wire: Wire) -> Self {
+        Self {
+            rank,
+            nranks,
+            timeout,
+            wire,
+            counters: Counters::default(),
+            send_seq: (0..nranks).map(|_| AtomicU64::new(0)).collect(),
+            recv_seq: (0..nranks).map(|_| AtomicU64::new(0)).collect(),
+            last_heard: (0..nranks).map(|_| AtomicU64::new(0)).collect(),
+            epoch: Instant::now(),
+        }
+    }
+
     pub fn rank(&self) -> usize {
         self.rank
     }
@@ -84,13 +115,8 @@ impl DistComm {
                 "distributed backend needs at least 2 ranks",
             ));
         }
-        Ok(Self {
-            rank: endpoint.rank,
-            nranks: endpoint.nranks,
-            timeout,
-            wire: Wire::Mem(endpoint),
-            counters: Counters::default(),
-        })
+        let (rank, nranks) = (endpoint.rank, endpoint.nranks);
+        Ok(Self::new_with_wire(rank, nranks, timeout, Wire::Mem(endpoint)))
     }
 
     /// Full TCP rendezvous. Rank 0 owns `listener` (binding
@@ -139,7 +165,7 @@ impl DistComm {
                 let mut s = accept_deadline(&listener, deadline)
                     .map_err(|e| io(None, "waiting for workers to register", &e))?;
                 prep(&s).map_err(|e| io(None, "configuring worker socket", &e))?;
-                let (ty, payload) = tcp_read_frame(&mut s)
+                let (ty, _, payload) = tcp_read_frame(&mut s)
                     .map_err(|e| io(None, "reading worker hello", &e))?;
                 if ty != FRAME_HELLO {
                     return Err(io(None, "expected hello frame, got", &frame::frame_name(ty)));
@@ -177,7 +203,7 @@ impl DistComm {
             }
             for (r, link) in links.iter().enumerate().skip(1) {
                 let mut s = link.as_ref().unwrap().lock().unwrap();
-                tcp_write_frame(&mut s, FRAME_TOPOLOGY, &payload)
+                tcp_write_frame(&mut s, FRAME_TOPOLOGY, RENDEZVOUS_SEQ, &payload)
                     .map_err(|e| io(Some(r), "sending topology", &e))?;
             }
         } else {
@@ -195,9 +221,9 @@ impl DistComm {
             frame::put_u32(&mut hello, rank as u32);
             frame::put_u32(&mut hello, my_port);
             frame::put_u64(&mut hello, fingerprint);
-            tcp_write_frame(&mut coord, FRAME_HELLO, &hello)
+            tcp_write_frame(&mut coord, FRAME_HELLO, RENDEZVOUS_SEQ, &hello)
                 .map_err(|e| io(Some(0), "sending hello", &e))?;
-            let (ty, payload) =
+            let (ty, _, payload) =
                 tcp_read_frame(&mut coord).map_err(|e| io(Some(0), "reading topology", &e))?;
             if ty != FRAME_TOPOLOGY {
                 return Err(io(Some(0), "expected topology frame, got", &frame::frame_name(ty)));
@@ -219,7 +245,7 @@ impl DistComm {
                 prep(&s).map_err(|e| io(Some(j), "configuring mesh socket", &e))?;
                 let mut m = Vec::with_capacity(4);
                 frame::put_u32(&mut m, rank as u32);
-                tcp_write_frame(&mut s, FRAME_MESH_HELLO, &m)
+                tcp_write_frame(&mut s, FRAME_MESH_HELLO, RENDEZVOUS_SEQ, &m)
                     .map_err(|e| io(Some(j), "sending mesh hello", &e))?;
                 links[j] = Some(Mutex::new(s));
             }
@@ -227,7 +253,7 @@ impl DistComm {
                 let mut s = accept_deadline(&mesh_listener, deadline)
                     .map_err(|e| io(None, "waiting for higher-rank mesh peers", &e))?;
                 prep(&s).map_err(|e| io(None, "configuring mesh socket", &e))?;
-                let (ty, payload) =
+                let (ty, _, payload) =
                     tcp_read_frame(&mut s).map_err(|e| io(None, "reading mesh hello", &e))?;
                 if ty != FRAME_MESH_HELLO {
                     return Err(io(None, "expected mesh hello, got", &frame::frame_name(ty)));
@@ -241,7 +267,7 @@ impl DistComm {
                 links[r] = Some(Mutex::new(s));
             }
         }
-        let comm = Self { rank, nranks, timeout, wire: Wire::Tcp(links), counters: Counters::default() };
+        let comm = Self::new_with_wire(rank, nranks, timeout, Wire::Tcp(links));
         // A completed barrier certifies the whole mesh end-to-end.
         comm.barrier(0).map_err(|mut e| {
             e.phase = ph;
@@ -252,46 +278,42 @@ impl DistComm {
 
     // ---- framed point-to-point ---------------------------------------
 
-    fn send_frame(
+    /// One raw frame write on the wire — no sequencing, no injection.
+    fn write_frame_once(
         &self,
         peer: usize,
         ty: u8,
+        seq: u32,
         payload: &[u8],
-        phase: DistPhase,
-    ) -> Result<(), DistError> {
-        let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
+    ) -> Result<(), String> {
         match &self.wire {
             Wire::Tcp(links) => {
                 let link = links
                     .get(peer)
                     .and_then(|l| l.as_ref())
-                    .ok_or_else(|| err(format!("no link to rank {peer}")))?;
-                let mut s = link.lock().map_err(|_| err("link lock poisoned".into()))?;
-                tcp_write_frame(&mut s, ty, payload).map_err(|e| {
-                    err(format!("sending {} frame failed: {e}", frame::frame_name(ty)))
-                })?;
+                    .ok_or_else(|| format!("no link to rank {peer}"))?;
+                let mut s = link.lock().map_err(|_| "link lock poisoned".to_string())?;
+                tcp_write_frame(&mut s, ty, seq, payload).map_err(|e| e.to_string())
             }
             Wire::Mem(ep) => {
-                let mut f = Vec::with_capacity(payload.len() + 1);
+                let mut f = Vec::with_capacity(payload.len() + 5);
                 f.push(ty);
+                f.extend_from_slice(&seq.to_le_bytes());
                 f.extend_from_slice(payload);
-                ep.send(peer, f).map_err(|e| {
-                    err(format!("sending {} frame failed: {e}", frame::frame_name(ty)))
-                })?;
+                ep.send(peer, f)
             }
         }
-        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes_sent.fetch_add(payload.len() as u64 + 1, Ordering::Relaxed);
-        if crate::telemetry::enabled() {
-            crate::telemetry::metrics::dist_frames_sent_total().inc();
-            crate::telemetry::metrics::dist_bytes_sent_total().add(payload.len() as u64 + 1);
-        }
-        Ok(())
     }
 
-    fn recv_frame(&self, peer: usize, expect: u8, phase: DistPhase) -> Result<Vec<u8>, DistError> {
+    /// One raw frame read off the wire — no sequencing, no heartbeat skip.
+    fn read_frame_once(
+        &self,
+        peer: usize,
+        expect: u8,
+        phase: DistPhase,
+    ) -> Result<(u8, u32, Vec<u8>), DistError> {
         let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
-        let (ty, payload) = match &self.wire {
+        match &self.wire {
             Wire::Tcp(links) => {
                 let link = links
                     .get(peer)
@@ -313,38 +335,146 @@ impl DistComm {
                             frame::frame_name(expect)
                         ))
                     }
-                })?
+                })
             }
             Wire::Mem(ep) => {
-                let mut f = ep.recv(peer, self.timeout).map_err(&err)?;
-                if f.is_empty() {
-                    return Err(err("empty frame".into()));
+                let f = ep.recv(peer, self.timeout).map_err(&err)?;
+                if f.len() < 5 {
+                    return Err(err(format!("short frame ({} bytes)", f.len())));
                 }
                 let ty = f[0];
-                f.remove(0);
-                (ty, f)
+                let seq = u32::from_le_bytes([f[1], f[2], f[3], f[4]]);
+                Ok((ty, seq, f[5..].to_vec()))
             }
+        }
+    }
+
+    fn send_frame(
+        &self,
+        peer: usize,
+        ty: u8,
+        payload: &[u8],
+        phase: DistPhase,
+    ) -> Result<(), DistError> {
+        let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
+        let seq = self.send_seq[peer].fetch_add(1, Ordering::Relaxed) as u32;
+        // Fault injection covers steady-state traffic only: rendezvous
+        // frames predate the sequenced protocol and shutdown is best-effort
+        // teardown. Without an armed plan this is one atomic load.
+        let fault = match phase {
+            DistPhase::Rendezvous | DistPhase::Shutdown => None,
+            _ => crate::fault::active().filter(|f| f.plan().has_frame_faults()),
         };
-        self.counters.frames_recv.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes_recv.fetch_add(payload.len() as u64 + 1, Ordering::Relaxed);
+        if let Some(f) = fault {
+            if let Some(d) = f.delay_frame() {
+                crate::telemetry::metrics::fault_injected_total().inc();
+                std::thread::sleep(d);
+            }
+            // An injected drop loses the frame BEFORE any bytes hit the
+            // wire, and this loop is the sender's retry path: back off and
+            // re-send until a draw lets the frame through. The clause's
+            // probability is capped at 0.9, so the loop terminates almost
+            // surely, and the peer sees exactly one copy. Injected losses
+            // deliberately do NOT consume a bounded retry budget — a real
+            // write error below still fails fast (retrying a partially
+            // written TCP frame would corrupt the stream framing; run-level
+            // recovery is `--auto-resume`).
+            let mut attempt = 0u32;
+            while f.drop_frame() {
+                crate::telemetry::metrics::fault_injected_total().inc();
+                crate::telemetry::metrics::transport_retries_total().inc();
+                std::thread::sleep(crate::fault::backoff_delay(
+                    attempt,
+                    Duration::from_micros(50),
+                    Duration::from_millis(5),
+                    (self.rank as u64) << 32 | peer as u64,
+                ));
+                attempt = attempt.wrapping_add(1);
+            }
+        }
+        self.write_frame_once(peer, ty, seq, payload)
+            .map_err(|e| err(format!("sending {} frame failed: {e}", frame::frame_name(ty))))?;
+        if let Some(f) = fault {
+            if f.dup_frame() {
+                // Injected duplicate: retransmit the SAME sequence number;
+                // the receiver's dedup must discard it. Best-effort — a
+                // failed retransmit of a duplicate is not an error.
+                crate::telemetry::metrics::fault_injected_total().inc();
+                let _ = self.write_frame_once(peer, ty, seq, payload);
+            }
+        }
+        self.counters.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_sent.fetch_add(payload.len() as u64 + 5, Ordering::Relaxed);
         if crate::telemetry::enabled() {
-            crate::telemetry::metrics::dist_frames_recv_total().inc();
-            crate::telemetry::metrics::dist_bytes_recv_total().add(payload.len() as u64 + 1);
+            crate::telemetry::metrics::dist_frames_sent_total().inc();
+            crate::telemetry::metrics::dist_bytes_sent_total().add(payload.len() as u64 + 5);
         }
-        if ty == FRAME_SHUTDOWN && expect != FRAME_SHUTDOWN {
-            return Err(err(format!(
-                "peer shut down while this rank expected a {} frame",
-                frame::frame_name(expect)
-            )));
+        Ok(())
+    }
+
+    fn recv_frame(&self, peer: usize, expect: u8, phase: DistPhase) -> Result<Vec<u8>, DistError> {
+        let err = |detail: String| DistError { rank: self.rank, peer: Some(peer), phase, detail };
+        // The per-read timeout below bounds each blocking read; this
+        // deadline bounds the whole call, so a peer that stays "alive" via
+        // heartbeats or duplicates but never sends the expected frame still
+        // trips `--dist-timeout`.
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let (ty, seq, payload) = self.read_frame_once(peer, expect, phase)?;
+            self.mark_heard(peer);
+            if ty == FRAME_HEARTBEAT {
+                // Liveness probe — sequence-exempt, never surfaced to callers.
+                if Instant::now() >= deadline {
+                    return Err(err(format!(
+                        "timed out after {:?}: peer heartbeats but never sent the {} frame",
+                        self.timeout,
+                        frame::frame_name(expect)
+                    )));
+                }
+                continue;
+            }
+            let expected = self.recv_seq[peer].load(Ordering::Relaxed) as u32;
+            if seq != expected {
+                if seq == expected.wrapping_sub(1) {
+                    // A retransmit of the frame we already consumed
+                    // (injected duplicate) — discard and read on.
+                    if Instant::now() >= deadline {
+                        return Err(err(format!(
+                            "timed out after {:?} discarding duplicates while waiting for a {} frame",
+                            self.timeout,
+                            frame::frame_name(expect)
+                        )));
+                    }
+                    continue;
+                }
+                return Err(err(format!(
+                    "sequence gap: expected frame #{expected} from rank {peer}, got #{seq} ({}) — \
+                     a frame was lost in transit",
+                    frame::frame_name(ty)
+                )));
+            }
+            self.recv_seq[peer].fetch_add(1, Ordering::Relaxed);
+            self.counters.frames_recv.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes_recv.fetch_add(payload.len() as u64 + 5, Ordering::Relaxed);
+            if crate::telemetry::enabled() {
+                crate::telemetry::metrics::dist_frames_recv_total().inc();
+                crate::telemetry::metrics::dist_bytes_recv_total().add(payload.len() as u64 + 5);
+            }
+            if ty == FRAME_SHUTDOWN && expect != FRAME_SHUTDOWN {
+                return Err(err(format!(
+                    "peer shut down while this rank expected a {} frame",
+                    frame::frame_name(expect)
+                )));
+            }
+            if ty != expect {
+                return Err(err(format!(
+                    "protocol desync: expected {} frame, got {}",
+                    frame::frame_name(expect),
+                    frame::frame_name(ty)
+                )));
+            }
+            return Ok(payload);
         }
-        if ty != expect {
-            return Err(err(format!(
-                "protocol desync: expected {} frame, got {}",
-                frame::frame_name(expect),
-                frame::frame_name(ty)
-            )));
-        }
-        Ok(payload)
     }
 
     // ---- gradient fold-reduce ----------------------------------------
@@ -554,6 +684,70 @@ impl DistComm {
         }
     }
 
+    // ---- heartbeat -----------------------------------------------------
+
+    fn mark_heard(&self, peer: usize) {
+        let ms = self.epoch.elapsed().as_millis() as u64;
+        self.last_heard[peer].store(ms, Ordering::Relaxed);
+    }
+
+    /// Longest silence across peers: time since anything — heartbeat or
+    /// data — was last read from the quietest peer.
+    pub fn max_peer_silence(&self) -> Duration {
+        let now = self.epoch.elapsed().as_millis() as u64;
+        let mut worst = 0u64;
+        for (peer, heard) in self.last_heard.iter().enumerate() {
+            if peer == self.rank {
+                continue;
+            }
+            worst = worst.max(now.saturating_sub(heard.load(Ordering::Relaxed)));
+        }
+        Duration::from_millis(worst)
+    }
+
+    /// Spawn the background liveness monitor: every `timeout/4` it writes a
+    /// [`FRAME_HEARTBEAT`] probe to each idle peer link and refreshes the
+    /// silence gauge, so a dead peer surfaces within `--dist-timeout` even
+    /// across long quiet stretches (a worker stuck in a slow refresh no
+    /// longer looks identical to a dead one in the metrics). The thread
+    /// holds only a `Weak` reference and exits on its next tick after the
+    /// communicator is dropped. TCP only — the mem transport's "peers" are
+    /// threads in this process and its channel reads are already bounded.
+    pub fn start_heartbeat(this: &Arc<Self>) {
+        if !matches!(this.wire, Wire::Tcp(_)) {
+            return;
+        }
+        let period = (this.timeout / 4)
+            .clamp(Duration::from_millis(10), Duration::from_secs(2));
+        let weak = Arc::downgrade(this);
+        let _ = std::thread::Builder::new()
+            .name(format!("soap-heartbeat-r{}", this.rank))
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                let Some(comm) = weak.upgrade() else { return };
+                comm.heartbeat_tick();
+            });
+    }
+
+    fn heartbeat_tick(&self) {
+        let Wire::Tcp(links) = &self.wire else { return };
+        for link in links.iter().flatten() {
+            // try_lock only: if the main thread holds the link it is mid-
+            // collective, which is itself proof this side is alive — never
+            // stall the hot path for a probe. Write errors are ignored;
+            // the protocol path owns dead-peer reporting.
+            if let Ok(mut s) = link.try_lock() {
+                if tcp_write_frame(&mut s, FRAME_HEARTBEAT, HEARTBEAT_SEQ, &[]).is_ok() {
+                    crate::telemetry::metrics::heartbeats_sent_total().inc();
+                }
+            }
+        }
+        if crate::telemetry::enabled() {
+            crate::telemetry::metrics::heartbeat_silence_seconds()
+                .set(self.max_peer_silence().as_secs_f64());
+        }
+    }
+
     // ---- teardown ------------------------------------------------------
 
     /// Best-effort shutdown notice to every peer (errors ignored — peers may
@@ -665,6 +859,58 @@ mod tests {
         assert!(fs > 0 && fr > 0 && bs > 0 && br > 0, "traffic counters never moved");
     }
 
+    /// Handcraft a mem-wire frame with an explicit sequence number.
+    fn raw_frame(ty: u8, seq: u32, payload: &[u8]) -> Vec<u8> {
+        let mut f = vec![ty];
+        f.extend_from_slice(&seq.to_le_bytes());
+        f.extend_from_slice(payload);
+        f
+    }
+
+    #[test]
+    fn duplicate_frames_are_discarded() {
+        let mut eps = MemCluster::new(2);
+        let ep1 = eps.pop().unwrap();
+        let comm0 = DistComm::connect_mem(eps.pop().unwrap(), Duration::from_millis(500)).unwrap();
+        let mut tag = Vec::new();
+        frame::put_u64(&mut tag, 7);
+        // Frame 0 retransmitted (same seq), then frame 1: the receiver must
+        // consume exactly two distinct frames.
+        ep1.send(0, raw_frame(FRAME_BARRIER, 0, &tag)).unwrap();
+        ep1.send(0, raw_frame(FRAME_BARRIER, 0, &tag)).unwrap();
+        ep1.send(0, raw_frame(FRAME_HEALTH, 1, &[])).unwrap();
+        let p = comm0.recv_frame(1, FRAME_BARRIER, DistPhase::Barrier).unwrap();
+        assert_eq!(Cursor::new(&p).u64().unwrap(), 7);
+        let p = comm0.recv_frame(1, FRAME_HEALTH, DistPhase::HealthGather).unwrap();
+        assert!(p.is_empty(), "duplicate leaked through as a distinct frame");
+    }
+
+    #[test]
+    fn heartbeats_are_skipped_and_sequence_exempt() {
+        let mut eps = MemCluster::new(2);
+        let ep1 = eps.pop().unwrap();
+        let comm0 = DistComm::connect_mem(eps.pop().unwrap(), Duration::from_millis(500)).unwrap();
+        ep1.send(0, raw_frame(FRAME_HEARTBEAT, HEARTBEAT_SEQ, &[])).unwrap();
+        let mut tag = Vec::new();
+        frame::put_u64(&mut tag, 3);
+        ep1.send(0, raw_frame(FRAME_BARRIER, 0, &tag)).unwrap();
+        let p = comm0.recv_frame(1, FRAME_BARRIER, DistPhase::Barrier).unwrap();
+        assert_eq!(Cursor::new(&p).u64().unwrap(), 3);
+        assert!(comm0.max_peer_silence() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn sequence_gap_is_a_typed_error() {
+        let mut eps = MemCluster::new(2);
+        let ep1 = eps.pop().unwrap();
+        let comm0 = DistComm::connect_mem(eps.pop().unwrap(), Duration::from_millis(500)).unwrap();
+        // Frame #0 never arrives; #5 shows up instead.
+        ep1.send(0, raw_frame(FRAME_BARRIER, 5, &[])).unwrap();
+        let err = comm0.recv_frame(1, FRAME_BARRIER, DistPhase::Barrier).unwrap_err();
+        assert!(err.to_string().contains("sequence gap"), "{err}");
+        assert_eq!(err.peer, Some(1));
+    }
+
     #[test]
     fn dead_peer_trips_timeout_not_hang() {
         let mut eps = MemCluster::new(2);
@@ -675,5 +921,26 @@ mod tests {
         assert_eq!(err.rank, 0);
         assert_eq!(err.phase, DistPhase::Barrier);
         assert!(err.to_string().contains("hung up"), "{err}");
+    }
+
+    #[test]
+    fn rendezvous_times_out_when_worker_never_connects() {
+        // Coordinator side of the TCP rendezvous with a worker that never
+        // dials in: the accept loop must surface a typed error within
+        // --dist-timeout, not hang waiting forever.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t0 = Instant::now();
+        let err =
+            DistComm::connect_tcp(0, 2, &addr, Some(listener), Duration::from_millis(100), 1)
+                .unwrap_err();
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.phase, DistPhase::Rendezvous);
+        assert!(err.to_string().contains("waiting for workers"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "accept loop overshot the deadline: {:?}",
+            t0.elapsed()
+        );
     }
 }

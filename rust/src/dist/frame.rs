@@ -6,10 +6,14 @@
 //! golden guarantee rides on this round-trip being exact (no text formatting,
 //! no f64 widening).
 //!
-//! On TCP the frame is `[u32 len][u8 type][payload]` where `len` counts the
-//! type byte plus the payload; on the in-process channel transport a frame is
-//! just the `[type][payload]` byte vector (the channel preserves message
-//! boundaries).
+//! On TCP the frame is `[u32 len][u8 type][u32 seq][payload]` where `len`
+//! counts the type byte, the sequence number, and the payload; on the
+//! in-process channel transport a frame is the `[type][seq][payload]` byte
+//! vector (the channel preserves message boundaries). `seq` is a per-link
+//! monotone counter that lets the receiver discard an injected/duplicated
+//! retransmit and detect a gap as a typed protocol error instead of a
+//! desync; heartbeat frames carry the sentinel
+//! [`crate::dist::comm::HEARTBEAT_SEQ`] and are sequence-exempt.
 
 use crate::linalg::Matrix;
 use crate::precond::BasisPayload;
@@ -33,6 +37,8 @@ pub const FRAME_SHUTDOWN: u8 = 7;
 pub const FRAME_MESH_HELLO: u8 = 8;
 /// Scalar trailer of the fold-reduce chain (f64 loss partial).
 pub const FRAME_SCALARS: u8 = 9;
+/// Liveness probe (empty payload, sequence-exempt — see `HEARTBEAT_SEQ`).
+pub const FRAME_HEARTBEAT: u8 = 10;
 
 pub fn frame_name(ty: u8) -> &'static str {
     match ty {
@@ -45,6 +51,7 @@ pub fn frame_name(ty: u8) -> &'static str {
         FRAME_SHUTDOWN => "shutdown",
         FRAME_MESH_HELLO => "mesh-hello",
         FRAME_SCALARS => "scalars",
+        FRAME_HEARTBEAT => "heartbeat",
         _ => "unknown",
     }
 }

@@ -57,13 +57,16 @@ pub struct ChildGuard {
 impl ChildGuard {
     /// Wait for every worker to exit; error if any exited nonzero. Consumes
     /// the guard, so the kill-on-drop safety net is disarmed only once every
-    /// child has actually been reaped.
+    /// child has actually been reaped. A failed `wait` on one child must not
+    /// leave later children unreaped, so errors are collected rather than
+    /// returned early.
     pub fn wait_all(mut self) -> std::io::Result<()> {
         let mut failed = Vec::new();
         for (rank, child) in self.children.iter_mut() {
-            let status = child.wait()?;
-            if !status.success() {
-                failed.push(format!("rank {rank} exited with {status}"));
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => failed.push(format!("rank {rank} exited with {status}")),
+                Err(e) => failed.push(format!("rank {rank} wait failed: {e}")),
             }
         }
         self.children.clear();

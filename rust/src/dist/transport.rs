@@ -2,8 +2,9 @@
 //!
 //! - [`Transport::Tcp`] — localhost sockets between real processes (the
 //!   production shape; what `--backend distributed` self-spawn uses). Frames
-//!   are `[u32 len][u8 type][payload]`, streams run with `TCP_NODELAY` and a
-//!   read timeout so a dead peer surfaces as a typed error instead of a hang.
+//!   are `[u32 len][u8 type][u32 seq][payload]`, streams run with
+//!   `TCP_NODELAY` and a read timeout so a dead peer surfaces as a typed
+//!   error instead of a hang.
 //! - [`Transport::Mem`] — an in-process `mpsc` channel mesh
 //!   ([`MemCluster`]), one thread per rank. Same frames minus the length
 //!   prefix (channels preserve message boundaries). This is what the golden
@@ -52,31 +53,44 @@ impl Transport {
 
 // ---- TCP framing ---------------------------------------------------------
 
-/// Write one `[u32 len][u8 type][payload]` frame. `len` counts the type byte
-/// plus the payload so a reader can always pre-size its buffer.
-pub fn tcp_write_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) -> std::io::Result<()> {
-    let len = (payload.len() + 1) as u32;
+/// Write one `[u32 len][u8 type][u32 seq][payload]` frame. `len` counts the
+/// type byte, sequence number, and payload so a reader can always pre-size
+/// its buffer. `seq` is the comm layer's per-link counter (0 during
+/// rendezvous, before the sequenced protocol starts).
+pub fn tcp_write_frame(
+    stream: &mut TcpStream,
+    ty: u8,
+    seq: u32,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let len = (payload.len() + 5) as u32;
     stream.write_all(&len.to_le_bytes())?;
     stream.write_all(&[ty])?;
+    stream.write_all(&seq.to_le_bytes())?;
     stream.write_all(payload)?;
     Ok(())
 }
 
-/// Read one frame; returns `(type, payload)`. A peer that died mid-frame
-/// shows up as an io error (timeout or unexpected EOF) for the comm layer to
-/// wrap with rank/phase context.
-pub fn tcp_read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+/// Read one frame; returns `(type, seq, payload)`. A peer that died
+/// mid-frame shows up as an io error (timeout or unexpected EOF) for the
+/// comm layer to wrap with rank/phase context.
+pub fn tcp_read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, u32, Vec<u8>)> {
     let mut len_bytes = [0u8; 4];
     stream.read_exact(&mut len_bytes)?;
     let len = u32::from_le_bytes(len_bytes) as usize;
-    if len == 0 {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "zero-length frame"));
+    if len < 5 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("short frame header ({len} bytes)"),
+        ));
     }
-    let mut buf = vec![0u8; len];
+    let mut head = [0u8; 5];
+    stream.read_exact(&mut head)?;
+    let ty = head[0];
+    let seq = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    let mut buf = vec![0u8; len - 5];
     stream.read_exact(&mut buf)?;
-    let ty = buf[0];
-    buf.remove(0);
-    Ok((ty, buf))
+    Ok((ty, seq, buf))
 }
 
 /// Accept one connection with a deadline: `TcpListener::accept` has no
@@ -103,9 +117,16 @@ pub fn accept_deadline(listener: &TcpListener, deadline: Instant) -> std::io::Re
     }
 }
 
-/// Dial with retry until a deadline (a manually launched worker may start
-/// before the coordinator's listener is up).
+/// Dial with exponential-backoff retry until a deadline (a manually launched
+/// worker may start before the coordinator's listener is up). Backoff delays
+/// come from [`crate::fault::backoff_delay`] — bounded, jittered per address
+/// so a gang of workers doesn't re-dial in lockstep, and capped at 250 ms so
+/// a late listener is still picked up promptly.
 pub fn connect_deadline(addr: &str, deadline: Instant) -> std::io::Result<TcpStream> {
+    let seed = addr.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
+    });
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -116,7 +137,16 @@ pub fn connect_deadline(addr: &str, deadline: Instant) -> std::io::Result<TcpStr
                         format!("could not reach {addr}: {e}"),
                     ));
                 }
-                std::thread::sleep(Duration::from_millis(10));
+                let delay = crate::fault::backoff_delay(
+                    attempt,
+                    Duration::from_millis(2),
+                    Duration::from_millis(250),
+                    seed,
+                );
+                // Never sleep past the deadline itself.
+                let left = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(delay.min(left));
+                attempt = attempt.wrapping_add(1);
             }
         }
     }
@@ -230,16 +260,34 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let t = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            tcp_write_frame(&mut s, 4, &[10, 20, 30]).unwrap();
-            tcp_write_frame(&mut s, 6, &[]).unwrap();
+            tcp_write_frame(&mut s, 4, 17, &[10, 20, 30]).unwrap();
+            tcp_write_frame(&mut s, 6, 18, &[]).unwrap();
         });
         let deadline = Instant::now() + Duration::from_secs(5);
         let mut s = accept_deadline(&listener, deadline).unwrap();
-        let (ty, payload) = tcp_read_frame(&mut s).unwrap();
-        assert_eq!((ty, payload), (4, vec![10, 20, 30]));
-        let (ty, payload) = tcp_read_frame(&mut s).unwrap();
-        assert_eq!(ty, 6);
+        let (ty, seq, payload) = tcp_read_frame(&mut s).unwrap();
+        assert_eq!((ty, seq, payload), (4, 17, vec![10, 20, 30]));
+        let (ty, seq, payload) = tcp_read_frame(&mut s).unwrap();
+        assert_eq!((ty, seq), (6, 18));
         assert!(payload.is_empty());
         t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_deadline_gives_up_within_budget() {
+        // Grab a port, then close the listener so nothing is dialable there.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let start = Instant::now();
+        let err =
+            connect_deadline(&dead_addr, Instant::now() + Duration::from_millis(150)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "backoff overshot the deadline: {:?}",
+            start.elapsed()
+        );
     }
 }

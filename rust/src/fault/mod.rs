@@ -1,0 +1,420 @@
+//! Deterministic fault injection and recovery primitives.
+//!
+//! SOAP's stale-basis tolerance (paper §1, Fig. 1) is a license to degrade
+//! gracefully instead of aborting: keep stepping on the last-good eigenbasis
+//! when a refresh fails, keep the run alive when a frame drops. This module
+//! supplies the two halves of that story:
+//!
+//! - **[`FaultPlan`]** — a seeded, reproducible chaos schedule parsed from
+//!   `--fault-plan` (see the grammar below). Installed process-wide via
+//!   [`install`]; every injection seam asks [`active`] first, which is a
+//!   single atomic pointer load — runs without a plan take no RNG draws, no
+//!   locks, and no allocations, so faults-off trajectories are bitwise
+//!   identical to a build without the seams.
+//! - **[`backoff_delay`]** — the shared exponential-backoff-with-jitter
+//!   schedule used by transport connect/rendezvous/send retries. Delays are
+//!   deterministic in `(seed, attempt)`, bounded by the cap, and monotone
+//!   nondecreasing per attempt (jitter is `[0, 0.5]` multiplicative, and
+//!   `2^(n+1) ≥ 1.5·2^n`), which `rust/tests/chaos.rs` property-tests.
+//!
+//! ## Fault-plan grammar
+//!
+//! `;`-separated clauses, each `key=value`:
+//!
+//! | clause                   | effect                                              |
+//! |--------------------------|-----------------------------------------------------|
+//! | `seed=<u64>`             | RNG seed (mixed with the rank; default 0)           |
+//! | `drop-frame=<p>`         | drop a steady-state frame send with probability `p` (retried transparently) |
+//! | `delay-frame=<p>:<ms>`   | sleep `ms` before a frame send with probability `p` |
+//! | `dup-frame=<p>`          | retransmit a frame (same sequence number) with probability `p` |
+//! | `crash-rank=<r>:<step>`  | rank `r` exits abruptly at step `step` (once)       |
+//! | `eigh-fail=<basis>:<step>` | poison basis `basis`'s decomposition at step `step` (once) |
+//! | `nan-grad=<layer>:<step>`  | inject NaN into layer `layer`'s gradient at step `step` (once) |
+//! | `inf-grad=<layer>:<step>`  | inject Inf into layer `layer`'s gradient at step `step` (once) |
+//!
+//! Probabilities are capped at 0.9 so injected-drop retry loops terminate
+//! almost surely. One-shot clauses (`crash-rank`, `eigh-fail`, `nan-grad`,
+//! `inf-grad`) are disarmed on an `--auto-resume` relaunch
+//! (`fault-attempt > 0`) — otherwise a crash plan would re-kill every
+//! attempt; the probabilistic frame clauses persist across attempts.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// A parsed `--fault-plan`: the full seeded chaos schedule for one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed for the probabilistic clauses (mixed with the rank so every
+    /// rank draws an independent deterministic stream).
+    pub seed: u64,
+    /// Probability a steady-state frame send is dropped (and retried).
+    pub drop_frame: f64,
+    /// `(probability, millis)` a frame send is delayed.
+    pub delay_frame: Option<(f64, u64)>,
+    /// Probability a frame is sent twice with the same sequence number.
+    pub dup_frame: f64,
+    /// `(rank, step)`: that rank exits abruptly at that step. One-shot.
+    pub crash_rank: Option<(usize, u64)>,
+    /// `(basis id, step)`: poison that basis's decomposition result with
+    /// NaN at that step, exercising the reject-and-keep-previous guard.
+    /// One-shot. The basis id is the per-process creation index
+    /// (`EigenBasis` trace id) — the layer index for matrix models.
+    pub eigh_fail: Option<(u64, u64)>,
+    /// `(layer, step)`: overwrite that layer's gradient with NaN at that
+    /// step (post-allreduce, so every rank sees it). One-shot.
+    pub nan_grad: Option<(usize, u64)>,
+    /// `(layer, step)`: same with +Inf. One-shot.
+    pub inf_grad: Option<(usize, u64)>,
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` grammar (see the module docs).
+    pub fn parse(s: &str) -> Result<Self> {
+        fn prob(key: &str, v: &str) -> Result<f64> {
+            let p: f64 = v.parse().map_err(|e| anyhow::anyhow!("{key}={v}: {e}"))?;
+            anyhow::ensure!(
+                (0.0..=0.9).contains(&p),
+                "{key}={v}: probability must be in [0, 0.9] so retries terminate"
+            );
+            Ok(p)
+        }
+        fn pair<A, B>(key: &str, v: &str) -> Result<(A, B)>
+        where
+            A: std::str::FromStr,
+            B: std::str::FromStr,
+            A::Err: std::fmt::Display,
+            B::Err: std::fmt::Display,
+        {
+            let (a, b) = v
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("{key}={v}: expected <a>:<b>"))?;
+            Ok((
+                a.parse().map_err(|e| anyhow::anyhow!("{key}={v}: {e}"))?,
+                b.parse().map_err(|e| anyhow::anyhow!("{key}={v}: {e}"))?,
+            ))
+        }
+        let mut plan = FaultPlan::default();
+        for clause in s.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, value) = clause
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault-plan clause '{clause}' is not key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed =
+                        value.parse().map_err(|e| anyhow::anyhow!("seed={value}: {e}"))?;
+                }
+                "drop-frame" => plan.drop_frame = prob("drop-frame", value)?,
+                "dup-frame" => plan.dup_frame = prob("dup-frame", value)?,
+                "delay-frame" => {
+                    let (p, ms) = value.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("delay-frame={value}: expected <p>:<millis>")
+                    })?;
+                    let ms: u64 =
+                        ms.parse().map_err(|e| anyhow::anyhow!("delay-frame={value}: {e}"))?;
+                    plan.delay_frame = Some((prob("delay-frame", p)?, ms));
+                }
+                "crash-rank" => plan.crash_rank = Some(pair("crash-rank", value)?),
+                "eigh-fail" => plan.eigh_fail = Some(pair("eigh-fail", value)?),
+                "nan-grad" => plan.nan_grad = Some(pair("nan-grad", value)?),
+                "inf-grad" => plan.inf_grad = Some(pair("inf-grad", value)?),
+                other => anyhow::bail!(
+                    "unknown fault-plan clause '{other}': expected seed, drop-frame, \
+                     delay-frame, dup-frame, crash-rank, eigh-fail, nan-grad, inf-grad"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Disarm the one-shot clauses (crash/eigh/NaN/Inf) — called when a run
+    /// is an `--auto-resume` relaunch so the same fault doesn't re-fire on
+    /// every attempt. Probabilistic frame faults stay armed.
+    pub fn disarm_one_shot(&mut self) {
+        self.crash_rank = None;
+        self.eigh_fail = None;
+        self.nan_grad = None;
+        self.inf_grad = None;
+    }
+
+    /// Any probabilistic frame clause present?
+    pub fn has_frame_faults(&self) -> bool {
+        self.drop_frame > 0.0 || self.dup_frame > 0.0 || self.delay_frame.is_some()
+    }
+}
+
+/// The armed, per-process form of a [`FaultPlan`]: the plan plus this
+/// process's rank, a lock-free RNG, and once-only latches for the one-shot
+/// clauses.
+pub struct FaultState {
+    plan: FaultPlan,
+    rank: usize,
+    rng: AtomicU64,
+    crash_fired: AtomicBool,
+    eigh_fired: AtomicBool,
+    grad_fired: AtomicBool,
+}
+
+/// SplitMix64 output mix — full-period, passes through zero seeds.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn unit(z: u64) -> f64 {
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, rank: usize) -> Self {
+        let seed = splitmix(plan.seed ^ (rank as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        Self {
+            plan,
+            rank,
+            rng: AtomicU64::new(seed | 1),
+            crash_fired: AtomicBool::new(false),
+            eigh_fired: AtomicBool::new(false),
+            grad_fired: AtomicBool::new(false),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// One uniform draw in `[0, 1)` (xorshift64*, advanced with a CAS so
+    /// concurrent seams share one deterministic-per-interleaving stream).
+    fn draw(&self) -> f64 {
+        let mut x = self.rng.load(Ordering::Relaxed);
+        loop {
+            let mut y = x;
+            y ^= y >> 12;
+            y ^= y << 25;
+            y ^= y >> 27;
+            match self.rng.compare_exchange_weak(x, y, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return unit(y.wrapping_mul(0x2545_f491_4f6c_dd1d)),
+                Err(cur) => x = cur,
+            }
+        }
+    }
+
+    /// Should this frame-send attempt be dropped (injected transient loss)?
+    pub fn drop_frame(&self) -> bool {
+        self.plan.drop_frame > 0.0 && self.draw() < self.plan.drop_frame
+    }
+
+    /// Should this frame be retransmitted after the real send?
+    pub fn dup_frame(&self) -> bool {
+        self.plan.dup_frame > 0.0 && self.draw() < self.plan.dup_frame
+    }
+
+    /// Delay to apply before this frame send, if the delay clause fires.
+    pub fn delay_frame(&self) -> Option<Duration> {
+        let (p, ms) = self.plan.delay_frame?;
+        (self.draw() < p).then(|| Duration::from_millis(ms))
+    }
+
+    /// Should this rank crash at step `t`? Fires at most once per process.
+    pub fn should_crash(&self, t: u64) -> bool {
+        match self.plan.crash_rank {
+            Some((r, step)) if r == self.rank && step == t => {
+                !self.crash_fired.swap(true, Ordering::Relaxed)
+            }
+            _ => false,
+        }
+    }
+
+    /// Poison value for layer `layer`'s gradient at step `t`, if the NaN/Inf
+    /// clause targets it. Fires at most once per process.
+    pub fn grad_poison(&self, layer: usize, t: u64) -> Option<f32> {
+        let (value, hit) = match (self.plan.nan_grad, self.plan.inf_grad) {
+            (Some((l, s)), _) if l == layer && s == t => (f32::NAN, true),
+            (_, Some((l, s))) if l == layer && s == t => (f32::INFINITY, true),
+            _ => (0.0, false),
+        };
+        (hit && !self.grad_fired.swap(true, Ordering::Relaxed)).then_some(value)
+    }
+
+    /// Should basis `basis_id`'s decomposition at step `t` be poisoned?
+    /// Fires at most once per process.
+    pub fn eigh_poison(&self, basis_id: u64, t: u64) -> bool {
+        match self.plan.eigh_fail {
+            Some((b, step)) if b == basis_id && step == t => {
+                !self.eigh_fired.swap(true, Ordering::Relaxed)
+            }
+            _ => false,
+        }
+    }
+}
+
+// ---- process-wide installation -------------------------------------------
+
+/// The armed fault state, or null when no plan is active. An `AtomicPtr`
+/// (not a `OnceLock`) because `--auto-resume` re-installs per attempt in the
+/// same coordinator process; replaced states are leaked, like telemetry
+/// instruments — they are tiny and installs are per-run.
+static ACTIVE: AtomicPtr<FaultState> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The active fault state, if a plan is installed. One atomic load — this is
+/// the zero-cost seam every injection site gates on.
+#[inline]
+pub fn active() -> Option<&'static FaultState> {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if p.is_null() {
+        None
+    } else {
+        // Installed states are intentionally leaked, so the reference is
+        // 'static for the life of the process.
+        Some(unsafe { &*p })
+    }
+}
+
+/// Arm a fault plan process-wide for this rank (replacing any previous one).
+pub fn install(plan: FaultPlan, rank: usize) {
+    let state = Box::into_raw(Box::new(FaultState::new(plan, rank)));
+    ACTIVE.store(state, Ordering::Release);
+}
+
+/// Disarm fault injection (runs without `--fault-plan` call this so a prior
+/// in-process session's plan cannot leak into a fresh run).
+pub fn clear() {
+    ACTIVE.store(std::ptr::null_mut(), Ordering::Release);
+}
+
+// ---- guard-abort latch ---------------------------------------------------
+
+/// Set by a `GuardPolicy::Abort` trip inside the per-layer update path
+/// (which cannot return an error itself); the session checks and clears it
+/// after each step and surfaces a typed error.
+static GUARD_ABORT: AtomicBool = AtomicBool::new(false);
+
+pub fn flag_guard_abort() {
+    GUARD_ABORT.store(true, Ordering::Relaxed);
+}
+
+pub fn take_guard_abort() -> bool {
+    GUARD_ABORT.swap(false, Ordering::Relaxed)
+}
+
+// ---- backoff -------------------------------------------------------------
+
+/// Exponential backoff with deterministic multiplicative jitter:
+/// `min(cap, base · 2^attempt · (1 + j))` with `j ∈ [0, 0.5]` drawn from
+/// `(seed, attempt)`. Bounded by `cap` and monotone nondecreasing in
+/// `attempt` (`2^(n+1) · 1 ≥ 2^n · 1.5`), property-tested in
+/// `rust/tests/chaos.rs`.
+pub fn backoff_delay(attempt: u32, base: Duration, cap: Duration, seed: u64) -> Duration {
+    let jitter = 0.5 * unit(splitmix(seed ^ u64::from(attempt)));
+    // 2^attempt saturates long before the cap stops mattering.
+    let exp = base.as_secs_f64() * 2f64.powi(attempt.min(62) as i32) * (1.0 + jitter);
+    if !exp.is_finite() || exp >= cap.as_secs_f64() {
+        cap
+    } else {
+        Duration::from_secs_f64(exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7; drop-frame=0.2; delay-frame=0.1:25; dup-frame=0.05; \
+             crash-rank=1:6; eigh-fail=0:10; nan-grad=2:5; inf-grad=3:9",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop_frame, 0.2);
+        assert_eq!(p.delay_frame, Some((0.1, 25)));
+        assert_eq!(p.dup_frame, 0.05);
+        assert_eq!(p.crash_rank, Some((1, 6)));
+        assert_eq!(p.eigh_fail, Some((0, 10)));
+        assert_eq!(p.nan_grad, Some((2, 5)));
+        assert_eq!(p.inf_grad, Some((3, 9)));
+        assert!(p.has_frame_faults());
+    }
+
+    #[test]
+    fn plan_parse_rejects_bad_input() {
+        assert!(FaultPlan::parse("drop-frame=0.95").is_err(), "p > 0.9 must be rejected");
+        assert!(FaultPlan::parse("drop-frame=-0.1").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("crash-rank=1").is_err(), "missing :step");
+        assert!(FaultPlan::parse("no-equals").is_err());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert_eq!(FaultPlan::parse(" ; ").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn disarm_clears_one_shot_only() {
+        let mut p = FaultPlan::parse("drop-frame=0.2;crash-rank=1:6;nan-grad=0:3").unwrap();
+        p.disarm_one_shot();
+        assert_eq!(p.crash_rank, None);
+        assert_eq!(p.nan_grad, None);
+        assert_eq!(p.drop_frame, 0.2, "probabilistic clauses persist across attempts");
+    }
+
+    #[test]
+    fn one_shot_latches_fire_once() {
+        let s = FaultState::new(
+            FaultPlan::parse("crash-rank=0:6;nan-grad=1:4;eigh-fail=2:10").unwrap(),
+            0,
+        );
+        assert!(!s.should_crash(5));
+        assert!(s.should_crash(6));
+        assert!(!s.should_crash(6), "crash clause must fire once");
+        assert!(s.grad_poison(0, 4).is_none(), "wrong layer");
+        let v = s.grad_poison(1, 4).unwrap();
+        assert!(v.is_nan());
+        assert!(s.grad_poison(1, 4).is_none(), "grad clause must fire once");
+        assert!(!s.eigh_poison(2, 9));
+        assert!(s.eigh_poison(2, 10));
+        assert!(!s.eigh_poison(2, 10));
+    }
+
+    #[test]
+    fn wrong_rank_never_crashes() {
+        let s = FaultState::new(FaultPlan::parse("crash-rank=1:6").unwrap(), 0);
+        assert!(!s.should_crash(6));
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_rank() {
+        let plan = FaultPlan::parse("seed=3;drop-frame=0.5").unwrap();
+        let a = FaultState::new(plan.clone(), 0);
+        let b = FaultState::new(plan.clone(), 0);
+        let seq_a: Vec<bool> = (0..64).map(|_| a.drop_frame()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.drop_frame()).collect();
+        assert_eq!(seq_a, seq_b, "same seed+rank must draw the same stream");
+        let c = FaultState::new(plan, 1);
+        let seq_c: Vec<bool> = (0..64).map(|_| c.drop_frame()).collect();
+        assert_ne!(seq_a, seq_c, "ranks must draw independent streams");
+    }
+
+    #[test]
+    fn install_clear_roundtrip() {
+        clear();
+        assert!(active().is_none());
+        install(FaultPlan::parse("drop-frame=0.1").unwrap(), 0);
+        assert_eq!(active().unwrap().plan().drop_frame, 0.1);
+        clear();
+        assert!(active().is_none());
+    }
+
+    #[test]
+    fn guard_abort_latch() {
+        assert!(!take_guard_abort());
+        flag_guard_abort();
+        assert!(take_guard_abort());
+        assert!(!take_guard_abort(), "take must clear the latch");
+    }
+}

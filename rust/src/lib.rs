@@ -70,6 +70,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dist;
 pub mod experiments;
+pub mod fault;
 pub mod linalg;
 pub mod model;
 pub mod optim;

@@ -108,6 +108,26 @@ fn app() -> App {
                 .opt("config", "", "key=value config file (CLI args override it)")
                 .opt("save", "", "write a checkpoint here at the end")
                 .opt("resume", "", "resume from this checkpoint (restores step + data cursor)")
+                .opt(
+                    "guard",
+                    "skip-step",
+                    "non-finite gradient/update response: off|skip-step|clip[:max]|abort",
+                )
+                .opt(
+                    "fault-plan",
+                    "",
+                    "seeded fault-injection plan for chaos testing (see README)",
+                )
+                .opt(
+                    "auto-resume",
+                    "0",
+                    "distributed: relaunch from the abort checkpoint up to N times on peer failure",
+                )
+                .opt(
+                    "fault-attempt",
+                    "0",
+                    "internal: auto-resume relaunch counter (disarms one-shot injected faults)",
+                )
                 .flag("dump-config", "print the resolved config as a loadable file and exit")
                 .flag(
                     "telemetry",
@@ -177,6 +197,46 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
             if rc.async_refresh { "async" } else { "inline" }
         );
     }
+    // Auto-resume: the self-spawn coordinator retries a failed distributed
+    // run up to --auto-resume times. Each failed attempt leaves an abort
+    // checkpoint behind (rank 0 exports without collectives, so a dead peer
+    // cannot hang the save); the retry resumes every rank from it with
+    // --fault-attempt bumped, which disarms one-shot injected faults
+    // (crash-rank, eigh-fail, …) so chaos runs converge instead of
+    // re-crashing forever. Worker ranks never loop — the coordinator
+    // respawns them with the resume args appended (the CLI keeps the last
+    // occurrence of a repeated option, so the append is authoritative).
+    let retries = if worker_rank.is_none() { rc.auto_resume } else { 0 };
+    let abort_ckpt = rc.save.clone().unwrap_or_else(|| "soap-abort.ckpt".to_string());
+    let mut extra: Vec<String> = Vec::new();
+    loop {
+        let err = match run_attempt(&rc, worker_rank, quiet, &extra, &abort_ckpt) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        let attempt = rc.fault_attempt + 1;
+        if attempt > retries || !std::path::Path::new(&abort_ckpt).exists() {
+            return Err(err);
+        }
+        eprintln!("auto-resume {attempt}/{retries}: retrying from {abort_ckpt} after: {err:#}");
+        rc.resume = Some(abort_ckpt.clone());
+        rc.fault_attempt = attempt;
+        extra = vec![
+            "--resume".to_string(),
+            abort_ckpt.clone(),
+            "--fault-attempt".to_string(),
+            attempt.to_string(),
+        ];
+    }
+}
+
+fn run_attempt(
+    rc: &RunConfig,
+    worker_rank: Option<usize>,
+    quiet: bool,
+    extra_argv: &[String],
+    abort_ckpt: &str,
+) -> anyhow::Result<()> {
     let mut builder = rc.session_builder()?;
     // Coordinator side of the distributed backend: bind the rendezvous
     // listener BEFORE spawning or building, so workers never dial a
@@ -195,7 +255,8 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
                 .map_err(|e| anyhow::anyhow!("binding rendezvous listener on {bind}: {e}"))?;
             let addr = listener.local_addr()?.to_string();
             if rc.dist_rank.is_none() {
-                let argv: Vec<String> = std::env::args().skip(1).collect();
+                let mut argv: Vec<String> = std::env::args().skip(1).collect();
+                argv.extend_from_slice(extra_argv);
                 guard = Some(spawn_workers(ranks, &addr, &argv)?);
             }
             builder = builder.dist(DistOptions {
@@ -226,7 +287,24 @@ fn cmd_train(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
         }
     }
 
-    let log = session.run()?;
+    let log = match session.run() {
+        Ok(log) => log,
+        Err(e) => {
+            // Peer failure (or any mid-run error): leave an atomic abort
+            // checkpoint so --auto-resume (or the operator) can restart
+            // every rank from the last completed step. Export is
+            // collective-free, so a dead peer cannot hang the save.
+            if rc.auto_resume > 0 && worker_rank.is_none() {
+                match session.save_checkpoint(abort_ckpt) {
+                    Ok(()) => eprintln!("abort checkpoint saved to {abort_ckpt}"),
+                    Err(se) => eprintln!("abort checkpoint save failed: {se:#}"),
+                }
+            }
+            drop(session); // close this rank's sockets first…
+            drop(guard); // …then kill-and-reap workers stuck on dead collectives
+            return Err(e);
+        }
+    };
     if !quiet {
         println!(
             "\nfinal loss {:.4} (tail {:.4})  entropy floor {:.4}",

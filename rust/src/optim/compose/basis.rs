@@ -351,24 +351,64 @@ impl EigenBasis {
         )
     }
 
-    /// Periodic refresh, executed inline (synchronously).
-    fn refresh_inline(&mut self, t: u64) {
+    /// Chaos hook for the `eigh-fail` fault clause: when this basis is the
+    /// plan's target at step `t`, poison the freshly computed payload with
+    /// NaN so the rejection guards must fire. No-op without an armed plan.
+    fn maybe_poison_refresh(trace_id: u64, payload: &mut BasisPayload, t: u64) {
+        if crate::fault::active().is_some_and(|f| f.eigh_poison(trace_id, t)) {
+            crate::telemetry::metrics::fault_injected_total().inc();
+            let m = [
+                &mut payload.left,
+                &mut payload.right,
+                &mut payload.left_aux,
+                &mut payload.right_aux,
+            ]
+            .into_iter()
+            .find_map(|m| m.as_mut());
+            if let Some(m) = m {
+                m.data[0] = f32::NAN;
+            }
+        }
+    }
+
+    /// Periodic refresh, executed inline (synchronously). Returns whether a
+    /// fresh basis was actually installed: a non-finite factor gram or a
+    /// non-finite decomposition result is rejected — the previous basis
+    /// stays active (SOAP's stale-basis grace, paper §1/Fig. 1 is exactly
+    /// the license for this) and `soap_basis_rejected_total` is bumped.
+    fn refresh_inline(&mut self, t: u64) -> bool {
         let _span = crate::telemetry::span_layer("refresh.inline", "refresh", self.trace_id);
         let t0 = Instant::now();
-        match self.flavor {
+        let finite = |m: &Matrix| m.data.iter().all(|x| x.is_finite());
+        let finite_opt = |m: &Option<Matrix>| m.as_ref().map_or(true, finite);
+        let installed = match self.flavor {
             EigenFlavor::Rotation => {
-                let (new_ql, new_qr) = Self::compute_rotation_refresh(
-                    self.h.refresh,
-                    self.l.as_ref(),
-                    self.r.as_ref(),
-                    self.left_q.as_ref(),
-                    self.right_q.as_ref(),
-                );
-                if let Some(q) = new_ql {
-                    self.left_q = Some(q);
-                }
-                if let Some(q) = new_qr {
-                    self.right_q = Some(q);
+                if !(finite_opt(&self.l) && finite_opt(&self.r)) {
+                    // Poisoned gram: don't hand NaN to the decomposition at
+                    // all — it cannot produce a usable basis.
+                    false
+                } else {
+                    let (left, right) = Self::compute_rotation_refresh(
+                        self.h.refresh,
+                        self.l.as_ref(),
+                        self.r.as_ref(),
+                        self.left_q.as_ref(),
+                        self.right_q.as_ref(),
+                    );
+                    let mut payload =
+                        BasisPayload { left, right, left_aux: None, right_aux: None };
+                    Self::maybe_poison_refresh(self.trace_id, &mut payload, t);
+                    if payload.is_finite() {
+                        if let Some(q) = payload.left {
+                            self.left_q = Some(q);
+                        }
+                        if let Some(q) = payload.right {
+                            self.right_q = Some(q);
+                        }
+                        true
+                    } else {
+                        false
+                    }
                 }
             }
             EigenFlavor::InverseRoot => {
@@ -376,23 +416,44 @@ impl EigenBasis {
                 // the Anil et al / Morwani et al power-1/2 variant, e = 2.5
                 // the paper's DistributedShampoo default (Appendix A).
                 let (lh, rh) = self.corrected_factors(t);
-                let (l_inv, r_inv, vl, vr) = Self::compute_roots(
-                    &lh,
-                    &rh,
-                    self.l_vecs.as_ref(),
-                    self.r_vecs.as_ref(),
-                    self.h.shampoo_exponent,
-                    self.h.shampoo_eps,
-                );
-                self.left_q = Some(l_inv);
-                self.right_q = Some(r_inv);
-                self.l_vecs = Some(vl);
-                self.r_vecs = Some(vr);
+                if !(finite(&lh) && finite(&rh)) {
+                    false
+                } else {
+                    let (l_inv, r_inv, vl, vr) = Self::compute_roots(
+                        &lh,
+                        &rh,
+                        self.l_vecs.as_ref(),
+                        self.r_vecs.as_ref(),
+                        self.h.shampoo_exponent,
+                        self.h.shampoo_eps,
+                    );
+                    let mut payload = BasisPayload {
+                        left: Some(l_inv),
+                        right: Some(r_inv),
+                        left_aux: Some(vl),
+                        right_aux: Some(vr),
+                    };
+                    Self::maybe_poison_refresh(self.trace_id, &mut payload, t);
+                    if payload.is_finite() {
+                        self.left_q = payload.left;
+                        self.right_q = payload.right;
+                        self.l_vecs = payload.left_aux;
+                        self.r_vecs = payload.right_aux;
+                        true
+                    } else {
+                        false
+                    }
+                }
             }
-        }
-        self.basis_step = t;
+        };
         self.refresh_secs += t0.elapsed().as_secs_f64();
-        self.note_refresh_completed();
+        if installed {
+            self.basis_step = t;
+            self.note_refresh_completed();
+        } else {
+            crate::telemetry::metrics::basis_rejected_total().inc();
+        }
+        installed
     }
 
     /// Async mode: swap in the newest published basis, if any. One atomic
@@ -472,7 +533,12 @@ impl EigenBasis {
                             ql.as_ref(),
                             qr.as_ref(),
                         );
-                        BasisPayload { left, right, left_aux: None, right_aux: None }
+                        let mut payload =
+                            BasisPayload { left, right, left_aux: None, right_aux: None };
+                        // The service's publish gate rejects the poisoned
+                        // payload, exercising the async guard path.
+                        Self::maybe_poison_refresh(trace_id, &mut payload, t);
+                        payload
                     }),
                 );
             }
@@ -496,12 +562,14 @@ impl EigenBasis {
                             e,
                             eps,
                         );
-                        BasisPayload {
+                        let mut payload = BasisPayload {
                             left: Some(l_inv),
                             right: Some(r_inv),
                             left_aux: Some(vl),
                             right_aux: Some(vr),
-                        }
+                        };
+                        Self::maybe_poison_refresh(trace_id, &mut payload, t);
+                        payload
                     }),
                 );
             }
@@ -516,24 +584,32 @@ impl EigenBasis {
         if self.dist_owned == Some(false) {
             return;
         }
-        match (self.service.clone(), self.handle.clone()) {
-            (Some(service), Some(handle)) => self.enqueue_refresh(&service, &handle, t),
-            _ => {
-                self.refresh_inline(t);
-                if self.dist_owned == Some(true) {
-                    if let Some(handle) = self.handle.clone() {
-                        let payload = BasisPayload {
-                            left: self.left_q.clone(),
-                            right: self.right_q.clone(),
-                            left_aux: self.l_vecs.clone(),
-                            right_aux: self.r_vecs.clone(),
-                        };
-                        // The inline write above already installed the basis;
-                        // fast-forwarding `adopted_version` stops this rank
-                        // from re-adopting its own publication.
-                        self.adopted_version = handle.publish(payload, t);
-                    }
-                }
+        if let (Some(service), Some(handle)) = (self.service.clone(), self.handle.clone()) {
+            // Worker-panic fallback: if the last background refresh for this
+            // layer blew up, run this one inline instead of re-enqueueing
+            // onto the pool — the run keeps its refresh cadence even with a
+            // pathological layer. The latch clears on take, so a one-off
+            // panic costs exactly one inline refresh.
+            if !handle.take_worker_panic() {
+                self.enqueue_refresh(&service, &handle, t);
+                return;
+            }
+        }
+        let installed = self.refresh_inline(t);
+        if installed && self.dist_owned == Some(true) {
+            if let Some(handle) = self.handle.clone() {
+                let payload = BasisPayload {
+                    left: self.left_q.clone(),
+                    right: self.right_q.clone(),
+                    left_aux: self.l_vecs.clone(),
+                    right_aux: self.r_vecs.clone(),
+                };
+                // The inline write above already installed the basis;
+                // fast-forwarding `adopted_version` stops this rank
+                // from re-adopting its own publication. A rejected
+                // refresh publishes nothing: every rank keeps the
+                // previous basis, so the mesh stays in lockstep.
+                self.adopted_version = handle.publish(payload, t);
             }
         }
     }

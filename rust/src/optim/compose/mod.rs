@@ -71,7 +71,7 @@ pub use workspace::{Scratch, Workspace};
 use std::sync::Arc;
 
 use crate::linalg::Matrix;
-use crate::optim::hyper::Hyper;
+use crate::optim::hyper::{GuardPolicy, Hyper};
 use crate::optim::LayerOptimizer;
 use crate::precond::{DistBasisPort, RefreshService};
 
@@ -368,6 +368,42 @@ impl<B: Basis, E: MomentEngine> Composed<B, E> {
         }
         self.basis.end_step(g, t, &mut self.ws);
     }
+
+    /// Direction-level numerical-health guard (`Hyper::guard`): the last
+    /// line of defense before a non-finite update reaches the weights. The
+    /// trainer's gradient guard catches poisoned batches before the
+    /// optimizer consumes them; this backstop catches poison produced
+    /// *inside* the composition (a bad decomposition slipping past the basis
+    /// rejection, engine overflow). Returns whether the weight update may
+    /// proceed; `Clip` sanitizes `ws.dir` in place and proceeds.
+    fn guard_direction(&mut self) -> bool {
+        if self.h.guard == GuardPolicy::Off {
+            return true;
+        }
+        // |x|-sum under f64 accumulation is monotone, so it is finite iff
+        // every element is — one branch-free read pass, no allocation.
+        let sum: f64 = self.ws.dir.data.iter().map(|&x| (x as f64).abs()).sum();
+        if sum.is_finite() {
+            return true;
+        }
+        match self.h.guard {
+            GuardPolicy::Off => true,
+            GuardPolicy::SkipStep => {
+                crate::telemetry::metrics::step_skipped_total().inc();
+                false
+            }
+            GuardPolicy::Clip(max) => {
+                for x in &mut self.ws.dir.data {
+                    *x = if x.is_finite() { x.clamp(-max, max) } else { 0.0 };
+                }
+                true
+            }
+            GuardPolicy::Abort => {
+                crate::fault::flag_guard_abort();
+                false
+            }
+        }
+    }
 }
 
 impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
@@ -377,9 +413,15 @@ impl<B: Basis, E: MomentEngine> LayerOptimizer for Composed<B, E> {
         if let Some(graft) = &mut self.graft {
             graft.apply(&mut self.ws.dir, g, self.engine.momentum(), t);
         }
-        w.axpy_inplace(-lr, &self.ws.dir);
-        if self.h.weight_decay != 0.0 {
-            w.scale_inplace(1.0 - lr * self.h.weight_decay);
+        // A guard-skipped layer leaves `w` untouched but still runs
+        // `end_step`: factor statistics keep accumulating from `g`, so every
+        // rank of a distributed run (which sees the same post-allreduce
+        // gradient, hence the same skip decision) stays in lockstep.
+        if self.guard_direction() {
+            w.axpy_inplace(-lr, &self.ws.dir);
+            if self.h.weight_decay != 0.0 {
+                w.scale_inplace(1.0 - lr * self.h.weight_decay);
+            }
         }
         self.basis.end_step(g, t, &mut self.ws);
     }
@@ -768,6 +810,44 @@ mod tests {
                 assert_eq!(x, y, "{} drifted after state roundtrip", a.name());
             }
         }
+    }
+
+    #[test]
+    fn direction_guard_policies() {
+        use crate::optim::hyper::GuardPolicy;
+        let mut rng = Rng::new(74);
+        let poisoned = {
+            let mut g = Matrix::randn(&mut rng, 3, 3, 1.0);
+            g.data[4] = f32::NAN;
+            g
+        };
+
+        // SkipStep: a poisoned direction leaves the weights untouched.
+        let mut opt = presets::adamw(3, 3, h_base().with_guard(GuardPolicy::SkipStep));
+        let mut w = Matrix::eye(3);
+        opt.update(&mut w, &poisoned, 1, 0.1);
+        assert_eq!(w.data, Matrix::eye(3).data, "skipped step must not move weights");
+
+        // Clip: non-finite elements zeroed, the update proceeds finitely.
+        let mut opt = presets::adamw(3, 3, h_base().with_guard(GuardPolicy::Clip(10.0)));
+        let mut w = Matrix::eye(3);
+        opt.update(&mut w, &poisoned, 1, 0.1);
+        assert!(w.data.iter().all(|x| x.is_finite()), "clip must keep weights finite");
+        assert_ne!(w.data, Matrix::eye(3).data, "clipped update still applies");
+
+        // Abort: weights untouched, the process-wide latch is set.
+        let _ = crate::fault::take_guard_abort();
+        let mut opt = presets::adamw(3, 3, h_base().with_guard(GuardPolicy::Abort));
+        let mut w = Matrix::eye(3);
+        opt.update(&mut w, &poisoned, 1, 0.1);
+        assert_eq!(w.data, Matrix::eye(3).data, "aborted step must not move weights");
+        assert!(crate::fault::take_guard_abort(), "abort policy must latch");
+
+        // Off: the NaN propagates — pre-guard behavior preserved verbatim.
+        let mut opt = presets::adamw(3, 3, h_base().with_guard(GuardPolicy::Off));
+        let mut w = Matrix::eye(3);
+        opt.update(&mut w, &poisoned, 1, 0.1);
+        assert!(w.data.iter().any(|x| x.is_nan()), "off must not intercept");
     }
 
     #[test]

@@ -178,6 +178,50 @@ impl TensorEigenBasis {
         self.factors[k].as_ref().expect("active mode has factor").scale(1.0 / bc)
     }
 
+    /// One mode's inline refresh behind the numerical-health gate: a
+    /// non-finite factor gram or decomposition result leaves the previous
+    /// per-mode basis in place (stale-basis grace, as in the 2-D basis) and
+    /// bumps `soap_basis_rejected_total`. Returns whether a fresh basis was
+    /// installed. The caller guarantees `factors[k]` is active.
+    fn refresh_mode_inline(&mut self, k: usize, t: u64) -> bool {
+        let finite = |m: &Matrix| m.data.iter().all(|x| x.is_finite());
+        if !finite(self.factors[k].as_ref().expect("active mode has factor")) {
+            crate::telemetry::metrics::basis_rejected_total().inc();
+            return false;
+        }
+        match self.flavor {
+            EigenFlavor::Rotation => {
+                let q_new = Self::rotation_refresh_one(
+                    self.h.refresh,
+                    self.factors[k].as_ref().expect("checked"),
+                    self.qs[k].as_ref().expect("initialized before refresh"),
+                );
+                if !finite(&q_new) {
+                    crate::telemetry::metrics::basis_rejected_total().inc();
+                    return false;
+                }
+                self.qs[k] = Some(q_new);
+            }
+            EigenFlavor::InverseRoot => {
+                let fhat = self.corrected_factor(k, t);
+                let (inv, v) = Self::root_refresh_one(
+                    &fhat,
+                    self.vecs[k].as_ref(),
+                    self.h.shampoo_exponent,
+                    self.h.shampoo_eps,
+                );
+                if !(finite(&inv) && finite(&v)) {
+                    crate::telemetry::metrics::basis_rejected_total().inc();
+                    return false;
+                }
+                self.qs[k] = Some(inv);
+                self.vecs[k] = Some(v);
+            }
+        }
+        self.mode_steps[k] = t;
+        true
+    }
+
     /// Periodic refresh, executed inline (synchronously), all modes.
     fn refresh_inline(&mut self, t: u64) {
         let t0 = Instant::now();
@@ -185,28 +229,7 @@ impl TensorEigenBasis {
             if self.factors[k].is_none() {
                 continue;
             }
-            match self.flavor {
-                EigenFlavor::Rotation => {
-                    let q_new = Self::rotation_refresh_one(
-                        self.h.refresh,
-                        self.factors[k].as_ref().expect("checked"),
-                        self.qs[k].as_ref().expect("initialized before refresh"),
-                    );
-                    self.qs[k] = Some(q_new);
-                }
-                EigenFlavor::InverseRoot => {
-                    let fhat = self.corrected_factor(k, t);
-                    let (inv, v) = Self::root_refresh_one(
-                        &fhat,
-                        self.vecs[k].as_ref(),
-                        self.h.shampoo_exponent,
-                        self.h.shampoo_eps,
-                    );
-                    self.qs[k] = Some(inv);
-                    self.vecs[k] = Some(v);
-                }
-            }
-            self.mode_steps[k] = t;
+            self.refresh_mode_inline(k, t);
         }
         self.refresh_secs += t0.elapsed().as_secs_f64();
     }
@@ -214,10 +237,29 @@ impl TensorEigenBasis {
     /// Async mode: enqueue ONE refresh task per preconditioned mode, each
     /// gated by its own handle — a mode with a refresh still in flight is
     /// skipped (load shedding), the others proceed independently.
-    fn enqueue_refresh(&self, service: &Arc<RefreshService>, t: u64) {
+    fn enqueue_refresh(&mut self, service: &Arc<RefreshService>, t: u64) {
         for k in 0..self.dims.len() {
-            let Some(handle) = &self.handles[k] else { continue };
-            if self.factors[k].is_none() || !handle.try_begin_refresh() {
+            let Some(handle) = self.handles[k].clone() else { continue };
+            if self.factors[k].is_none() {
+                continue;
+            }
+            // Worker-panic fallback (see the 2-D basis): if this mode's last
+            // background refresh blew up, run this one inline instead of
+            // re-enqueueing onto the pool — mirror-publishing under
+            // distributed ownership so peers stay in lockstep.
+            if handle.take_worker_panic() {
+                if self.refresh_mode_inline(k, t) && self.dist_owned == Some(true) {
+                    let payload = BasisPayload {
+                        left: self.qs[k].clone(),
+                        right: None,
+                        left_aux: self.vecs[k].clone(),
+                        right_aux: None,
+                    };
+                    self.adopted[k] = handle.publish(payload, t);
+                }
+                continue;
+            }
+            if !handle.try_begin_refresh() {
                 continue;
             }
             match self.flavor {
@@ -267,22 +309,30 @@ impl TensorEigenBasis {
         match self.service.clone() {
             Some(service) => self.enqueue_refresh(&service, t),
             None => {
-                self.refresh_inline(t);
-                if self.dist_owned == Some(true) {
+                let t0 = Instant::now();
+                for k in 0..self.dims.len() {
+                    if self.factors[k].is_none() {
+                        continue;
+                    }
+                    let installed = self.refresh_mode_inline(k, t);
                     // Mirror each mode's fresh basis into its handle so the
                     // executor can ship it; fast-forwarding `adopted` stops
-                    // this rank from re-adopting its own publication.
-                    for k in 0..self.dims.len() {
-                        let Some(handle) = &self.handles[k] else { continue };
-                        let payload = BasisPayload {
-                            left: self.qs[k].clone(),
-                            right: None,
-                            left_aux: self.vecs[k].clone(),
-                            right_aux: None,
-                        };
-                        self.adopted[k] = handle.publish(payload, t);
+                    // this rank from re-adopting its own publication. A
+                    // rejected mode publishes nothing — every rank keeps
+                    // that mode's previous basis.
+                    if installed && self.dist_owned == Some(true) {
+                        if let Some(handle) = self.handles[k].clone() {
+                            let payload = BasisPayload {
+                                left: self.qs[k].clone(),
+                                right: None,
+                                left_aux: self.vecs[k].clone(),
+                                right_aux: None,
+                            };
+                            self.adopted[k] = handle.publish(payload, t);
+                        }
                     }
                 }
+                self.refresh_secs += t0.elapsed().as_secs_f64();
             }
         }
     }

@@ -32,6 +32,65 @@ impl RefreshMethod {
     }
 }
 
+/// What to do when a gradient or update direction goes non-finite
+/// (NaN/Inf). Parsed from `--guard` / the `guard` config key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GuardPolicy {
+    /// No checks at all — pre-guard behavior, NaNs propagate into the
+    /// weights.
+    Off,
+    /// Skip the optimizer update for the poisoned step/layer; moments and
+    /// weights for that update are left untouched, and
+    /// `soap_step_skipped_total` counts the skip. Default: one bad batch
+    /// costs one step, not the run.
+    SkipStep,
+    /// Zero non-finite elements and clamp the rest into `[-max, max]`, then
+    /// proceed.
+    Clip(f32),
+    /// Surface a typed error and stop the run (strict-reproducibility mode).
+    Abort,
+}
+
+impl GuardPolicy {
+    /// Parse a CLI/config token: `off`, `skip-step`, `clip[:max]`, `abort`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "off" | "none" => GuardPolicy::Off,
+            "skip-step" | "skip" => GuardPolicy::SkipStep,
+            "abort" => GuardPolicy::Abort,
+            other => match other.strip_prefix("clip") {
+                Some("") => GuardPolicy::Clip(GuardPolicy::DEFAULT_CLIP),
+                Some(rest) => {
+                    let max: f32 = rest
+                        .strip_prefix(':')
+                        .and_then(|v| v.parse().ok())
+                        .filter(|m: &f32| m.is_finite() && *m > 0.0)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("bad guard clip bound '{s}': expected clip:<max>")
+                        })?;
+                    GuardPolicy::Clip(max)
+                }
+                None => anyhow::bail!(
+                    "unknown guard policy '{other}': expected off, skip-step, clip[:max], abort"
+                ),
+            },
+        })
+    }
+
+    pub const DEFAULT_CLIP: f32 = 1.0e3;
+
+    /// Canonical token accepted back by [`Self::parse`] (config round-trip).
+    pub fn name(&self) -> String {
+        match self {
+            GuardPolicy::Off => "off".into(),
+            GuardPolicy::SkipStep => "skip-step".into(),
+            GuardPolicy::Clip(max) => format!("clip:{max}"),
+            GuardPolicy::Abort => "abort".into(),
+        }
+    }
+}
+
 /// Hyperparameters shared across all optimizers. Per-optimizer fields are
 /// ignored by optimizers that don't use them.
 #[derive(Clone, Debug)]
@@ -101,6 +160,10 @@ pub struct Hyper {
     /// the production recipe of keeping the basis exact while statistics
     /// are still moving fast. 0 (default) disables.
     pub precondition_warmup: u64,
+    /// Numerical-health response when a gradient or update direction goes
+    /// non-finite. Default [`GuardPolicy::SkipStep`]: drop the poisoned
+    /// update, keep the run alive.
+    pub guard: GuardPolicy,
 }
 
 impl Default for Hyper {
@@ -127,6 +190,7 @@ impl Default for Hyper {
             galore_scale: 1.0,
             adam_warmup_steps: 0,
             precondition_warmup: 0,
+            guard: GuardPolicy::SkipStep,
         }
     }
 }
@@ -183,6 +247,11 @@ impl Hyper {
     /// Refresh-every-step early-phase length.
     pub fn with_precondition_warmup(mut self, steps: u64) -> Self {
         self.precondition_warmup = steps;
+        self
+    }
+    /// Non-finite gradient/direction response policy.
+    pub fn with_guard(mut self, guard: GuardPolicy) -> Self {
+        self.guard = guard;
         self
     }
     /// Does step `t` (1-based) hit this layer's refresh phase? Every step
@@ -262,5 +331,28 @@ mod tests {
         let h = h.with_adam_warmup(50).with_precondition_warmup(9);
         assert_eq!(h.adam_warmup_steps, 50);
         assert_eq!(h.precondition_warmup, 9);
+    }
+
+    #[test]
+    fn guard_policy_parses_and_round_trips() {
+        assert_eq!(Hyper::default().guard, GuardPolicy::SkipStep);
+        for (token, want) in [
+            ("off", GuardPolicy::Off),
+            ("none", GuardPolicy::Off),
+            ("skip-step", GuardPolicy::SkipStep),
+            ("skip", GuardPolicy::SkipStep),
+            ("clip", GuardPolicy::Clip(GuardPolicy::DEFAULT_CLIP)),
+            ("clip:2.5", GuardPolicy::Clip(2.5)),
+            ("abort", GuardPolicy::Abort),
+            ("ABORT", GuardPolicy::Abort),
+        ] {
+            let got = GuardPolicy::parse(token).unwrap();
+            assert_eq!(got, want, "token {token:?}");
+            // name() must be accepted back by parse() (config dump/load).
+            assert_eq!(GuardPolicy::parse(&got.name()).unwrap(), got);
+        }
+        for bad in ["", "klip", "clip:", "clip:-1", "clip:nan", "skipstep"] {
+            assert!(GuardPolicy::parse(bad).is_err(), "token {bad:?} must be rejected");
+        }
     }
 }

@@ -28,6 +28,18 @@ pub struct BasisPayload {
     pub right_aux: Option<Matrix>,
 }
 
+impl BasisPayload {
+    /// Every present factor fully finite? A NaN/Inf decomposition result
+    /// must never publish — consumers keep stepping on the previous basis
+    /// (stale-basis grace) and the rejection is counted instead.
+    pub fn is_finite(&self) -> bool {
+        [&self.left, &self.right, &self.left_aux, &self.right_aux]
+            .into_iter()
+            .flatten()
+            .all(|m| m.data.iter().all(|x| x.is_finite()))
+    }
+}
+
 /// A published payload plus its provenance.
 #[derive(Clone, Debug)]
 pub struct PublishedBasis {
@@ -54,6 +66,11 @@ pub struct BasisHandle {
     /// the previous one has published (or aborted), bounding the service
     /// queue at one job per layer.
     in_flight: AtomicBool,
+    /// Latched when a background refresh for this handle panicked; the
+    /// consumer takes it at its next refresh step and falls back to an
+    /// inline refresh instead of re-enqueueing onto a pool that just blew
+    /// up under this layer's data.
+    worker_panicked: AtomicBool,
 }
 
 /// A distributed executor's grip on one refreshable basis (one per active
@@ -115,6 +132,19 @@ impl BasisHandle {
 
     pub fn refresh_in_flight(&self) -> bool {
         self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Producer side: record that the background compute panicked (called
+    /// alongside [`Self::abort_refresh`]).
+    pub fn note_worker_panic(&self) {
+        self.worker_panicked.store(true, Ordering::Release);
+    }
+
+    /// Consumer side: did the last background refresh panic? Clears the
+    /// latch — the caller is expected to run its fallback (inline refresh)
+    /// exactly once per failure.
+    pub fn take_worker_panic(&self) -> bool {
+        self.worker_panicked.swap(false, Ordering::AcqRel)
     }
 }
 

@@ -87,6 +87,15 @@ impl RefreshService {
             {
                 let mut stats = shared.stats.lock().unwrap();
                 match result {
+                    // Central numerical-health gate for every async refresh,
+                    // whatever basis kind produced the payload: a non-finite
+                    // decomposition is rejected here so consumers keep the
+                    // previous versioned publication (stale-basis grace).
+                    Ok(payload) if !payload.is_finite() => {
+                        handle.abort_refresh();
+                        stats.failed += 1;
+                        crate::telemetry::metrics::basis_rejected_total().inc();
+                    }
                     Ok(payload) => {
                         handle.publish(payload, snapshot_step);
                         stats.completed += 1;
@@ -94,6 +103,7 @@ impl RefreshService {
                         stats.max_secs = stats.max_secs.max(dt);
                     }
                     Err(_) => {
+                        handle.note_worker_panic();
                         handle.abort_refresh();
                         stats.failed += 1;
                     }
@@ -223,7 +233,41 @@ mod tests {
         svc.wait_idle();
         assert_eq!(svc.stats().failed, 1);
         assert_eq!(handle.version(), 0, "failed refresh must not publish");
+        assert!(handle.take_worker_panic(), "panic must latch for the inline fallback");
+        assert!(!handle.take_worker_panic(), "latch must clear on take");
         assert!(handle.try_begin_refresh(), "gate released after failure");
+    }
+
+    #[test]
+    fn non_finite_payload_is_rejected_not_published() {
+        let svc = RefreshService::new(1);
+        let handle = Arc::new(BasisHandle::new());
+        // Seed a good publication, then push a poisoned one: consumers must
+        // keep seeing version 1.
+        assert!(handle.try_begin_refresh());
+        svc.enqueue(
+            Arc::clone(&handle),
+            1,
+            Box::new(|| BasisPayload { left: Some(Matrix::eye(3)), ..Default::default() }),
+        );
+        svc.wait_idle();
+        assert!(handle.try_begin_refresh());
+        svc.enqueue(
+            Arc::clone(&handle),
+            2,
+            Box::new(|| BasisPayload {
+                left: Some(Matrix::from_vec(1, 2, vec![f32::NAN, 1.0])),
+                ..Default::default()
+            }),
+        );
+        svc.wait_idle();
+        let stats = svc.stats();
+        assert_eq!((stats.completed, stats.failed), (1, 1));
+        let latest = handle.latest().unwrap();
+        assert_eq!(latest.version, 1, "poisoned refresh must not publish");
+        assert!(latest.payload.is_finite());
+        assert!(!handle.take_worker_panic(), "rejection is not a panic");
+        assert!(handle.try_begin_refresh(), "gate released after rejection");
     }
 
     #[test]

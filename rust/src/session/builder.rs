@@ -147,6 +147,7 @@ pub struct SessionBuilder {
     metrics_every: u64,
     trace_out: Option<PathBuf>,
     dist: Option<DistOptions>,
+    fault_plan: Option<(String, u32)>,
 }
 
 impl Default for SessionBuilder {
@@ -177,6 +178,7 @@ impl SessionBuilder {
             metrics_every: 10,
             trace_out: None,
             dist: None,
+            fault_plan: None,
         }
     }
 
@@ -311,6 +313,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm a seeded fault-injection plan ([`crate::fault::FaultPlan`]
+    /// grammar) for this session's process. `attempt` is the auto-resume
+    /// relaunch counter: attempts > 0 disarm the plan's one-shot clauses
+    /// (crash, eigh-fail, grad poison) so a recovered run doesn't re-fire
+    /// the fault it just survived. Chaos testing only.
+    pub fn fault_plan(mut self, plan: &str, attempt: u32) -> Self {
+        self.fault_plan = Some((plan.to_string(), attempt));
+        self
+    }
+
     /// The hyperparameters as the optimizer will actually see them — with a
     /// composition spec's structural overrides folded in.
     fn resolved_hyper(&self) -> Hyper {
@@ -442,11 +454,25 @@ impl SessionBuilder {
             metrics_every,
             trace_out,
             mut dist,
+            fault_plan,
         } = self;
         let model = model.expect("validated");
         // The span recorder and instrument gates are process-global; the
-        // builder is the one place sessions flip them.
+        // builder is the one place sessions flip them — and likewise the
+        // fault-injection seam: armed here (with this process's rank, so
+        // rank-targeted clauses resolve) or explicitly cleared, so one
+        // session's plan never leaks into the next build in this process.
         crate::telemetry::set_enabled(telemetry);
+        match &fault_plan {
+            Some((plan, attempt)) => {
+                let mut plan = crate::fault::FaultPlan::parse(plan)?;
+                if *attempt > 0 {
+                    plan.disarm_one_shot();
+                }
+                crate::fault::install(plan, dist.as_ref().map(|o| o.rank).unwrap_or(0));
+            }
+            None => crate::fault::clear(),
+        }
 
         let mut rng = Rng::new(seed);
         let (grad, params, vocab, seq, batch) = match &model {
@@ -527,6 +553,9 @@ impl SessionBuilder {
                     DistEndpoint::Mem(ep) => DistComm::connect_mem(ep, opts.timeout)?,
                 };
                 let comm = Arc::new(comm);
+                // Liveness beacon (TCP only): peers detect a dead rank
+                // within the collective timeout even between steps.
+                DistComm::start_heartbeat(&comm);
                 dist_comm = Some(Arc::clone(&comm));
                 Box::new(DistExecutor::new_tensors(opt, &hyper, &tensor_shapes, comm, drain_refresh))
             }

@@ -69,6 +69,26 @@ impl RankHealth {
     }
 }
 
+/// Cumulative fault-tolerance counters, sampled from the metrics registry on
+/// the health cadence. Always present — all zeros on a clean run — so
+/// dashboards can alert on the first nonzero value. Field names in the JSONL
+/// `faults` object are the full `soap_*` series names.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultHealth {
+    /// Faults fired by the seeded injection plan (`--fault-plan`).
+    pub injected_total: u64,
+    /// Optimizer updates skipped by the numerical-health guard.
+    pub steps_skipped_total: u64,
+    /// Refreshed bases rejected for non-finite factors (stale-basis grace).
+    pub bases_rejected_total: u64,
+    /// Transport retries (injected-drop re-sends + connect backoff rounds).
+    pub transport_retries_total: u64,
+    /// Heartbeat frames written by this process.
+    pub heartbeats_sent_total: u64,
+    /// Longest current peer silence, seconds (0 outside TCP transport).
+    pub heartbeat_silence_s: f64,
+}
+
 /// A periodic optimizer-health sample (every `metrics_every` steps when
 /// telemetry is enabled), combining per-layer state with refresh-service
 /// and thread-pool introspection.
@@ -95,6 +115,8 @@ pub struct HealthSnapshot {
     /// Per-rank rows (distributed backend only; empty elsewhere). Rank 0
     /// gathers one row from every worker on the metrics cadence.
     pub ranks: Vec<RankHealth>,
+    /// Fault-tolerance counters at this sample.
+    pub faults: FaultHealth,
 }
 
 /// Streaming consumer of training metrics.
@@ -202,6 +224,35 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
             ("refresh_count", Json::num(health.refresh_count as f64)),
             ("pool_jobs", opt_num(health.pool_jobs.map(|j| j as f64))),
             ("pool_busy_s", opt_num(health.pool_busy_s)),
+            (
+                "faults",
+                Json::obj(vec![
+                    (
+                        "soap_fault_injected_total",
+                        Json::num(health.faults.injected_total as f64),
+                    ),
+                    (
+                        "soap_step_skipped_total",
+                        Json::num(health.faults.steps_skipped_total as f64),
+                    ),
+                    (
+                        "soap_basis_rejected_total",
+                        Json::num(health.faults.bases_rejected_total as f64),
+                    ),
+                    (
+                        "soap_transport_retries_total",
+                        Json::num(health.faults.transport_retries_total as f64),
+                    ),
+                    (
+                        "soap_heartbeats_sent_total",
+                        Json::num(health.faults.heartbeats_sent_total as f64),
+                    ),
+                    (
+                        "soap_heartbeat_silence_seconds",
+                        num_or_null(health.faults.heartbeat_silence_s),
+                    ),
+                ]),
+            ),
             ("layers", Json::Arr(layers)),
         ];
         if !health.ranks.is_empty() {
@@ -324,6 +375,11 @@ mod tests {
                     bytes_recv: 2048,
                     allreduce_s: 0.25,
                 }],
+                faults: FaultHealth {
+                    injected_total: 2,
+                    steps_skipped_total: 1,
+                    ..Default::default()
+                },
             };
             sink.on_health(&h);
         }
@@ -345,6 +401,11 @@ mod tests {
         assert_eq!(ranks[0].get("rank").as_f64(), Some(1.0));
         assert_eq!(ranks[0].get("owned_refreshes").as_f64(), Some(9.0));
         assert_eq!(ranks[0].get("allreduce_s").as_f64(), Some(0.25));
+        // Fault counters ride along under their full series names.
+        let faults = v.get("faults");
+        assert_eq!(faults.get("soap_fault_injected_total").as_f64(), Some(2.0));
+        assert_eq!(faults.get("soap_step_skipped_total").as_f64(), Some(1.0));
+        assert_eq!(faults.get("soap_basis_rejected_total").as_f64(), Some(0.0));
     }
 
     #[test]

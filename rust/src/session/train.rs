@@ -16,6 +16,7 @@ use crate::data::{Batch, BatchStream, CorpusSpec};
 use crate::dist::{microbatch_slice, DistComm};
 use crate::linalg::{Matrix, TensorShape};
 use crate::model;
+use crate::optim::hyper::GuardPolicy;
 use crate::optim::{Hyper, OptKind, RefreshMode, Schedule};
 use crate::runtime::{
     literal_from_matrix, literal_from_tokens, matrix_from_literal, scalar_from_literal,
@@ -183,6 +184,55 @@ impl TrainSession {
         timing.grad_s = t0.elapsed().as_secs_f64();
         drop(span_grad);
 
+        // Seeded fault injection (post-allreduce, so every rank of a
+        // distributed run poisons the same replicated gradient and the guard
+        // decisions below stay in lockstep).
+        if let Some(f) = crate::fault::active() {
+            let t_next = self.steps_done + 1;
+            if f.should_crash(t_next) {
+                crate::telemetry::metrics::fault_injected_total().inc();
+                eprintln!("fault-plan: injected crash at step {t_next}");
+                std::process::exit(101);
+            }
+            for (layer, g) in grads.iter_mut().enumerate() {
+                if let Some(v) = f.grad_poison(layer, t_next) {
+                    crate::telemetry::metrics::fault_injected_total().inc();
+                    g.data[0] = v;
+                }
+            }
+        }
+
+        // Gradient-level numerical-health guard: catch a poisoned batch
+        // BEFORE the optimizer consumes it, so a skipped step leaves moments
+        // and factor statistics exactly as they were — one bad batch costs
+        // one step, not the run.
+        let mut skip_update = false;
+        if self.hyper.guard != GuardPolicy::Off {
+            let finite = grads
+                .iter()
+                .all(|g| g.data.iter().map(|&x| (x as f64).abs()).sum::<f64>().is_finite());
+            if !finite {
+                match self.hyper.guard {
+                    GuardPolicy::Off => {}
+                    GuardPolicy::SkipStep => {
+                        crate::telemetry::metrics::step_skipped_total().inc();
+                        skip_update = true;
+                    }
+                    GuardPolicy::Clip(max) => {
+                        for g in &mut grads {
+                            for x in &mut g.data {
+                                *x = if x.is_finite() { x.clamp(-max, max) } else { 0.0 };
+                            }
+                        }
+                    }
+                    GuardPolicy::Abort => anyhow::bail!(
+                        "non-finite gradient at step {} (guard=abort)",
+                        self.steps_done + 1
+                    ),
+                }
+            }
+        }
+
         // Optimizer step (+ refresh accounting): hot-path refresh seconds
         // from the executor's inline account, background seconds reported
         // separately (they overlap the step instead of extending it).
@@ -196,9 +246,12 @@ impl TrainSession {
             GradBackend::Pjrt { engine, .. } => Some(engine),
             GradBackend::Native { .. } => None,
         };
-        {
+        if !skip_update {
             let _span = crate::telemetry::span("step.update", "step");
             self.exec.step(engine, &mut self.params, &grads, t, lr)?;
+        }
+        if crate::fault::take_guard_abort() {
+            anyhow::bail!("non-finite update direction at step {t} (guard=abort)");
         }
         if self.drain_refresh {
             // Deterministic-async mode: adoption timing becomes a pure
@@ -269,6 +322,14 @@ impl TrainSession {
             None => (None, None),
         };
         let lat = crate::telemetry::metrics::refresh_latency_seconds();
+        let faults = super::sink::FaultHealth {
+            injected_total: crate::telemetry::metrics::fault_injected_total().get(),
+            steps_skipped_total: crate::telemetry::metrics::step_skipped_total().get(),
+            bases_rejected_total: crate::telemetry::metrics::basis_rejected_total().get(),
+            transport_retries_total: crate::telemetry::metrics::transport_retries_total().get(),
+            heartbeats_sent_total: crate::telemetry::metrics::heartbeats_sent_total().get(),
+            heartbeat_silence_s: crate::telemetry::metrics::heartbeat_silence_seconds().get(),
+        };
         let health = HealthSnapshot {
             step: t,
             queue_depth,
@@ -280,6 +341,7 @@ impl TrainSession {
             pool_busy_s,
             layers,
             ranks,
+            faults,
         };
         for sink in &mut self.sinks {
             sink.on_health(&health);

@@ -366,6 +366,51 @@ pub fn dist_allreduce_seconds() -> &'static Histogram {
     H.get_or_init(|| registry().histogram("soap_dist_allreduce_seconds"))
 }
 
+// Fault-tolerance counters below increment unconditionally (not gated on
+// `telemetry::enabled()`): faults and guard trips are rare, and their counts
+// must survive into health snapshots even on minimal-telemetry runs.
+
+/// Faults fired by the seeded injection plan (`--fault-plan`): dropped /
+/// duplicated / delayed frames, poisoned gradients and decompositions.
+pub fn fault_injected_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_fault_injected_total"))
+}
+
+/// Optimizer updates skipped by the numerical-health guard (non-finite
+/// gradient or update direction under `GuardPolicy::SkipStep`).
+pub fn step_skipped_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_step_skipped_total"))
+}
+
+/// Refreshed bases rejected for non-finite factors; consumers kept the
+/// previous publication (stale-basis grace).
+pub fn basis_rejected_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_basis_rejected_total"))
+}
+
+/// Transport-level retries: re-sends of injected frame drops plus connect
+/// backoff rounds during rendezvous.
+pub fn transport_retries_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_transport_retries_total"))
+}
+
+/// Heartbeat frames written by this process's heartbeat thread.
+pub fn heartbeats_sent_total() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_heartbeats_sent_total"))
+}
+
+/// Longest current silence across peers, seconds (updated per heartbeat
+/// tick; crossing `--dist-timeout` means a peer is presumed dead).
+pub fn heartbeat_silence_seconds() -> &'static Gauge {
+    static G: OnceLock<&'static Gauge> = OnceLock::new();
+    G.get_or_init(|| registry().gauge("soap_heartbeat_silence_seconds"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -124,6 +124,37 @@ fn steady_state_composed_step_allocates_zero() {
         );
     }
 
+    // Guard path (PR-8): every section above already runs with the default
+    // `guard = skip-step` armed — the per-step non-finiteness scan is part
+    // of the measured zero. This section exercises the SKIP branch itself: a
+    // NaN gradient poisons the engine moments, so every subsequent update
+    // direction is non-finite and the guard skips the weight write each
+    // step. One poisoned warm-up step initializes the skip counter's
+    // OnceLock slot (its only allocation); the measured skips must be free.
+    {
+        let mut opt = presets::soap(rows, cols, h.clone());
+        let mut rng = Rng::new(44);
+        let grads: Vec<Matrix> =
+            (0..26).map(|_| Matrix::randn(&mut rng, rows, cols, 1.0)).collect();
+        let mut bad = Matrix::zeros(rows, cols);
+        bad.data[0] = f32::NAN;
+        let mut w = Matrix::zeros(rows, cols);
+        for (i, g) in grads.iter().take(21).enumerate() {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        opt.update(&mut w, &bad, 22, 0.01);
+        let before = allocs();
+        for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+            opt.update(&mut w, g, i as u64 + 1, 0.01);
+        }
+        let n = allocs() - before;
+        assert_eq!(n, 0, "guarded skip path performed {n} heap allocations");
+        assert!(
+            w.data.iter().all(|x| x.is_finite()),
+            "skip-step guard let a non-finite update reach the weights"
+        );
+    }
+
     // Telemetry-enabled rerun: span recording must also be allocation-free
     // in steady state. The per-thread ring registers (and allocates) on the
     // first enabled span — during warm-up — after which every recorded span

@@ -1,0 +1,198 @@
+//! Chaos suite: seeded fault injection end-to-end (the PR-8 tentpole).
+//!
+//! 1. **Frame faults are transparent**: a 2-rank mem-transport run under
+//!    injected drops/dups/delays completes and is BITWISE-identical to the
+//!    faults-off run — the retry/dedup machinery delivers every frame
+//!    exactly once — while `soap_transport_retries_total` and
+//!    `soap_fault_injected_total` prove the faults actually fired.
+//! 2. **One bad batch costs one step**: a NaN gradient injected at the last
+//!    step under the default skip-step guard leaves params + optimizer
+//!    state bitwise equal to a clean run that stopped one step earlier.
+//! 3. **Stale-basis grace**: a poisoned eigh refresh is rejected, the
+//!    previous basis stays active (paper §1/Fig. 1), and the run completes
+//!    with finite loss.
+//! 4. **Abort policy**: an injected Inf gradient under `guard=abort`
+//!    surfaces a typed error instead of corrupting state.
+//! 5. **Backoff property**: `backoff_delay` is bounded by its cap and
+//!    monotone nondecreasing in the attempt number for any seed.
+//!
+//! Fault installation is process-global, so every test that arms a plan
+//! holds `CHAOS_LOCK` and clears the plan before releasing it.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use soap_lab::coordinator::Checkpoint;
+use soap_lab::dist::{MemCluster, Transport};
+use soap_lab::model::NplmConfig;
+use soap_lab::optim::{GuardPolicy, Hyper, OptKind, Schedule};
+use soap_lab::session::{
+    Backend, DistEndpoint, DistOptions, ModelSpec, SessionBuilder, TrainSession,
+};
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+const SEQ: usize = 24;
+const BATCH: usize = 8;
+
+fn builder(steps: u64) -> SessionBuilder {
+    let nplm = NplmConfig { vocab: 64, context: 3, dim: 12, hidden: 24, conv: false };
+    TrainSession::builder()
+        .model(ModelSpec::nplm(nplm, SEQ, BATCH))
+        .optimizer(OptKind::Soap)
+        .hyper(Hyper { precond_freq: 4, ..Hyper::default() })
+        .schedule(Schedule::Constant { lr: 0.02 })
+        .steps(steps)
+        .seed(9)
+        .grad_accum(2)
+        .workers(2)
+        .backend(Backend::Serial)
+}
+
+/// Run a 2-rank mem-transport session (one thread per rank), optionally
+/// under a fault plan; returns rank 0's `(params, losses)`.
+fn dist_pair(steps: u64, plan: Option<&'static str>) -> (Vec<Vec<f32>>, Vec<(u64, f32)>) {
+    let ranks = 2;
+    let endpoints = MemCluster::new(ranks);
+    let mut handles = Vec::new();
+    for (rank, ep) in endpoints.into_iter().enumerate() {
+        handles.push(std::thread::spawn(move || {
+            let mut b = builder(steps)
+                .backend(Backend::Distributed { ranks, transport: Transport::Mem })
+                .dist(DistOptions {
+                    rank,
+                    ranks,
+                    timeout: Duration::from_secs(30),
+                    endpoint: DistEndpoint::Mem(ep),
+                });
+            if let Some(plan) = plan {
+                b = b.fault_plan(plan, 0);
+            }
+            let mut session = b.build().unwrap_or_else(|e| panic!("rank {rank}: build: {e}"));
+            let log = session.run().unwrap_or_else(|e| panic!("rank {rank}: run: {e}"));
+            let params: Vec<Vec<f32>> = session.params.iter().map(|m| m.data.clone()).collect();
+            (rank, params, log.losses)
+        }));
+    }
+    let mut runs: Vec<_> =
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect();
+    runs.sort_by_key(|r| r.0);
+    let (_, params, losses) = runs.swap_remove(0);
+    (params, losses)
+}
+
+#[test]
+fn frame_faults_are_recoverable_and_bitwise_transparent() {
+    let _g = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let clean = dist_pair(10, None);
+    let injected_before = soap_lab::telemetry::metrics::fault_injected_total().get();
+    let retries_before = soap_lab::telemetry::metrics::transport_retries_total().get();
+    let faulted =
+        dist_pair(10, Some("seed=7;drop-frame=0.25;dup-frame=0.25;delay-frame=0.1:1"));
+    let injected = soap_lab::telemetry::metrics::fault_injected_total().get() - injected_before;
+    let retries = soap_lab::telemetry::metrics::transport_retries_total().get() - retries_before;
+    soap_lab::fault::clear();
+    assert!(injected > 0, "fault plan armed but nothing fired");
+    assert!(retries > 0, "injected drops must show up as transport retries");
+    assert_eq!(faulted.1, clean.1, "loss trajectory changed under recoverable frame faults");
+    for (i, (a, b)) in faulted.0.iter().zip(&clean.0).enumerate() {
+        assert_eq!(a, b, "param {i} diverged under recoverable frame faults");
+    }
+}
+
+#[test]
+fn nan_grad_skip_step_costs_exactly_one_step() {
+    let _g = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pid = std::process::id();
+    let k = 8u64;
+
+    // Clean run stopping one step short of the fault.
+    let short = std::env::temp_dir().join(format!("soap_chaos_short_{pid}.ckpt"));
+    let mut session = builder(k - 1).build().unwrap();
+    session.run().unwrap();
+    session.save_checkpoint(&short).unwrap();
+    drop(session);
+
+    // Faulted run: NaN injected into layer 0's gradient at step k; the
+    // default skip-step guard must bypass the optimizer entirely.
+    let skipped_before = soap_lab::telemetry::metrics::step_skipped_total().get();
+    let full = std::env::temp_dir().join(format!("soap_chaos_full_{pid}.ckpt"));
+    let mut session = builder(k).fault_plan(&format!("nan-grad=0:{k}"), 0).build().unwrap();
+    session.run().unwrap();
+    session.save_checkpoint(&full).unwrap();
+    drop(session);
+    let skipped = soap_lab::telemetry::metrics::step_skipped_total().get() - skipped_before;
+    soap_lab::fault::clear();
+    assert_eq!(skipped, 1, "exactly one step should have been skipped");
+
+    let a = Checkpoint::load(&short).unwrap();
+    let b = Checkpoint::load(&full).unwrap();
+    std::fs::remove_file(&short).ok();
+    std::fs::remove_file(&full).ok();
+    // Step counter and data cursor differ (batch k was drawn but never
+    // applied); params and optimizer state must match bitwise.
+    assert_eq!(a.step, k - 1);
+    assert_eq!(b.step, k);
+    assert_eq!(a.params.len(), b.params.len());
+    for (i, (pa, pb)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(pa.data, pb.data, "param {i}: skipped step leaked into the weights");
+    }
+    assert_eq!(a.opt_state.len(), b.opt_state.len());
+    for ((la, ta), (lb, tb)) in a.opt_state.iter().zip(&b.opt_state) {
+        assert_eq!(la, lb);
+        assert_eq!(ta.len(), tb.len(), "layer {la}: optimizer state tensor count changed");
+        for (j, (ma, mb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(ma.data, mb.data, "layer {la} state tensor {j} touched by skipped step");
+        }
+    }
+}
+
+#[test]
+fn poisoned_eigh_is_rejected_and_stale_basis_carries_the_run() {
+    let _g = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let rejected_before = soap_lab::telemetry::metrics::basis_rejected_total().get();
+    let injected_before = soap_lab::telemetry::metrics::fault_injected_total().get();
+    let mut session = builder(12).fault_plan("eigh-fail=0:8", 0).build().unwrap();
+    let log = session.run().unwrap();
+    let rejected = soap_lab::telemetry::metrics::basis_rejected_total().get() - rejected_before;
+    let injected = soap_lab::telemetry::metrics::fault_injected_total().get() - injected_before;
+    soap_lab::fault::clear();
+    assert!(injected >= 1, "eigh-fail clause never fired");
+    assert!(rejected >= 1, "poisoned refresh was not rejected");
+    let (_, last) = *log.losses.last().unwrap();
+    assert!(last.is_finite(), "run diverged despite basis rejection: loss {last}");
+}
+
+#[test]
+fn abort_guard_surfaces_typed_error() {
+    let _g = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut session = builder(6)
+        .hyper(Hyper { precond_freq: 4, ..Hyper::default() }.with_guard(GuardPolicy::Abort))
+        .fault_plan("inf-grad=0:3", 0)
+        .build()
+        .unwrap();
+    let err = session.run().unwrap_err();
+    soap_lab::fault::clear();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("guard=abort") && msg.contains("step 3"), "{msg}");
+}
+
+#[test]
+fn backoff_delay_is_bounded_and_monotone() {
+    let base = Duration::from_micros(50);
+    let cap = Duration::from_millis(5);
+    for seed in 0..32u64 {
+        let mut prev = Duration::ZERO;
+        for attempt in 0..64u32 {
+            let d = soap_lab::fault::backoff_delay(attempt, base, cap, seed);
+            assert!(d <= cap, "seed {seed} attempt {attempt}: {d:?} exceeds cap {cap:?}");
+            assert!(d >= base.min(cap), "seed {seed} attempt {attempt}: {d:?} under base");
+            assert!(
+                d >= prev,
+                "seed {seed} attempt {attempt}: backoff not monotone ({prev:?} -> {d:?})"
+            );
+            prev = d;
+        }
+        assert_eq!(prev, cap, "seed {seed}: backoff never saturated at the cap");
+    }
+}
