@@ -1,15 +1,29 @@
 //! FIG1-R (paper Fig 1 right): preconditioning-frequency ablation.
 //! SOAP and Shampoo at f ∈ {1, 10, 32, 100}, with AdamW as the horizontal
-//! reference.
+//! reference — all nine runs scheduled as one sweep through the
+//! orchestrator (`soap_lab::sweep`), which also leaves the per-job loss
+//! trajectories in `bench_results/fig1_frequency_sweep/`.
 //!
 //! Expected shape (paper §6.2): both beat AdamW at every f; at f = 1 SOAP ≈
 //! Shampoo; as f grows both degrade but Shampoo degrades much faster —
 //! SOAP's Adam second moment keeps adapting between refreshes, Shampoo's
 //! preconditioner is simply stale.
 
-use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
-use soap_lab::optim::OptKind;
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps};
+use soap_lab::optim::{Hyper, OptKind};
+use soap_lab::sweep::{run_sweep, JobSpec, SweepOptions, SweepOutcome, SweepSpec};
 use soap_lab::util::bench::Report;
+
+fn tail_of(outcome: &SweepOutcome, id: &str) -> f64 {
+    let row = outcome.row(id).unwrap_or_else(|| panic!("missing sweep row {id}"));
+    assert_eq!(
+        row.get("status").as_str(),
+        Some("done"),
+        "job {id} failed: {}",
+        row.get("error").as_str().unwrap_or("unknown error")
+    );
+    row.get("tail_loss").as_f64().expect("tail_loss")
+}
 
 fn main() {
     if !artifacts_available() {
@@ -21,8 +35,30 @@ fn main() {
     let freqs = [1u64, 10, 32, 100];
     println!("fig1 (right): model={model} steps={steps} freqs={freqs:?}");
 
-    let (adamw_log, _) = RunSpec::new(&model, OptKind::AdamW, steps).run().expect("adamw");
-    let adamw = adamw_log.tail_loss(20);
+    let mut jobs =
+        vec![JobSpec::new("adamw", &model, OptKind::AdamW, steps).with_assign("optimizer", "adamw")];
+    for opt in [OptKind::Soap, OptKind::Shampoo] {
+        for &f in &freqs {
+            jobs.push(
+                JobSpec::new(format!("{}-f{f:03}", opt.name()), &model, opt, steps)
+                    .with_hyper(Hyper::default().with_freq(f))
+                    .with_assign("optimizer", opt.name())
+                    .with_assign("freq", format!("{f}")),
+            );
+        }
+    }
+    let spec = SweepSpec::from_jobs("fig1-frequency", jobs);
+    let outcome = run_sweep(
+        &spec,
+        &SweepOptions {
+            out_dir: "bench_results/fig1_frequency_sweep".into(),
+            max_concurrency: 2,
+            ..SweepOptions::default()
+        },
+    )
+    .expect("sweep");
+
+    let adamw = tail_of(&outcome, "adamw");
     println!("adamw reference: {adamw:.4}");
 
     let mut report = Report::new(
@@ -30,17 +66,17 @@ fn main() {
         "frequency",
         "final loss",
     );
-    let mut series: Vec<(OptKind, Vec<(f64, f64)>)> =
-        vec![(OptKind::Soap, Vec::new()), (OptKind::Shampoo, Vec::new())];
-    for &f in &freqs {
-        for (opt, pts) in series.iter_mut() {
-            let (log, _) = RunSpec::new(&model, *opt, steps).with_freq(f).run().expect("run");
-            let tail = log.tail_loss(20);
-            println!("{:<8} f={f:<4} loss {tail:.4} (Δ vs adamw {:+.4})", opt.name(), tail - adamw);
-            pts.push((f as f64, tail as f64));
+    for opt in [OptKind::Soap, OptKind::Shampoo] {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for &f in &freqs {
+            let tail = tail_of(&outcome, &format!("{}-f{f:03}", opt.name()));
+            println!(
+                "{:<8} f={f:<4} loss {tail:.4} (Δ vs adamw {:+.4})",
+                opt.name(),
+                tail - adamw
+            );
+            pts.push((f as f64, tail));
         }
-    }
-    for (opt, pts) in series {
         report.add_series(opt.name(), pts.clone());
         // Degradation = loss(f_max) − loss(f_min).
         let degr = pts.last().unwrap().1 - pts.first().unwrap().1;
@@ -48,7 +84,7 @@ fn main() {
     }
     report.add_series(
         "adamw (f-independent)",
-        freqs.iter().map(|&f| (f as f64, adamw as f64)).collect(),
+        freqs.iter().map(|&f| (f as f64, adamw)).collect(),
     );
     report.note("paper: SOAP degrades significantly slower than Shampoo".to_string());
     report.render_and_save();

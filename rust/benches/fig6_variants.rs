@@ -1,14 +1,33 @@
 //! FIG6 (paper Fig 6 + §7): space/time-saving SOAP variants —
 //! factorized (Adafactor second moment in the eigenbasis), one-sided
 //! (identity on the large side), and both — against SOAP, Shampoo, AdamW.
+//! The six runs go through the sweep orchestrator as one job list; loss
+//! trajectories and state sizes come back in the result rows (also left in
+//! `bench_results/fig6_variants_sweep/`).
 //!
 //! Expected shape (paper): factorized ≈ SOAP (negligible loss increase);
 //! one-sided costs more but still ≥ Shampoo; all variants beat AdamW while
 //! the combined variant uses LESS optimizer memory than AdamW.
 
-use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps, RunSpec};
+use soap_lab::experiments::harness::{artifacts_available, bench_model, bench_steps};
 use soap_lab::optim::{Hyper, OptKind};
+use soap_lab::sweep::{run_sweep, JobSpec, SweepOptions, SweepSpec};
 use soap_lab::util::bench::Report;
+use soap_lab::util::json::Json;
+
+fn loss_series(row: &Json) -> Vec<(f64, f64)> {
+    row.get("losses")
+        .as_arr()
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|p| {
+                    let p = p.as_arr()?;
+                    Some((p.first()?.as_f64()?, p.get(1)?.as_f64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
 
 fn main() {
     if !artifacts_available() {
@@ -20,14 +39,37 @@ fn main() {
     println!("fig6: model={model} steps={steps}");
 
     let h = Hyper::default();
-    let cases: Vec<(&str, OptKind, Hyper)> = vec![
-        ("adamw", OptKind::AdamW, h.clone()),
-        ("shampoo", OptKind::Shampoo, h.clone()),
-        ("soap", OptKind::Soap, h.clone()),
-        ("soap (factorized)", OptKind::Soap, h.clone().factorized()),
-        ("soap (one-sided)", OptKind::Soap, h.clone().one_sided()),
-        ("soap (factorized, one-sided)", OptKind::Soap, h.clone().factorized().one_sided()),
+    let cases: Vec<(&str, &str, OptKind, Hyper)> = vec![
+        ("adamw", "adamw", OptKind::AdamW, h.clone()),
+        ("shampoo", "shampoo", OptKind::Shampoo, h.clone()),
+        ("soap", "soap", OptKind::Soap, h.clone()),
+        ("soap-fact", "soap (factorized)", OptKind::Soap, h.clone().factorized()),
+        ("soap-1side", "soap (one-sided)", OptKind::Soap, h.clone().one_sided()),
+        (
+            "soap-fact-1side",
+            "soap (factorized, one-sided)",
+            OptKind::Soap,
+            h.clone().factorized().one_sided(),
+        ),
     ];
+    let jobs: Vec<JobSpec> = cases
+        .iter()
+        .map(|(id, name, opt, hyper)| {
+            JobSpec::new(*id, &model, *opt, steps)
+                .with_hyper(hyper.clone())
+                .with_assign("variant", *name)
+        })
+        .collect();
+    let spec = SweepSpec::from_jobs("fig6-variants", jobs);
+    let outcome = run_sweep(
+        &spec,
+        &SweepOptions {
+            out_dir: "bench_results/fig6_variants_sweep".into(),
+            max_concurrency: 2,
+            ..SweepOptions::default()
+        },
+    )
+    .expect("sweep");
 
     let mut report = Report::new(
         &format!("Fig 6: SOAP variants, loss curves [{model}]"),
@@ -35,21 +77,19 @@ fn main() {
         "loss",
     );
     let mut rows = Vec::new();
-    for (name, opt, hyper) in cases {
-        let spec = RunSpec::new(&model, opt, steps).with_hyper(hyper);
-        let (log, secs) = spec.run().expect("run");
-        // A fresh one-step session for the state-bytes accounting.
-        let mut probe = spec.build_session().expect("probe session");
-        let _ = probe.step();
-        let state_mb = probe.state_bytes() as f64 / 1e6;
-        println!(
-            "{name:<30} tail loss {:.4}  {:.2}s/step  optimizer state {:.2} MB",
-            log.tail_loss(20),
-            secs,
-            state_mb
+    for (id, name, _, _) in &cases {
+        let row = outcome.row(id).unwrap_or_else(|| panic!("missing sweep row {id}"));
+        assert_eq!(
+            row.get("status").as_str(),
+            Some("done"),
+            "job {id} failed: {}",
+            row.get("error").as_str().unwrap_or("unknown error")
         );
-        rows.push((name.to_string(), log.tail_loss(20), state_mb));
-        report.add_series(name, log.loss_series());
+        let tail = row.get("tail_loss").as_f64().expect("tail_loss");
+        let state_mb = row.get("state_bytes").as_f64().unwrap_or(0.0) / 1e6;
+        println!("{name:<30} tail loss {tail:.4}  optimizer state {state_mb:.2} MB");
+        rows.push((name.to_string(), tail, state_mb));
+        report.add_series(name, loss_series(row));
     }
 
     let soap = rows.iter().find(|r| r.0 == "soap").unwrap().1;

@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use crate::coordinator::TrainerConfig;
 use crate::dist::Transport;
-use crate::optim::{GuardPolicy, Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
+use crate::optim::{FreqSchedule, GuardPolicy, Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
 use crate::session::{Backend, DistEndpoint, DistOptions, ModelSpec, SessionBuilder, TrainSession};
 use crate::util::cli::Args;
 
@@ -30,8 +30,8 @@ precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode
 max-precond-dim, merge-dims, adam-warmup, precond-warmup, ranks, rank, \
 coordinator-addr, dist-timeout, dist-transport, artifacts, log-every, \
 metrics-every, trace-out, metrics-out, jsonl-out, save, resume, guard, \
-fault-plan, auto-resume, fault-attempt, one-sided, factorized, refresh-eigh, \
-async-refresh, pjrt-optimizer, telemetry";
+fault-plan, auto-resume, fault-attempt, one-sided, factorized, precondition-1d, \
+refresh-eigh, async-refresh, pjrt-optimizer, telemetry";
 
 const VALUE_KEYS: [&str; 34] = [
     "model",
@@ -70,8 +70,15 @@ const VALUE_KEYS: [&str; 34] = [
     "fault-attempt",
 ];
 
-const FLAG_KEYS: [&str; 6] =
-    ["one-sided", "factorized", "refresh-eigh", "async-refresh", "pjrt-optimizer", "telemetry"];
+const FLAG_KEYS: [&str; 7] = [
+    "one-sided",
+    "factorized",
+    "precondition-1d",
+    "refresh-eigh",
+    "async-refresh",
+    "pjrt-optimizer",
+    "telemetry",
+];
 
 /// A fully-resolved run description.
 #[derive(Clone, Debug)]
@@ -85,10 +92,17 @@ pub struct RunConfig {
     pub warmup: u64,
     pub seed: u64,
     pub precond_freq: u64,
+    /// Piecewise preconditioning-frequency schedule. Canonical invariant:
+    /// when set, it covers step 0 and `precond_freq` equals its step-0
+    /// frequency (`apply_kv` normalizes both), so the dump round-trips.
+    pub precond_freq_schedule: Option<FreqSchedule>,
     pub grad_accum: usize,
     pub workers: usize,
     pub one_sided: bool,
     pub factorized: bool,
+    /// Precondition rank-1 params instead of the AdamW fallback
+    /// (`Hyper::precondition_1d`).
+    pub precondition_1d: bool,
     pub refresh_eigh: bool,
     /// Run eigenbasis/inverse-root refreshes on the background service
     /// instead of the optimizer hot path (`precond::RefreshService`).
@@ -160,10 +174,12 @@ impl Default for RunConfig {
             warmup: 0,
             seed: 0,
             precond_freq: 10,
+            precond_freq_schedule: None,
             grad_accum: 1,
             workers: 4,
             one_sided: false,
             factorized: false,
+            precondition_1d: false,
             refresh_eigh: false,
             async_refresh: false,
             refresh_workers: 2,
@@ -220,7 +236,37 @@ impl RunConfig {
             "steps" => self.steps = num(key, value)?,
             "warmup" => self.warmup = num(key, value)?,
             "seed" => self.seed = num(key, value)?,
-            "precond-freq" => self.precond_freq = num(key, value)?,
+            "precond-freq" => {
+                if value.contains('@') {
+                    let parsed = FreqSchedule::parse(value)
+                        .map_err(|e| anyhow::anyhow!("precond-freq: {e:#}"))?;
+                    // Normalize to a schedule covering step 0 (fall back to
+                    // the current base for the uncovered prefix), keeping
+                    // `precond_freq` equal to the step-0 frequency so the
+                    // stagger math and the dump round-trip stay consistent.
+                    let sched = if parsed.freq_at(0).is_some() {
+                        parsed
+                    } else {
+                        let mut pieces = vec![(0, self.precond_freq)];
+                        pieces.extend_from_slice(parsed.pieces());
+                        FreqSchedule::new(&pieces)?
+                    };
+                    match sched.pieces() {
+                        [(0, f)] => {
+                            self.precond_freq = *f;
+                            self.precond_freq_schedule = None;
+                        }
+                        _ => {
+                            self.precond_freq =
+                                sched.freq_at(0).expect("schedule covers step 0");
+                            self.precond_freq_schedule = Some(sched);
+                        }
+                    }
+                } else {
+                    self.precond_freq = num(key, value)?;
+                    self.precond_freq_schedule = None;
+                }
+            }
             "grad-accum" => self.grad_accum = num(key, value)?,
             "workers" => self.workers = num(key, value)?,
             "refresh-workers" => self.refresh_workers = num(key, value)?,
@@ -256,6 +302,7 @@ impl RunConfig {
             "telemetry" => self.telemetry = parse_bool(key, value)?,
             "one-sided" => self.one_sided = parse_bool(key, value)?,
             "factorized" => self.factorized = parse_bool(key, value)?,
+            "precondition-1d" => self.precondition_1d = parse_bool(key, value)?,
             "refresh-eigh" => self.refresh_eigh = parse_bool(key, value)?,
             "async-refresh" => self.async_refresh = parse_bool(key, value)?,
             "pjrt-optimizer" => {
@@ -302,7 +349,10 @@ impl RunConfig {
         s.push_str(&format!("steps={}\n", self.steps));
         s.push_str(&format!("warmup={}\n", self.warmup));
         s.push_str(&format!("seed={}\n", self.seed));
-        s.push_str(&format!("precond-freq={}\n", self.precond_freq));
+        match &self.precond_freq_schedule {
+            Some(sched) => s.push_str(&format!("precond-freq={}\n", sched.spec_string(','))),
+            None => s.push_str(&format!("precond-freq={}\n", self.precond_freq)),
+        }
         s.push_str(&format!("grad-accum={}\n", self.grad_accum));
         s.push_str(&format!("workers={}\n", self.workers));
         s.push_str(&format!("refresh-workers={}\n", self.refresh_workers));
@@ -324,6 +374,7 @@ impl RunConfig {
         s.push_str(&format!("dist-transport={}\n", self.dist_transport.name()));
         s.push_str(&format!("one-sided={}\n", self.one_sided));
         s.push_str(&format!("factorized={}\n", self.factorized));
+        s.push_str(&format!("precondition-1d={}\n", self.precondition_1d));
         s.push_str(&format!("artifacts={}\n", self.artifacts_dir));
         s.push_str(&format!("log-every={}\n", self.log_every));
         s.push_str(&format!("telemetry={}\n", self.telemetry));
@@ -529,6 +580,8 @@ impl RunConfig {
     pub fn hyper(&self) -> Hyper {
         let mut h = Hyper {
             precond_freq: self.precond_freq,
+            precond_freq_schedule: self.precond_freq_schedule,
+            precondition_1d: self.precondition_1d,
             one_sided: self.one_sided,
             factorized: self.factorized,
             max_precond_dim: self.max_precond_dim,
@@ -749,7 +802,10 @@ mod tests {
         rc.steps = 123;
         rc.warmup = 17;
         rc.seed = 9;
-        rc.precond_freq = 25;
+        // Via apply_kv so the canonical schedule invariant holds (covers step 0,
+        // precond_freq mirrors the step-0 frequency).
+        rc.apply_kv("precond-freq", "25@0,100@60").unwrap();
+        rc.precondition_1d = true;
         rc.grad_accum = 2;
         rc.workers = 3;
         rc.refresh_workers = 4;
@@ -788,6 +844,9 @@ mod tests {
         assert_eq!(back.guard, rc.guard);
         assert_eq!(back.fault_plan, rc.fault_plan);
         assert_eq!(back.auto_resume, rc.auto_resume);
+        assert_eq!(back.precond_freq, 25);
+        assert_eq!(back.precond_freq_schedule, rc.precond_freq_schedule);
+        assert!(back.precondition_1d);
         // The acceptance bar: the resolved Hyper is IDENTICAL.
         let (ha, hb) = (rc.hyper(), back.hyper());
         assert_eq!(format!("{ha:?}"), format!("{hb:?}"), "dump→load changed the Hyper");
@@ -804,6 +863,41 @@ mod tests {
         // Comments and blanks are fine.
         rc.apply_kv_text("# comment\n\nsteps=50\n").unwrap();
         assert_eq!(rc.steps, 50);
+    }
+
+    #[test]
+    fn precond_freq_key_accepts_schedules() {
+        // Plain number: constant frequency, no schedule.
+        let mut rc = RunConfig::default();
+        rc.apply_kv("precond-freq", "42").unwrap();
+        assert_eq!(rc.precond_freq, 42);
+        assert_eq!(rc.precond_freq_schedule, None);
+
+        // Single piece at step 0 folds back to a constant.
+        rc.apply_kv("precond-freq", "7@0").unwrap();
+        assert_eq!(rc.precond_freq, 7);
+        assert_eq!(rc.precond_freq_schedule, None);
+
+        // Multi-piece schedule covering step 0 is kept as-is.
+        rc.apply_kv("precond-freq", "10@0,100@1000").unwrap();
+        assert_eq!(rc.precond_freq, 10);
+        let sched = rc.precond_freq_schedule.expect("schedule");
+        assert_eq!(sched.pieces(), &[(0, 10), (1000, 100)]);
+
+        // A schedule that skips step 0 inherits the current base frequency.
+        let mut rc = RunConfig::default();
+        rc.precond_freq = 5;
+        rc.apply_kv("precond-freq", "100@1000").unwrap();
+        assert_eq!(rc.precond_freq, 5);
+        let sched = rc.precond_freq_schedule.expect("schedule");
+        assert_eq!(sched.pieces(), &[(0, 5), (1000, 100)]);
+        // And the resolved Hyper switches at the boundary.
+        let h = rc.hyper();
+        assert_eq!(h.precond_freq_at(999), 5);
+        assert_eq!(h.precond_freq_at(1000), 100);
+
+        let e = rc.apply_kv("precond-freq", "ten@0").unwrap_err().to_string();
+        assert!(e.contains("precond"), "{e}");
     }
 
     #[test]

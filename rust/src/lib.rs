@@ -62,6 +62,15 @@
 //! the steady-state step stays zero-alloc and trajectories are bitwise
 //! unchanged.
 //!
+//! ## Sweeps
+//!
+//! The [`sweep`] orchestrator (`soap-lab sweep`) runs grids of training
+//! jobs concurrently under a global memory budget: jobs are planned with
+//! the coordinator's per-layer cost model, admitted longest-first as the
+//! budget allows, streamed into one `job_id`-tagged JSONL, journaled for
+//! crash-safe resume (a resumed sweep is bitwise-identical to an
+//! uninterrupted one), and summarized in `SWEEP_results.json`.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions.
 
@@ -77,5 +86,6 @@ pub mod optim;
 pub mod precond;
 pub mod runtime;
 pub mod session;
+pub mod sweep;
 pub mod telemetry;
 pub mod util;

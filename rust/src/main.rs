@@ -6,6 +6,8 @@
 //! soap-lab train      --model small --optimizer soap --lr 3.16e-3 …
 //! soap-lab train      --model nplm --backend serial --save run.ckpt
 //! soap-lab train      --config run.cfg --resume run.ckpt --steps 400
+//! soap-lab sweep      --spec examples/sweep_nplm_tiny.json --max-mem-bytes 268435456
+//! soap-lab sweep      --spec sweep.json --out-dir sweep-out --resume-sweep
 //! soap-lab sweep-lr   --model nano  --optimizer soap --steps 150
 //! soap-lab inspect    --artifacts artifacts
 //! soap-lab corpus     --vocab 512
@@ -18,6 +20,7 @@ use soap_lab::data::{CorpusSpec, SyntheticCorpus};
 use soap_lab::dist::{spawn_workers, ChildGuard};
 use soap_lab::runtime::Engine;
 use soap_lab::session::{Backend, DistEndpoint, DistOptions};
+use soap_lab::sweep::{run_sweep, JobSpec, SweepOptions, SweepSpec};
 use soap_lab::util::cli::{App, Command};
 
 fn app() -> App {
@@ -44,7 +47,11 @@ fn app() -> App {
                 .opt("steps", "200", "TOTAL training steps (a resumed run continues to this total)")
                 .opt("warmup", "0", "warmup steps (0 = constant LR)")
                 .opt("seed", "0", "data/init seed")
-                .opt("precond-freq", "10", "preconditioning frequency f")
+                .opt(
+                    "precond-freq",
+                    "10",
+                    "preconditioning frequency: a number, or a schedule f@start,f@start,…",
+                )
                 .opt("grad-accum", "1", "gradient-accumulation microbatches")
                 .opt("workers", "4", "optimizer worker threads")
                 .opt("refresh-workers", "2", "async refresh service worker threads")
@@ -135,9 +142,39 @@ fn app() -> App {
                 )
                 .flag("one-sided", "SOAP one-sided variant (§7.1)")
                 .flag("factorized", "SOAP factorized variant (§7.2.1)")
+                .flag(
+                    "precondition-1d",
+                    "rotate 1-D params too instead of the paper's Adam fallback (§7.3)",
+                )
                 .flag("refresh-eigh", "use full eigh refresh (Fig 7 right)")
                 .flag("async-refresh", "run eigenbasis refreshes on the background service (off the hot path)")
                 .flag("pjrt-optimizer", "legacy alias for --backend pjrt"),
+        )
+        .command(
+            Command::new("sweep", "run a declarative sweep of concurrent training jobs")
+                .req("spec", "sweep spec JSON (base config + grid axes; see README)")
+                .opt("out-dir", "sweep-out", "directory for manifest/journal/metrics/results")
+                .opt(
+                    "max-mem-bytes",
+                    "0",
+                    "global memory budget over running jobs' estimated footprints (0 = unlimited)",
+                )
+                .opt("max-concurrency", "2", "maximum concurrently-running jobs")
+                .opt(
+                    "ckpt-every",
+                    "0",
+                    "checkpoint each running job every k of its steps (0 = only when halting)",
+                )
+                .opt(
+                    "halt-after-steps",
+                    "0",
+                    "stop the sweep after this many steps summed across jobs (0 = run to completion)",
+                )
+                .opt("workers", "", "optimizer worker threads per job (default: the spec's `workers`)")
+                .opt("artifacts", "", "artifact directory (default: the spec's `artifacts`)")
+                .opt("metrics-out", "", "write a Prometheus text snapshot here at the end")
+                .flag("resume-sweep", "resume an interrupted sweep in --out-dir")
+                .flag("telemetry", "enable telemetry for every job (the seam is process-global)"),
         )
         .command(
             Command::new("sweep-lr", "learning-rate sweep (Appendix A grid)")
@@ -147,7 +184,9 @@ fn app() -> App {
                 .opt("steps", "150", "steps per point")
                 .opt("seed", "0", "seed")
                 .opt("precond-freq", "10", "preconditioning frequency")
-                .opt("artifacts", "artifacts", "artifact directory"),
+                .opt("artifacts", "artifacts", "artifact directory")
+                .opt("out-dir", "sweep-lr-out", "sweep output directory (manifest/journal/results)")
+                .opt("max-concurrency", "2", "concurrently-running points"),
         )
         .command(
             Command::new("inspect", "print the artifact manifest summary")
@@ -357,21 +396,136 @@ fn run_attempt(
     Ok(())
 }
 
+fn cmd_sweep(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
+    let spec_path = args.str("spec")?;
+    let text = std::fs::read_to_string(&spec_path)
+        .map_err(|e| anyhow::anyhow!("--spec {spec_path}: {e}"))?;
+    let mut spec = SweepSpec::parse(&text)?;
+    let artifacts = args.str("artifacts")?;
+    if !artifacts.is_empty() {
+        spec.artifacts_dir = artifacts;
+    }
+    let workers = args.str("workers")?;
+    if !workers.is_empty() {
+        spec.workers = workers
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--workers {workers}: {e}"))?;
+    }
+    let halt: u64 = args.parse("halt-after-steps")?;
+    let opts = SweepOptions {
+        out_dir: std::path::PathBuf::from(args.str("out-dir")?),
+        max_mem_bytes: args.parse("max-mem-bytes")?,
+        max_concurrency: args.parse("max-concurrency")?,
+        resume: args.flag("resume-sweep"),
+        ckpt_every: args.parse("ckpt-every")?,
+        halt_after_steps: if halt == 0 { None } else { Some(halt) },
+        workers_per_job: spec.workers,
+        telemetry: args.flag("telemetry"),
+    };
+    println!(
+        "sweep '{}': {} jobs, concurrency {}, memory budget {}{}",
+        spec.name,
+        spec.jobs.len(),
+        opts.max_concurrency,
+        if opts.max_mem_bytes == 0 {
+            "unlimited".to_string()
+        } else {
+            format!("{} bytes", opts.max_mem_bytes)
+        },
+        if opts.resume { " (resuming)" } else { "" },
+    );
+    let outcome = run_sweep(&spec, &opts)?;
+    let (mut done, mut failed) = (0usize, 0usize);
+    for row in &outcome.rows {
+        let id = row.get("job_id").as_str().unwrap_or("?");
+        if row.get("status").as_str() == Some("done") {
+            done += 1;
+            let tail = row.get("tail_loss").as_f64().unwrap_or(f64::NAN);
+            println!("  {id}  done    tail loss {tail:.4}");
+        } else {
+            failed += 1;
+            println!(
+                "  {id}  failed  {}",
+                row.get("error").as_str().unwrap_or("unknown error")
+            );
+        }
+    }
+    println!(
+        "{done} done, {failed} failed, {} pending; metrics: {}",
+        spec.jobs.len() - done - failed,
+        outcome.metrics_path.display()
+    );
+    if outcome.halted {
+        println!(
+            "sweep halted; continue with: soap-lab sweep --spec {spec_path} --out-dir {} --resume-sweep",
+            opts.out_dir.display()
+        );
+    } else if let Some(path) = &outcome.results_path {
+        println!("results written to {}", path.display());
+    }
+    let metrics_out = args.str("metrics-out")?;
+    if !metrics_out.is_empty() {
+        let text = soap_lab::telemetry::metrics::registry().prometheus();
+        std::fs::write(&metrics_out, text)
+            .map_err(|e| anyhow::anyhow!("writing metrics snapshot to {metrics_out}: {e}"))?;
+        println!("metrics snapshot written to {metrics_out}");
+    }
+    Ok(())
+}
+
 fn cmd_sweep_lr(args: &soap_lab::util::cli::Args) -> anyhow::Result<()> {
-    let mut rc = RunConfig::from_args(args)?;
+    let rc = RunConfig::from_args(args)?;
     if matches!(rc.backend, Backend::Distributed { .. }) {
-        anyhow::bail!("sweep-lr drives in-process sessions; use --backend serial|sharded|pjrt");
+        anyhow::bail!(
+            "sweep-lr drives in-process sessions (use --backend serial|sharded|pjrt); \
+             for orchestrated multi-job grids use `soap-lab sweep --spec <file>`, which \
+             schedules concurrent in-process jobs under a memory budget"
+        );
     }
     println!("lr sweep for {} on {}", rc.optimizer.name(), rc.model);
+    // The Appendix A grid as an explicit job list through the sweep
+    // orchestrator: same sessions as before, but scheduled concurrently
+    // and journaled/resumable like any other sweep.
+    let jobs: Vec<JobSpec> = soap_lab::config::DEFAULT_LRS
+        .iter()
+        .enumerate()
+        .map(|(i, &lr)| {
+            let mut job = JobSpec::new(format!("lr{i:02}"), &rc.model, rc.optimizer, rc.steps)
+                .with_hyper(rc.hyper())
+                .with_lr(lr)
+                .with_seed(rc.seed)
+                .constant_lr(rc.warmup == 0)
+                .with_assign("lr", format!("{lr}"));
+            job.backend = Some(rc.backend);
+            job.grad_accum = rc.grad_accum;
+            job
+        })
+        .collect();
+    let mut spec = SweepSpec::from_jobs("sweep-lr", jobs);
+    spec.artifacts_dir = rc.artifacts_dir.clone();
+    spec.workers = rc.workers;
+    let opts = SweepOptions {
+        out_dir: std::path::PathBuf::from(args.str("out-dir")?),
+        max_concurrency: args.parse("max-concurrency")?,
+        workers_per_job: rc.workers,
+        ..SweepOptions::default()
+    };
+    let outcome = run_sweep(&spec, &opts)?;
     let mut best: Option<(f32, f32)> = None;
-    for &lr in &soap_lab::config::DEFAULT_LRS {
-        rc.lr = lr;
-        let mut session = rc.session_builder()?.build()?;
-        let log = session.run()?;
-        let tail = log.tail_loss(20);
-        println!("  lr {lr:>9.5}  tail loss {tail:.4}");
-        if tail.is_finite() && best.map(|(_, b)| tail < b).unwrap_or(true) {
-            best = Some((lr, tail));
+    for (i, &lr) in soap_lab::config::DEFAULT_LRS.iter().enumerate() {
+        let Some(row) = outcome.row(&format!("lr{i:02}")) else { continue };
+        match row.get("tail_loss").as_f64() {
+            Some(tail) => {
+                let tail = tail as f32;
+                println!("  lr {lr:>9.5}  tail loss {tail:.4}");
+                if tail.is_finite() && best.map(|(_, b)| tail < b).unwrap_or(true) {
+                    best = Some((lr, tail));
+                }
+            }
+            None => println!(
+                "  lr {lr:>9.5}  failed: {}",
+                row.get("error").as_str().unwrap_or("unknown error")
+            ),
         }
     }
     if let Some((lr, loss)) = best {
@@ -431,6 +585,7 @@ fn main() {
     };
     let result = match args.command.as_str() {
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "sweep-lr" => cmd_sweep_lr(&args),
         "inspect" => cmd_inspect(&args),
         "corpus" => cmd_corpus(&args),

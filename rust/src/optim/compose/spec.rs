@@ -13,13 +13,14 @@ use super::presets;
 use super::{AnyBasis, AnyEngine, Composed, Graft};
 use super::{AdafactorEngine, AdamEngine, EigenBasis, GradSvdBasis, IdentityBasis, MomentumSpace};
 use crate::linalg::TensorShape;
-use crate::optim::hyper::Hyper;
+use crate::optim::hyper::{FreqSchedule, Hyper};
 use crate::optim::{LayerOptimizer, OptKind};
 
 /// One-line grammar summary, embedded in parse errors and `--help`.
 pub const GRAMMAR_HELP: &str = "basis=<identity|eigen[:one-sided|:two-sided]|svd>,\
 inner=<adam|adafactor|shampoo>[,graft=<adam|none>]\
-[,adam-warmup=<steps>][,precond-warmup=<steps>]";
+[,adam-warmup=<steps>][,precond-warmup=<steps>]\
+[,precond-freq=<f|f@start;f@start…>][,precondition-1d=<true|false>]";
 
 /// Side selection for an eigenbasis spec. `Inherit` defers to
 /// `Hyper::one_sided` (the `--one-sided` flag).
@@ -68,6 +69,13 @@ pub struct CompositionSpec {
     /// Refresh-every-step early-phase length (`Hyper::precondition_warmup`);
     /// `None` inherits.
     pub precond_warmup: Option<u64>,
+    /// Preconditioning-frequency override: a constant (`precond-freq=32`) or
+    /// a piecewise schedule (`precond-freq=10@0;100@1000` — the grammar uses
+    /// `;` between pieces since `,` separates grammar keys). `None` inherits.
+    pub precond_freq: Option<FreqSchedule>,
+    /// Precondition rank-1 params instead of the AdamW fallback
+    /// (`Hyper::precondition_1d`). `None` inherits.
+    pub precondition_1d: Option<bool>,
 }
 
 impl CompositionSpec {
@@ -78,6 +86,8 @@ impl CompositionSpec {
         let mut graft = GraftSpec::Inherit;
         let mut adam_warmup: Option<u64> = None;
         let mut precond_warmup: Option<u64> = None;
+        let mut precond_freq: Option<FreqSchedule> = None;
+        let mut precondition_1d: Option<bool> = None;
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             let (key, value) = part.split_once('=').ok_or_else(|| {
                 anyhow::anyhow!(
@@ -132,6 +142,30 @@ impl CompositionSpec {
                         anyhow::anyhow!("precond-warmup expects a step count, got '{value}'")
                     })?);
                 }
+                "precond-freq" | "precond_freq" | "precond-frequency" => {
+                    let v = value.trim();
+                    let sched = if v.contains('@') {
+                        FreqSchedule::parse(v)?
+                    } else {
+                        let f: u64 = v.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "precond-freq expects a step count or a \
+                                 freq@start;… schedule, got '{value}'"
+                            )
+                        })?;
+                        FreqSchedule::new(&[(0, f)])?
+                    };
+                    precond_freq = Some(sched);
+                }
+                "precondition-1d" | "precondition_1d" | "precond-1d" => {
+                    precondition_1d = Some(match value.trim().to_ascii_lowercase().as_str() {
+                        "true" | "on" | "1" | "yes" => true,
+                        "false" | "off" | "0" | "no" => false,
+                        other => anyhow::bail!(
+                            "precondition-1d expects true or false, got '{other}'"
+                        ),
+                    });
+                }
                 other => anyhow::bail!(
                     "unknown composition key '{other}': expected {GRAMMAR_HELP}"
                 ),
@@ -139,7 +173,8 @@ impl CompositionSpec {
         }
         let inner = inner
             .ok_or_else(|| anyhow::anyhow!("composition spec needs inner=…; {GRAMMAR_HELP}"))?;
-        let spec = Self { basis, inner, graft, adam_warmup, precond_warmup };
+        let spec =
+            Self { basis, inner, graft, adam_warmup, precond_warmup, precond_freq, precondition_1d };
         spec.validate()?;
         Ok(spec)
     }
@@ -204,6 +239,21 @@ impl CompositionSpec {
         if let Some(w) = self.precond_warmup {
             h.precondition_warmup = w;
         }
+        if let Some(sched) = self.precond_freq {
+            // A single piece starting at step 0 IS the constant frequency —
+            // fold it into the base field (stagger phases and the config
+            // fingerprint key off `precond_freq`).
+            match sched.pieces() {
+                [(0, f)] => {
+                    h.precond_freq = *f;
+                    h.precond_freq_schedule = None;
+                }
+                _ => h.precond_freq_schedule = Some(sched),
+            }
+        }
+        if let Some(on) = self.precondition_1d {
+            h.precondition_1d = on;
+        }
     }
 
     /// The preset this spec is exactly equivalent to, if any. Canonical specs
@@ -252,6 +302,12 @@ impl CompositionSpec {
         }
         if let Some(w) = self.precond_warmup {
             s.push_str(&format!(",precond-warmup={w}"));
+        }
+        if let Some(sched) = self.precond_freq {
+            s.push_str(&format!(",precond-freq={}", sched.spec_string(';')));
+        }
+        if let Some(on) = self.precondition_1d {
+            s.push_str(&format!(",precondition-1d={on}"));
         }
         s
     }
@@ -344,8 +400,15 @@ impl CompositionSpec {
         self.apply(&mut h);
         // Paper implementation detail 1: rotating bases run plain AdamW on
         // 1-D parameters (the Shampoo family preconditions them instead).
+        // `precondition_1d` (spec key or `Hyper` knob — already folded into
+        // `h` by `apply`) opts back into preconditioning them.
         let is_1d = rows == 1 || cols == 1;
+        // The knob only opens the eigenbasis path: grad-SVD stays on the
+        // fallback (its projector is degenerate on rank-1 inputs, same as
+        // the GaLore preset).
+        let keep_1d = h.precondition_1d && matches!(self.basis, BasisSpec::Eigen { .. });
         if is_1d
+            && !keep_1d
             && !matches!(self.basis, BasisSpec::Identity)
             && self.inner != EngineSpec::InverseRoot
         {
@@ -438,6 +501,55 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("step count"), "{e}");
+    }
+
+    #[test]
+    fn freq_and_1d_keys_parse_apply_and_roundtrip() {
+        let s = CompositionSpec::parse(
+            "basis=eigen,inner=adam,precond-freq=10@0;100@1000,precondition-1d=true",
+        )
+        .unwrap();
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert!(h.precondition_1d);
+        let sched = h.precond_freq_schedule.expect("schedule installed");
+        assert_eq!(sched.pieces(), &[(0, 10), (1000, 100)]);
+        // spec_string → parse is lossless.
+        let back = CompositionSpec::parse(&s.spec_string()).unwrap();
+        assert_eq!(back, s);
+
+        // A constant frequency folds into the base field, not a schedule.
+        let s = CompositionSpec::parse("basis=eigen,inner=adam,precond-freq=32").unwrap();
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert_eq!(h.precond_freq, 32);
+        assert!(h.precond_freq_schedule.is_none());
+
+        // Omitted keys inherit config-set values.
+        let s = CompositionSpec::parse("basis=eigen,inner=adam").unwrap();
+        let mut h = Hyper::default().with_freq(17).with_precondition_1d(true);
+        s.apply(&mut h);
+        assert_eq!(h.precond_freq, 17);
+        assert!(h.precondition_1d);
+
+        // Malformed values surface named errors.
+        for bad in [
+            "basis=eigen,inner=adam,precond-freq=soon",
+            "basis=eigen,inner=adam,precond-freq=0",
+            "basis=eigen,inner=adam,precondition-1d=maybe",
+        ] {
+            assert!(CompositionSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn precondition_1d_spec_keeps_eigen_on_rank1() {
+        let h = Hyper::default();
+        let s = CompositionSpec::parse("basis=eigen,inner=adam,precondition-1d=true").unwrap();
+        assert_eq!(s.build(1, 64, &h).name(), "soap");
+        // Grad-SVD keeps the fallback: degenerate projector on rank-1.
+        let s = CompositionSpec::parse("basis=svd,inner=adam,precondition-1d=true").unwrap();
+        assert_eq!(s.build(1, 64, &h).name(), "adamw");
     }
 
     #[test]

@@ -91,6 +91,104 @@ impl GuardPolicy {
     }
 }
 
+/// Maximum number of pieces a [`FreqSchedule`] can hold. Fixed so the
+/// schedule stays `Copy` and can ride inside `CompositionSpec` (which the
+/// `Copy` `OptKind` embeds).
+pub const MAX_FREQ_PIECES: usize = 8;
+
+/// Piecewise-constant schedule for the preconditioning frequency — the
+/// paper's Fig. 1 degradation experiment as a first-class knob. Each piece
+/// `(start_step, freq)` means "from step `start_step` onward, refresh every
+/// `freq` steps"; pieces are sorted by strictly increasing `start_step`.
+/// Steps before the first piece fall back to the base `precond_freq`.
+///
+/// Parsed from `freq@start` lists: `10@0,100@1000` (the composition grammar
+/// uses `;` instead of `,` since `,` separates grammar keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FreqSchedule {
+    len: usize,
+    pieces: [(u64, u64); MAX_FREQ_PIECES],
+}
+
+impl FreqSchedule {
+    /// Build from `(start_step, freq)` pieces. Errors on empty input, more
+    /// than [`MAX_FREQ_PIECES`] pieces, non-increasing starts, or zero
+    /// frequencies.
+    pub fn new(pieces: &[(u64, u64)]) -> anyhow::Result<Self> {
+        anyhow::ensure!(!pieces.is_empty(), "frequency schedule needs at least one piece");
+        anyhow::ensure!(
+            pieces.len() <= MAX_FREQ_PIECES,
+            "frequency schedule holds at most {MAX_FREQ_PIECES} pieces, got {}",
+            pieces.len()
+        );
+        let mut buf = [(0u64, 0u64); MAX_FREQ_PIECES];
+        for (i, &(start, freq)) in pieces.iter().enumerate() {
+            anyhow::ensure!(freq > 0, "frequency schedule piece {i} has freq 0");
+            if i > 0 {
+                anyhow::ensure!(
+                    start > pieces[i - 1].0,
+                    "frequency schedule starts must be strictly increasing \
+                     ({start} after {})",
+                    pieces[i - 1].0
+                );
+            }
+            buf[i] = (start, freq);
+        }
+        Ok(FreqSchedule { len: pieces.len(), pieces: buf })
+    }
+
+    /// Parse a `freq@start` list: `10@0,100@1000` or `10@0;100@1000`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut pieces = Vec::new();
+        for tok in s.split([',', ';']).map(str::trim).filter(|t| !t.is_empty()) {
+            let (freq, start) = tok.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("bad schedule piece '{tok}': expected freq@start (e.g. 10@0)")
+            })?;
+            let freq: u64 = freq
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad frequency '{freq}' in piece '{tok}'"))?;
+            let start: u64 = start
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad start step '{start}' in piece '{tok}'"))?;
+            pieces.push((start, freq));
+        }
+        FreqSchedule::new(&pieces)
+    }
+
+    /// The active `(start_step, freq)` pieces, in start order.
+    pub fn pieces(&self) -> &[(u64, u64)] {
+        &self.pieces[..self.len]
+    }
+
+    /// Frequency in force at step `t`, or `None` when `t` precedes the
+    /// first piece (caller falls back to the base `precond_freq`).
+    pub fn freq_at(&self, t: u64) -> Option<u64> {
+        let mut out = None;
+        for &(start, freq) in self.pieces() {
+            if t >= start {
+                out = Some(freq);
+            }
+        }
+        out
+    }
+
+    /// Canonical `freq@start` form with `sep` between pieces; `parse`
+    /// accepts it back (config round-trip).
+    pub fn spec_string(&self, sep: char) -> String {
+        let mut out = String::new();
+        for (i, &(start, freq)) in self.pieces().iter().enumerate() {
+            if i > 0 {
+                out.push(sep);
+            }
+            use std::fmt::Write as _;
+            let _ = write!(out, "{freq}@{start}");
+        }
+        out
+    }
+}
+
 /// Hyperparameters shared across all optimizers. Per-optimizer fields are
 /// ignored by optimizers that don't use them.
 #[derive(Clone, Debug)]
@@ -106,6 +204,18 @@ pub struct Hyper {
     /// Preconditioning frequency f: eigenbasis / inverse-root recompute
     /// period in steps. Paper default 10.
     pub precond_freq: u64,
+    /// Optional piecewise schedule overriding `precond_freq` per step range
+    /// (`10@0,100@1000` — start cheap and accurate, relax later; paper
+    /// Fig. 1). `None` (default) keeps the constant `precond_freq`. Stagger
+    /// phases and the config fingerprint still derive from the base
+    /// `precond_freq`.
+    pub precond_freq_schedule: Option<FreqSchedule>,
+    /// Precondition rank-1 parameters (bias/gain vectors) instead of routing
+    /// them to the AdamW fallback — the reference SOAP implementation's
+    /// `precondition_1d` knob. A 1-D param becomes a 1×n matrix whose 1×1
+    /// left factor is exact, so this is the official one-sided treatment.
+    /// Default false (paper implementation detail 1: Adam fallback).
+    pub precondition_1d: bool,
     /// β for the L/R Kronecker-factor EMAs (β_shampoo). Paper default 0.95.
     pub shampoo_beta: f32,
     /// Shampoo ε. Paper default 1e-12.
@@ -174,6 +284,8 @@ impl Default for Hyper {
             eps: 1e-8,
             weight_decay: 1e-4,
             precond_freq: 10,
+            precond_freq_schedule: None,
+            precondition_1d: false,
             shampoo_beta: 0.95,
             shampoo_eps: 1e-12,
             shampoo_exponent: 2.5,
@@ -198,6 +310,16 @@ impl Default for Hyper {
 impl Hyper {
     pub fn with_freq(mut self, f: u64) -> Self {
         self.precond_freq = f;
+        self
+    }
+    /// Install a piecewise preconditioning-frequency schedule.
+    pub fn with_freq_schedule(mut self, s: FreqSchedule) -> Self {
+        self.precond_freq_schedule = Some(s);
+        self
+    }
+    /// Precondition rank-1 params instead of the AdamW fallback.
+    pub fn with_precondition_1d(mut self, on: bool) -> Self {
+        self.precondition_1d = on;
         self
     }
     pub fn one_sided(mut self) -> Self {
@@ -254,14 +376,25 @@ impl Hyper {
         self.guard = guard;
         self
     }
+    /// Preconditioning frequency in force at step `t`: the schedule piece
+    /// covering `t` when one is installed, else the base `precond_freq`.
+    /// Never 0.
+    pub fn precond_freq_at(&self, t: u64) -> u64 {
+        self.precond_freq_schedule
+            .as_ref()
+            .and_then(|s| s.freq_at(t))
+            .unwrap_or(self.precond_freq)
+            .max(1)
+    }
     /// Does step `t` (1-based) hit this layer's refresh phase? Every step
     /// inside the `precondition_warmup` window refreshes regardless of the
-    /// phase schedule.
+    /// phase schedule; a [`FreqSchedule`] swaps the modulus at its piece
+    /// boundaries.
     pub fn is_refresh_step(&self, t: u64) -> bool {
         if t <= self.precondition_warmup {
             return true;
         }
-        let f = self.precond_freq.max(1);
+        let f = self.precond_freq_at(t);
         t % f == self.refresh_phase % f
     }
 }
@@ -331,6 +464,54 @@ mod tests {
         let h = h.with_adam_warmup(50).with_precondition_warmup(9);
         assert_eq!(h.adam_warmup_steps, 50);
         assert_eq!(h.precondition_warmup, 9);
+    }
+
+    #[test]
+    fn freq_schedule_parses_and_round_trips() {
+        let s = FreqSchedule::parse("10@0,100@1000").unwrap();
+        assert_eq!(s.pieces(), &[(0, 10), (1000, 100)]);
+        assert_eq!(s.spec_string(','), "10@0,100@1000");
+        assert_eq!(FreqSchedule::parse(&s.spec_string(';')).unwrap(), s);
+        assert_eq!(FreqSchedule::parse("10@0;100@1000").unwrap(), s);
+        for bad in ["", "10", "10@", "@0", "0@0", "10@5,100@5", "10@5,100@2"] {
+            assert!(FreqSchedule::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        let too_many = (0..9).map(|i| format!("2@{i}")).collect::<Vec<_>>().join(",");
+        assert!(FreqSchedule::parse(&too_many).is_err());
+    }
+
+    #[test]
+    fn freq_schedule_switches_at_boundary() {
+        // Golden expectations around the switch: f=4 from step 0, f=10 from
+        // step 20. Step 20 itself already uses the new modulus.
+        let h = Hyper::default()
+            .with_freq_schedule(FreqSchedule::parse("4@0,10@20").unwrap())
+            .with_refresh_phase(0);
+        let refreshes: Vec<u64> = (1..=40).filter(|&t| h.is_refresh_step(t)).collect();
+        assert_eq!(refreshes, vec![4, 8, 12, 16, 20, 30, 40]);
+        assert_eq!(h.precond_freq_at(19), 4);
+        assert_eq!(h.precond_freq_at(20), 10);
+        // Steps before the first piece fall back to the base frequency.
+        let h = Hyper::default()
+            .with_freq(3)
+            .with_freq_schedule(FreqSchedule::parse("5@10").unwrap())
+            .with_refresh_phase(0);
+        assert_eq!(h.precond_freq_at(9), 3);
+        assert_eq!(h.precond_freq_at(10), 5);
+        // A single-piece schedule from step 0 is exactly the constant case.
+        let sched = Hyper::default()
+            .with_freq_schedule(FreqSchedule::parse("10@0").unwrap())
+            .with_refresh_phase(0);
+        let constant = Hyper::default().with_freq(10).with_refresh_phase(0);
+        for t in 1..=100 {
+            assert_eq!(sched.is_refresh_step(t), constant.is_refresh_step(t), "step {t}");
+        }
+    }
+
+    #[test]
+    fn precondition_1d_defaults_off() {
+        assert!(!Hyper::default().precondition_1d);
+        assert!(Hyper::default().with_precondition_1d(true).precondition_1d);
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub use adafactor::Adafactor;
 pub use adamw::AdamW;
 pub use compose::{Basis, Composed, CompositionSpec, DynComposed, Graft, MomentEngine};
 pub use galore::Galore;
-pub use hyper::{GuardPolicy, Hyper, RefreshMethod, RefreshMode};
+pub use hyper::{FreqSchedule, GuardPolicy, Hyper, RefreshMethod, RefreshMode};
 pub use schedule::Schedule;
 pub use shampoo::Shampoo;
 pub use soap::Soap;
@@ -284,13 +284,20 @@ impl OptKind {
     ///
     /// Paper implementation detail 1: SOAP and GaLore run plain AdamW on 1-D
     /// parameters (unlike Shampoo, which preconditions them too).
+    /// `Hyper::precondition_1d` opts SOAP back into preconditioning them —
+    /// the reference implementation's `precondition_1d` knob (a 1-D param is
+    /// a `1×n` matrix, whose 1×1 left factor is exact). GaLore keeps the
+    /// fallback unconditionally: its gradient-SVD projector is degenerate on
+    /// rank-1 inputs.
     pub fn build(&self, rows: usize, cols: usize, h: &Hyper) -> Box<dyn LayerOptimizer> {
         let is_1d = rows == 1 || cols == 1;
         match self {
             OptKind::AdamW => Box::new(AdamW::new(rows, cols, h.clone())),
             OptKind::Adafactor => Box::new(Adafactor::new(rows, cols, h.clone())),
             OptKind::Shampoo => Box::new(Shampoo::new(rows, cols, h.clone())),
-            OptKind::Soap if is_1d => Box::new(AdamW::new(rows, cols, h.clone())),
+            OptKind::Soap if is_1d && !h.precondition_1d => {
+                Box::new(AdamW::new(rows, cols, h.clone()))
+            }
             OptKind::Soap => Box::new(Soap::new(rows, cols, h.clone())),
             OptKind::Galore if is_1d => Box::new(AdamW::new(rows, cols, h.clone())),
             OptKind::Galore => Box::new(Galore::new(rows, cols, h.clone())),
@@ -394,6 +401,35 @@ mod tests {
         assert_eq!(OptKind::Galore.build(1, 64, &h).name(), "adamw");
         assert_eq!(OptKind::Soap.build(8, 64, &h).name(), "soap");
         assert_eq!(OptKind::Shampoo.build(1, 64, &h).name(), "shampoo");
+    }
+
+    #[test]
+    fn precondition_1d_routes_rank1_to_soap() {
+        let h = Hyper::default().with_precondition_1d(true);
+        assert_eq!(OptKind::Soap.build(1, 64, &h).name(), "soap");
+        assert_eq!(OptKind::Soap.build(64, 1, &h).name(), "soap");
+        // GaLore's SVD projector is degenerate on rank-1 inputs: fallback
+        // stays regardless of the knob.
+        assert_eq!(OptKind::Galore.build(1, 64, &h).name(), "adamw");
+    }
+
+    #[test]
+    fn precondition_1d_off_is_bitwise_unchanged() {
+        // `precondition_1d = false` must build the IDENTICAL AdamW fallback:
+        // same updates, bit for bit, as a default-Hyper build.
+        let h_def = Hyper::default();
+        let h_off = Hyper::default().with_precondition_1d(false);
+        let mut a = OptKind::Soap.build(1, 32, &h_def);
+        let mut b = OptKind::Soap.build(1, 32, &h_off);
+        let mut rng = Rng::new(7);
+        let mut wa = Matrix::randn(&mut rng, 1, 32, 1.0);
+        let mut wb = wa.clone();
+        for t in 1..=20 {
+            let g = Matrix::randn(&mut rng, 1, 32, 1.0);
+            a.update(&mut wa, &g, t, 0.01);
+            b.update(&mut wb, &g, t, 0.01);
+        }
+        assert_eq!(wa.data, wb.data, "knob off must not perturb the fallback path");
     }
 
     #[test]

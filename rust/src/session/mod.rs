@@ -80,8 +80,8 @@ mod train;
 pub use backend::{Backend, ExecutorBackend, PjrtExecutor, SerialExecutor, ShardedExecutor};
 pub use builder::{DistEndpoint, DistOptions, ModelSpec, SessionBuilder};
 pub use sink::{
-    CollectSink, HealthSnapshot, JsonlSink, LayerHealth, MetricsSink, RankHealth, StdoutSink,
-    StepRecord,
+    CollectSink, HealthSnapshot, JsonlSink, LayerHealth, MetricsSink, RankHealth,
+    SharedLineWriter, StdoutSink, StepRecord,
 };
 pub use train::TrainSession;
 

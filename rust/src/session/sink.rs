@@ -3,7 +3,8 @@
 //! [`TrainLog`] is offered once at the end of `run()`. Sinks replace the
 //! ad-hoc `println!` blocks the pre-redesign entry points each hand-rolled.
 
-use std::io::Write;
+use std::io::{self, Write};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{StepTiming, TrainLog};
 use crate::util::json::Json;
@@ -162,11 +163,20 @@ impl MetricsSink for StdoutSink {
 /// dashboards and log scrapers.
 pub struct JsonlSink<W: Write> {
     out: W,
+    tags: Vec<(String, Json)>,
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(out: W) -> Self {
-        Self { out }
+        Self { out, tags: Vec::new() }
+    }
+
+    /// Stamp every emitted line with an extra top-level field — how the sweep
+    /// orchestrator tags a multiplexed stream with `job_id` and the job's
+    /// parameter assignment.
+    pub fn with_tag(mut self, key: impl Into<String>, value: Json) -> Self {
+        self.tags.push((key.into(), value));
+        self
     }
 }
 
@@ -185,7 +195,7 @@ fn opt_num(x: Option<f64>) -> Json {
 
 impl<W: Write> MetricsSink for JsonlSink<W> {
     fn on_step(&mut self, rec: &StepRecord<'_>) {
-        let line = Json::obj(vec![
+        let mut fields = vec![
             ("step", Json::num(rec.step as f64)),
             ("loss", Json::num(rec.loss as f64)),
             ("lr", Json::num(rec.lr as f64)),
@@ -196,7 +206,11 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
             ("refresh_s", Json::num(rec.timing.refresh_s)),
             ("bg_refresh_s", Json::num(rec.timing.bg_refresh_s)),
             ("staleness_steps", Json::num(rec.timing.staleness_steps)),
-        ]);
+        ];
+        for (k, v) in &self.tags {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let line = Json::obj(fields);
         let _ = writeln!(self.out, "{}", line.dump());
     }
 
@@ -274,11 +288,61 @@ impl<W: Write> MetricsSink for JsonlSink<W> {
                 .collect::<Vec<_>>();
             fields.push(("ranks", Json::Arr(ranks)));
         }
-        let _ = writeln!(self.out, "{}", Json::obj(fields).dump());
+        for (k, v) in &self.tags {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let line = Json::obj(fields);
+        let _ = writeln!(self.out, "{}", line.dump());
     }
 
     fn on_complete(&mut self, _log: &TrainLog) {
         let _ = self.out.flush();
+    }
+}
+
+/// Line-atomic fan-in for multiplexed streams: each [`handle`] buffers bytes
+/// privately and forwards only complete `\n`-terminated lines to the shared
+/// underlying writer under one lock, so concurrently-running jobs' JSONL
+/// lines interleave whole, never torn mid-line.
+///
+/// [`handle`]: SharedLineWriter::handle
+pub struct SharedLineWriter {
+    inner: Arc<Mutex<Box<dyn Write + Send>>>,
+    buf: Vec<u8>,
+}
+
+impl SharedLineWriter {
+    pub fn new(out: impl Write + Send + 'static) -> Self {
+        Self { inner: Arc::new(Mutex::new(Box::new(out))), buf: Vec::new() }
+    }
+
+    /// A new handle on the same underlying writer, with its own line buffer.
+    /// Give one to each concurrent producer.
+    pub fn handle(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner), buf: Vec::new() }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, Box<dyn Write + Send>> {
+        // A producer that panicked mid-job (sweep jobs are unwound and
+        // recorded as failed rows) must not wedge every other job's stream.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Write for SharedLineWriter {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        if let Some(pos) = self.buf.iter().rposition(|&b| b == b'\n') {
+            let complete: Vec<u8> = self.buf.drain(..=pos).collect();
+            self.locked().write_all(&complete)?;
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        // An incomplete tail line stays buffered — flushing it would tear the
+        // line; it goes out when its newline arrives.
+        self.locked().flush()
     }
 }
 
@@ -417,6 +481,66 @@ mod tests {
         }
         let v = Json::parse(String::from_utf8(buf).unwrap().trim()).unwrap();
         assert_eq!(v.get("ranks"), &Json::Null, "single-process runs must not emit a ranks array");
+    }
+
+    #[test]
+    fn jsonl_sink_tags_every_line() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf)
+                .with_tag("job_id", Json::str("j003"))
+                .with_tag("assign", Json::obj(vec![("lr", Json::num(0.01))]));
+            let t = StepTiming::default();
+            sink.on_step(&rec(&t));
+            sink.on_health(&HealthSnapshot { step: 3, ..Default::default() });
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text.lines();
+        let step = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(step.get("job_id").as_str(), Some("j003"));
+        assert_eq!(step.get("assign").get("lr").as_f64(), Some(0.01));
+        assert_eq!(step.get("loss").as_f64(), Some(1.5));
+        let health = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(health.get("kind").as_str(), Some("health"));
+        assert_eq!(health.get("job_id").as_str(), Some("j003"));
+    }
+
+    #[test]
+    fn shared_line_writer_keeps_lines_whole() {
+        use std::sync::{Arc, Mutex};
+
+        #[derive(Clone, Default)]
+        struct Capture(Arc<Mutex<Vec<u8>>>);
+        impl Write for Capture {
+            fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(data);
+                Ok(data.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let cap = Capture::default();
+        let root = SharedLineWriter::new(cap.clone());
+        let mut a = root.handle();
+        let mut b = root.handle();
+        // Interleave partial writes from two handles; nothing may reach the
+        // underlying writer until a newline completes the line.
+        a.write_all(b"{\"job\":").unwrap();
+        b.write_all(b"{\"job\":\"b\"}\n").unwrap();
+        assert_eq!(&*cap.0.lock().unwrap(), b"{\"job\":\"b\"}\n");
+        a.write_all(b"\"a\"}\n").unwrap();
+        let text = String::from_utf8(cap.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, "{\"job\":\"b\"}\n{\"job\":\"a\"}\n");
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+
+        // Multi-line bursts pass through in one locked write.
+        let mut c = root.handle();
+        c.write_all(b"x\ny\n").unwrap();
+        assert!(String::from_utf8(cap.0.lock().unwrap().clone()).unwrap().ends_with("x\ny\n"));
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Sweep persistence: the manifest, the append-only state journal, and the
+//! final results summary.
+//!
+//! Three files live in the sweep output directory:
+//!
+//! - `SWEEP_manifest.json` — the plan: spec source, budget, concurrency,
+//!   and per-job estimates. Written once (atomically) at sweep start and
+//!   validated on resume so a resumed sweep can't silently run a different
+//!   job set.
+//! - `SWEEP_state.jsonl` — append-only journal of `done` / `failed` /
+//!   `ckpt` events, one JSON object per line. Crash-safe: a torn final
+//!   line is skipped on load.
+//! - `SWEEP_results.json` — the summary, written atomically only when
+//!   every job has a row. Contains deterministic fields only (no
+//!   wall-clock), so an interrupted-and-resumed sweep produces a
+//!   bitwise-identical file.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::planner::JobPlan;
+
+/// Write `text` to `path` atomically: temp file in the same directory,
+/// fsync, rename.
+pub fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+/// Append one JSON line to the journal and sync it — each event is durable
+/// before the sweep moves on.
+pub fn append_event(path: &Path, event: &Json) -> Result<()> {
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("open journal {}", path.display()))?;
+    writeln!(f, "{}", event.dump())?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// A journaled mid-flight checkpoint reference for one job.
+#[derive(Clone, Debug)]
+pub struct JobCkpt {
+    pub step: u64,
+    /// The loss trajectory up to (and including) `step`, replayed into the
+    /// resumed job's row so the final trajectory matches an uninterrupted
+    /// run exactly.
+    pub losses: Vec<(u64, f32)>,
+}
+
+/// The journal replayed into memory: terminal rows plus the latest
+/// checkpoint event per job.
+#[derive(Debug, Default)]
+pub struct Journal {
+    /// Terminal (`done` / `failed`) result rows by job id.
+    pub rows: BTreeMap<String, Json>,
+    /// Latest `ckpt` event per job (later events supersede earlier ones).
+    pub ckpts: BTreeMap<String, JobCkpt>,
+}
+
+impl Journal {
+    /// Load a journal, tolerating a torn trailing line (the crash case the
+    /// journal exists for). A missing file is an empty journal.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut journal = Journal::default();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(journal),
+            Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(event) = Json::parse(line) else { continue };
+            let Some(job) = event.get("job").as_str() else { continue };
+            match event.get("event").as_str() {
+                Some("done") | Some("failed") => {
+                    journal.rows.insert(job.to_string(), event.get("row").clone());
+                }
+                Some("ckpt") => {
+                    let step = event.get("step").as_f64().unwrap_or(0.0) as u64;
+                    let losses = event
+                        .get("losses")
+                        .as_arr()
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|pair| {
+                                    let pair = pair.as_arr()?;
+                                    let s = pair.first()?.as_f64()? as u64;
+                                    let l = pair.get(1)?.as_f64()? as f32;
+                                    Some((s, l))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    journal.ckpts.insert(job.to_string(), JobCkpt { step, losses });
+                }
+                _ => {}
+            }
+        }
+        Ok(journal)
+    }
+}
+
+/// `losses` as the JSON `[[step, loss], …]` array.
+pub fn losses_json(losses: &[(u64, f32)]) -> Json {
+    Json::arr(
+        losses
+            .iter()
+            .map(|&(s, l)| Json::arr(vec![Json::num(s as f64), Json::num(l as f64)])),
+    )
+}
+
+/// A journal `ckpt` event.
+pub fn ckpt_event(job_id: &str, step: u64, losses: &[(u64, f32)]) -> Json {
+    Json::obj(vec![
+        ("event", Json::str("ckpt")),
+        ("job", Json::str(job_id)),
+        ("step", Json::num(step as f64)),
+        ("losses", losses_json(losses)),
+    ])
+}
+
+/// A journal terminal event wrapping a result row.
+pub fn row_event(job_id: &str, status: &str, row: &Json) -> Json {
+    Json::obj(vec![
+        ("event", Json::str(status)),
+        ("job", Json::str(job_id)),
+        ("row", row.clone()),
+    ])
+}
+
+/// Render the sweep manifest document.
+pub fn manifest_json(
+    name: &str,
+    source: &Json,
+    budget_bytes: u64,
+    concurrency: usize,
+    plans: &[JobPlan],
+) -> Json {
+    let mut jobs: Vec<&JobPlan> = plans.iter().collect();
+    jobs.sort_by(|a, b| a.job.id.cmp(&b.job.id));
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("spec", source.clone()),
+        ("budget_bytes", Json::num(budget_bytes as f64)),
+        ("concurrency", Json::num(concurrency as f64)),
+        (
+            "jobs",
+            Json::arr(
+                jobs.iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("id", Json::str(p.job.id.clone())),
+                            ("assign", p.job.assign_json()),
+                            ("model", Json::str(p.job.model.clone())),
+                            ("optimizer", Json::str(p.job.opt.name())),
+                            ("steps", Json::num(p.job.steps as f64)),
+                            ("est_bytes", Json::num(p.est_bytes as f64)),
+                            ("est_flops", Json::num(p.est_flops)),
+                        ])
+                    }),
+            ),
+        ),
+    ])
+}
+
+/// The final summary: rows in job-id order. Deterministic fields only —
+/// budget and concurrency stay in the manifest so runs that only differ in
+/// scheduling produce identical results files.
+pub fn results_json(name: &str, rows: &BTreeMap<String, Json>) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("jobs", Json::arr(rows.values().cloned())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn journal_roundtrips_and_last_ckpt_wins() {
+        let dir = std::env::temp_dir().join("soap-sweep-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SWEEP_state.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let row = Json::obj(vec![
+            ("job_id", Json::str("j000")),
+            ("status", Json::str("done")),
+        ]);
+        append_event(&path, &row_event("j000", "done", &row)).unwrap();
+        append_event(&path, &ckpt_event("j001", 5, &[(1, 2.0), (5, 1.5)])).unwrap();
+        append_event(&path, &ckpt_event("j001", 10, &[(1, 2.0), (10, 1.0)])).unwrap();
+        // Torn trailing line: must be skipped, not fatal.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"event\":\"ckpt\",\"job\":\"j0").unwrap();
+        }
+
+        let journal = Journal::load(&path).unwrap();
+        assert_eq!(journal.rows.len(), 1);
+        assert_eq!(journal.rows["j000"].get("status").as_str(), Some("done"));
+        let ck = &journal.ckpts["j001"];
+        assert_eq!(ck.step, 10);
+        assert_eq!(ck.losses, vec![(1, 2.0), (10, 1.0)]);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_journal_is_empty() {
+        let journal =
+            Journal::load(Path::new("/definitely/not/here.jsonl")).unwrap();
+        assert!(journal.rows.is_empty() && journal.ckpts.is_empty());
+    }
+
+    #[test]
+    fn write_atomic_replaces_content() {
+        let dir = std::env::temp_dir().join("soap-sweep-atomic-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SWEEP_results.json");
+        write_atomic(&path, "first").unwrap();
+        write_atomic(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,52 @@
+//! Sweep orchestrator: concurrent budget-aware hyperparameter sweeps with
+//! streaming results and crash-safe resume (`soap-lab sweep`).
+//!
+//! The pipeline, one module per stage:
+//!
+//! 1. [`spec`] — parse a declarative sweep spec (base config + `grid`
+//!    axes) into a deterministic [`JobSpec`] list, or wrap an explicit job
+//!    list built in code (benches, `sweep-lr`).
+//! 2. [`planner`] — estimate each job's resident bytes and total FLOPs
+//!    from its model's tensor shapes via the coordinator's cost model, and
+//!    order jobs longest-first.
+//! 3. [`scheduler`] — [`Admission`]: the global memory budget and
+//!    concurrency cap that gate job starts.
+//! 4. [`runner`] — worker threads execute jobs as builder-validated
+//!    [`crate::session::TrainSession`]s, multiplex their metrics into one
+//!    tagged JSONL stream, journal terminal events for crash-safe resume,
+//!    and emit `SWEEP_results.json`.
+//! 5. [`manifest`] — the on-disk formats (manifest, journal, results) and
+//!    atomic/append-safe IO helpers.
+//!
+//! ```no_run
+//! use soap_lab::sweep::{run_sweep, SweepOptions, SweepSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = SweepSpec::parse(
+//!     r#"{"name": "lr-grid", "model": "nplm-tiny", "steps": 50,
+//!         "grid": {"lr": [0.01, 0.00316], "optimizer": ["soap", "adamw"]}}"#,
+//! )?;
+//! let outcome = run_sweep(&spec, &SweepOptions {
+//!     out_dir: "sweep-out".into(),
+//!     max_mem_bytes: 256 << 20,
+//!     max_concurrency: 2,
+//!     ..SweepOptions::default()
+//! })?;
+//! for row in &outcome.rows {
+//!     println!("{} {}", row.get("job_id").as_str().unwrap_or("?"), row.dump());
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod manifest;
+pub mod planner;
+pub mod runner;
+pub mod scheduler;
+pub mod spec;
+
+pub use manifest::{JobCkpt, Journal};
+pub use planner::{plan, JobPlan};
+pub use runner::{run_sweep, SweepOptions, SweepOutcome};
+pub use scheduler::{Admission, Admit};
+pub use spec::{JobSpec, SweepSpec};

@@ -1,0 +1,162 @@
+//! Per-job footprint estimation and LPT ordering.
+//!
+//! The planner reuses the coordinator's per-tensor cost model
+//! ([`crate::coordinator::sharded::tensor_update_flops`]) to estimate each job's
+//! optimizer-state bytes and per-step FLOPs from its model's tensor shapes,
+//! then orders jobs longest-processing-time-first so the scheduler starts
+//! the heavyweights while small jobs backfill the remaining budget.
+
+use crate::coordinator::sharded::tensor_update_flops;
+use crate::linalg::TensorShape;
+use crate::optim::OptKind;
+use crate::runtime::Manifest;
+use crate::session::ModelSpec;
+
+use super::spec::JobSpec;
+
+/// A job plus its estimated resources. `est_bytes` gates admission;
+/// `est_flops` (per-run total) drives the LPT ordering.
+#[derive(Clone, Debug)]
+pub struct JobPlan {
+    pub job: JobSpec,
+    /// Estimated resident bytes while the job runs: params, grads,
+    /// accumulators, Adam moments, and (for preconditioned optimizers)
+    /// rotated moments plus per-mode factor/basis matrices, with scratch
+    /// headroom for the largest tensor.
+    pub est_bytes: u64,
+    /// Estimated total FLOPs for the run (per-step cost × steps).
+    pub est_flops: f64,
+}
+
+/// Tensor shapes for a job's model, or `None` when they can't be resolved
+/// (e.g. an artifact model whose manifest isn't on disk). Unknown models
+/// get a zero estimate — admitted immediately, failing fast at session
+/// build into an isolated failed row rather than blocking the sweep.
+pub fn job_shapes(job: &JobSpec, artifacts_dir: &str) -> Option<Vec<TensorShape>> {
+    match ModelSpec::parse(&job.model).ok()? {
+        ModelSpec::Nplm { cfg, .. } => Some(cfg.tensor_shapes()),
+        ModelSpec::Artifact { name } => {
+            let manifest = Manifest::load(std::path::Path::new(artifacts_dir)).ok()?;
+            let info = manifest.config(&name).ok()?;
+            Some(
+                info.params
+                    .iter()
+                    .map(|(_, r, c)| TensorShape::matrix(*r, *c))
+                    .collect(),
+            )
+        }
+    }
+}
+
+/// Whether the optimizer keeps preconditioner state (factors + eigenbases
+/// + rotated moments) in addition to the Adam-style moments.
+fn preconditioned(opt: OptKind) -> bool {
+    !matches!(opt.canonical(), OptKind::AdamW | OptKind::Adafactor)
+}
+
+/// Estimate `(bytes, flops_per_step)` for one job from its tensor shapes.
+pub fn estimate(job: &JobSpec, shapes: &[TensorShape]) -> (u64, f64) {
+    const F32: u64 = 4;
+    let precond = preconditioned(job.opt);
+    let mut bytes: u64 = 0;
+    let mut flops: f64 = 0.0;
+    let mut max_numel: u64 = 0;
+    for shape in shapes {
+        let numel = shape.numel() as u64;
+        max_numel = max_numel.max(numel);
+        // Params + grads + grad-accum buffer, then the two Adam moments.
+        bytes += 3 * numel * F32;
+        bytes += 2 * numel * F32;
+        if precond {
+            // Rotated moment plus per-mode factor and eigenbasis matrices.
+            bytes += numel * F32;
+            for &d in shape.dims() {
+                bytes += 2 * (d as u64) * (d as u64) * F32;
+            }
+            flops += tensor_update_flops(shape.dims());
+        } else {
+            flops += 2.0 * numel as f64;
+        }
+    }
+    // Scratch headroom: rotation workspaces for the largest tensor.
+    bytes += 2 * max_numel * F32;
+    (bytes, flops * job.steps as f64)
+}
+
+/// Plan a job list: estimate each job and sort longest-first (stable, so
+/// equal-cost jobs keep id order and the plan is deterministic).
+pub fn plan(jobs: &[JobSpec], artifacts_dir: &str) -> Vec<JobPlan> {
+    let mut plans: Vec<JobPlan> = jobs
+        .iter()
+        .map(|job| {
+            let (est_bytes, est_flops) = match job_shapes(job, artifacts_dir) {
+                Some(shapes) => estimate(job, &shapes),
+                None => (0, 0.0),
+            };
+            JobPlan { job: job.clone(), est_bytes, est_flops }
+        })
+        .collect();
+    plans.sort_by(|a, b| {
+        b.est_flops
+            .partial_cmp(&a.est_flops)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::OptKind;
+    use crate::sweep::spec::JobSpec;
+
+    #[test]
+    fn estimates_scale_with_model_and_optimizer() {
+        let soap = JobSpec::new("a", "nplm-tiny", OptKind::Soap, 10);
+        let adamw = JobSpec::new("b", "nplm-tiny", OptKind::AdamW, 10);
+        let shapes = job_shapes(&soap, "artifacts").unwrap();
+        assert!(!shapes.is_empty());
+        let (soap_bytes, soap_flops) = estimate(&soap, &shapes);
+        let (adamw_bytes, adamw_flops) = estimate(&adamw, &shapes);
+        // Preconditioned state strictly dominates Adam-only state.
+        assert!(soap_bytes > adamw_bytes);
+        assert!(soap_flops > adamw_flops);
+
+        let big = JobSpec::new("c", "nplm", OptKind::Soap, 10);
+        let big_shapes = job_shapes(&big, "artifacts").unwrap();
+        let (big_bytes, _) = estimate(&big, &big_shapes);
+        assert!(big_bytes > soap_bytes, "nplm should out-weigh nplm-tiny");
+    }
+
+    #[test]
+    fn estimates_scale_with_steps() {
+        let short = JobSpec::new("a", "nplm-tiny", OptKind::Soap, 10);
+        let long = JobSpec::new("b", "nplm-tiny", OptKind::Soap, 100);
+        let shapes = job_shapes(&short, "artifacts").unwrap();
+        let (_, f_short) = estimate(&short, &shapes);
+        let (_, f_long) = estimate(&long, &shapes);
+        assert!((f_long / f_short - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_orders_longest_first_and_is_stable() {
+        let jobs = vec![
+            JobSpec::new("j000", "nplm-tiny", OptKind::AdamW, 10),
+            JobSpec::new("j001", "nplm", OptKind::Soap, 100),
+            JobSpec::new("j002", "nplm-tiny", OptKind::AdamW, 10),
+        ];
+        let plans = plan(&jobs, "artifacts");
+        assert_eq!(plans[0].job.id, "j001");
+        // Equal-cost jobs keep their id order (stable sort).
+        assert_eq!(plans[1].job.id, "j000");
+        assert_eq!(plans[2].job.id, "j002");
+    }
+
+    #[test]
+    fn unknown_artifact_model_gets_zero_estimate() {
+        let job = JobSpec::new("a", "no-such-model", OptKind::Soap, 10);
+        assert!(job_shapes(&job, "definitely-missing-dir").is_none());
+        let plans = plan(&[job], "definitely-missing-dir");
+        assert_eq!(plans[0].est_bytes, 0);
+    }
+}

@@ -1,0 +1,597 @@
+//! The sweep executor: worker threads pull jobs off the LPT-ordered plan
+//! under [`Admission`] control, run each as a [`TrainSession`] streaming
+//! tagged JSONL through one [`SharedLineWriter`], journal every terminal
+//! event, and write the results summary when the last row lands.
+//!
+//! ## Concurrency model
+//!
+//! `max_concurrency` OS threads share a mutex-protected scheduler state
+//! (admission bookkeeping + claimed set + result rows) and a condvar.
+//! Each worker scans the plan longest-first and claims the first job the
+//! budget admits (first-fit backfill: a small job may start while a big
+//! one waits). Sessions are built under a dedicated build lock because
+//! [`SessionBuilder::build`] flips process-global seams (telemetry enable,
+//! fault-plan install) — every job therefore runs with the sweep-level
+//! telemetry flag, and per-job fault plans are only meaningful at
+//! `max_concurrency = 1`.
+//!
+//! ## Halt and resume
+//!
+//! `halt_after_steps` stops the sweep after N training steps summed across
+//! all jobs (the deterministic interruption the resume test pins; it also
+//! models a crash at an arbitrary point). Each in-flight job saves a
+//! checkpoint and journals it; completed rows are already journaled. A
+//! `--resume-sweep` run skips journaled rows, resumes checkpointed jobs
+//! via [`SessionBuilder::resume_from`] (bitwise-identical continuation),
+//! and rewrites the metrics JSONL to drop lines past each resumed job's
+//! checkpoint — so the final files match an uninterrupted run exactly at
+//! `max_concurrency = 1` (with more workers, JSONL interleaving is
+//! scheduler-dependent; rows and summary still match).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::OpenOptions;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use anyhow::{Context, Result};
+
+use crate::session::{JsonlSink, SessionBuilder, SharedLineWriter, TrainSession};
+use crate::telemetry::metrics;
+use crate::util::json::Json;
+
+use super::manifest::{
+    append_event, ckpt_event, losses_json, manifest_json, results_json, row_event,
+    write_atomic, JobCkpt, Journal,
+};
+use super::planner::{plan, JobPlan};
+use super::scheduler::{Admission, Admit};
+use super::spec::{JobSpec, SweepSpec};
+
+/// Knobs for one `run_sweep` invocation (the CLI flags, basically).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Directory for the manifest, journal, metrics JSONL, results, and
+    /// per-job checkpoints.
+    pub out_dir: PathBuf,
+    /// Global memory budget over concurrently-running jobs' estimated
+    /// footprints; 0 = unlimited.
+    pub max_mem_bytes: u64,
+    /// Maximum concurrently-running jobs (also the worker thread count).
+    pub max_concurrency: usize,
+    /// Resume an interrupted sweep in `out_dir` instead of starting fresh.
+    pub resume: bool,
+    /// Checkpoint each running job every N of its own steps (0 = only when
+    /// halting). Halt-time checkpoints are always written.
+    pub ckpt_every: u64,
+    /// Stop the whole sweep after this many training steps summed across
+    /// jobs (`None` = run to completion). Deterministic at concurrency 1.
+    pub halt_after_steps: Option<u64>,
+    /// Optimizer worker threads inside each job's sharded executor.
+    pub workers_per_job: usize,
+    /// Telemetry flag applied to EVERY job (the seam is process-global).
+    pub telemetry: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            out_dir: PathBuf::from("sweep-out"),
+            max_mem_bytes: 0,
+            max_concurrency: 2,
+            resume: false,
+            ckpt_every: 0,
+            halt_after_steps: None,
+            workers_per_job: 2,
+            telemetry: false,
+        }
+    }
+}
+
+/// What `run_sweep` hands back to the CLI / benches.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Result rows in job-id order (only the jobs that reached a terminal
+    /// state — a halted sweep returns a partial list).
+    pub rows: Vec<Json>,
+    /// True when `halt_after_steps` tripped; no results file is written.
+    pub halted: bool,
+    /// `SWEEP_results.json`, present only for a completed sweep.
+    pub results_path: Option<PathBuf>,
+    pub metrics_path: PathBuf,
+    pub manifest_path: PathBuf,
+    pub journal_path: PathBuf,
+}
+
+impl SweepOutcome {
+    /// The row for `job_id`, if it reached a terminal state.
+    pub fn row(&self, job_id: &str) -> Option<&Json> {
+        self.rows.iter().find(|r| r.get("job_id").as_str() == Some(job_id))
+    }
+}
+
+/// Mean of the last `min(20, len)` losses — the figure the paper's sweep
+/// tables report. One pure function used by every path that renders a row,
+/// so interrupted and uninterrupted runs agree bitwise.
+fn tail_loss(losses: &[(u64, f32)]) -> Option<f32> {
+    if losses.is_empty() {
+        return None;
+    }
+    let k = losses.len().min(20);
+    let sum: f64 = losses[losses.len() - k..].iter().map(|&(_, l)| l as f64).sum();
+    Some((sum / k as f64) as f32)
+}
+
+fn done_row(job: &JobSpec, losses: &[(u64, f32)], state_bytes: usize) -> Json {
+    Json::obj(vec![
+        ("job_id", Json::str(job.id.clone())),
+        ("assign", job.assign_json()),
+        ("status", Json::str("done")),
+        ("steps", Json::num(job.steps as f64)),
+        (
+            "final_loss",
+            losses.last().map_or(Json::Null, |&(_, l)| Json::num(l as f64)),
+        ),
+        (
+            "tail_loss",
+            tail_loss(losses).map_or(Json::Null, |l| Json::num(l as f64)),
+        ),
+        ("state_bytes", Json::num(state_bytes as f64)),
+        ("losses", losses_json(losses)),
+    ])
+}
+
+fn failed_row(job: &JobSpec, error: &str, losses: &[(u64, f32)]) -> Json {
+    Json::obj(vec![
+        ("job_id", Json::str(job.id.clone())),
+        ("assign", job.assign_json()),
+        ("status", Json::str("failed")),
+        ("error", Json::str(error)),
+        ("steps", Json::num(job.steps as f64)),
+        ("final_loss", Json::Null),
+        ("tail_loss", Json::Null),
+        ("state_bytes", Json::num(0.0)),
+        ("losses", losses_json(losses)),
+    ])
+}
+
+/// Scheduler state shared by the worker threads.
+struct Shared {
+    admission: Admission,
+    /// Parallel to the plan: claimed jobs are running, finished, or
+    /// rejected — never scanned again.
+    claimed: Vec<bool>,
+    /// Terminal rows by job id (pre-seeded from the journal on resume).
+    results: BTreeMap<String, Json>,
+}
+
+/// Everything a worker thread needs, borrowed from `run_sweep`'s frame.
+struct RunCtx<'a> {
+    opts: &'a SweepOptions,
+    spec: &'a SweepSpec,
+    journal_path: &'a Path,
+    writer: &'a SharedLineWriter,
+    shared: &'a Mutex<Shared>,
+    cv: &'a Condvar,
+    halt: &'a AtomicBool,
+    global_steps: &'a AtomicU64,
+    /// Serializes [`SessionBuilder::build`]: it flips process-global
+    /// telemetry / fault seams.
+    build_lock: &'a Mutex<()>,
+    resume_ckpts: &'a BTreeMap<String, JobCkpt>,
+}
+
+impl<'a> RunCtx<'a> {
+    fn lock(&self) -> MutexGuard<'a, Shared> {
+        self.shared.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn journal(&self, event: &Json) {
+        if let Err(e) = append_event(self.journal_path, event) {
+            eprintln!("sweep: journal write failed: {e:#}");
+        }
+    }
+}
+
+enum JobOutcome {
+    Done(Json),
+    Failed(Json),
+    /// The job checkpointed and stopped because the sweep is halting; no
+    /// terminal row.
+    Halted,
+}
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+/// Run one job to completion, failure, or halt-checkpoint. Panics are
+/// caught and isolated into a failed row like any other job error.
+fn run_job(ctx: &RunCtx<'_>, plan: &JobPlan) -> JobOutcome {
+    let job = &plan.job;
+    let ckpt_path = ctx.opts.out_dir.join(format!("job_{}.ckpt", job.id));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_job_inner(ctx, job, &ckpt_path)
+    }));
+    match caught {
+        Ok(Ok(outcome)) => outcome,
+        Ok(Err(e)) => JobOutcome::Failed(failed_row(job, &format!("{e:#}"), &[])),
+        Err(payload) => JobOutcome::Failed(failed_row(
+            job,
+            &format!("panicked: {}", panic_msg(payload)),
+            &[],
+        )),
+    }
+}
+
+fn run_job_inner(ctx: &RunCtx<'_>, job: &JobSpec, ckpt_path: &Path) -> Result<JobOutcome> {
+    let mut losses: Vec<(u64, f32)> = Vec::new();
+    let mut builder: SessionBuilder = job
+        .session(ctx.opts.workers_per_job, &ctx.spec.artifacts_dir)?
+        .telemetry(ctx.opts.telemetry);
+    if let Some(ck) = ctx.resume_ckpts.get(&job.id) {
+        builder = builder.resume_from(ckpt_path);
+        losses = ck.losses.clone();
+    }
+    let sink = JsonlSink::new(ctx.writer.handle())
+        .with_tag("job_id", Json::str(job.id.clone()))
+        .with_tag("assign", job.assign_json());
+    let mut session: TrainSession = {
+        let _build = ctx.build_lock.lock().unwrap_or_else(|e| e.into_inner());
+        builder.sink(Box::new(sink)).build()?
+    };
+
+    while session.current_step() < session.total_steps() {
+        match session.step() {
+            Ok((loss, _)) => losses.push((session.current_step(), loss)),
+            // Guard aborts and injected faults surface here; the job
+            // becomes a failed row and the sweep keeps going.
+            Err(e) => {
+                return Ok(JobOutcome::Failed(failed_row(job, &format!("{e:#}"), &losses)))
+            }
+        }
+        let sweep_steps = ctx.global_steps.fetch_add(1, Ordering::SeqCst) + 1;
+        let at_end = session.current_step() >= session.total_steps();
+        let halting = ctx.halt.load(Ordering::SeqCst)
+            || ctx.opts.halt_after_steps.is_some_and(|h| sweep_steps >= h);
+        if halting {
+            ctx.halt.store(true, Ordering::SeqCst);
+            if !at_end {
+                session.save_checkpoint(ckpt_path)?;
+                ctx.journal(&ckpt_event(&job.id, session.current_step(), &losses));
+                ctx.cv.notify_all();
+                return Ok(JobOutcome::Halted);
+            }
+            // On the final step: finish normally; the flag still stops the
+            // rest of the sweep.
+            ctx.cv.notify_all();
+        } else if ctx.opts.ckpt_every > 0
+            && !at_end
+            && session.current_step() % ctx.opts.ckpt_every == 0
+        {
+            session.save_checkpoint(ckpt_path)?;
+            ctx.journal(&ckpt_event(&job.id, session.current_step(), &losses));
+        }
+    }
+    let state_bytes = session.state_bytes();
+    Ok(JobOutcome::Done(done_row(job, &losses, state_bytes)))
+}
+
+/// Worker loop: claim the next admissible job (longest-first with
+/// first-fit backfill), run it, publish its row, repeat until the plan is
+/// drained or the sweep halts.
+fn worker(ctx: &RunCtx<'_>, plans: &[JobPlan]) {
+    loop {
+        if ctx.halt.load(Ordering::SeqCst) {
+            return;
+        }
+        let picked = {
+            let mut s = ctx.lock();
+            loop {
+                if ctx.halt.load(Ordering::SeqCst) {
+                    return;
+                }
+                let mut pick = None;
+                let mut unclaimed = 0usize;
+                for (i, p) in plans.iter().enumerate() {
+                    if s.claimed[i] {
+                        continue;
+                    }
+                    match s.admission.decide(p.est_bytes) {
+                        Admit::TooBig => {
+                            // Can never run under this budget: reject it
+                            // now as an isolated failed row.
+                            s.claimed[i] = true;
+                            let row = failed_row(
+                                &p.job,
+                                &format!(
+                                    "estimated footprint {} bytes exceeds memory budget {} bytes",
+                                    p.est_bytes,
+                                    s.admission.budget()
+                                ),
+                                &[],
+                            );
+                            ctx.journal(&row_event(&p.job.id, "failed", &row));
+                            metrics::sweep_jobs_failed().inc();
+                            s.results.insert(p.job.id.clone(), row);
+                        }
+                        Admit::Start => {
+                            s.admission.admit(&p.job.id, p.est_bytes);
+                            s.claimed[i] = true;
+                            metrics::sweep_jobs_running().set(s.admission.running() as f64);
+                            pick = Some(i);
+                            break;
+                        }
+                        Admit::Wait => unclaimed += 1,
+                    }
+                }
+                if let Some(i) = pick {
+                    break Some(i);
+                }
+                if unclaimed == 0 {
+                    break None; // plan drained (running jobs belong to other workers)
+                }
+                s = ctx.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(i) = picked else { return };
+        let p = &plans[i];
+        let outcome = run_job(ctx, p);
+        let mut s = ctx.lock();
+        s.admission.release(&p.job.id);
+        metrics::sweep_jobs_running().set(s.admission.running() as f64);
+        match outcome {
+            JobOutcome::Done(row) => {
+                ctx.journal(&row_event(&p.job.id, "done", &row));
+                metrics::sweep_jobs_done().inc();
+                s.results.insert(p.job.id.clone(), row);
+            }
+            JobOutcome::Failed(row) => {
+                ctx.journal(&row_event(&p.job.id, "failed", &row));
+                metrics::sweep_jobs_failed().inc();
+                s.results.insert(p.job.id.clone(), row);
+            }
+            JobOutcome::Halted => {}
+        }
+        drop(s);
+        ctx.cv.notify_all();
+    }
+}
+
+/// On resume, rewrite the metrics JSONL keeping only lines that belong to
+/// the replayed history: all lines of jobs with terminal rows, and lines
+/// at or before the checkpoint step for jobs about to resume. Everything
+/// else (post-checkpoint lines, torn lines, unclaimed jobs) is dropped and
+/// will be re-emitted by the resumed run.
+fn rewrite_metrics(path: &Path, journal: &Journal) -> Result<()> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("read {}", path.display())),
+    };
+    let mut kept = String::new();
+    for line in text.lines() {
+        let Ok(v) = Json::parse(line) else { continue };
+        let Some(job) = v.get("job_id").as_str() else { continue };
+        let keep = if journal.rows.contains_key(job) {
+            true
+        } else if let Some(ck) = journal.ckpts.get(job) {
+            v.get("step").as_f64().is_some_and(|s| (s as u64) <= ck.step)
+        } else {
+            false
+        };
+        if keep {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    write_atomic(path, &kept)
+}
+
+/// Run a sweep. See the module docs for the concurrency / halt / resume
+/// semantics.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome> {
+    anyhow::ensure!(!spec.jobs.is_empty(), "sweep has no jobs");
+    let mut ids = BTreeSet::new();
+    for j in &spec.jobs {
+        anyhow::ensure!(ids.insert(j.id.as_str()), "duplicate job id '{}'", j.id);
+    }
+
+    std::fs::create_dir_all(&opts.out_dir)
+        .with_context(|| format!("create {}", opts.out_dir.display()))?;
+    let manifest_path = opts.out_dir.join("SWEEP_manifest.json");
+    let journal_path = opts.out_dir.join("SWEEP_state.jsonl");
+    let metrics_path = opts.out_dir.join("SWEEP_metrics.jsonl");
+    let results_path = opts.out_dir.join("SWEEP_results.json");
+
+    let plans = plan(&spec.jobs, &spec.artifacts_dir);
+
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let mut resume_ckpts: BTreeMap<String, JobCkpt> = BTreeMap::new();
+    if opts.resume {
+        let prior_text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("--resume-sweep: no sweep manifest at {}", manifest_path.display())
+        })?;
+        let prior = Json::parse(&prior_text)
+            .map_err(|e| anyhow::anyhow!("--resume-sweep: bad manifest: {e}"))?;
+        let prior_ids: BTreeSet<&str> = prior
+            .get("jobs")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|j| j.get("id").as_str()).collect())
+            .unwrap_or_default();
+        let now_ids: BTreeSet<&str> = spec.jobs.iter().map(|j| j.id.as_str()).collect();
+        anyhow::ensure!(
+            prior_ids == now_ids,
+            "--resume-sweep: the spec expands to a different job set than the \
+             manifest in {} ({} jobs vs {}); resume with the original spec or \
+             start a fresh --out-dir",
+            opts.out_dir.display(),
+            now_ids.len(),
+            prior_ids.len(),
+        );
+        let journal = Journal::load(&journal_path)?;
+        rewrite_metrics(&metrics_path, &journal)?;
+        for (id, row) in &journal.rows {
+            if row.get("status").as_str() == Some("done") {
+                metrics::sweep_jobs_done().inc(); // skipped-on-resume counts as done
+            } else {
+                metrics::sweep_jobs_failed().inc();
+            }
+            results.insert(id.clone(), row.clone());
+        }
+        for (id, ck) in journal.ckpts {
+            if results.contains_key(&id) {
+                continue; // terminal row supersedes any checkpoint
+            }
+            if opts.out_dir.join(format!("job_{id}.ckpt")).exists() {
+                resume_ckpts.insert(id, ck);
+            }
+        }
+    } else {
+        // Fresh start: clear any prior sweep state in this directory so
+        // stale rows can't leak into the new run.
+        let _ = std::fs::remove_file(&journal_path);
+        let _ = std::fs::remove_file(&metrics_path);
+        let _ = std::fs::remove_file(&results_path);
+        let doc = manifest_json(
+            &spec.name,
+            &spec.source,
+            opts.max_mem_bytes,
+            opts.max_concurrency,
+            &plans,
+        );
+        write_atomic(&manifest_path, &(doc.pretty() + "\n"))?;
+    }
+
+    metrics::sweep_mem_budget_bytes().set(opts.max_mem_bytes as f64);
+
+    let metrics_file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&metrics_path)
+        .with_context(|| format!("open {}", metrics_path.display()))?;
+    let writer = SharedLineWriter::new(metrics_file);
+
+    let pending = spec.jobs.len() - results.len();
+    let claimed: Vec<bool> =
+        plans.iter().map(|p| results.contains_key(&p.job.id)).collect();
+    let shared = Mutex::new(Shared {
+        admission: Admission::new(opts.max_mem_bytes, opts.max_concurrency),
+        claimed,
+        results,
+    });
+    let cv = Condvar::new();
+    let halt = AtomicBool::new(false);
+    let global_steps = AtomicU64::new(0);
+    let build_lock = Mutex::new(());
+    let ctx = RunCtx {
+        opts,
+        spec,
+        journal_path: &journal_path,
+        writer: &writer,
+        shared: &shared,
+        cv: &cv,
+        halt: &halt,
+        global_steps: &global_steps,
+        build_lock: &build_lock,
+        resume_ckpts: &resume_ckpts,
+    };
+
+    let n_workers = opts.max_concurrency.max(1).min(pending);
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| worker(&ctx, &plans));
+        }
+    });
+
+    let halted = halt.load(Ordering::SeqCst);
+    let shared = shared.into_inner().unwrap_or_else(|e| e.into_inner());
+    metrics::sweep_jobs_running().set(0.0);
+    let rows: Vec<Json> = shared.results.values().cloned().collect();
+    let results_path = if !halted && shared.results.len() == spec.jobs.len() {
+        let doc = results_json(&spec.name, &shared.results);
+        write_atomic(&results_path, &(doc.pretty() + "\n"))?;
+        Some(results_path)
+    } else {
+        None
+    };
+    Ok(SweepOutcome {
+        rows,
+        halted,
+        results_path,
+        metrics_path,
+        manifest_path,
+        journal_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_loss_is_mean_of_last_20() {
+        assert_eq!(tail_loss(&[]), None);
+        assert_eq!(tail_loss(&[(1, 2.0)]), Some(2.0));
+        let losses: Vec<(u64, f32)> = (1..=30).map(|i| (i, i as f32)).collect();
+        // Last 20 of 1..=30 are 11..=30, mean 20.5.
+        assert_eq!(tail_loss(&losses), Some(20.5));
+    }
+
+    #[test]
+    fn rows_carry_assign_and_status() {
+        use crate::optim::OptKind;
+        let job = JobSpec::new("j007", "nplm-tiny", OptKind::Soap, 5)
+            .with_assign("lr", "0.01");
+        let done = done_row(&job, &[(1, 3.0), (2, 2.0)], 1234);
+        assert_eq!(done.get("job_id").as_str(), Some("j007"));
+        assert_eq!(done.get("status").as_str(), Some("done"));
+        assert_eq!(done.get("assign").get("lr").as_str(), Some("0.01"));
+        assert_eq!(done.get("final_loss").as_f64(), Some(2.0));
+        let failed = failed_row(&job, "boom", &[]);
+        assert_eq!(failed.get("status").as_str(), Some("failed"));
+        assert_eq!(failed.get("error").as_str(), Some("boom"));
+        assert_eq!(failed.get("final_loss"), &Json::Null);
+    }
+
+    #[test]
+    fn rewrite_metrics_keeps_done_jobs_and_ckpt_prefix() {
+        let dir = std::env::temp_dir().join("soap-sweep-rewrite-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SWEEP_metrics.jsonl");
+        let lines = [
+            r#"{"job_id":"j000","step":1,"loss":2.0}"#,
+            r#"{"job_id":"j000","step":2,"loss":1.9}"#,
+            r#"{"job_id":"j001","step":1,"loss":2.1}"#,
+            r#"{"job_id":"j001","step":2,"loss":2.0}"#,
+            r#"{"job_id":"j001","step":3,"loss":1.8}"#,
+            r#"{"job_id":"j002","step":1,"loss":2.2}"#,
+            r#"{"job_id":"j0"#, // torn tail
+        ];
+        std::fs::write(&path, lines.join("\n")).unwrap();
+
+        let mut journal = Journal::default();
+        journal.rows.insert(
+            "j000".into(),
+            Json::obj(vec![("status", Json::str("done"))]),
+        );
+        journal
+            .ckpts
+            .insert("j001".into(), JobCkpt { step: 2, losses: vec![] });
+        // j002 has neither a row nor a checkpoint: dropped entirely.
+        rewrite_metrics(&path, &journal).unwrap();
+
+        let kept = std::fs::read_to_string(&path).unwrap();
+        let kept: Vec<&str> = kept.lines().collect();
+        assert_eq!(kept.len(), 4);
+        assert!(kept.iter().all(|l| !l.contains("j002")));
+        assert!(kept.iter().filter(|l| l.contains("j001")).count() == 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

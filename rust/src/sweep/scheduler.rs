@@ -1,0 +1,140 @@
+//! Budget-aware admission control for concurrent sweep jobs.
+//!
+//! [`Admission`] is deliberately passive bookkeeping — no threads of its
+//! own. The runner holds it under a mutex, asks [`Admission::admit`] before
+//! starting a job, and calls [`Admission::release`] when the job finishes.
+//! Invariant (pinned by a property test in `rust/tests/sweep.rs`): the sum
+//! of admitted footprints never exceeds the budget.
+
+/// Outcome of an admission query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Fits right now — the job may start.
+    Start,
+    /// Doesn't fit alongside the currently running jobs; retry after a
+    /// release.
+    Wait,
+    /// Larger than the whole budget — can never run under it.
+    TooBig,
+}
+
+/// Tracks running jobs against a global memory budget and a concurrency
+/// cap.
+#[derive(Debug)]
+pub struct Admission {
+    budget: u64,
+    max_concurrency: usize,
+    used: u64,
+    running: Vec<(String, u64)>,
+}
+
+impl Admission {
+    /// `budget` of 0 means unlimited memory; `max_concurrency` is clamped
+    /// to at least 1.
+    pub fn new(budget: u64, max_concurrency: usize) -> Self {
+        Self {
+            budget: if budget == 0 { u64::MAX } else { budget },
+            max_concurrency: max_concurrency.max(1),
+            used: 0,
+            running: Vec::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Would a job of `bytes` be admitted right now? (Pure query.)
+    pub fn decide(&self, bytes: u64) -> Admit {
+        if bytes > self.budget {
+            return Admit::TooBig;
+        }
+        if self.running.len() >= self.max_concurrency {
+            return Admit::Wait;
+        }
+        if self.used.saturating_add(bytes) > self.budget {
+            return Admit::Wait;
+        }
+        Admit::Start
+    }
+
+    /// Query and, on [`Admit::Start`], record the job as running.
+    pub fn admit(&mut self, id: &str, bytes: u64) -> Admit {
+        let verdict = self.decide(bytes);
+        if verdict == Admit::Start {
+            self.used = self.used.saturating_add(bytes);
+            self.running.push((id.to_string(), bytes));
+        }
+        verdict
+    }
+
+    /// Release a finished job's footprint. Unknown ids are ignored (a job
+    /// rejected as [`Admit::TooBig`] never held a reservation).
+    pub fn release(&mut self, id: &str) {
+        if let Some(pos) = self.running.iter().position(|(j, _)| j == id) {
+            let (_, bytes) = self.running.remove(pos);
+            self.used = self.used.saturating_sub(bytes);
+        }
+    }
+
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// The invariant the property test pins: reserved bytes within budget,
+    /// concurrency within cap, and `used` consistent with the running set.
+    pub fn check_invariant(&self) -> bool {
+        self.used <= self.budget
+            && self.running.len() <= self.max_concurrency
+            && self.used == self.running.iter().map(|(_, b)| b).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_until_budget_then_waits() {
+        let mut a = Admission::new(100, 8);
+        assert_eq!(a.admit("j0", 60), Admit::Start);
+        assert_eq!(a.admit("j1", 60), Admit::Wait);
+        assert_eq!(a.admit("j2", 40), Admit::Start);
+        assert_eq!(a.used_bytes(), 100);
+        a.release("j0");
+        assert_eq!(a.admit("j1", 60), Admit::Start);
+        assert!(a.check_invariant());
+    }
+
+    #[test]
+    fn concurrency_cap_blocks_even_with_budget_room() {
+        let mut a = Admission::new(0, 2);
+        assert_eq!(a.admit("j0", 10), Admit::Start);
+        assert_eq!(a.admit("j1", 10), Admit::Start);
+        assert_eq!(a.decide(10), Admit::Wait);
+        a.release("j1");
+        assert_eq!(a.admit("j2", 10), Admit::Start);
+    }
+
+    #[test]
+    fn oversized_job_is_too_big_not_wait() {
+        let mut a = Admission::new(100, 4);
+        assert_eq!(a.admit("j0", 101), Admit::TooBig);
+        assert_eq!(a.running(), 0);
+        // TooBig never reserves; releasing it is a no-op.
+        a.release("j0");
+        assert!(a.check_invariant());
+    }
+
+    #[test]
+    fn zero_budget_means_unlimited() {
+        let mut a = Admission::new(0, 1);
+        assert_eq!(a.budget(), u64::MAX);
+        assert_eq!(a.admit("j0", u64::MAX / 2), Admit::Start);
+        assert_eq!(a.decide(u64::MAX), Admit::Wait); // concurrency, not memory
+    }
+}

@@ -1,0 +1,392 @@
+//! Declarative sweep specification: a JSON base configuration plus a `grid`
+//! object whose axes expand into the Cartesian product of jobs. Benches and
+//! the `sweep-lr` preset skip the JSON and build [`JobSpec`]s directly.
+
+use anyhow::Result;
+
+use crate::experiments::harness::{paper_schedule, tuned_lr};
+use crate::optim::{FreqSchedule, Hyper, OptKind, Schedule};
+use crate::session::{Backend, ModelSpec, SessionBuilder, TrainSession};
+use crate::util::json::Json;
+
+/// One planned training job: everything needed to build its
+/// [`TrainSession`], plus the parameter assignment that tags its lines in
+/// the multiplexed JSONL stream.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Stable id (`j000`, `j001`, …) — grid-product index for spec-derived
+    /// sweeps; also the key in the journal, results table, and JSONL tags.
+    pub id: String,
+    /// `(axis, value)` pairs this job was assigned from the grid, in axis
+    /// order. Rides along as the `assign` tag on every JSONL line.
+    pub assign: Vec<(String, String)>,
+    pub model: String,
+    pub opt: OptKind,
+    pub hyper: Hyper,
+    /// `None` picks the per-optimizer tuned LR
+    /// ([`crate::experiments::harness::tuned_lr`]).
+    pub lr: Option<f32>,
+    /// Constant LR instead of the paper's warmup-cosine schedule.
+    pub constant_lr: bool,
+    pub steps: u64,
+    pub seed: u64,
+    pub grad_accum: usize,
+    /// Override the session backend (`None` = the builder default,
+    /// sharded). `sweep-lr --backend serial|pjrt` rides this.
+    pub backend: Option<Backend>,
+    /// Optional seeded fault-injection plan for this job
+    /// ([`crate::fault::FaultPlan`] grammar). The fault seam is
+    /// process-global, so chaos sweeps should run with concurrency 1.
+    pub fault_plan: Option<String>,
+}
+
+impl JobSpec {
+    /// A job with the sweep defaults (SOAP on `nplm-tiny`, tuned LR, paper
+    /// schedule, seed 0).
+    pub fn new(id: impl Into<String>, model: &str, opt: OptKind, steps: u64) -> Self {
+        Self {
+            id: id.into(),
+            assign: Vec::new(),
+            model: model.to_string(),
+            opt,
+            hyper: Hyper::default(),
+            lr: None,
+            constant_lr: false,
+            steps,
+            seed: 0,
+            grad_accum: 1,
+            backend: None,
+            fault_plan: None,
+        }
+    }
+
+    pub fn with_assign(mut self, axis: &str, value: impl Into<String>) -> Self {
+        self.assign.push((axis.to_string(), value.into()));
+        self
+    }
+
+    pub fn with_hyper(mut self, h: Hyper) -> Self {
+        self.hyper = h;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn constant_lr(mut self, on: bool) -> Self {
+        self.constant_lr = on;
+        self
+    }
+
+    /// The job's `assign` pairs as a JSON object (the JSONL line tag).
+    pub fn assign_json(&self) -> Json {
+        Json::obj(self.assign.iter().map(|(k, v)| (k.as_str(), Json::str(v.clone()))).collect())
+    }
+
+    /// Map onto the session builder — the same construction path `main.rs`
+    /// and the figure benches use, so a sweep job and a CLI run of the same
+    /// configuration are identical.
+    pub fn session(&self, workers: usize, artifacts_dir: &str) -> Result<SessionBuilder> {
+        let lr = self.lr.unwrap_or_else(|| tuned_lr(self.opt));
+        let mut b = TrainSession::builder()
+            .model(ModelSpec::parse(&self.model)?)
+            .artifacts_dir(artifacts_dir)
+            .optimizer(self.opt)
+            .hyper(self.hyper.clone())
+            .schedule(if self.constant_lr {
+                Schedule::Constant { lr }
+            } else {
+                paper_schedule(lr, self.steps)
+            })
+            .steps(self.steps)
+            .seed(self.seed)
+            .grad_accum(self.grad_accum)
+            .workers(workers);
+        if let Some(backend) = self.backend {
+            b = b.backend(backend);
+        }
+        if let Some(plan) = &self.fault_plan {
+            b = b.fault_plan(plan, 0);
+        }
+        Ok(b)
+    }
+}
+
+/// A parsed sweep: name, per-job worker threads, and the expanded job list.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Optimizer worker threads per job (jobs run concurrently, so this
+    /// stays small; default 2).
+    pub workers: usize,
+    pub artifacts_dir: String,
+    pub jobs: Vec<JobSpec>,
+    /// The source document, recorded verbatim in the sweep manifest.
+    pub source: Json,
+}
+
+/// Base keys accepted at the top level of a sweep spec (also valid as grid
+/// axes, except `name`, `workers`, `artifacts`, and `grid` itself).
+pub const SPEC_KEYS: &str = "name, model, optimizer, lr, constant-lr, steps, seed, \
+grad-accum, precond-freq, precondition-1d, one-sided, factorized, fault-plan, \
+workers, artifacts, grid";
+
+/// Grid axis keys (each maps to an array of values in the `grid` object).
+pub const AXIS_KEYS: &str =
+    "model, optimizer, lr, constant-lr, steps, seed, grad-accum, precond-freq, \
+precondition-1d, one-sided, factorized, fault-plan";
+
+fn bad_value(key: &str, v: &Json) -> anyhow::Error {
+    anyhow::anyhow!("sweep spec key '{key}': unsupported value {}", v.dump())
+}
+
+/// Apply one key to a job template. `value` is JSON (so grid axes can mix
+/// numbers and strings naturally).
+fn apply_key(job: &mut JobSpec, key: &str, value: &Json) -> Result<()> {
+    match key {
+        "model" => job.model = value.as_str().ok_or_else(|| bad_value(key, value))?.to_string(),
+        "optimizer" => {
+            job.opt = OptKind::parse(value.as_str().ok_or_else(|| bad_value(key, value))?)?;
+        }
+        "lr" => job.lr = Some(value.as_f64().ok_or_else(|| bad_value(key, value))? as f32),
+        "constant-lr" => job.constant_lr = value.as_bool().ok_or_else(|| bad_value(key, value))?,
+        "steps" => {
+            let n = value.as_f64().ok_or_else(|| bad_value(key, value))?;
+            anyhow::ensure!(n >= 1.0, "sweep spec: steps must be ≥ 1");
+            job.steps = n as u64;
+        }
+        "seed" => job.seed = value.as_f64().ok_or_else(|| bad_value(key, value))? as u64,
+        "grad-accum" => {
+            let n = value.as_f64().ok_or_else(|| bad_value(key, value))? as usize;
+            anyhow::ensure!(n >= 1, "sweep spec: grad-accum must be ≥ 1");
+            job.grad_accum = n;
+        }
+        // Number = constant frequency; string = `f@start` schedule (same
+        // normalization as the config file: a schedule skipping step 0
+        // inherits the job's current base frequency).
+        "precond-freq" => match value {
+            Json::Num(f) => {
+                anyhow::ensure!(*f >= 1.0, "sweep spec: precond-freq must be ≥ 1");
+                job.hyper.precond_freq = *f as u64;
+                job.hyper.precond_freq_schedule = None;
+            }
+            Json::Str(s) => {
+                let parsed = FreqSchedule::parse(s)?;
+                let sched = if parsed.freq_at(0).is_some() {
+                    parsed
+                } else {
+                    let mut pieces = vec![(0, job.hyper.precond_freq)];
+                    pieces.extend_from_slice(parsed.pieces());
+                    FreqSchedule::new(&pieces)?
+                };
+                job.hyper.precond_freq =
+                    sched.freq_at(0).expect("schedule covers step 0");
+                job.hyper.precond_freq_schedule = Some(sched);
+            }
+            other => return Err(bad_value(key, other)),
+        },
+        "precondition-1d" => {
+            job.hyper.precondition_1d = value.as_bool().ok_or_else(|| bad_value(key, value))?;
+        }
+        "one-sided" => {
+            job.hyper.one_sided = value.as_bool().ok_or_else(|| bad_value(key, value))?;
+        }
+        "factorized" => {
+            job.hyper.factorized = value.as_bool().ok_or_else(|| bad_value(key, value))?;
+        }
+        "fault-plan" => {
+            job.fault_plan =
+                Some(value.as_str().ok_or_else(|| bad_value(key, value))?.to_string());
+        }
+        other => anyhow::bail!("unknown sweep spec key '{other}': expected one of {SPEC_KEYS}"),
+    }
+    Ok(())
+}
+
+/// Display form of a grid value for the `assign` tag.
+fn tag_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.dump(),
+    }
+}
+
+impl SweepSpec {
+    /// Wrap an explicit job list (benches, the `sweep-lr` preset).
+    pub fn from_jobs(name: &str, jobs: Vec<JobSpec>) -> Self {
+        let source = Json::obj(vec![
+            ("name", Json::str(name)),
+            ("jobs", Json::num(jobs.len() as f64)),
+            ("origin", Json::str("api")),
+        ]);
+        Self {
+            name: name.to_string(),
+            workers: 2,
+            artifacts_dir: "artifacts".to_string(),
+            jobs,
+            source,
+        }
+    }
+
+    /// Parse a sweep spec document. Grid axes expand in lexicographic axis
+    /// order, values in listed order; job ids are the product indices
+    /// (`j000`, `j001`, …), so the expansion is fully deterministic.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("sweep spec: {e}"))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("sweep spec must be a JSON object"))?;
+
+        let name = doc.get("name").as_str().unwrap_or("sweep").to_string();
+        let workers = doc.get("workers").as_usize().unwrap_or(2).max(1);
+        let artifacts_dir =
+            doc.get("artifacts").as_str().unwrap_or("artifacts").to_string();
+
+        // Base template from the scalar keys.
+        let mut base = JobSpec::new("j000", "nplm-tiny", OptKind::Soap, 50);
+        for (key, value) in obj {
+            match key.as_str() {
+                "name" | "workers" | "artifacts" | "grid" => {}
+                other => apply_key(&mut base, other, value)?,
+            }
+        }
+
+        // Grid axes: BTreeMap iteration gives lexicographic axis order.
+        let mut axes: Vec<(String, Vec<Json>)> = Vec::new();
+        if let Some(grid) = doc.get("grid").as_obj() {
+            for (axis, values) in grid {
+                let values = values.as_arr().ok_or_else(|| {
+                    anyhow::anyhow!("sweep grid axis '{axis}' must be an array of values")
+                })?;
+                anyhow::ensure!(
+                    !values.is_empty(),
+                    "sweep grid axis '{axis}' has no values"
+                );
+                anyhow::ensure!(
+                    !matches!(axis.as_str(), "name" | "workers" | "artifacts" | "grid"),
+                    "'{axis}' cannot be a grid axis (expected one of {AXIS_KEYS})"
+                );
+                axes.push((axis.clone(), values.to_vec()));
+            }
+        }
+
+        let total: usize = axes.iter().map(|(_, v)| v.len()).product();
+        anyhow::ensure!(total >= 1, "sweep grid expands to zero jobs");
+        let mut jobs = Vec::with_capacity(total);
+        for idx in 0..total {
+            let mut job = base.clone();
+            job.id = format!("j{idx:03}");
+            job.assign.clear();
+            // Mixed-radix decomposition: the LAST axis varies fastest.
+            let mut rem = idx;
+            let mut coords = vec![0usize; axes.len()];
+            for (a, (_, values)) in axes.iter().enumerate().rev() {
+                coords[a] = rem % values.len();
+                rem /= values.len();
+            }
+            for ((axis, values), &c) in axes.iter().zip(&coords) {
+                let v = &values[c];
+                apply_key(&mut job, axis, v)?;
+                job.assign.push((axis.clone(), tag_value(v)));
+            }
+            jobs.push(job);
+        }
+
+        Ok(Self { name, workers, artifacts_dir, jobs, source: doc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_deterministically() {
+        let spec = SweepSpec::parse(
+            r#"{
+                "name": "demo",
+                "model": "nplm-tiny",
+                "steps": 10,
+                "constant-lr": true,
+                "grid": {
+                    "lr": [0.01, 0.00316],
+                    "optimizer": ["soap", "adamw"]
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.jobs.len(), 4);
+        // Axes in lexicographic order (lr before optimizer); last axis
+        // varies fastest.
+        let ids: Vec<&str> = spec.jobs.iter().map(|j| j.id.as_str()).collect();
+        assert_eq!(ids, ["j000", "j001", "j002", "j003"]);
+        assert_eq!(spec.jobs[0].lr, Some(0.01));
+        assert_eq!(spec.jobs[0].opt, OptKind::Soap);
+        assert_eq!(spec.jobs[1].opt, OptKind::AdamW);
+        assert_eq!(spec.jobs[2].lr, Some(0.00316));
+        assert!(spec.jobs.iter().all(|j| j.constant_lr && j.steps == 10));
+        assert_eq!(
+            spec.jobs[3].assign,
+            vec![("lr".to_string(), "0.00316".to_string()),
+                 ("optimizer".to_string(), "adamw".to_string())]
+        );
+        // Each job maps onto a valid builder without touching the fs.
+        for j in &spec.jobs {
+            j.session(2, "artifacts").unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn base_keys_cover_hyper_knobs() {
+        let spec = SweepSpec::parse(
+            r#"{
+                "model": "nplm-tiny",
+                "steps": 5,
+                "precond-freq": "4@0,10@20",
+                "precondition-1d": true,
+                "one-sided": true
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.jobs.len(), 1);
+        let h = &spec.jobs[0].hyper;
+        assert_eq!(h.precond_freq, 4);
+        assert_eq!(
+            h.precond_freq_schedule.unwrap().pieces(),
+            &[(0, 4), (20, 10)]
+        );
+        assert!(h.precondition_1d && h.one_sided);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let e = SweepSpec::parse(r#"{"bogus": 1}"#).unwrap_err().to_string();
+        assert!(e.contains("bogus") && e.contains("model"), "{e}");
+        let e = SweepSpec::parse(r#"{"grid": {"lr": []}}"#).unwrap_err().to_string();
+        assert!(e.contains("no values"), "{e}");
+        let e = SweepSpec::parse(r#"{"steps": 0}"#).unwrap_err().to_string();
+        assert!(e.contains("steps"), "{e}");
+        assert!(SweepSpec::parse("not json").is_err());
+        let e = SweepSpec::parse(r#"{"grid": {"workers": [1]}}"#).unwrap_err().to_string();
+        assert!(e.contains("axis"), "{e}");
+    }
+
+    #[test]
+    fn from_jobs_wraps_explicit_lists() {
+        let jobs = vec![
+            JobSpec::new("lr-0", "nplm-tiny", OptKind::Soap, 5).with_lr(0.01),
+            JobSpec::new("lr-1", "nplm-tiny", OptKind::Soap, 5).with_lr(0.001),
+        ];
+        let spec = SweepSpec::from_jobs("lr-grid", jobs);
+        assert_eq!(spec.jobs.len(), 2);
+        assert_eq!(spec.source.get("origin").as_str(), Some("api"));
+    }
+}

@@ -411,6 +411,36 @@ pub fn heartbeat_silence_seconds() -> &'static Gauge {
     G.get_or_init(|| registry().gauge("soap_heartbeat_silence_seconds"))
 }
 
+// Sweep-orchestrator series (`soap sweep`). Like the fault counters these
+// are written unconditionally — the orchestrator is its own entry point and
+// its health must be observable even without `--telemetry`.
+
+/// Training jobs currently admitted and running in the sweep scheduler.
+pub fn sweep_jobs_running() -> &'static Gauge {
+    static G: OnceLock<&'static Gauge> = OnceLock::new();
+    G.get_or_init(|| registry().gauge("soap_sweep_jobs_running"))
+}
+
+/// Sweep jobs finished successfully (includes jobs skipped on resume
+/// because a prior run already completed them).
+pub fn sweep_jobs_done() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_sweep_jobs_done"))
+}
+
+/// Sweep jobs that ended as failed rows (guard aborts, injected faults,
+/// panics, or estimated footprint above the whole budget).
+pub fn sweep_jobs_failed() -> &'static Counter {
+    static C: OnceLock<&'static Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("soap_sweep_jobs_failed"))
+}
+
+/// Global memory budget the sweep admission controller enforces, bytes.
+pub fn sweep_mem_budget_bytes() -> &'static Gauge {
+    static G: OnceLock<&'static Gauge> = OnceLock::new();
+    G.get_or_init(|| registry().gauge("soap_sweep_mem_budget_bytes"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

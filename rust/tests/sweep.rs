@@ -1,0 +1,324 @@
+//! Sweep-orchestrator acceptance pins:
+//!
+//! 1. an 8-job grid runs concurrently under an explicit memory budget,
+//!    streaming `job_id`/`assign`-tagged JSONL and writing a complete
+//!    `SWEEP_results.json`;
+//! 2. a sweep killed mid-flight (≥1 job done, ≥1 in flight) and resumed
+//!    produces a `SWEEP_results.json` BITWISE-identical to an
+//!    uninterrupted sweep — per-job loss trajectories included — and the
+//!    deterministic projection of the metrics stream (step/loss/lr per
+//!    job) matches line for line;
+//! 3. admission control never exceeds the memory budget (property test,
+//!    hand-rolled xorshift);
+//! 4. per-job failures (unresolvable model, over-budget footprint) are
+//!    isolated as failed rows — the rest of the sweep completes.
+//!
+//! Everything runs `nplm-tiny` native jobs: artifact-free, seconds-fast.
+
+use std::path::PathBuf;
+
+use soap_lab::sweep::{
+    plan, run_sweep, Admission, Admit, Journal, SweepOptions, SweepSpec,
+};
+use soap_lab::util::json::Json;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("soap_sweep_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn opts(out_dir: &std::path::Path) -> SweepOptions {
+    SweepOptions { out_dir: out_dir.to_path_buf(), ..SweepOptions::default() }
+}
+
+/// The deterministic projection of one metrics line: wall-clock timing
+/// fields vary run to run, but (job, step, loss, lr) must not.
+fn projected_lines(path: &std::path::Path) -> Vec<String> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .map(|line| {
+            let v = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e}: {line}"));
+            format!(
+                "{} {} {} {} {}",
+                v.get("job_id").as_str().unwrap_or("?"),
+                v.get("kind").as_str().unwrap_or("step"),
+                v.get("step").dump(),
+                v.get("loss").dump(),
+                v.get("lr").dump(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn eight_job_grid_runs_under_budget_with_tagged_stream() {
+    let dir = tmpdir("grid");
+    let spec = SweepSpec::parse(
+        r#"{
+            "name": "grid8",
+            "model": "nplm-tiny",
+            "steps": 5,
+            "constant-lr": true,
+            "precond-freq": 4,
+            "grid": {
+                "lr": [0.02, 0.01, 0.005, 0.002],
+                "optimizer": ["soap", "adamw"]
+            }
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(spec.jobs.len(), 8);
+
+    let outcome = run_sweep(
+        &spec,
+        &SweepOptions {
+            max_mem_bytes: 64 << 20, // explicit budget, roomy for tiny jobs
+            max_concurrency: 2,
+            ..opts(&dir)
+        },
+    )
+    .unwrap();
+
+    assert!(!outcome.halted);
+    assert_eq!(outcome.rows.len(), 8);
+    assert!(outcome.rows.iter().all(|r| r.get("status").as_str() == Some("done")));
+
+    // Results file: all 8 rows in job-id order, losses present.
+    let results = Json::parse(
+        &std::fs::read_to_string(outcome.results_path.as_ref().unwrap()).unwrap(),
+    )
+    .unwrap();
+    let rows = results.get("jobs").as_arr().unwrap();
+    assert_eq!(rows.len(), 8);
+    let ids: Vec<&str> = rows.iter().filter_map(|r| r.get("job_id").as_str()).collect();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(ids, sorted, "rows must be in job-id order");
+    for row in rows {
+        assert_eq!(row.get("losses").as_arr().unwrap().len(), 5);
+        assert!(row.get("final_loss").as_f64().unwrap().is_finite());
+    }
+
+    // Manifest records the plan with nonzero estimates.
+    let manifest =
+        Json::parse(&std::fs::read_to_string(&outcome.manifest_path).unwrap()).unwrap();
+    assert_eq!(manifest.get("jobs").as_arr().unwrap().len(), 8);
+    assert!(manifest
+        .get("jobs")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .all(|j| j.get("est_bytes").as_f64().unwrap() > 0.0));
+
+    // Every metrics line is tagged; every job streamed every step.
+    let text = std::fs::read_to_string(&outcome.metrics_path).unwrap();
+    let mut per_job = std::collections::BTreeMap::<String, usize>::new();
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e}: {line}"));
+        let id = v.get("job_id").as_str().expect("line missing job_id tag");
+        assert!(v.get("assign").get("lr").as_str().is_some(), "line missing assign tag");
+        assert!(v.get("assign").get("optimizer").as_str().is_some());
+        assert!(v.get("loss").as_f64().is_some());
+        *per_job.entry(id.to_string()).or_default() += 1;
+    }
+    assert_eq!(per_job.len(), 8);
+    assert!(per_job.values().all(|&n| n == 5), "per-job line counts: {per_job:?}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interrupted_sweep_resumes_bitwise_identical() {
+    let spec_text = r#"{
+        "name": "resume-pin",
+        "model": "nplm-tiny",
+        "steps": 8,
+        "constant-lr": true,
+        "precond-freq": 4,
+        "grid": {"lr": [0.02, 0.015, 0.01]}
+    }"#;
+    let spec = SweepSpec::parse(spec_text).unwrap();
+    assert_eq!(spec.jobs.len(), 3);
+
+    // Reference: uninterrupted, concurrency 1 (deterministic scheduling).
+    let ref_dir = tmpdir("resume_ref");
+    let reference = run_sweep(
+        &spec,
+        &SweepOptions { max_concurrency: 1, ..opts(&ref_dir) },
+    )
+    .unwrap();
+    assert!(!reference.halted);
+
+    // Interrupted: halt after 12 global steps — job 1 of 3 is done (8
+    // steps), job 2 is mid-flight at step 4, job 3 hasn't started.
+    let dir = tmpdir("resume_cut");
+    let halted = run_sweep(
+        &spec,
+        &SweepOptions {
+            max_concurrency: 1,
+            halt_after_steps: Some(12),
+            ..opts(&dir)
+        },
+    )
+    .unwrap();
+    assert!(halted.halted);
+    assert!(halted.results_path.is_none(), "no results file for a halted sweep");
+
+    let journal = Journal::load(&halted.journal_path).unwrap();
+    assert_eq!(journal.rows.len(), 1, "exactly one job finished before the halt");
+    assert_eq!(journal.ckpts.len(), 1, "exactly one job was in flight");
+    let (ckpt_job, ckpt) = journal.ckpts.iter().next().unwrap();
+    assert_eq!(ckpt.step, 4);
+    assert_eq!(ckpt.losses.len(), 4);
+    assert!(dir.join(format!("job_{ckpt_job}.ckpt")).exists());
+
+    // Resume to completion.
+    let resumed = run_sweep(
+        &spec,
+        &SweepOptions { max_concurrency: 1, resume: true, ..opts(&dir) },
+    )
+    .unwrap();
+    assert!(!resumed.halted);
+    assert_eq!(resumed.rows.len(), 3);
+
+    // THE pin: results files are byte-identical — trajectories included.
+    let ref_bytes = std::fs::read(reference.results_path.as_ref().unwrap()).unwrap();
+    let res_bytes = std::fs::read(resumed.results_path.as_ref().unwrap()).unwrap();
+    assert!(
+        ref_bytes == res_bytes,
+        "resumed SWEEP_results.json differs from uninterrupted run"
+    );
+
+    // And the deterministic projection of the metrics stream matches line
+    // for line (timing fields are wall-clock and excluded).
+    assert_eq!(
+        projected_lines(&reference.metrics_path),
+        projected_lines(&resumed.metrics_path),
+        "resumed metrics stream diverges from uninterrupted run"
+    );
+
+    // Resume validates the job set: a different spec must be rejected.
+    let other = SweepSpec::parse(
+        r#"{"name": "other", "model": "nplm-tiny", "steps": 8,
+            "grid": {"lr": [0.02, 0.015]}}"#,
+    )
+    .unwrap();
+    let err = run_sweep(
+        &other,
+        &SweepOptions { max_concurrency: 1, resume: true, ..opts(&dir) },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("job set"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Minimal xorshift64* — deterministic, no external crates.
+struct Rng(u64);
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+#[test]
+fn admission_never_exceeds_budget_property() {
+    let mut rng = Rng(0x5EED_CAFE);
+    for case in 0..200 {
+        let budget = 1 + rng.below(1 << 20);
+        let cap = 1 + rng.below(8) as usize;
+        let mut adm = Admission::new(budget, cap);
+        let mut live: Vec<String> = Vec::new();
+        for op in 0..200 {
+            if rng.below(3) == 0 && !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let id = live.swap_remove(idx);
+                adm.release(&id);
+            } else {
+                let id = format!("c{case}o{op}");
+                // Bias sizes around the budget so TooBig/Wait/Start all hit.
+                let bytes = rng.below(budget + budget / 2 + 1);
+                if adm.admit(&id, bytes) == Admit::Start {
+                    live.push(id);
+                }
+            }
+            assert!(
+                adm.check_invariant(),
+                "invariant violated: budget={budget} cap={cap} used={} running={}",
+                adm.used_bytes(),
+                adm.running()
+            );
+            assert!(adm.used_bytes() <= budget);
+            assert!(adm.running() <= cap);
+        }
+    }
+}
+
+#[test]
+fn failed_jobs_are_isolated_rows() {
+    let dir = tmpdir("failures");
+    // j000/j001: one unresolvable artifact model (fails at session build),
+    // one healthy native job. The sweep must finish with both rows.
+    let spec = SweepSpec::parse(
+        r#"{
+            "name": "failures",
+            "steps": 4,
+            "constant-lr": true,
+            "grid": {"model": ["no-such-artifact-model", "nplm-tiny"]}
+        }"#,
+    )
+    .unwrap();
+    let outcome = run_sweep(&spec, &SweepOptions { max_concurrency: 1, ..opts(&dir) }).unwrap();
+    assert!(!outcome.halted);
+    assert_eq!(outcome.rows.len(), 2);
+    let failed = outcome.row("j000").unwrap();
+    assert_eq!(failed.get("status").as_str(), Some("failed"));
+    assert!(failed.get("error").as_str().is_some());
+    let ok = outcome.row("j001").unwrap();
+    assert_eq!(ok.get("status").as_str(), Some("done"));
+    // A completed sweep writes results even when some rows failed.
+    assert!(outcome.results_path.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn oversized_job_rejected_with_budget_error() {
+    let dir = tmpdir("toobig");
+    let spec = SweepSpec::parse(
+        r#"{"name": "toobig", "model": "nplm-tiny", "optimizer": "soap",
+            "steps": 3, "constant-lr": true, "grid": {"seed": [0, 1]}}"#,
+    )
+    .unwrap();
+    // Budget one byte below the smaller job's estimated footprint: every
+    // job is TooBig, rejected up front, and the sweep still completes.
+    let plans = plan(&spec.jobs, &spec.artifacts_dir);
+    let min_est = plans.iter().map(|p| p.est_bytes).min().unwrap();
+    assert!(min_est > 0);
+    let outcome = run_sweep(
+        &spec,
+        &SweepOptions { max_mem_bytes: min_est - 1, max_concurrency: 2, ..opts(&dir) },
+    )
+    .unwrap();
+    assert!(!outcome.halted);
+    assert_eq!(outcome.rows.len(), 2);
+    for row in &outcome.rows {
+        assert_eq!(row.get("status").as_str(), Some("failed"));
+        let err = row.get("error").as_str().unwrap();
+        assert!(err.contains("exceeds memory budget"), "{err}");
+    }
+    assert!(outcome.results_path.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
