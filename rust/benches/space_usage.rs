@@ -14,14 +14,33 @@
 //! warm-start eigenvector caches — held to make the periodic root recompute a
 //! warm `eigh` — are real optimizer-owned state and counted since the
 //! composed-core refactor; the paper's table omits them.)
+//!
+//! Every case is verified at both `--state-dtype` settings: under bf16 the
+//! dtype-routed buffers (Kronecker-factor EMAs, Adam/Adafactor second
+//! moments) take 2 bytes per element while momentum, grafting state, and
+//! eigenvector/root/projection caches stay at 4 — the formulas here carry
+//! that split explicitly, so `state_bytes` is checked to halve exactly the
+//! buffers the docs claim it halves.
 
 use soap_lab::coordinator::ShardedOptimizer;
-use soap_lab::optim::{Hyper, OptKind};
+use soap_lab::optim::{Hyper, OptKind, StateDtype};
 use soap_lab::runtime::Manifest;
 use soap_lab::util::bench::Report;
 
-fn formula_bytes(shapes: &[(usize, usize)], f: impl Fn(usize, usize) -> usize) -> usize {
-    shapes.iter().map(|&(m, n)| f(m, n) * 4).sum()
+/// Closed-form §7.2 bytes. `f(m, n)` returns `(dtype_routed, always_f32)`
+/// element counts; routed elements take `b` bytes each (4 or 2).
+fn formula_bytes(
+    shapes: &[(usize, usize)],
+    b: usize,
+    f: impl Fn(usize, usize) -> (usize, usize),
+) -> usize {
+    shapes
+        .iter()
+        .map(|&(m, n)| {
+            let (d, s) = f(m, n);
+            d * b + s * 4
+        })
+        .sum()
 }
 
 fn main() {
@@ -50,7 +69,10 @@ fn main() {
         ("galore", OptKind::Galore, h.clone()),
     ];
 
-    println!("\n{:<18} {:>14} {:>14} {:>9}", "optimizer", "measured", "paper formula", "ratio");
+    println!(
+        "\n{:<18} {:>6} {:>14} {:>14} {:>9}",
+        "optimizer", "dtype", "measured", "paper formula", "ratio"
+    );
     let mut report = Report::new(
         "§7.2 space usage: measured vs paper formulas",
         "case index",
@@ -59,57 +81,85 @@ fn main() {
     let mut measured_series = Vec::new();
     let mut formula_series = Vec::new();
 
-    for (i, (name, kind, hyper)) in cases.iter().enumerate() {
-        // Drive one step so lazily-allocated state (Q_L/Q_R, GaLore P) exists.
-        let mut opt = ShardedOptimizer::new(*kind, hyper, &shapes, 2);
-        let mut rng = soap_lab::util::rng::Rng::new(7);
-        let mut params: Vec<_> = shapes
-            .iter()
-            .map(|&(m, n)| soap_lab::linalg::Matrix::randn(&mut rng, m, n, 0.1))
-            .collect();
-        let grads: Vec<_> = shapes
-            .iter()
-            .map(|&(m, n)| soap_lab::linalg::Matrix::randn(&mut rng, m, n, 0.1))
-            .collect();
-        opt.step(&mut params, &grads, 1, 0.0);
-        let measured = opt.state_bytes();
+    let mut case_idx = 0usize;
+    for dtype in [StateDtype::F32, StateDtype::Bf16] {
+        let b = dtype.bytes();
+        for (name, kind, hyper) in &cases {
+            let hyper = hyper.clone().with_state_dtype(dtype);
+            // Drive one step so lazily-allocated state (Q_L/Q_R, GaLore P)
+            // exists.
+            let mut opt = ShardedOptimizer::new(*kind, &hyper, &shapes, 2);
+            let mut rng = soap_lab::util::rng::Rng::new(7);
+            let mut params: Vec<_> = shapes
+                .iter()
+                .map(|&(m, n)| soap_lab::linalg::Matrix::randn(&mut rng, m, n, 0.1))
+                .collect();
+            let grads: Vec<_> = shapes
+                .iter()
+                .map(|&(m, n)| soap_lab::linalg::Matrix::randn(&mut rng, m, n, 0.1))
+                .collect();
+            opt.step(&mut params, &grads, 1, 0.0);
+            let measured = opt.state_bytes();
 
-        // Paper formula, minus the gradient mn (see module docs), per layer.
-        // 1-D layers always run AdamW under SOAP/GaLore.
-        let formula = match *name {
-            "adamw" => formula_bytes(&shapes, |m, n| 2 * m * n),
-            "adafactor" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n + m + n } else { m * n + m + n }
-            }),
-            // L, R, L^{-1/e}, R^{-1/e} + warm-start eigenvector caches
-            // (allocated at the first root recompute and honestly counted
-            // since the composed-core refactor) + M, V_graft.
-            "shampoo" => formula_bytes(&shapes, |m, n| 3 * m * m + 3 * n * n + 2 * m * n),
-            "soap" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n } else { 2 * m * m + 2 * n * n + 2 * m * n }
-            }),
-            "soap-onesided" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n } else { 2 * m.min(n) * m.min(n) + 2 * m * n }
-            }),
-            "soap-factorized" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n } else { 2 * m * m + 2 * n * n + m * n + m + n }
-            }),
-            "soap-both" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n } else { 2 * m.min(n) * m.min(n) + m * n + m + n }
-            }),
-            "galore" => formula_bytes(&shapes, |m, n| {
-                if m == 1 || n == 1 { 2 * m * n } else { m.min(n) * m.min(n) + 2 * m * n }
-            }),
-            _ => 0,
-        };
-        let ratio = measured as f64 / formula as f64;
-        println!("{name:<18} {measured:>14} {formula:>14} {ratio:>9.4}");
-        assert!(
-            (ratio - 1.0).abs() < 1e-6,
-            "{name}: measured {measured} ≠ formula {formula}"
-        );
-        measured_series.push((i as f64, measured as f64));
-        formula_series.push((i as f64, formula as f64));
+            // Paper formula, minus the gradient mn (see module docs), per
+            // layer, split as (dtype-routed elements, always-f32 elements).
+            // 1-D layers always run AdamW under SOAP/GaLore.
+            let formula = match *name {
+                // M stays f32, V routes.
+                "adamw" => formula_bytes(&shapes, b, |m, n| (m * n, m * n)),
+                // a, c (and the 1-D full V) route; M stays f32.
+                "adafactor" => formula_bytes(&shapes, b, |m, n| {
+                    if m == 1 || n == 1 { (m * n + m + n, m * n) } else { (m + n, m * n) }
+                }),
+                // L, R route; L^{-1/e}, R^{-1/e} + warm-start eigenvector
+                // caches (allocated at the first root recompute and honestly
+                // counted since the composed-core refactor) + M, V_graft
+                // stay f32.
+                "shampoo" => formula_bytes(&shapes, b, |m, n| {
+                    (m * m + n * n, 2 * m * m + 2 * n * n + 2 * m * n)
+                }),
+                // L, R, V route; Q_L, Q_R, M stay f32.
+                "soap" => formula_bytes(&shapes, b, |m, n| {
+                    if m == 1 || n == 1 {
+                        (m * n, m * n)
+                    } else {
+                        (m * m + n * n + m * n, m * m + n * n + m * n)
+                    }
+                }),
+                "soap-onesided" => formula_bytes(&shapes, b, |m, n| {
+                    let k = m.min(n);
+                    if m == 1 || n == 1 { (m * n, m * n) } else { (k * k + m * n, k * k + m * n) }
+                }),
+                // L, R, a, c route; Q_L, Q_R, M stay f32.
+                "soap-factorized" => formula_bytes(&shapes, b, |m, n| {
+                    if m == 1 || n == 1 {
+                        (m * n, m * n)
+                    } else {
+                        (m * m + n * n + m + n, m * m + n * n + m * n)
+                    }
+                }),
+                "soap-both" => formula_bytes(&shapes, b, |m, n| {
+                    let k = m.min(n);
+                    if m == 1 || n == 1 { (m * n, m * n) } else { (k * k + m + n, k * k + m * n) }
+                }),
+                // V routes; the SVD projection P and M stay f32.
+                "galore" => formula_bytes(&shapes, b, |m, n| {
+                    let k = m.min(n);
+                    if m == 1 || n == 1 { (m * n, m * n) } else { (m * n, k * k + m * n) }
+                }),
+                _ => 0,
+            };
+            let ratio = measured as f64 / formula as f64;
+            println!("{name:<18} {:>6} {measured:>14} {formula:>14} {ratio:>9.4}", dtype.name());
+            assert!(
+                (ratio - 1.0).abs() < 1e-6,
+                "{name} ({}): measured {measured} ≠ formula {formula}",
+                dtype.name()
+            );
+            measured_series.push((case_idx as f64, measured as f64));
+            formula_series.push((case_idx as f64, formula as f64));
+            case_idx += 1;
+        }
     }
     report.add_series("measured", measured_series);
     report.add_series("paper formula", formula_series);

@@ -10,21 +10,25 @@
 //! step math — and emits the workspace-vs-legacy steps/sec speedups.
 //!
 //! Results go to `bench_results/step_latency.json`. Knobs:
-//! `SOAP_BENCH_STEPS` (timed steps per cell, default 150) and
+//! `SOAP_BENCH_STEPS` (timed steps per cell, default 150),
 //! `SOAP_BENCH_TELEMETRY=1` (measure with span tracing + metrics enabled,
-//! to quantify the telemetry overhead against the default-off run).
+//! to quantify the telemetry overhead against the default-off run), and
+//! `--state-dtype <f32|bf16>` (second-moment storage precision; each
+//! workspace row reports the resulting `state_bytes`). The document also
+//! records the GEMM kernel that actually ran (`SOAP_GEMM_KERNEL` dispatch).
 //!
 //! ```sh
 //! cargo bench --bench step_latency -- --legacy-alloc
+//! cargo bench --bench step_latency -- --state-dtype bf16
 //! ```
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-use soap_lab::linalg::Matrix;
+use soap_lab::linalg::{active_gemm_kernel_name, Matrix};
 use soap_lab::optim::compose::presets;
-use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer};
+use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer, StateDtype};
 use soap_lab::util::bench::fmt_duration;
 use soap_lab::util::json::Json;
 use soap_lab::util::rng::Rng;
@@ -348,6 +352,9 @@ struct Row {
     allocs_per_step_p50: f64,
     allocs_per_step_mean: f64,
     scratch_bytes: usize,
+    /// Persistent optimizer state bytes (§7.2 accounting) — halves for the
+    /// dtype-routed buffers under `--state-dtype bf16`. 0 for legacy rows.
+    state_bytes: usize,
 }
 
 /// Drive `step` over a fixed gradient stream and measure per-step latency
@@ -405,7 +412,22 @@ fn row_json(r: &Row) -> Json {
         ("allocs_per_step_p50", Json::num(r.allocs_per_step_p50)),
         ("allocs_per_step_mean", Json::num(r.allocs_per_step_mean)),
         ("scratch_bytes", Json::num(r.scratch_bytes as f64)),
+        ("state_bytes", Json::num(r.state_bytes as f64)),
     ])
+}
+
+/// `--flag value` or `--flag=value` from the bench argv.
+fn arg_value(name: &str) -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == name {
+            return args.next();
+        }
+        if let Some(v) = a.strip_prefix(name).and_then(|r| r.strip_prefix('=')) {
+            return Some(v.to_string());
+        }
+    }
+    None
 }
 
 fn main() {
@@ -417,7 +439,11 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(150);
     let warmup = (steps / 5).clamp(10, 50);
-    let h = Hyper::default(); // f = 10, phase 0
+    let state_dtype = match arg_value("--state-dtype") {
+        Some(v) => StateDtype::parse(&v).expect("--state-dtype"),
+        None => StateDtype::F32,
+    };
+    let h = Hyper::default().with_state_dtype(state_dtype); // f = 10, phase 0
     let shapes: [(usize, usize); 3] = [(64, 256), (128, 128), (32, 1024)];
 
     type Build = fn(usize, usize, Hyper) -> DynComposed;
@@ -465,6 +491,7 @@ fn main() {
                 allocs_per_step_p50: ap50,
                 allocs_per_step_mean: amean,
                 scratch_bytes: opt.scratch_bytes(),
+                state_bytes: opt.state_bytes(),
             });
         }
         if legacy {
@@ -482,6 +509,7 @@ fn main() {
                 allocs_per_step_p50: ap50,
                 allocs_per_step_mean: amean,
                 scratch_bytes: 0,
+                state_bytes: 0,
             });
             let mut soap_f =
                 prepr::Soap::new(m, n, Hyper { factorized: true, ..h.clone() });
@@ -498,6 +526,7 @@ fn main() {
                 allocs_per_step_p50: ap50,
                 allocs_per_step_mean: amean,
                 scratch_bytes: 0,
+                state_bytes: 0,
             });
             let mut adamw = prepr::AdamW::new(m, n, h.clone());
             let (p50, p99, sps, ap50, amean) =
@@ -513,6 +542,7 @@ fn main() {
                 allocs_per_step_p50: ap50,
                 allocs_per_step_mean: amean,
                 scratch_bytes: 0,
+                state_bytes: 0,
             });
             let mut adafactor = prepr::Adafactor::new(m, n, h.clone());
             let (p50, p99, sps, ap50, amean) =
@@ -528,6 +558,7 @@ fn main() {
                 allocs_per_step_p50: ap50,
                 allocs_per_step_mean: amean,
                 scratch_bytes: 0,
+                state_bytes: 0,
             });
         }
     }
@@ -567,6 +598,8 @@ fn main() {
         ("warmup_steps", Json::num(warmup as f64)),
         ("legacy_measured", Json::Bool(legacy)),
         ("telemetry", Json::Bool(telemetry)),
+        ("state_dtype", Json::str(state_dtype.name())),
+        ("gemm_kernel", Json::str(active_gemm_kernel_name())),
         (
             "cpus",
             Json::num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),

@@ -16,7 +16,9 @@ use std::time::Duration;
 
 use crate::coordinator::TrainerConfig;
 use crate::dist::Transport;
-use crate::optim::{FreqSchedule, GuardPolicy, Hyper, OptKind, RefreshMethod, RefreshMode, Schedule};
+use crate::optim::{
+    FreqSchedule, GuardPolicy, Hyper, OptKind, RefreshMethod, RefreshMode, Schedule, StateDtype,
+};
 use crate::session::{Backend, DistEndpoint, DistOptions, ModelSpec, SessionBuilder, TrainSession};
 use crate::util::cli::Args;
 
@@ -27,13 +29,13 @@ pub const DEFAULT_LRS: [f32; 6] = [0.1, 0.0316, 0.01, 0.00316, 0.001, 0.000316];
 /// `--config` file format (embedded in unknown-key errors).
 pub const CONFIG_KEYS: &str = "model, optimizer, backend, lr, steps, warmup, seed, \
 precond-freq, grad-accum, workers, refresh-workers, refresh-method, refresh-mode, \
-max-precond-dim, merge-dims, adam-warmup, precond-warmup, ranks, rank, \
+max-precond-dim, merge-dims, adam-warmup, precond-warmup, state-dtype, ranks, rank, \
 coordinator-addr, dist-timeout, dist-transport, artifacts, log-every, \
 metrics-every, trace-out, metrics-out, jsonl-out, save, resume, guard, \
 fault-plan, auto-resume, fault-attempt, one-sided, factorized, precondition-1d, \
 refresh-eigh, async-refresh, pjrt-optimizer, telemetry";
 
-const VALUE_KEYS: [&str; 34] = [
+const VALUE_KEYS: [&str; 35] = [
     "model",
     "optimizer",
     "backend",
@@ -51,6 +53,7 @@ const VALUE_KEYS: [&str; 34] = [
     "merge-dims",
     "adam-warmup",
     "precond-warmup",
+    "state-dtype",
     "ranks",
     "rank",
     "coordinator-addr",
@@ -119,6 +122,10 @@ pub struct RunConfig {
     pub adam_warmup: u64,
     /// Refresh-every-step early phase (`Hyper::precondition_warmup`; 0 = off).
     pub precond_warmup: u64,
+    /// Storage dtype for the second-moment state (Kronecker-factor EMAs,
+    /// Adam/Adafactor second moments): f32 (default) or bf16
+    /// (`Hyper::state_dtype`).
+    pub state_dtype: StateDtype,
     /// World size for `--backend distributed` (≥ 2).
     pub ranks: usize,
     /// Manual-launch worker mode: this process's rank (requires
@@ -187,6 +194,7 @@ impl Default for RunConfig {
             merge_dims: 0,
             adam_warmup: 0,
             precond_warmup: 0,
+            state_dtype: StateDtype::F32,
             ranks: 2,
             dist_rank: None,
             coordinator_addr: None,
@@ -280,6 +288,7 @@ impl RunConfig {
             "merge-dims" => self.merge_dims = num(key, value)?,
             "adam-warmup" => self.adam_warmup = num(key, value)?,
             "precond-warmup" => self.precond_warmup = num(key, value)?,
+            "state-dtype" => self.state_dtype = StateDtype::parse(value)?,
             "ranks" => self.ranks = num(key, value)?,
             "rank" => self.dist_rank = Some(num(key, value)?),
             "coordinator-addr" => {
@@ -369,6 +378,7 @@ impl RunConfig {
         s.push_str(&format!("merge-dims={}\n", self.merge_dims));
         s.push_str(&format!("adam-warmup={}\n", self.adam_warmup));
         s.push_str(&format!("precond-warmup={}\n", self.precond_warmup));
+        s.push_str(&format!("state-dtype={}\n", self.state_dtype.name()));
         s.push_str(&format!("ranks={}\n", self.ranks));
         s.push_str(&format!("dist-timeout={}\n", self.dist_timeout_ms));
         s.push_str(&format!("dist-transport={}\n", self.dist_transport.name()));
@@ -591,6 +601,7 @@ impl RunConfig {
             refresh_workers: self.refresh_workers,
             adam_warmup_steps: self.adam_warmup,
             precondition_warmup: self.precond_warmup,
+            state_dtype: self.state_dtype,
             guard: self.guard,
             ..Hyper::default()
         };
@@ -815,6 +826,7 @@ mod tests {
         rc.merge_dims = 64;
         rc.adam_warmup = 11;
         rc.precond_warmup = 3;
+        rc.state_dtype = StateDtype::Bf16;
         rc.ranks = 3;
         rc.dist_timeout_ms = 12_000;
         rc.log_every = 5;
@@ -846,6 +858,7 @@ mod tests {
         assert_eq!(back.auto_resume, rc.auto_resume);
         assert_eq!(back.precond_freq, 25);
         assert_eq!(back.precond_freq_schedule, rc.precond_freq_schedule);
+        assert_eq!(back.state_dtype, rc.state_dtype);
         assert!(back.precondition_1d);
         // The acceptance bar: the resolved Hyper is IDENTICAL.
         let (ha, hb) = (rc.hyper(), back.hyper());

@@ -3,15 +3,25 @@
 //! runs can be forked (e.g. the shorter-LR-schedule runs of Fig 2 resume
 //! from a common prefix).
 //!
-//! Format v3 (little-endian):
+//! Format v4 (little-endian):
 //!   magic "SOAPCKPT" | version u32 | step u64
 //!   | data_batches u64 | has_seed u8 | seed u64
-//!   | stream_batch u32 | stream_seq u32
+//!   | stream_batch u32 | stream_seq u32 | state_dtype u8
 //!   | n_shapes u32 | per param: rank u32, dims (rank × u32)
 //!   | n_params u32 | per param: rows u32, cols u32, f32 data
 //!   | n_state u32  | per layer: layer_idx u32, n_tensors u32,
 //!                    per tensor: rows u32, cols u32, f32 data
 //!   | end of file (strict — trailing bytes are rejected)
+//!
+//! v4 adds the **state-dtype tag** (0 = f32, 1 = bf16): the storage
+//! precision of the second-moment optimizer state (`Hyper::state_dtype`)
+//! when the checkpoint was taken. State tensors on the wire stay f32 either
+//! way — bf16 state decodes to values on the bf16 grid, which re-encode
+//! bit-identically on import — the tag only lets resume paths reject a
+//! run whose `--state-dtype` disagrees with the file instead of silently
+//! changing the rounding of every subsequent EMA update. v3 and earlier
+//! files load with the tag defaulting to f32 (the only dtype they could
+//! have been written with).
 //!
 //! v3 adds the **tensor-shape section**: the true N-dimensional dims of
 //! every parameter (a rank-3 conv kernel is carried as its 2-D fold in the
@@ -37,10 +47,11 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::linalg::Matrix;
+use crate::optim::hyper::StateDtype;
 
 const MAGIC: &[u8; 8] = b"SOAPCKPT";
 /// Newest checkpoint format this build reads and the one it writes.
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 
 /// Upper bounds used for strict field validation: a corrupt or foreign file
 /// should fail on a bound check, not attempt a multi-gigabyte allocation.
@@ -75,6 +86,11 @@ pub struct Checkpoint {
     /// tensor shapes disagree instead of silently re-preconditioning a
     /// rank-3 kernel as a matrix.
     pub param_dims: Vec<Vec<usize>>,
+    /// Storage dtype of the second-moment optimizer state when the
+    /// checkpoint was taken (`Hyper::state_dtype`). Legacy v1–v3 files
+    /// default to [`StateDtype::F32`], the only dtype those writers had.
+    /// Resume paths reject a mismatch with a named-field error.
+    pub state_dtype: StateDtype,
 }
 
 impl Checkpoint {
@@ -95,6 +111,7 @@ impl Checkpoint {
             stream_batch: 0,
             stream_seq: 0,
             param_dims,
+            state_dtype: StateDtype::F32,
         }
     }
 }
@@ -161,6 +178,11 @@ impl Checkpoint {
         out.extend_from_slice(&self.seed.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&self.stream_batch.to_le_bytes());
         out.extend_from_slice(&self.stream_seq.to_le_bytes());
+        // v4 state-dtype tag.
+        out.push(match self.state_dtype {
+            StateDtype::F32 => 0u8,
+            StateDtype::Bf16 => 1u8,
+        });
         // v3 tensor-shape section: one dims record per param, falling back
         // to the carrier fold for callers that never set `param_dims`.
         out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
@@ -236,6 +258,17 @@ impl Checkpoint {
         } else {
             // Legacy v1: one batch per step, seed + geometry unrecorded.
             (step, None, 0, 0)
+        };
+        let state_dtype = if version >= 4 {
+            match read_u8(&mut r, "state dtype")? {
+                0 => StateDtype::F32,
+                1 => StateDtype::Bf16,
+                other => anyhow::bail!(
+                    "checkpoint state dtype tag {other} unknown (expected 0 = f32 or 1 = bf16)"
+                ),
+            }
+        } else {
+            StateDtype::F32 // the only dtype v1–v3 writers had
         };
         let param_dims: Vec<Vec<usize>> = if version >= 3 {
             let n_shapes = read_u32(&mut r, "shape count")? as usize;
@@ -319,6 +352,7 @@ impl Checkpoint {
             stream_batch,
             stream_seq,
             param_dims,
+            state_dtype,
         })
     }
 }
@@ -346,6 +380,7 @@ mod tests {
             stream_batch: 16,
             stream_seq: 32,
             param_dims: vec![vec![3, 4], vec![1, 7]],
+            state_dtype: StateDtype::Bf16,
         }
     }
 
@@ -364,6 +399,7 @@ mod tests {
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(7).data);
         assert_eq!(back.param_dims, ck.param_dims, "v3 shape section must round-trip");
+        assert_eq!(back.state_dtype, StateDtype::Bf16, "v4 state-dtype tag must round-trip");
     }
 
     #[test]
@@ -430,10 +466,11 @@ mod tests {
         let path = tmpfile("hugedims");
         ck.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        // Param 0 header sits right after the fixed v3 prefix:
+        // Param 0 header sits right after the fixed v4 prefix:
         // magic(8)+version(4)+step(8)+cursor(8)+flag(1)+seed(8)+geom(8)
-        // + shape section (n(4) + two rank-2 records of 4+8 bytes) + n(4).
-        let hdr = 8 + 4 + 8 + 8 + 1 + 8 + 8 + (4 + 2 * 12) + 4;
+        // + dtype(1) + shape section (n(4) + two rank-2 records of 4+8
+        // bytes) + n(4).
+        let hdr = 8 + 4 + 8 + 8 + 1 + 8 + 8 + 1 + (4 + 2 * 12) + 4;
         bytes[hdr..hdr + 4].copy_from_slice(&46_000u32.to_le_bytes());
         bytes[hdr + 4..hdr + 8].copy_from_slice(&46_000u32.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
@@ -499,6 +536,7 @@ mod tests {
         assert_eq!((back.stream_batch, back.stream_seq), (0, 0), "v1 geometry unrecorded");
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert!(back.param_dims.is_empty(), "v1 shapes unrecorded");
+        assert_eq!(back.state_dtype, StateDtype::F32, "v1 state dtype defaults to f32");
     }
 
     #[test]
@@ -535,6 +573,66 @@ mod tests {
         assert_eq!((back.stream_batch, back.stream_seq), (16, 32));
         assert_eq!(back.params[0].data, ck.params[0].data);
         assert!(back.param_dims.is_empty(), "v2 shapes unrecorded");
+        assert_eq!(back.state_dtype, StateDtype::F32, "v2 state dtype defaults to f32");
+    }
+
+    #[test]
+    fn legacy_v3_files_still_load() {
+        // Hand-write a v3 file: everything v4 has except the state-dtype
+        // tag between the stream geometry and the shape section.
+        let ck = sample();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&3u32.to_le_bytes());
+        out.extend_from_slice(&ck.step.to_le_bytes());
+        out.extend_from_slice(&ck.data_batches.to_le_bytes());
+        out.push(1u8);
+        out.extend_from_slice(&ck.seed.unwrap().to_le_bytes());
+        out.extend_from_slice(&ck.stream_batch.to_le_bytes());
+        out.extend_from_slice(&ck.stream_seq.to_le_bytes());
+        out.extend_from_slice(&(ck.params.len() as u32).to_le_bytes());
+        for dims in &ck.param_dims {
+            out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for &d in dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(ck.params.len() as u32).to_le_bytes());
+        for p in &ck.params {
+            write_matrix(&mut out, p);
+        }
+        out.extend_from_slice(&(ck.opt_state.len() as u32).to_le_bytes());
+        for (idx, tensors) in &ck.opt_state {
+            out.extend_from_slice(&(*idx as u32).to_le_bytes());
+            out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+            for t in tensors {
+                write_matrix(&mut out, t);
+            }
+        }
+        let path = tmpfile("v3");
+        std::fs::write(&path, &out).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.seed, Some(7));
+        assert_eq!(back.param_dims, ck.param_dims, "v3 shape section loads");
+        assert_eq!(back.state_dtype, StateDtype::F32, "v3 state dtype defaults to f32");
+    }
+
+    #[test]
+    fn unknown_state_dtype_tag_rejected() {
+        let ck = sample();
+        let path = tmpfile("baddtype");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The dtype tag sits right after the fixed prefix:
+        // magic(8)+version(4)+step(8)+cursor(8)+flag(1)+seed(8)+geom(8).
+        bytes[45] = 7;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("state dtype tag 7"), "{msg}");
     }
 
     #[test]

@@ -29,9 +29,18 @@
 //! skip of zero `A` elements: the old `av == 0.0` `continue` silently
 //! dropped NaN/Inf propagation from `B` (a poisoned gradient could be
 //! masked to 0 by a zero momentum row); see `nan_propagates_through_zero_a`.
+//!
+//! The inner cores are **runtime-dispatched** between this portable scalar
+//! kernel and the register-tiled AVX2/NEON microkernels in
+//! [`simd`](super::simd) — `SOAP_GEMM_KERNEL=scalar|simd|auto` (default
+//! `auto`: SIMD whenever the ISA is present). The SIMD kernels preserve the
+//! per-element ascending-`p` mul-then-add sequence, so **scalar ≡ SIMD ≡
+//! parallel bitwise** and the kernel choice can never change a trajectory.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
+use super::simd;
 use crate::util::pool::ThreadPool;
 
 /// k-block: keeps a KB×n panel of B in cache.
@@ -44,18 +53,140 @@ const PAR_MIN_FLOPS: usize = 1 << 22;
 /// Minimum C rows per parallel chunk.
 const PAR_MIN_ROWS: usize = 16;
 
+/// Which inner kernel the GEMM family runs. Selected once per process from
+/// `SOAP_GEMM_KERNEL` (`scalar` | `simd` | `auto`, default `auto` = SIMD
+/// when the CPU has AVX2/NEON), overridable in-process via
+/// [`force_gemm_kernel`] for A/B tests. Both kernels are **bitwise
+/// identical** (see `simd.rs` module docs), so the choice affects latency
+/// only, never trajectories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// Portable axpy core — LLVM auto-vectorizes it, but without register
+    /// tiling.
+    Scalar,
+    /// Explicit register-tiled AVX2/NEON microkernel.
+    Simd,
+}
+
+impl GemmKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GemmKernel::Scalar => "scalar",
+            GemmKernel::Simd => "simd",
+        }
+    }
+}
+
+/// In-process kernel override: 0 = unset (env / auto), 1 = scalar,
+/// 2 = simd. Lets tests and benches flip kernels without re-spawning the
+/// process (the env choice is latched in a `OnceLock`).
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the GEMM kernel for this process, or `None` to return to the
+/// `SOAP_GEMM_KERNEL`/auto choice. Forcing `Simd` on a CPU without
+/// AVX2/NEON falls back to scalar (with a one-time warning path through
+/// [`parse_kernel`] semantics: the caller asked for something unavailable).
+pub fn force_gemm_kernel(kernel: Option<GemmKernel>) {
+    let v = match kernel {
+        None => 0,
+        Some(GemmKernel::Scalar) => 1,
+        Some(GemmKernel::Simd) if simd::available() => 2,
+        Some(GemmKernel::Simd) => 1,
+    };
+    KERNEL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Parse `SOAP_GEMM_KERNEL`. Pure so the unit tests can cover every arm;
+/// returns the resolved kernel plus an optional warning line (invalid
+/// token, or `simd` requested without an ISA).
+fn parse_kernel(raw: Option<&str>, simd_ok: bool) -> (GemmKernel, Option<String>) {
+    let auto = if simd_ok { GemmKernel::Simd } else { GemmKernel::Scalar };
+    match raw {
+        None => (auto, None),
+        Some(s) => match s.to_ascii_lowercase().as_str() {
+            "auto" => (auto, None),
+            "scalar" => (GemmKernel::Scalar, None),
+            "simd" if simd_ok => (GemmKernel::Simd, None),
+            "simd" => (
+                GemmKernel::Scalar,
+                Some(
+                    "SOAP_GEMM_KERNEL=simd requested but this CPU has no AVX2/NEON; \
+                     using the scalar kernel"
+                        .to_string(),
+                ),
+            ),
+            _ => (
+                auto,
+                Some(format!(
+                    "invalid SOAP_GEMM_KERNEL '{s}': expected scalar, simd, or auto; \
+                     using auto ({})",
+                    auto.name()
+                )),
+            ),
+        },
+    }
+}
+
+/// Parse `SOAP_GEMM_THREADS`. Pure for unit testing; invalid values (empty,
+/// non-numeric, `0`) produce a warning naming the bad value and the
+/// fallback instead of a silent default.
+fn parse_threads(raw: Option<&str>, default: usize) -> (usize, Option<String>) {
+    match raw {
+        None => (default, None),
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => (n, None),
+            _ => (
+                default,
+                Some(format!(
+                    "invalid SOAP_GEMM_THREADS '{s}': expected a positive integer; \
+                     using {default} (available parallelism)"
+                )),
+            ),
+        },
+    }
+}
+
+/// The env-selected kernel, parsed once (with its one-time stderr warning).
+fn env_kernel() -> GemmKernel {
+    static KERNEL: OnceLock<GemmKernel> = OnceLock::new();
+    *KERNEL.get_or_init(|| {
+        let raw = std::env::var("SOAP_GEMM_KERNEL").ok();
+        let (kernel, warn) = parse_kernel(raw.as_deref(), simd::available());
+        if let Some(w) = warn {
+            eprintln!("[soap-gemm] {w}");
+        }
+        kernel
+    })
+}
+
+/// Kernel in force right now: the [`force_gemm_kernel`] override when set,
+/// else the latched env choice.
+fn active_kernel() -> GemmKernel {
+    match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
+        1 => GemmKernel::Scalar,
+        2 => GemmKernel::Simd,
+        _ => env_kernel(),
+    }
+}
+
+/// Name of the kernel currently in force (`"scalar"` / `"simd"`) — surfaced
+/// by the step-latency bench so baselines record which path they measured.
+pub fn active_gemm_kernel_name() -> &'static str {
+    active_kernel().name()
+}
+
 /// The process-wide pool backing the `par_*` drivers. `None` when
 /// single-threaded (1 CPU or `SOAP_GEMM_THREADS=1`). Never dropped — the
 /// workers are idle daemons between fan-outs.
 fn linalg_pool() -> Option<&'static ThreadPool> {
     static POOL: OnceLock<Option<ThreadPool>> = OnceLock::new();
     POOL.get_or_init(|| {
-        let threads = std::env::var("SOAP_GEMM_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            });
+        let default = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let raw = std::env::var("SOAP_GEMM_THREADS").ok();
+        let (threads, warn) = parse_threads(raw.as_deref(), default);
+        if let Some(w) = warn {
+            eprintln!("[soap-gemm] {w}");
+        }
         (threads > 1).then(|| ThreadPool::new(threads))
     })
     .as_ref()
@@ -71,8 +202,8 @@ fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     }
 }
 
-/// `c[rows×n] += a[rows×k] · b[k×n]` — the shared NN accumulation core.
-fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+/// `c[rows×n] += a[rows×k] · b[k×n]` — the portable NN accumulation core.
+fn nn_acc_scalar(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for k0 in (0..k).step_by(KB) {
         let k1 = (k0 + KB).min(k);
         for i in 0..rows {
@@ -85,11 +216,21 @@ fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
     }
 }
 
-/// `c[rows×n] = (Aᵀ·B)[i0..i0+rows, :]` with `A: k×m`, `B: k×n`. `c` is the
-/// chunk's rows only; `i0` is its absolute offset into Aᵀ's rows (= A's
-/// columns).
+/// NN core, dispatched on the active kernel. Every `gemm_into` /
+/// `gemm_nt_into` call — serial or a `par_*` chunk — funnels through here,
+/// so all drivers inherit the SIMD path from one switch.
+fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    match active_kernel() {
+        GemmKernel::Scalar => nn_acc_scalar(rows, k, n, a, b, c),
+        GemmKernel::Simd => simd::nn_acc(rows, k, n, a, b, c),
+    }
+}
+
+/// `c[rows×n] = (Aᵀ·B)[i0..i0+rows, :]` with `A: k×m`, `B: k×n` — the
+/// portable TN core. `c` is the chunk's rows only; `i0` is its absolute
+/// offset into Aᵀ's rows (= A's columns).
 #[allow(clippy::too_many_arguments)]
-fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+fn tn_rows_scalar(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     c.fill(0.0);
     for ib in (0..rows).step_by(IB) {
         let ie = (ib + IB).min(rows);
@@ -100,6 +241,16 @@ fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &
                 axpy(arow[i0 + i], brow, &mut c[i * n..(i + 1) * n]);
             }
         }
+    }
+}
+
+/// TN core, dispatched on the active kernel (serial `gemm_tn_into` and
+/// every `par_gemm_tn_into` chunk).
+#[allow(clippy::too_many_arguments)]
+fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    match active_kernel() {
+        GemmKernel::Scalar => tn_rows_scalar(i0, rows, m, k, n, a, b, c),
+        GemmKernel::Simd => simd::tn_rows(i0, rows, m, k, n, a, b, c),
     }
 }
 
@@ -381,6 +532,167 @@ mod tests {
         let mut pack = Vec::new();
         gemm_nt_into(2, 2, 2, &a, &bt, &mut c, &mut pack);
         assert!(c[0].is_nan(), "0·Inf must be NaN, got {}", c[0]); // 0·Inf + 1·0
+    }
+
+    /// Bit-level comparison that treats NaN as equal to the *same* NaN bits
+    /// (plain `==` would fail on any NaN).
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+        for (idx, (x, y)) in got.iter().zip(want).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: element {idx} drifted ({x} vs {y})"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_bitwise_odd_shapes() {
+        if !simd::available() {
+            eprintln!("skipping: no SIMD ISA on this CPU");
+            return;
+        }
+        // Odd shapes exercise every tail path: partial row tiles (rows %
+        // MR), partial vectors (n % W), and k crossing the KB block edge is
+        // covered by the 63..=65 band against the property that blocking
+        // never changes per-element order.
+        let dims: Vec<usize> = (1..=17).chain([63, 64, 65]).collect();
+        let mut rng = Rng::new(4242);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let mut a = vec![0.0f32; m * k];
+                    let mut b = vec![0.0f32; k * n];
+                    rng.fill_normal(&mut a, 1.0);
+                    rng.fill_normal(&mut b, 1.0);
+                    let mut cs = vec![0.0f32; m * n];
+                    let mut cv = vec![0.0f32; m * n];
+                    nn_acc_scalar(m, k, n, &a, &b, &mut cs);
+                    simd::nn_acc(m, k, n, &a, &b, &mut cv);
+                    assert_bits_eq(&cv, &cs, &format!("NN {m}x{k}x{n}"));
+
+                    // TN: a k×m operand produces the same m×n output shape.
+                    let mut cs = vec![f32::NAN; m * n];
+                    let mut cv = vec![f32::NAN; m * n];
+                    let mut at = vec![0.0f32; k * m];
+                    rng.fill_normal(&mut at, 1.0);
+                    tn_rows_scalar(0, m, m, k, n, &at, &b, &mut cs);
+                    simd::tn_rows(0, m, m, k, n, &at, &b, &mut cv);
+                    assert_bits_eq(&cv, &cs, &format!("TN {m}x{k}x{n}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_on_tn_chunk_offsets() {
+        if !simd::available() {
+            return;
+        }
+        // Nonzero i0 is what the parallel TN driver feeds the core.
+        let (m, k, n) = (13, 9, 11);
+        let mut rng = Rng::new(4243);
+        let mut a = vec![0.0f32; k * m];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        for i0 in [0usize, 1, 5, 12] {
+            let rows = m - i0;
+            let mut cs = vec![f32::NAN; rows * n];
+            let mut cv = vec![f32::NAN; rows * n];
+            tn_rows_scalar(i0, rows, m, k, n, &a, &b, &mut cs);
+            simd::tn_rows(i0, rows, m, k, n, &a, &b, &mut cv);
+            assert_bits_eq(&cv, &cs, &format!("TN i0={i0}"));
+        }
+    }
+
+    #[test]
+    fn simd_propagates_nan_inf_through_zero_a_like_scalar() {
+        if !simd::available() {
+            return;
+        }
+        // Zero A rows against NaN/Inf B: 0·NaN = NaN and 0·∞ = NaN must
+        // survive the SIMD path too, with the exact scalar bit patterns.
+        for (m, k, n) in [(4, 4, 8), (5, 3, 9), (1, 1, 1), (8, 16, 17)] {
+            let mut a = vec![0.0f32; m * k]; // all-zero A
+            a[m * k - 1] = 2.0;
+            let mut b = vec![1.0f32; k * n];
+            b[0] = f32::NAN;
+            b[k * n - 1] = f32::INFINITY;
+            if k * n > 1 {
+                b[1] = f32::NEG_INFINITY;
+            }
+            let mut cs = vec![0.0f32; m * n];
+            let mut cv = vec![0.0f32; m * n];
+            nn_acc_scalar(m, k, n, &a, &b, &mut cs);
+            simd::nn_acc(m, k, n, &a, &b, &mut cv);
+            assert!(cs.iter().any(|x| x.is_nan()), "poison lost in scalar reference");
+            assert_bits_eq(&cv, &cs, &format!("NN poison {m}x{k}x{n}"));
+
+            let mut cs = vec![0.0f32; m * n];
+            let mut cv = vec![0.0f32; m * n];
+            let at = vec![0.0f32; k * m];
+            tn_rows_scalar(0, m, m, k, n, &at, &b, &mut cs);
+            simd::tn_rows(0, m, m, k, n, &at, &b, &mut cv);
+            assert!(cs.iter().any(|x| x.is_nan()), "poison lost in scalar TN reference");
+            assert_bits_eq(&cv, &cs, &format!("TN poison {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn kernel_env_parse_covers_all_arms() {
+        // SOAP_GEMM_KERNEL.
+        assert_eq!(parse_kernel(None, true), (GemmKernel::Simd, None));
+        assert_eq!(parse_kernel(None, false), (GemmKernel::Scalar, None));
+        assert_eq!(parse_kernel(Some("auto"), true), (GemmKernel::Simd, None));
+        assert_eq!(parse_kernel(Some("AUTO"), false), (GemmKernel::Scalar, None));
+        assert_eq!(parse_kernel(Some("scalar"), true), (GemmKernel::Scalar, None));
+        assert_eq!(parse_kernel(Some("simd"), true), (GemmKernel::Simd, None));
+        let (k, warn) = parse_kernel(Some("simd"), false);
+        assert_eq!(k, GemmKernel::Scalar);
+        assert!(warn.unwrap().contains("no AVX2/NEON"));
+        let (k, warn) = parse_kernel(Some("avx512"), true);
+        assert_eq!(k, GemmKernel::Simd);
+        let w = warn.unwrap();
+        assert!(w.contains("'avx512'") && w.contains("scalar, simd, or auto"), "{w}");
+
+        // SOAP_GEMM_THREADS: empty, non-numeric, and zero all warn by name.
+        assert_eq!(parse_threads(None, 8), (8, None));
+        assert_eq!(parse_threads(Some("4"), 8), (4, None));
+        assert_eq!(parse_threads(Some(" 2 "), 8), (2, None));
+        for bad in ["abc", "", "0", "-3", "1.5"] {
+            let (n, warn) = parse_threads(Some(bad), 8);
+            assert_eq!(n, 8, "bad value {bad:?} must fall back");
+            let w = warn.expect("invalid value must warn");
+            assert!(w.contains(&format!("'{bad}'")) && w.contains("using 8"), "{w}");
+        }
+    }
+
+    #[test]
+    fn forced_kernel_overrides_and_restores() {
+        // Single test owns the global override so parallel tests never see a
+        // half-flipped state (results would still match — both kernels are
+        // bitwise identical — but the name assertions below would race).
+        force_gemm_kernel(Some(GemmKernel::Scalar));
+        assert_eq!(active_gemm_kernel_name(), "scalar");
+        force_gemm_kernel(Some(GemmKernel::Simd));
+        if simd::available() {
+            assert_eq!(active_gemm_kernel_name(), "simd");
+        } else {
+            assert_eq!(active_gemm_kernel_name(), "scalar", "no-ISA force must clamp");
+        }
+        // Forced kernels drive the public entry points end to end.
+        let (m, k, n) = (6, 5, 7);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32).cos()).collect();
+        let mut c_simd = vec![0.0f32; m * n];
+        gemm_into(m, k, n, &a, &b, &mut c_simd);
+        force_gemm_kernel(Some(GemmKernel::Scalar));
+        let mut c_scalar = vec![0.0f32; m * n];
+        gemm_into(m, k, n, &a, &b, &mut c_scalar);
+        assert_bits_eq(&c_simd, &c_scalar, "forced kernels");
+        force_gemm_kernel(None);
     }
 
     #[test]

@@ -11,11 +11,13 @@ pub mod gemm;
 pub mod matrix;
 pub mod qr;
 pub mod roots;
+pub mod simd;
 pub mod tensor;
 
 pub use eigh::{eigh, eigh_warm};
 pub use gemm::{
-    gemm_into, gemm_nt_into, gemm_tn_into, par_gemm_into, par_gemm_nt_into, par_gemm_tn_into,
+    active_gemm_kernel_name, force_gemm_kernel, gemm_into, gemm_nt_into, gemm_tn_into,
+    par_gemm_into, par_gemm_nt_into, par_gemm_tn_into, GemmKernel,
 };
 pub use matrix::Matrix;
 pub use qr::{power_iter_refresh, qr, qr_positive};

@@ -1,0 +1,366 @@
+//! Explicit SIMD microkernels for the GEMM family (AVX2 on x86_64, NEON on
+//! aarch64), runtime-dispatched by `gemm.rs` via `SOAP_GEMM_KERNEL`.
+//!
+//! # Why the SIMD path is bitwise identical to the scalar path
+//!
+//! Every element of `C` is produced by the exact same sequence of IEEE-754
+//! f32 operations as the scalar kernel: accumulation runs in ascending `p`,
+//! and each step is a separate multiply followed by a separate add — never a
+//! fused multiply-add, whose single rounding would differ from the scalar
+//! mul/add pair. Vector lanes compute the same elementwise f32 ops as scalar
+//! instructions, so tiling rows into registers and columns into vectors
+//! reorders *which elements* are computed when, but never the op sequence
+//! *within* an element. The loop-nest order over `i`/`j` is therefore free
+//! to change; only the per-element `p` order and the op shapes are pinned.
+//!
+//! Like the scalar kernel there is deliberately no skip of zero `A`
+//! elements: `0 · NaN = NaN` and `0 · ∞ = NaN` must propagate (see
+//! `nan_propagates_through_zero_a` in `gemm.rs`).
+
+/// k-block: matches the scalar kernel's panel height. Blocking advances in
+/// ascending `p`, so it affects cache behavior only — never the per-element
+/// accumulation order.
+const KB: usize = 256;
+
+/// Rows of `C` held in registers per tile.
+const MR: usize = 4;
+
+/// Is a SIMD kernel available on this CPU? x86_64 requires AVX2 (checked at
+/// runtime, cached); NEON is baseline on aarch64; other arches have no
+/// kernel and always run scalar.
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// `c[rows×n] += a[rows×k] · b[k×n]` — SIMD twin of the scalar `nn_acc`.
+/// Bitwise identical to it (see module docs). Panics when no SIMD ISA is
+/// available; the dispatcher in `gemm.rs` only routes here after checking
+/// [`available`].
+#[allow(unused_variables)]
+pub fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert!(available(), "SIMD GEMM kernel dispatched on a CPU without AVX2/NEON");
+    debug_assert!(a.len() >= rows * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= rows * n);
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: bounds checked above; AVX2 presence checked by `available`.
+    unsafe {
+        avx2::nn_acc(rows, k, n, a, b, c)
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: bounds checked above; NEON is baseline on aarch64.
+    unsafe {
+        neon::nn_acc(rows, k, n, a, b, c)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    unreachable!()
+}
+
+/// `c[rows×n] = (Aᵀ·B)[i0..i0+rows, :]` with `A: k×m`, `B: k×n` — SIMD twin
+/// of the scalar `tn_rows` (zero-init accumulators, ascending `p` over the
+/// full `0..k`, mul then add). Bitwise identical to it.
+#[allow(unused_variables, clippy::too_many_arguments)]
+pub fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert!(available(), "SIMD GEMM kernel dispatched on a CPU without AVX2/NEON");
+    debug_assert!(a.len() >= k * m);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= rows * n);
+    debug_assert!(i0 + rows <= m);
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: bounds checked above; AVX2 presence checked by `available`.
+    unsafe {
+        avx2::tn_rows(i0, rows, m, k, n, a, b, c)
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: bounds checked above; NEON is baseline on aarch64.
+    unsafe {
+        neon::tn_rows(i0, rows, m, k, n, a, b, c)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    unreachable!()
+}
+
+/// Scalar tail columns `j0..n` of the NN kernel for one row over one
+/// k-block: the same mul-then-add ascending-`p` sequence as the vector
+/// lanes, so tail elements match the scalar kernel too.
+///
+/// # Safety
+/// `arow` must be valid for `k1` reads, `b` for `k1 * n`, `crow` for `n`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+unsafe fn nn_tail(j0: usize, n: usize, k0: usize, k1: usize, arow: *const f32, b: *const f32, crow: *mut f32) {
+    for j in j0..n {
+        let mut acc = *crow.add(j);
+        for p in k0..k1 {
+            acc += *arow.add(p) * *b.add(p * n + j);
+        }
+        *crow.add(j) = acc;
+    }
+}
+
+/// Scalar tail columns `j0..n` of the TN kernel for one output row
+/// (`A`-column `acol`): zero-init, ascending `p` over `0..k`, mul then add.
+///
+/// # Safety
+/// `a` must be valid for `k * m` reads, `b` for `k * n`, `crow` for `n`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tn_tail(j0: usize, n: usize, m: usize, k: usize, acol: usize, a: *const f32, b: *const f32, crow: *mut f32) {
+    for j in j0..n {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            acc += *a.add(p * m + acol) * *b.add(p * n + j);
+        }
+        *crow.add(j) = acc;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{nn_tail, tn_tail, KB, MR};
+    use core::arch::x86_64::*;
+
+    /// f32 lanes per vector.
+    const W: usize = 8;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available and slices cover
+    /// `a: rows×k`, `b: k×n`, `c: rows×n`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let (a, b, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let nv = n / W * W;
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let mut i = 0;
+            while i + MR <= rows {
+                let (ar0, ar1, ar2, ar3) =
+                    (a.add(i * k), a.add((i + 1) * k), a.add((i + 2) * k), a.add((i + 3) * k));
+                let (cr0, cr1, cr2, cr3) =
+                    (cp.add(i * n), cp.add((i + 1) * n), cp.add((i + 2) * n), cp.add((i + 3) * n));
+                let mut j = 0;
+                while j < nv {
+                    let mut acc0 = _mm256_loadu_ps(cr0.add(j));
+                    let mut acc1 = _mm256_loadu_ps(cr1.add(j));
+                    let mut acc2 = _mm256_loadu_ps(cr2.add(j));
+                    let mut acc3 = _mm256_loadu_ps(cr3.add(j));
+                    for p in k0..k1 {
+                        let bv = _mm256_loadu_ps(b.add(p * n + j));
+                        // Separate mul/add — FMA's single rounding would
+                        // drift from the scalar kernel.
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ar0.add(p)), bv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ar1.add(p)), bv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ar2.add(p)), bv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ar3.add(p)), bv));
+                    }
+                    _mm256_storeu_ps(cr0.add(j), acc0);
+                    _mm256_storeu_ps(cr1.add(j), acc1);
+                    _mm256_storeu_ps(cr2.add(j), acc2);
+                    _mm256_storeu_ps(cr3.add(j), acc3);
+                    j += W;
+                }
+                nn_tail(nv, n, k0, k1, ar0, b, cr0);
+                nn_tail(nv, n, k0, k1, ar1, b, cr1);
+                nn_tail(nv, n, k0, k1, ar2, b, cr2);
+                nn_tail(nv, n, k0, k1, ar3, b, cr3);
+                i += MR;
+            }
+            while i < rows {
+                let (ar, cr) = (a.add(i * k), cp.add(i * n));
+                let mut j = 0;
+                while j < nv {
+                    let mut acc = _mm256_loadu_ps(cr.add(j));
+                    for p in k0..k1 {
+                        let bv = _mm256_loadu_ps(b.add(p * n + j));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*ar.add(p)), bv));
+                    }
+                    _mm256_storeu_ps(cr.add(j), acc);
+                    j += W;
+                }
+                nn_tail(nv, n, k0, k1, ar, b, cr);
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `i0 + rows <= m`, and slices
+    /// cover `a: k×m`, `b: k×n`, `c: rows×n`.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let (a, b, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let nv = n / W * W;
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut j = 0;
+            while j < nv {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                for p in 0..k {
+                    let bv = _mm256_loadu_ps(b.add(p * n + j));
+                    let ap = a.add(p * m + i0 + i);
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*ap), bv));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*ap.add(1)), bv));
+                    acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*ap.add(2)), bv));
+                    acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*ap.add(3)), bv));
+                }
+                _mm256_storeu_ps(cp.add(i * n + j), acc0);
+                _mm256_storeu_ps(cp.add((i + 1) * n + j), acc1);
+                _mm256_storeu_ps(cp.add((i + 2) * n + j), acc2);
+                _mm256_storeu_ps(cp.add((i + 3) * n + j), acc3);
+                j += W;
+            }
+            for r in 0..MR {
+                tn_tail(nv, n, m, k, i0 + i + r, a, b, cp.add((i + r) * n));
+            }
+            i += MR;
+        }
+        while i < rows {
+            let mut j = 0;
+            while j < nv {
+                let mut acc = _mm256_setzero_ps();
+                for p in 0..k {
+                    let bv = _mm256_loadu_ps(b.add(p * n + j));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*a.add(p * m + i0 + i)), bv));
+                }
+                _mm256_storeu_ps(cp.add(i * n + j), acc);
+                j += W;
+            }
+            tn_tail(nv, n, m, k, i0 + i, a, b, cp.add(i * n));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{nn_tail, tn_tail, KB, MR};
+    use core::arch::aarch64::*;
+
+    /// f32 lanes per vector.
+    const W: usize = 4;
+
+    /// # Safety
+    /// Caller must ensure slices cover `a: rows×k`, `b: k×n`, `c: rows×n`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn nn_acc(rows: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let (a, b, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let nv = n / W * W;
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let mut i = 0;
+            while i + MR <= rows {
+                let (ar0, ar1, ar2, ar3) =
+                    (a.add(i * k), a.add((i + 1) * k), a.add((i + 2) * k), a.add((i + 3) * k));
+                let (cr0, cr1, cr2, cr3) =
+                    (cp.add(i * n), cp.add((i + 1) * n), cp.add((i + 2) * n), cp.add((i + 3) * n));
+                let mut j = 0;
+                while j < nv {
+                    let mut acc0 = vld1q_f32(cr0.add(j));
+                    let mut acc1 = vld1q_f32(cr1.add(j));
+                    let mut acc2 = vld1q_f32(cr2.add(j));
+                    let mut acc3 = vld1q_f32(cr3.add(j));
+                    for p in k0..k1 {
+                        let bv = vld1q_f32(b.add(p * n + j));
+                        // Separate mul/add — vfmaq would fuse the rounding.
+                        acc0 = vaddq_f32(acc0, vmulq_f32(vdupq_n_f32(*ar0.add(p)), bv));
+                        acc1 = vaddq_f32(acc1, vmulq_f32(vdupq_n_f32(*ar1.add(p)), bv));
+                        acc2 = vaddq_f32(acc2, vmulq_f32(vdupq_n_f32(*ar2.add(p)), bv));
+                        acc3 = vaddq_f32(acc3, vmulq_f32(vdupq_n_f32(*ar3.add(p)), bv));
+                    }
+                    vst1q_f32(cr0.add(j), acc0);
+                    vst1q_f32(cr1.add(j), acc1);
+                    vst1q_f32(cr2.add(j), acc2);
+                    vst1q_f32(cr3.add(j), acc3);
+                    j += W;
+                }
+                nn_tail(nv, n, k0, k1, ar0, b, cr0);
+                nn_tail(nv, n, k0, k1, ar1, b, cr1);
+                nn_tail(nv, n, k0, k1, ar2, b, cr2);
+                nn_tail(nv, n, k0, k1, ar3, b, cr3);
+                i += MR;
+            }
+            while i < rows {
+                let (ar, cr) = (a.add(i * k), cp.add(i * n));
+                let mut j = 0;
+                while j < nv {
+                    let mut acc = vld1q_f32(cr.add(j));
+                    for p in k0..k1 {
+                        let bv = vld1q_f32(b.add(p * n + j));
+                        acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(*ar.add(p)), bv));
+                    }
+                    vst1q_f32(cr.add(j), acc);
+                    j += W;
+                }
+                nn_tail(nv, n, k0, k1, ar, b, cr);
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure `i0 + rows <= m` and slices cover `a: k×m`,
+    /// `b: k×n`, `c: rows×n`.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn tn_rows(i0: usize, rows: usize, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let (a, b, cp) = (a.as_ptr(), b.as_ptr(), c.as_mut_ptr());
+        let nv = n / W * W;
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut j = 0;
+            while j < nv {
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                let mut acc2 = vdupq_n_f32(0.0);
+                let mut acc3 = vdupq_n_f32(0.0);
+                for p in 0..k {
+                    let bv = vld1q_f32(b.add(p * n + j));
+                    let ap = a.add(p * m + i0 + i);
+                    acc0 = vaddq_f32(acc0, vmulq_f32(vdupq_n_f32(*ap), bv));
+                    acc1 = vaddq_f32(acc1, vmulq_f32(vdupq_n_f32(*ap.add(1)), bv));
+                    acc2 = vaddq_f32(acc2, vmulq_f32(vdupq_n_f32(*ap.add(2)), bv));
+                    acc3 = vaddq_f32(acc3, vmulq_f32(vdupq_n_f32(*ap.add(3)), bv));
+                }
+                vst1q_f32(cp.add(i * n + j), acc0);
+                vst1q_f32(cp.add((i + 1) * n + j), acc1);
+                vst1q_f32(cp.add((i + 2) * n + j), acc2);
+                vst1q_f32(cp.add((i + 3) * n + j), acc3);
+                j += W;
+            }
+            for r in 0..MR {
+                tn_tail(nv, n, m, k, i0 + i + r, a, b, cp.add((i + r) * n));
+            }
+            i += MR;
+        }
+        while i < rows {
+            let mut j = 0;
+            while j < nv {
+                let mut acc = vdupq_n_f32(0.0);
+                for p in 0..k {
+                    let bv = vld1q_f32(b.add(p * n + j));
+                    acc = vaddq_f32(acc, vmulq_f32(vdupq_n_f32(*a.add(p * m + i0 + i)), bv));
+                }
+                vst1q_f32(cp.add(i * n + j), acc);
+                j += W;
+            }
+            tn_tail(nv, n, m, k, i0 + i, a, b, cp.add(i * n));
+            i += 1;
+        }
+    }
+}

@@ -77,6 +77,11 @@ fn app() -> App {
                     "0",
                     "refresh the eigenbasis every step for the first k steps (0 = off)",
                 )
+                .opt(
+                    "state-dtype",
+                    "f32",
+                    "second-moment storage: f32|bf16 (bf16 halves factor/V state bytes)",
+                )
                 .opt("ranks", "2", "world size for --backend distributed (self-spawns workers)")
                 .opt(
                     "rank",

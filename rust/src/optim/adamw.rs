@@ -106,4 +106,13 @@ mod tests {
         let opt = AdamW::new(8, 16, Hyper::default());
         assert_eq!(opt.state_bytes(), 2 * 8 * 16 * 4);
     }
+
+    #[test]
+    fn bf16_state_halves_v_but_not_m() {
+        use crate::optim::hyper::StateDtype;
+        let h = Hyper { state_dtype: StateDtype::Bf16, ..Hyper::default() };
+        let opt = AdamW::new(8, 16, h);
+        // M stays f32 (4 bytes); V stores bf16 (2 bytes).
+        assert_eq!(opt.state_bytes(), 8 * 16 * 4 + 8 * 16 * 2);
+    }
 }

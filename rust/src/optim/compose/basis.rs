@@ -19,6 +19,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::state::StateMatrix;
 use super::workspace::{Scratch, Workspace};
 use super::{Basis, BasisState, StateLayout};
 use crate::linalg::{eigh, eigh_warm, power_iter_refresh, roots::inv_root_from_eig, Matrix};
@@ -132,8 +133,9 @@ pub struct EigenBasis {
     pub flavor: EigenFlavor,
     /// Kronecker-factor EMAs. `None` = that side is identity (one-sided /
     /// max-dim-capped; Rotation flavor only — InverseRoot keeps both).
-    pub l: Option<Matrix>,
-    pub r: Option<Matrix>,
+    /// Stored per [`Hyper::state_dtype`] (f32 or bf16).
+    pub l: Option<StateMatrix>,
+    pub r: Option<StateMatrix>,
     /// Rotation: eigenvector bases `Q_L`/`Q_R` (None until first init).
     /// InverseRoot: cached `L^{-1/e}`/`R^{-1/e}` (start as identity).
     pub left_q: Option<Matrix>,
@@ -188,8 +190,8 @@ impl EigenBasis {
         Self {
             h: h.clone(),
             flavor: EigenFlavor::Rotation,
-            l: left.then(|| Matrix::zeros(rows, rows)),
-            r: right.then(|| Matrix::zeros(cols, cols)),
+            l: left.then(|| StateMatrix::zeros(rows, rows, h.state_dtype)),
+            r: right.then(|| StateMatrix::zeros(cols, cols, h.state_dtype)),
             left_q: None,
             right_q: None,
             l_vecs: None,
@@ -214,8 +216,8 @@ impl EigenBasis {
         Self {
             h: h.clone(),
             flavor: EigenFlavor::InverseRoot,
-            l: Some(Matrix::zeros(rows, rows)),
-            r: Some(Matrix::zeros(cols, cols)),
+            l: Some(StateMatrix::zeros(rows, rows, h.state_dtype)),
+            r: Some(StateMatrix::zeros(cols, cols, h.state_dtype)),
             left_q: Some(Matrix::eye(rows)),
             right_q: Some(Matrix::eye(cols)),
             l_vecs: None,
@@ -265,7 +267,8 @@ impl EigenBasis {
                 _ => return,
             },
         };
-        let rotated = q.matmul_tn(&p.matmul(q));
+        // Telemetry-only decode: refresh-time, never the steady-state step.
+        let rotated = q.matmul_tn(&p.to_matrix().matmul(q));
         self.whitening = Some(offdiag_ratio(&rotated));
     }
 
@@ -275,14 +278,19 @@ impl EigenBasis {
     fn init_rotation(&mut self, g: &Matrix, t: u64) {
         let _span = crate::telemetry::span_layer("refresh.init", "refresh", self.trace_id);
         let t0 = Instant::now();
+        // Decompose the exact f32 gram, then store it at the state dtype —
+        // the eigenbasis itself stays full precision either way (and is
+        // checkpointed separately, so resume sees the same basis).
         if let Some(l) = &mut self.l {
-            *l = g.matmul_nt(g);
-            let (_, v) = eigh(l);
+            let gram = g.matmul_nt(g);
+            let (_, v) = eigh(&gram);
+            l.assign_from(&gram);
             self.left_q = Some(v);
         }
         if let Some(r) = &mut self.r {
-            *r = g.matmul_tn(g);
-            let (_, v) = eigh(r);
+            let gram = g.matmul_tn(g);
+            let (_, v) = eigh(&gram);
+            r.assign_from(&gram);
             self.right_q = Some(v);
         }
         self.initialized = true;
@@ -346,8 +354,8 @@ impl EigenBasis {
     fn corrected_factors(&self, t: u64) -> (Matrix, Matrix) {
         let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
         (
-            self.l.as_ref().expect("inverse-root basis has L").scale(1.0 / bc),
-            self.r.as_ref().expect("inverse-root basis has R").scale(1.0 / bc),
+            self.l.as_ref().expect("inverse-root basis has L").to_matrix().scale(1.0 / bc),
+            self.r.as_ref().expect("inverse-root basis has R").to_matrix().scale(1.0 / bc),
         )
     }
 
@@ -380,7 +388,7 @@ impl EigenBasis {
         let _span = crate::telemetry::span_layer("refresh.inline", "refresh", self.trace_id);
         let t0 = Instant::now();
         let finite = |m: &Matrix| m.data.iter().all(|x| x.is_finite());
-        let finite_opt = |m: &Option<Matrix>| m.as_ref().map_or(true, finite);
+        let finite_opt = |m: &Option<StateMatrix>| m.as_ref().map_or(true, |m| m.is_finite());
         let installed = match self.flavor {
             EigenFlavor::Rotation => {
                 if !(finite_opt(&self.l) && finite_opt(&self.r)) {
@@ -388,10 +396,14 @@ impl EigenBasis {
                     // all — it cannot produce a usable basis.
                     false
                 } else {
+                    // Refresh-time decode of the factor EMAs (allocating is
+                    // fine off the steady-state step).
+                    let l = self.l.as_ref().map(|m| m.to_matrix());
+                    let r = self.r.as_ref().map(|m| m.to_matrix());
                     let (left, right) = Self::compute_rotation_refresh(
                         self.h.refresh,
-                        self.l.as_ref(),
-                        self.r.as_ref(),
+                        l.as_ref(),
+                        r.as_ref(),
                         self.left_q.as_ref(),
                         self.right_q.as_ref(),
                     );
@@ -516,8 +528,8 @@ impl EigenBasis {
         match self.flavor {
             EigenFlavor::Rotation => {
                 let method = self.h.refresh;
-                let l = self.l.clone();
-                let r = self.r.clone();
+                let l = self.l.as_ref().map(|m| m.to_matrix());
+                let r = self.r.as_ref().map(|m| m.to_matrix());
                 let ql = self.left_q.clone();
                 let qr = self.right_q.clone();
                 service.enqueue(
@@ -781,15 +793,15 @@ impl Basis for EigenBasis {
 
     fn state_bytes(&self) -> usize {
         let opt = |x: &Option<Matrix>| x.as_ref().map(|m| m.numel()).unwrap_or(0);
+        let opt_s = |x: &Option<StateMatrix>| x.as_ref().map(|m| m.state_bytes()).unwrap_or(0);
         // The warm-start eigenvector caches ARE held state (the pre-refactor
-        // Shampoo under-reported by omitting them — §7.2 accounting).
-        (opt(&self.l)
-            + opt(&self.r)
-            + opt(&self.left_q)
-            + opt(&self.right_q)
-            + opt(&self.l_vecs)
-            + opt(&self.r_vecs))
-            * 4
+        // Shampoo under-reported by omitting them — §7.2 accounting). The
+        // factor EMAs report their actual storage width; the basis/root/vec
+        // caches are always f32.
+        opt_s(&self.l)
+            + opt_s(&self.r)
+            + (opt(&self.left_q) + opt(&self.right_q) + opt(&self.l_vecs) + opt(&self.r_vecs))
+                * 4
     }
 
     fn export(&self) -> BasisState {
@@ -803,7 +815,15 @@ impl Basis for EigenBasis {
                     self.basis_step as f32,
                 ];
                 let mut tensors = Vec::new();
-                for opt in [&self.l, &self.r, &self.left_q, &self.right_q] {
+                // Factor EMAs decode to the f32 wire; bf16-stored values lie
+                // on the bf16 grid, so re-encoding on import round-trips the
+                // exact stored words.
+                for opt in [&self.l, &self.r] {
+                    if let Some(x) = opt {
+                        tensors.push(x.to_matrix());
+                    }
+                }
+                for opt in [&self.left_q, &self.right_q] {
                     if let Some(x) = opt {
                         tensors.push(x.clone());
                     }
@@ -816,8 +836,8 @@ impl Basis for EigenBasis {
                 // the uninterrupted run's — required for bitwise resume.
                 let has_vecs = self.l_vecs.is_some() && self.r_vecs.is_some();
                 let mut tensors = vec![
-                    self.l.clone().unwrap(),
-                    self.r.clone().unwrap(),
+                    self.l.as_ref().unwrap().to_matrix(),
+                    self.r.as_ref().unwrap().to_matrix(),
                     self.left_q.clone().unwrap(),
                     self.right_q.clone().unwrap(),
                 ];
@@ -858,8 +878,16 @@ impl Basis for EigenBasis {
                 let has_l = flags[1] != 0.0;
                 let has_r = flags[2] != 0.0;
                 self.basis_step = flags[3] as u64;
-                self.l = if has_l { Some(next("l")?) } else { None };
-                self.r = if has_r { Some(next("r")?) } else { None };
+                self.l = if has_l {
+                    Some(StateMatrix::from_matrix(&next("l")?, self.h.state_dtype))
+                } else {
+                    None
+                };
+                self.r = if has_r {
+                    Some(StateMatrix::from_matrix(&next("r")?, self.h.state_dtype))
+                } else {
+                    None
+                };
                 if self.initialized {
                     self.left_q = if has_l { Some(next("ql")?) } else { None };
                     self.right_q = if has_r { Some(next("qr")?) } else { None };
@@ -869,8 +897,8 @@ impl Basis for EigenBasis {
                 anyhow::ensure!(flags.len() == 3, "inverse-root basis flags malformed");
                 self.initialized = flags[0] != 0.0;
                 self.basis_step = flags[1] as u64;
-                self.l = Some(next("l")?);
-                self.r = Some(next("r")?);
+                self.l = Some(StateMatrix::from_matrix(&next("l")?, self.h.state_dtype));
+                self.r = Some(StateMatrix::from_matrix(&next("r")?, self.h.state_dtype));
                 self.left_q = Some(next("l_inv")?);
                 self.right_q = Some(next("r_inv")?);
                 if flags[2] != 0.0 {

@@ -14,6 +14,7 @@
 //!   Kronecker preconditioner `L^{-1/e} · M̂ · R^{-1/e}` (Shampoo). Requires
 //!   an inverse-root flavored [`EigenBasis`](super::basis::EigenBasis).
 
+use super::state::{StateMatrix, StateVec};
 use super::workspace::Workspace;
 use super::{Basis, EngineState, MomentEngine};
 use crate::linalg::Matrix;
@@ -37,11 +38,14 @@ pub fn factored_normalize(num: &Matrix, a: &[f32], c: &[f32], eps: f32) -> Matri
 /// normalize — with every intermediate in caller-provided scratch and the
 /// numerator's `1/bc1` correction folded into the final pass. Each f32
 /// expression and accumulation order matches the allocating reference, so
-/// the result is bitwise identical.
+/// the result is bitwise identical. Under bf16 storage the EMAs encode on
+/// store and the bias-corrected hats read the decoded values back — the same
+/// read-back semantics the allocating path sees, so the two stay bitwise
+/// equal per dtype.
 #[allow(clippy::too_many_arguments)]
 fn factored_dir_into(
-    a: &mut [f32],
-    c: &mut [f32],
+    a: &mut StateVec,
+    c: &mut StateVec,
     beta2: f32,
     eps: f32,
     gp: &Matrix,
@@ -69,16 +73,12 @@ fn factored_dir_into(
         sums_row[i] = acc;
     }
     let ob2 = 1.0 - beta2;
-    for (ai, &ri) in a.iter_mut().zip(sums_row.iter()) {
-        *ai = beta2 * *ai + ob2 * (ri as f32);
-    }
-    for (ci, &cj) in c.iter_mut().zip(sums_col.iter()) {
-        *ci = beta2 * *ci + ob2 * (cj as f32);
-    }
+    a.ema_update(|i, ai| beta2 * ai + ob2 * (sums_row[i] as f32));
+    c.ema_update(|i, ci| beta2 * ci + ob2 * (sums_col[i] as f32));
     hat_row.clear();
-    hat_row.extend(a.iter().map(|&x| x / bc2));
+    hat_row.extend(a.iter_decoded().map(|x| x / bc2));
     hat_col.clear();
-    hat_col.extend(c.iter().map(|&x| x / bc2));
+    hat_col.extend(c.iter_decoded().map(|x| x / bc2));
     // `factored_normalize`, fused with the numerator bias correction.
     let sum_a: f32 = hat_row.iter().map(|&x| x as f64).sum::<f64>() as f32;
     let inv_sum = if sum_a > 0.0 { 1.0 / sum_a } else { 0.0 };
@@ -110,7 +110,8 @@ pub enum MomentumSpace {
 pub struct AdamEngine {
     h: Hyper,
     pub m: Matrix,
-    pub v: Matrix,
+    /// Second moment — stored per [`Hyper::state_dtype`] (f32 or bf16).
+    pub v: StateMatrix,
     pub space: MomentumSpace,
 }
 
@@ -119,7 +120,7 @@ impl AdamEngine {
         Self {
             h: h.clone(),
             m: Matrix::zeros(rows, cols),
-            v: Matrix::zeros(rows, cols),
+            v: StateMatrix::zeros(rows, cols, h.state_dtype),
             space,
         }
     }
@@ -146,20 +147,18 @@ impl MomentEngine for AdamEngine {
                 out.reuse_shape(gp.rows, gp.cols);
                 // Fused pass: V EMA + bias correction + m̂/√v̂ — the same f32
                 // expressions, in the same order, as the allocating
-                // `hadamard`/`ema_inplace`/`zip` chain in `direction`.
+                // `hadamard`/`ema_inplace`/`zip` chain in `direction`. The
+                // consumer closure sees V's stored (read-back) value, so
+                // bf16 storage keeps the two paths bitwise equal too.
                 {
                     let _span = crate::telemetry::span("engine.moment", "engine");
-                    for (((vi, &gi), &mi), oi) in self
-                        .v
-                        .data
-                        .iter_mut()
-                        .zip(&gp.data)
-                        .zip(&self.m.data)
-                        .zip(out.data.iter_mut())
-                    {
-                        *vi = h.beta2 * *vi + ob2 * (gi * gi);
-                        *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
-                    }
+                    let (beta2, eps) = (h.beta2, h.eps);
+                    let (gd, md) = (&gp.data, &self.m.data);
+                    let od = &mut out.data;
+                    self.v.ema_then(
+                        |i, vi| beta2 * vi + ob2 * (gd[i] * gd[i]),
+                        |i, vi| od[i] = (md[i] / bc1) / ((vi / bc2).max(0.0).sqrt() + eps),
+                    );
                 }
                 if !identity {
                     let _span = crate::telemetry::span("engine.project_back", "engine");
@@ -181,17 +180,13 @@ impl MomentEngine for AdamEngine {
                 let inv_bc1 = 1.0 / bc1;
                 {
                     let _span = crate::telemetry::span("engine.moment", "engine");
-                    for (((vi, &gi), &mi), ni) in self
-                        .v
-                        .data
-                        .iter_mut()
-                        .zip(&ws.rot_g.data)
-                        .zip(&ws.rot_m.data)
-                        .zip(ws.nrot.data.iter_mut())
-                    {
-                        *vi = h.beta2 * *vi + ob2 * (gi * gi);
-                        *ni = (mi * inv_bc1) / ((*vi / bc2).max(0.0).sqrt() + h.eps);
-                    }
+                    let (beta2, eps) = (h.beta2, h.eps);
+                    let (gd, md) = (&ws.rot_g.data, &ws.rot_m.data);
+                    let nd = &mut ws.nrot.data;
+                    self.v.ema_then(
+                        |i, vi| beta2 * vi + ob2 * (gd[i] * gd[i]),
+                        |i, vi| nd[i] = (md[i] * inv_bc1) / ((vi / bc2).max(0.0).sqrt() + eps),
+                    );
                 }
                 let _span = crate::telemetry::span("engine.project_back", "engine");
                 basis.project_back_into(&ws.nrot, &mut ws.dir, &mut ws.scratch);
@@ -215,9 +210,10 @@ impl MomentEngine for AdamEngine {
                 self.m.ema_inplace(gp, h.beta1);
                 let g2 = gp.hadamard(gp);
                 self.v.ema_inplace(&g2, h.beta2);
+                let v = self.v.to_matrix();
                 let dir = self
                     .m
-                    .zip(&self.v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps));
+                    .zip(&v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps));
                 if basis.is_identity() {
                     dir
                 } else {
@@ -234,8 +230,8 @@ impl MomentEngine for AdamEngine {
                 let m_hat = m_rot.scale(1.0 / bc1);
                 let g2 = g_rot.hadamard(&g_rot);
                 self.v.ema_inplace(&g2, h.beta2);
-                let n_rot =
-                    m_hat.zip(&self.v, |mi, vi| mi / ((vi / bc2).max(0.0).sqrt() + h.eps));
+                let v = self.v.to_matrix();
+                let n_rot = m_hat.zip(&v, |mi, vi| mi / ((vi / bc2).max(0.0).sqrt() + h.eps));
                 basis.project_back(&n_rot)
             }
         }
@@ -250,11 +246,11 @@ impl MomentEngine for AdamEngine {
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.numel() + self.v.numel()) * 4
+        self.m.numel() * 4 + self.v.state_bytes()
     }
 
     fn export(&self) -> EngineState {
-        EngineState { momentum: self.m.clone(), second: vec![self.v.clone()] }
+        EngineState { momentum: self.m.clone(), second: vec![self.v.to_matrix()] }
     }
 
     fn import(
@@ -263,7 +259,8 @@ impl MomentEngine for AdamEngine {
         it: &mut dyn Iterator<Item = Matrix>,
     ) -> anyhow::Result<()> {
         self.m = momentum;
-        self.v = it.next().ok_or_else(|| anyhow::anyhow!("adam engine missing v"))?;
+        let v = it.next().ok_or_else(|| anyhow::anyhow!("adam engine missing v"))?;
+        self.v = StateMatrix::from_matrix(&v, self.h.state_dtype);
         Ok(())
     }
 }
@@ -279,11 +276,13 @@ impl MomentEngine for AdamEngine {
 pub struct AdafactorEngine {
     h: Hyper,
     pub m: Matrix,
-    /// Row second-moment EMA (m×1) — `A` in Adafactor's Algorithm 2.
-    pub a: Vec<f32>,
-    /// Column second-moment EMA (1×n) — `C`.
-    pub c: Vec<f32>,
-    pub v_1d: Option<Matrix>,
+    /// Row second-moment EMA (m×1) — `A` in Adafactor's Algorithm 2. Stored
+    /// per [`Hyper::state_dtype`] (f32 or bf16).
+    pub a: StateVec,
+    /// Column second-moment EMA (1×n) — `C`. Stored per `state_dtype`.
+    pub c: StateVec,
+    /// Degenerate (vector) fallback V — stored per `state_dtype`.
+    pub v_1d: Option<StateMatrix>,
     pub space: MomentumSpace,
 }
 
@@ -293,10 +292,10 @@ impl AdafactorEngine {
         Self {
             h: h.clone(),
             m: Matrix::zeros(rows, cols),
-            a: vec![0.0; rows],
-            c: vec![0.0; cols],
+            a: StateVec::zeros(rows, h.state_dtype),
+            c: StateVec::zeros(cols, h.state_dtype),
             v_1d: (is_1d && space == MomentumSpace::InBasis)
-                .then(|| Matrix::zeros(rows, cols)),
+                .then(|| StateMatrix::zeros(rows, cols, h.state_dtype)),
             space,
         }
     }
@@ -306,16 +305,14 @@ impl AdafactorEngine {
     fn factored_dir(&mut self, g2: &Matrix, m_hat: &Matrix, bc2: f32) -> Matrix {
         let rows = g2.row_sums();
         let cols = g2.col_sums();
-        for (ai, ri) in self.a.iter_mut().zip(&rows) {
-            *ai = self.h.beta2 * *ai + (1.0 - self.h.beta2) * ri;
-        }
-        for (ci, cj) in self.c.iter_mut().zip(&cols) {
-            *ci = self.h.beta2 * *ci + (1.0 - self.h.beta2) * cj;
-        }
+        let beta2 = self.h.beta2;
+        let ob2 = 1.0 - beta2;
+        self.a.ema_update(|i, ai| beta2 * ai + ob2 * rows[i]);
+        self.c.ema_update(|i, ci| beta2 * ci + ob2 * cols[i]);
         // Bias-correct A and C; the ΣA normalization makes the corrections
         // cancel except through ε, but we keep them for parity with Adam.
-        let a_hat: Vec<f32> = self.a.iter().map(|&x| x / bc2).collect();
-        let c_hat: Vec<f32> = self.c.iter().map(|&x| x / bc2).collect();
+        let a_hat: Vec<f32> = self.a.iter_decoded().map(|x| x / bc2).collect();
+        let c_hat: Vec<f32> = self.c.iter_decoded().map(|x| x / bc2).collect();
         factored_normalize(m_hat, &a_hat, &c_hat, self.h.eps)
     }
 }
@@ -344,16 +341,12 @@ impl MomentEngine for AdafactorEngine {
                     // fused exactly like `AdamEngine::direction_into`.
                     out.reuse_shape(gp.rows, gp.cols);
                     let ob2 = 1.0 - beta2;
-                    for (((vi, &gi), &mi), oi) in v
-                        .data
-                        .iter_mut()
-                        .zip(&gp.data)
-                        .zip(&self.m.data)
-                        .zip(out.data.iter_mut())
-                    {
-                        *vi = beta2 * *vi + ob2 * (gi * gi);
-                        *oi = (mi / bc1) / ((*vi / bc2).max(0.0).sqrt() + eps);
-                    }
+                    let (gd, md) = (&gp.data, &self.m.data);
+                    let od = &mut out.data;
+                    v.ema_then(
+                        |i, vi| beta2 * vi + ob2 * (gd[i] * gd[i]),
+                        |i, vi| od[i] = (md[i] / bc1) / ((vi / bc2).max(0.0).sqrt() + eps),
+                    );
                 } else {
                     factored_dir_into(
                         &mut self.a,
@@ -427,8 +420,9 @@ impl MomentEngine for AdafactorEngine {
                     // Degenerate (vector) case: plain Adam second moment.
                     let g2 = gp.hadamard(gp);
                     v.ema_inplace(&g2, h.beta2);
+                    let vm = v.to_matrix();
                     self.m
-                        .zip(v, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps))
+                        .zip(&vm, |mi, vi| (mi / bc1) / ((vi / bc2).max(0.0).sqrt() + h.eps))
                 } else {
                     let g2 = gp.hadamard(gp);
                     let m_hat = self.m.scale(1.0 / bc1);
@@ -464,18 +458,18 @@ impl MomentEngine for AdafactorEngine {
     }
 
     fn state_bytes(&self) -> usize {
-        let factored = (self.a.len() + self.c.len()) * 4;
-        let v1d = self.v_1d.as_ref().map(|v| v.numel() * 4).unwrap_or(0);
+        let factored = self.a.state_bytes() + self.c.state_bytes();
+        let v1d = self.v_1d.as_ref().map(|v| v.state_bytes()).unwrap_or(0);
         self.m.numel() * 4 + factored + v1d
     }
 
     fn export(&self) -> EngineState {
         let mut second = vec![
-            Matrix::from_vec(1, self.a.len(), self.a.clone()),
-            Matrix::from_vec(1, self.c.len(), self.c.clone()),
+            Matrix::from_vec(1, self.a.len(), self.a.to_vec()),
+            Matrix::from_vec(1, self.c.len(), self.c.to_vec()),
         ];
         if let Some(v) = &self.v_1d {
-            second.push(v.clone());
+            second.push(v.to_matrix());
         }
         EngineState { momentum: self.m.clone(), second }
     }
@@ -486,11 +480,13 @@ impl MomentEngine for AdafactorEngine {
         it: &mut dyn Iterator<Item = Matrix>,
     ) -> anyhow::Result<()> {
         self.m = momentum;
-        self.a = it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing a"))?.data;
-        self.c = it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing c"))?.data;
+        let a = it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing a"))?;
+        self.a.assign_from(&a.data);
+        let c = it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing c"))?;
+        self.c.assign_from(&c.data);
         if self.v_1d.is_some() {
-            self.v_1d =
-                Some(it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing v_1d"))?);
+            let v = it.next().ok_or_else(|| anyhow::anyhow!("adafactor missing v_1d"))?;
+            self.v_1d = Some(StateMatrix::from_matrix(&v, self.h.state_dtype));
         }
         Ok(())
     }

@@ -57,6 +57,7 @@
 pub mod basis;
 pub mod engine;
 pub mod spec;
+pub mod state;
 pub mod tensor_basis;
 pub mod workspace;
 
@@ -66,6 +67,7 @@ pub use engine::{
     factored_normalize, AdafactorEngine, AdamEngine, AnyEngine, InverseRootEngine, MomentumSpace,
 };
 pub use spec::{BasisSpec, CompositionSpec, EngineSpec, GraftSpec, Sided};
+pub use state::{StateMatrix, StateVec};
 pub use workspace::{Scratch, Workspace};
 
 use std::sync::Arc;
@@ -264,6 +266,12 @@ pub trait MomentEngine: Send {
 /// on the same gradient stream. Keeps the scalar step size adapting every
 /// step even while the basis ages — the same argument that lets SOAP
 /// tolerate a stale basis.
+///
+/// Grafting state is deliberately **excluded from `Hyper::state_dtype`**
+/// and always stored f32: its `V` feeds a norm whose f64 accumulation is
+/// bitwise-pinned against `AdamW::direction`, and grafting only ships with
+/// Shampoo presets where the Kronecker factors — not this buffer — dominate
+/// the §7.2 table.
 pub struct Graft {
     /// Grafting can be carried (state allocated, exported) but inactive —
     /// the pre-refactor Shampoo always held `V_graft` even with

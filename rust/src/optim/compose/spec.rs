@@ -13,14 +13,15 @@ use super::presets;
 use super::{AnyBasis, AnyEngine, Composed, Graft};
 use super::{AdafactorEngine, AdamEngine, EigenBasis, GradSvdBasis, IdentityBasis, MomentumSpace};
 use crate::linalg::TensorShape;
-use crate::optim::hyper::{FreqSchedule, Hyper};
+use crate::optim::hyper::{FreqSchedule, Hyper, StateDtype};
 use crate::optim::{LayerOptimizer, OptKind};
 
 /// One-line grammar summary, embedded in parse errors and `--help`.
 pub const GRAMMAR_HELP: &str = "basis=<identity|eigen[:one-sided|:two-sided]|svd>,\
 inner=<adam|adafactor|shampoo>[,graft=<adam|none>]\
 [,adam-warmup=<steps>][,precond-warmup=<steps>]\
-[,precond-freq=<f|f@start;f@start…>][,precondition-1d=<true|false>]";
+[,precond-freq=<f|f@start;f@start…>][,precondition-1d=<true|false>]\
+[,state-dtype=<f32|bf16>]";
 
 /// Side selection for an eigenbasis spec. `Inherit` defers to
 /// `Hyper::one_sided` (the `--one-sided` flag).
@@ -76,6 +77,9 @@ pub struct CompositionSpec {
     /// Precondition rank-1 params instead of the AdamW fallback
     /// (`Hyper::precondition_1d`). `None` inherits.
     pub precondition_1d: Option<bool>,
+    /// Storage dtype for the dtype-routed optimizer state buffers
+    /// (`Hyper::state_dtype`). `None` inherits.
+    pub state_dtype: Option<StateDtype>,
 }
 
 impl CompositionSpec {
@@ -88,6 +92,7 @@ impl CompositionSpec {
         let mut precond_warmup: Option<u64> = None;
         let mut precond_freq: Option<FreqSchedule> = None;
         let mut precondition_1d: Option<bool> = None;
+        let mut state_dtype: Option<StateDtype> = None;
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
             let (key, value) = part.split_once('=').ok_or_else(|| {
                 anyhow::anyhow!(
@@ -166,6 +171,9 @@ impl CompositionSpec {
                         ),
                     });
                 }
+                "state-dtype" | "state_dtype" => {
+                    state_dtype = Some(StateDtype::parse(value.trim())?);
+                }
                 other => anyhow::bail!(
                     "unknown composition key '{other}': expected {GRAMMAR_HELP}"
                 ),
@@ -173,8 +181,16 @@ impl CompositionSpec {
         }
         let inner = inner
             .ok_or_else(|| anyhow::anyhow!("composition spec needs inner=…; {GRAMMAR_HELP}"))?;
-        let spec =
-            Self { basis, inner, graft, adam_warmup, precond_warmup, precond_freq, precondition_1d };
+        let spec = Self {
+            basis,
+            inner,
+            graft,
+            adam_warmup,
+            precond_warmup,
+            precond_freq,
+            precondition_1d,
+            state_dtype,
+        };
         spec.validate()?;
         Ok(spec)
     }
@@ -254,6 +270,9 @@ impl CompositionSpec {
         if let Some(on) = self.precondition_1d {
             h.precondition_1d = on;
         }
+        if let Some(d) = self.state_dtype {
+            h.state_dtype = d;
+        }
     }
 
     /// The preset this spec is exactly equivalent to, if any. Canonical specs
@@ -308,6 +327,9 @@ impl CompositionSpec {
         }
         if let Some(on) = self.precondition_1d {
             s.push_str(&format!(",precondition-1d={on}"));
+        }
+        if let Some(d) = self.state_dtype {
+            s.push_str(&format!(",state-dtype={}", d.name()));
         }
         s
     }
@@ -540,6 +562,29 @@ mod tests {
         ] {
             assert!(CompositionSpec::parse(bad).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn state_dtype_key_parses_applies_and_roundtrips() {
+        let s = CompositionSpec::parse("basis=eigen,inner=adam,state-dtype=bf16").unwrap();
+        assert_eq!(s.state_dtype, Some(StateDtype::Bf16));
+        let mut h = Hyper::default();
+        s.apply(&mut h);
+        assert_eq!(h.state_dtype, StateDtype::Bf16);
+        // spec_string → parse is lossless.
+        let back = CompositionSpec::parse(&s.spec_string()).unwrap();
+        assert_eq!(back, s);
+        // Omitted key inherits the config-set value.
+        let s = CompositionSpec::parse("basis=eigen,inner=adam").unwrap();
+        assert_eq!(s.state_dtype, None);
+        let mut h = Hyper::default().with_state_dtype(StateDtype::Bf16);
+        s.apply(&mut h);
+        assert_eq!(h.state_dtype, StateDtype::Bf16);
+        // A malformed dtype is a named error.
+        let e = CompositionSpec::parse("basis=eigen,inner=adam,state-dtype=fp8")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("f32") && e.contains("bf16"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Dtype-generic storage for slow-moving optimizer state (`--state-dtype`).
+//!
+//! [`StateMatrix`] / [`StateVec`] hold the Kronecker-factor EMAs and the
+//! Adam/Adafactor second moments either as plain f32 (the bitwise-pinned
+//! default) or as bf16 (`u16` = the top half of the f32 bit pattern),
+//! halving their `state_bytes` (paper §7.2 accounting). **Accumulation is
+//! always f32**: every update decodes the stored value, evaluates the exact
+//! same f32 EMA expression the f32 path uses, then rounds the result back
+//! to storage (round-to-nearest-even).
+//!
+//! # Read-back semantics
+//!
+//! Consumers in the same pass read the *re-decoded stored value*, not the
+//! pre-rounding f32 — [`StateMatrix::ema_then`] hands its `use_v` callback
+//! the value a fresh decode would produce. This keeps the fused
+//! (`direction_into`) and allocating-reference (`direction`) paths bitwise
+//! identical under **both** dtypes, and makes checkpoint resume exact: the
+//! f32 wire tensors a bf16 buffer exports decode from the bf16 grid, so
+//! re-encoding them on import reproduces the identical `u16` words.
+//!
+//! In the `F32` arms every expression is written to match the pre-existing
+//! `Matrix` code character for character (e.g. [`StateMatrix::ema_inplace`]
+//! vs `Matrix::ema_inplace`), so the default dtype stays bitwise-pinned by
+//! the golden trajectory tests.
+
+use crate::linalg::Matrix;
+use crate::optim::hyper::StateDtype;
+
+/// Decode a bf16 word: exact widening (the bf16 value set is a subset of
+/// f32), so decode ∘ encode ∘ decode ≡ decode.
+#[inline]
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Encode an f32 to bf16 with round-to-nearest-even. NaN keeps its sign/
+/// payload top bits with the quiet bit forced (truncation alone could turn
+/// a signaling-NaN payload into Inf); overflow rounds to ±Inf like any IEEE
+/// narrowing.
+#[inline]
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let bias = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + bias) >> 16) as u16
+}
+
+/// A `rows×cols` state buffer stored at the run's [`StateDtype`].
+#[derive(Clone, Debug)]
+pub enum StateMatrix {
+    F32(Matrix),
+    Bf16 { rows: usize, cols: usize, data: Vec<u16> },
+}
+
+impl StateMatrix {
+    pub fn zeros(rows: usize, cols: usize, dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => StateMatrix::F32(Matrix::zeros(rows, cols)),
+            StateDtype::Bf16 => StateMatrix::Bf16 { rows, cols, data: vec![0; rows * cols] },
+        }
+    }
+
+    /// Encode an f32 matrix at the requested dtype (checkpoint import, basis
+    /// init).
+    pub fn from_matrix(m: &Matrix, dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => StateMatrix::F32(m.clone()),
+            StateDtype::Bf16 => StateMatrix::Bf16 {
+                rows: m.rows,
+                cols: m.cols,
+                data: m.data.iter().map(|&x| bf16_encode(x)).collect(),
+            },
+        }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match self {
+            StateMatrix::F32(_) => StateDtype::F32,
+            StateMatrix::Bf16 { .. } => StateDtype::Bf16,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            StateMatrix::F32(m) => m.rows,
+            StateMatrix::Bf16 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            StateMatrix::F32(m) => m.cols,
+            StateMatrix::Bf16 { cols, .. } => *cols,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// Persistent bytes at the storage dtype — the §7.2 accounting number.
+    pub fn state_bytes(&self) -> usize {
+        self.numel() * self.dtype().bytes()
+    }
+
+    /// Decode to a fresh f32 matrix (allocating — refresh-time and
+    /// reference paths only, never the steady-state step).
+    pub fn to_matrix(&self) -> Matrix {
+        match self {
+            StateMatrix::F32(m) => m.clone(),
+            StateMatrix::Bf16 { rows, cols, data } => Matrix {
+                rows: *rows,
+                cols: *cols,
+                data: data.iter().map(|&b| bf16_decode(b)).collect(),
+            },
+        }
+    }
+
+    /// Overwrite from an f32 matrix, re-encoding at the storage dtype.
+    /// Shape-preserving and allocation-free once sized.
+    pub fn assign_from(&mut self, src: &Matrix) {
+        match self {
+            StateMatrix::F32(m) => {
+                m.rows = src.rows;
+                m.cols = src.cols;
+                m.data.clear();
+                m.data.extend_from_slice(&src.data);
+            }
+            StateMatrix::Bf16 { rows, cols, data } => {
+                *rows = src.rows;
+                *cols = src.cols;
+                data.clear();
+                data.extend(src.data.iter().map(|&x| bf16_encode(x)));
+            }
+        }
+    }
+
+    /// EMA into storage: `self ← beta·self + (1−beta)·other`, f32 math on
+    /// the decoded value. The `F32` arm is the exact `Matrix::ema_inplace`
+    /// expression.
+    pub fn ema_inplace(&mut self, other: &Matrix, beta: f32) {
+        let ob = 1.0 - beta;
+        match self {
+            StateMatrix::F32(m) => {
+                for (a, &b) in m.data.iter_mut().zip(&other.data) {
+                    *a = beta * *a + ob * b;
+                }
+            }
+            StateMatrix::Bf16 { data, .. } => {
+                for (a, &b) in data.iter_mut().zip(&other.data) {
+                    *a = bf16_encode(beta * bf16_decode(*a) + ob * b);
+                }
+            }
+        }
+    }
+
+    /// Fused per-element update + same-pass consumption: for each index,
+    /// `ema(i, stored_i)` produces the new value, which is written to
+    /// storage; `use_v(i, read_back_i)` then receives the value a fresh
+    /// decode of storage yields (for f32 the two are the same number).
+    /// Allocation-free — this is the steady-state moment-kernel path.
+    pub fn ema_then(&mut self, mut ema: impl FnMut(usize, f32) -> f32, mut use_v: impl FnMut(usize, f32)) {
+        match self {
+            StateMatrix::F32(m) => {
+                for (i, v) in m.data.iter_mut().enumerate() {
+                    *v = ema(i, *v);
+                    use_v(i, *v);
+                }
+            }
+            StateMatrix::Bf16 { data, .. } => {
+                for (i, b) in data.iter_mut().enumerate() {
+                    *b = bf16_encode(ema(i, bf16_decode(*b)));
+                    use_v(i, bf16_decode(*b));
+                }
+            }
+        }
+    }
+
+    /// All stored values finite? (bf16 decodes first — Inf/NaN survive the
+    /// encoding, so the health check sees them.)
+    pub fn is_finite(&self) -> bool {
+        match self {
+            StateMatrix::F32(m) => m.data.iter().all(|x| x.is_finite()),
+            StateMatrix::Bf16 { data, .. } => data.iter().all(|&b| bf16_decode(b).is_finite()),
+        }
+    }
+}
+
+/// A 1-D state buffer (Adafactor row/column accumulators) at the run's
+/// [`StateDtype`].
+#[derive(Clone, Debug)]
+pub enum StateVec {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
+impl StateVec {
+    pub fn zeros(len: usize, dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => StateVec::F32(vec![0.0; len]),
+            StateDtype::Bf16 => StateVec::Bf16(vec![0; len]),
+        }
+    }
+
+    pub fn from_slice(vals: &[f32], dtype: StateDtype) -> Self {
+        match dtype {
+            StateDtype::F32 => StateVec::F32(vals.to_vec()),
+            StateDtype::Bf16 => StateVec::Bf16(vals.iter().map(|&x| bf16_encode(x)).collect()),
+        }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match self {
+            StateVec::F32(_) => StateDtype::F32,
+            StateVec::Bf16(_) => StateDtype::Bf16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StateVec::F32(v) => v.len(),
+            StateVec::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.len() * self.dtype().bytes()
+    }
+
+    /// Per-element update into storage (decode → `f` → encode), matching
+    /// [`StateMatrix::ema_then`] without a consumer. Allocation-free.
+    pub fn ema_update(&mut self, mut f: impl FnMut(usize, f32) -> f32) {
+        match self {
+            StateVec::F32(v) => {
+                for (i, a) in v.iter_mut().enumerate() {
+                    *a = f(i, *a);
+                }
+            }
+            StateVec::Bf16(v) => {
+                for (i, b) in v.iter_mut().enumerate() {
+                    *b = bf16_encode(f(i, bf16_decode(*b)));
+                }
+            }
+        }
+    }
+
+    /// Iterate the decoded (read-back) values. Allocation-free.
+    pub fn iter_decoded(&self) -> impl Iterator<Item = f32> + '_ {
+        // Two arms, one iterator type: decode is the identity on f32 bits.
+        let (f, b) = match self {
+            StateVec::F32(v) => (Some(v.iter().copied()), None),
+            StateVec::Bf16(v) => (None, Some(v.iter().map(|&x| bf16_decode(x)))),
+        };
+        f.into_iter().flatten().chain(b.into_iter().flatten())
+    }
+
+    /// Decoded copy (allocating — export/reference paths only).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.iter_decoded().collect()
+    }
+
+    /// Overwrite from f32 values, re-encoding at the storage dtype.
+    pub fn assign_from(&mut self, vals: &[f32]) {
+        match self {
+            StateVec::F32(v) => {
+                v.clear();
+                v.extend_from_slice(vals);
+            }
+            StateVec::Bf16(v) => {
+                v.clear();
+                v.extend(vals.iter().map(|&x| bf16_encode(x)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_codec_exact_on_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, -3.5, 256.0, 0.00390625, f32::INFINITY] {
+            let rt = bf16_decode(bf16_encode(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "{x} not preserved (got {rt})");
+        }
+        assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+        assert!(bf16_decode(bf16_encode(f32::NEG_INFINITY)).is_infinite());
+        // Idempotence: a decoded value re-encodes to the identical word.
+        let mut rng = Rng::new(11);
+        let mut xs = vec![0.0f32; 256];
+        rng.fill_normal(&mut xs, 3.0);
+        for x in xs {
+            let w = bf16_encode(x);
+            assert_eq!(bf16_encode(bf16_decode(w)), w, "encode not idempotent for {x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 = 0x3F800000; the next bf16 up is 0x3F81 (1.0078125). The
+        // halfway point 0x3F808000 must round to even (0x3F80), one ULP
+        // above it must round up.
+        assert_eq!(bf16_encode(f32::from_bits(0x3F80_8000)), 0x3F80);
+        assert_eq!(bf16_encode(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // Halfway above an odd word rounds up to the even neighbor.
+        assert_eq!(bf16_encode(f32::from_bits(0x3F81_8000)), 0x3F82);
+        assert_eq!(bf16_encode(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+    }
+
+    #[test]
+    fn bf16_relative_error_is_bounded() {
+        // RNE to an 8-bit mantissa: relative error ≤ 2⁻⁹ for normal values.
+        let mut rng = Rng::new(12);
+        let mut xs = vec![0.0f32; 4096];
+        rng.fill_normal(&mut xs, 10.0);
+        for x in xs {
+            let err = (bf16_decode(bf16_encode(x)) - x).abs();
+            assert!(err <= x.abs() / 512.0 + f32::MIN_POSITIVE, "|Δ|={err} for {x}");
+        }
+    }
+
+    #[test]
+    fn f32_arm_matches_matrix_ema_bitwise() {
+        let mut rng = Rng::new(13);
+        let mut reference = Matrix::randn(&mut rng, 7, 5, 1.0);
+        let mut sm = StateMatrix::from_matrix(&reference, StateDtype::F32);
+        for _ in 0..10 {
+            let obs = Matrix::randn(&mut rng, 7, 5, 1.0);
+            reference.ema_inplace(&obs, 0.95);
+            sm.ema_inplace(&obs, 0.95);
+        }
+        assert_eq!(sm.to_matrix().data, reference.data, "F32 arm drifted from Matrix");
+    }
+
+    #[test]
+    fn bf16_factor_ema_error_bound() {
+        // An EMA of random PSD-ish observations: bf16 storage must track the
+        // f32 trajectory within a small relative Frobenius error — each
+        // write rounds at 2⁻⁹, and the EMA keeps old rounding errors from
+        // accumulating (they decay geometrically).
+        let mut rng = Rng::new(14);
+        let mut f32_ema = Matrix::zeros(8, 8);
+        let mut bf16_ema = StateMatrix::zeros(8, 8, StateDtype::Bf16);
+        for _ in 0..50 {
+            let g = Matrix::randn(&mut rng, 8, 4, 1.0);
+            let obs = g.matmul_nt(&g);
+            f32_ema.ema_inplace(&obs, 0.95);
+            bf16_ema.ema_inplace(&obs, 0.95);
+        }
+        let dec = bf16_ema.to_matrix();
+        let num = dec.sub(&f32_ema).frob_norm();
+        let den = f32_ema.frob_norm().max(1e-12);
+        let rel = num / den;
+        assert!(rel < 0.01, "bf16 factor EMA drifted {rel} from f32");
+        assert!(rel > 0.0, "bf16 EMA suspiciously exact — encoding inert?");
+    }
+
+    #[test]
+    fn ema_then_hands_consumer_the_read_back_value() {
+        for dtype in [StateDtype::F32, StateDtype::Bf16] {
+            let mut sm = StateMatrix::zeros(2, 3, dtype);
+            let mut seen = Vec::new();
+            sm.ema_then(|i, v| 0.9 * v + 0.1 * (i as f32 + 0.123), |_, v| seen.push(v));
+            assert_eq!(seen, sm.to_matrix().data, "{dtype:?}: consumer saw pre-rounding value");
+        }
+    }
+
+    #[test]
+    fn state_bytes_halve_under_bf16() {
+        let m = StateMatrix::zeros(16, 16, StateDtype::F32);
+        let b = StateMatrix::zeros(16, 16, StateDtype::Bf16);
+        assert_eq!(m.state_bytes(), 16 * 16 * 4);
+        assert_eq!(b.state_bytes(), 16 * 16 * 2);
+        let v = StateVec::zeros(10, StateDtype::F32);
+        let w = StateVec::zeros(10, StateDtype::Bf16);
+        assert_eq!(v.state_bytes(), 40);
+        assert_eq!(w.state_bytes(), 20);
+    }
+
+    #[test]
+    fn export_import_round_trip_is_exact_per_dtype() {
+        let mut rng = Rng::new(15);
+        for dtype in [StateDtype::F32, StateDtype::Bf16] {
+            let mut sm = StateMatrix::zeros(5, 4, dtype);
+            let obs = Matrix::randn(&mut rng, 5, 4, 2.0);
+            sm.ema_inplace(&obs, 0.5);
+            // Checkpoint wire: decode to f32, re-encode on import.
+            let wire = sm.to_matrix();
+            let back = StateMatrix::from_matrix(&wire, dtype);
+            match (&sm, &back) {
+                (StateMatrix::F32(a), StateMatrix::F32(b)) => assert_eq!(a.data, b.data),
+                (StateMatrix::Bf16 { data: a, .. }, StateMatrix::Bf16 { data: b, .. }) => {
+                    assert_eq!(a, b, "bf16 words changed across the f32 wire")
+                }
+                _ => panic!("dtype changed in round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_values_survive_encoding_for_health_checks() {
+        let mut src = Matrix::zeros(2, 2);
+        src.data[3] = f32::NAN;
+        let sm = StateMatrix::from_matrix(&src, StateDtype::Bf16);
+        assert!(!sm.is_finite(), "NaN lost in bf16 encode");
+        let mut src = Matrix::zeros(2, 2);
+        src.data[0] = f32::INFINITY;
+        assert!(!StateMatrix::from_matrix(&src, StateDtype::Bf16).is_finite());
+        assert!(StateMatrix::zeros(3, 3, StateDtype::Bf16).is_finite());
+    }
+
+    #[test]
+    fn state_vec_update_and_iter_round_trip() {
+        for dtype in [StateDtype::F32, StateDtype::Bf16] {
+            let mut v = StateVec::zeros(4, dtype);
+            v.ema_update(|i, a| 0.9 * a + 0.1 * (i as f32 + 1.5));
+            let vals: Vec<f32> = v.iter_decoded().collect();
+            assert_eq!(vals.len(), 4);
+            assert_eq!(vals, v.to_vec());
+            // assign_from re-encodes exactly (values already on the grid).
+            let mut w = StateVec::zeros(4, dtype);
+            w.assign_from(&vals);
+            assert_eq!(w.to_vec(), vals, "{dtype:?} wire round trip drifted");
+        }
+    }
+}

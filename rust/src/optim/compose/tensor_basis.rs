@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::basis::EigenFlavor;
+use super::state::StateMatrix;
 use super::workspace::{Scratch, Workspace};
 use super::{Basis, BasisState, StateLayout};
 use crate::linalg::tensor::{mode_apply_into, mode_gram, mode_gram_into};
@@ -47,7 +48,8 @@ pub struct TensorEigenBasis {
     /// The (squeezed, merged) mode sizes this basis preconditions over.
     dims: Vec<usize>,
     /// Per-mode factor EMAs; `None` = that mode is identity (dim-capped).
-    pub factors: Vec<Option<Matrix>>,
+    /// Stored per [`Hyper::state_dtype`] (f32 or bf16).
+    pub factors: Vec<Option<StateMatrix>>,
     /// Rotation: eigenvector bases `Q_k` (None until first init).
     /// InverseRoot: cached `L_k^{-1/e}` (identity at start).
     pub qs: Vec<Option<Matrix>>,
@@ -80,7 +82,7 @@ impl TensorEigenBasis {
         let factors = dims
             .iter()
             .zip(&active)
-            .map(|(&d, &a)| a.then(|| Matrix::zeros(d, d)))
+            .map(|(&d, &a)| a.then(|| StateMatrix::zeros(d, d, h.state_dtype)))
             .collect();
         let qs: Vec<Option<Matrix>> = match flavor {
             EigenFlavor::Rotation => vec![None; dims.len()],
@@ -138,9 +140,11 @@ impl TensorEigenBasis {
             if self.factors[k].is_none() {
                 continue;
             }
+            // Decompose the exact f32 gram, then store it at the state dtype
+            // (the basis itself stays full precision either way).
             let f = mode_gram(&g.data, &self.dims, k);
             let (_, v) = eigh(&f);
-            self.factors[k] = Some(f);
+            self.factors[k] = Some(StateMatrix::from_matrix(&f, self.h.state_dtype));
             self.qs[k] = Some(v);
             self.mode_steps[k] = t;
         }
@@ -175,7 +179,7 @@ impl TensorEigenBasis {
     /// Bias-corrected snapshot of mode `k`'s factor at step `t`.
     fn corrected_factor(&self, k: usize, t: u64) -> Matrix {
         let bc = 1.0 - self.h.shampoo_beta.powi(t as i32);
-        self.factors[k].as_ref().expect("active mode has factor").scale(1.0 / bc)
+        self.factors[k].as_ref().expect("active mode has factor").to_matrix().scale(1.0 / bc)
     }
 
     /// One mode's inline refresh behind the numerical-health gate: a
@@ -185,15 +189,17 @@ impl TensorEigenBasis {
     /// installed. The caller guarantees `factors[k]` is active.
     fn refresh_mode_inline(&mut self, k: usize, t: u64) -> bool {
         let finite = |m: &Matrix| m.data.iter().all(|x| x.is_finite());
-        if !finite(self.factors[k].as_ref().expect("active mode has factor")) {
+        if !self.factors[k].as_ref().expect("active mode has factor").is_finite() {
             crate::telemetry::metrics::basis_rejected_total().inc();
             return false;
         }
         match self.flavor {
             EigenFlavor::Rotation => {
+                // Refresh-time decode (allocating is fine off the hot path).
+                let f = self.factors[k].as_ref().expect("checked").to_matrix();
                 let q_new = Self::rotation_refresh_one(
                     self.h.refresh,
-                    self.factors[k].as_ref().expect("checked"),
+                    &f,
                     self.qs[k].as_ref().expect("initialized before refresh"),
                 );
                 if !finite(&q_new) {
@@ -265,7 +271,7 @@ impl TensorEigenBasis {
             match self.flavor {
                 EigenFlavor::Rotation => {
                     let method = self.h.refresh;
-                    let f = self.factors[k].clone().expect("checked");
+                    let f = self.factors[k].as_ref().expect("checked").to_matrix();
                     let q = self.qs[k].clone().expect("initialized before refresh");
                     service.enqueue(
                         Arc::clone(handle),
@@ -559,7 +565,12 @@ impl Basis for TensorEigenBasis {
     fn state_bytes(&self) -> usize {
         let opt = |x: &Option<Matrix>| x.as_ref().map(|m| m.numel()).unwrap_or(0);
         let sum = |v: &[Option<Matrix>]| v.iter().map(opt).sum::<usize>();
-        (sum(&self.factors) + sum(&self.qs) + sum(&self.vecs)) * 4
+        let factors: usize = self
+            .factors
+            .iter()
+            .map(|f| f.as_ref().map(|m| m.state_bytes()).unwrap_or(0))
+            .sum();
+        factors + (sum(&self.qs) + sum(&self.vecs)) * 4
     }
 
     fn export(&self) -> BasisState {
@@ -578,7 +589,9 @@ impl Basis for TensorEigenBasis {
         let mut tensors = Vec::new();
         for k in 0..r {
             if let Some(f) = &self.factors[k] {
-                tensors.push(f.clone());
+                // bf16-stored factors decode onto the bf16 grid, so the f32
+                // wire round-trips the exact stored words on import.
+                tensors.push(f.to_matrix());
                 if let Some(q) = &self.qs[k] {
                     tensors.push(q.clone());
                 }
@@ -638,7 +651,7 @@ impl Basis for TensorEigenBasis {
                     f.cols,
                     self.dims[k]
                 );
-                self.factors[k] = Some(f);
+                self.factors[k] = Some(StateMatrix::from_matrix(&f, self.h.state_dtype));
                 self.qs[k] = if self.initialized || self.flavor == EigenFlavor::InverseRoot {
                     Some(next(format!("mode-{k} basis"))?)
                 } else {

@@ -91,6 +91,50 @@ impl GuardPolicy {
     }
 }
 
+/// Storage precision for the *slow-moving* optimizer state: Kronecker-factor
+/// EMAs (`L`/`R` and per-mode tensor factors) and Adam/Adafactor second
+/// moments. Accumulation is always f32 — bf16 affects only what is stored
+/// between steps (decode → f32 EMA → round-to-nearest-even encode), halving
+/// `state_bytes` for those buffers (§7.2 accounting). Momentum, grafting
+/// state, and eigenvector/root caches always stay f32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateDtype {
+    /// Full-precision storage (default) — the bitwise-pinned reference.
+    F32,
+    /// bf16 storage (u16 = top half of the f32 bits) with f32 accumulation.
+    /// Changes trajectories (each EMA write rounds to 8 mantissa bits), so
+    /// it is opt-in and tagged in checkpoints.
+    Bf16,
+}
+
+impl StateDtype {
+    /// Parse a CLI/config token: `f32` | `bf16`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => StateDtype::F32,
+            "bf16" | "bfloat16" => StateDtype::Bf16,
+            other => anyhow::bail!("unknown state dtype '{other}': expected f32 or bf16"),
+        })
+    }
+
+    /// Canonical token accepted back by [`Self::parse`] (config round-trip).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateDtype::F32 => "f32",
+            StateDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes per stored element — the single source of truth for
+    /// `state_bytes` accounting.
+    pub fn bytes(&self) -> usize {
+        match self {
+            StateDtype::F32 => 4,
+            StateDtype::Bf16 => 2,
+        }
+    }
+}
+
 /// Maximum number of pieces a [`FreqSchedule`] can hold. Fixed so the
 /// schedule stays `Copy` and can ride inside `CompositionSpec` (which the
 /// `Copy` `OptKind` embeds).
@@ -274,6 +318,10 @@ pub struct Hyper {
     /// non-finite. Default [`GuardPolicy::SkipStep`]: drop the poisoned
     /// update, keep the run alive.
     pub guard: GuardPolicy,
+    /// Storage precision for factor EMAs and second moments
+    /// (`--state-dtype`). Default [`StateDtype::F32`]; bf16 halves their
+    /// `state_bytes` at the cost of rounding each EMA write.
+    pub state_dtype: StateDtype,
 }
 
 impl Default for Hyper {
@@ -303,6 +351,7 @@ impl Default for Hyper {
             adam_warmup_steps: 0,
             precondition_warmup: 0,
             guard: GuardPolicy::SkipStep,
+            state_dtype: StateDtype::F32,
         }
     }
 }
@@ -374,6 +423,11 @@ impl Hyper {
     /// Non-finite gradient/direction response policy.
     pub fn with_guard(mut self, guard: GuardPolicy) -> Self {
         self.guard = guard;
+        self
+    }
+    /// Storage precision for factor EMAs and second moments.
+    pub fn with_state_dtype(mut self, d: StateDtype) -> Self {
+        self.state_dtype = d;
         self
     }
     /// Preconditioning frequency in force at step `t`: the schedule piece
@@ -534,6 +588,31 @@ mod tests {
         }
         for bad in ["", "klip", "clip:", "clip:-1", "clip:nan", "skipstep"] {
             assert!(GuardPolicy::parse(bad).is_err(), "token {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn state_dtype_parses_and_round_trips() {
+        assert_eq!(Hyper::default().state_dtype, StateDtype::F32);
+        assert_eq!(
+            Hyper::default().with_state_dtype(StateDtype::Bf16).state_dtype,
+            StateDtype::Bf16
+        );
+        for (token, want) in [
+            ("f32", StateDtype::F32),
+            ("FP32", StateDtype::F32),
+            ("float32", StateDtype::F32),
+            ("bf16", StateDtype::Bf16),
+            ("BFLOAT16", StateDtype::Bf16),
+        ] {
+            let got = StateDtype::parse(token).unwrap();
+            assert_eq!(got, want, "token {token:?}");
+            assert_eq!(StateDtype::parse(got.name()).unwrap(), got);
+        }
+        assert_eq!(StateDtype::F32.bytes(), 4);
+        assert_eq!(StateDtype::Bf16.bytes(), 2);
+        for bad in ["", "f16", "fp16", "half", "b16"] {
+            assert!(StateDtype::parse(bad).is_err(), "token {bad:?} must be rejected");
         }
     }
 }

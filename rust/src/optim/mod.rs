@@ -47,7 +47,7 @@ pub use adafactor::Adafactor;
 pub use adamw::AdamW;
 pub use compose::{Basis, Composed, CompositionSpec, DynComposed, Graft, MomentEngine};
 pub use galore::Galore;
-pub use hyper::{FreqSchedule, GuardPolicy, Hyper, RefreshMethod, RefreshMode};
+pub use hyper::{FreqSchedule, GuardPolicy, Hyper, RefreshMethod, RefreshMode, StateDtype};
 pub use schedule::Schedule;
 pub use shampoo::Shampoo;
 pub use soap::Soap;

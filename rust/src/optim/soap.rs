@@ -145,27 +145,52 @@ mod tests {
     fn space_usage_formulas_section_7_2() {
         // Full SOAP on m×n, m,n both preconditioned:
         // 2m² (L,Q_L) + 2n² (R,Q_R) + 2mn (M,V) held here (the paper's 3mn
-        // includes the gradient, which the optimizer does not own).
+        // includes the gradient, which the optimizer does not own). The
+        // per-buffer byte widths route through the state dtype: L/R and V
+        // follow `state_dtype.bytes()`, while M and the eigenbases stay f32.
+        use crate::optim::hyper::StateDtype;
         let (m, n) = (8usize, 6usize);
-        let full = Soap::new(m, n, Hyper { weight_decay: 0.0, ..Hyper::default() });
-        // ql/qr are allocated on first update; count post-init.
-        let mut w = Matrix::zeros(m, n);
-        let full = {
-            let mut rng = Rng::new(45);
+        let count = |h: Hyper, seed: u64| -> usize {
+            let mut w = Matrix::zeros(m, n);
+            let mut rng = Rng::new(seed);
             let g = Matrix::randn(&mut rng, m, n, 1.0);
-            let mut o = full;
+            let mut o = Soap::new(m, n, h);
+            // ql/qr are allocated on first update; count post-init.
             o.update(&mut w, &g, 1, 0.0);
-            o
+            o.state_bytes()
         };
-        assert_eq!(full.state_bytes(), (2 * m * m + 2 * n * n + 2 * m * n) * 4);
+        for dtype in [StateDtype::F32, StateDtype::Bf16] {
+            let b = dtype.bytes();
+            let h = Hyper { weight_decay: 0.0, state_dtype: dtype, ..Hyper::default() };
+            assert_eq!(
+                count(h, 45),
+                (m * m + n * n + m * n) * b + (m * m + n * n + m * n) * 4,
+                "full SOAP accounting wrong under {}",
+                dtype.name()
+            );
 
-        // One-sided + factorized: 2·min(m,n)² + mn + m + n.
-        let h = Hyper { one_sided: true, factorized: true, ..Hyper::default() };
-        let mut o = Soap::new(m, n, h);
-        let mut rng = Rng::new(46);
-        let g = Matrix::randn(&mut rng, m, n, 1.0);
-        o.update(&mut w, &g, 1, 0.0);
-        assert_eq!(o.state_bytes(), (2 * n * n + m * n + m + n) * 4);
+            // One-sided + factorized: L + Q_L at min(m,n)², M at mn f32,
+            // A + C at m + n in the state dtype.
+            let h = Hyper {
+                one_sided: true,
+                factorized: true,
+                state_dtype: dtype,
+                ..Hyper::default()
+            };
+            assert_eq!(
+                count(h, 46),
+                (n * n + m + n) * b + (n * n + m * n) * 4,
+                "factorized accounting wrong under {}",
+                dtype.name()
+            );
+        }
+        // The headline claim: bf16 halves the dtype-routed share exactly.
+        let h32 = Hyper { weight_decay: 0.0, ..Hyper::default() };
+        let h16 =
+            Hyper { weight_decay: 0.0, state_dtype: StateDtype::Bf16, ..Hyper::default() };
+        let (f32_bytes, bf16_bytes) = (count(h32, 45), count(h16, 45));
+        let fixed = (m * m + n * n + m * n) * 4; // Q_L, Q_R, M stay f32
+        assert_eq!(bf16_bytes - fixed, (f32_bytes - fixed) / 2);
     }
 
     #[test]
@@ -270,10 +295,10 @@ mod tests {
         let mut w = Matrix::zeros(4, 4);
         let g = Matrix::randn(&mut rng, 4, 4, 1.0);
         opt.update(&mut w, &g, 1, 0.01);
-        let v1 = opt.engine.as_adam().unwrap().v.clone();
+        let v1 = opt.engine.as_adam().unwrap().v.to_matrix();
         let g = Matrix::randn(&mut rng, 4, 4, 1.0);
         opt.update(&mut w, &g, 2, 0.01);
-        let v2 = opt.engine.as_adam().unwrap().v.clone();
+        let v2 = opt.engine.as_adam().unwrap().v.to_matrix();
         assert!(v1.max_abs_diff(&v2) > 0.0);
     }
 }

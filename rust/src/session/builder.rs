@@ -539,6 +539,7 @@ impl SessionBuilder {
                         hyper.precond_freq as u64,
                         (hyper.refresh_mode == RefreshMode::Async) as u64,
                         drain_refresh as u64,
+                        hyper.state_dtype.bytes() as u64,
                     ],
                 );
                 let comm = match opts.endpoint {

@@ -414,6 +414,7 @@ impl TrainSession {
             stream_batch: self.stream.batch as u32,
             stream_seq: self.stream.seq as u32,
             param_dims: self.tensor_shapes.iter().map(|s| s.dims().to_vec()).collect(),
+            state_dtype: self.hyper.state_dtype,
         })
     }
 
@@ -479,6 +480,17 @@ impl TrainSession {
                 self.stream.seq
             );
         }
+        // A changed --state-dtype would re-round every subsequent EMA update
+        // differently from the writing run (v1–v3 files default to f32, the
+        // only dtype those writers had).
+        anyhow::ensure!(
+            ck.state_dtype == self.hyper.state_dtype,
+            "checkpoint state dtype is {} but the session uses {} — resume with \
+             --state-dtype {} (the precision the state was written in)",
+            ck.state_dtype.name(),
+            self.hyper.state_dtype.name(),
+            ck.state_dtype.name()
+        );
         anyhow::ensure!(
             ck.step <= self.total_steps,
             "checkpoint is already at step {} but the session's total budget is {} — \

@@ -13,9 +13,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use soap_lab::linalg::{Matrix, TensorShape};
+use soap_lab::linalg::{force_gemm_kernel, GemmKernel, Matrix, TensorShape};
 use soap_lab::optim::compose::presets;
-use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer};
+use soap_lab::optim::{DynComposed, Hyper, LayerOptimizer, StateDtype};
 use soap_lab::util::rng::Rng;
 
 /// Counts every `alloc`/`realloc` (the events that would show up as
@@ -184,5 +184,73 @@ fn steady_state_composed_step_allocates_zero() {
         }
         soap_lab::telemetry::set_enabled(false);
         soap_lab::telemetry::trace::drain();
+    }
+
+    // SIMD-kernel rerun: the register-tiled kernels write into the same
+    // caller-owned workspace buffers as the scalar path — dispatch must not
+    // reintroduce heap traffic. `force_gemm_kernel` clamps to scalar on a
+    // CPU without AVX2/NEON, so on such hosts this degrades to a scalar
+    // re-check rather than silently skipping the section.
+    {
+        force_gemm_kernel(Some(GemmKernel::Simd));
+        for (label, build) in builds {
+            let mut opt = build(rows, cols, h.clone());
+            let mut rng = Rng::new(45);
+            let grads: Vec<Matrix> =
+                (0..26).map(|_| Matrix::randn(&mut rng, rows, cols, 1.0)).collect();
+            let mut w = Matrix::zeros(rows, cols);
+            for (i, g) in grads.iter().take(22).enumerate() {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+            }
+            let before = allocs();
+            for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+            }
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "{label}: steady-state step under the SIMD kernel performed {n} heap allocations"
+            );
+        }
+        // Single-test binary: nothing else shares the process, so restoring
+        // here (not on unwind) is sufficient.
+        force_gemm_kernel(None);
+    }
+
+    // bf16-state rerun: the u16-backed second moments decode/encode in
+    // place (`ema_then` / `ema_update`), so the steady-state zero must hold
+    // at half state width too — no hidden f32 staging buffers.
+    {
+        let hb = Hyper { state_dtype: StateDtype::Bf16, ..h.clone() };
+        for (label, build) in builds {
+            let mut opt = build(rows, cols, hb.clone());
+            let mut opt_f32 = build(rows, cols, h.clone());
+            let mut rng = Rng::new(46);
+            let grads: Vec<Matrix> =
+                (0..26).map(|_| Matrix::randn(&mut rng, rows, cols, 1.0)).collect();
+            let mut w = Matrix::zeros(rows, cols);
+            let mut w_f32 = Matrix::zeros(rows, cols);
+            // Warm BOTH dtypes through the same schedule so lazily-allocated
+            // caches (Q, warm-start eigvecs) exist in both accountings.
+            for (i, g) in grads.iter().take(22).enumerate() {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+                opt_f32.update(&mut w_f32, g, i as u64 + 1, 0.01);
+            }
+            let f32_bytes = opt_f32.state_bytes();
+            let before = allocs();
+            for (i, g) in grads.iter().enumerate().take(26).skip(22) {
+                opt.update(&mut w, g, i as u64 + 1, 0.01);
+            }
+            let n = allocs() - before;
+            assert_eq!(
+                n, 0,
+                "{label}: steady-state step with bf16 state performed {n} heap allocations"
+            );
+            assert!(
+                opt.state_bytes() < f32_bytes,
+                "{label}: bf16 state_bytes {} not below the f32 figure {f32_bytes}",
+                opt.state_bytes()
+            );
+        }
     }
 }

@@ -1,25 +1,26 @@
-//! Checkpoint format v3 hardening: corruption fuzzing + legacy fixtures.
+//! Checkpoint format v4 hardening: corruption fuzzing + legacy fixtures.
 //!
 //! The container format must never panic or silently accept a damaged
 //! file — every corruption class here must surface as an `Err` whose
 //! message NAMES the field where parsing stopped:
 //!
 //! - random truncations at every depth (header, shape section, tensor
-//!   payloads) — seeded sweep over a real v3 file with a rank-3 state row;
+//!   payloads) — seeded sweep over a real v4 file with a rank-3 state row;
 //! - targeted header corruptions (future version, malformed seed flag,
-//!   implausible counts/ranks, oversized dims);
+//!   unknown state-dtype tag, implausible counts/ranks, oversized dims);
 //! - trailing bytes after a valid payload;
 //! - bit-flipped optimizer-state *flags rows* — the container parses (flags
 //!   are ordinary f32 rows) but `import_state` must reject the
 //!   now-inconsistent record instead of training on corrupted state.
 //!
-//! Checked-in `rust/tests/fixtures/{v1,v2}.ckpt` prove the legacy formats
-//! keep loading and round-trip through the current writer.
+//! Checked-in `rust/tests/fixtures/{v1,v2,v3,v4}.ckpt` prove the legacy
+//! formats keep loading (with the state-dtype tag defaulting to f32 for
+//! v1–v3) and round-trip through the current writer.
 
 use soap_lab::coordinator::Checkpoint;
 use soap_lab::linalg::{Matrix, TensorShape};
 use soap_lab::optim::compose::presets;
-use soap_lab::optim::{Hyper, LayerOptimizer};
+use soap_lab::optim::{Hyper, LayerOptimizer, StateDtype};
 use soap_lab::util::rng::Rng;
 
 fn tmpfile(name: &str) -> std::path::PathBuf {
@@ -32,9 +33,9 @@ fn fixture(name: &str) -> std::path::PathBuf {
         .join(name)
 }
 
-/// A realistic v3 checkpoint: a rank-3 parameter with a genuine per-mode
-/// (`TensorModes`) optimizer state row next to a rank-2 one.
-fn v3_checkpoint() -> Checkpoint {
+/// A realistic current-format checkpoint: a rank-3 parameter with a genuine
+/// per-mode (`TensorModes`) optimizer state row next to a rank-2 one.
+fn rank3_checkpoint() -> Checkpoint {
     let mut rng = Rng::new(91);
     let shape3 = TensorShape::new(vec![3, 4, 5]);
     let (r3, c3) = shape3.carrier();
@@ -59,14 +60,15 @@ fn v3_checkpoint() -> Checkpoint {
         stream_batch: 8,
         stream_seq: 16,
         param_dims: vec![vec![3, 4, 5], vec![6, 4]],
+        state_dtype: StateDtype::F32,
     }
 }
 
-fn v3_bytes(tag: &str) -> Vec<u8> {
+fn current_bytes(tag: &str) -> Vec<u8> {
     // Per-caller temp name: the tests sharing this run on parallel harness
     // threads within one process, so the pid alone does not disambiguate.
-    let path = tmpfile(&format!("v3base_{tag}"));
-    v3_checkpoint().save(&path).unwrap();
+    let path = tmpfile(&format!("v4base_{tag}"));
+    rank3_checkpoint().save(&path).unwrap();
     let bytes = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).ok();
     bytes
@@ -83,7 +85,7 @@ fn load_bytes(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
 
 #[test]
 fn random_truncations_always_error_with_field_context() {
-    let bytes = v3_bytes("trunc");
+    let bytes = current_bytes("trunc");
     let mut rng = Rng::new(0xFADE);
     // Boundary cuts plus a seeded random sweep across every depth.
     let mut cuts: Vec<usize> = vec![0, 1, 7, 8, 11, 12, 44, 45, bytes.len() - 1];
@@ -105,7 +107,7 @@ fn random_truncations_always_error_with_field_context() {
 
 #[test]
 fn trailing_bytes_rejected() {
-    let mut bytes = v3_bytes("trail");
+    let mut bytes = current_bytes("trail");
     bytes.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
     let err = format!("{:#}", load_bytes(&bytes).unwrap_err());
     assert!(err.contains("trailing"), "{err}");
@@ -113,10 +115,10 @@ fn trailing_bytes_rejected() {
 
 #[test]
 fn targeted_header_corruptions_name_their_field() {
-    let base = v3_bytes("hdr");
-    // Fixed v3 prefix offsets: magic[0..8] version[8..12] step[12..20]
+    let base = current_bytes("hdr");
+    // Fixed v4 prefix offsets: magic[0..8] version[8..12] step[12..20]
     // cursor[20..28] seed-flag[28] seed[29..37] batch[37..41] seq[41..45]
-    // n_shapes[45..49] shape0-rank[49..53] …
+    // state-dtype[45] n_shapes[46..50] shape0-rank[50..54] …
     let mutate = |at: usize, val: &[u8]| {
         let mut b = base.clone();
         b[at..at + val.len()].copy_from_slice(val);
@@ -131,22 +133,26 @@ fn targeted_header_corruptions_name_their_field() {
     let err = format!("{:#}", load_bytes(&mutate(28, &[7])).unwrap_err());
     assert!(err.contains("seed flag"), "{err}");
 
+    // Unknown state-dtype tag: named error, not a silent f32 fallback.
+    let err = format!("{:#}", load_bytes(&mutate(45, &[9])).unwrap_err());
+    assert!(err.contains("state dtype tag 9"), "{err}");
+
     // Implausible shape count: bound-checked before any allocation.
     let err =
-        format!("{:#}", load_bytes(&mutate(45, &(u32::MAX).to_le_bytes())).unwrap_err());
+        format!("{:#}", load_bytes(&mutate(46, &(u32::MAX).to_le_bytes())).unwrap_err());
     assert!(err.contains("shape count"), "{err}");
 
     // Implausible rank on shape 0.
-    let err = format!("{:#}", load_bytes(&mutate(49, &4096u32.to_le_bytes())).unwrap_err());
+    let err = format!("{:#}", load_bytes(&mutate(50, &4096u32.to_le_bytes())).unwrap_err());
     assert!(err.contains("shape 0") && err.contains("rank"), "{err}");
 
     // Zero dim on shape 0 (first dim sits right after its rank).
-    let err = format!("{:#}", load_bytes(&mutate(53, &0u32.to_le_bytes())).unwrap_err());
+    let err = format!("{:#}", load_bytes(&mutate(54, &0u32.to_le_bytes())).unwrap_err());
     assert!(err.contains("shape 0") && err.contains("dim 0"), "{err}");
 
     // A bit-flipped dim value survives the shape section but must then be
     // caught by the shape/param element-count cross-check, naming the param.
-    let err = format!("{:#}", load_bytes(&mutate(53, &7u32.to_le_bytes())).unwrap_err());
+    let err = format!("{:#}", load_bytes(&mutate(54, &7u32.to_le_bytes())).unwrap_err());
     assert!(err.contains("param 0") && err.contains("tensor shape"), "{err}");
 }
 
@@ -207,6 +213,7 @@ fn v1_fixture_loads_and_roundtrips() {
     assert_eq!(back.seed, None);
     assert_eq!((back.stream_batch, back.stream_seq), (0, 0));
     assert!(back.param_dims.is_empty(), "v1 records no tensor shapes");
+    assert_eq!(back.state_dtype, StateDtype::F32, "v1 state dtype defaults to f32");
     assert_eq!((back.params[0].rows, back.params[0].cols), (2, 3));
     assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
     assert_eq!(back.params[1].data, vec![10.0, 20.0, 30.0, 40.0]);
@@ -214,7 +221,7 @@ fn v1_fixture_loads_and_roundtrips() {
     assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(4).data);
 
     // Round-trip through the CURRENT writer: data is preserved and the
-    // rewrite upgrades to v3 with carrier-fold shapes.
+    // rewrite upgrades to v4 with carrier-fold shapes.
     let path = tmpfile("v1rt");
     back.save(&path).unwrap();
     let again = Checkpoint::load(&path).unwrap();
@@ -233,6 +240,7 @@ fn v2_fixture_loads_and_roundtrips() {
     assert_eq!(back.seed, Some(77));
     assert_eq!((back.stream_batch, back.stream_seq), (8, 16));
     assert!(back.param_dims.is_empty(), "v2 records no tensor shapes");
+    assert_eq!(back.state_dtype, StateDtype::F32, "v2 state dtype defaults to f32");
     assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
 
     let path = tmpfile("v2rt");
@@ -246,9 +254,48 @@ fn v2_fixture_loads_and_roundtrips() {
 }
 
 #[test]
-fn v3_roundtrip_preserves_rank3_shapes_and_state() {
-    let ck = v3_checkpoint();
-    let path = tmpfile("v3rt");
+fn v3_fixture_loads_with_f32_default_and_upgrades() {
+    let back = Checkpoint::load(fixture("v3.ckpt")).unwrap();
+    assert_eq!(back.step, 9);
+    assert_eq!(back.seed, Some(77));
+    assert_eq!((back.stream_batch, back.stream_seq), (8, 16));
+    assert_eq!(back.param_dims, vec![vec![2, 3], vec![1, 4]]);
+    assert_eq!(back.state_dtype, StateDtype::F32, "v3 state dtype defaults to f32");
+    assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
+    assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(4).data);
+
+    // Round-trip through the current writer keeps the f32 tag.
+    let path = tmpfile("v3ckrt");
+    back.save(&path).unwrap();
+    let again = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(again.state_dtype, StateDtype::F32);
+    assert_eq!(again.param_dims, back.param_dims);
+    assert_eq!(again.params[1].data, back.params[1].data);
+}
+
+#[test]
+fn v4_fixture_loads_with_bf16_tag() {
+    let back = Checkpoint::load(fixture("v4.ckpt")).unwrap();
+    assert_eq!(back.step, 9);
+    assert_eq!(back.seed, Some(77));
+    assert_eq!(back.param_dims, vec![vec![2, 3], vec![1, 4]]);
+    assert_eq!(back.state_dtype, StateDtype::Bf16, "v4 fixture carries the bf16 tag");
+    // State tensors stay f32 on the wire regardless of the tag.
+    assert_eq!(back.params[0].data, vec![0.5, -1.25, 2.0, 3.5, -0.75, 1.5]);
+    assert_eq!(back.opt_state[1].1[1].data, Matrix::eye(4).data);
+
+    let path = tmpfile("v4ckrt");
+    back.save(&path).unwrap();
+    let again = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(again.state_dtype, StateDtype::Bf16, "bf16 tag survives the round-trip");
+}
+
+#[test]
+fn current_roundtrip_preserves_rank3_shapes_and_state() {
+    let ck = rank3_checkpoint();
+    let path = tmpfile("v4rt");
     ck.save(&path).unwrap();
     let back = Checkpoint::load(&path).unwrap();
     std::fs::remove_file(&path).ok();

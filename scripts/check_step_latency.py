@@ -9,14 +9,17 @@ threshold (default 15%).
 
 Two checks always run, baseline or not:
 
-  * the result document has the expected shape (rows, required keys);
+  * the result document has the expected shape (non-empty rows, required
+    keys, `timed_steps > 0` — a doc that timed nothing gates nothing);
   * every workspace-path row reports `allocs_per_step_p50 == 0` — the
     zero-allocation steady-state invariant, measured.
 
-A baseline with `"provisional": true` (e.g. freshly regenerated, or the
-initial checked-in placeholder awaiting numbers from quiet hardware)
-skips the latency-ratio gate but still runs the structural and
-allocation checks.
+A baseline with `"provisional": true` (the checked-in placeholder
+awaiting real numbers) FAILS the gate loudly — a gate that silently
+skips is indistinguishable from one that passed. Produce a real
+baseline first: `cargo bench --bench step_latency &&
+scripts/check_step_latency.py --update` (which drops the provisional
+marker). CI bootstraps exactly this way before gating.
 
 Usage:
   scripts/check_step_latency.py                      # gate current vs baseline
@@ -55,14 +58,19 @@ def load(path):
         fail(f"{path} is not valid JSON: {e}")
 
 
-def validate(doc, path, allow_empty=False):
+def validate(doc, path):
     if doc.get("bench") != "step_latency":
         fail(f"{path}: bench != step_latency")
     rows = doc.get("rows")
     if not isinstance(rows, list):
         fail(f"{path}: missing rows array")
-    if not rows and not allow_empty:
-        fail(f"{path}: rows is empty")
+    if not rows:
+        fail(f"{path}: rows is empty — the bench measured nothing, "
+             "so there is nothing to gate")
+    timed = doc.get("timed_steps", 0)
+    if not isinstance(timed, (int, float)) or timed <= 0:
+        fail(f"{path}: timed_steps is {timed!r} — a document that timed "
+             "zero steps cannot anchor the latency gate")
     for row in rows:
         for key in REQUIRED_ROW_KEYS:
             if key not in row:
@@ -106,11 +114,14 @@ def main():
         return
 
     baseline = load(args.baseline)
-    base_rows = validate(baseline, args.baseline, allow_empty=bool(baseline.get("provisional")))
     if baseline.get("provisional"):
-        print("baseline is provisional: skipping the latency-ratio gate "
-              "(regenerate with --update on quiet hardware)")
-        return
+        fail(
+            f"{args.baseline} is provisional — the latency-ratio gate has no "
+            "real numbers to compare against. Produce a baseline first: "
+            "`cargo bench --bench step_latency && "
+            "scripts/check_step_latency.py --update`"
+        )
+    base_rows = validate(baseline, args.baseline)
 
     base = {cell_key(r): r for r in base_rows}
     worst = None
